@@ -1,0 +1,123 @@
+//! ISP pipeline walkthrough: degrade a capture, then watch each stage of
+//! the Cognitive ISP (paper §V) earn its keep, PSNR-stage-by-stage.
+//!
+//! Run: `cargo run --release --example isp_pipeline`
+
+use acelerador::config::IspConfig;
+use acelerador::isp::awb::{apply_gains_bayer, AwbEstimator};
+use acelerador::isp::demosaic::{demosaic_bilinear, demosaic_frame, demosaic_nearest};
+use acelerador::isp::dpc::{dpc_frame, DpcConfig};
+use acelerador::isp::gamma::GammaLut;
+use acelerador::isp::nlm::{nlm_frame, NlmConfig};
+use acelerador::isp::pipeline::IspPipeline;
+use acelerador::isp::sensor::{mosaic_clean, SensorModel};
+use acelerador::isp::ycbcr::csc_sharpen;
+use acelerador::testkit::bench::Table;
+use acelerador::util::stats::psnr_u8;
+use acelerador::util::{ImageU8, PlanarRgb, SplitMix64};
+
+fn psnr_rgb(a: &PlanarRgb, b: &PlanarRgb) -> f64 {
+    psnr_u8(&a.interleaved(), &b.interleaved())
+}
+
+fn main() -> anyhow::Result<()> {
+    // A structured test scene: smooth gradients with a few object-like
+    // plateaus (the regime real captures live in — block-checkerboard
+    // scenes with hard chroma flips would favour nearest-neighbour).
+    let frame = ImageU8::from_fn(64, 64, |x, y| {
+        let base = 60 + ((x * 2 + y) % 140);
+        let plateau = if (20..36).contains(&x) && (24..34).contains(&y) { 60 } else { 0 };
+        (base + plateau).min(255) as u8
+    });
+    let model = SensorModel::default(); // cast + noise + defects
+    let mut rng = SplitMix64::new(9);
+    let cap = model.capture(&frame, &mut rng);
+    println!(
+        "sensor model: cast=({},{},{}), noise σ={}, {} injected defects",
+        model.cast_r, model.cast_g, model.cast_b, model.noise_sigma, cap.defects.len()
+    );
+
+    let clean_raw = mosaic_clean(&cap.truth);
+    let mut table = Table::new(&["stage", "metric", "before", "after"]);
+
+    // ---- DPC (raw domain) -------------------------------------------------
+    let (dpc_out, flagged) = dpc_frame(&cap.raw, &DpcConfig::default());
+    table.row(&[
+        "1 DPC (Yongji-Xiaojun 5x5)".into(),
+        "raw PSNR dB".into(),
+        format!("{:.1}", psnr_u8(&cap.raw.data, &clean_raw.data)),
+        format!("{:.1} ({} px fixed)", psnr_u8(&dpc_out.data, &clean_raw.data), flagged.len()),
+    ]);
+
+    // ---- AWB (raw domain) ---------------------------------------------------
+    let mut est = AwbEstimator::new(10, 245);
+    est.measure_frame(&dpc_out);
+    let gains = est.gains().unwrap();
+    let awb_out = apply_gains_bayer(&dpc_out, &gains);
+    table.row(&[
+        "2 AWB (gray-world, clip-aware)".into(),
+        "raw PSNR dB".into(),
+        format!("{:.1}", psnr_u8(&dpc_out.data, &clean_raw.data)),
+        format!(
+            "{:.1} (gains {:.2}/{:.2}/{:.2})",
+            psnr_u8(&awb_out.data, &clean_raw.data),
+            gains.r, gains.g, gains.b
+        ),
+    ]);
+
+    // ---- Demosaic (vs baselines) -------------------------------------------
+    let mhc = demosaic_frame(&awb_out);
+    let nn = demosaic_nearest(&awb_out);
+    let bil = demosaic_bilinear(&awb_out);
+    table.row(&[
+        "3 Demosaic (Malvar-He-Cutler)".into(),
+        "RGB PSNR dB".into(),
+        format!("nn {:.1} / bilinear {:.1}", psnr_rgb(&nn, &cap.truth), psnr_rgb(&bil, &cap.truth)),
+        format!("malvar {:.1}", psnr_rgb(&mhc, &cap.truth)),
+    ]);
+
+    // ---- NLM ---------------------------------------------------------------
+    let cfg = NlmConfig::default();
+    let den = PlanarRgb {
+        width: mhc.width,
+        height: mhc.height,
+        r: nlm_frame(&ImageU8 { width: 64, height: 64, data: mhc.r.clone() }, &cfg).data,
+        g: nlm_frame(&ImageU8 { width: 64, height: 64, data: mhc.g.clone() }, &cfg).data,
+        b: nlm_frame(&ImageU8 { width: 64, height: 64, data: mhc.b.clone() }, &cfg).data,
+    };
+    table.row(&[
+        "4 NLM denoise (FPGA-adapted)".into(),
+        "RGB PSNR dB".into(),
+        format!("{:.1}", psnr_rgb(&mhc, &cap.truth)),
+        format!("{:.1}", psnr_rgb(&den, &cap.truth)),
+    ]);
+
+    // ---- Gamma + CSC/sharpen (vs gamma-encoded truth) -----------------------
+    let lut = GammaLut::power(2.2);
+    let out = csc_sharpen(&lut.apply_rgb(&den), 0.5);
+    let truth_g = lut.apply_rgb(&cap.truth);
+    table.row(&[
+        "5 Gamma LUT + 6 YCbCr sharpen".into(),
+        "RGB PSNR dB (gamma domain)".into(),
+        "-".into(),
+        format!("{:.1}", psnr_rgb(&out, &truth_g)),
+    ]);
+
+    table.print();
+
+    // ---- composed pipeline --------------------------------------------------
+    let mut isp = IspPipeline::new(&IspConfig::default());
+    let mut final_out = None;
+    for _ in 0..4 {
+        final_out = Some(isp.process(&cap.raw));
+    }
+    let (rgb, report) = final_out.unwrap();
+    println!(
+        "\ncomposed IspPipeline: {:.1} dB vs naive nearest-demosaic {:.1} dB  (luma {:.0}, {} DPC fixes/frame)",
+        psnr_rgb(&rgb, &truth_g),
+        psnr_rgb(&lut.apply_rgb(&demosaic_nearest(&cap.raw)), &truth_g),
+        report.mean_luma,
+        report.dpc_corrections,
+    );
+    Ok(())
+}

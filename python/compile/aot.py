@@ -1,0 +1,182 @@
+"""AOT lowering: spiking backbones -> HLO text artifacts for the Rust runtime.
+
+Python runs exactly once (``make artifacts``); afterwards the Rust binary is
+self-contained. Interchange is HLO **text**: the image's xla_extension 0.5.1
+rejects jax>=0.5 serialized protos (64-bit instruction ids), while the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+For every backbone x batch size we lower ``apply_inference`` (trained
+weights folded in as HLO constants — Rust only feeds voxels) and write::
+
+    artifacts/<backbone>_b<B>.hlo.txt
+    artifacts/lif_demo.hlo.txt          # standalone LIF kernel (quickstart)
+    artifacts/manifest.json             # shapes + metadata for rust/src/runtime
+
+Weights come from ``python/compile/weights/<name>.npz`` when ``train.py``
+has produced them, otherwise from the deterministic fallback init (the
+manifest records which — benches report it).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, spec, train
+from .kernels import lif as lif_kernel
+
+BATCH_SIZES = (1, 4)
+
+
+def write_weights_bin(path: str, params) -> None:
+    """Dump params as a flat binary for the Rust-native SNN twin.
+
+    Layout (little-endian): magic ``WTS1`` · u32 n_tensors · per tensor
+    ``u32 ndim · u32 dims[ndim] · f32 data[...]``. Tensor order is
+    ``w0, b0, w1, b1, ...`` — the Rust side reconstructs structure from its
+    own mirror of ``backbone_spec``.
+    """
+    with open(path, "wb") as f:
+        f.write(b"WTS1")
+        f.write(struct.pack("<I", 2 * len(params)))
+        for p in params:
+            for t in (p["w"], p["b"]):
+                arr = np.asarray(t, dtype=np.float32)
+                f.write(struct.pack("<I", arr.ndim))
+                f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+                f.write(arr.tobytes())
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the folded weights ARE the model — the
+    # default printer elides them as `constant({...})`, which the text
+    # parser on the Rust side cannot reconstruct.
+    return comp.as_hlo_text(True)
+
+
+def lower_backbone(name: str, params, batch: int) -> str:
+    fn = model.apply_inference(params, name)
+    shape = jax.ShapeDtypeStruct(
+        (batch, spec.T_BINS, spec.POLARITIES, spec.HEIGHT, spec.WIDTH),
+        jnp.float32,
+    )
+    return to_hlo_text(jax.jit(fn).lower(shape))
+
+
+def lower_lif_demo(t: int = spec.T_BINS, n: int = 1024) -> str:
+    """Standalone fused LIF kernel — runtime smoke test + quickstart."""
+
+    def fn(currents):
+        spikes, u_pre = lif_kernel.lif_pallas(
+            currents, spec.LIF_DECAY, spec.LIF_THRESHOLD
+        )
+        return spikes, u_pre
+
+    shape = jax.ShapeDtypeStruct((t, n), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(shape))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=None, help="artifacts directory")
+    ap.add_argument(
+        "--backbones", nargs="*", default=list(spec.BACKBONES), help="subset"
+    )
+    args = ap.parse_args()
+
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    out_dir = args.out_dir or os.path.join(repo, "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest: dict = {
+        "version": spec.ARTIFACT_VERSION,
+        "input": {
+            "t_bins": spec.T_BINS,
+            "polarities": spec.POLARITIES,
+            "height": spec.HEIGHT,
+            "width": spec.WIDTH,
+            "window_us": spec.WINDOW_US,
+        },
+        "head": {
+            "grid": spec.GRID,
+            "anchors": [list(a) for a in spec.ANCHORS],
+            "num_classes": spec.NUM_CLASSES,
+            "cell": spec.CELL,
+        },
+        "lif": {
+            "decay": spec.LIF_DECAY,
+            "threshold": spec.LIF_THRESHOLD,
+            "alpha": spec.SURROGATE_ALPHA,
+        },
+        "models": [],
+    }
+
+    for name in args.backbones:
+        params = train.load_weights(name)
+        trained = params is not None
+        if params is None:
+            params = model.init_params(name)
+        n_rates = None
+        for batch in BATCH_SIZES:
+            text = lower_backbone(name, params, batch)
+            fname = f"{name}_b{batch}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            print(f"[aot] wrote {fname} ({len(text)} chars, trained={trained})")
+        write_weights_bin(os.path.join(out_dir, f"{name}.wts"), params)
+        # Count spiking layers by running abstract eval once.
+        shape = jax.ShapeDtypeStruct(
+            (1, spec.T_BINS, spec.POLARITIES, spec.HEIGHT, spec.WIDTH), jnp.float32
+        )
+        out_shapes = jax.eval_shape(model.apply_inference(params, name), shape)
+        n_rates = int(out_shapes[1].shape[0])
+        manifest["models"].append(
+            {
+                "name": name,
+                "trained": trained,
+                "params": model.param_count(params),
+                "batch_sizes": list(BATCH_SIZES),
+                "files": {
+                    str(b): f"{name}_b{b}.hlo.txt" for b in BATCH_SIZES
+                },
+                "weights": f"{name}.wts",
+                "outputs": {
+                    "head": [
+                        "B",
+                        model.HEAD_CH,
+                        spec.GRID,
+                        spec.GRID,
+                    ],
+                    "rates": [n_rates],
+                },
+            }
+        )
+
+    lif_text = lower_lif_demo()
+    with open(os.path.join(out_dir, "lif_demo.hlo.txt"), "w") as f:
+        f.write(lif_text)
+    manifest["lif_demo"] = {
+        "file": "lif_demo.hlo.txt",
+        "shape": [spec.T_BINS, 1024],
+    }
+    print(f"[aot] wrote lif_demo.hlo.txt ({len(lif_text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest.json ({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,315 @@
+"""Synthetic GEN1-like automotive event dataset (build-time Python mirror).
+
+The paper trains/evaluates on Prophesee GEN1 (proprietary recordings from a
+real DVS). Substitution (DESIGN.md §3): a deterministic synthetic automotive
+scene — moving cars and pedestrians over a static background — rendered to
+intensity frames and differenced through a standard DVS pixel model
+(log-intensity change detector with contrast threshold + shot noise,
+Gallego et al.). Ground-truth boxes come from the renderer, so AP@0.5 is
+measurable without the proprietary labels.
+
+This module is mirrored *operation-for-operation* in Rust
+(``rust/src/events/``): same SplitMix64 streams, same integer log-LUT, same
+iteration order, so both sides produce **bit-identical** event streams for a
+given seed (asserted by the golden parity test). Training (here) and
+evaluation (Rust) therefore see exactly the same distribution.
+
+Scene/DVS model
+---------------
+* Canvas ``HEIGHT x WIDTH`` u8 intensity; static background gradient.
+* Objects: cars (wide rects with a darker windshield band) and pedestrians
+  (thin tall rects), constant velocity, advanced in f64.
+* Global illumination multiplier (the cognitive-loop scripts step this).
+* DVS: per-pixel reference in integer log2 code space
+  (``LOG_LUT[i] ~ round(64*log2((i+1)/256))``); a pixel whose code moves by
+  >= ``THRESH_CODE`` emits one ON/OFF event and re-arms at the new code.
+* Shot noise: a per-subframe count drawn from the window's noise PRNG
+  stream, uniform pixel positions, random polarity.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from dataclasses import dataclass
+
+import numpy as np
+
+from .rng import SplitMix64
+from . import spec
+
+# ---------------------------------------------------------------------------
+# Integer log-intensity LUT. Computed here (Python is the reference
+# implementation); the Rust side carries a committed generated copy
+# (rust/src/events/loglut.rs) produced by tools/gen_loglut.py, so both sides
+# compare identical integer codes and parity cannot be broken by libm ulps.
+# ---------------------------------------------------------------------------
+LOG_SCALE = 64.0
+
+
+def _build_log_lut() -> np.ndarray:
+    lut = np.empty(256, dtype=np.int32)
+    for i in range(256):
+        lut[i] = int(math.floor(LOG_SCALE * math.log2((i + 1) / 256.0) + 0.5))
+    return lut
+
+
+LOG_LUT = _build_log_lut()
+
+# |Δcode| >= THRESH_CODE fires an event. 64*log2(1+0.18)/ln2≈... the paper's
+# ln-threshold 0.18 is 0.26 in log2, i.e. ~16.6 codes; we use 16.
+THRESH_CODE = 16
+
+SUBFRAMES = 50                # render steps per window (1 ms @ 50 ms window)
+DT_US = spec.WINDOW_US // SUBFRAMES
+
+# PRNG stream ids (fork salts) — keep in lockstep with rust/src/events/scene.rs
+STREAM_SCENE = 1
+STREAM_NOISE = 2
+
+CLASS_CAR = 0
+CLASS_PED = 1
+
+
+@dataclass
+class SceneObject:
+    cls: int
+    x: float          # top-left, f64, advanced per subframe
+    y: float
+    w: int
+    h: int
+    vx: float         # px / second
+    vy: float
+    intensity: int    # u8 body intensity
+
+
+@dataclass
+class Box:
+    cls: int
+    x: float
+    y: float
+    w: float
+    h: float
+
+
+def background() -> np.ndarray:
+    """Static gradient background (u8), identical formula in Rust."""
+    y = np.arange(spec.HEIGHT, dtype=np.int64)[:, None]
+    x = np.arange(spec.WIDTH, dtype=np.int64)[None, :]
+    bg = 80 + (x * 48) // spec.WIDTH + (y * 16) // spec.HEIGHT
+    return bg.astype(np.uint8)
+
+
+def spawn_objects(rng: SplitMix64) -> list[SceneObject]:
+    """Spawn 1-3 cars and 0-2 pedestrians. Draw order == Rust order."""
+    objs: list[SceneObject] = []
+    n_cars = rng.range_u32(1, 4)
+    n_peds = rng.range_u32(0, 3)
+    for _ in range(n_cars):
+        w = rng.range_u32(12, 21)
+        h = rng.range_u32(7, 12)
+        x = rng.uniform_in(-8.0, float(spec.WIDTH - w // 2))
+        y = rng.uniform_in(4.0, float(spec.HEIGHT - h - 4))
+        vx = rng.uniform_in(40.0, 160.0)
+        if rng.next_u32() & 1 == 1:
+            vx = -vx
+        vy = rng.uniform_in(-8.0, 8.0)
+        inten = rng.range_u32(150, 241)
+        objs.append(SceneObject(CLASS_CAR, x, y, w, h, vx, vy, inten))
+    for _ in range(n_peds):
+        w = rng.range_u32(3, 6)
+        h = rng.range_u32(9, 15)
+        x = rng.uniform_in(0.0, float(spec.WIDTH - w))
+        y = rng.uniform_in(2.0, float(spec.HEIGHT - h - 2))
+        vx = rng.uniform_in(20.0, 80.0)
+        if rng.next_u32() & 1 == 1:
+            vx = -vx
+        vy = rng.uniform_in(-4.0, 4.0)
+        inten = rng.range_u32(30, 71) if rng.next_u32() & 1 == 0 else rng.range_u32(180, 221)
+        objs.append(SceneObject(CLASS_PED, x, y, w, h, vx, vy, inten))
+    return objs
+
+
+def render(objs: list[SceneObject], bg: np.ndarray, illum: float) -> np.ndarray:
+    """Render one subframe (u8). Cars get a darker windshield band."""
+    frame = bg.copy()
+    for o in objs:
+        x0 = int(math.floor(o.x))
+        y0 = int(math.floor(o.y))
+        x1, y1 = x0 + o.w, y0 + o.h
+        cx0, cy0 = max(x0, 0), max(y0, 0)
+        cx1, cy1 = min(x1, spec.WIDTH), min(y1, spec.HEIGHT)
+        if cx1 <= cx0 or cy1 <= cy0:
+            continue
+        frame[cy0:cy1, cx0:cx1] = o.intensity
+        if o.cls == CLASS_CAR and o.h >= 8:
+            wy0 = max(y0 + 1, 0)
+            wy1 = min(y0 + 3, spec.HEIGHT)
+            if wy1 > wy0:
+                dark = max(o.intensity - 90, 10)
+                frame[wy0:wy1, cx0:cx1] = dark
+    if illum != 1.0:
+        f = np.floor(frame.astype(np.float64) * illum + 0.5)
+        frame = np.clip(f, 0.0, 255.0).astype(np.uint8)
+    return frame
+
+
+def step_objects(objs: list[SceneObject], dt_s: float) -> None:
+    for o in objs:
+        o.x += o.vx * dt_s
+        o.y += o.vy * dt_s
+
+
+def boxes_of(objs: list[SceneObject]) -> list[Box]:
+    """Clipped ground-truth boxes at the current object positions."""
+    out: list[Box] = []
+    for o in objs:
+        x0 = max(o.x, 0.0)
+        y0 = max(o.y, 0.0)
+        x1 = min(o.x + o.w, float(spec.WIDTH))
+        y1 = min(o.y + o.h, float(spec.HEIGHT))
+        if x1 - x0 >= 3.0 and y1 - y0 >= 3.0:
+            out.append(Box(o.cls, x0, y0, x1 - x0, y1 - y0))
+    return out
+
+
+def dvs_window(seed: int, illum: float = 1.0, illum_end: float | None = None):
+    """Simulate one 50 ms DVS window.
+
+    Returns ``(events, boxes)`` where ``events`` is an int64 array
+    ``[N, 4]`` of ``(t_us, x, y, p)`` (p: 1=ON, 0=OFF) in emission order and
+    ``boxes`` the ground truth at the window end. ``illum_end`` (optional)
+    linearly ramps illumination across the window — used by the
+    cognitive-loop experiment to create lighting anomalies.
+    """
+    root = SplitMix64(seed)
+    scene_rng = root.fork(STREAM_SCENE)
+    noise_rng = root.fork(STREAM_NOISE)
+    bg = background()
+    objs = spawn_objects(scene_rng)
+
+    # Arm the DVS on the frame at t=0.
+    frame0 = render(objs, bg, illum)
+    ref = LOG_LUT[frame0.astype(np.int64)]
+
+    events: list[tuple[int, int, int, int]] = []
+    dt_s = DT_US * 1e-6
+    npix = spec.HEIGHT * spec.WIDTH
+    # Expected noise events per subframe (deterministic count + jitter draw).
+    noise_mean = spec.DVS_NOISE_RATE * npix
+
+    for sf in range(1, SUBFRAMES + 1):
+        step_objects(objs, dt_s)
+        il = illum
+        if illum_end is not None:
+            il = illum + (illum_end - illum) * (sf / SUBFRAMES)
+        frame = render(objs, bg, il)
+        code = LOG_LUT[frame.astype(np.int64)]
+        t_us = sf * DT_US
+
+        d = code - ref
+        on_y, on_x = np.nonzero(d >= THRESH_CODE)
+        off_y, off_x = np.nonzero(d <= -THRESH_CODE)
+        # Row-major emission order, ON before OFF (Rust mirrors this order).
+        for y, x in zip(on_y.tolist(), on_x.tolist()):
+            events.append((t_us, x, y, 1))
+        for y, x in zip(off_y.tolist(), off_x.tolist()):
+            events.append((t_us, x, y, 0))
+        fired = (d >= THRESH_CODE) | (d <= -THRESH_CODE)
+        ref = np.where(fired, code, ref)
+
+        # Shot noise: count = floor(mean) + bernoulli(frac).
+        n_noise = int(noise_mean)
+        if noise_rng.uniform() < noise_mean - n_noise:
+            n_noise += 1
+        for _ in range(n_noise):
+            x = noise_rng.range_u32(0, spec.WIDTH)
+            y = noise_rng.range_u32(0, spec.HEIGHT)
+            p = noise_rng.next_u32() & 1
+            events.append((t_us, x, y, int(p)))
+
+    ev = np.asarray(events, dtype=np.int64).reshape(-1, 4)
+    return ev, boxes_of(objs)
+
+
+def voxelize(events: np.ndarray) -> np.ndarray:
+    """One-hot spatial-temporal voxel grid ``[T, P, H, W]`` f32 (paper §IV-A)."""
+    vox = np.zeros(
+        (spec.T_BINS, spec.POLARITIES, spec.HEIGHT, spec.WIDTH), dtype=np.float32
+    )
+    if events.shape[0] == 0:
+        return vox
+    t = events[:, 0]
+    tbin = np.minimum(t * spec.T_BINS // spec.WINDOW_US, spec.T_BINS - 1)
+    vox[tbin, events[:, 3], events[:, 2], events[:, 1]] = 1.0
+    return vox
+
+
+# ---------------------------------------------------------------------------
+# Dataset assembly (training side). Targets use the YOLO grid assignment
+# mirrored in rust/src/detect/yolo.rs.
+# ---------------------------------------------------------------------------
+
+def _anchor_iou(w: float, h: float, aw: float, ah: float) -> float:
+    inter = min(w, aw) * min(h, ah)
+    return inter / (w * h + aw * ah - inter)
+
+
+def make_targets(boxes: list[Box]) -> tuple[np.ndarray, np.ndarray]:
+    """Build YOLO targets: ``tgt [A, 5+C, S, S]`` and ``mask [A, S, S]``."""
+    a_n = len(spec.ANCHORS)
+    s = spec.GRID
+    tgt = np.zeros((a_n, 5 + spec.NUM_CLASSES, s, s), dtype=np.float32)
+    mask = np.zeros((a_n, s, s), dtype=np.float32)
+    for b in boxes:
+        cx = b.x + b.w / 2.0
+        cy = b.y + b.h / 2.0
+        gx = min(int(cx / spec.CELL), s - 1)
+        gy = min(int(cy / spec.CELL), s - 1)
+        best_a, best_iou = 0, -1.0
+        for ai, (aw, ah) in enumerate(spec.ANCHORS):
+            iou = _anchor_iou(b.w, b.h, aw, ah)
+            if iou > best_iou:
+                best_a, best_iou = ai, iou
+        tx = cx / spec.CELL - gx
+        ty = cy / spec.CELL - gy
+        aw, ah = spec.ANCHORS[best_a]
+        tgt[best_a, 0, gy, gx] = tx
+        tgt[best_a, 1, gy, gx] = ty
+        tgt[best_a, 2, gy, gx] = math.log(max(b.w / aw, 1e-3))
+        tgt[best_a, 3, gy, gx] = math.log(max(b.h / ah, 1e-3))
+        tgt[best_a, 4, gy, gx] = 1.0
+        tgt[best_a, 5 + b.cls, gy, gx] = 1.0
+        mask[best_a, gy, gx] = 1.0
+    return tgt, mask
+
+
+def build_dataset(n: int, base_seed: int):
+    """n windows → (voxels [n,T,P,H,W], tgts [n,A,5+C,S,S], masks, boxes)."""
+    voxels = np.zeros(
+        (n, spec.T_BINS, spec.POLARITIES, spec.HEIGHT, spec.WIDTH),
+        dtype=np.float32,
+    )
+    a_n = len(spec.ANCHORS)
+    tgts = np.zeros((n, a_n, 5 + spec.NUM_CLASSES, spec.GRID, spec.GRID), np.float32)
+    masks = np.zeros((n, a_n, spec.GRID, spec.GRID), np.float32)
+    all_boxes: list[list[Box]] = []
+    for i in range(n):
+        ev, boxes = dvs_window(base_seed + i)
+        voxels[i] = voxelize(ev)
+        tgts[i], masks[i] = make_targets(boxes)
+        all_boxes.append(boxes)
+    return voxels, tgts, masks, all_boxes
+
+
+def cached_dataset(n: int, base_seed: int, cache_dir: str | None = None):
+    """build_dataset with an .npz cache (scene gen is the slow part)."""
+    cache_dir = cache_dir or os.path.join(os.path.dirname(__file__), ".cache")
+    os.makedirs(cache_dir, exist_ok=True)
+    path = os.path.join(cache_dir, f"ds_n{n}_s{base_seed}_v{spec.ARTIFACT_VERSION}.npz")
+    if os.path.exists(path):
+        z = np.load(path)
+        return z["voxels"], z["tgts"], z["masks"], None
+    voxels, tgts, masks, _ = build_dataset(n, base_seed)
+    np.savez_compressed(path, voxels=voxels, tgts=tgts, masks=masks)
+    return voxels, tgts, masks, None

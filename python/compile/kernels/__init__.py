@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels (build-time only) and their pure-jnp oracles."""
+
+from . import lif, ref  # noqa: F401

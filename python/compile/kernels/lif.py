@@ -1,0 +1,132 @@
+"""Layer-1 Pallas kernel: fused LIF membrane dynamics.
+
+This is the compute hot-spot of the paper's NPU (§IV-B): every spiking layer
+applies the leaky-integrate-and-fire recurrence to its pre-activation
+currents at every time step. On the paper's FPGA this is the per-neuron
+LUT/DSP update datapath; on TPU-shaped hardware (see DESIGN.md
+§Hardware-Adaptation) the right mapping is a VMEM-resident time scan over
+VPU-lane-aligned neuron tiles:
+
+* the neuron axis is blocked into ``BLOCK_N``-wide tiles (multiple of 128 —
+  the VPU lane width — so stores are not masked),
+* the full time axis lives in one block (T is small: 5), so the membrane
+  potential stays in registers/VMEM across the scan — the analogue of the
+  paper's on-chip membrane SRAM, never round-tripping to HBM,
+* the convolution that *produces* the currents stays in L2 (XLA fuses it
+  onto the MXU); the kernel is the memory-bound elementwise recurrence that
+  XLA's scan would otherwise materialize per step.
+
+The kernel MUST be lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls. Correctness versus ``ref.lif_ref`` is
+asserted in ``python/tests/test_kernel.py`` (exact f32 equality) and swept
+over shapes/dtypes with hypothesis.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# VPU lane width is 128; 8 sublanes x 128 lanes is the native f32 tile.
+# BLOCK_N = 1024 keeps the VMEM working set tiny (T*BLOCK_N*4B = 20 KiB for
+# T=5) while amortizing grid overhead. See DESIGN.md §Perf / L1.
+BLOCK_N = 1024
+
+
+def _lif_kernel(i_ref, s_ref, u_ref, *, decay: float, v_th: float):
+    """One grid step: LIF scan over time for a [T, BLOCK_N] tile.
+
+    ``i_ref``: input currents block [T, BLOCK_N]
+    ``s_ref``: output spikes block  [T, BLOCK_N]
+    ``u_ref``: output pre-reset membrane block [T, BLOCK_N]
+    The membrane carry lives in the fori_loop carry (registers/VMEM); only
+    the per-step outputs are written out.
+    """
+    t_steps = i_ref.shape[0]
+    dtype = i_ref.dtype
+    zero = jnp.zeros(i_ref.shape[1:], dtype)
+
+    def body(t, u_prev):
+        u = u_prev * jnp.asarray(decay, dtype) + i_ref[t, :]
+        s = (u >= jnp.asarray(v_th, dtype)).astype(dtype)
+        s_ref[t, :] = s
+        u_ref[t, :] = u
+        return u * (jnp.asarray(1.0, dtype) - s)  # hard reset
+
+    jax.lax.fori_loop(0, t_steps, body, zero)
+
+
+def lif_pallas(currents: jax.Array, decay: float, v_th: float):
+    """Fused LIF forward over ``[T, N]`` currents via Pallas.
+
+    Pads N up to a multiple of ``BLOCK_N`` (zero current never spikes for
+    v_th > 0, so padding is inert), runs the kernel on a 1-D grid of neuron
+    tiles, and slices the padding back off.
+
+    Returns ``(spikes [T, N], u_pre [T, N])`` — identical to ``ref.lif_ref``.
+    """
+    t_steps, n = currents.shape
+    n_pad = (-n) % BLOCK_N
+    if n_pad:
+        currents = jnp.pad(currents, ((0, 0), (0, n_pad)))
+    n_total = n + n_pad
+
+    grid = (n_total // BLOCK_N,)
+    kernel = partial(_lif_kernel, decay=float(decay), v_th=float(v_th))
+    spikes, u_pre = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((t_steps, BLOCK_N), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((t_steps, BLOCK_N), lambda i: (0, i)),
+            pl.BlockSpec((t_steps, BLOCK_N), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t_steps, n_total), currents.dtype),
+            jax.ShapeDtypeStruct((t_steps, n_total), currents.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(currents)
+    if n_pad:
+        spikes = spikes[:, :n]
+        u_pre = u_pre[:, :n]
+    return spikes, u_pre
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: Pallas forward, reference adjoint backward.
+# The backward is only ever traced at train time (build-time Python); the
+# exported inference HLO contains just the forward kernel.
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def lif(currents: jax.Array, decay: float, v_th: float, alpha: float):
+    """Differentiable LIF: returns spikes ``[T, N]``.
+
+    Forward runs the Pallas kernel; backward is the detached-reset
+    surrogate-gradient adjoint from ``ref.lif_bwd_ref`` (fast-sigmoid
+    surrogate with sharpness ``alpha``), enabling BPTT per paper §IV-B.
+    """
+    spikes, _ = lif_pallas(currents, decay, v_th)
+    return spikes
+
+
+def _lif_fwd(currents, decay, v_th, alpha):
+    spikes, u_pre = lif_pallas(currents, decay, v_th)
+    return spikes, (spikes, u_pre)
+
+
+def _lif_bwd(decay, v_th, alpha, residual, g_spikes):
+    g_upre = jnp.zeros_like(g_spikes)
+    g_currents = ref.lif_bwd_ref(
+        residual, (g_spikes, g_upre), decay, v_th, alpha
+    )
+    return (g_currents,)
+
+
+lif.defvjp(_lif_fwd, _lif_bwd)

@@ -1,0 +1,104 @@
+"""Pure-jnp reference oracle for the LIF kernels.
+
+This module is the *correctness ground truth*: the Pallas kernel in
+``lif.py`` must match these functions bit-for-bit (f32) under
+``interpret=True``. It is also the implementation used for the BPTT
+backward pass (the Pallas kernel is forward/inference only — Python never
+runs at serve time, so the backward never needs to be exported).
+
+Discrete-time LIF (paper §IV-B, Eq. 1, zero-order hold, R folded into the
+input current, u_rest = 0):
+
+    u[t]   = decay * u[t-1] * (1 - s[t-1]) + I[t]      (hard reset to 0)
+    s[t]   = H(u[t] - v_th)
+
+``decay = exp(-dt / tau_m)`` is the discretized leak. The *pre-reset*
+membrane sequence ``u`` is returned alongside the spikes because the
+surrogate-gradient backward pass needs it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lif_ref(currents: jax.Array, decay: float, v_th: float):
+    """Reference LIF over a ``[T, N]`` current tensor.
+
+    Returns ``(spikes [T, N], u_pre [T, N])`` where ``u_pre`` is the membrane
+    potential *before* reset at each step (what the threshold saw).
+    """
+    t_steps = currents.shape[0]
+
+    def step(u_prev, i_t):
+        u = decay * u_prev + i_t
+        s = (u >= v_th).astype(currents.dtype)
+        u_next = u * (1.0 - s)  # hard reset
+        return u_next, (s, u)
+
+    u0 = jnp.zeros_like(currents[0])
+    _, (spikes, u_pre) = jax.lax.scan(step, u0, currents, length=t_steps)
+    return spikes, u_pre
+
+
+def surrogate_grad(u: jax.Array, v_th: float, alpha: float) -> jax.Array:
+    """Fast-sigmoid surrogate derivative of the Heaviside spike function.
+
+    g(u) = 1 / (1 + alpha * |u - v_th|)^2 — the standard fast-sigmoid
+    surrogate used with BPTT (paper §IV-B).
+    """
+    return 1.0 / jnp.square(1.0 + alpha * jnp.abs(u - v_th))
+
+
+def lif_with_surrogate(currents: jax.Array, decay: float, v_th: float, alpha: float):
+    """Differentiable pure-jnp LIF (no Pallas): forward of :func:`lif_ref`
+    with the same detached-reset fast-sigmoid surrogate VJP as ``lif.lif``.
+
+    Used to cross-check the custom-VJP wiring of the Pallas path
+    (``python/tests/test_kernel.py::test_grad_parity``) and as a fallback for
+    shapes where the kernel is not worth launching.
+    """
+
+    @jax.custom_vjp
+    def f(i):
+        s, _ = lif_ref(i, decay, v_th)
+        return s
+
+    def fwd(i):
+        s, u = lif_ref(i, decay, v_th)
+        return s, (s, u)
+
+    def bwd(res, g):
+        return (lif_bwd_ref(res, (g, jnp.zeros_like(g)), decay, v_th, alpha),)
+
+    f.defvjp(fwd, bwd)
+    return f(currents)
+
+
+def lif_bwd_ref(residual, grads, decay: float, v_th: float, alpha: float):
+    """Reverse-time adjoint of :func:`lif_ref` with a *detached reset*.
+
+    ``residual = (spikes, u_pre)``; ``grads = (g_spikes, g_upre)`` are the
+    cotangents of the two outputs. The reset path is detached (treated as a
+    constant w.r.t. u), the standard stabilization used by surrogate-gradient
+    frameworks: with lam[t] = dL/du_pre[t],
+
+        lam[t]   = g_spikes[t] * g(u[t]) + g_upre[t]
+                   + lam[t+1] * decay * (1 - s[t])
+        dL/dI[t] = lam[t]
+    """
+    spikes, u_pre = residual
+    g_spikes, g_upre = grads
+    sg = surrogate_grad(u_pre, v_th, alpha)
+
+    def step(lam_next, xs):
+        g_s, g_u, sgt, st = xs
+        lam = g_s * sgt + g_u + lam_next * decay * (1.0 - st)
+        return lam, lam
+
+    lam0 = jnp.zeros_like(u_pre[0])
+    _, lam_seq = jax.lax.scan(
+        step, lam0, (g_spikes, g_upre, sg, spikes), reverse=True
+    )
+    return lam_seq

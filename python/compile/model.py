@@ -1,0 +1,321 @@
+"""Layer-2 JAX model: the four spiking backbones of paper §IV-C.
+
+Each backbone is a spiking CNN over the one-hot voxel grid
+``[B, T, P, H, W]``: convolutions produce per-timestep input currents (MXU
+work, left to XLA), and every spiking layer applies the fused Pallas LIF
+recurrence from ``kernels/lif.py`` across the time axis. The detection head
+is a *non-spiking* 1x1 conv whose currents are averaged over T (standard
+rate decoding for SNN detectors — Cordone et al., SFOD).
+
+Backbones (paper §IV-C):
+* ``spiking_vgg``       — uniform 3x3 conv stacks + maxpool.
+* ``spiking_densenet``  — dense blocks (concat feature reuse) + transitions.
+* ``spiking_mobilenet`` — depthwise-separable spiking convs (sparsity champion).
+* ``spiking_yolo``      — tiny-YOLO-style trunk + anchor head (AP champion).
+
+Outputs: ``(head [B, A*(5+C), S, S], rates [L])`` where ``rates`` are the
+per-spiking-layer mean firing rates — the sparsity numbers of E1/E4
+(sparsity = 1 - rate).
+
+Everything here is build-time Python: ``aot.py`` closes the trained weights
+over ``apply`` and lowers the result to HLO text; Rust only ever feeds
+voxels.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import spec
+from .kernels import lif as lif_kernel
+from .kernels import ref as lif_ref
+from .rng import SplitMix64
+
+# ---------------------------------------------------------------------------
+# Layer specs — a tiny declarative description so all four backbones share
+# one interpreter (and one AOT path).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Conv:
+    """Spiking conv: 3x3/1x1 conv -> LIF over T."""
+
+    out: int
+    k: int = 3
+    stride: int = 1
+    groups: int = 1
+
+
+@dataclass(frozen=True)
+class Pool:
+    """2x2 max-pool applied to the spike maps at every timestep."""
+
+    k: int = 2
+
+
+@dataclass(frozen=True)
+class DenseBlock:
+    """DenseNet block: each layer's spikes concat onto the running features."""
+
+    growth: int
+    layers: int
+
+
+@dataclass(frozen=True)
+class Transition:
+    """DenseNet transition: 1x1 spiking conv to `out` channels."""
+
+    out: int
+
+
+@dataclass(frozen=True)
+class DwSep:
+    """MobileNet depthwise-separable spiking block: DW 3x3 -> PW 1x1."""
+
+    out: int
+    stride: int = 1
+
+
+LayerSpec = object
+
+
+def backbone_spec(name: str) -> list[LayerSpec]:
+    if name == "spiking_vgg":
+        return [
+            Conv(16), Conv(16), Pool(),
+            Conv(32), Conv(32), Pool(),
+            Conv(64), Conv(64), Pool(),
+        ]
+    if name == "spiking_densenet":
+        return [
+            Conv(16), Pool(),
+            DenseBlock(growth=8, layers=3), Transition(32), Pool(),
+            DenseBlock(growth=8, layers=3), Transition(64), Pool(),
+        ]
+    if name == "spiking_mobilenet":
+        return [
+            Conv(16), Pool(),
+            DwSep(32), Pool(),
+            DwSep(64), DwSep(64), Pool(),
+        ]
+    if name == "spiking_yolo":
+        return [
+            Conv(16), Pool(),
+            Conv(32), Pool(),
+            Conv(64), Pool(),
+            Conv(64), Conv(32, k=1), Conv(64),
+        ]
+    raise ValueError(f"unknown backbone {name!r}")
+
+
+HEAD_CH = len(spec.ANCHORS) * (5 + spec.NUM_CLASSES)
+
+# ---------------------------------------------------------------------------
+# Parameter init — deterministic from a SplitMix64-derived jax key so the
+# no-training fallback in aot.py is reproducible.
+# ---------------------------------------------------------------------------
+
+
+def _conv_init(key, out_ch: int, in_ch: int, k: int, groups: int = 1):
+    fan_in = (in_ch // groups) * k * k
+    w = jax.random.normal(key, (out_ch, in_ch // groups, k, k), jnp.float32)
+    # He-style scaling, nudged up: spiking nets need enough drive to cross
+    # threshold in T=5 steps with binary inputs.
+    return w * np.sqrt(2.0 / fan_in) * 1.5
+
+
+def init_params(name: str, seed: int = 7) -> list[dict]:
+    """Init the parameter list for `name` (one dict per conv, in order)."""
+    sm = SplitMix64(seed)
+    key = jax.random.PRNGKey(sm.next_u32())
+    params: list[dict] = []
+    in_ch = spec.POLARITIES
+
+    def fresh(out_ch, k, groups=1):
+        nonlocal key, in_ch
+        key, sub = jax.random.split(key)
+        params.append(
+            {
+                "w": _conv_init(sub, out_ch, in_ch, k, groups),
+                "b": jnp.zeros((out_ch,), jnp.float32),
+            }
+        )
+        in_ch = out_ch
+
+    for layer in backbone_spec(name):
+        if isinstance(layer, Conv):
+            fresh(layer.out, layer.k, layer.groups)
+        elif isinstance(layer, Pool):
+            pass
+        elif isinstance(layer, DenseBlock):
+            for _ in range(layer.layers):
+                keep = in_ch
+                fresh(layer.growth, 3)
+                in_ch = keep + layer.growth
+        elif isinstance(layer, Transition):
+            fresh(layer.out, 1)
+        elif isinstance(layer, DwSep):
+            keep = in_ch
+            key, sub = jax.random.split(key)
+            params.append(
+                {
+                    "w": _conv_init(sub, keep, keep, 3, groups=keep),
+                    "b": jnp.zeros((keep,), jnp.float32),
+                }
+            )
+            fresh(layer.out, 1)
+        else:
+            raise TypeError(layer)
+    # Detection head (non-spiking 1x1).
+    key, sub = jax.random.split(key)
+    params.append(
+        {
+            "w": _conv_init(sub, HEAD_CH, in_ch, 1),
+            "b": jnp.zeros((HEAD_CH,), jnp.float32),
+        }
+    )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass.
+# ---------------------------------------------------------------------------
+
+
+def _conv2d(x, w, b, stride=1, groups=1):
+    """NCHW conv, SAME padding."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups,
+    )
+    return out + b[None, :, None, None]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def _lif_over_time(currents, *, use_pallas: bool, alpha: float):
+    """Apply LIF across T. ``currents``: [B, T, C, H, W] -> spikes same shape.
+
+    The tensor is flattened to the kernel's native ``[T, N]`` layout; the
+    Pallas kernel keeps the membrane VMEM-resident across the scan.
+    """
+    b, t, c, h, w = currents.shape
+    flat = currents.transpose(1, 0, 2, 3, 4).reshape(t, b * c * h * w)
+    if use_pallas:
+        spikes = lif_kernel.lif(flat, spec.LIF_DECAY, spec.LIF_THRESHOLD, alpha)
+    else:
+        spikes = lif_ref.lif_with_surrogate(
+            flat, spec.LIF_DECAY, spec.LIF_THRESHOLD, alpha
+        )
+    return spikes.reshape(t, b, c, h, w).transpose(1, 0, 2, 3, 4)
+
+
+def apply(params: list, name: str, voxel, *, use_pallas: bool = True):
+    """Forward pass: voxel [B, T, P, H, W] -> (head, rates).
+
+    ``head``:  [B, A*(5+C), S, S] raw logits map (decode in Rust).
+    ``rates``: [L] mean firing rate of each spiking layer (sparsity = 1-rate).
+    """
+    alpha = spec.SURROGATE_ALPHA
+    b, t = voxel.shape[0], voxel.shape[1]
+    x = voxel  # [B, T, C, H, W] with C = polarities
+    rates = []
+    idx = 0
+
+    def conv_t(x, p, stride=1, groups=1):
+        # fold (B, T) into one batch for the conv — XLA sees a single matmul
+        # stream per layer instead of T small ones.
+        bb, tt, cc, hh, ww = x.shape
+        y = _conv2d(x.reshape(bb * tt, cc, hh, ww), p["w"], p["b"], stride, groups)
+        return y.reshape(bb, tt, y.shape[1], y.shape[2], y.shape[3])
+
+    def spike(cur):
+        s = _lif_over_time(cur, use_pallas=use_pallas, alpha=alpha)
+        rates.append(jnp.mean(s))
+        return s
+
+    for layer in backbone_spec(name):
+        if isinstance(layer, Conv):
+            x = spike(conv_t(x, params[idx], layer.stride, layer.groups))
+            idx += 1
+        elif isinstance(layer, Pool):
+            bb, tt, cc, hh, ww = x.shape
+            x = _maxpool2(x.reshape(bb * tt, cc, hh, ww))
+            x = x.reshape(bb, tt, cc, x.shape[2], x.shape[3])
+        elif isinstance(layer, DenseBlock):
+            for _ in range(layer.layers):
+                new = spike(conv_t(x, params[idx]))
+                idx += 1
+                x = jnp.concatenate([x, new], axis=2)
+        elif isinstance(layer, Transition):
+            x = spike(conv_t(x, params[idx]))
+            idx += 1
+        elif isinstance(layer, DwSep):
+            cc = x.shape[2]
+            x = spike(conv_t(x, params[idx], stride=layer.stride, groups=cc))
+            idx += 1
+            x = spike(conv_t(x, params[idx]))
+            idx += 1
+        else:
+            raise TypeError(layer)
+
+    # Non-spiking head: average the head currents over time (rate decoding).
+    head = conv_t(x, params[idx])  # [B, T, HEAD_CH, S, S]
+    head = jnp.mean(head, axis=1)
+    return head, jnp.stack(rates)
+
+
+def apply_inference(params: list, name: str):
+    """Closure for AOT export: voxel -> (head, rates) with weights folded in."""
+
+    def fn(voxel):
+        return apply(params, name, voxel, use_pallas=True)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# YOLO loss (targets built by data.make_targets; decode mirrored in Rust).
+# ---------------------------------------------------------------------------
+
+
+def yolo_loss(head, tgt, mask, *, l_coord=5.0, l_noobj=0.5):
+    """SSE-style YOLO loss.
+
+    head: [B, A*(5+C), S, S] -> reshaped to [B, A, 5+C, S, S].
+    tgt/mask from :func:`data.make_targets` (batched).
+    """
+    b = head.shape[0]
+    a_n = len(spec.ANCHORS)
+    h = head.reshape(b, a_n, 5 + spec.NUM_CLASSES, spec.GRID, spec.GRID)
+    pxy = jax.nn.sigmoid(h[:, :, 0:2])
+    pwh = h[:, :, 2:4]
+    pobj = jax.nn.sigmoid(h[:, :, 4])
+    pcls = jax.nn.sigmoid(h[:, :, 5:])
+
+    m = mask[:, :, None]
+    coord = jnp.sum(m * jnp.square(pxy - tgt[:, :, 0:2]))
+    size = jnp.sum(m * jnp.square(pwh - tgt[:, :, 2:4]))
+    obj = jnp.sum(mask * jnp.square(pobj - 1.0))
+    noobj = jnp.sum((1.0 - mask) * jnp.square(pobj))
+    cls = jnp.sum(m * jnp.square(pcls - tgt[:, :, 5:]))
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    return (l_coord * (coord + size) + obj + cls + l_noobj * noobj) / n
+
+
+def param_count(params: list) -> int:
+    return int(sum(np.prod(p["w"].shape) + np.prod(p["b"].shape) for p in params))

@@ -1,0 +1,51 @@
+"""SplitMix64 PRNG — the cross-language deterministic generator.
+
+The synthetic GEN1-like dataset must be *reproducible across the Python
+(training) and Rust (evaluation/serving) sides* so that E1's backbone table
+is measured on exactly the distribution the models were trained on, and so
+the golden parity test (``python/tests/test_parity.py`` vs
+``rust/src/events/golden.rs``) can assert bit-identical event streams.
+
+SplitMix64 is chosen because it is trivially portable: one 64-bit state,
+wrapping integer arithmetic only. The Rust mirror is
+``rust/src/util/rng.rs``. Keep the two in lockstep.
+"""
+
+from __future__ import annotations
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Deterministic 64-bit PRNG (Steele et al., the splitmix64 finalizer)."""
+
+    def __init__(self, seed: int) -> None:
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def next_u32(self) -> int:
+        return self.next_u64() >> 32
+
+    def uniform(self) -> float:
+        """f64 in [0, 1): top 53 bits / 2^53 — identical to the Rust mirror."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def range_u32(self, lo: int, hi: int) -> int:
+        """Integer in [lo, hi) via modulo (bias acceptable for scene gen)."""
+        assert hi > lo
+        return lo + self.next_u32() % (hi - lo)
+
+    def uniform_in(self, lo: float, hi: float) -> float:
+        return lo + (hi - lo) * self.uniform()
+
+    def fork(self, stream: int) -> "SplitMix64":
+        """Derive an independent stream (identical scheme in Rust)."""
+        return SplitMix64(
+            (self.state ^ ((stream & MASK64) * 0xA24BAED4963EE407)) & MASK64
+        )

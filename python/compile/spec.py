@@ -1,0 +1,50 @@
+"""Shared specification constants for the AceleradorSNN reproduction.
+
+These constants define the *contract* between the build-time Python side
+(training + AOT export) and the run-time Rust side (event generation,
+voxelization, YOLO decode). The Rust mirror lives in ``rust/src/events/spec.rs``
+and ``rust/src/detect/yolo.rs``; a golden-file test
+(``python/tests/test_parity.py`` + ``rust/src/events/golden.rs``) checks that
+both sides produce bit-identical scenes for the same seed.
+
+Changing anything here requires re-running ``make artifacts`` *and* updating
+the Rust mirror.
+"""
+
+# ---------------------------------------------------------------------------
+# Voxel-grid encoding (paper §IV-A): events are segmented into fixed temporal
+# windows, aggregated into T temporal bins and 2 polarity channels, and
+# encoded as a *one-hot* (binary occupancy) spatial-temporal voxel grid.
+# ---------------------------------------------------------------------------
+T_BINS = 5          # temporal bins per window
+POLARITIES = 2      # ON / OFF channels
+HEIGHT = 64         # sensor height (GEN1 is 304x240; scaled for CPU-PJRT)
+WIDTH = 64          # sensor width
+WINDOW_US = 50_000  # window duration in microseconds (50 ms, paper-typical)
+
+# ---------------------------------------------------------------------------
+# DVS pixel model (substitution for the Prophesee sensor): a pixel emits an
+# event when |log I(t) - log I(t_ref)| exceeds CONTRAST_THRESHOLD; the
+# reference level then re-arms. Shot noise adds spurious events.
+# ---------------------------------------------------------------------------
+CONTRAST_THRESHOLD = 0.18
+DVS_NOISE_RATE = 0.0008     # per-pixel per-bin probability of a noise event
+
+# ---------------------------------------------------------------------------
+# Detection head (Spiking-YOLO style): SxS grid, A anchors, C classes.
+# Output layout per cell/anchor: [tx, ty, tw, th, obj, cls0..clsC-1].
+# ---------------------------------------------------------------------------
+GRID = 8
+ANCHORS = ((14.0, 9.0), (4.0, 11.0))  # (w, h) px — car-ish and pedestrian-ish
+NUM_CLASSES = 2                        # 0 = car, 1 = pedestrian
+CELL = WIDTH // GRID                   # pixels per grid cell
+
+# Surrogate gradient / LIF defaults (paper §IV-B)
+LIF_DECAY = 0.75        # exp(-dt/tau_m) discretized leak
+LIF_THRESHOLD = 1.0     # spike threshold (u_rest = 0)
+SURROGATE_ALPHA = 2.0   # sharpness of the fast-sigmoid surrogate
+
+BACKBONES = ("spiking_vgg", "spiking_densenet", "spiking_mobilenet", "spiking_yolo")
+
+# Names for the artifact manifest
+ARTIFACT_VERSION = 1

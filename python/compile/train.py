@@ -1,0 +1,166 @@
+"""Surrogate-gradient BPTT training (paper §IV-B) — build-time only.
+
+Trains each backbone on the synthetic GEN1-like dataset with BPTT through
+the LIF recurrence (surrogate fast-sigmoid gradient, detached reset) and a
+hand-rolled AdamW (the image has no optax). Weights land in
+``python/compile/weights/<name>.npz`` where ``aot.py`` picks them up; the
+loss curve (experiment F1) is appended to ``weights/<name>_loss.csv``.
+
+Usage::
+
+    python -m compile.train --backbone spiking_yolo --steps 300
+    python -m compile.train --all --steps 200
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model, spec
+from .rng import SplitMix64
+
+WEIGHTS_DIR = os.path.join(os.path.dirname(__file__), "weights")
+
+
+# ---------------------------------------------------------------------------
+# AdamW, hand-rolled over the params list-of-dicts pytree.
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adamw_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, wd=1e-4):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads
+    )
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, m_, v_):
+        return p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) - lr * wd * p
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Training loop.
+# ---------------------------------------------------------------------------
+
+
+def save_weights(name: str, params) -> str:
+    os.makedirs(WEIGHTS_DIR, exist_ok=True)
+    path = os.path.join(WEIGHTS_DIR, f"{name}.npz")
+    flat = {}
+    for i, p in enumerate(params):
+        flat[f"w{i}"] = np.asarray(p["w"])
+        flat[f"b{i}"] = np.asarray(p["b"])
+    np.savez(path, **flat)
+    return path
+
+
+def load_weights(name: str):
+    path = os.path.join(WEIGHTS_DIR, f"{name}.npz")
+    if not os.path.exists(path):
+        return None
+    z = np.load(path)
+    n = len([k for k in z.files if k.startswith("w")])
+    return [
+        {"w": jnp.asarray(z[f"w{i}"]), "b": jnp.asarray(z[f"b{i}"])}
+        for i in range(n)
+    ]
+
+
+def train_backbone(
+    name: str,
+    steps: int = 300,
+    batch: int = 8,
+    n_train: int = 256,
+    seed: int = 1000,
+    lr: float = 1e-3,
+    log_every: int = 10,
+    resume: bool = False,
+) -> list:
+    """Train one backbone; returns the trained params."""
+    print(f"[train] {name}: building dataset n={n_train} seed={seed}")
+    voxels, tgts, masks, _ = data.cached_dataset(n_train, seed)
+    voxels = jnp.asarray(voxels)
+    tgts = jnp.asarray(tgts)
+    masks = jnp.asarray(masks)
+
+    params = (load_weights(name) if resume else None) or model.init_params(name)
+    opt = adamw_init(params)
+    print(f"[train] {name}: {model.param_count(params)} params, {steps} steps")
+
+    # Training traces the *reference* LIF (same numerics as the kernel; the
+    # kernel's interpret-mode tracing through custom_vjp is slower to stage
+    # and brings no benefit at train time — Python never serves anyway).
+    def loss_fn(p, vox, tgt, mask):
+        head, rates = model.apply(p, name, vox, use_pallas=False)
+        return model.yolo_loss(head, tgt, mask), rates
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+
+    sm = SplitMix64(seed * 31 + 7)
+    curve: list[tuple[int, float]] = []
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        idx = np.array([sm.range_u32(0, n_train) for _ in range(batch)])
+        (loss, rates), grads = grad_fn(params, voxels[idx], tgts[idx], masks[idx])
+        params, opt = adamw_step(params, grads, opt, lr=lr)
+        if step % log_every == 0 or step == 1:
+            loss_v = float(loss)
+            rate_v = float(jnp.mean(rates))
+            curve.append((step, loss_v))
+            dt = time.time() - t0
+            print(
+                f"[train] {name} step {step:4d}  loss {loss_v:9.4f}  "
+                f"mean_rate {rate_v:.4f}  ({dt:.1f}s)"
+            )
+
+    path = save_weights(name, params)
+    os.makedirs(WEIGHTS_DIR, exist_ok=True)
+    with open(os.path.join(WEIGHTS_DIR, f"{name}_loss.csv"), "w") as f:
+        f.write("step,loss\n")
+        for s, l in curve:
+            f.write(f"{s},{l}\n")
+    print(f"[train] {name}: saved {path}")
+    return params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backbone", default="spiking_yolo", choices=spec.BACKBONES)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n-train", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--resume", action="store_true", help="continue from saved weights")
+    args = ap.parse_args()
+
+    names = list(spec.BACKBONES) if args.all else [args.backbone]
+    for name in names:
+        train_backbone(
+            name,
+            steps=args.steps,
+            batch=args.batch,
+            n_train=args.n_train,
+            lr=args.lr,
+            resume=args.resume,
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""pytest rootdir anchor: makes ``compile`` importable from anywhere."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,114 @@
+"""AOT export tests: HLO text integrity + manifest schema.
+
+The real round-trip (Rust parses and executes the text) is covered by
+``rust/tests/runtime_roundtrip.rs``; here we assert the producer side:
+constants are fully printed (no elided ``constant({...})``), entry shapes
+match the spec, and the manifest is self-consistent.
+"""
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, spec
+
+
+@pytest.fixture(scope="module")
+def lif_hlo():
+    return aot.lower_lif_demo(t=3, n=256)
+
+
+@pytest.fixture(scope="module")
+def yolo_hlo():
+    params = model.init_params("spiking_yolo")
+    return aot.lower_backbone("spiking_yolo", params, batch=1)
+
+
+class TestHloText:
+    def test_has_entry(self, lif_hlo):
+        assert "ENTRY" in lif_hlo
+        assert "HloModule" in lif_hlo
+
+    def test_lif_demo_shapes(self, lif_hlo):
+        assert "f32[3,256]" in lif_hlo
+
+    def test_backbone_input_shape(self, yolo_hlo):
+        s = f"f32[1,{spec.T_BINS},{spec.POLARITIES},{spec.HEIGHT},{spec.WIDTH}]"
+        assert s in yolo_hlo
+
+    def test_no_elided_constants(self, yolo_hlo):
+        # `constant({...})` is the printer's elision marker — it must never
+        # appear: the folded weights ARE the model.
+        assert "constant({...})" not in yolo_hlo
+
+    def test_weights_are_folded_not_parameters(self, yolo_hlo):
+        # Exactly one entry parameter (the voxel); weights are constants.
+        entry = yolo_hlo[yolo_hlo.index("ENTRY") :]
+        body = entry[: entry.index("\n}\n") if "\n}\n" in entry else len(entry)]
+        params = re.findall(r"parameter\(\d+\)", body)
+        assert len(params) == 1
+
+    def test_convolutions_present(self, yolo_hlo):
+        assert "convolution" in yolo_hlo
+
+    def test_deterministic_lowering(self):
+        params = model.init_params("spiking_mobilenet")
+        a = aot.lower_backbone("spiking_mobilenet", params, batch=1)
+        b = aot.lower_backbone("spiking_mobilenet", params, batch=1)
+        assert a == b
+
+
+class TestConstantMaterialization:
+    def test_weight_payload_actually_printed(self, yolo_hlo):
+        # spiking_yolo has ~82k f32 weights; when fully printed as decimal
+        # text the module must be far bigger than the weights' binary size.
+        n_params = model.param_count(model.init_params("spiking_yolo"))
+        assert len(yolo_hlo) > n_params * 4
+
+    def test_root_is_tuple(self, yolo_hlo):
+        root = [l for l in yolo_hlo.splitlines() if "ROOT" in l and "tuple" in l]
+        assert root, "entry must return a tuple (head, rates)"
+
+
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+            "artifacts",
+            "manifest.json",
+        )
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_input_spec(self, manifest):
+        inp = manifest["input"]
+        assert inp["t_bins"] == spec.T_BINS
+        assert inp["height"] == spec.HEIGHT
+        assert inp["window_us"] == spec.WINDOW_US
+
+    def test_head_spec(self, manifest):
+        h = manifest["head"]
+        assert h["grid"] == spec.GRID
+        assert h["num_classes"] == spec.NUM_CLASSES
+        assert len(h["anchors"]) == len(spec.ANCHORS)
+
+    def test_model_files_exist(self, manifest):
+        art = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+            "artifacts",
+        )
+        for m in manifest["models"]:
+            for b, fname in m["files"].items():
+                assert os.path.exists(os.path.join(art, fname)), fname
+
+    def test_all_backbones_present(self, manifest):
+        names = {m["name"] for m in manifest["models"]}
+        assert names == set(spec.BACKBONES)

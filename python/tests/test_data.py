@@ -1,0 +1,161 @@
+"""Dataset substrate tests: DVS model, voxelization, YOLO targets."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data, spec
+from compile.rng import SplitMix64
+
+
+class TestRng:
+    def test_known_splitmix_sequence(self):
+        # First outputs of splitmix64(seed=0) — cross-language golden values.
+        r = SplitMix64(0)
+        assert r.next_u64() == 0xE220A8397B1DCDAF
+        assert r.next_u64() == 0x6E789E6AA1B965F4
+        assert r.next_u64() == 0x06C45D188009454F
+
+    def test_uniform_in_unit_interval(self):
+        r = SplitMix64(123)
+        xs = [r.uniform() for _ in range(1000)]
+        assert all(0.0 <= x < 1.0 for x in xs)
+        assert 0.4 < sum(xs) / len(xs) < 0.6
+
+    def test_fork_independent(self):
+        r = SplitMix64(7)
+        a = r.fork(1).next_u64()
+        b = r.fork(2).next_u64()
+        assert a != b
+
+    def test_range_bounds(self):
+        r = SplitMix64(9)
+        for _ in range(200):
+            v = r.range_u32(3, 9)
+            assert 3 <= v < 9
+
+
+class TestLogLut:
+    def test_monotonic(self):
+        assert all(
+            data.LOG_LUT[i] <= data.LOG_LUT[i + 1] for i in range(255)
+        )
+
+    def test_endpoints(self):
+        assert data.LOG_LUT[255] == 0  # log2(256/256) = 0
+        assert data.LOG_LUT[0] == -512  # 64*log2(1/256) = -512
+
+    def test_threshold_is_contrast_like(self):
+        # A ~19% intensity step must cross THRESH_CODE (paper threshold 0.18).
+        lo, hi = 128, 153
+        assert data.LOG_LUT[hi] - data.LOG_LUT[lo] >= data.THRESH_CODE
+
+
+class TestDvsWindow:
+    def test_deterministic(self):
+        e1, b1 = data.dvs_window(42)
+        e2, b2 = data.dvs_window(42)
+        np.testing.assert_array_equal(e1, e2)
+        assert len(b1) == len(b2)
+
+    def test_seed_changes_stream(self):
+        e1, _ = data.dvs_window(42)
+        e2, _ = data.dvs_window(43)
+        assert e1.shape != e2.shape or not np.array_equal(e1, e2)
+
+    def test_event_fields_in_range(self):
+        ev, _ = data.dvs_window(7)
+        assert ev.shape[1] == 4
+        assert (ev[:, 0] > 0).all() and (ev[:, 0] <= spec.WINDOW_US).all()
+        assert (ev[:, 1] >= 0).all() and (ev[:, 1] < spec.WIDTH).all()
+        assert (ev[:, 2] >= 0).all() and (ev[:, 2] < spec.HEIGHT).all()
+        assert set(np.unique(ev[:, 3]).tolist()) <= {0, 1}
+
+    def test_timestamps_nondecreasing(self):
+        ev, _ = data.dvs_window(11)
+        assert (np.diff(ev[:, 0]) >= 0).all()
+
+    def test_moving_objects_make_events(self):
+        ev, boxes = data.dvs_window(5)
+        assert ev.shape[0] > 50  # moving rects must fire plenty of pixels
+        assert len(boxes) >= 1
+
+    def test_static_scene_only_noise(self):
+        # illum fixed and velocities irrelevant at seed where... instead:
+        # darkness (illum=0) clamps everything to 0 -> only noise events.
+        ev, _ = data.dvs_window(5, illum=0.0, illum_end=0.0)
+        # noise rate * pixels * subframes is the expected residual
+        expect = spec.DVS_NOISE_RATE * spec.HEIGHT * spec.WIDTH * data.SUBFRAMES
+        assert ev.shape[0] <= expect * 3 + 10
+
+    def test_illum_step_creates_burst(self):
+        ev_flat, _ = data.dvs_window(9)
+        ev_step, _ = data.dvs_window(9, illum=1.0, illum_end=2.5)
+        assert ev_step.shape[0] > ev_flat.shape[0] * 1.5
+
+    def test_boxes_clipped_to_canvas(self):
+        for seed in range(20):
+            _, boxes = data.dvs_window(seed)
+            for b in boxes:
+                assert 0 <= b.x and b.x + b.w <= spec.WIDTH + 1e-9
+                assert 0 <= b.y and b.y + b.h <= spec.HEIGHT + 1e-9
+                assert b.cls in (data.CLASS_CAR, data.CLASS_PED)
+
+
+class TestVoxelize:
+    def test_shape_and_dtype(self):
+        ev, _ = data.dvs_window(1)
+        v = data.voxelize(ev)
+        assert v.shape == (spec.T_BINS, spec.POLARITIES, spec.HEIGHT, spec.WIDTH)
+        assert v.dtype == np.float32
+
+    def test_one_hot(self):
+        ev, _ = data.dvs_window(1)
+        v = data.voxelize(ev)
+        assert set(np.unique(v).tolist()) <= {0.0, 1.0}
+
+    def test_empty_events(self):
+        v = data.voxelize(np.zeros((0, 4), np.int64))
+        assert v.sum() == 0.0
+
+    def test_bin_assignment(self):
+        # event at t just below WINDOW_US lands in the last bin.
+        ev = np.asarray([[spec.WINDOW_US - 1, 3, 4, 1]], np.int64)
+        v = data.voxelize(ev)
+        assert v[spec.T_BINS - 1, 1, 4, 3] == 1.0
+        ev0 = np.asarray([[1, 0, 0, 0]], np.int64)
+        assert data.voxelize(ev0)[0, 0, 0, 0] == 1.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_voxel_occupancy_matches_unique_events(self, seed):
+        ev, _ = data.dvs_window(seed)
+        v = data.voxelize(ev)
+        tbin = np.minimum(ev[:, 0] * spec.T_BINS // spec.WINDOW_US, spec.T_BINS - 1)
+        keys = set(zip(tbin.tolist(), ev[:, 3].tolist(), ev[:, 2].tolist(), ev[:, 1].tolist()))
+        assert int(v.sum()) == len(keys)
+
+
+class TestTargets:
+    def test_single_box_assignment(self):
+        b = data.Box(cls=0, x=10, y=10, w=14, h=9)  # matches anchor 0
+        tgt, mask = data.make_targets([b])
+        gx, gy = int((10 + 7) / spec.CELL), int((10 + 4.5) / spec.CELL)
+        assert mask[0, gy, gx] == 1.0
+        assert tgt[0, 4, gy, gx] == 1.0
+        assert tgt[0, 5, gy, gx] == 1.0  # class car
+        assert abs(tgt[0, 2, gy, gx]) < 0.1  # log(14/14) ~ 0
+
+    def test_thin_box_prefers_ped_anchor(self):
+        b = data.Box(cls=1, x=30, y=20, w=4, h=11)
+        tgt, mask = data.make_targets([b])
+        assert mask[1].sum() == 1.0 and mask[0].sum() == 0.0
+
+    def test_empty(self):
+        tgt, mask = data.make_targets([])
+        assert tgt.sum() == 0.0 and mask.sum() == 0.0
+
+    def test_build_dataset_shapes(self):
+        vox, tgt, mask, boxes = data.build_dataset(3, 500)
+        assert vox.shape[0] == 3 and tgt.shape[0] == 3 and mask.shape[0] == 3
+        assert len(boxes) == 3

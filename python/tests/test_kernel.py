@@ -1,0 +1,149 @@
+"""L1 kernel correctness: Pallas LIF vs pure-jnp oracle.
+
+Exact f32 equality is required (interpret=True executes the same jnp ops in
+the same order), plus hypothesis sweeps over shapes/dtypes and a gradient
+parity check for the custom-VJP wiring.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import spec
+from compile.kernels import lif, ref
+
+
+def _currents(t, n, seed=0, scale=2.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0.0, scale, (t, n)).astype(np.float32))
+
+
+class TestForwardParity:
+    def test_exact_match_basic(self):
+        cur = _currents(spec.T_BINS, 1024)
+        s_k, u_k = lif.lif_pallas(cur, spec.LIF_DECAY, spec.LIF_THRESHOLD)
+        s_r, u_r = ref.lif_ref(cur, spec.LIF_DECAY, spec.LIF_THRESHOLD)
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(u_k), np.asarray(u_r))
+
+    def test_unaligned_n_is_padded_correctly(self):
+        # N not a multiple of BLOCK_N exercises the pad/slice path.
+        cur = _currents(spec.T_BINS, 1000)
+        s_k, u_k = lif.lif_pallas(cur, spec.LIF_DECAY, spec.LIF_THRESHOLD)
+        s_r, u_r = ref.lif_ref(cur, spec.LIF_DECAY, spec.LIF_THRESHOLD)
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(u_k), np.asarray(u_r))
+
+    def test_small_n(self):
+        cur = _currents(3, 7)
+        s_k, _ = lif.lif_pallas(cur, 0.9, 1.0)
+        s_r, _ = ref.lif_ref(cur, 0.9, 1.0)
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+
+    def test_spikes_are_binary(self):
+        cur = _currents(spec.T_BINS, 512, scale=5.0)
+        s, _ = lif.lif_pallas(cur, spec.LIF_DECAY, spec.LIF_THRESHOLD)
+        vals = np.unique(np.asarray(s))
+        assert set(vals.tolist()) <= {0.0, 1.0}
+
+    def test_zero_current_never_spikes(self):
+        cur = jnp.zeros((spec.T_BINS, 256), jnp.float32)
+        s, u = lif.lif_pallas(cur, spec.LIF_DECAY, spec.LIF_THRESHOLD)
+        assert float(jnp.sum(s)) == 0.0
+        assert float(jnp.sum(jnp.abs(u))) == 0.0
+
+    def test_constant_suprathreshold_fires_every_step(self):
+        cur = jnp.full((spec.T_BINS, 64), 1.5, jnp.float32)
+        s, _ = lif.lif_pallas(cur, spec.LIF_DECAY, spec.LIF_THRESHOLD)
+        assert float(jnp.mean(s)) == 1.0
+
+    def test_hard_reset_zeroes_membrane(self):
+        # One big pulse then silence: after the spike the membrane restarts
+        # from 0 and just leaks the later inputs.
+        cur = jnp.zeros((4, 8), jnp.float32).at[0].set(2.0).at[1].set(0.5)
+        s, u = ref.lif_ref(cur, 0.5, 1.0)
+        s_k, u_k = lif.lif_pallas(cur, 0.5, 1.0)
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s))
+        # step1 membrane = 0.5 (not 0.5 + leaked 2.0) because of the reset
+        assert float(u_k[1, 0]) == pytest.approx(0.5)
+
+    def test_leak_integrates_subthreshold(self):
+        # 0.6 + 0.75*0.6 = 1.05 >= 1.0 -> spikes at step 1 exactly.
+        cur = jnp.full((2, 4), 0.6, jnp.float32)
+        s, _ = lif.lif_pallas(cur, 0.75, 1.0)
+        assert np.asarray(s)[0].sum() == 0
+        assert np.asarray(s)[1].sum() == 4
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 8),
+    n=st.integers(1, 2048),
+    decay=st.floats(0.1, 0.99),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shape_sweep(t, n, decay, seed):
+    cur = _currents(t, n, seed)
+    s_k, u_k = lif.lif_pallas(cur, decay, 1.0)
+    s_r, u_r = ref.lif_ref(cur, decay, 1.0)
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_r), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_bf16(seed):
+    # bf16 currents: kernel and ref must agree bit-for-bit under interpret.
+    cur = _currents(4, 256, seed).astype(jnp.bfloat16)
+    s_k, _ = lif.lif_pallas(cur, 0.75, 1.0)
+    s_r, _ = ref.lif_ref(cur, 0.75, 1.0)
+    np.testing.assert_array_equal(
+        np.asarray(s_k, np.float32), np.asarray(s_r, np.float32)
+    )
+
+
+class TestBackward:
+    def test_grad_parity_pallas_vs_reference(self):
+        """custom-VJP through the Pallas forward == pure-reference VJP."""
+        cur = _currents(spec.T_BINS, 300, seed=3)
+
+        def loss_k(c):
+            return jnp.sum(
+                lif.lif(c, spec.LIF_DECAY, spec.LIF_THRESHOLD, spec.SURROGATE_ALPHA)
+                * jnp.arange(c.shape[1], dtype=jnp.float32)
+            )
+
+        def loss_r(c):
+            return jnp.sum(
+                ref.lif_with_surrogate(
+                    c, spec.LIF_DECAY, spec.LIF_THRESHOLD, spec.SURROGATE_ALPHA
+                )
+                * jnp.arange(c.shape[1], dtype=jnp.float32)
+            )
+
+        g_k = jax.grad(loss_k)(cur)
+        g_r = jax.grad(loss_r)(cur)
+        np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r), rtol=1e-5)
+
+    def test_grad_nonzero_near_threshold(self):
+        cur = jnp.full((spec.T_BINS, 16), 0.9, jnp.float32)
+        g = jax.grad(
+            lambda c: jnp.sum(lif.lif(c, 0.75, 1.0, 2.0))
+        )(cur)
+        assert float(jnp.sum(jnp.abs(g))) > 0.0
+
+    def test_surrogate_peaks_at_threshold(self):
+        u = jnp.asarray([0.0, 0.5, 1.0, 1.5, 2.0])
+        g = ref.surrogate_grad(u, 1.0, spec.SURROGATE_ALPHA)
+        assert float(g[2]) == 1.0
+        assert float(g[2]) > float(g[1]) > float(g[0])
+
+    def test_detached_reset_truncates_through_spikes(self):
+        # With every step spiking, the recurrent term (1-s)=0 kills all
+        # cross-time gradient flow: grad at t only from the surrogate at t.
+        cur = jnp.full((4, 8), 3.0, jnp.float32)
+        g = jax.grad(lambda c: jnp.sum(lif.lif(c, 0.75, 1.0, 2.0)))(cur)
+        sg = ref.surrogate_grad(jnp.asarray(3.0), 1.0, 2.0)
+        np.testing.assert_allclose(np.asarray(g), float(sg), rtol=1e-6)

@@ -1,0 +1,155 @@
+"""L2 model tests: backbone shapes, rates, loss, training step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model, spec, train
+
+
+def _voxel_batch(b=2, seed=100):
+    vox = np.stack(
+        [data.voxelize(data.dvs_window(seed + i)[0]) for i in range(b)]
+    )
+    return jnp.asarray(vox)
+
+
+@pytest.fixture(scope="module")
+def voxels():
+    return _voxel_batch()
+
+
+@pytest.mark.parametrize("name", spec.BACKBONES)
+class TestBackbones:
+    def test_head_shape(self, name, voxels):
+        params = model.init_params(name)
+        head, rates = model.apply(params, name, voxels, use_pallas=False)
+        assert head.shape == (2, model.HEAD_CH, spec.GRID, spec.GRID)
+
+    def test_rates_are_probabilities(self, name, voxels):
+        params = model.init_params(name)
+        _, rates = model.apply(params, name, voxels, use_pallas=False)
+        r = np.asarray(rates)
+        assert (r >= 0.0).all() and (r <= 1.0).all()
+
+    def test_pallas_and_reference_paths_agree(self, name, voxels):
+        params = model.init_params(name)
+        h_k, r_k = model.apply(params, name, voxels, use_pallas=True)
+        h_r, r_r = model.apply(params, name, voxels, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_r), atol=1e-6)
+
+    def test_deterministic_init(self, name):
+        p1 = model.init_params(name, seed=7)
+        p2 = model.init_params(name, seed=7)
+        for a, b in zip(p1, p2):
+            np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+
+
+class TestSparsityOrdering:
+    def test_mobilenet_param_count_smallest(self):
+        counts = {n: model.param_count(model.init_params(n)) for n in spec.BACKBONES}
+        assert counts["spiking_mobilenet"] == min(counts.values())
+
+
+class TestLoss:
+    def test_loss_positive_and_finite(self, voxels):
+        params = model.init_params("spiking_yolo")
+        head, _ = model.apply(params, "spiking_yolo", voxels, use_pallas=False)
+        _, boxes = data.dvs_window(100)
+        tgt, mask = data.make_targets(boxes)
+        tgt = jnp.asarray(np.stack([tgt, tgt]))
+        mask = jnp.asarray(np.stack([mask, mask]))
+        loss = model.yolo_loss(head, tgt, mask)
+        assert np.isfinite(float(loss)) and float(loss) > 0
+
+    def test_perfect_head_low_loss(self):
+        # Construct a head whose decode matches the target exactly: loss ~ only
+        # the noobj sigmoid floor.
+        _, boxes = data.dvs_window(100)
+        tgt, mask = data.make_targets(boxes)
+        a_n = len(spec.ANCHORS)
+        h = np.zeros((1, a_n, 5 + spec.NUM_CLASSES, spec.GRID, spec.GRID), np.float32)
+        h[:, :, 4] = -12.0  # obj sigmoid ~ 0 everywhere
+        for ai in range(a_n):
+            for gy in range(spec.GRID):
+                for gx in range(spec.GRID):
+                    if mask[ai, gy, gx] > 0:
+                        eps = 1e-4
+                        txy = np.clip(tgt[ai, 0:2, gy, gx], eps, 1 - eps)
+                        h[0, ai, 0:2, gy, gx] = np.log(txy / (1 - txy))
+                        h[0, ai, 2:4, gy, gx] = tgt[ai, 2:4, gy, gx]
+                        h[0, ai, 4, gy, gx] = 12.0
+                        cls = tgt[ai, 5:, gy, gx]
+                        h[0, ai, 5:, gy, gx] = np.where(cls > 0, 12.0, -12.0)
+        head = jnp.asarray(h.reshape(1, -1, spec.GRID, spec.GRID))
+        loss = model.yolo_loss(head, jnp.asarray(tgt)[None], jnp.asarray(mask)[None])
+        assert float(loss) < 0.01
+
+    def test_gradients_flow_to_all_layers(self, voxels):
+        params = model.init_params("spiking_vgg")
+        _, boxes = data.dvs_window(100)
+        tgt, mask = data.make_targets(boxes)
+        tgt = jnp.asarray(np.stack([tgt, tgt]))
+        mask = jnp.asarray(np.stack([mask, mask]))
+
+        def loss_fn(p):
+            head, _ = model.apply(p, "spiking_vgg", voxels, use_pallas=False)
+            return model.yolo_loss(head, tgt, mask)
+
+        grads = jax.grad(loss_fn)(params)
+        for i, g in enumerate(grads):
+            assert np.isfinite(np.asarray(g["w"])).all(), f"layer {i} grad not finite"
+        # at least the head and the last convs must receive signal
+        assert float(jnp.sum(jnp.abs(grads[-1]["w"]))) > 0
+
+
+class TestAdamW:
+    def test_step_moves_params(self):
+        params = [{"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}]
+        grads = [{"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}]
+        st = train.adamw_init(params)
+        new, st = train.adamw_step(params, grads, st, lr=1e-2)
+        assert st["t"] == 1
+        assert float(jnp.max(jnp.abs(new[0]["w"] - params[0]["w"]))) > 1e-4
+
+    def test_weight_decay_shrinks(self):
+        params = [{"w": jnp.full((2, 2), 10.0), "b": jnp.zeros((2,))}]
+        grads = [{"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}]
+        st = train.adamw_init(params)
+        new, _ = train.adamw_step(params, grads, st, lr=1e-2, wd=1e-1)
+        assert float(new[0]["w"][0, 0]) < 10.0
+
+    def test_short_training_reduces_loss(self):
+        # 12 steps on a tiny dataset must strictly reduce the YOLO loss.
+        vox, tgt, mask, _ = data.build_dataset(8, 3000)
+        vox, tgt, mask = jnp.asarray(vox), jnp.asarray(tgt), jnp.asarray(mask)
+        params = model.init_params("spiking_yolo")
+        opt = train.adamw_init(params)
+
+        def loss_fn(p):
+            head, _ = model.apply(p, "spiking_yolo", vox, use_pallas=False)
+            return model.yolo_loss(head, tgt, mask)
+
+        vg = jax.jit(jax.value_and_grad(loss_fn))
+        l0, g = vg(params)
+        for _ in range(12):
+            params, opt = train.adamw_step(params, g, opt, lr=3e-3)
+            l, g = vg(params)
+        assert float(l) < float(l0)
+
+
+class TestWeightsRoundTrip:
+    def test_save_load(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(train, "WEIGHTS_DIR", str(tmp_path))
+        params = model.init_params("spiking_mobilenet")
+        train.save_weights("spiking_mobilenet", params)
+        loaded = train.load_weights("spiking_mobilenet")
+        assert loaded is not None and len(loaded) == len(params)
+        for a, b in zip(params, loaded):
+            np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+
+    def test_missing_returns_none(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(train, "WEIGHTS_DIR", str(tmp_path))
+        assert train.load_weights("nope") is None

@@ -1,0 +1,96 @@
+//! E1 — the paper's backbone table (§IV-C): AP@0.5 and network sparsity
+//! for Spiking-{VGG, DenseNet, MobileNet, YOLO}, quantized.
+//!
+//! Paper's rows (Prophesee GEN1): Spiking-YOLO AP@0.5 = 0.4726 (best);
+//! Spiking-MobileNet sparsity = 48.08% (highest). Our substrate is the
+//! synthetic GEN1-like set, so *orderings and gaps* are the reproduction
+//! target, not absolute values. Also times per-window inference.
+//!
+//! Run: `cargo bench --bench e1_backbones` (after `make artifacts`)
+
+use acelerador::detect::ap::{evaluate_ap, ApMode, ImageEval};
+use acelerador::detect::{decode_head, nms, YoloSpec};
+use acelerador::events::scene::DvsWindowSim;
+use acelerador::events::voxel::voxelize;
+use acelerador::events::{spec, GtBox};
+use acelerador::runtime::NpuEngine;
+use acelerador::snn::quant::QuantBackbone;
+use acelerador::snn::{Backbone, BackboneKind};
+use acelerador::testkit::bench::{Bench, Table};
+
+const SCENES: usize = 64;
+const VAL_SEED: u64 = 50_000;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== E1: backbone AP@0.5 + sparsity (paper §IV-C table) ===\n");
+    let yolo = YoloSpec::default();
+    let val: Vec<(Vec<GtBox>, _)> = (0..SCENES)
+        .map(|i| {
+            let (ev, gt) = DvsWindowSim::new(VAL_SEED + i as u64).run();
+            (gt, voxelize(&ev))
+        })
+        .collect();
+
+    let mut table = Table::new(&[
+        "backbone", "params", "AP@0.5", "AP int8", "sparsity %", "synops/win", "infer µs",
+    ]);
+    let mut results: Vec<(String, f64, f64)> = Vec::new();
+
+    for kind in BackboneKind::all() {
+        let name = kind.name();
+        let engine = NpuEngine::new("artifacts", name)?;
+        let twin = Backbone::load(kind, "artifacts")?;
+        let qtwin = QuantBackbone::from_backbone(&twin);
+
+        let mut dets = Vec::new();
+        let mut dets_q = Vec::new();
+        let mut sparsity = 0.0;
+        let mut synops = 0u64;
+        for (_, vox) in &val {
+            let out = engine.infer(&[vox])?;
+            dets.push(nms(decode_head(&out.heads[0], &yolo, 0.05), 0.45));
+            let (qh, qs) = qtwin.forward(vox);
+            dets_q.push(nms(decode_head(&qh.data, &yolo, 0.05), 0.45));
+            sparsity += qs.sparsity();
+            synops += qs.synops;
+        }
+        let images: Vec<ImageEval> = dets
+            .iter()
+            .zip(&val)
+            .map(|(d, (g, _))| ImageEval { detections: d, ground_truth: g })
+            .collect();
+        let images_q: Vec<ImageEval> = dets_q
+            .iter()
+            .zip(&val)
+            .map(|(d, (g, _))| ImageEval { detections: d, ground_truth: g })
+            .collect();
+        let (ap, _) = evaluate_ap(&images, spec::NUM_CLASSES, 0.5, ApMode::Continuous);
+        let (ap_q, _) = evaluate_ap(&images_q, spec::NUM_CLASSES, 0.5, ApMode::Continuous);
+        let sparsity_pct = 100.0 * sparsity / SCENES as f64;
+
+        // inference latency (batch 1)
+        let b = Bench::new(2, 10);
+        let vox0 = &val[0].1;
+        let r = b.run(&format!("{name} infer b1"), || engine.infer(&[vox0]).unwrap());
+
+        table.row(&[
+            name.to_string(),
+            engine.manifest().model(name)?.params.to_string(),
+            format!("{ap:.4}"),
+            format!("{ap_q:.4}"),
+            format!("{sparsity_pct:.2}"),
+            format!("{}", synops / SCENES as u64),
+            format!("{:.0}", r.mean_us()),
+        ]);
+        results.push((name.to_string(), ap, sparsity_pct));
+    }
+    println!();
+    table.print();
+
+    // Shape checks vs the paper.
+    let best_ap = results.iter().max_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+    let most_sparse = results.iter().max_by(|a, b| a.2.partial_cmp(&b.2).unwrap()).unwrap();
+    println!("\nbest AP:       {} ({:.4})   [paper: spiking_yolo, 0.4726]", best_ap.0, best_ap.1);
+    println!("most sparse:   {} ({:.2}%)  [paper: spiking_mobilenet, 48.08%]", most_sparse.0, most_sparse.2);
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! E2 — ISP stage quality (paper §V-B): every stage must improve the
+//! degraded Bayer stream, measured as PSNR vs clean reference over a set
+//! of rendered scenes, plus per-stage ablations (drop one stage, measure
+//! the damage) and processing time.
+//!
+//! Run: `cargo bench --bench e2_isp_quality`
+
+use acelerador::config::IspConfig;
+use acelerador::events::scene::{background, render, spawn_objects};
+use acelerador::events::spec;
+use acelerador::isp::awb::{apply_gains_bayer, AwbEstimator};
+use acelerador::isp::demosaic::{demosaic_bilinear, demosaic_frame, demosaic_nearest};
+use acelerador::isp::dpc::{dpc_frame, DpcConfig};
+use acelerador::isp::gamma::GammaLut;
+use acelerador::isp::pipeline::IspPipeline;
+use acelerador::isp::sensor::{mosaic_clean, Capture, SensorModel};
+use acelerador::testkit::bench::{Bench, Table};
+use acelerador::util::stats::psnr_u8;
+use acelerador::util::{ImageU8, PlanarRgb, SplitMix64};
+
+const SCENES: usize = 12;
+
+fn scene_frame(seed: u64) -> ImageU8 {
+    // real renderer scenes (cars/pedestrians over the gradient background)
+    let root = SplitMix64::new(seed);
+    let mut rng = root.fork(spec::STREAM_SCENE);
+    let objs = spawn_objects(&mut rng);
+    let bg = background();
+    let mut frame = vec![0u8; spec::WIDTH * spec::HEIGHT];
+    render(&objs, &bg, 1.0, &mut frame);
+    ImageU8 { width: spec::WIDTH, height: spec::HEIGHT, data: frame }
+}
+
+fn captures() -> Vec<Capture> {
+    let model = SensorModel::default();
+    (0..SCENES)
+        .map(|i| {
+            let mut rng = SplitMix64::new(900 + i as u64);
+            model.capture(&scene_frame(i as u64), &mut rng)
+        })
+        .collect()
+}
+
+fn psnr_rgb(a: &PlanarRgb, b: &PlanarRgb) -> f64 {
+    psnr_u8(&a.interleaved(), &b.interleaved())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== E2: ISP per-stage quality over {SCENES} rendered scenes ===\n");
+    let caps = captures();
+    let lut = GammaLut::power(IspConfig::default().gamma);
+
+    // ---- raw-domain stages ------------------------------------------------
+    let mut raw_before = 0.0;
+    let mut raw_dpc = 0.0;
+    let mut raw_awb = 0.0;
+    for cap in &caps {
+        let clean = mosaic_clean(&cap.truth);
+        raw_before += psnr_u8(&cap.raw.data, &clean.data);
+        let (d, _) = dpc_frame(&cap.raw, &DpcConfig::default());
+        raw_dpc += psnr_u8(&d.data, &clean.data);
+        let mut est = AwbEstimator::new(10, 245);
+        est.measure_frame(&d);
+        let a = apply_gains_bayer(&d, &est.gains().unwrap());
+        raw_awb += psnr_u8(&a.data, &clean.data);
+    }
+
+    // ---- demosaic comparison ------------------------------------------------
+    let mut mhc = 0.0;
+    let mut nn = 0.0;
+    let mut bil = 0.0;
+    for cap in &caps {
+        let clean = mosaic_clean(&cap.truth);
+        mhc += psnr_rgb(&demosaic_frame(&clean), &cap.truth);
+        nn += psnr_rgb(&demosaic_nearest(&clean), &cap.truth);
+        bil += psnr_rgb(&demosaic_bilinear(&clean), &cap.truth);
+    }
+
+    let n = SCENES as f64;
+    let mut t = Table::new(&["stage", "PSNR before (dB)", "PSNR after (dB)"]);
+    t.row(&["DPC (raw)".into(), format!("{:.1}", raw_before / n), format!("{:.1}", raw_dpc / n)]);
+    t.row(&["AWB (raw)".into(), format!("{:.1}", raw_dpc / n), format!("{:.1}", raw_awb / n)]);
+    t.row(&["demosaic nearest (clean raw)".into(), "-".into(), format!("{:.1}", nn / n)]);
+    t.row(&["demosaic bilinear (clean raw)".into(), "-".into(), format!("{:.1}", bil / n)]);
+    t.row(&["demosaic Malvar (clean raw)".into(), "-".into(), format!("{:.1}", mhc / n)]);
+    t.print();
+
+    // ---- composed pipeline + leave-one-out ablations -----------------------
+    println!("\n--- composed pipeline + ablations (PSNR vs gamma-encoded truth) ---");
+    let run_pipeline = |tweak: &dyn Fn(&mut IspPipeline)| -> f64 {
+        let mut sum = 0.0;
+        for cap in &caps {
+            let mut isp = IspPipeline::new(&IspConfig::default());
+            tweak(&mut isp);
+            let mut out = None;
+            for _ in 0..3 {
+                out = Some(isp.process(&cap.raw));
+            }
+            let (rgb, _) = out.unwrap();
+            sum += psnr_rgb(&rgb, &lut.apply_rgb(&cap.truth));
+        }
+        sum / n
+    };
+    let full = run_pipeline(&|_| {});
+    let no_nlm = run_pipeline(&|isp| {
+        let mut p = isp.params().clone();
+        p.nlm_h = 0.0;
+        isp.set_params(p);
+    });
+    let no_dpc = run_pipeline(&|isp| {
+        let mut p = isp.params().clone();
+        p.dpc_threshold = 10_000; // never fires
+        isp.set_params(p);
+    });
+    let no_sharpen = run_pipeline(&|isp| {
+        let mut p = isp.params().clone();
+        p.sharpen = 0.0;
+        isp.set_params(p);
+    });
+
+    let mut t2 = Table::new(&["configuration", "PSNR (dB)", "delta vs full"]);
+    t2.row(&["full pipeline".into(), format!("{full:.2}"), "-".into()]);
+    for (name, v) in [("without NLM", no_nlm), ("without DPC", no_dpc), ("without sharpen", no_sharpen)] {
+        t2.row(&[name.into(), format!("{v:.2}"), format!("{:+.2}", v - full)]);
+    }
+    t2.print();
+
+    // ---- throughput ---------------------------------------------------------
+    println!("\n--- frame processing time (64x64, software pipeline) ---");
+    let mut isp = IspPipeline::new(&IspConfig::default());
+    let b = Bench::new(2, 10);
+    b.run("IspPipeline::process", || isp.process(&caps[0].raw));
+    Ok(())
+}

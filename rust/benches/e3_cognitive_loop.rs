@@ -1,0 +1,81 @@
+//! E3 — the closed cognitive loop (paper §VI): an illumination anomaly
+//! hits the scene; the NPU detects it from the event stream and retunes
+//! the camera/ISP. Measured: PSNR trajectory (closed vs open loop),
+//! adaptation latency in windows, and detection continuity.
+//!
+//! Run: `cargo bench --bench e3_cognitive_loop` (after `make artifacts`)
+
+use acelerador::config::SystemConfig;
+use acelerador::coordinator::{CognitiveLoop, LoopReport};
+use acelerador::testkit::bench::Table;
+
+fn script() -> Vec<f64> {
+    let mut s = vec![1.0; 8];
+    s.extend(vec![0.25; 12]); // sudden darkening
+    s.extend(vec![2.5; 12]); // sudden glare
+    s
+}
+
+fn run(closed: bool, seed: u64) -> anyhow::Result<LoopReport> {
+    let mut cfg = SystemConfig::default();
+    cfg.npu.backbone = "spiking_yolo".into();
+    let mut l = CognitiveLoop::new(&cfg, seed)?;
+    l.closed_loop = closed;
+    l.run_script(&script())
+}
+
+fn mean_psnr(r: &LoopReport, lo: usize, hi: usize) -> f64 {
+    let s: Vec<f64> = r.outcomes[lo..hi].iter().map(|o| o.psnr_db).collect();
+    s.iter().sum::<f64>() / s.len() as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== E3: cognitive loop vs static ISP (paper §VI) ===");
+    println!("script: 8 windows @1.0, 12 @0.25 (dark), 12 @2.5 (glare)\n");
+
+    let closed = run(true, 42)?;
+    let open = run(false, 42)?;
+
+    let mut t = Table::new(&["win", "illum", "closed PSNR", "open PSNR", "closed expo", "dets(closed)"]);
+    for (c, o) in closed.outcomes.iter().zip(&open.outcomes) {
+        t.row(&[
+            c.window_id.to_string(),
+            format!("{:.2}", c.illum),
+            format!("{:.1}", c.psnr_db),
+            format!("{:.1}", o.psnr_db),
+            format!("{:.2}", c.exposure_gain),
+            c.detections.len().to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\n--- phase summary ---");
+    let mut t2 = Table::new(&["phase", "closed dB", "open dB", "delta dB"]);
+    for (name, lo, hi) in [
+        ("steady (2..8)", 2usize, 8usize),
+        ("dark tail (14..20)", 14, 20),
+        ("glare tail (26..32)", 26, 32),
+    ] {
+        let c = mean_psnr(&closed, lo, hi);
+        let o = mean_psnr(&open, lo, hi);
+        t2.row(&[name.into(), format!("{c:.1}"), format!("{o:.1}"), format!("{:+.1}", c - o)]);
+    }
+    t2.print();
+
+    for (step, name) in [(8usize, "dark"), (20, "glare")] {
+        match closed.recovery_windows(step, step + 12, 2.0) {
+            Some(w) => println!(
+                "adaptation latency after {name} step: {w} windows = {} ms scene time",
+                w * 50
+            ),
+            None => println!("adaptation after {name} step: not recovered in-script"),
+        }
+    }
+    let lat_npu: f64 = closed.outcomes.iter().map(|o| o.npu_execute_us).sum::<f64>()
+        / closed.outcomes.len() as f64;
+    let lat_e2e: f64 =
+        closed.outcomes.iter().map(|o| o.e2e_us).sum::<f64>() / closed.outcomes.len() as f64;
+    println!("\nmean NPU execute {:.1} ms | mean end-to-end {:.1} ms/window", lat_npu / 1e3, lat_e2e / 1e3);
+    println!("paper claim shape: closed loop recovers image quality after lighting anomalies; static ISP does not.");
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Frame-accumulation CNN baseline — the conventional pipeline the paper
+//! positions SNNs against (§I: "limitations of traditional CNNs").
+//!
+//! Events are accumulated into a single dense frame (event-count image,
+//! both polarities), then pushed through the *same* conv topology as
+//! `spiking_yolo` but with ReLU activations and dense (non-event-driven)
+//! arithmetic. Every MAC executes regardless of input sparsity — the cost
+//! model E4 compares against.
+
+pub mod frame_cnn;
+
+pub use frame_cnn::FrameCnn;

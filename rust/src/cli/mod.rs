@@ -1,0 +1,180 @@
+//! Argument parser (the image has no clap).
+//!
+//! Subcommand-style CLI: `acelerador <command> [--flag value] [--switch]`.
+//! Declared flags are validated (unknown flags error), `--help` text is
+//! generated, and values parse through typed accessors.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// A declared flag (for help text + validation).
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Switches take no value.
+    pub is_switch: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]` against declared flags for the given subcommand.
+    pub fn parse(argv: &[String], specs: &[FlagSpec]) -> Result<Args> {
+        let command = argv.first().cloned().unwrap_or_else(|| "help".to_string());
+        let mut values = BTreeMap::new();
+        let mut switches = Vec::new();
+        let mut positional = Vec::new();
+
+        let mut i = 1;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(name) = arg.strip_prefix("--") {
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| anyhow!("unknown flag --{name} (see --help)"))?;
+                if spec.is_switch {
+                    switches.push(name.to_string());
+                } else {
+                    i += 1;
+                    let val = argv
+                        .get(i)
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    values.insert(name.to_string(), val.clone());
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        for spec in specs {
+            if !spec.is_switch && !values.contains_key(spec.name) {
+                if let Some(d) = spec.default {
+                    values.insert(spec.name.to_string(), d.to_string());
+                }
+            }
+        }
+        Ok(Args { command, values, switches, positional })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.req(name)?.parse().map_err(|_| anyhow!("--{name} must be an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.req(name)?.parse().map_err(|_| anyhow!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.req(name)?.parse().map_err(|_| anyhow!("--{name} must be a number"))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    fn req(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required flag --{name}"))
+    }
+}
+
+/// Render help text for a subcommand.
+pub fn help_text(command: &str, about: &str, specs: &[FlagSpec]) -> String {
+    let mut out = format!("{command} — {about}\n\nFlags:\n");
+    for s in specs {
+        let kind = if s.is_switch { "" } else { " <value>" };
+        let def = s
+            .default
+            .map(|d| format!(" (default: {d})"))
+            .unwrap_or_default();
+        out.push_str(&format!("  --{}{kind}\n      {}{def}\n", s.name, s.help));
+    }
+    out
+}
+
+/// Validate a subcommand name against the known set.
+pub fn check_command(cmd: &str, known: &[&str]) -> Result<()> {
+    if !known.contains(&cmd) {
+        bail!(
+            "unknown command {cmd:?}; available: {}",
+            known.join(", ")
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "steps", help: "number of steps", is_switch: false, default: Some("10") },
+            FlagSpec { name: "config", help: "config file", is_switch: false, default: None },
+            FlagSpec { name: "verbose", help: "log more", is_switch: true, default: None },
+        ]
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(&argv(&["run", "--steps", "50", "--verbose", "file.json"]), &specs()).unwrap();
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get_usize("steps").unwrap(), 50);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["file.json"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(&["run"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 10);
+        assert!(a.get("config").is_none());
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(Args::parse(&argv(&["run", "--nope", "1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv(&["run", "--steps"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn typed_accessor_errors() {
+        let a = Args::parse(&argv(&["run", "--steps", "abc"]), &specs()).unwrap();
+        assert!(a.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn help_lists_flags() {
+        let h = help_text("run", "run things", &specs());
+        assert!(h.contains("--steps"));
+        assert!(h.contains("default: 10"));
+    }
+
+    #[test]
+    fn check_command_validates() {
+        assert!(check_command("serve", &["serve", "bench"]).is_ok());
+        assert!(check_command("nope", &["serve"]).is_err());
+    }
+}

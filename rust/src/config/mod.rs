@@ -1,0 +1,401 @@
+//! Typed configuration system.
+//!
+//! Every subsystem (events, NPU runtime, ISP, coordinator, hw model) has a
+//! config section with validated defaults; the whole tree loads from a JSON
+//! file (`--config path`) with per-field overrides from CLI flags. This is
+//! the "real config system" a deployable framework needs — examples and
+//! benches all construct [`SystemConfig`] rather than scattering literals.
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonlite::Json;
+
+/// Event/DVS front-end configuration (mirrors `python/compile/spec.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventsConfig {
+    pub width: usize,
+    pub height: usize,
+    pub t_bins: usize,
+    pub polarities: usize,
+    pub window_us: u64,
+    /// DVS contrast threshold in integer log2 codes (LOG_SCALE = 64/oct).
+    pub thresh_code: i32,
+    pub noise_rate: f64,
+}
+
+impl Default for EventsConfig {
+    fn default() -> Self {
+        Self {
+            width: 64,
+            height: 64,
+            t_bins: 5,
+            polarities: 2,
+            window_us: 50_000,
+            thresh_code: 16,
+            noise_rate: 0.0008,
+        }
+    }
+}
+
+/// NPU runtime configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NpuConfig {
+    /// Backbone artifact to serve (`spiking_yolo`, ...).
+    pub backbone: String,
+    /// Directory holding `manifest.json` + HLO artifacts.
+    pub artifacts_dir: String,
+    /// Max requests fused into one PJRT execute (must be an exported size).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before flushing.
+    pub batch_timeout_us: u64,
+    /// Detection confidence threshold.
+    pub conf_threshold: f32,
+    /// NMS IoU threshold.
+    pub nms_iou: f32,
+}
+
+impl Default for NpuConfig {
+    fn default() -> Self {
+        Self {
+            backbone: "spiking_yolo".into(),
+            artifacts_dir: "artifacts".into(),
+            max_batch: 4,
+            batch_timeout_us: 2_000,
+            conf_threshold: 0.10,
+            nms_iou: 0.45,
+        }
+    }
+}
+
+/// Cognitive ISP configuration (initial parameters — the NPU retunes them).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IspConfig {
+    pub width: usize,
+    pub height: usize,
+    /// Defective-pixel detection threshold (Yongji–Xiaojun).
+    pub dpc_threshold: i32,
+    /// AWB clip limits: pixels outside are ignored by the gain estimator.
+    pub awb_low: u8,
+    pub awb_high: u8,
+    /// NLM filter strength h (higher = stronger smoothing).
+    pub nlm_h: f64,
+    /// NLM search window radius (FPGA adaptation uses a small window).
+    pub nlm_search: usize,
+    /// Gamma exponent for the LUT.
+    pub gamma: f64,
+    /// Luma sharpen strength (0 disables).
+    pub sharpen: f64,
+}
+
+impl Default for IspConfig {
+    fn default() -> Self {
+        Self {
+            width: 64,
+            height: 64,
+            dpc_threshold: 40,
+            awb_low: 10,
+            awb_high: 245,
+            nlm_h: 10.0,
+            nlm_search: 2,
+            gamma: 2.2,
+            sharpen: 0.5,
+        }
+    }
+}
+
+/// Coordinator / cognitive-loop configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoordinatorConfig {
+    /// Worker threads pulling windows through the NPU.
+    pub workers: usize,
+    /// Control-policy smoothing factor for ISP parameter updates (0..1].
+    pub policy_alpha: f64,
+    /// Brightness band the policy steers the RGB stream into.
+    pub target_luma: f64,
+    /// Queue depth before backpressure stalls the windower.
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self { workers: 2, policy_alpha: 0.5, target_luma: 170.0, queue_depth: 16 }
+    }
+}
+
+/// Hardware (FPGA) model configuration for `hw::` estimates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwConfig {
+    /// Fabric clock in MHz (the paper targets mid-range FPGAs).
+    pub clock_mhz: f64,
+    /// Dynamic energy per MAC in pJ (28 nm-class estimate).
+    pub pj_per_mac: f64,
+    /// Dynamic energy per synaptic spike-op in pJ (sparse accumulate).
+    pub pj_per_synop: f64,
+    /// Static power in mW.
+    pub static_mw: f64,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        Self { clock_mhz: 200.0, pj_per_mac: 4.6, pj_per_synop: 0.9, static_mw: 120.0 }
+    }
+}
+
+/// Top-level system configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SystemConfig {
+    pub events: EventsConfig,
+    pub npu: NpuConfig,
+    pub isp: IspConfig,
+    pub coordinator: CoordinatorConfig,
+    pub hw: HwConfig,
+}
+
+impl SystemConfig {
+    /// Load from a JSON file; missing sections/fields keep defaults.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let json = crate::jsonlite::parse(&text).context("parsing config JSON")?;
+        let mut cfg = Self::default();
+        cfg.apply_json(&json)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Overlay a JSON object onto the current values.
+    pub fn apply_json(&mut self, json: &Json) -> Result<()> {
+        if let Some(e) = json.get("events") {
+            read_usize(e, "width", &mut self.events.width);
+            read_usize(e, "height", &mut self.events.height);
+            read_usize(e, "t_bins", &mut self.events.t_bins);
+            read_usize(e, "polarities", &mut self.events.polarities);
+            read_u64(e, "window_us", &mut self.events.window_us);
+            read_i32(e, "thresh_code", &mut self.events.thresh_code);
+            read_f64(e, "noise_rate", &mut self.events.noise_rate);
+        }
+        if let Some(n) = json.get("npu") {
+            read_string(n, "backbone", &mut self.npu.backbone);
+            read_string(n, "artifacts_dir", &mut self.npu.artifacts_dir);
+            read_usize(n, "max_batch", &mut self.npu.max_batch);
+            read_u64(n, "batch_timeout_us", &mut self.npu.batch_timeout_us);
+            read_f32(n, "conf_threshold", &mut self.npu.conf_threshold);
+            read_f32(n, "nms_iou", &mut self.npu.nms_iou);
+        }
+        if let Some(i) = json.get("isp") {
+            read_usize(i, "width", &mut self.isp.width);
+            read_usize(i, "height", &mut self.isp.height);
+            read_i32(i, "dpc_threshold", &mut self.isp.dpc_threshold);
+            read_u8(i, "awb_low", &mut self.isp.awb_low);
+            read_u8(i, "awb_high", &mut self.isp.awb_high);
+            read_f64(i, "nlm_h", &mut self.isp.nlm_h);
+            read_usize(i, "nlm_search", &mut self.isp.nlm_search);
+            read_f64(i, "gamma", &mut self.isp.gamma);
+            read_f64(i, "sharpen", &mut self.isp.sharpen);
+        }
+        if let Some(c) = json.get("coordinator") {
+            read_usize(c, "workers", &mut self.coordinator.workers);
+            read_f64(c, "policy_alpha", &mut self.coordinator.policy_alpha);
+            read_f64(c, "target_luma", &mut self.coordinator.target_luma);
+            read_usize(c, "queue_depth", &mut self.coordinator.queue_depth);
+        }
+        if let Some(h) = json.get("hw") {
+            read_f64(h, "clock_mhz", &mut self.hw.clock_mhz);
+            read_f64(h, "pj_per_mac", &mut self.hw.pj_per_mac);
+            read_f64(h, "pj_per_synop", &mut self.hw.pj_per_synop);
+            read_f64(h, "static_mw", &mut self.hw.static_mw);
+        }
+        Ok(())
+    }
+
+    /// Cross-field validation — fail fast at startup, not mid-run.
+    pub fn validate(&self) -> Result<()> {
+        if self.events.width == 0 || self.events.height == 0 {
+            bail!("events: width/height must be > 0");
+        }
+        if self.events.t_bins == 0 {
+            bail!("events: t_bins must be > 0");
+        }
+        if self.npu.max_batch == 0 {
+            bail!("npu: max_batch must be > 0");
+        }
+        if !(0.0..=1.0).contains(&(self.npu.conf_threshold as f64)) {
+            bail!("npu: conf_threshold must be in [0,1]");
+        }
+        if self.isp.awb_low >= self.isp.awb_high {
+            bail!("isp: awb_low must be < awb_high");
+        }
+        if self.isp.gamma <= 0.0 {
+            bail!("isp: gamma must be > 0");
+        }
+        if self.coordinator.workers == 0 {
+            bail!("coordinator: workers must be > 0");
+        }
+        if !(0.0..=1.0).contains(&self.coordinator.policy_alpha) {
+            bail!("coordinator: policy_alpha must be in (0,1]");
+        }
+        if self.hw.clock_mhz <= 0.0 {
+            bail!("hw: clock_mhz must be > 0");
+        }
+        Ok(())
+    }
+
+    /// Serialize the full tree (for `acelerador config --dump`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "events",
+                Json::obj(vec![
+                    ("width", Json::num(self.events.width as f64)),
+                    ("height", Json::num(self.events.height as f64)),
+                    ("t_bins", Json::num(self.events.t_bins as f64)),
+                    ("polarities", Json::num(self.events.polarities as f64)),
+                    ("window_us", Json::num(self.events.window_us as f64)),
+                    ("thresh_code", Json::num(self.events.thresh_code as f64)),
+                    ("noise_rate", Json::num(self.events.noise_rate)),
+                ]),
+            ),
+            (
+                "npu",
+                Json::obj(vec![
+                    ("backbone", Json::str(&self.npu.backbone)),
+                    ("artifacts_dir", Json::str(&self.npu.artifacts_dir)),
+                    ("max_batch", Json::num(self.npu.max_batch as f64)),
+                    ("batch_timeout_us", Json::num(self.npu.batch_timeout_us as f64)),
+                    ("conf_threshold", Json::num(self.npu.conf_threshold as f64)),
+                    ("nms_iou", Json::num(self.npu.nms_iou as f64)),
+                ]),
+            ),
+            (
+                "isp",
+                Json::obj(vec![
+                    ("width", Json::num(self.isp.width as f64)),
+                    ("height", Json::num(self.isp.height as f64)),
+                    ("dpc_threshold", Json::num(self.isp.dpc_threshold as f64)),
+                    ("awb_low", Json::num(self.isp.awb_low as f64)),
+                    ("awb_high", Json::num(self.isp.awb_high as f64)),
+                    ("nlm_h", Json::num(self.isp.nlm_h)),
+                    ("nlm_search", Json::num(self.isp.nlm_search as f64)),
+                    ("gamma", Json::num(self.isp.gamma)),
+                    ("sharpen", Json::num(self.isp.sharpen)),
+                ]),
+            ),
+            (
+                "coordinator",
+                Json::obj(vec![
+                    ("workers", Json::num(self.coordinator.workers as f64)),
+                    ("policy_alpha", Json::num(self.coordinator.policy_alpha)),
+                    ("target_luma", Json::num(self.coordinator.target_luma)),
+                    ("queue_depth", Json::num(self.coordinator.queue_depth as f64)),
+                ]),
+            ),
+            (
+                "hw",
+                Json::obj(vec![
+                    ("clock_mhz", Json::num(self.hw.clock_mhz)),
+                    ("pj_per_mac", Json::num(self.hw.pj_per_mac)),
+                    ("pj_per_synop", Json::num(self.hw.pj_per_synop)),
+                    ("static_mw", Json::num(self.hw.static_mw)),
+                ]),
+            ),
+        ])
+    }
+}
+
+fn read_usize(j: &Json, k: &str, dst: &mut usize) {
+    if let Some(v) = j.get(k).and_then(Json::as_usize) {
+        *dst = v;
+    }
+}
+
+fn read_u64(j: &Json, k: &str, dst: &mut u64) {
+    if let Some(v) = j.get(k).and_then(Json::as_i64) {
+        *dst = v as u64;
+    }
+}
+
+fn read_i32(j: &Json, k: &str, dst: &mut i32) {
+    if let Some(v) = j.get(k).and_then(Json::as_i64) {
+        *dst = v as i32;
+    }
+}
+
+fn read_u8(j: &Json, k: &str, dst: &mut u8) {
+    if let Some(v) = j.get(k).and_then(Json::as_i64) {
+        *dst = v as u8;
+    }
+}
+
+fn read_f64(j: &Json, k: &str, dst: &mut f64) {
+    if let Some(v) = j.get(k).and_then(Json::as_f64) {
+        *dst = v;
+    }
+}
+
+fn read_f32(j: &Json, k: &str, dst: &mut f32) {
+    if let Some(v) = j.get(k).and_then(Json::as_f64) {
+        *dst = v as f32;
+    }
+}
+
+fn read_string(j: &Json, k: &str, dst: &mut String) {
+    if let Some(v) = j.get(k).and_then(Json::as_str) {
+        *dst = v.to_string();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        SystemConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn overlay_partial_json() {
+        let mut cfg = SystemConfig::default();
+        let json = crate::jsonlite::parse(
+            r#"{"npu": {"backbone": "spiking_vgg", "max_batch": 8},
+                "isp": {"gamma": 1.8}}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&json).unwrap();
+        assert_eq!(cfg.npu.backbone, "spiking_vgg");
+        assert_eq!(cfg.npu.max_batch, 8);
+        assert_eq!(cfg.isp.gamma, 1.8);
+        // untouched fields keep defaults
+        assert_eq!(cfg.events.t_bins, 5);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut cfg = SystemConfig::default();
+        cfg.isp.awb_low = 250;
+        cfg.isp.awb_high = 10;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SystemConfig::default();
+        cfg.coordinator.workers = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SystemConfig::default();
+        cfg.npu.conf_threshold = 2.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let cfg = SystemConfig::default();
+        let mut cfg2 = SystemConfig::default();
+        cfg2.npu.backbone = "other".into();
+        cfg2.apply_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg2, cfg);
+    }
+
+    #[test]
+    fn from_file_missing_errors() {
+        assert!(SystemConfig::from_file("/nonexistent/cfg.json").is_err());
+    }
+}

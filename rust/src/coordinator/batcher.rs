@@ -1,0 +1,222 @@
+//! NPU service: dedicated engine thread + dynamic batcher.
+//!
+//! The PJRT engine lives on its own thread (XLA handles are not shared
+//! across threads); callers submit voxel windows through a channel and
+//! receive decoded outputs on a per-request reply channel. The batcher
+//! drains whatever is queued (up to the largest exported batch size) into
+//! ONE PJRT execute — the vLLM-style dynamic batching that amortizes
+//! dispatch overhead (measured by E5).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::NpuConfig;
+use crate::events::voxel::VoxelGrid;
+use crate::runtime::NpuEngine;
+
+/// One inference result (per submitted window).
+#[derive(Debug, Clone)]
+pub struct InferReply {
+    pub head: Vec<f32>,
+    pub rates: Vec<f32>,
+    /// PJRT execute time of the batch this request rode in.
+    pub execute_us: f64,
+    /// How many requests shared the batch.
+    pub batch_size: usize,
+    /// Queue wait + execute (service latency).
+    pub service_us: f64,
+}
+
+struct Request {
+    voxel: VoxelGrid,
+    submitted: Instant,
+    reply: Sender<Result<InferReply>>,
+}
+
+/// Handle to the NPU service thread.
+pub struct NpuService {
+    tx: Sender<Request>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl NpuService {
+    /// Spawn the engine thread. Fails fast (synchronously) if the engine
+    /// cannot be constructed.
+    pub fn start(cfg: &NpuConfig) -> Result<Self> {
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let cfg = cfg.clone();
+        let handle = std::thread::Builder::new()
+            .name("npu-engine".into())
+            .spawn(move || engine_thread(cfg, rx, ready_tx))
+            .context("spawning npu thread")?;
+        ready_rx
+            .recv()
+            .context("npu thread died during init")??;
+        Ok(Self { tx, handle: Some(handle) })
+    }
+
+    /// Submit one window; returns the reply receiver (async handle).
+    pub fn submit(&self, voxel: VoxelGrid) -> Receiver<Result<InferReply>> {
+        let (reply_tx, reply_rx) = channel();
+        let _ = self.tx.send(Request { voxel, submitted: Instant::now(), reply: reply_tx });
+        reply_rx
+    }
+
+    /// Submit and wait (convenience for examples/benches).
+    pub fn infer_blocking(&self, voxel: VoxelGrid) -> Result<InferReply> {
+        self.submit(voxel)
+            .recv()
+            .context("npu service dropped the request")?
+    }
+}
+
+impl Drop for NpuService {
+    fn drop(&mut self) {
+        // Closing the channel stops the engine thread.
+        let (tx, _) = channel();
+        drop(std::mem::replace(&mut self.tx, tx));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn engine_thread(cfg: NpuConfig, rx: Receiver<Request>, ready: Sender<Result<()>>) {
+    let engine = match NpuEngine::new(&cfg.artifacts_dir, &cfg.backbone) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let max_batch = cfg
+        .max_batch
+        .min(*engine.batch_sizes().last().unwrap_or(&1));
+    let timeout = Duration::from_micros(cfg.batch_timeout_us);
+
+    loop {
+        // Block for the first request…
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // service dropped
+        };
+        let mut batch = vec![first];
+        // …then give stragglers `batch_timeout` to join, up to max_batch.
+        let deadline = Instant::now() + timeout;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+
+        let voxels: Vec<&VoxelGrid> = batch.iter().map(|r| &r.voxel).collect();
+        match engine.infer(&voxels) {
+            Ok(out) => {
+                let n = batch.len();
+                for (req, head) in batch.into_iter().zip(out.heads.into_iter()) {
+                    let service_us = req.submitted.elapsed().as_secs_f64() * 1e6;
+                    let _ = req.reply.send(Ok(InferReply {
+                        head,
+                        rates: out.rates.clone(),
+                        execute_us: out.execute_us,
+                        batch_size: n,
+                        service_us,
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for req in batch {
+                    let _ = req.reply.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::scene::DvsWindowSim;
+    use crate::events::voxel::voxelize;
+
+    fn cfg() -> NpuConfig {
+        NpuConfig {
+            artifacts_dir: format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")),
+            backbone: "spiking_mobilenet".into(), // smallest: fastest tests
+            ..Default::default()
+        }
+    }
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(&format!("{}/manifest.json", cfg().artifacts_dir)).exists()
+    }
+
+    #[test]
+    fn blocking_inference_round_trip() {
+        if !have_artifacts() {
+            return;
+        }
+        let svc = NpuService::start(&cfg()).unwrap();
+        let vox = voxelize(&DvsWindowSim::new(1).run().0);
+        let reply = svc.infer_blocking(vox).unwrap();
+        assert_eq!(reply.head.len(), 14 * 8 * 8);
+        assert!(reply.service_us >= reply.execute_us * 0.5);
+    }
+
+    #[test]
+    fn concurrent_submissions_get_batched() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut c = cfg();
+        c.batch_timeout_us = 50_000; // generous so all four fuse
+        let svc = NpuService::start(&c).unwrap();
+        let voxels: Vec<_> = (0..4)
+            .map(|s| voxelize(&DvsWindowSim::new(s).run().0))
+            .collect();
+        // warm the engine so the first execute isn't in flight when we
+        // submit the burst
+        svc.infer_blocking(voxels[0].clone()).unwrap();
+        let rxs: Vec<_> = voxels.iter().map(|v| svc.submit(v.clone())).collect();
+        let replies: Vec<_> = rxs.into_iter().map(|r| r.recv().unwrap().unwrap()).collect();
+        let max_batch = replies.iter().map(|r| r.batch_size).max().unwrap();
+        assert!(max_batch >= 2, "no batching occurred (sizes: {:?})",
+            replies.iter().map(|r| r.batch_size).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bad_backbone_fails_fast() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut c = cfg();
+        c.backbone = "nonexistent".into();
+        assert!(NpuService::start(&c).is_err());
+    }
+
+    #[test]
+    fn service_survives_many_requests() {
+        if !have_artifacts() {
+            return;
+        }
+        let svc = NpuService::start(&cfg()).unwrap();
+        let vox = voxelize(&DvsWindowSim::new(2).run().0);
+        for _ in 0..10 {
+            let r = svc.infer_blocking(vox.clone()).unwrap();
+            assert!(!r.head.is_empty());
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Parameter bus — the NPU→ISP control interface (paper §VI).
+//!
+//! Models the paper's register-file/AXI-Lite control plane: sequenced
+//! updates, applied atomically at frame boundaries, with stale-update
+//! rejection (an out-of-order command from a slow path must not overwrite
+//! a newer one) and an update log for the E3 latency measurement.
+
+use crate::isp::pipeline::IspParams;
+
+/// One sequenced parameter command.
+#[derive(Debug, Clone)]
+pub struct ParamUpdate {
+    pub seq: u64,
+    /// Window id that produced this command (provenance for E3).
+    pub source_window: u64,
+    pub params: IspParams,
+}
+
+/// The bus: latest-wins mailbox with sequence checking.
+#[derive(Debug, Default)]
+pub struct ParameterBus {
+    pending: Option<ParamUpdate>,
+    last_applied_seq: u64,
+    pub writes: u64,
+    pub stale_rejected: u64,
+    pub applied: u64,
+}
+
+impl ParameterBus {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// NPU side: publish a command. Stale (seq <= newest seen) is rejected.
+    pub fn publish(&mut self, update: ParamUpdate) -> bool {
+        self.writes += 1;
+        let newest = self
+            .pending
+            .as_ref()
+            .map(|p| p.seq)
+            .unwrap_or(self.last_applied_seq);
+        if update.seq <= newest && (self.pending.is_some() || self.last_applied_seq > 0) {
+            self.stale_rejected += 1;
+            return false;
+        }
+        self.pending = Some(update);
+        true
+    }
+
+    /// ISP side: take the latest command at a frame boundary (if any).
+    pub fn take(&mut self) -> Option<ParamUpdate> {
+        let u = self.pending.take()?;
+        self.last_applied_seq = u.seq;
+        self.applied += 1;
+        Some(u)
+    }
+
+    pub fn has_pending(&self) -> bool {
+        self.pending.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IspConfig;
+
+    fn params() -> IspParams {
+        IspParams::from_config(&IspConfig::default())
+    }
+
+    fn upd(seq: u64) -> ParamUpdate {
+        ParamUpdate { seq, source_window: seq, params: params() }
+    }
+
+    #[test]
+    fn publish_take_cycle() {
+        let mut bus = ParameterBus::new();
+        assert!(bus.publish(upd(1)));
+        assert!(bus.has_pending());
+        let taken = bus.take().unwrap();
+        assert_eq!(taken.seq, 1);
+        assert!(!bus.has_pending());
+        assert_eq!(bus.applied, 1);
+    }
+
+    #[test]
+    fn latest_wins_between_frames() {
+        let mut bus = ParameterBus::new();
+        bus.publish(upd(1));
+        bus.publish(upd(2));
+        assert_eq!(bus.take().unwrap().seq, 2);
+        assert!(bus.take().is_none());
+    }
+
+    #[test]
+    fn stale_update_rejected() {
+        let mut bus = ParameterBus::new();
+        bus.publish(upd(5));
+        assert!(!bus.publish(upd(3)), "stale must be rejected");
+        assert_eq!(bus.stale_rejected, 1);
+        assert_eq!(bus.take().unwrap().seq, 5);
+        // after applying seq 5, an older seq is still stale
+        assert!(!bus.publish(upd(4)));
+    }
+
+    #[test]
+    fn empty_take_is_none() {
+        let mut bus = ParameterBus::new();
+        assert!(bus.take().is_none());
+    }
+}

@@ -1,0 +1,33 @@
+//! The cognitive loop coordinator (paper §VI) — Layer 3's centerpiece.
+//!
+//! Wires the two IP cores into the closed loop the paper describes:
+//!
+//! ```text
+//! DVS events ─► windower ─► voxelizer ─► batcher ─► NPU (PJRT) ─► decode
+//!                                                                  │
+//!      RGB sensor ─► ISP pipeline ◄── parameter bus ◄── control policy
+//!                        │                                         │
+//!                        └──────────── sync controller ◄───────────┘
+//! ```
+//!
+//! * [`windower`] — slices an absolute-time event stream into fixed
+//!   windows (paper §IV-A);
+//! * [`batcher`]  — dedicated NPU thread + request channel: fuses pending
+//!   windows into one PJRT execute (the serving-path amortization);
+//! * [`policy`]   — maps detections + scene statistics to ISP parameter
+//!   commands (AWB gains, gamma/exposure, NLM strength);
+//! * [`bus`]      — the §VI control interface: sequenced parameter
+//!   updates applied at frame boundaries;
+//! * [`sync`]     — aligns DVS windows with RGB frames;
+//! * [`cognitive`] — the composed loop used by `examples/cognitive_loop`.
+
+pub mod batcher;
+pub mod bus;
+pub mod cognitive;
+pub mod policy;
+pub mod sync;
+pub mod windower;
+
+pub use batcher::NpuService;
+pub use cognitive::{CognitiveLoop, LoopReport, WindowOutcome};
+pub use policy::{ControlPolicy, SceneObservation};

@@ -1,0 +1,250 @@
+//! Control policy: detections + scene statistics → ISP parameter commands.
+//!
+//! The paper's NPU "generates real-time adjustment instructions based on
+//! the scene's lighting and motion profile" (§I, §VI). Concretely:
+//!
+//! * **exposure/gamma** — steer the RGB stream's mean luma into a target
+//!   band using the *event-side* illumination estimate (the DVS sees the
+//!   lighting change a window before the RGB path converges — that lead is
+//!   exactly what E3 measures);
+//! * **NLM strength**  — scale with the noise regime: dark scenes (low
+//!   luma, high noise-event fraction) get stronger denoising;
+//! * **AWB gains**     — commanded into `Held` mode when detections exist
+//!   (objects anchor the scene; gray-world drifts when a bright object
+//!   dominates), released to `Auto` otherwise;
+//! * all outputs EMA-smoothed so the ISP never sees parameter steps.
+
+use crate::config::CoordinatorConfig;
+use crate::detect::Detection;
+use crate::isp::awb::AwbGains;
+use crate::isp::pipeline::{AwbMode, IspParams};
+
+/// Per-window observation assembled by the cognitive loop.
+#[derive(Debug, Clone)]
+pub struct SceneObservation {
+    /// Mean luma of the last ISP output frame.
+    pub mean_luma: f64,
+    /// Events in the window (motion + lighting activity).
+    pub event_count: usize,
+    /// Events per pixel per window attributable to noise floor.
+    pub noise_floor: f64,
+    /// Detections this window (post-NMS).
+    pub detections: Vec<Detection>,
+    /// AWB gains the ISP measured on its own (Auto estimate).
+    pub measured_gains: AwbGains,
+    /// Illumination ratio estimated from ON/OFF event imbalance: >1 means
+    /// the scene got brighter during this window.
+    pub illum_ratio: f64,
+}
+
+/// The policy's persistent state.
+#[derive(Debug)]
+pub struct ControlPolicy {
+    cfg: CoordinatorConfig,
+    exposure: f64,
+    nlm_h: f64,
+    held_gains: AwbGains,
+    /// Updates emitted so far (sequence number for the bus).
+    pub updates: u64,
+}
+
+impl ControlPolicy {
+    pub fn new(cfg: &CoordinatorConfig) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            exposure: 1.0,
+            nlm_h: 10.0,
+            held_gains: AwbGains::unity(),
+            updates: 0,
+        }
+    }
+
+    pub fn exposure(&self) -> f64 {
+        self.exposure
+    }
+
+    /// Produce the next ISP parameter set from the current one + the
+    /// observation. Pure function of (state, obs) — unit-testable.
+    pub fn step(&mut self, current: &IspParams, obs: &SceneObservation) -> IspParams {
+        let a = self.cfg.policy_alpha;
+
+        // --- exposure: proportional luma servo with event-side feedforward.
+        // The DVS illumination ratio predicts the *next* frame's luma, so
+        // divide it out before the RGB error correction.
+        let luma = obs.mean_luma.max(1.0);
+        // Deadband: natural scenes sit near — not at — the target; the
+        // servo only acts on genuine anomalies (>18% luma error), so a
+        // well-exposed stream is left untouched (steady-state PSNR parity
+        // with the static ISP, E3's baseline phase).
+        let err = (luma - self.cfg.target_luma).abs() / self.cfg.target_luma;
+        // the display gamma (≈2.2) compresses linear gain; invert it so the
+        // servo's step size is right in *linear* exposure space
+        let rgb_correction = if err < 0.18 {
+            1.0
+        } else {
+            (self.cfg.target_luma / luma).powf(2.2).clamp(0.25, 4.0)
+        };
+        let feedforward = (1.0 / obs.illum_ratio).clamp(0.25, 4.0);
+        let target_exposure = (self.exposure * rgb_correction * feedforward).clamp(0.1, 8.0);
+        self.exposure = (1.0 - a) * self.exposure + a * target_exposure;
+
+        // --- NLM strength: dark scene => more smoothing; busy scene
+        // (many real events) => less, to keep motion detail.
+        let darkness = ((self.cfg.target_luma - luma) / self.cfg.target_luma).clamp(0.0, 1.0);
+        let motion = (obs.event_count as f64 / 2000.0).clamp(0.0, 1.0);
+        let target_h = 6.0 + 14.0 * darkness - 4.0 * motion;
+        self.nlm_h = (1.0 - a) * self.nlm_h + a * target_h.clamp(0.0, 25.0);
+
+        // --- AWB: track the measured estimate continuously so the held
+        // copy is always fresh; hold it (stop chasing gray-world) while
+        // objects are tracked — a bright tracked object would otherwise
+        // drag the estimator off neutral.
+        self.held_gains = AwbGains {
+            r: (1.0 - a) * self.held_gains.r + a * obs.measured_gains.r,
+            g: 1.0,
+            b: (1.0 - a) * self.held_gains.b + a * obs.measured_gains.b,
+        };
+        let awb_mode = if obs.detections.is_empty() {
+            AwbMode::Auto
+        } else {
+            AwbMode::Held
+        };
+
+        self.updates += 1;
+        IspParams {
+            awb_mode,
+            awb_gains: self.held_gains,
+            gamma: current.gamma,
+            exposure_gain: self.exposure,
+            nlm_h: self.nlm_h,
+            sharpen: current.sharpen,
+            dpc_threshold: current.dpc_threshold,
+        }
+    }
+}
+
+/// Estimate the window's illumination ratio from ON/OFF event counts: a
+/// global brightening fires ON events across the background. Ratio of
+/// ON:OFF maps through the DVS threshold to a multiplicative estimate.
+pub fn illum_ratio_from_events(on: usize, off: usize, npix: usize) -> f64 {
+    // net log-intensity movement in threshold units, averaged over pixels
+    let net = on as f64 - off as f64;
+    let per_pix = net / npix.max(1) as f64;
+    // each event ~ THRESH_CODE/LOG_SCALE octaves ≈ 0.25 octave
+    let octaves = per_pix * 0.25;
+    2f64.powf(octaves.clamp(-2.0, 2.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IspConfig;
+
+    fn obs(luma: f64) -> SceneObservation {
+        SceneObservation {
+            mean_luma: luma,
+            event_count: 300,
+            noise_floor: 0.04,
+            detections: vec![],
+            measured_gains: AwbGains::unity(),
+            illum_ratio: 1.0,
+        }
+    }
+
+    fn base_params() -> IspParams {
+        IspParams::from_config(&IspConfig::default())
+    }
+
+    #[test]
+    fn dark_scene_raises_exposure() {
+        let mut p = ControlPolicy::new(&CoordinatorConfig::default());
+        let mut params = base_params();
+        for _ in 0..10 {
+            params = p.step(&params, &obs(30.0));
+        }
+        assert!(params.exposure_gain > 1.5, "exposure {}", params.exposure_gain);
+    }
+
+    #[test]
+    fn bright_scene_lowers_exposure() {
+        let mut p = ControlPolicy::new(&CoordinatorConfig::default());
+        let mut params = base_params();
+        for _ in 0..10 {
+            params = p.step(&params, &obs(220.0));
+        }
+        assert!(params.exposure_gain < 0.8, "exposure {}", params.exposure_gain);
+    }
+
+    #[test]
+    fn on_target_is_stable() {
+        let cfg = CoordinatorConfig::default();
+        let mut p = ControlPolicy::new(&cfg);
+        let mut params = base_params();
+        for _ in 0..10 {
+            params = p.step(&params, &obs(cfg.target_luma));
+        }
+        assert!((params.exposure_gain - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn feedforward_counteracts_brightening_before_rgb_sees_it() {
+        // luma still on target but the DVS reports 2x brightening: the
+        // policy must *pre-emptively* cut exposure.
+        let cfg = CoordinatorConfig::default();
+        let mut p = ControlPolicy::new(&cfg);
+        let mut o = obs(cfg.target_luma);
+        o.illum_ratio = 2.0;
+        let params = p.step(&base_params(), &o);
+        assert!(params.exposure_gain < 1.0, "no feedforward: {}", params.exposure_gain);
+    }
+
+    #[test]
+    fn darkness_strengthens_nlm() {
+        let mut p = ControlPolicy::new(&CoordinatorConfig::default());
+        let mut params = base_params();
+        for _ in 0..10 {
+            params = p.step(&params, &obs(25.0));
+        }
+        let dark_h = params.nlm_h;
+        let mut p2 = ControlPolicy::new(&CoordinatorConfig::default());
+        let mut params2 = base_params();
+        for _ in 0..10 {
+            params2 = p2.step(&params2, &obs(120.0));
+        }
+        assert!(dark_h > params2.nlm_h + 3.0, "{dark_h} vs {}", params2.nlm_h);
+    }
+
+    #[test]
+    fn detections_hold_awb() {
+        let mut p = ControlPolicy::new(&CoordinatorConfig::default());
+        let mut o = obs(110.0);
+        let params = p.step(&base_params(), &o);
+        assert_eq!(params.awb_mode, AwbMode::Auto);
+        o.detections.push(Detection {
+            bbox: crate::detect::BBox::new(10.0, 10.0, 14.0, 9.0),
+            score: 0.9,
+            cls: 0,
+        });
+        let params = p.step(&base_params(), &o);
+        assert_eq!(params.awb_mode, AwbMode::Held);
+    }
+
+    #[test]
+    fn smoothing_prevents_steps() {
+        let cfg = CoordinatorConfig { policy_alpha: 0.3, ..Default::default() };
+        let mut p = ControlPolicy::new(&cfg);
+        let before = p.exposure();
+        p.step(&base_params(), &obs(20.0)); // strong error
+        let after = p.exposure();
+        // bounded per-step movement
+        assert!(after / before < 2.5, "{before} -> {after}");
+    }
+
+    #[test]
+    fn illum_ratio_estimator_direction() {
+        assert!(illum_ratio_from_events(2000, 100, 4096) > 1.05);
+        assert!(illum_ratio_from_events(100, 2000, 4096) < 0.95);
+        let flat = illum_ratio_from_events(500, 500, 4096);
+        assert!((flat - 1.0).abs() < 1e-9);
+    }
+}

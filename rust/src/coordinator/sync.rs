@@ -1,0 +1,137 @@
+//! Synchronization controller (paper §VI): aligns the asynchronous DVS
+//! window stream with the frame-based RGB stream.
+//!
+//! One RGB frame is exposed per DVS window in this system (50 ms window =
+//! 20 fps camera); the controller pairs them by timestamp, tolerating
+//! skew, and reports pairing latency. It is the component that lets the
+//! loop attribute an ISP frame to the NPU window that tuned it (E3's
+//! adaptation-latency metric depends on this attribution).
+
+/// A DVS-window/RGB-frame pairing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pairing {
+    pub window_id: u64,
+    pub frame_id: u64,
+    /// |window_end - frame_timestamp| in µs.
+    pub skew_us: i64,
+}
+
+/// Pairs streams by nearest timestamp within a tolerance.
+#[derive(Debug)]
+pub struct SyncController {
+    window_us: i64,
+    tolerance_us: i64,
+    pending_windows: Vec<(u64, i64)>, // (id, end timestamp)
+    pending_frames: Vec<(u64, i64)>,  // (id, timestamp)
+    pub pairings: Vec<Pairing>,
+    pub dropped_windows: u64,
+    pub dropped_frames: u64,
+}
+
+impl SyncController {
+    pub fn new(window_us: i64, tolerance_us: i64) -> Self {
+        Self {
+            window_us,
+            tolerance_us,
+            pending_windows: Vec::new(),
+            pending_frames: Vec::new(),
+            pairings: Vec::new(),
+            dropped_windows: 0,
+            dropped_frames: 0,
+        }
+    }
+
+    pub fn push_window(&mut self, id: u64, end_us: i64) {
+        self.pending_windows.push((id, end_us));
+        self.try_pair();
+    }
+
+    pub fn push_frame(&mut self, id: u64, t_us: i64) {
+        self.pending_frames.push((id, t_us));
+        self.try_pair();
+    }
+
+    fn try_pair(&mut self) {
+        while let (Some(&(wid, wt)), Some(&(fid, ft))) =
+            (self.pending_windows.first(), self.pending_frames.first())
+        {
+            let skew = (wt - ft).abs();
+            if skew <= self.tolerance_us {
+                self.pairings.push(Pairing { window_id: wid, frame_id: fid, skew_us: skew });
+                self.pending_windows.remove(0);
+                self.pending_frames.remove(0);
+            } else if wt < ft {
+                // window too old: no frame will match it
+                self.pending_windows.remove(0);
+                self.dropped_windows += 1;
+            } else {
+                self.pending_frames.remove(0);
+                self.dropped_frames += 1;
+            }
+        }
+    }
+
+    /// Expected frame timestamp for a window id (frame at window end).
+    pub fn nominal_frame_time(&self, window_id: u64) -> i64 {
+        (window_id as i64 + 1) * self.window_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_streams_pair_in_order() {
+        let mut s = SyncController::new(50_000, 5_000);
+        for i in 0..5u64 {
+            s.push_window(i, (i as i64 + 1) * 50_000);
+            s.push_frame(i, (i as i64 + 1) * 50_000 + 300);
+        }
+        assert_eq!(s.pairings.len(), 5);
+        for (i, p) in s.pairings.iter().enumerate() {
+            assert_eq!(p.window_id, i as u64);
+            assert_eq!(p.frame_id, i as u64);
+            assert_eq!(p.skew_us, 300);
+        }
+    }
+
+    #[test]
+    fn skewed_frame_still_pairs_within_tolerance() {
+        let mut s = SyncController::new(50_000, 5_000);
+        s.push_window(0, 50_000);
+        s.push_frame(0, 54_000);
+        assert_eq!(s.pairings.len(), 1);
+        assert_eq!(s.pairings[0].skew_us, 4_000);
+    }
+
+    #[test]
+    fn missing_frame_drops_window() {
+        let mut s = SyncController::new(50_000, 5_000);
+        s.push_window(0, 50_000);
+        s.push_window(1, 100_000);
+        s.push_frame(0, 100_100); // only the second window's frame arrived
+        assert_eq!(s.dropped_windows, 1);
+        assert_eq!(s.pairings.len(), 1);
+        assert_eq!(s.pairings[0].window_id, 1);
+    }
+
+    #[test]
+    fn burst_then_catchup() {
+        let mut s = SyncController::new(50_000, 5_000);
+        for i in 0..3u64 {
+            s.push_window(i, (i as i64 + 1) * 50_000);
+        }
+        for i in 0..3u64 {
+            s.push_frame(i, (i as i64 + 1) * 50_000);
+        }
+        assert_eq!(s.pairings.len(), 3);
+    }
+
+    #[test]
+    fn nominal_time() {
+        let s = SyncController::new(50_000, 5_000);
+        assert_eq!(s.nominal_frame_time(0), 50_000);
+        assert_eq!(s.nominal_frame_time(9), 500_000);
+    }
+}

@@ -1,0 +1,172 @@
+//! Event-stream windower (paper §IV-A): segments an absolute-time event
+//! stream into fixed temporal windows for voxelization.
+
+use crate::events::{spec, Event};
+
+/// A completed window of events.
+#[derive(Debug, Clone)]
+pub struct Window {
+    pub id: u64,
+    pub start_us: i64,
+    pub events: Vec<Event>,
+}
+
+/// Streaming windower: push events (non-decreasing timestamps), pop
+/// completed windows.
+#[derive(Debug)]
+pub struct Windower {
+    window_us: i64,
+    current_id: u64,
+    current: Vec<Event>,
+    completed: Vec<Window>,
+    last_t: i64,
+}
+
+impl Default for Windower {
+    fn default() -> Self {
+        Self::new(spec::WINDOW_US)
+    }
+}
+
+impl Windower {
+    pub fn new(window_us: i64) -> Self {
+        assert!(window_us > 0);
+        Self { window_us, current_id: 0, current: Vec::new(), completed: Vec::new(), last_t: 0 }
+    }
+
+    /// Window id for a timestamp. Events exactly on a boundary belong to
+    /// the *preceding* window (matches `DvsWindowSim`, whose last subframe
+    /// lands on `t == WINDOW_US`).
+    fn window_of(&self, t_us: i64) -> u64 {
+        if t_us <= 0 {
+            return 0;
+        }
+        ((t_us - 1) / self.window_us) as u64
+    }
+
+    /// Push one event. Out-of-order events within the current window are
+    /// accepted; events older than the current window are dropped (late
+    /// arrivals past the boundary — counted by the return value `false`).
+    pub fn push(&mut self, e: Event) -> bool {
+        let wid = self.window_of(e.t_us);
+        if wid < self.current_id {
+            return false; // too late
+        }
+        while wid > self.current_id {
+            self.roll();
+        }
+        self.last_t = self.last_t.max(e.t_us);
+        self.current.push(e);
+        true
+    }
+
+    fn roll(&mut self) {
+        let start_us = self.current_id as i64 * self.window_us;
+        let events = std::mem::take(&mut self.current);
+        self.completed.push(Window { id: self.current_id, start_us, events });
+        self.current_id += 1;
+    }
+
+    /// Force-close the current window (end of stream / idle flush).
+    pub fn flush(&mut self) {
+        self.roll();
+    }
+
+    /// Drain completed windows.
+    pub fn pop_completed(&mut self) -> Vec<Window> {
+        std::mem::take(&mut self.completed)
+    }
+
+    pub fn current_window_id(&self) -> u64 {
+        self.current_id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::scene::DvsWindowSim;
+
+    fn ev(t: i64) -> Event {
+        Event { t_us: t, x: 0, y: 0, p: 1 }
+    }
+
+    #[test]
+    fn single_window_accumulates() {
+        let mut w = Windower::new(1000);
+        for t in [1, 500, 1000] {
+            assert!(w.push(ev(t)));
+        }
+        assert!(w.pop_completed().is_empty());
+        w.flush();
+        let done = w.pop_completed();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].events.len(), 3);
+        assert_eq!(done[0].id, 0);
+    }
+
+    #[test]
+    fn boundary_event_belongs_to_previous_window() {
+        let mut w = Windower::new(1000);
+        w.push(ev(1000)); // boundary -> window 0
+        w.push(ev(1001)); // -> window 1 (rolls 0)
+        let done = w.pop_completed();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].events.len(), 1);
+        assert_eq!(done[0].events[0].t_us, 1000);
+    }
+
+    #[test]
+    fn gap_produces_empty_windows() {
+        let mut w = Windower::new(1000);
+        w.push(ev(10));
+        w.push(ev(3500)); // skips windows 1, 2
+        let done = w.pop_completed();
+        assert_eq!(done.len(), 3);
+        assert_eq!(done[1].events.len(), 0);
+        assert_eq!(done[2].events.len(), 0);
+        assert_eq!(w.current_window_id(), 3);
+    }
+
+    #[test]
+    fn late_events_dropped() {
+        let mut w = Windower::new(1000);
+        w.push(ev(1500));
+        assert!(!w.push(ev(400))); // window 0 already rolled
+    }
+
+    #[test]
+    fn real_sim_stream_slices_cleanly() {
+        // two consecutive sim windows with absolute timestamps
+        let mut sim = crate::events::scene::ScenarioSim::new(5);
+        let (e1, _, _) = sim.window(1.0);
+        let (e2, _, _) = sim.window(1.0);
+        let mut w = Windower::default();
+        let mut dropped = 0;
+        for e in e1.iter().chain(e2.iter()) {
+            if !w.push(*e) {
+                dropped += 1;
+            }
+        }
+        w.flush();
+        let done = w.pop_completed();
+        assert_eq!(dropped, 0);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].events.len(), e1.len());
+        assert_eq!(done[1].events.len(), e2.len());
+    }
+
+    #[test]
+    fn window_ids_monotone() {
+        let (events, _) = DvsWindowSim::new(1).run();
+        let mut w = Windower::default();
+        for e in &events {
+            w.push(*e);
+        }
+        w.flush();
+        let done = w.pop_completed();
+        for (i, win) in done.iter().enumerate() {
+            assert_eq!(win.id, i as u64);
+        }
+    }
+}

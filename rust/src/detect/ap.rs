@@ -1,0 +1,259 @@
+//! Average Precision @ IoU 0.5 — the E1 metric (paper §IV-C).
+//!
+//! Standard protocol: detections matched greedily to ground truth in score
+//! order, one match per GT; precision/recall curve integrated either
+//! continuously (all-points, COCO-style for a single IoU) or with PASCAL
+//! VOC 11-point interpolation. mAP averages over classes.
+
+use super::bbox::{iou, BBox};
+use super::yolo::Detection;
+use crate::events::GtBox;
+
+/// AP integration mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ApMode {
+    /// All-points interpolation (area under the PR envelope).
+    Continuous,
+    /// PASCAL VOC 11-point interpolation.
+    ElevenPoint,
+}
+
+/// Per-image inputs: detections + ground truth.
+pub struct ImageEval<'a> {
+    pub detections: &'a [Detection],
+    pub ground_truth: &'a [GtBox],
+}
+
+/// Compute AP for one class over a set of images.
+pub fn average_precision(
+    images: &[ImageEval<'_>],
+    cls: usize,
+    iou_thresh: f32,
+    mode: ApMode,
+) -> f64 {
+    // Collect (score, is_tp) over all images.
+    let mut scored: Vec<(f32, bool)> = Vec::new();
+    let mut n_gt = 0usize;
+
+    for img in images {
+        let gts: Vec<BBox> = img
+            .ground_truth
+            .iter()
+            .filter(|g| g.cls == cls)
+            .map(|g| BBox::new(g.x, g.y, g.w, g.h))
+            .collect();
+        n_gt += gts.len();
+
+        let mut dets: Vec<&Detection> =
+            img.detections.iter().filter(|d| d.cls == cls).collect();
+        dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+
+        let mut matched = vec![false; gts.len()];
+        for d in dets {
+            let mut best = -1.0f32;
+            let mut best_i = usize::MAX;
+            for (i, g) in gts.iter().enumerate() {
+                if matched[i] {
+                    continue;
+                }
+                let v = iou(&d.bbox, g);
+                if v > best {
+                    best = v;
+                    best_i = i;
+                }
+            }
+            if best >= iou_thresh && best_i != usize::MAX {
+                matched[best_i] = true;
+                scored.push((d.score, true));
+            } else {
+                scored.push((d.score, false));
+            }
+        }
+    }
+
+    if n_gt == 0 {
+        return 0.0;
+    }
+    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    // PR curve.
+    let mut tp = 0usize;
+    let mut fp = 0usize;
+    let mut precision = Vec::with_capacity(scored.len());
+    let mut recall = Vec::with_capacity(scored.len());
+    for (_, is_tp) in &scored {
+        if *is_tp {
+            tp += 1;
+        } else {
+            fp += 1;
+        }
+        precision.push(tp as f64 / (tp + fp) as f64);
+        recall.push(tp as f64 / n_gt as f64);
+    }
+
+    match mode {
+        ApMode::ElevenPoint => {
+            let mut ap = 0.0;
+            for k in 0..=10 {
+                let r = k as f64 / 10.0;
+                let p_max = precision
+                    .iter()
+                    .zip(&recall)
+                    .filter(|(_, &rec)| rec >= r)
+                    .map(|(&p, _)| p)
+                    .fold(0.0f64, f64::max);
+                ap += p_max / 11.0;
+            }
+            ap
+        }
+        ApMode::Continuous => {
+            // Monotone precision envelope, integrate over recall steps.
+            let n = precision.len();
+            if n == 0 {
+                return 0.0;
+            }
+            let mut env = precision.clone();
+            for i in (0..n - 1).rev() {
+                env[i] = env[i].max(env[i + 1]);
+            }
+            let mut ap = 0.0;
+            let mut prev_r = 0.0;
+            for i in 0..n {
+                let r = recall[i];
+                if r > prev_r {
+                    ap += (r - prev_r) * env[i];
+                    prev_r = r;
+                }
+            }
+            ap
+        }
+    }
+}
+
+/// Mean AP over all classes, plus per-class APs.
+pub fn evaluate_ap(
+    images: &[ImageEval<'_>],
+    num_classes: usize,
+    iou_thresh: f32,
+    mode: ApMode,
+) -> (f64, Vec<f64>) {
+    let per_class: Vec<f64> = (0..num_classes)
+        .map(|c| average_precision(images, c, iou_thresh, mode))
+        .collect();
+    let present: Vec<f64> = per_class
+        .iter()
+        .enumerate()
+        .filter(|(c, _)| {
+            images.iter().any(|img| img.ground_truth.iter().any(|g| g.cls == *c))
+        })
+        .map(|(_, &ap)| ap)
+        .collect();
+    let map = if present.is_empty() {
+        0.0
+    } else {
+        present.iter().sum::<f64>() / present.len() as f64
+    };
+    (map, per_class)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gt(cls: usize, x: f32, y: f32, w: f32, h: f32) -> GtBox {
+        GtBox { cls, x, y, w, h }
+    }
+
+    fn det(cls: usize, x: f32, y: f32, w: f32, h: f32, score: f32) -> Detection {
+        Detection { bbox: BBox::new(x, y, w, h), score, cls }
+    }
+
+    #[test]
+    fn perfect_detection_ap_one() {
+        let gts = vec![gt(0, 10.0, 10.0, 8.0, 8.0)];
+        let dets = vec![det(0, 10.0, 10.0, 8.0, 8.0, 0.9)];
+        let imgs = [ImageEval { detections: &dets, ground_truth: &gts }];
+        for mode in [ApMode::Continuous, ApMode::ElevenPoint] {
+            let ap = average_precision(&imgs, 0, 0.5, mode);
+            assert!(ap > 0.99, "{mode:?}: {ap}");
+        }
+    }
+
+    #[test]
+    fn no_detections_ap_zero() {
+        let gts = vec![gt(0, 10.0, 10.0, 8.0, 8.0)];
+        let dets: Vec<Detection> = vec![];
+        let imgs = [ImageEval { detections: &dets, ground_truth: &gts }];
+        assert_eq!(average_precision(&imgs, 0, 0.5, ApMode::Continuous), 0.0);
+    }
+
+    #[test]
+    fn false_positive_halves_continuous_ap_shape() {
+        // 1 GT; det1 matches (rank 2), det0 is FP at rank 1:
+        // precision at recall 1.0 is 1/2 -> continuous AP = 0.5.
+        let gts = vec![gt(0, 10.0, 10.0, 8.0, 8.0)];
+        let dets = vec![
+            det(0, 40.0, 40.0, 8.0, 8.0, 0.95),
+            det(0, 10.0, 10.0, 8.0, 8.0, 0.90),
+        ];
+        let imgs = [ImageEval { detections: &dets, ground_truth: &gts }];
+        let ap = average_precision(&imgs, 0, 0.5, ApMode::Continuous);
+        assert!((ap - 0.5).abs() < 1e-6, "{ap}");
+    }
+
+    #[test]
+    fn duplicate_detection_counts_as_fp() {
+        // Two identical dets on one GT: second is a FP (one match per GT).
+        let gts = vec![gt(0, 10.0, 10.0, 8.0, 8.0)];
+        let dets = vec![
+            det(0, 10.0, 10.0, 8.0, 8.0, 0.9),
+            det(0, 10.5, 10.0, 8.0, 8.0, 0.8),
+        ];
+        let imgs = [ImageEval { detections: &dets, ground_truth: &gts }];
+        let ap = average_precision(&imgs, 0, 0.5, ApMode::Continuous);
+        // recall hits 1.0 at rank 1 with precision 1.0 -> AP 1.0
+        assert!((ap - 1.0).abs() < 1e-6, "{ap}");
+    }
+
+    #[test]
+    fn low_iou_match_rejected() {
+        let gts = vec![gt(0, 10.0, 10.0, 8.0, 8.0)];
+        let dets = vec![det(0, 14.0, 14.0, 8.0, 8.0, 0.9)]; // iou ~ 0.14
+        let imgs = [ImageEval { detections: &dets, ground_truth: &gts }];
+        assert_eq!(average_precision(&imgs, 0, 0.5, ApMode::Continuous), 0.0);
+    }
+
+    #[test]
+    fn wrong_class_not_matched() {
+        let gts = vec![gt(1, 10.0, 10.0, 8.0, 8.0)];
+        let dets = vec![det(0, 10.0, 10.0, 8.0, 8.0, 0.9)];
+        let imgs = [ImageEval { detections: &dets, ground_truth: &gts }];
+        assert_eq!(average_precision(&imgs, 1, 0.5, ApMode::Continuous), 0.0);
+    }
+
+    #[test]
+    fn map_averages_present_classes_only() {
+        let gts = vec![gt(0, 10.0, 10.0, 8.0, 8.0)]; // only class 0 present
+        let dets = vec![det(0, 10.0, 10.0, 8.0, 8.0, 0.9)];
+        let imgs = [ImageEval { detections: &dets, ground_truth: &gts }];
+        let (map, per_class) = evaluate_ap(&imgs, 2, 0.5, ApMode::Continuous);
+        assert!((map - 1.0).abs() < 1e-6);
+        assert_eq!(per_class.len(), 2);
+    }
+
+    #[test]
+    fn eleven_point_at_least_continuous_here() {
+        // 11-pt interpolation >= continuous for simple monotone curves.
+        let gts = vec![gt(0, 10.0, 10.0, 8.0, 8.0), gt(0, 30.0, 30.0, 8.0, 8.0)];
+        let dets = vec![
+            det(0, 10.0, 10.0, 8.0, 8.0, 0.9),
+            det(0, 50.0, 50.0, 8.0, 8.0, 0.8), // FP
+            det(0, 30.0, 30.0, 8.0, 8.0, 0.7),
+        ];
+        let imgs = [ImageEval { detections: &dets, ground_truth: &gts }];
+        let c = average_precision(&imgs, 0, 0.5, ApMode::Continuous);
+        let e = average_precision(&imgs, 0, 0.5, ApMode::ElevenPoint);
+        assert!(e >= c - 1e-9, "e={e} c={c}");
+        assert!(c > 0.5 && c < 1.0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Axis-aligned boxes and IoU.
+
+/// `(x, y)` top-left, `(w, h)` extents, in pixels.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BBox {
+    pub x: f32,
+    pub y: f32,
+    pub w: f32,
+    pub h: f32,
+}
+
+impl BBox {
+    pub fn new(x: f32, y: f32, w: f32, h: f32) -> Self {
+        Self { x, y, w, h }
+    }
+
+    pub fn area(&self) -> f32 {
+        self.w.max(0.0) * self.h.max(0.0)
+    }
+
+    pub fn x2(&self) -> f32 {
+        self.x + self.w
+    }
+
+    pub fn y2(&self) -> f32 {
+        self.y + self.h
+    }
+
+    pub fn center(&self) -> (f32, f32) {
+        (self.x + self.w / 2.0, self.y + self.h / 2.0)
+    }
+
+    /// Clip to `[0,w] x [0,h]`.
+    pub fn clip(&self, w: f32, h: f32) -> BBox {
+        let x0 = self.x.clamp(0.0, w);
+        let y0 = self.y.clamp(0.0, h);
+        let x1 = self.x2().clamp(0.0, w);
+        let y1 = self.y2().clamp(0.0, h);
+        BBox { x: x0, y: y0, w: (x1 - x0).max(0.0), h: (y1 - y0).max(0.0) }
+    }
+}
+
+/// Intersection-over-union of two boxes.
+pub fn iou(a: &BBox, b: &BBox) -> f32 {
+    let ix = (a.x2().min(b.x2()) - a.x.max(b.x)).max(0.0);
+    let iy = (a.y2().min(b.y2()) - a.y.max(b.y)).max(0.0);
+    let inter = ix * iy;
+    let union = a.area() + b.area() - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::forall;
+
+    #[test]
+    fn identical_boxes_iou_one() {
+        let b = BBox::new(1.0, 2.0, 3.0, 4.0);
+        assert!((iou(&b, &b) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn disjoint_boxes_iou_zero() {
+        let a = BBox::new(0.0, 0.0, 2.0, 2.0);
+        let b = BBox::new(10.0, 10.0, 2.0, 2.0);
+        assert_eq!(iou(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn half_overlap() {
+        let a = BBox::new(0.0, 0.0, 2.0, 2.0);
+        let b = BBox::new(1.0, 0.0, 2.0, 2.0);
+        // inter 2, union 6
+        assert!((iou(&a, &b) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_box_is_safe() {
+        let a = BBox::new(0.0, 0.0, 0.0, 0.0);
+        let b = BBox::new(0.0, 0.0, 2.0, 2.0);
+        assert_eq!(iou(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn clip_bounds() {
+        let b = BBox::new(-5.0, -5.0, 20.0, 8.0).clip(10.0, 10.0);
+        assert_eq!((b.x, b.y), (0.0, 0.0));
+        assert_eq!((b.w, b.h), (10.0, 3.0));
+    }
+
+    #[test]
+    fn property_iou_symmetric_bounded() {
+        forall("iou symmetric and in [0,1]", 200, |g| {
+            let a = BBox::new(
+                g.f32_in(-10.0, 60.0),
+                g.f32_in(-10.0, 60.0),
+                g.f32_in(0.1, 30.0),
+                g.f32_in(0.1, 30.0),
+            );
+            let b = BBox::new(
+                g.f32_in(-10.0, 60.0),
+                g.f32_in(-10.0, 60.0),
+                g.f32_in(0.1, 30.0),
+                g.f32_in(0.1, 30.0),
+            );
+            let ab = iou(&a, &b);
+            let ba = iou(&b, &a);
+            assert!((ab - ba).abs() < 1e-6);
+            assert!((0.0..=1.0 + 1e-6).contains(&ab));
+        });
+    }
+
+    #[test]
+    fn property_containment_iou_is_area_ratio() {
+        forall("contained box iou = areas ratio", 100, |g| {
+            let outer = BBox::new(0.0, 0.0, g.f32_in(10.0, 40.0), g.f32_in(10.0, 40.0));
+            let w = g.f32_in(1.0, outer.w / 2.0);
+            let h = g.f32_in(1.0, outer.h / 2.0);
+            let inner = BBox::new(outer.w / 4.0, outer.h / 4.0, w, h);
+            let expect = inner.area() / outer.area();
+            assert!((iou(&outer, &inner) - expect).abs() < 1e-5);
+        });
+    }
+}

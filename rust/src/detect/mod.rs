@@ -1,0 +1,16 @@
+//! Detection post-processing: boxes, IoU, NMS, YOLO-grid decode, AP@0.5.
+//!
+//! The decode mirrors `python/compile/model.py`'s head layout and
+//! `data.make_targets`' assignment scheme; the AP evaluator implements both
+//! continuous (all-points) and 11-point interpolated AP so E1's backbone
+//! table can be regenerated exactly as the paper reports it.
+
+pub mod ap;
+pub mod bbox;
+pub mod nms;
+pub mod yolo;
+
+pub use ap::{average_precision, evaluate_ap, ApMode};
+pub use bbox::{iou, BBox};
+pub use nms::nms;
+pub use yolo::{decode_head, Detection, YoloSpec};

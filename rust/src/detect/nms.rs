@@ -1,0 +1,106 @@
+//! Greedy per-class non-maximum suppression.
+
+use super::bbox::iou;
+use super::yolo::Detection;
+
+/// Greedy NMS: keep highest-score detection, drop same-class overlaps with
+/// IoU above `thresh`, repeat. Returns survivors sorted by score desc.
+pub fn nms(mut dets: Vec<Detection>, thresh: f32) -> Vec<Detection> {
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let mut keep: Vec<Detection> = Vec::with_capacity(dets.len());
+    'outer: for d in dets {
+        for k in &keep {
+            if k.cls == d.cls && iou(&k.bbox, &d.bbox) > thresh {
+                continue 'outer;
+            }
+        }
+        keep.push(d);
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detect::bbox::BBox;
+    use crate::testkit::prop::forall;
+
+    fn det(x: f32, y: f32, w: f32, h: f32, score: f32, cls: usize) -> Detection {
+        Detection { bbox: BBox::new(x, y, w, h), score, cls }
+    }
+
+    #[test]
+    fn suppresses_overlapping_same_class() {
+        let out = nms(
+            vec![det(0.0, 0.0, 10.0, 10.0, 0.9, 0), det(1.0, 1.0, 10.0, 10.0, 0.8, 0)],
+            0.45,
+        );
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].score, 0.9);
+    }
+
+    #[test]
+    fn keeps_overlapping_different_class() {
+        let out = nms(
+            vec![det(0.0, 0.0, 10.0, 10.0, 0.9, 0), det(1.0, 1.0, 10.0, 10.0, 0.8, 1)],
+            0.45,
+        );
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn keeps_disjoint_same_class() {
+        let out = nms(
+            vec![det(0.0, 0.0, 5.0, 5.0, 0.9, 0), det(20.0, 20.0, 5.0, 5.0, 0.8, 0)],
+            0.45,
+        );
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn output_sorted_by_score() {
+        let out = nms(
+            vec![
+                det(0.0, 0.0, 5.0, 5.0, 0.3, 0),
+                det(20.0, 20.0, 5.0, 5.0, 0.9, 0),
+                det(40.0, 40.0, 5.0, 5.0, 0.6, 1),
+            ],
+            0.45,
+        );
+        let scores: Vec<f32> = out.iter().map(|d| d.score).collect();
+        assert_eq!(scores, vec![0.9, 0.6, 0.3]);
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        assert!(nms(vec![], 0.5).is_empty());
+    }
+
+    #[test]
+    fn property_survivors_mutually_below_threshold() {
+        forall("nms post-condition", 100, |g| {
+            let n = g.usize_in(0, 20);
+            let dets: Vec<Detection> = (0..n)
+                .map(|_| {
+                    det(
+                        g.f32_in(0.0, 50.0),
+                        g.f32_in(0.0, 50.0),
+                        g.f32_in(2.0, 20.0),
+                        g.f32_in(2.0, 20.0),
+                        g.f32_in(0.0, 1.0),
+                        g.usize_in(0, 2),
+                    )
+                })
+                .collect();
+            let out = nms(dets.clone(), 0.45);
+            assert!(out.len() <= dets.len());
+            for i in 0..out.len() {
+                for j in (i + 1)..out.len() {
+                    if out[i].cls == out[j].cls {
+                        assert!(iou(&out[i].bbox, &out[j].bbox) <= 0.45 + 1e-6);
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,221 @@
+//! YOLO-grid head decoding — Rust mirror of the Python head layout.
+//!
+//! The exported head is `[A*(5+C), S, S]` per sample, channel layout per
+//! anchor: `[tx, ty, tw, th, obj, cls0..clsC-1]`. Decode (must match
+//! `model.yolo_loss` / `data.make_targets`):
+//!
+//! ```text
+//! cx = (gx + sigmoid(tx)) * CELL        w = anchor_w * exp(tw)
+//! cy = (gy + sigmoid(ty)) * CELL        h = anchor_h * exp(th)
+//! score = sigmoid(obj) * sigmoid(cls_i)
+//! ```
+
+use super::bbox::BBox;
+use crate::events::spec;
+
+/// One decoded detection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Detection {
+    pub bbox: BBox,
+    pub score: f32,
+    pub cls: usize,
+}
+
+/// Head geometry (defaults mirror `python/compile/spec.py`).
+#[derive(Debug, Clone)]
+pub struct YoloSpec {
+    pub grid: usize,
+    pub cell: f32,
+    pub anchors: Vec<(f32, f32)>,
+    pub num_classes: usize,
+}
+
+impl Default for YoloSpec {
+    fn default() -> Self {
+        Self {
+            grid: spec::GRID,
+            cell: spec::CELL as f32,
+            anchors: spec::ANCHORS.to_vec(),
+            num_classes: spec::NUM_CLASSES,
+        }
+    }
+}
+
+impl YoloSpec {
+    /// Channels per anchor.
+    pub fn stride(&self) -> usize {
+        5 + self.num_classes
+    }
+
+    /// Total head channels.
+    pub fn head_channels(&self) -> usize {
+        self.anchors.len() * self.stride()
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Decode a raw head map `[A*(5+C), S, S]` (row-major) into detections with
+/// `score >= conf_threshold`. No NMS — compose with [`super::nms`].
+pub fn decode_head(head: &[f32], spec_: &YoloSpec, conf_threshold: f32) -> Vec<Detection> {
+    let s = spec_.grid;
+    let stride = spec_.stride();
+    assert_eq!(
+        head.len(),
+        spec_.head_channels() * s * s,
+        "head buffer shape mismatch"
+    );
+    let at = |c: usize, gy: usize, gx: usize| head[(c * s + gy) * s + gx];
+
+    let mut out = Vec::new();
+    for (ai, &(aw, ah)) in spec_.anchors.iter().enumerate() {
+        let base = ai * stride;
+        for gy in 0..s {
+            for gx in 0..s {
+                let obj = sigmoid(at(base + 4, gy, gx));
+                if obj < conf_threshold {
+                    continue; // early-out: score <= obj
+                }
+                let tx = sigmoid(at(base, gy, gx));
+                let ty = sigmoid(at(base + 1, gy, gx));
+                let tw = at(base + 2, gy, gx);
+                let th = at(base + 3, gy, gx);
+                let cx = (gx as f32 + tx) * spec_.cell;
+                let cy = (gy as f32 + ty) * spec_.cell;
+                let w = aw * tw.clamp(-8.0, 8.0).exp();
+                let h = ah * th.clamp(-8.0, 8.0).exp();
+                for cls in 0..spec_.num_classes {
+                    let score = obj * sigmoid(at(base + 5 + cls, gy, gx));
+                    if score >= conf_threshold {
+                        out.push(Detection {
+                            bbox: BBox::new(cx - w / 2.0, cy - h / 2.0, w, h),
+                            score,
+                            cls,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empty_head(spec_: &YoloSpec) -> Vec<f32> {
+        // obj logit very negative -> sigmoid ~ 0 everywhere
+        let s = spec_.grid;
+        let mut head = vec![0.0; spec_.head_channels() * s * s];
+        for ai in 0..spec_.anchors.len() {
+            let base = ai * spec_.stride();
+            for gy in 0..s {
+                for gx in 0..s {
+                    head[((base + 4) * s + gy) * s + gx] = -12.0;
+                }
+            }
+        }
+        head
+    }
+
+    fn put_box(
+        head: &mut [f32],
+        spec_: &YoloSpec,
+        ai: usize,
+        gx: usize,
+        gy: usize,
+        cls: usize,
+    ) {
+        let s = spec_.grid;
+        let base = ai * spec_.stride();
+        let mut set = |c: usize, v: f32| head[((base + c) * s + gy) * s + gx] = v;
+        set(0, 0.0); // sigmoid(0)=0.5 -> center of cell
+        set(1, 0.0);
+        set(2, 0.0); // exp(0)=1 -> anchor-size box
+        set(3, 0.0);
+        set(4, 12.0); // obj ~ 1
+        for c in 0..spec_.num_classes {
+            set(5 + c, if c == cls { 12.0 } else { -12.0 });
+        }
+    }
+
+    #[test]
+    fn empty_head_no_detections() {
+        let spec_ = YoloSpec::default();
+        let head = empty_head(&spec_);
+        assert!(decode_head(&head, &spec_, 0.3).is_empty());
+    }
+
+    #[test]
+    fn decodes_single_box_at_cell_center() {
+        let spec_ = YoloSpec::default();
+        let mut head = empty_head(&spec_);
+        put_box(&mut head, &spec_, 0, 3, 2, 0);
+        let dets = decode_head(&head, &spec_, 0.3);
+        assert_eq!(dets.len(), 1);
+        let d = dets[0];
+        assert_eq!(d.cls, 0);
+        assert!(d.score > 0.9);
+        let (cx, cy) = d.bbox.center();
+        assert!((cx - 3.5 * spec_.cell).abs() < 1e-3);
+        assert!((cy - 2.5 * spec_.cell).abs() < 1e-3);
+        // anchor 0 size
+        assert!((d.bbox.w - spec_.anchors[0].0).abs() < 1e-3);
+        assert!((d.bbox.h - spec_.anchors[0].1).abs() < 1e-3);
+    }
+
+    #[test]
+    fn anchor_1_uses_its_own_size() {
+        let spec_ = YoloSpec::default();
+        let mut head = empty_head(&spec_);
+        put_box(&mut head, &spec_, 1, 1, 1, 1);
+        let dets = decode_head(&head, &spec_, 0.3);
+        assert_eq!(dets.len(), 1);
+        assert_eq!(dets[0].cls, 1);
+        assert!((dets[0].bbox.w - spec_.anchors[1].0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn tw_scales_box() {
+        let spec_ = YoloSpec::default();
+        let mut head = empty_head(&spec_);
+        put_box(&mut head, &spec_, 0, 4, 4, 0);
+        let s = spec_.grid;
+        head[((2) * s + 4) * s + 4] = (2.0f32).ln(); // tw -> 2x anchor width
+        let dets = decode_head(&head, &spec_, 0.3);
+        assert!((dets[0].bbox.w - 2.0 * spec_.anchors[0].0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn threshold_filters() {
+        let spec_ = YoloSpec::default();
+        let mut head = empty_head(&spec_);
+        put_box(&mut head, &spec_, 0, 0, 0, 0);
+        let s = spec_.grid;
+        head[((4) * s) * s] = 0.0; // obj = 0.5
+        assert!(decode_head(&head, &spec_, 0.9).is_empty());
+        assert!(!decode_head(&head, &spec_, 0.2).is_empty());
+    }
+
+    #[test]
+    fn extreme_tw_is_clamped() {
+        let spec_ = YoloSpec::default();
+        let mut head = empty_head(&spec_);
+        put_box(&mut head, &spec_, 0, 0, 0, 0);
+        let s = spec_.grid;
+        head[((2) * s) * s] = 100.0;
+        let dets = decode_head(&head, &spec_, 0.3);
+        assert!(dets[0].bbox.w.is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn wrong_buffer_size_panics() {
+        let spec_ = YoloSpec::default();
+        decode_head(&vec![0.0; 10], &spec_, 0.3);
+    }
+}

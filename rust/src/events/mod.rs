@@ -1,0 +1,75 @@
+//! Event-camera substrate: DVS pixel model, synthetic automotive scenes,
+//! voxel-grid encoding, and the `.evt` stream format.
+//!
+//! Substitutes the paper's hardware-gated inputs (a Prophesee DVS and the
+//! proprietary GEN1 recordings) per DESIGN.md §3. The scene + DVS simulator
+//! is an *operation-for-operation mirror* of `python/compile/data.py`; the
+//! golden test in [`golden`] asserts bit-identical event streams so the
+//! Rust-side evaluation (E1) measures exactly the distribution the models
+//! were trained on.
+
+pub mod golden;
+pub mod io;
+pub mod loglut;
+pub mod scene;
+pub mod spec;
+pub mod voxel;
+
+/// One DVS event `(t, x, y, p)` — paper §IV-A.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Microseconds since window start.
+    pub t_us: i64,
+    pub x: u16,
+    pub y: u16,
+    /// Polarity: 1 = ON (brighter), 0 = OFF (darker).
+    pub p: u8,
+}
+
+/// Ground-truth box (from the scene renderer — replaces GEN1 labels).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GtBox {
+    pub cls: usize,
+    pub x: f32,
+    pub y: f32,
+    pub w: f32,
+    pub h: f32,
+}
+
+/// FNV-1a checksum over the event stream — the cross-language parity hash
+/// (mirror of tools/gen_golden.py::checksum).
+pub fn checksum(events: &[Event]) -> u64 {
+    const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = FNV_OFFSET;
+    for e in events {
+        for v in [e.t_us as u64, e.x as u64, e.y as u64, e.p as u64] {
+            h = (h ^ v).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_changes_with_any_field() {
+        let base = vec![Event { t_us: 10, x: 1, y: 2, p: 1 }];
+        let h0 = checksum(&base);
+        for e in [
+            Event { t_us: 11, x: 1, y: 2, p: 1 },
+            Event { t_us: 10, x: 2, y: 2, p: 1 },
+            Event { t_us: 10, x: 1, y: 3, p: 1 },
+            Event { t_us: 10, x: 1, y: 2, p: 0 },
+        ] {
+            assert_ne!(checksum(&[e]), h0);
+        }
+    }
+
+    #[test]
+    fn checksum_empty_is_offset() {
+        assert_eq!(checksum(&[]), 0xCBF2_9CE4_8422_2325);
+    }
+}

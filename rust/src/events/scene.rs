@@ -1,0 +1,503 @@
+//! Synthetic automotive scene + DVS pixel simulator.
+//!
+//! **Operation-for-operation mirror of `python/compile/data.py`.** Any
+//! behavioural edit must be made in both files and the golden parity file
+//! regenerated (`python tools/gen_golden.py`). The mirror guarantees that
+//! E1's evaluation set is drawn from exactly the training distribution.
+//!
+//! Model (DESIGN.md §3):
+//! * static gradient background, 1–3 cars (wide rects with a darker
+//!   windshield band) + 0–2 pedestrians (thin tall rects), constant
+//!   velocity, advanced in f64;
+//! * DVS pixels hold a reference log2-intensity *code* ([`loglut`]); a move
+//!   of >= `THRESH_CODE` codes emits one ON/OFF event and re-arms;
+//! * shot noise events drawn from a dedicated PRNG stream.
+
+use super::loglut::{LOG_LUT, THRESH_CODE};
+use super::spec;
+use super::{Event, GtBox};
+use crate::util::SplitMix64;
+
+/// A moving scene object (car or pedestrian).
+#[derive(Debug, Clone)]
+pub struct SceneObject {
+    pub cls: usize,
+    pub x: f64,
+    pub y: f64,
+    pub w: u32,
+    pub h: u32,
+    pub vx: f64,
+    pub vy: f64,
+    pub intensity: u8,
+}
+
+/// Static background gradient (identical formula in Python).
+pub fn background() -> Vec<u8> {
+    let mut bg = vec![0u8; spec::WIDTH * spec::HEIGHT];
+    for y in 0..spec::HEIGHT {
+        for x in 0..spec::WIDTH {
+            bg[y * spec::WIDTH + x] =
+                (80 + (x * 48) / spec::WIDTH + (y * 16) / spec::HEIGHT) as u8;
+        }
+    }
+    bg
+}
+
+/// Spawn 1–3 cars then 0–2 pedestrians. Draw order == Python order.
+pub fn spawn_objects(rng: &mut SplitMix64) -> Vec<SceneObject> {
+    let mut objs = Vec::new();
+    let n_cars = rng.range_u32(1, 4);
+    let n_peds = rng.range_u32(0, 3);
+    for _ in 0..n_cars {
+        let w = rng.range_u32(12, 21);
+        let h = rng.range_u32(7, 12);
+        let x = rng.uniform_in(-8.0, (spec::WIDTH as u32 - w / 2) as f64);
+        let y = rng.uniform_in(4.0, (spec::HEIGHT as u32 - h - 4) as f64);
+        let mut vx = rng.uniform_in(40.0, 160.0);
+        if rng.next_u32() & 1 == 1 {
+            vx = -vx;
+        }
+        let vy = rng.uniform_in(-8.0, 8.0);
+        let intensity = rng.range_u32(150, 241) as u8;
+        objs.push(SceneObject { cls: spec::CLASS_CAR, x, y, w, h, vx, vy, intensity });
+    }
+    for _ in 0..n_peds {
+        let w = rng.range_u32(3, 6);
+        let h = rng.range_u32(9, 15);
+        let x = rng.uniform_in(0.0, (spec::WIDTH as u32 - w) as f64);
+        let y = rng.uniform_in(2.0, (spec::HEIGHT as u32 - h - 2) as f64);
+        let mut vx = rng.uniform_in(20.0, 80.0);
+        if rng.next_u32() & 1 == 1 {
+            vx = -vx;
+        }
+        let vy = rng.uniform_in(-4.0, 4.0);
+        // Python: coin first, then ONE branch draws.
+        let coin = rng.next_u32() & 1;
+        let intensity = if coin == 0 {
+            rng.range_u32(30, 71) as u8
+        } else {
+            rng.range_u32(180, 221) as u8
+        };
+        objs.push(SceneObject { cls: spec::CLASS_PED, x, y, w, h, vx, vy, intensity });
+    }
+    objs
+}
+
+/// Render one subframe into `frame` (len W*H). Mirrors `data.render`.
+pub fn render(objs: &[SceneObject], bg: &[u8], illum: f64, frame: &mut [u8]) {
+    frame.copy_from_slice(bg);
+    let (wi, hi) = (spec::WIDTH as isize, spec::HEIGHT as isize);
+    for o in objs {
+        let x0 = o.x.floor() as isize;
+        let y0 = o.y.floor() as isize;
+        let x1 = x0 + o.w as isize;
+        let y1 = y0 + o.h as isize;
+        let (cx0, cy0) = (x0.max(0), y0.max(0));
+        let (cx1, cy1) = (x1.min(wi), y1.min(hi));
+        if cx1 <= cx0 || cy1 <= cy0 {
+            continue;
+        }
+        for y in cy0..cy1 {
+            let row = y as usize * spec::WIDTH;
+            for x in cx0..cx1 {
+                frame[row + x as usize] = o.intensity;
+            }
+        }
+        if o.cls == spec::CLASS_CAR && o.h >= 8 {
+            let wy0 = (y0 + 1).max(0);
+            let wy1 = (y0 + 3).min(hi);
+            if wy1 > wy0 {
+                let dark = (o.intensity as i32 - 90).max(10) as u8;
+                for y in wy0..wy1 {
+                    let row = y as usize * spec::WIDTH;
+                    for x in cx0..cx1 {
+                        frame[row + x as usize] = dark;
+                    }
+                }
+            }
+        }
+    }
+    if illum != 1.0 {
+        for v in frame.iter_mut() {
+            let f = (*v as f64 * illum + 0.5).floor();
+            *v = f.clamp(0.0, 255.0) as u8;
+        }
+    }
+}
+
+/// Advance objects by `dt_s` seconds (f64, mirrors Python op order).
+pub fn step_objects(objs: &mut [SceneObject], dt_s: f64) {
+    for o in objs.iter_mut() {
+        o.x += o.vx * dt_s;
+        o.y += o.vy * dt_s;
+    }
+}
+
+/// Clipped ground-truth boxes at current positions (>=3px both dims).
+pub fn boxes_of(objs: &[SceneObject]) -> Vec<GtBox> {
+    let mut out = Vec::new();
+    for o in objs {
+        let x0 = o.x.max(0.0);
+        let y0 = o.y.max(0.0);
+        let x1 = (o.x + o.w as f64).min(spec::WIDTH as f64);
+        let y1 = (o.y + o.h as f64).min(spec::HEIGHT as f64);
+        if x1 - x0 >= 3.0 && y1 - y0 >= 3.0 {
+            out.push(GtBox {
+                cls: o.cls,
+                x: x0 as f32,
+                y: y0 as f32,
+                w: (x1 - x0) as f32,
+                h: (y1 - y0) as f32,
+            });
+        }
+    }
+    out
+}
+
+/// One 50 ms DVS window simulation (mirror of `data.dvs_window`).
+#[derive(Debug, Clone)]
+pub struct DvsWindowSim {
+    pub seed: u64,
+    pub illum: f64,
+    pub illum_end: Option<f64>,
+}
+
+impl DvsWindowSim {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, illum: 1.0, illum_end: None }
+    }
+
+    pub fn with_illum(seed: u64, illum: f64, illum_end: Option<f64>) -> Self {
+        Self { seed, illum, illum_end }
+    }
+
+    /// Run the window; returns the event stream (emission order) and the
+    /// ground-truth boxes at the window end.
+    pub fn run(&self) -> (Vec<Event>, Vec<GtBox>) {
+        let root = SplitMix64::new(self.seed);
+        let mut scene_rng = root.fork(spec::STREAM_SCENE);
+        let mut noise_rng = root.fork(spec::STREAM_NOISE);
+        let bg = background();
+        let mut objs = spawn_objects(&mut scene_rng);
+
+        let mut frame = vec![0u8; spec::WIDTH * spec::HEIGHT];
+        render(&objs, &bg, self.illum, &mut frame);
+        let mut reference: Vec<i32> =
+            frame.iter().map(|&v| LOG_LUT[v as usize]).collect();
+
+        let mut events = Vec::new();
+        let dt_s = spec::DT_US as f64 * 1e-6;
+        let npix = spec::WIDTH * spec::HEIGHT;
+        let noise_mean = spec::DVS_NOISE_RATE * npix as f64;
+
+        let mut code = vec![0i32; npix];
+        for sf in 1..=spec::SUBFRAMES {
+            step_objects(&mut objs, dt_s);
+            let il = match self.illum_end {
+                Some(end) => {
+                    self.illum + (end - self.illum) * (sf as f64 / spec::SUBFRAMES as f64)
+                }
+                None => self.illum,
+            };
+            render(&objs, &bg, il, &mut frame);
+            for (c, &v) in code.iter_mut().zip(frame.iter()) {
+                *c = LOG_LUT[v as usize];
+            }
+            let t_us = sf as i64 * spec::DT_US;
+
+            // Row-major, all ON then all OFF (matches numpy nonzero order).
+            for y in 0..spec::HEIGHT {
+                for x in 0..spec::WIDTH {
+                    let i = y * spec::WIDTH + x;
+                    if code[i] - reference[i] >= THRESH_CODE {
+                        events.push(Event { t_us, x: x as u16, y: y as u16, p: 1 });
+                    }
+                }
+            }
+            for y in 0..spec::HEIGHT {
+                for x in 0..spec::WIDTH {
+                    let i = y * spec::WIDTH + x;
+                    if code[i] - reference[i] <= -THRESH_CODE {
+                        events.push(Event { t_us, x: x as u16, y: y as u16, p: 0 });
+                    }
+                }
+            }
+            for i in 0..npix {
+                let d = code[i] - reference[i];
+                if d >= THRESH_CODE || d <= -THRESH_CODE {
+                    reference[i] = code[i];
+                }
+            }
+
+            // Shot noise: floor(mean) + bernoulli(frac), then (x, y, p) draws.
+            let mut n_noise = noise_mean as i64;
+            if noise_rng.uniform() < noise_mean - n_noise as f64 {
+                n_noise += 1;
+            }
+            for _ in 0..n_noise {
+                let x = noise_rng.range_u32(0, spec::WIDTH as u32) as u16;
+                let y = noise_rng.range_u32(0, spec::HEIGHT as u32) as u16;
+                let p = (noise_rng.next_u32() & 1) as u8;
+                events.push(Event { t_us, x, y, p });
+            }
+        }
+        (events, boxes_of(&objs))
+    }
+}
+
+/// Multi-window streaming scenario (Rust-only; feeds the cognitive loop).
+///
+/// Objects persist and keep moving across windows; illumination follows a
+/// per-window script (the "lighting anomaly" stimulus of E3). Each window
+/// yields `(events, boxes, clean RGB-gray frame)` so the ISP path can be
+/// driven in sync with the DVS path.
+pub struct ScenarioSim {
+    bg: Vec<u8>,
+    objs: Vec<SceneObject>,
+    noise_rng: SplitMix64,
+    respawn_rng: SplitMix64,
+    reference: Vec<i32>,
+    /// Current illumination (updated per window by the script).
+    pub illum: f64,
+    t_base_us: i64,
+    armed: bool,
+}
+
+impl ScenarioSim {
+    pub fn new(seed: u64) -> Self {
+        let root = SplitMix64::new(seed);
+        let mut scene_rng = root.fork(spec::STREAM_SCENE);
+        let objs = spawn_objects(&mut scene_rng);
+        Self {
+            bg: background(),
+            objs,
+            noise_rng: root.fork(spec::STREAM_NOISE),
+            respawn_rng: scene_rng,
+            reference: vec![0; spec::WIDTH * spec::HEIGHT],
+            illum: 1.0,
+            t_base_us: 0,
+            armed: false,
+        }
+    }
+
+    /// Replace objects that have fully left the canvas.
+    fn respawn_exited(&mut self) {
+        let margin = 24.0;
+        let w = spec::WIDTH as f64;
+        let h = spec::HEIGHT as f64;
+        for i in 0..self.objs.len() {
+            let o = &self.objs[i];
+            if o.x + (o.w as f64) < -margin
+                || o.x > w + margin
+                || o.y + (o.h as f64) < -margin
+                || o.y > h + margin
+            {
+                let mut fresh = spawn_objects(&mut self.respawn_rng);
+                if let Some(new_obj) = fresh.pop() {
+                    self.objs[i] = new_obj;
+                }
+            }
+        }
+    }
+
+    /// Simulate one window at illumination `illum` (ramping from the
+    /// previous window's value). Returns events (absolute µs timestamps),
+    /// GT boxes, and the *clean* final intensity frame (ISP ground truth).
+    pub fn window(&mut self, illum: f64) -> (Vec<Event>, Vec<GtBox>, Vec<u8>) {
+        let start_illum = self.illum;
+        let mut frame = vec![0u8; spec::WIDTH * spec::HEIGHT];
+        if !self.armed {
+            render(&self.objs, &self.bg, start_illum, &mut frame);
+            for (r, &v) in self.reference.iter_mut().zip(frame.iter()) {
+                *r = LOG_LUT[v as usize];
+            }
+            self.armed = true;
+        }
+        let dt_s = spec::DT_US as f64 * 1e-6;
+        let npix = spec::WIDTH * spec::HEIGHT;
+        let noise_mean = spec::DVS_NOISE_RATE * npix as f64;
+        let mut events = Vec::new();
+        let mut code = vec![0i32; npix];
+
+        for sf in 1..=spec::SUBFRAMES {
+            step_objects(&mut self.objs, dt_s);
+            let il = start_illum
+                + (illum - start_illum) * (sf as f64 / spec::SUBFRAMES as f64);
+            render(&self.objs, &self.bg, il, &mut frame);
+            for (c, &v) in code.iter_mut().zip(frame.iter()) {
+                *c = LOG_LUT[v as usize];
+            }
+            let t_us = self.t_base_us + sf as i64 * spec::DT_US;
+            for y in 0..spec::HEIGHT {
+                for x in 0..spec::WIDTH {
+                    let i = y * spec::WIDTH + x;
+                    let d = code[i] - self.reference[i];
+                    if d >= THRESH_CODE {
+                        events.push(Event { t_us, x: x as u16, y: y as u16, p: 1 });
+                    } else if d <= -THRESH_CODE {
+                        events.push(Event { t_us, x: x as u16, y: y as u16, p: 0 });
+                    }
+                    if d >= THRESH_CODE || d <= -THRESH_CODE {
+                        self.reference[i] = code[i];
+                    }
+                }
+            }
+            let mut n_noise = noise_mean as i64;
+            if self.noise_rng.uniform() < noise_mean - n_noise as f64 {
+                n_noise += 1;
+            }
+            for _ in 0..n_noise {
+                let x = self.noise_rng.range_u32(0, spec::WIDTH as u32) as u16;
+                let y = self.noise_rng.range_u32(0, spec::HEIGHT as u32) as u16;
+                let p = (self.noise_rng.next_u32() & 1) as u8;
+                events.push(Event { t_us: self.t_base_us + sf as i64 * spec::DT_US, x, y, p });
+            }
+        }
+        self.illum = illum;
+        self.t_base_us += spec::WINDOW_US;
+        self.respawn_exited();
+
+        // Clean reference frame: final positions, *unit* illumination (what a
+        // perfectly-adapted camera would capture).
+        let mut clean = vec![0u8; npix];
+        render(&self.objs, &self.bg, 1.0, &mut clean);
+        (events, boxes_of(&self.objs), clean)
+    }
+
+    pub fn objects(&self) -> &[SceneObject] {
+        &self.objs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_is_deterministic() {
+        let (e1, b1) = DvsWindowSim::new(42).run();
+        let (e2, b2) = DvsWindowSim::new(42).run();
+        assert_eq!(e1, e2);
+        assert_eq!(b1.len(), b2.len());
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let (e1, _) = DvsWindowSim::new(1).run();
+        let (e2, _) = DvsWindowSim::new(2).run();
+        assert_ne!(super::super::checksum(&e1), super::super::checksum(&e2));
+    }
+
+    #[test]
+    fn events_in_bounds_and_ordered() {
+        let (ev, _) = DvsWindowSim::new(7).run();
+        assert!(!ev.is_empty());
+        let mut last_t = 0;
+        for e in &ev {
+            assert!(e.t_us > 0 && e.t_us <= spec::WINDOW_US);
+            assert!((e.x as usize) < spec::WIDTH);
+            assert!((e.y as usize) < spec::HEIGHT);
+            assert!(e.p <= 1);
+            assert!(e.t_us >= last_t);
+            last_t = e.t_us;
+        }
+    }
+
+    #[test]
+    fn moving_objects_fire_many_events() {
+        let (ev, boxes) = DvsWindowSim::new(5).run();
+        assert!(ev.len() > 50, "only {} events", ev.len());
+        assert!(!boxes.is_empty());
+    }
+
+    #[test]
+    fn darkness_leaves_only_noise() {
+        let (ev, _) = DvsWindowSim::with_illum(5, 0.0, Some(0.0)).run();
+        let expect = spec::DVS_NOISE_RATE
+            * (spec::WIDTH * spec::HEIGHT) as f64
+            * spec::SUBFRAMES as f64;
+        assert!(
+            (ev.len() as f64) <= expect * 3.0 + 10.0,
+            "{} events vs noise budget {expect}",
+            ev.len()
+        );
+    }
+
+    #[test]
+    fn illumination_step_bursts() {
+        let (flat, _) = DvsWindowSim::new(9).run();
+        let (step, _) = DvsWindowSim::with_illum(9, 1.0, Some(2.5)).run();
+        assert!(step.len() as f64 > flat.len() as f64 * 1.5);
+    }
+
+    #[test]
+    fn boxes_clipped() {
+        for seed in 0..20 {
+            let (_, boxes) = DvsWindowSim::new(seed).run();
+            for b in boxes {
+                assert!(b.x >= 0.0 && b.x + b.w <= spec::WIDTH as f32 + 1e-6);
+                assert!(b.y >= 0.0 && b.y + b.h <= spec::HEIGHT as f32 + 1e-6);
+                assert!(b.cls < spec::NUM_CLASSES);
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_advances_time_and_keeps_motion() {
+        let mut s = ScenarioSim::new(11);
+        let (e1, _, _) = s.window(1.0);
+        let (e2, _, _) = s.window(1.0);
+        assert!(!e1.is_empty() && !e2.is_empty());
+        assert!(e2[0].t_us > spec::WINDOW_US);
+        // steady illumination: second window events come from motion only
+    }
+
+    #[test]
+    fn scenario_illum_step_bursts_then_settles() {
+        let mut s = ScenarioSim::new(11);
+        let (base, _, _) = s.window(1.0);
+        let (burst, _, _) = s.window(2.5); // ramp 1.0 -> 2.5
+        let (settled, _, _) = s.window(2.5); // steady at 2.5
+        assert!(burst.len() > base.len(), "{} !> {}", burst.len(), base.len());
+        assert!(settled.len() < burst.len());
+    }
+
+    #[test]
+    fn scenario_clean_frame_unit_illum() {
+        let mut s = ScenarioSim::new(3);
+        let (_, _, clean) = s.window(0.2); // dark capture...
+        // ...but the clean reference is rendered at illum=1.0: bright bg.
+        let mean = clean.iter().map(|&v| v as f64).sum::<f64>() / clean.len() as f64;
+        assert!(mean > 60.0, "clean mean {mean}");
+    }
+
+    #[test]
+    fn render_illum_clamps() {
+        let bg = background();
+        let objs = vec![];
+        let mut frame = vec![0u8; spec::WIDTH * spec::HEIGHT];
+        render(&objs, &bg, 10.0, &mut frame);
+        assert!(frame.iter().all(|&v| v == 255));
+        render(&objs, &bg, 0.0, &mut frame);
+        assert!(frame.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn windshield_band_darker_than_body() {
+        let o = SceneObject {
+            cls: spec::CLASS_CAR,
+            x: 20.0,
+            y: 20.0,
+            w: 16,
+            h: 10,
+            vx: 0.0,
+            vy: 0.0,
+            intensity: 200,
+        };
+        let bg = background();
+        let mut frame = vec![0u8; spec::WIDTH * spec::HEIGHT];
+        render(&[o], &bg, 1.0, &mut frame);
+        assert_eq!(frame[25 * spec::WIDTH + 24], 200); // body
+        assert_eq!(frame[21 * spec::WIDTH + 24], 110); // windshield
+    }
+}

@@ -1,0 +1,54 @@
+//! Rust mirror of `python/compile/spec.py` — the build-time/run-time
+//! contract. A change on either side requires regenerating artifacts and
+//! golden files (see that module's docstring).
+
+/// Temporal bins per window (paper §IV-A).
+pub const T_BINS: usize = 5;
+/// Polarity channels (ON/OFF).
+pub const POLARITIES: usize = 2;
+/// Sensor height (GEN1 is 304x240; scaled for CPU-PJRT).
+pub const HEIGHT: usize = 64;
+/// Sensor width.
+pub const WIDTH: usize = 64;
+/// Window duration in microseconds.
+pub const WINDOW_US: i64 = 50_000;
+
+/// Per-pixel per-subframe probability weight of a noise event.
+pub const DVS_NOISE_RATE: f64 = 0.0008;
+
+/// Subframes rendered per window (1 ms steps).
+pub const SUBFRAMES: usize = 50;
+/// Microseconds per subframe.
+pub const DT_US: i64 = WINDOW_US / SUBFRAMES as i64;
+
+/// YOLO head: SxS grid.
+pub const GRID: usize = 8;
+/// Anchors (w, h) in pixels — car-ish and pedestrian-ish.
+pub const ANCHORS: [(f32, f32); 2] = [(14.0, 9.0), (4.0, 11.0)];
+pub const NUM_CLASSES: usize = 2;
+/// Pixels per grid cell.
+pub const CELL: usize = WIDTH / GRID;
+
+pub const CLASS_CAR: usize = 0;
+pub const CLASS_PED: usize = 1;
+
+/// LIF defaults (paper §IV-B), mirrored from the Python spec.
+pub const LIF_DECAY: f32 = 0.75;
+pub const LIF_THRESHOLD: f32 = 1.0;
+pub const SURROGATE_ALPHA: f32 = 2.0;
+
+/// PRNG stream salts — keep in lockstep with python/compile/data.py.
+pub const STREAM_SCENE: u64 = 1;
+pub const STREAM_NOISE: u64 = 2;
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn derived_constants_consistent() {
+        use super::*;
+        assert_eq!(DT_US, 1000);
+        assert_eq!(CELL, 8);
+        assert_eq!(WIDTH % GRID, 0);
+        assert_eq!(SUBFRAMES as i64 * DT_US, WINDOW_US);
+    }
+}

@@ -1,0 +1,149 @@
+//! One-hot spatial-temporal voxel-grid encoding (paper §IV-A).
+//!
+//! Mirror of `data.voxelize`: events are bucketed into `T_BINS` temporal
+//! bins and 2 polarity channels over the sensor plane; occupancy is binary
+//! (one-hot), which is what the backbones were trained on.
+
+use super::spec;
+use super::Event;
+
+/// Voxel grid `[T, P, H, W]` in row-major f32 (the NPU input layout).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VoxelGrid {
+    pub t_bins: usize,
+    pub polarities: usize,
+    pub height: usize,
+    pub width: usize,
+    pub data: Vec<f32>,
+}
+
+impl VoxelGrid {
+    pub fn zeros() -> Self {
+        Self {
+            t_bins: spec::T_BINS,
+            polarities: spec::POLARITIES,
+            height: spec::HEIGHT,
+            width: spec::WIDTH,
+            data: vec![0.0; spec::T_BINS * spec::POLARITIES * spec::HEIGHT * spec::WIDTH],
+        }
+    }
+
+    #[inline]
+    pub fn idx(&self, t: usize, p: usize, y: usize, x: usize) -> usize {
+        ((t * self.polarities + p) * self.height + y) * self.width + x
+    }
+
+    #[inline]
+    pub fn get(&self, t: usize, p: usize, y: usize, x: usize) -> f32 {
+        self.data[self.idx(t, p, y, x)]
+    }
+
+    /// Number of set voxels.
+    pub fn occupancy(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Fraction of set voxels (input sparsity for E4's energy model).
+    pub fn density(&self) -> f64 {
+        self.occupancy() as f64 / self.data.len() as f64
+    }
+}
+
+/// Voxelize one window of events. Timestamps are window-relative µs.
+pub fn voxelize(events: &[Event]) -> VoxelGrid {
+    let mut grid = VoxelGrid::zeros();
+    for e in events {
+        let tbin =
+            ((e.t_us * spec::T_BINS as i64 / spec::WINDOW_US) as usize).min(spec::T_BINS - 1);
+        let idx = grid.idx(tbin, e.p as usize, e.y as usize, e.x as usize);
+        grid.data[idx] = 1.0;
+    }
+    grid
+}
+
+/// Voxelize with an explicit window start (for [`super::scene::ScenarioSim`]
+/// streams whose timestamps are absolute).
+pub fn voxelize_at(events: &[Event], window_start_us: i64) -> VoxelGrid {
+    let mut grid = VoxelGrid::zeros();
+    for e in events {
+        let rel = e.t_us - window_start_us;
+        if rel < 0 || rel > spec::WINDOW_US {
+            continue;
+        }
+        let tbin = ((rel * spec::T_BINS as i64 / spec::WINDOW_US) as usize).min(spec::T_BINS - 1);
+        let idx = grid.idx(tbin, e.p as usize, e.y as usize, e.x as usize);
+        grid.data[idx] = 1.0;
+    }
+    grid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::scene::DvsWindowSim;
+
+    #[test]
+    fn shape_is_spec() {
+        let g = VoxelGrid::zeros();
+        assert_eq!(
+            g.data.len(),
+            spec::T_BINS * spec::POLARITIES * spec::HEIGHT * spec::WIDTH
+        );
+    }
+
+    #[test]
+    fn one_event_sets_one_voxel() {
+        let ev = [Event { t_us: 1, x: 3, y: 4, p: 1 }];
+        let g = voxelize(&ev);
+        assert_eq!(g.occupancy(), 1);
+        assert_eq!(g.get(0, 1, 4, 3), 1.0);
+    }
+
+    #[test]
+    fn boundary_timestamp_lands_in_last_bin() {
+        let ev = [Event { t_us: spec::WINDOW_US, x: 0, y: 0, p: 0 }];
+        let g = voxelize(&ev);
+        assert_eq!(g.get(spec::T_BINS - 1, 0, 0, 0), 1.0);
+    }
+
+    #[test]
+    fn duplicate_events_stay_binary() {
+        let e = Event { t_us: 100, x: 1, y: 1, p: 0 };
+        let g = voxelize(&[e, e, e]);
+        assert_eq!(g.occupancy(), 1);
+    }
+
+    #[test]
+    fn occupancy_matches_unique_keys() {
+        let (ev, _) = DvsWindowSim::new(42).run();
+        let g = voxelize(&ev);
+        let mut keys = std::collections::HashSet::new();
+        for e in &ev {
+            let tbin = ((e.t_us * spec::T_BINS as i64 / spec::WINDOW_US) as usize)
+                .min(spec::T_BINS - 1);
+            keys.insert((tbin, e.p, e.y, e.x));
+        }
+        assert_eq!(g.occupancy(), keys.len());
+    }
+
+    #[test]
+    fn voxelize_at_shifts_window() {
+        let ev = [
+            Event { t_us: spec::WINDOW_US + 1, x: 2, y: 2, p: 1 },
+            Event { t_us: 2 * spec::WINDOW_US - 1, x: 3, y: 3, p: 0 },
+            Event { t_us: 10, x: 9, y: 9, p: 1 }, // before window: dropped
+        ];
+        let g = voxelize_at(&ev, spec::WINDOW_US);
+        assert_eq!(g.occupancy(), 2);
+        assert_eq!(g.get(0, 1, 2, 2), 1.0);
+        assert_eq!(g.get(spec::T_BINS - 1, 0, 3, 3), 1.0);
+    }
+
+    #[test]
+    fn density_is_small_for_real_windows() {
+        let (ev, _) = DvsWindowSim::new(1).run();
+        let g = voxelize(&ev);
+        assert!(g.density() < 0.2, "density {}", g.density());
+        assert!(g.density() > 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! FPGA hardware model — resources, timing, energy (DESIGN.md §3).
+//!
+//! The paper's deliverable is an FPGA implementation; with no fabric in
+//! this environment, its architectural claims are made *measurable* by a
+//! model calibrated to mid-range 28 nm-class parts:
+//!
+//! * [`resources`] — per-stage LUT/FF/BRAM/DSP occupancy from the same
+//!   window/line-buffer geometry the simulation executes;
+//! * [`timing`]    — cycles/frame from the II=1 + latency model shared with
+//!   [`crate::isp::axis`], and fps at a configured clock;
+//! * [`energy`]    — activity-based dynamic energy: synops (SNN) vs dense
+//!   MACs (frame CNN), pixels through the ISP, plus static power — the E4
+//!   "sparsity -> energy" experiment's instrument.
+
+pub mod energy;
+pub mod resources;
+pub mod timing;
+
+pub use energy::{EnergyModel, EnergyReport};
+pub use resources::{IspResources, ResourceEstimate};
+pub use timing::{frame_timing, FrameTiming};

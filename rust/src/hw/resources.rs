@@ -1,0 +1,223 @@
+//! FPGA resource estimator (LUT / FF / BRAM / DSP) for the ISP stages and
+//! the NPU layers.
+//!
+//! Estimates are derived from the *same geometry the simulator executes*
+//! (window sizes, line widths, arithmetic widths), using standard
+//! synthesis rules of thumb for 6-input-LUT fabrics:
+//!
+//! * line buffer: one 18 Kb BRAM per (width x 8 b) line (width <= 2 K);
+//! * KxK window register file: K*K*8 FFs + mux LUTs;
+//! * u8 adder ~ 8 LUTs, u8 comparator ~ 4, 8x8 multiply = 1 DSP (or ~60
+//!   LUTs if DSP-less), sorting network: 19 compare-exchange for median-8;
+//! * per-MAC int8 in the NPU datapath: 1 DSP shared by 2 MACs (DSP48
+//!   packing), membrane registers 16 b each.
+//!
+//! These are deliberately conservative "would synthesize" numbers — E6
+//! reports them next to the paper's qualitative claims.
+
+/// One block's resource estimate.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResourceEstimate {
+    pub lut: u64,
+    pub ff: u64,
+    /// 18 Kb BRAM blocks.
+    pub bram18: u64,
+    pub dsp: u64,
+}
+
+impl ResourceEstimate {
+    pub fn add(&self, o: &ResourceEstimate) -> ResourceEstimate {
+        ResourceEstimate {
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            bram18: self.bram18 + o.bram18,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+}
+
+/// BRAMs for `lines` line buffers of `width` u8 pixels.
+fn line_bram(lines: u64, width: u64) -> u64 {
+    // 18 Kb = 2048 bytes; one line of width<=2048 fits one BRAM18.
+    lines * width.div_ceil(2048).max(1)
+}
+
+/// KxK window former: K-1 line buffers + register file + shift muxes.
+fn window_former(k: u64, width: u64) -> ResourceEstimate {
+    ResourceEstimate {
+        lut: k * k * 6,           // shift/mux network
+        ff: k * k * 8,            // window registers
+        bram18: line_bram(k - 1, width),
+        dsp: 0,
+    }
+}
+
+/// ISP per-stage estimates at a given line width.
+pub struct IspResources;
+
+impl IspResources {
+    /// Dynamic defective pixel correction: 5x5 former + 8-way comparators
+    /// + median-8 sorting network.
+    pub fn dpc(width: u64) -> ResourceEstimate {
+        let wf = window_former(5, width);
+        ResourceEstimate {
+            lut: wf.lut + 8 * 10 /*cmp+thresh*/ + 19 * 10 /*median net*/,
+            ff: wf.ff + 32,
+            bram18: wf.bram18,
+            dsp: 0,
+        }
+    }
+
+    /// AWB: 3 accumulators (32 b) + clip comparators + 3 Q4.12 multipliers.
+    pub fn awb(_width: u64) -> ResourceEstimate {
+        ResourceEstimate { lut: 3 * 40 + 2 * 4 + 60, ff: 3 * 32 + 16, bram18: 0, dsp: 3 }
+    }
+
+    /// Malvar demosaic: 5x5 former + 3 shift-add stencil datapaths.
+    pub fn demosaic(width: u64) -> ResourceEstimate {
+        let wf = window_former(5, width);
+        ResourceEstimate {
+            lut: wf.lut + 3 * 90, // stencils are shift-add only
+            ff: wf.ff + 3 * 10,
+            bram18: wf.bram18,
+            dsp: 0,
+        }
+    }
+
+    /// FPGA-NLM: 7x7 former + 24 patch-SSD units + weight LUT + divider.
+    pub fn nlm(width: u64) -> ResourceEstimate {
+        let wf = window_former(7, width);
+        ResourceEstimate {
+            lut: wf.lut + 24 * 40 /*SSD*/ + 64 /*LUT idx*/ + 200 /*recip*/,
+            ff: wf.ff + 24 * 16,
+            bram18: wf.bram18 + 1, // weight LUT
+            dsp: 25,               // weighted accumulate
+        }
+    }
+
+    /// Gamma: one BRAM LUT + registers.
+    pub fn gamma(_width: u64) -> ResourceEstimate {
+        ResourceEstimate { lut: 8, ff: 16, bram18: 1, dsp: 0 }
+    }
+
+    /// CSC + sharpen: 3x3 Y former + 9 Q2.14 multipliers (DSP) + adders.
+    pub fn csc_sharpen(width: u64) -> ResourceEstimate {
+        let wf = window_former(3, width);
+        ResourceEstimate {
+            lut: wf.lut + 9 * 20 + 80,
+            ff: wf.ff + 48,
+            bram18: wf.bram18,
+            dsp: 9,
+        }
+    }
+
+    /// Whole-pipeline total.
+    pub fn pipeline(width: u64) -> ResourceEstimate {
+        [
+            Self::dpc(width),
+            Self::awb(width),
+            Self::demosaic(width),
+            Self::nlm(width),
+            Self::gamma(width),
+            Self::csc_sharpen(width),
+        ]
+        .iter()
+        .fold(ResourceEstimate::default(), |a, b| a.add(b))
+    }
+
+    /// Stage table (name, estimate) — the E6 rows.
+    pub fn stage_table(width: u64) -> Vec<(&'static str, ResourceEstimate)> {
+        vec![
+            ("dpc", Self::dpc(width)),
+            ("awb", Self::awb(width)),
+            ("demosaic", Self::demosaic(width)),
+            ("nlm", Self::nlm(width)),
+            ("gamma", Self::gamma(width)),
+            ("csc_sharpen", Self::csc_sharpen(width)),
+        ]
+    }
+}
+
+/// NPU spiking conv layer: int8 weights in BRAM, event-driven MAC array,
+/// 16 b membrane registers.
+pub fn npu_conv_layer(
+    c_in: u64,
+    c_out: u64,
+    k: u64,
+    h: u64,
+    w: u64,
+    groups: u64,
+) -> ResourceEstimate {
+    let weights_bytes = c_out * (c_in / groups) * k * k;
+    let neurons = c_out * h * w;
+    // membrane state lives in BRAM above 2048 neurons, else FF
+    let (mem_bram, mem_ff) = if neurons > 2048 {
+        (((neurons * 16) as u64).div_ceil(18 * 1024), 0)
+    } else {
+        (0, neurons * 16)
+    };
+    ResourceEstimate {
+        lut: 300 + k * k * 12, // event scheduler + accumulate tree
+        ff: 200 + mem_ff,
+        bram18: weights_bytes.div_ceil(2048).max(1) + mem_bram,
+        dsp: (k * k).div_ceil(2), // DSP48 packs 2 int8 MACs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_buffer_bram_scales_with_window() {
+        let d5 = IspResources::dpc(64);
+        let d7 = IspResources::nlm(64);
+        assert!(d7.bram18 > d5.bram18);
+        assert_eq!(IspResources::dpc(64).bram18, 4); // 5x5 -> 4 lines
+    }
+
+    #[test]
+    fn wide_lines_need_more_bram() {
+        let narrow = IspResources::demosaic(640);
+        let wide = IspResources::demosaic(4096);
+        assert!(wide.bram18 > narrow.bram18);
+    }
+
+    #[test]
+    fn pipeline_is_sum_of_stages() {
+        let total = IspResources::pipeline(64);
+        let sum = IspResources::stage_table(64)
+            .iter()
+            .fold(ResourceEstimate::default(), |a, (_, b)| a.add(b));
+        assert_eq!(total, sum);
+    }
+
+    #[test]
+    fn nlm_dominates_dsp_in_isp() {
+        let t = IspResources::stage_table(1920);
+        let nlm = t.iter().find(|(n, _)| *n == "nlm").unwrap().1;
+        for (name, r) in &t {
+            if *name != "nlm" {
+                assert!(nlm.dsp >= r.dsp, "{name} uses more DSP than NLM");
+            }
+        }
+    }
+
+    #[test]
+    fn npu_layer_memory_scales() {
+        let small = npu_conv_layer(2, 16, 3, 64, 64, 1);
+        let big = npu_conv_layer(64, 64, 3, 16, 16, 1);
+        assert!(big.bram18 > small.bram18 || big.dsp >= small.dsp);
+        assert!(small.bram18 >= 1);
+    }
+
+    #[test]
+    fn whole_isp_fits_midrange_fpga_at_1080p() {
+        // sanity: the paper targets embedded FPGAs; a 1080p pipeline should
+        // fit in an Artix-7-class budget (~100k LUT, 240 BRAM18, 240 DSP).
+        let r = IspResources::pipeline(1920);
+        assert!(r.lut < 100_000, "LUT {}", r.lut);
+        assert!(r.bram18 < 240, "BRAM {}", r.bram18);
+        assert!(r.dsp < 240, "DSP {}", r.dsp);
+    }
+}

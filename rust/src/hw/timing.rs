@@ -1,0 +1,90 @@
+//! Cycle/frame timing model.
+//!
+//! II=1 streaming: a frame takes `H*W + total_latency + stall_cycles`
+//! fabric cycles. Latencies come from the same geometry as
+//! [`crate::isp::axis::isp_stage_latencies`]; the cycle-accurate sim (E7)
+//! validates the formula, this module turns it into fps/Hz numbers at a
+//! configured clock (E6).
+
+use crate::config::HwConfig;
+use crate::isp::axis::isp_stage_latencies;
+
+/// Timing of one frame through the streaming pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct FrameTiming {
+    pub cycles: u64,
+    pub clock_mhz: f64,
+}
+
+impl FrameTiming {
+    pub fn frame_us(&self) -> f64 {
+        self.cycles as f64 / self.clock_mhz
+    }
+
+    pub fn fps(&self) -> f64 {
+        1e6 / self.frame_us()
+    }
+}
+
+/// Ideal (unstalled) frame timing at `width x height`.
+pub fn frame_timing(width: usize, height: usize, hw: &HwConfig) -> FrameTiming {
+    let latency: usize = isp_stage_latencies(width).iter().map(|(_, l)| l).sum();
+    FrameTiming {
+        cycles: (width * height + latency) as u64,
+        clock_mhz: hw.clock_mhz,
+    }
+}
+
+/// NPU inference timing: event-driven — cycles ~ synops / parallel MACs
+/// (+ fixed per-timestep overhead for the membrane scan).
+pub fn npu_timing(synops: u64, neurons: u64, t_bins: u64, macs_parallel: u64, hw: &HwConfig) -> FrameTiming {
+    let mac_cycles = synops.div_ceil(macs_parallel.max(1));
+    let scan_cycles = neurons * t_bins / 8; // 8-wide membrane update
+    FrameTiming { cycles: mac_cycles + scan_cycles, clock_mhz: hw.clock_mhz }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_is_small_vs_pixels() {
+        let hw = HwConfig::default();
+        let t = frame_timing(1920, 1080, &hw);
+        let pixels = 1920 * 1080;
+        assert!(t.cycles as f64 / (pixels as f64) < 1.01);
+    }
+
+    #[test]
+    fn fps_at_200mhz_1080p_exceeds_60() {
+        // the streaming claim: 1080p60 easily at II=1 and 200 MHz
+        let hw = HwConfig::default();
+        let t = frame_timing(1920, 1080, &hw);
+        assert!(t.fps() > 60.0, "fps {}", t.fps());
+    }
+
+    #[test]
+    fn small_frames_are_microseconds() {
+        let hw = HwConfig::default();
+        let t = frame_timing(64, 64, &hw);
+        assert!(t.frame_us() < 50.0, "{}", t.frame_us());
+    }
+
+    #[test]
+    fn npu_scales_with_sparsity() {
+        let hw = HwConfig::default();
+        let dense = npu_timing(10_000_000, 100_000, 5, 64, &hw);
+        let sparse = npu_timing(1_000_000, 100_000, 5, 64, &hw);
+        // fixed membrane-scan cost floors the win; MAC cycles drop 10x
+        assert!(sparse.cycles * 2 < dense.cycles);
+    }
+
+    #[test]
+    fn fps_monotone_in_clock() {
+        let mut hw = HwConfig::default();
+        let slow = frame_timing(640, 480, &hw);
+        hw.clock_mhz *= 2.0;
+        let fast = frame_timing(640, 480, &hw);
+        assert!((fast.fps() / slow.fps() - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,272 @@
+//! Auto White Balance (paper §V-B.2).
+//!
+//! Two cooperating pieces, exactly as the paper describes:
+//!
+//! * a **measurement state machine** ([`AwbEstimator`]) that scans the raw
+//!   Bayer stream, discarding over/under-exposed pixels, and accumulates
+//!   per-channel sums to produce gray-world gains;
+//! * a **gain applier** ([`apply_gains_bayer`]) in Q4.12 fixed point that
+//!   multiplies each Bayer site by its channel gain — this is the stage
+//!   the NPU retunes on the fly through the parameter bus (§VI).
+
+use super::sensor::{bayer_color, BayerColor};
+use crate::util::fixed::{gain_u8, Q};
+use crate::util::ImageU8;
+
+/// Fractional bits of the gain format (Q4.12: gains up to 16x).
+pub const GAIN_FRAC_BITS: u32 = 12;
+
+/// Per-channel white-balance gains (linear, 1.0 = unity).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AwbGains {
+    pub r: f64,
+    pub g: f64,
+    pub b: f64,
+}
+
+impl AwbGains {
+    pub fn unity() -> Self {
+        Self { r: 1.0, g: 1.0, b: 1.0 }
+    }
+
+    /// Quantize to the Q4.12 hardware format.
+    pub fn to_q(&self) -> (Q, Q, Q) {
+        (
+            Q::from_f64(self.r, GAIN_FRAC_BITS),
+            Q::from_f64(self.g, GAIN_FRAC_BITS),
+            Q::from_f64(self.b, GAIN_FRAC_BITS),
+        )
+    }
+}
+
+/// Measurement state machine: streams raw pixels, rejects clipped ones.
+#[derive(Debug, Clone)]
+pub struct AwbEstimator {
+    pub low: u8,
+    pub high: u8,
+    sum_r: u64,
+    sum_g: u64,
+    sum_b: u64,
+    n_r: u64,
+    n_g: u64,
+    n_b: u64,
+}
+
+impl AwbEstimator {
+    pub fn new(low: u8, high: u8) -> Self {
+        Self { low, high, sum_r: 0, sum_g: 0, sum_b: 0, n_r: 0, n_g: 0, n_b: 0 }
+    }
+
+    /// Feed one Bayer site.
+    #[inline]
+    pub fn push(&mut self, x: usize, y: usize, v: u8) {
+        if v < self.low || v > self.high {
+            return; // clipping rejection (paper: discard over/under-exposed)
+        }
+        match bayer_color(x, y) {
+            BayerColor::Red => {
+                self.sum_r += v as u64;
+                self.n_r += 1;
+            }
+            BayerColor::GreenR | BayerColor::GreenB => {
+                self.sum_g += v as u64;
+                self.n_g += 1;
+            }
+            BayerColor::Blue => {
+                self.sum_b += v as u64;
+                self.n_b += 1;
+            }
+        }
+    }
+
+    /// Feed a whole frame.
+    pub fn measure_frame(&mut self, raw: &ImageU8) {
+        for y in 0..raw.height {
+            for x in 0..raw.width {
+                self.push(x, y, raw.get(x, y));
+            }
+        }
+    }
+
+    /// Gray-world gains: scale R and B means onto the G mean. Returns
+    /// `None` when a channel has no usable (unclipped) pixels — the caller
+    /// keeps the previous gains (the state machine's "hold" state).
+    pub fn gains(&self) -> Option<AwbGains> {
+        if self.n_r == 0 || self.n_g == 0 || self.n_b == 0 {
+            return None;
+        }
+        let mean_r = self.sum_r as f64 / self.n_r as f64;
+        let mean_g = self.sum_g as f64 / self.n_g as f64;
+        let mean_b = self.sum_b as f64 / self.n_b as f64;
+        if mean_r < 1.0 || mean_b < 1.0 {
+            return None;
+        }
+        let clamp = |g: f64| g.clamp(0.25, 8.0);
+        Some(AwbGains {
+            r: clamp(mean_g / mean_r),
+            g: 1.0,
+            b: clamp(mean_g / mean_b),
+        })
+    }
+
+    pub fn reset(&mut self) {
+        *self = Self::new(self.low, self.high);
+    }
+
+    /// Usable-sample counts (r, g, b) — exposed for tests/metrics.
+    pub fn counts(&self) -> (u64, u64, u64) {
+        (self.n_r, self.n_g, self.n_b)
+    }
+}
+
+/// Apply channel gains to a Bayer frame in Q4.12 (the HDL datapath).
+pub fn apply_gains_bayer(raw: &ImageU8, gains: &AwbGains) -> ImageU8 {
+    let (qr, qg, qb) = gains.to_q();
+    let mut out = ImageU8::new(raw.width, raw.height);
+    for y in 0..raw.height {
+        for x in 0..raw.width {
+            let v = raw.get(x, y);
+            let q = match bayer_color(x, y) {
+                BayerColor::Red => qr,
+                BayerColor::GreenR | BayerColor::GreenB => qg,
+                BayerColor::Blue => qb,
+            };
+            out.set(x, y, gain_u8(v, q));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isp::sensor::{mosaic_clean, SensorModel};
+    use crate::util::{ImageU8, PlanarRgb, SplitMix64};
+
+    fn cast_frame(r: u8, g: u8, b: u8) -> ImageU8 {
+        let rgb = PlanarRgb {
+            width: 16,
+            height: 16,
+            r: vec![r; 256],
+            g: vec![g; 256],
+            b: vec![b; 256],
+        };
+        mosaic_clean(&rgb)
+    }
+
+    #[test]
+    fn neutral_frame_unity_gains() {
+        let raw = cast_frame(100, 100, 100);
+        let mut est = AwbEstimator::new(10, 245);
+        est.measure_frame(&raw);
+        let g = est.gains().unwrap();
+        assert!((g.r - 1.0).abs() < 0.01 && (g.b - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn warm_cast_yields_corrective_gains() {
+        // R too strong, B too weak -> r gain < 1, b gain > 1
+        let raw = cast_frame(150, 100, 60);
+        let mut est = AwbEstimator::new(10, 245);
+        est.measure_frame(&raw);
+        let g = est.gains().unwrap();
+        assert!((g.r - 100.0 / 150.0).abs() < 0.02, "r gain {}", g.r);
+        assert!((g.b - 100.0 / 60.0).abs() < 0.05, "b gain {}", g.b);
+    }
+
+    #[test]
+    fn gains_roundtrip_neutralizes_cast() {
+        let raw = cast_frame(150, 100, 60);
+        let mut est = AwbEstimator::new(10, 245);
+        est.measure_frame(&raw);
+        let corrected = apply_gains_bayer(&raw, &est.gains().unwrap());
+        let mut est2 = AwbEstimator::new(10, 245);
+        est2.measure_frame(&corrected);
+        let g2 = est2.gains().unwrap();
+        assert!((g2.r - 1.0).abs() < 0.03 && (g2.b - 1.0).abs() < 0.03);
+    }
+
+    #[test]
+    fn clipped_pixels_rejected() {
+        // saturated highlights would bias gray-world; estimator must drop them
+        let mut raw = cast_frame(120, 120, 120);
+        for x in 0..16 {
+            raw.set(x, 0, 255);
+            raw.set(x, 1, 255);
+        }
+        let mut est = AwbEstimator::new(10, 245);
+        est.measure_frame(&raw);
+        let g = est.gains().unwrap();
+        assert!((g.r - 1.0).abs() < 0.02, "clipping leaked into gains: {g:?}");
+        let (nr, _, _) = est.counts();
+        assert!(nr < 64); // some R sites were rejected
+    }
+
+    #[test]
+    fn black_frame_holds_gains() {
+        let raw = cast_frame(0, 0, 0);
+        let mut est = AwbEstimator::new(10, 245);
+        est.measure_frame(&raw);
+        assert!(est.gains().is_none(), "must hold previous gains");
+    }
+
+    #[test]
+    fn extreme_cast_gains_clamped() {
+        let raw = cast_frame(240, 100, 11);
+        let mut est = AwbEstimator::new(10, 245);
+        est.measure_frame(&raw);
+        let g = est.gains().unwrap();
+        assert!(g.b <= 8.0 && g.r >= 0.25);
+    }
+
+    #[test]
+    fn q412_application_matches_float_within_lsb() {
+        let raw = cast_frame(150, 100, 60);
+        let gains = AwbGains { r: 2.0 / 3.0, g: 1.0, b: 5.0 / 3.0 };
+        let out = apply_gains_bayer(&raw, &gains);
+        for y in 0..4 {
+            for x in 0..4 {
+                let want = match bayer_color(x, y) {
+                    BayerColor::Red => (150.0 * gains.r).round(),
+                    BayerColor::GreenR | BayerColor::GreenB => 100.0,
+                    BayerColor::Blue => (60.0 * gains.b).round(),
+                };
+                assert!(
+                    (out.get(x, y) as f64 - want).abs() <= 1.0,
+                    "({x},{y}): {} vs {want}",
+                    out.get(x, y)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn corrects_sensor_cast_end_to_end() {
+        // full path: cast capture -> measure -> apply -> channel means align
+        let frame = ImageU8::from_fn(64, 64, |x, y| (80 + (x + y) % 100) as u8);
+        let model = SensorModel { noise_sigma: 0.0, hot_frac: 0.0, dead_frac: 0.0, ..Default::default() };
+        let mut rng = SplitMix64::new(2);
+        let cap = model.capture(&frame, &mut rng);
+        let mut est = AwbEstimator::new(10, 245);
+        est.measure_frame(&cap.raw);
+        let corrected = apply_gains_bayer(&cap.raw, &est.gains().unwrap());
+        // compare same-colour site means after correction
+        let mean_of = |img: &ImageU8, want: BayerColor| {
+            let mut s = 0u64;
+            let mut n = 0u64;
+            for y in 0..img.height {
+                for x in 0..img.width {
+                    if bayer_color(x, y) == want {
+                        s += img.get(x, y) as u64;
+                        n += 1;
+                    }
+                }
+            }
+            s as f64 / n as f64
+        };
+        let r = mean_of(&corrected, BayerColor::Red);
+        let g = mean_of(&corrected, BayerColor::GreenR);
+        let b = mean_of(&corrected, BayerColor::Blue);
+        assert!((r - g).abs() < 8.0 && (b - g).abs() < 8.0, "r={r:.1} g={g:.1} b={b:.1}");
+    }
+}

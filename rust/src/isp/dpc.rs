@@ -1,0 +1,185 @@
+//! Dynamic Defective Pixel Correction (paper §V-B.1, after Yongji–Xiaojun).
+//!
+//! Works on the raw Bayer stream with a 5×5 window, comparing the center
+//! against its 8 *same-colour* neighbours (distance-2 ring in Bayer space):
+//! the pixel is declared defective when it deviates from ALL neighbours in
+//! the same direction by more than `threshold` (dead/stuck pixels sit far
+//! outside the local same-colour distribution across every directional
+//! gradient). Correction replaces it with the median of the ring — the
+//! standard HDL-friendly estimator (sorting network on 8 values).
+
+use super::linebuf::stream_frame;
+use crate::util::ImageU8;
+
+/// DPC configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct DpcConfig {
+    /// Minimum deviation (DN) from all same-colour neighbours to flag.
+    pub threshold: i32,
+    /// Detection only (report, don't correct) — for the E2 recall metric.
+    pub detect_only: bool,
+}
+
+impl Default for DpcConfig {
+    fn default() -> Self {
+        Self { threshold: 40, detect_only: false }
+    }
+}
+
+/// Same-colour ring of a 5x5 Bayer window (8 distance-2 neighbours).
+#[inline]
+fn ring(win: &[[u8; 5]; 5]) -> [u8; 8] {
+    [
+        win[0][0], win[0][2], win[0][4],
+        win[2][0],            win[2][4],
+        win[4][0], win[4][2], win[4][4],
+    ]
+}
+
+/// Median of 8 (pair-sort network equivalent; mean of middle two).
+#[inline]
+fn median8(mut v: [u8; 8]) -> u8 {
+    v.sort_unstable();
+    ((v[3] as u16 + v[4] as u16) / 2) as u8
+}
+
+/// Is the center defective w.r.t. its same-colour ring?
+#[inline]
+pub fn is_defective(win: &[[u8; 5]; 5], threshold: i32) -> bool {
+    let c = win[2][2] as i32;
+    let r = ring(win);
+    // all-directional deviation: strictly above every neighbour + thresh,
+    // or strictly below every neighbour - thresh (Yongji–Xiaojun criterion).
+    let above = r.iter().all(|&n| c > n as i32 + threshold);
+    let below = r.iter().all(|&n| c < n as i32 - threshold);
+    above || below
+}
+
+/// Streaming DPC over a full Bayer frame. Returns the corrected frame and
+/// the flagged positions.
+pub fn dpc_frame(raw: &ImageU8, cfg: &DpcConfig) -> (ImageU8, Vec<(usize, usize)>) {
+    let mut flagged = Vec::new();
+    let data = stream_frame::<5>(&raw.data, raw.width, raw.height, |win, cx, cy| {
+        if is_defective(win, cfg.threshold) {
+            flagged.push((cx, cy));
+            if cfg.detect_only {
+                win[2][2]
+            } else {
+                median8(ring(win))
+            }
+        } else {
+            win[2][2]
+        }
+    });
+    (
+        ImageU8 { width: raw.width, height: raw.height, data },
+        flagged,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::scene::background;
+    use crate::events::spec;
+    use crate::isp::sensor::{SensorModel};
+    use crate::util::{stats::psnr_u8, ImageU8, SplitMix64};
+
+    fn flat(v: u8) -> ImageU8 {
+        ImageU8::from_fn(16, 16, |_, _| v)
+    }
+
+    #[test]
+    fn hot_pixel_detected_and_corrected() {
+        let mut img = flat(100);
+        img.set(8, 8, 255);
+        let (out, flagged) = dpc_frame(&img, &DpcConfig::default());
+        assert!(flagged.contains(&(8, 8)));
+        assert_eq!(out.get(8, 8), 100);
+    }
+
+    #[test]
+    fn dead_pixel_detected_and_corrected() {
+        let mut img = flat(150);
+        img.set(5, 9, 0);
+        let (out, flagged) = dpc_frame(&img, &DpcConfig::default());
+        assert!(flagged.contains(&(5, 9)));
+        assert_eq!(out.get(5, 9), 150);
+    }
+
+    #[test]
+    fn clean_flat_frame_untouched() {
+        let img = flat(77);
+        let (out, flagged) = dpc_frame(&img, &DpcConfig::default());
+        assert!(flagged.is_empty());
+        assert_eq!(out.data, img.data);
+    }
+
+    #[test]
+    fn legitimate_edge_not_flagged() {
+        // vertical step edge: left half 60, right half 200 — high local
+        // contrast but neighbours on the same side agree, so no flags.
+        let img = ImageU8::from_fn(16, 16, |x, _| if x < 8 { 60 } else { 200 });
+        let (out, flagged) = dpc_frame(&img, &DpcConfig::default());
+        assert!(flagged.is_empty(), "edge falsely flagged: {flagged:?}");
+        assert_eq!(out.data, img.data);
+    }
+
+    #[test]
+    fn detect_only_leaves_pixels() {
+        let mut img = flat(100);
+        img.set(8, 8, 255);
+        let cfg = DpcConfig { detect_only: true, ..Default::default() };
+        let (out, flagged) = dpc_frame(&img, &cfg);
+        assert_eq!(flagged.len(), 1);
+        assert_eq!(out.get(8, 8), 255);
+    }
+
+    #[test]
+    fn threshold_controls_sensitivity() {
+        let mut img = flat(100);
+        img.set(8, 8, 160); // +60 outlier
+        let strict = DpcConfig { threshold: 40, ..Default::default() };
+        let lax = DpcConfig { threshold: 80, ..Default::default() };
+        assert_eq!(dpc_frame(&img, &strict).1.len(), 1);
+        assert_eq!(dpc_frame(&img, &lax).1.len(), 0);
+    }
+
+    #[test]
+    fn recovers_psnr_on_real_capture() {
+        // E2's DPC row in miniature: defective capture -> DPC -> PSNR up.
+        let bg = background();
+        let frame = ImageU8 {
+            width: spec::WIDTH,
+            height: spec::HEIGHT,
+            data: bg,
+        };
+        let model = SensorModel {
+            cast_r: 1.0,
+            cast_g: 1.0,
+            cast_b: 1.0,
+            noise_sigma: 0.0,
+            hot_frac: 0.01,
+            dead_frac: 0.01,
+            ..Default::default()
+        };
+        let mut rng = SplitMix64::new(3);
+        let cap = model.capture(&frame, &mut rng);
+        let clean = super::super::sensor::mosaic_clean(&cap.truth);
+        let before = psnr_u8(&cap.raw.data, &clean.data);
+        let (fixed, flagged) = dpc_frame(&cap.raw, &DpcConfig::default());
+        let after = psnr_u8(&fixed.data, &clean.data);
+        assert!(after > before + 5.0, "PSNR {before:.1} -> {after:.1}");
+        assert!(flagged.len() >= cap.defects.len() / 2);
+    }
+
+    #[test]
+    fn adjacent_defects_still_improve() {
+        let mut img = flat(100);
+        img.set(8, 8, 255);
+        img.set(9, 8, 255); // neighbour also hot (different Bayer colour)
+        let (out, _) = dpc_frame(&img, &DpcConfig::default());
+        assert_eq!(out.get(8, 8), 100);
+        assert_eq!(out.get(9, 8), 100);
+    }
+}

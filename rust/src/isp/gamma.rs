@@ -1,0 +1,141 @@
+//! Gamma correction via LUT (paper §V-B.5).
+//!
+//! A 256-entry LUT (one BRAM read per pixel) implements the non-linear
+//! curve; the NPU rewrites the LUT on the fly (the "tweaking the Gamma
+//! LUTs" control path of §VI). Supports pure power-law gamma plus an
+//! exposure pre-gain folded into the same table — the hardware never does
+//! more than one lookup.
+
+use crate::util::{ImageU8, PlanarRgb};
+
+/// A 256->256 tone-mapping LUT.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GammaLut {
+    pub table: [u8; 256],
+}
+
+impl GammaLut {
+    /// Identity curve.
+    pub fn identity() -> Self {
+        let mut table = [0u8; 256];
+        for (i, t) in table.iter_mut().enumerate() {
+            *t = i as u8;
+        }
+        Self { table }
+    }
+
+    /// Power-law gamma: `out = 255 * (in/255)^(1/gamma)` (display-encode
+    /// convention: gamma > 1 brightens midtones).
+    pub fn power(gamma: f64) -> Self {
+        Self::power_with_gain(gamma, 1.0)
+    }
+
+    /// Gamma with a linear pre-gain folded in (digital exposure):
+    /// `out = 255 * (clamp(gain * in/255))^(1/gamma)`.
+    pub fn power_with_gain(gamma: f64, gain: f64) -> Self {
+        assert!(gamma > 0.0, "gamma must be positive");
+        let mut table = [0u8; 256];
+        for (i, t) in table.iter_mut().enumerate() {
+            let x = (gain * i as f64 / 255.0).clamp(0.0, 1.0);
+            *t = (255.0 * x.powf(1.0 / gamma)).round() as u8;
+        }
+        Self { table }
+    }
+
+    #[inline]
+    pub fn map(&self, v: u8) -> u8 {
+        self.table[v as usize]
+    }
+
+    pub fn apply_plane(&self, img: &ImageU8) -> ImageU8 {
+        ImageU8 {
+            width: img.width,
+            height: img.height,
+            data: img.data.iter().map(|&v| self.map(v)).collect(),
+        }
+    }
+
+    pub fn apply_rgb(&self, rgb: &PlanarRgb) -> PlanarRgb {
+        PlanarRgb {
+            width: rgb.width,
+            height: rgb.height,
+            r: rgb.r.iter().map(|&v| self.map(v)).collect(),
+            g: rgb.g.iter().map(|&v| self.map(v)).collect(),
+            b: rgb.b.iter().map(|&v| self.map(v)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_identity() {
+        let lut = GammaLut::identity();
+        for v in 0..=255u8 {
+            assert_eq!(lut.map(v), v);
+        }
+    }
+
+    #[test]
+    fn gamma_endpoints_fixed() {
+        for g in [0.5, 1.0, 2.2, 3.0] {
+            let lut = GammaLut::power(g);
+            assert_eq!(lut.map(0), 0);
+            assert_eq!(lut.map(255), 255);
+        }
+    }
+
+    #[test]
+    fn gamma_22_brightens_midtones() {
+        let lut = GammaLut::power(2.2);
+        assert!(lut.map(64) > 64);
+        assert!(lut.map(128) > 128);
+    }
+
+    #[test]
+    fn gamma_below_one_darkens() {
+        let lut = GammaLut::power(0.5);
+        assert!(lut.map(128) < 128);
+    }
+
+    #[test]
+    fn lut_monotone() {
+        for g in [0.4, 1.0, 2.2] {
+            let lut = GammaLut::power(g);
+            for i in 0..255 {
+                assert!(lut.table[i] <= lut.table[i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn gain_folds_exposure() {
+        let lut = GammaLut::power_with_gain(1.0, 2.0);
+        assert_eq!(lut.map(50), 100);
+        assert_eq!(lut.map(200), 255); // clamped
+    }
+
+    #[test]
+    fn known_value_gamma22() {
+        let lut = GammaLut::power(2.2);
+        let want = (255.0 * (128.0f64 / 255.0).powf(1.0 / 2.2)).round() as u8;
+        assert_eq!(lut.map(128), want);
+    }
+
+    #[test]
+    fn apply_rgb_maps_all_planes() {
+        let rgb = PlanarRgb {
+            width: 2,
+            height: 1,
+            r: vec![10, 20],
+            g: vec![30, 40],
+            b: vec![50, 60],
+        };
+        let lut = GammaLut::power_with_gain(1.0, 2.0);
+        let out = lut.apply_rgb(&rgb);
+        assert_eq!(out.r, vec![20, 40]);
+        assert_eq!(out.b, vec![100, 120]);
+    }
+}

@@ -1,0 +1,231 @@
+//! Line buffers + sliding window former — the HDL storage idiom.
+//!
+//! The paper's ISP stages never store frames: a KxK window former holds
+//! K-1 line buffers (BRAM) plus a KxK register file, emitting one window
+//! per pixel once primed. Borders replicate edge pixels (same convention
+//! as `ImageU8::get_clamped`). The streaming stages (DPC, NLM, demosaic)
+//! are all built on this, and `hw::resources` charges their BRAM from the
+//! same geometry.
+//!
+//! Emission is row-granular: pixels stream in raster order, and when row
+//! `cy + radius` completes, every window of center row `cy` is emitted (the
+//! HDL equivalent emits during the same row with `radius`-pixel lag; the
+//! row-burst model keeps identical output order and total latency while
+//! staying simple enough to prove correct).
+
+use std::collections::VecDeque;
+
+/// Streaming KxK window former over a `width`-wide scanline stream.
+#[derive(Debug, Clone)]
+pub struct WindowFormer<const K: usize> {
+    width: usize,
+    /// Last K completed rows (oldest first), as (row_index, pixels).
+    rows: VecDeque<(usize, Vec<u8>)>,
+    current: Vec<u8>,
+    rows_done: usize,
+}
+
+impl<const K: usize> WindowFormer<K> {
+    pub fn new(width: usize) -> Self {
+        assert!(K % 2 == 1, "window must be odd");
+        assert!(width >= K, "width must be >= window");
+        Self {
+            width,
+            rows: VecDeque::with_capacity(K),
+            current: Vec::with_capacity(width),
+            rows_done: 0,
+        }
+    }
+
+    /// Radius (K/2).
+    pub const fn radius() -> usize {
+        K / 2
+    }
+
+    fn window_at(&self, cx: usize, cy: usize) -> [[u8; K]; K] {
+        let r = (K / 2) as isize;
+        let newest = self.rows.back().expect("rows available").0 as isize;
+        let oldest = self.rows.front().unwrap().0 as isize;
+        let mut win = [[0u8; K]; K];
+        for (dy, row_out) in win.iter_mut().enumerate() {
+            // vertical clamp: top border replicates row 0 (tracked only
+            // while buffered), bottom replicates newest available row.
+            let sy = (cy as isize + dy as isize - r).clamp(oldest, newest);
+            let row = &self.rows[(sy - oldest) as usize].1;
+            for (dx, v) in row_out.iter_mut().enumerate() {
+                let sx = (cx as isize + dx as isize - r)
+                    .clamp(0, self.width as isize - 1) as usize;
+                *v = row[sx];
+            }
+        }
+        win
+    }
+
+    fn emit_row(&mut self, cy: usize, out: &mut Vec<([[u8; K]; K], usize, usize)>) {
+        for cx in 0..self.width {
+            out.push((self.window_at(cx, cy), cx, cy));
+        }
+    }
+
+    /// Push the next raster pixel; returns any windows that became complete
+    /// (a full center row when its `radius`-th following row finishes).
+    pub fn push(&mut self, px: u8) -> Vec<([[u8; K]; K], usize, usize)> {
+        let r = K / 2;
+        self.current.push(px);
+        let mut out = Vec::new();
+        if self.current.len() == self.width {
+            out.reserve_exact(self.width);
+            let row_idx = self.rows_done;
+            let full = std::mem::replace(&mut self.current, Vec::with_capacity(self.width));
+            self.rows.push_back((row_idx, full));
+            if self.rows.len() > K {
+                self.rows.pop_front();
+            }
+            self.rows_done += 1;
+            // Row `row_idx` just completed; center row ready = row_idx - r.
+            if row_idx >= r {
+                self.emit_row(row_idx - r, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Flush the last `radius` center rows at end of frame.
+    pub fn flush(&mut self, height: usize) -> Vec<([[u8; K]; K], usize, usize)> {
+        let r = K / 2;
+        assert!(
+            self.rows_done == height && self.current.is_empty(),
+            "flush before full frame"
+        );
+        let mut out = Vec::new();
+        for cy in height.saturating_sub(r)..height {
+            self.emit_row(cy, &mut out);
+        }
+        out
+    }
+
+    /// BRAM bits this former occupies (K-1 lines x width x 8b) — consumed
+    /// by `hw::resources`.
+    pub fn bram_bits(&self) -> usize {
+        (K - 1) * self.width * 8
+    }
+
+    /// Pipeline latency in pixels (radius rows + radius pixels — what the
+    /// HDL version exhibits; used by `hw::timing`).
+    pub fn latency_px(&self) -> usize {
+        (K / 2) * self.width + K / 2
+    }
+}
+
+/// Run a KxK window kernel over a full frame *through the streaming former*
+/// — the reference driver every windowed stage uses.
+pub fn stream_frame<const K: usize>(
+    data: &[u8],
+    width: usize,
+    height: usize,
+    mut f: impl FnMut(&[[u8; K]; K], usize, usize) -> u8,
+) -> Vec<u8> {
+    let mut former = WindowFormer::<K>::new(width);
+    let mut out = vec![0u8; width * height];
+    for &px in data {
+        for (win, cx, cy) in former.push(px) {
+            out[cy * width + cx] = f(&win, cx, cy);
+        }
+    }
+    for (win, cx, cy) in former.flush(height) {
+        out[cy * width + cx] = f(&win, cx, cy);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{ImageU8, SplitMix64};
+
+    /// Oracle: clamped-border window from the full image.
+    fn oracle_window<const K: usize>(img: &ImageU8, cx: usize, cy: usize) -> [[u8; K]; K] {
+        let r = (K / 2) as isize;
+        let mut win = [[0u8; K]; K];
+        for (dy, row) in win.iter_mut().enumerate() {
+            for (dx, v) in row.iter_mut().enumerate() {
+                *v = img.get_clamped(
+                    cx as isize + dx as isize - r,
+                    cy as isize + dy as isize - r,
+                );
+            }
+        }
+        win
+    }
+
+    #[test]
+    fn identity_pass_reproduces_image() {
+        let mut rng = SplitMix64::new(5);
+        let img = ImageU8::from_fn(16, 12, |_, _| (rng.next_u32() & 0xFF) as u8);
+        let out = stream_frame::<5>(&img.data, 16, 12, |w, _, _| w[2][2]);
+        assert_eq!(out, img.data);
+    }
+
+    #[test]
+    fn all_windows_match_oracle_3x3() {
+        let mut rng = SplitMix64::new(9);
+        let img = ImageU8::from_fn(10, 8, |_, _| (rng.next_u32() & 0xFF) as u8);
+        let img2 = img.clone();
+        stream_frame::<3>(&img.data, 10, 8, |w, cx, cy| {
+            assert_eq!(*w, oracle_window::<3>(&img2, cx, cy), "at ({cx},{cy})");
+            w[1][1]
+        });
+    }
+
+    #[test]
+    fn all_windows_match_oracle_5x5() {
+        let mut rng = SplitMix64::new(11);
+        let img = ImageU8::from_fn(9, 11, |_, _| (rng.next_u32() & 0xFF) as u8);
+        let img2 = img.clone();
+        stream_frame::<5>(&img.data, 9, 11, |w, cx, cy| {
+            assert_eq!(*w, oracle_window::<5>(&img2, cx, cy), "at ({cx},{cy})");
+            w[2][2]
+        });
+    }
+
+    #[test]
+    fn emission_order_is_raster() {
+        let img = ImageU8::from_fn(6, 6, |_, _| 0);
+        let mut last = None;
+        stream_frame::<3>(&img.data, 6, 6, |_, cx, cy| {
+            let lin = cy * 6 + cx;
+            if let Some(prev) = last {
+                assert_eq!(lin, prev + 1, "non-raster emission");
+            }
+            last = Some(lin);
+            0
+        });
+        assert_eq!(last, Some(35));
+    }
+
+    #[test]
+    fn every_pixel_emitted_exactly_once() {
+        let img = ImageU8::from_fn(9, 7, |_, _| 1);
+        let mut count = 0usize;
+        stream_frame::<3>(&img.data, 9, 7, |_, _, _| {
+            count += 1;
+            0
+        });
+        assert_eq!(count, 63);
+    }
+
+    #[test]
+    fn bram_and_latency_geometry() {
+        let f = WindowFormer::<5>::new(64);
+        assert_eq!(f.bram_bits(), 4 * 64 * 8);
+        assert_eq!(f.latency_px(), 2 * 64 + 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "flush before full frame")]
+    fn flush_requires_full_frame() {
+        let mut f = WindowFormer::<3>::new(8);
+        f.push(1);
+        f.flush(4);
+    }
+}

@@ -1,0 +1,31 @@
+//! Cognitive ISP — streaming HDL-style image pipeline (paper §V).
+//!
+//! Fully pipelined, line-buffer-only (no frame store), AXI4-Stream
+//! handshaking between stages — the architecture the paper synthesizes on
+//! FPGA, here as a cycle-approximate simulation ([`axis`]) plus exact
+//! functional implementations of every stage:
+//!
+//! 1. [`dpc`]    — dynamic defective pixel correction (Yongji–Xiaojun, 5×5)
+//! 2. [`awb`]    — auto white balance (clipping-aware state machine)
+//! 3. [`demosaic`] — Malvar–He–Cutler linear demosaicing
+//! 4. [`nlm`]    — FPGA-adapted Non-Local Means denoising (Koizumi–Maruyama)
+//! 5. [`gamma`]  — LUT gamma correction
+//! 6. [`ycbcr`]  — fixed-point RGB→YCbCr + luma sharpening
+//!
+//! [`sensor`] simulates the Bayer RGB sensor (mosaic, noise, defects,
+//! exposure/colour cast) — the defects these stages exist to correct.
+//! [`pipeline`] composes everything and accepts live parameter updates from
+//! the NPU control bus (paper §VI).
+
+pub mod axis;
+pub mod awb;
+pub mod demosaic;
+pub mod dpc;
+pub mod gamma;
+pub mod linebuf;
+pub mod nlm;
+pub mod pipeline;
+pub mod sensor;
+pub mod ycbcr;
+
+pub use pipeline::{IspParams, IspPipeline};

@@ -1,0 +1,253 @@
+//! Non-Local Means denoising, FPGA-adapted (paper §V-B.4, after
+//! Koizumi–Maruyama).
+//!
+//! Full NLM is unimplementable in streaming hardware (global search); the
+//! FPGA adaptation restricts the search window to a small neighbourhood
+//! that fits in line buffers and replaces `exp(-d/h²)` with a quantized
+//! LUT weight — both preserved here:
+//!
+//! * 7×7 total window: 5×5 search positions × 3×3 patches (all inside the
+//!   line-buffered window);
+//! * patch distance = SSD over the 3×3 patch, normalized;
+//! * weight LUT: 16-entry step approximation of `exp(-d / h²)` in Q0.8 —
+//!   integer multiply-accumulate only, like the HDL datapath.
+
+use super::linebuf::stream_frame;
+use crate::util::ImageU8;
+
+/// NLM configuration (strength `h` is NPU-tunable via the parameter bus).
+#[derive(Debug, Clone, Copy)]
+pub struct NlmConfig {
+    /// Filter strength; higher = stronger smoothing.
+    pub h: f64,
+    /// Search radius in pixels (<= 2 with the 7x7 window).
+    pub search: usize,
+}
+
+impl Default for NlmConfig {
+    fn default() -> Self {
+        Self { h: 10.0, search: 2 }
+    }
+}
+
+/// Build the Q0.8 weight LUT: entry i covers mean-SSD in `[i*STEP, (i+1)*STEP)`.
+///
+/// `w = round(256 * exp(-d / h^2))` evaluated at the bin center.
+pub fn weight_lut(h: f64) -> [u16; 16] {
+    let mut lut = [0u16; 16];
+    let h2 = (h * h).max(1e-6);
+    for (i, w) in lut.iter_mut().enumerate() {
+        let d = (i as f64 + 0.5) * SSD_STEP;
+        *w = (256.0 * (-d / h2).exp()).round() as u16;
+    }
+    lut
+}
+
+/// Mean-SSD quantization step per LUT bin.
+pub const SSD_STEP: f64 = 32.0;
+
+/// 3x3 patch SSD (mean over 9 taps) between patches centered at
+/// `(cx, cy)` and `(cx+dx, cy+dy)` inside a 7x7 window (center 3,3).
+#[inline]
+fn patch_ssd(w: &[[u8; 7]; 7], dx: isize, dy: isize) -> u32 {
+    let mut ssd = 0u32;
+    for py in -1..=1isize {
+        for px in -1..=1isize {
+            let a = w[(3 + py) as usize][(3 + px) as usize] as i32;
+            let b = w[(3 + dy + py) as usize][(3 + dx + px) as usize] as i32;
+            ssd += ((a - b) * (a - b)) as u32;
+        }
+    }
+    ssd / 9
+}
+
+/// Denoise one 7x7 window: weighted mean over the search positions.
+#[inline]
+pub fn nlm_window(w: &[[u8; 7]; 7], lut: &[u16; 16], search: usize) -> u8 {
+    let s = search.min(2) as isize;
+    let mut num = 0u32;
+    let mut den = 0u32;
+    for dy in -s..=s {
+        for dx in -s..=s {
+            let wgt = if dx == 0 && dy == 0 {
+                256 // self weight = 1.0 (standard NLM center handling)
+            } else {
+                let ssd = patch_ssd(w, dx, dy);
+                let bin = ((ssd as f64 / SSD_STEP) as usize).min(15);
+                lut[bin] as u32
+            };
+            num += wgt * w[(3 + dy) as usize][(3 + dx) as usize] as u32;
+            den += wgt;
+        }
+    }
+    ((num + den / 2) / den) as u8
+}
+
+/// Streaming NLM over a full (single-channel) frame.
+pub fn nlm_frame(img: &ImageU8, cfg: &NlmConfig) -> ImageU8 {
+    let lut = weight_lut(cfg.h);
+    let data = stream_frame::<7>(&img.data, img.width, img.height, |w, _, _| {
+        nlm_window(w, &lut, cfg.search)
+    });
+    ImageU8 { width: img.width, height: img.height, data }
+}
+
+/// RGB NLM with **luma-shared weights** (perf pass, EXPERIMENTS.md §Perf):
+/// patch distances are computed once on the luma plane and the resulting
+/// weights reused for all three channels — 3× less SSD work for near-equal
+/// quality (chroma shares the luma's structure). This matches the
+/// Koizumi–Maruyama hardware structure, which runs ONE distance datapath.
+pub fn nlm_rgb_shared(
+    r: &ImageU8,
+    g: &ImageU8,
+    b: &ImageU8,
+    cfg: &NlmConfig,
+) -> (ImageU8, ImageU8, ImageU8) {
+    let lut = weight_lut(cfg.h);
+    let (width, height) = (r.width, r.height);
+    let n = width * height;
+    // luma plane (BT.601 integer approximation: (2R + 5G + B) / 8)
+    let luma: Vec<u8> = (0..n)
+        .map(|i| {
+            ((2 * r.data[i] as u32 + 5 * g.data[i] as u32 + b.data[i] as u32) / 8) as u8
+        })
+        .collect();
+
+    let s = cfg.search.min(2) as isize;
+    let mut out_r = vec![0u8; n];
+    let mut out_g = vec![0u8; n];
+    let mut out_b = vec![0u8; n];
+    // weight field per pixel: (den, num_r, num_g, num_b) accumulated from
+    // the luma-derived weights at each search offset
+    super::linebuf::stream_frame::<7>(&luma, width, height, |w, cx, cy| {
+        let mut den = 0u32;
+        let mut num_r = 0u32;
+        let mut num_g = 0u32;
+        let mut num_b = 0u32;
+        for dy in -s..=s {
+            for dx in -s..=s {
+                let wgt = if dx == 0 && dy == 0 {
+                    256
+                } else {
+                    let ssd = patch_ssd(w, dx, dy);
+                    let bin = ((ssd as f64 / SSD_STEP) as usize).min(15);
+                    lut[bin] as u32
+                };
+                let sx = (cx as isize + dx).clamp(0, width as isize - 1) as usize;
+                let sy = (cy as isize + dy).clamp(0, height as isize - 1) as usize;
+                let idx = sy * width + sx;
+                den += wgt;
+                num_r += wgt * r.data[idx] as u32;
+                num_g += wgt * g.data[idx] as u32;
+                num_b += wgt * b.data[idx] as u32;
+            }
+        }
+        let i = cy * width + cx;
+        out_r[i] = ((num_r + den / 2) / den) as u8;
+        out_g[i] = ((num_g + den / 2) / den) as u8;
+        out_b[i] = ((num_b + den / 2) / den) as u8;
+        0
+    });
+    (
+        ImageU8 { width, height, data: out_r },
+        ImageU8 { width, height, data: out_g },
+        ImageU8 { width, height, data: out_b },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{stats::psnr_u8, ImageU8, SplitMix64};
+
+    fn noisy_flat(v: u8, sigma: f64, seed: u64) -> (ImageU8, ImageU8) {
+        let clean = ImageU8::from_fn(32, 32, |_, _| v);
+        let mut rng = SplitMix64::new(seed);
+        let noisy = ImageU8::from_fn(32, 32, |_, _| {
+            (v as f64 + rng.normal() * sigma).round().clamp(0.0, 255.0) as u8
+        });
+        (clean, noisy)
+    }
+
+    #[test]
+    fn lut_monotone_decreasing() {
+        let lut = weight_lut(10.0);
+        for i in 0..15 {
+            assert!(lut[i] >= lut[i + 1]);
+        }
+        assert!(lut[0] > 200); // near-identical patches get ~full weight
+    }
+
+    #[test]
+    fn higher_h_gives_heavier_tail() {
+        let soft = weight_lut(5.0);
+        let strong = weight_lut(20.0);
+        assert!(strong[8] > soft[8]);
+    }
+
+    #[test]
+    fn flat_noise_reduced() {
+        let (clean, noisy) = noisy_flat(128, 8.0, 1);
+        let out = nlm_frame(&noisy, &NlmConfig::default());
+        let before = psnr_u8(&noisy.data, &clean.data);
+        let after = psnr_u8(&out.data, &clean.data);
+        assert!(after > before + 3.0, "PSNR {before:.1} -> {after:.1}");
+    }
+
+    #[test]
+    fn clean_image_nearly_unchanged() {
+        let img = ImageU8::from_fn(32, 32, |x, y| (40 + 3 * x + 2 * y) as u8);
+        let out = nlm_frame(&img, &NlmConfig::default());
+        let p = psnr_u8(&out.data, &img.data);
+        assert!(p > 40.0, "clean image degraded to {p:.1} dB");
+    }
+
+    #[test]
+    fn edges_preserved_better_than_box_filter() {
+        // step edge + noise: NLM must beat a 5x5 box blur near the edge.
+        let mut rng = SplitMix64::new(9);
+        let clean = ImageU8::from_fn(32, 32, |x, _| if x < 16 { 60 } else { 200 });
+        let noisy = ImageU8::from_fn(32, 32, |x, _| {
+            let v = if x < 16 { 60.0 } else { 200.0 };
+            (v + rng.normal() * 8.0).round().clamp(0.0, 255.0) as u8
+        });
+        let nlm = nlm_frame(&noisy, &NlmConfig::default());
+        // box blur baseline
+        let boxed = ImageU8::from_fn(32, 32, |x, y| {
+            let mut s = 0u32;
+            for dy in -2..=2isize {
+                for dx in -2..=2isize {
+                    s += noisy.get_clamped(x as isize + dx, y as isize + dy) as u32;
+                }
+            }
+            (s / 25) as u8
+        });
+        let p_nlm = psnr_u8(&nlm.data, &clean.data);
+        let p_box = psnr_u8(&boxed.data, &clean.data);
+        assert!(p_nlm > p_box + 3.0, "nlm {p_nlm:.1} vs box {p_box:.1}");
+    }
+
+    #[test]
+    fn strength_zero_is_nearly_identity() {
+        let (_, noisy) = noisy_flat(100, 10.0, 3);
+        let out = nlm_frame(&noisy, &NlmConfig { h: 0.5, search: 2 });
+        // tiny h: off-center weights ~0 -> output ~input
+        let diff: u32 = out
+            .data
+            .iter()
+            .zip(&noisy.data)
+            .map(|(&a, &b)| (a as i32 - b as i32).unsigned_abs())
+            .sum();
+        assert!(diff < noisy.data.len() as u32 / 2, "diff {diff}");
+    }
+
+    #[test]
+    fn search_radius_1_weaker_than_2() {
+        let (clean, noisy) = noisy_flat(128, 8.0, 5);
+        let s1 = nlm_frame(&noisy, &NlmConfig { h: 10.0, search: 1 });
+        let s2 = nlm_frame(&noisy, &NlmConfig { h: 10.0, search: 2 });
+        let p1 = psnr_u8(&s1.data, &clean.data);
+        let p2 = psnr_u8(&s2.data, &clean.data);
+        assert!(p2 > p1, "search=2 ({p2:.1}) should beat search=1 ({p1:.1})");
+    }
+}

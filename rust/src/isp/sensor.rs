@@ -1,0 +1,276 @@
+//! Bayer RGB sensor simulator — the hardware substitution for the paper's
+//! RGB camera (DESIGN.md §3).
+//!
+//! Takes the scene renderer's clean intensity frame, colorizes it, applies
+//! a colour-temperature cast + exposure error (what AWB/gamma must undo),
+//! mosaics to RGGB, adds photon/read noise, and injects hot/dead pixels
+//! (what DPC must fix). Ground truth (the neutral RGB image) is returned
+//! alongside so every stage's contribution is measurable (E2).
+
+use crate::util::{ImageU8, PlanarRgb, SplitMix64};
+
+/// RGGB Bayer layout:
+/// ```text
+/// R G   (even row)
+/// G B   (odd row)
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BayerColor {
+    Red,
+    GreenR,
+    GreenB,
+    Blue,
+}
+
+/// Colour of a Bayer site at `(x, y)` (RGGB).
+#[inline]
+pub fn bayer_color(x: usize, y: usize) -> BayerColor {
+    match (y & 1, x & 1) {
+        (0, 0) => BayerColor::Red,
+        (0, 1) => BayerColor::GreenR,
+        (1, 0) => BayerColor::GreenB,
+        _ => BayerColor::Blue,
+    }
+}
+
+/// Sensor degradation model.
+#[derive(Debug, Clone)]
+pub struct SensorModel {
+    /// Per-channel cast (tungsten-ish default: strong R, weak B).
+    pub cast_r: f64,
+    pub cast_g: f64,
+    pub cast_b: f64,
+    /// Exposure multiplier applied to everything.
+    pub exposure: f64,
+    /// Gaussian read-noise sigma (DN).
+    pub noise_sigma: f64,
+    /// Fraction of hot (=255) and dead (=0) pixels.
+    pub hot_frac: f64,
+    pub dead_frac: f64,
+}
+
+impl Default for SensorModel {
+    fn default() -> Self {
+        Self {
+            cast_r: 1.25,
+            cast_g: 1.0,
+            cast_b: 0.70,
+            exposure: 1.0,
+            noise_sigma: 3.0,
+            hot_frac: 0.001,
+            dead_frac: 0.001,
+        }
+    }
+}
+
+/// Colorize a scene intensity frame into the ground-truth *neutral* RGB.
+///
+/// Cars/pedestrians are rendered as intensity rectangles; the colorizer
+/// derives a stable pseudo-colour per intensity band so demosaicing has
+/// real chroma edges to preserve (the Malvar test needs them).
+pub fn colorize(frame: &ImageU8) -> PlanarRgb {
+    let mut rgb = PlanarRgb::new(frame.width, frame.height);
+    for y in 0..frame.height {
+        for x in 0..frame.width {
+            let v = frame.get(x, y) as u32;
+            // deterministic hue from intensity band: keeps flat regions flat
+            let band = v >> 5;
+            let (rm, gm, bm) = match band {
+                0 => (90, 100, 110),  // deep shadow: bluish
+                1 => (95, 100, 105),
+                2 => (100, 100, 100), // midtones neutral
+                3 => (105, 100, 95),
+                4 => (110, 100, 90),  // bright: warm
+                5 => (112, 102, 88),
+                6 => (115, 103, 85),
+                _ => (118, 104, 82),
+            };
+            let r = (v * rm / 100).min(255) as u8;
+            let g = (v * gm / 100).min(255) as u8;
+            let b = (v * bm / 100).min(255) as u8;
+            rgb.set(x, y, (r, g, b));
+        }
+    }
+    rgb
+}
+
+/// Output of a sensor capture.
+#[derive(Debug, Clone)]
+pub struct Capture {
+    /// Degraded RGGB raw (what the ISP receives).
+    pub raw: ImageU8,
+    /// Neutral ground-truth RGB (what a perfect camera+ISP would output).
+    pub truth: PlanarRgb,
+    /// Injected defect positions (for DPC recall/precision tests).
+    pub defects: Vec<(usize, usize)>,
+}
+
+impl SensorModel {
+    /// Capture: colorize -> cast/exposure -> mosaic -> noise -> defects.
+    pub fn capture(&self, frame: &ImageU8, rng: &mut SplitMix64) -> Capture {
+        let truth = colorize(frame);
+        let w = frame.width;
+        let h = frame.height;
+        let mut raw = ImageU8::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                let (r, g, b) = truth.get(x, y);
+                let (v, cast) = match bayer_color(x, y) {
+                    BayerColor::Red => (r as f64, self.cast_r),
+                    BayerColor::GreenR | BayerColor::GreenB => (g as f64, self.cast_g),
+                    BayerColor::Blue => (b as f64, self.cast_b),
+                };
+                let mut dn = v * cast * self.exposure;
+                if self.noise_sigma > 0.0 {
+                    dn += rng.normal() * self.noise_sigma;
+                }
+                raw.set(x, y, dn.round().clamp(0.0, 255.0) as u8);
+            }
+        }
+        // Defect injection (positions recorded for the DPC tests).
+        let mut defects = Vec::new();
+        let n_hot = (self.hot_frac * (w * h) as f64).round() as usize;
+        let n_dead = (self.dead_frac * (w * h) as f64).round() as usize;
+        for _ in 0..n_hot {
+            let x = rng.range_u32(0, w as u32) as usize;
+            let y = rng.range_u32(0, h as u32) as usize;
+            raw.set(x, y, 255);
+            defects.push((x, y));
+        }
+        for _ in 0..n_dead {
+            let x = rng.range_u32(0, w as u32) as usize;
+            let y = rng.range_u32(0, h as u32) as usize;
+            raw.set(x, y, 0);
+            defects.push((x, y));
+        }
+        Capture { raw, truth, defects }
+    }
+}
+
+/// Mosaic a clean RGB image to RGGB raw with no degradation (test helper
+/// and demosaic ground-truth path).
+pub fn mosaic_clean(rgb: &PlanarRgb) -> ImageU8 {
+    let mut raw = ImageU8::new(rgb.width, rgb.height);
+    for y in 0..rgb.height {
+        for x in 0..rgb.width {
+            let (r, g, b) = rgb.get(x, y);
+            let v = match bayer_color(x, y) {
+                BayerColor::Red => r,
+                BayerColor::GreenR | BayerColor::GreenB => g,
+                BayerColor::Blue => b,
+            };
+            raw.set(x, y, v);
+        }
+    }
+    raw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::scene::{background, render};
+    use crate::events::spec;
+
+    fn scene_frame() -> ImageU8 {
+        let bg = background();
+        let mut frame = vec![0u8; spec::WIDTH * spec::HEIGHT];
+        render(&[], &bg, 1.0, &mut frame);
+        ImageU8 { width: spec::WIDTH, height: spec::HEIGHT, data: frame }
+    }
+
+    #[test]
+    fn bayer_pattern_rggb() {
+        assert_eq!(bayer_color(0, 0), BayerColor::Red);
+        assert_eq!(bayer_color(1, 0), BayerColor::GreenR);
+        assert_eq!(bayer_color(0, 1), BayerColor::GreenB);
+        assert_eq!(bayer_color(1, 1), BayerColor::Blue);
+        assert_eq!(bayer_color(2, 2), BayerColor::Red);
+    }
+
+    #[test]
+    fn colorize_preserves_dimensions_and_monotone_luma() {
+        let f = scene_frame();
+        let rgb = colorize(&f);
+        assert_eq!(rgb.width, f.width);
+        // brighter input -> brighter output green
+        let dark = colorize(&ImageU8::from_fn(2, 2, |_, _| 20));
+        let bright = colorize(&ImageU8::from_fn(2, 2, |_, _| 220));
+        assert!(bright.g[0] > dark.g[0]);
+    }
+
+    #[test]
+    fn capture_without_degradation_equals_mosaic() {
+        let f = scene_frame();
+        let model = SensorModel {
+            cast_r: 1.0,
+            cast_g: 1.0,
+            cast_b: 1.0,
+            exposure: 1.0,
+            noise_sigma: 0.0,
+            hot_frac: 0.0,
+            dead_frac: 0.0,
+        };
+        let mut rng = SplitMix64::new(1);
+        let cap = model.capture(&f, &mut rng);
+        assert_eq!(cap.raw, mosaic_clean(&cap.truth));
+        assert!(cap.defects.is_empty());
+    }
+
+    #[test]
+    fn cast_shifts_channel_means() {
+        let f = scene_frame();
+        let model = SensorModel { noise_sigma: 0.0, hot_frac: 0.0, dead_frac: 0.0, ..Default::default() };
+        let mut rng = SplitMix64::new(1);
+        let cap = model.capture(&f, &mut rng);
+        // mean of R sites should exceed mean of B sites strongly under the cast
+        let (mut rs, mut bs, mut rn, mut bn) = (0f64, 0f64, 0usize, 0usize);
+        for y in 0..f.height {
+            for x in 0..f.width {
+                match bayer_color(x, y) {
+                    BayerColor::Red => {
+                        rs += cap.raw.get(x, y) as f64;
+                        rn += 1;
+                    }
+                    BayerColor::Blue => {
+                        bs += cap.raw.get(x, y) as f64;
+                        bn += 1;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        assert!(rs / rn as f64 > 1.4 * (bs / bn as f64));
+    }
+
+    #[test]
+    fn defects_injected_at_recorded_positions() {
+        let f = scene_frame();
+        let model = SensorModel { noise_sigma: 0.0, hot_frac: 0.01, dead_frac: 0.01, ..SensorModel::default() };
+        let mut rng = SplitMix64::new(7);
+        let cap = model.capture(&f, &mut rng);
+        assert!(!cap.defects.is_empty());
+        for &(x, y) in &cap.defects {
+            let v = cap.raw.get(x, y);
+            assert!(v == 0 || v == 255, "defect at ({x},{y}) = {v}");
+        }
+    }
+
+    #[test]
+    fn noise_perturbs_pixels() {
+        let f = scene_frame();
+        let clean_model = SensorModel { cast_r: 1.0, cast_g: 1.0, cast_b: 1.0, noise_sigma: 0.0, hot_frac: 0.0, dead_frac: 0.0, ..Default::default() };
+        let noisy_model = SensorModel { noise_sigma: 5.0, ..clean_model.clone() };
+        let mut r1 = SplitMix64::new(3);
+        let mut r2 = SplitMix64::new(3);
+        let clean = clean_model.capture(&f, &mut r1);
+        let noisy = noisy_model.capture(&f, &mut r2);
+        let diff: usize = clean
+            .raw
+            .data
+            .iter()
+            .zip(&noisy.raw.data)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(diff > clean.raw.data.len() / 4);
+    }
+}

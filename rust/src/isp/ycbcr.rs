@@ -1,0 +1,220 @@
+//! Fixed-point RGB→YCbCr conversion + luma sharpening (paper §V-B.5).
+//!
+//! BT.601 full-range matrix in Q2.14 — the "configurable fixed-point
+//! arithmetic module" of the paper, bit-exact to an HDL shift-add
+//! implementation. Luma sharpening is a 3×3 unsharp mask applied to Y only
+//! (the point of converting: chroma stays untouched), then converted back.
+
+use super::linebuf::stream_frame;
+use crate::util::{ImageU8, PlanarRgb};
+
+/// Fractional bits of the CSC coefficients.
+pub const CSC_FRAC: u32 = 14;
+const ONE: i32 = 1 << CSC_FRAC;
+
+/// Round-to-nearest right shift.
+#[inline]
+fn rshift(v: i64, bits: u32) -> i32 {
+    ((v + (1 << (bits - 1))) >> bits) as i32
+}
+
+/// BT.601 full-range coefficients in Q2.14.
+struct Coef;
+impl Coef {
+    const YR: i64 = (0.299 * ONE as f64 + 0.5) as i64;
+    const YG: i64 = (0.587 * ONE as f64 + 0.5) as i64;
+    const YB: i64 = (0.114 * ONE as f64 + 0.5) as i64;
+    const CBR: i64 = (-0.168736 * ONE as f64 - 0.5) as i64;
+    const CBG: i64 = (-0.331264 * ONE as f64 - 0.5) as i64;
+    const CBB: i64 = (0.5 * ONE as f64 + 0.5) as i64;
+    const CRR: i64 = (0.5 * ONE as f64 + 0.5) as i64;
+    const CRG: i64 = (-0.418688 * ONE as f64 - 0.5) as i64;
+    const CRB: i64 = (-0.081312 * ONE as f64 - 0.5) as i64;
+    // inverse
+    const RCR: i64 = (1.402 * ONE as f64 + 0.5) as i64;
+    const GCB: i64 = (-0.344136 * ONE as f64 - 0.5) as i64;
+    const GCR: i64 = (-0.714136 * ONE as f64 - 0.5) as i64;
+    const BCB: i64 = (1.772 * ONE as f64 + 0.5) as i64;
+}
+
+/// RGB -> (Y, Cb, Cr), full range, Cb/Cr biased by 128.
+#[inline]
+pub fn rgb_to_ycbcr(r: u8, g: u8, b: u8) -> (u8, u8, u8) {
+    let (r, g, b) = (r as i64, g as i64, b as i64);
+    let y = rshift(Coef::YR * r + Coef::YG * g + Coef::YB * b, CSC_FRAC);
+    let cb = rshift(Coef::CBR * r + Coef::CBG * g + Coef::CBB * b, CSC_FRAC) + 128;
+    let cr = rshift(Coef::CRR * r + Coef::CRG * g + Coef::CRB * b, CSC_FRAC) + 128;
+    (
+        y.clamp(0, 255) as u8,
+        cb.clamp(0, 255) as u8,
+        cr.clamp(0, 255) as u8,
+    )
+}
+
+/// (Y, Cb, Cr) -> RGB, full range.
+#[inline]
+pub fn ycbcr_to_rgb(y: u8, cb: u8, cr: u8) -> (u8, u8, u8) {
+    let y = y as i64;
+    let cb = cb as i64 - 128;
+    let cr = cr as i64 - 128;
+    let r = rshift((y << CSC_FRAC) + Coef::RCR * cr, CSC_FRAC);
+    let g = rshift((y << CSC_FRAC) + Coef::GCB * cb + Coef::GCR * cr, CSC_FRAC);
+    let b = rshift((y << CSC_FRAC) + Coef::BCB * cb, CSC_FRAC);
+    (
+        r.clamp(0, 255) as u8,
+        g.clamp(0, 255) as u8,
+        b.clamp(0, 255) as u8,
+    )
+}
+
+/// YCbCr planes of an RGB image.
+pub struct YCbCr {
+    pub width: usize,
+    pub height: usize,
+    pub y: Vec<u8>,
+    pub cb: Vec<u8>,
+    pub cr: Vec<u8>,
+}
+
+pub fn convert_rgb(rgb: &PlanarRgb) -> YCbCr {
+    let n = rgb.r.len();
+    let mut out = YCbCr {
+        width: rgb.width,
+        height: rgb.height,
+        y: vec![0; n],
+        cb: vec![0; n],
+        cr: vec![0; n],
+    };
+    for i in 0..n {
+        let (y, cb, cr) = rgb_to_ycbcr(rgb.r[i], rgb.g[i], rgb.b[i]);
+        out.y[i] = y;
+        out.cb[i] = cb;
+        out.cr[i] = cr;
+    }
+    out
+}
+
+pub fn convert_back(ycc: &YCbCr) -> PlanarRgb {
+    let n = ycc.y.len();
+    let mut rgb = PlanarRgb::new(ycc.width, ycc.height);
+    for i in 0..n {
+        let (r, g, b) = ycbcr_to_rgb(ycc.y[i], ycc.cb[i], ycc.cr[i]);
+        rgb.r[i] = r;
+        rgb.g[i] = g;
+        rgb.b[i] = b;
+    }
+    rgb
+}
+
+/// 3×3 unsharp mask on the Y plane: `y + strength * (y - blur(y))`,
+/// strength in Q4.4 steps (HDL-quantized).
+pub fn sharpen_luma(y_plane: &ImageU8, strength: f64) -> ImageU8 {
+    let s_q = (strength * 16.0).round() as i32; // Q4.4
+    if s_q == 0 {
+        return y_plane.clone();
+    }
+    let data = stream_frame::<3>(&y_plane.data, y_plane.width, y_plane.height, |w, _, _| {
+        let mut sum = 0i32;
+        for row in w {
+            for &v in row {
+                sum += v as i32;
+            }
+        }
+        let blur = sum / 9;
+        let c = w[1][1] as i32;
+        let sharp = c + (s_q * (c - blur)) / 16;
+        sharp.clamp(0, 255) as u8
+    });
+    ImageU8 { width: y_plane.width, height: y_plane.height, data }
+}
+
+/// Full stage: RGB -> YCbCr -> sharpen Y -> RGB.
+pub fn csc_sharpen(rgb: &PlanarRgb, strength: f64) -> PlanarRgb {
+    let mut ycc = convert_rgb(rgb);
+    let y_img = ImageU8 { width: ycc.width, height: ycc.height, data: ycc.y };
+    ycc.y = sharpen_luma(&y_img, strength).data;
+    convert_back(&ycc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::forall;
+
+    #[test]
+    fn primaries_map_to_known_ycbcr() {
+        let (y, cb, cr) = rgb_to_ycbcr(255, 255, 255);
+        assert_eq!((y, cb, cr), (255, 128, 128));
+        let (y, cb, cr) = rgb_to_ycbcr(0, 0, 0);
+        assert_eq!((y, cb, cr), (0, 128, 128));
+        let (y, _, cr) = rgb_to_ycbcr(255, 0, 0);
+        assert!((y as i32 - 76).abs() <= 1);
+        assert!((cr as i32 - 255).abs() <= 1);
+    }
+
+    #[test]
+    fn gray_has_neutral_chroma() {
+        for v in [10u8, 100, 200] {
+            let (y, cb, cr) = rgb_to_ycbcr(v, v, v);
+            assert_eq!(y, v);
+            assert_eq!((cb, cr), (128, 128));
+        }
+    }
+
+    #[test]
+    fn property_round_trip_within_2lsb() {
+        forall("csc round trip", 300, |g| {
+            let (r, gg, b) = (g.u8(), g.u8(), g.u8());
+            let (y, cb, cr) = rgb_to_ycbcr(r, gg, b);
+            let (r2, g2, b2) = ycbcr_to_rgb(y, cb, cr);
+            assert!((r as i32 - r2 as i32).abs() <= 2, "{r} -> {r2}");
+            assert!((gg as i32 - g2 as i32).abs() <= 2, "{gg} -> {g2}");
+            assert!((b as i32 - b2 as i32).abs() <= 2, "{b} -> {b2}");
+        });
+    }
+
+    #[test]
+    fn fixed_point_matches_float_reference() {
+        forall("q2.14 vs f64 within 1 LSB", 200, |g| {
+            let (r, gg, b) = (g.u8() as f64, g.u8() as f64, g.u8() as f64);
+            let yf = 0.299 * r + 0.587 * gg + 0.114 * b;
+            let (y, _, _) = rgb_to_ycbcr(r as u8, gg as u8, b as u8);
+            assert!((y as f64 - yf).abs() <= 1.0, "{y} vs {yf}");
+        });
+    }
+
+    #[test]
+    fn sharpen_zero_strength_identity() {
+        let img = ImageU8::from_fn(8, 8, |x, y| (x * 20 + y) as u8);
+        assert_eq!(sharpen_luma(&img, 0.0).data, img.data);
+    }
+
+    #[test]
+    fn sharpen_boosts_edge_contrast() {
+        let img = ImageU8::from_fn(16, 16, |x, _| if x < 8 { 80 } else { 160 });
+        let out = sharpen_luma(&img, 1.0);
+        // pixel just left of the edge darkens, just right brightens
+        assert!(out.get(7, 8) < 80, "left of edge: {}", out.get(7, 8));
+        assert!(out.get(8, 8) > 160, "right of edge: {}", out.get(8, 8));
+        // flat regions untouched
+        assert_eq!(out.get(2, 8), 80);
+        assert_eq!(out.get(14, 8), 160);
+    }
+
+    #[test]
+    fn csc_sharpen_preserves_chroma_on_flat() {
+        let rgb = PlanarRgb {
+            width: 8,
+            height: 8,
+            r: vec![180; 64],
+            g: vec![120; 64],
+            b: vec![60; 64],
+        };
+        let out = csc_sharpen(&rgb, 1.0);
+        for i in 0..64 {
+            assert!((out.r[i] as i32 - 180).abs() <= 2);
+            assert!((out.g[i] as i32 - 120).abs() <= 2);
+            assert!((out.b[i] as i32 - 60).abs() <= 2);
+        }
+    }
+}

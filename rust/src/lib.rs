@@ -1,0 +1,53 @@
+//! # AceleradorSNN — neuromorphic cognitive system (paper reproduction)
+//!
+//! Rust Layer-3 of the three-layer reproduction of *"AceleradorSNN: A
+//! Neuromorphic Cognitive System Integrating Spiking Neural Networks and
+//! Dynamic Image Signal Processing on FPGA"* (Intigia R&D, CS.AR 2026).
+//!
+//! The paper couples two FPGA IP cores in a closed cognitive loop:
+//!
+//! * an **NPU** — a spiking neural network consuming DVS (event-camera)
+//!   streams, here executed as AOT-compiled XLA artifacts on PJRT-CPU
+//!   ([`runtime`]) with a pure-Rust quantized twin ([`snn`]);
+//! * a **Cognitive ISP** — a fully-pipelined streaming image pipeline for a
+//!   Bayer RGB sensor ([`isp`]), dynamically reconfigured by the NPU's
+//!   detections through the [`coordinator`] parameter bus.
+//!
+//! Everything hardware-gated in the paper (FPGA fabric, Prophesee GEN1
+//! recordings, DVS + RGB sensors) is substituted by simulators per
+//! DESIGN.md §3: [`events`] (DVS pixel model + synthetic automotive
+//! scenes), [`isp::sensor`] (Bayer mosaic + defect injection), and [`hw`]
+//! (LUT/FF/BRAM/DSP resource, timing and energy models).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use acelerador::events::{scene::DvsWindowSim, voxel};
+//! let sim = DvsWindowSim::new(42);
+//! let (events, boxes) = sim.run();
+//! let vox = voxel::voxelize(&events);
+//! println!("{} events, {} boxes, {} voxels set",
+//!          events.len(), boxes.len(), vox.occupancy());
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers (the cognitive loop,
+//! backbone evaluation, the ISP pipeline) and DESIGN.md for the experiment
+//! index mapping every paper table/figure to a bench target.
+
+pub mod baseline;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod detect;
+pub mod events;
+pub mod hw;
+pub mod isp;
+pub mod jsonlite;
+pub mod metrics;
+pub mod runtime;
+pub mod snn;
+pub mod testkit;
+pub mod util;
+
+/// Crate-wide result alias (anyhow is the only error dependency).
+pub type Result<T> = anyhow::Result<T>;

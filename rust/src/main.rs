@@ -1,0 +1,227 @@
+//! `acelerador` — CLI entrypoint for the AceleradorSNN system.
+//!
+//! Subcommands:
+//! * `run`      — drive the closed cognitive loop on a scripted scenario
+//! * `eval`     — backbone AP/sparsity evaluation (E1 rows)
+//! * `isp`      — process synthetic captures through the ISP, report PSNR
+//! * `capture`  — record a synthetic DVS stream to a `.evt` file
+//! * `resources`— print the FPGA resource/timing table (E6)
+//! * `config`   — dump the effective configuration
+//! * `help`
+
+use acelerador::cli::{check_command, help_text, Args, FlagSpec};
+use acelerador::config::SystemConfig;
+use acelerador::coordinator::CognitiveLoop;
+use acelerador::detect::ap::{evaluate_ap, ApMode, ImageEval};
+use acelerador::detect::{decode_head, nms, YoloSpec};
+use acelerador::events::scene::DvsWindowSim;
+use acelerador::events::voxel::voxelize;
+use acelerador::events::{io as evio, spec};
+use acelerador::hw::resources::IspResources;
+use acelerador::hw::timing::frame_timing;
+use acelerador::isp::pipeline::IspPipeline;
+use acelerador::isp::sensor::SensorModel;
+use acelerador::runtime::NpuEngine;
+use acelerador::testkit::bench::Table;
+use acelerador::util::stats::psnr_u8;
+use acelerador::util::{ImageU8, SplitMix64};
+use anyhow::Result;
+
+const COMMANDS: [&str; 7] = ["run", "eval", "isp", "capture", "resources", "config", "help"];
+
+fn flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "config", help: "JSON config file", is_switch: false, default: None },
+        FlagSpec { name: "backbone", help: "backbone artifact to serve", is_switch: false, default: Some("spiking_yolo") },
+        FlagSpec { name: "artifacts", help: "artifacts directory", is_switch: false, default: Some("artifacts") },
+        FlagSpec { name: "windows", help: "number of 50ms windows to run", is_switch: false, default: Some("20") },
+        FlagSpec { name: "scenes", help: "number of eval scenes", is_switch: false, default: Some("32") },
+        FlagSpec { name: "seed", help: "scenario seed", is_switch: false, default: Some("42") },
+        FlagSpec { name: "out", help: "output file (capture)", is_switch: false, default: Some("scene.evt") },
+        FlagSpec { name: "open-loop", help: "disable the cognitive loop (static ISP)", is_switch: true, default: None },
+        FlagSpec { name: "width", help: "line width for resource table", is_switch: false, default: Some("1920") },
+    ]
+}
+
+fn load_config(args: &Args) -> Result<SystemConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SystemConfig::from_file(path)?,
+        None => SystemConfig::default(),
+    };
+    if let Some(b) = args.get("backbone") {
+        cfg.npu.backbone = b.to_string();
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.npu.artifacts_dir = a.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let windows = args.get_usize("windows")?;
+    let seed = args.get_u64("seed")?;
+    let mut l = CognitiveLoop::new(&cfg, seed)?;
+    l.closed_loop = !args.has("open-loop");
+    println!(
+        "cognitive loop: backbone={} windows={windows} closed={}",
+        cfg.npu.backbone, l.closed_loop
+    );
+    // scripted lighting: steady → dark step at 1/3 → bright step at 2/3
+    let mut script = Vec::new();
+    for i in 0..windows {
+        script.push(if i < windows / 3 {
+            1.0
+        } else if i < 2 * windows / 3 {
+            0.3
+        } else {
+            2.0
+        });
+    }
+    let report = l.run_script(&script)?;
+    let mut table = Table::new(&[
+        "win", "illum", "events", "dets", "psnr_db", "luma", "expo", "nlm_h", "npu_us", "e2e_us",
+    ]);
+    for o in &report.outcomes {
+        table.row(&[
+            o.window_id.to_string(),
+            format!("{:.2}", o.illum),
+            o.events.to_string(),
+            o.detections.len().to_string(),
+            format!("{:.1}", o.psnr_db),
+            format!("{:.1}", o.mean_luma),
+            format!("{:.2}", o.exposure_gain),
+            format!("{:.1}", o.nlm_h),
+            format!("{:.0}", o.npu_execute_us),
+            format!("{:.0}", o.e2e_us),
+        ]);
+    }
+    table.print();
+    println!("\n{}", l.metrics.report());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let scenes = args.get_usize("scenes")?;
+    let seed = args.get_u64("seed")?;
+    let engine = NpuEngine::new(&cfg.npu.artifacts_dir, &cfg.npu.backbone)?;
+    let yolo = YoloSpec::default();
+    let mut dets_all = Vec::new();
+    let mut gts_all = Vec::new();
+    for i in 0..scenes {
+        let (ev, gts) = DvsWindowSim::new(seed + i as u64).run();
+        let vox = voxelize(&ev);
+        let out = engine.infer(&[&vox])?;
+        dets_all.push(nms(decode_head(&out.heads[0], &yolo, 0.05), cfg.npu.nms_iou));
+        gts_all.push(gts);
+    }
+    let images: Vec<ImageEval> = dets_all
+        .iter()
+        .zip(&gts_all)
+        .map(|(d, g)| ImageEval { detections: d, ground_truth: g })
+        .collect();
+    let (map, per_class) = evaluate_ap(&images, spec::NUM_CLASSES, 0.5, ApMode::Continuous);
+    println!(
+        "backbone={} scenes={scenes} mAP@0.5={map:.4} per-class={per_class:?}",
+        cfg.npu.backbone
+    );
+    Ok(())
+}
+
+fn cmd_isp(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let seed = args.get_u64("seed")?;
+    let mut rng = SplitMix64::new(seed);
+    let frame = ImageU8::from_fn(cfg.isp.width, cfg.isp.height, |x, y| {
+        (60 + (x * 2 + y) % 140) as u8
+    });
+    let cap = SensorModel::default().capture(&frame, &mut rng);
+    let mut isp = IspPipeline::new(&cfg.isp);
+    let mut last = None;
+    for _ in 0..4 {
+        last = Some(isp.process(&cap.raw));
+    }
+    let (rgb, report) = last.unwrap();
+    let lut = acelerador::isp::gamma::GammaLut::power(cfg.isp.gamma);
+    let truth = lut.apply_rgb(&cap.truth);
+    println!(
+        "isp: dpc_corrections={} gains=({:.2},{:.2},{:.2}) luma={:.1} psnr={:.1} dB",
+        report.dpc_corrections,
+        report.applied_gains.r,
+        report.applied_gains.g,
+        report.applied_gains.b,
+        report.mean_luma,
+        psnr_u8(&rgb.interleaved(), &truth.interleaved())
+    );
+    Ok(())
+}
+
+fn cmd_capture(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed")?;
+    let out = args.get("out").unwrap();
+    let (events, boxes) = DvsWindowSim::new(seed).run();
+    evio::write_file(out, &events)?;
+    println!("wrote {} events ({} GT boxes) to {out}", events.len(), boxes.len());
+    Ok(())
+}
+
+fn cmd_resources(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let width = args.get_usize("width")?;
+    let mut table = Table::new(&["stage", "LUT", "FF", "BRAM18", "DSP"]);
+    for (name, r) in IspResources::stage_table(width as u64) {
+        table.row(&[
+            name.to_string(),
+            r.lut.to_string(),
+            r.ff.to_string(),
+            r.bram18.to_string(),
+            r.dsp.to_string(),
+        ]);
+    }
+    let total = IspResources::pipeline(width as u64);
+    table.row(&[
+        "TOTAL".into(),
+        total.lut.to_string(),
+        total.ff.to_string(),
+        total.bram18.to_string(),
+        total.dsp.to_string(),
+    ]);
+    table.print();
+    let t = frame_timing(width, width * 9 / 16, &cfg.hw);
+    println!(
+        "\n{}x{} @ {:.0} MHz: {:.2} ms/frame = {:.1} fps (II=1 streaming)",
+        width,
+        width * 9 / 16,
+        cfg.hw.clock_mhz,
+        t.frame_us() / 1000.0,
+        t.fps()
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let specs = flags();
+    let args = Args::parse(&argv, &specs)?;
+    if args.command == "help" || args.has("help") {
+        println!("acelerador — neuromorphic cognitive system (AceleradorSNN reproduction)\n");
+        println!("commands: {}\n", COMMANDS.join(", "));
+        println!("{}", help_text("acelerador <command>", "see README.md", &specs));
+        return Ok(());
+    }
+    check_command(&args.command, &COMMANDS)?;
+    match args.command.as_str() {
+        "run" => cmd_run(&args),
+        "eval" => cmd_eval(&args),
+        "isp" => cmd_isp(&args),
+        "capture" => cmd_capture(&args),
+        "resources" => cmd_resources(&args),
+        "config" => {
+            println!("{}", load_config(&args)?.to_json().to_string_pretty());
+            Ok(())
+        }
+        _ => unreachable!(),
+    }
+}

@@ -1,0 +1,243 @@
+//! Runtime metrics: counters, gauges, latency histograms.
+//!
+//! The coordinator exposes these on its status endpoint / shutdown report.
+//! Lock-free on the hot path (atomics); histograms use fixed log-spaced
+//! buckets so recording is O(1) with no allocation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Self {
+        Self { value: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.value.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge (u64-encoded).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Self { value: AtomicU64::new(0) }
+    }
+
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-spaced latency histogram: 1µs..~17s in 48 buckets (x2 per 2 buckets).
+#[derive(Debug)]
+pub struct LatencyHist {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+const N_BUCKETS: usize = 48;
+
+fn bucket_of(us: u64) -> usize {
+    if us == 0 {
+        return 0;
+    }
+    // 2 buckets per octave: index = 2*log2(us) rounded down, capped.
+    let lz = 63 - us.leading_zeros() as u64; // floor(log2)
+    let frac = if us >= (1 << lz) + (1 << lz) / 2 { 1 } else { 0 };
+    ((lz * 2 + frac) as usize).min(N_BUCKETS - 1)
+}
+
+fn bucket_lo_us(idx: usize) -> u64 {
+    let oct = idx / 2;
+    let base = 1u64 << oct;
+    if idx % 2 == 0 { base } else { base + base / 2 }
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate percentile from bucket boundaries.
+    pub fn pct_us(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return bucket_lo_us(i);
+            }
+        }
+        bucket_lo_us(N_BUCKETS - 1)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "n={} mean={:.1}µs p50≈{}µs p99≈{}µs",
+            self.count(),
+            self.mean_us(),
+            self.pct_us(50.0),
+            self.pct_us(99.0)
+        )
+    }
+}
+
+/// The coordinator's metric set (one instance per running system).
+#[derive(Debug, Default)]
+pub struct SystemMetrics {
+    pub windows_in: Counter,
+    pub batches_executed: Counter,
+    pub detections_out: Counter,
+    pub isp_frames: Counter,
+    pub isp_param_updates: Counter,
+    pub queue_depth: Gauge,
+    pub npu_latency: LatencyHist,
+    pub e2e_latency: LatencyHist,
+    pub isp_latency: LatencyHist,
+}
+
+impl SystemMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "windows={} batches={} detections={} isp_frames={} param_updates={}\n\
+             npu:  {}\ne2e:  {}\nisp:  {}",
+            self.windows_in.get(),
+            self.batches_executed.get(),
+            self.detections_out.get(),
+            self.isp_frames.get(),
+            self.isp_param_updates.get(),
+            self.npu_latency.report(),
+            self.e2e_latency.report(),
+            self.isp_latency.report(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(42);
+        assert_eq!(g.get(), 42);
+    }
+
+    #[test]
+    fn bucket_mapping_monotonic() {
+        let mut last = 0;
+        for us in [0u64, 1, 2, 3, 5, 10, 100, 1000, 65_000, 1_000_000] {
+            let b = bucket_of(us);
+            assert!(b >= last, "bucket({us})={b} < {last}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn bucket_lo_matches_bucket_of() {
+        for idx in 2..N_BUCKETS {
+            let lo = bucket_lo_us(idx);
+            assert_eq!(bucket_of(lo), idx, "idx={idx} lo={lo}");
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = LatencyHist::new();
+        for us in [10u64, 20, 30, 40, 50, 1000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 6);
+        assert!(h.pct_us(50.0) <= h.pct_us(99.0));
+        assert!(h.mean_us() > 100.0);
+    }
+
+    #[test]
+    fn histogram_p99_sees_tail() {
+        let h = LatencyHist::new();
+        for _ in 0..99 {
+            h.record_us(10);
+        }
+        h.record_us(100_000);
+        assert!(h.pct_us(50.0) <= 16);
+        assert!(h.pct_us(100.0) >= 65_536);
+    }
+
+    #[test]
+    fn system_metrics_report_contains_sections() {
+        let m = SystemMetrics::new();
+        m.windows_in.inc();
+        m.npu_latency.record_us(123);
+        let r = m.report();
+        assert!(r.contains("windows=1"));
+        assert!(r.contains("npu:"));
+    }
+}

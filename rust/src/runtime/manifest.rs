@@ -1,0 +1,195 @@
+//! `artifacts/manifest.json` — the build-time/run-time contract.
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonlite::{parse, Json};
+
+/// One exported model's entry.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub trained: bool,
+    pub params: usize,
+    pub batch_sizes: Vec<usize>,
+    /// batch -> HLO file name.
+    pub files: Vec<(usize, String)>,
+    pub weights_file: Option<String>,
+    pub n_rates: usize,
+    pub head_channels: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: i64,
+    pub t_bins: usize,
+    pub polarities: usize,
+    pub height: usize,
+    pub width: usize,
+    pub window_us: i64,
+    pub grid: usize,
+    pub num_classes: usize,
+    pub anchors: Vec<(f32, f32)>,
+    pub models: Vec<ModelEntry>,
+    pub lif_demo: Option<String>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &str) -> Result<Self> {
+        let path = format!("{artifacts_dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = parse(text)?;
+        let input = j.req("input")?;
+        let head = j.req("head")?;
+        let mut models = Vec::new();
+        for m in j.req("models")?.as_arr().context("models must be array")? {
+            let name = m.req("name")?.as_str().context("name")?.to_string();
+            let mut files = Vec::new();
+            if let Some(fmap) = m.req("files")?.as_obj() {
+                for (b, f) in fmap {
+                    files.push((
+                        b.parse::<usize>().context("batch key")?,
+                        f.as_str().context("file name")?.to_string(),
+                    ));
+                }
+            }
+            files.sort();
+            let outputs = m.req("outputs")?;
+            let n_rates = outputs.req("rates")?.as_arr().context("rates")?[0]
+                .as_usize()
+                .context("rates[0]")?;
+            let head_shape = outputs.req("head")?.as_arr().context("head")?;
+            let head_channels = head_shape[1].as_usize().context("head[1]")?;
+            models.push(ModelEntry {
+                name,
+                trained: m.req("trained")?.as_bool().unwrap_or(false),
+                params: m.req("params")?.as_usize().context("params")?,
+                batch_sizes: m
+                    .req("batch_sizes")?
+                    .as_arr()
+                    .context("batch_sizes")?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect(),
+                files,
+                weights_file: m.get("weights").and_then(Json::as_str).map(String::from),
+                n_rates,
+                head_channels,
+            });
+        }
+        let anchors = head
+            .req("anchors")?
+            .as_arr()
+            .context("anchors")?
+            .iter()
+            .map(|a| {
+                let arr = a.as_arr().unwrap();
+                (arr[0].as_f64().unwrap() as f32, arr[1].as_f64().unwrap() as f32)
+            })
+            .collect();
+        Ok(Self {
+            version: j.req("version")?.as_i64().context("version")?,
+            t_bins: input.req("t_bins")?.as_usize().context("t_bins")?,
+            polarities: input.req("polarities")?.as_usize().context("polarities")?,
+            height: input.req("height")?.as_usize().context("height")?,
+            width: input.req("width")?.as_usize().context("width")?,
+            window_us: input.req("window_us")?.as_i64().context("window_us")?,
+            grid: head.req("grid")?.as_usize().context("grid")?,
+            num_classes: head.req("num_classes")?.as_usize().context("num_classes")?,
+            anchors,
+            models,
+            lif_demo: j
+                .get("lif_demo")
+                .and_then(|d| d.get("file"))
+                .and_then(Json::as_str)
+                .map(String::from),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow::anyhow!("model {name:?} not in manifest"))
+    }
+
+    /// Validate against the compiled-in Rust spec mirror.
+    pub fn check_spec(&self) -> Result<()> {
+        use crate::events::spec;
+        if self.t_bins != spec::T_BINS
+            || self.polarities != spec::POLARITIES
+            || self.height != spec::HEIGHT
+            || self.width != spec::WIDTH
+            || self.window_us != spec::WINDOW_US
+            || self.grid != spec::GRID
+            || self.num_classes != spec::NUM_CLASSES
+        {
+            bail!(
+                "manifest/spec mismatch: artifacts built against a different \
+                 python/compile/spec.py — rerun `make artifacts`"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    #[test]
+    fn parses_real_manifest() {
+        let m = match Manifest::load(&artifacts_dir()) {
+            Ok(m) => m,
+            Err(_) => return, // artifacts not built
+        };
+        assert_eq!(m.models.len(), 4);
+        m.check_spec().unwrap();
+        let yolo = m.model("spiking_yolo").unwrap();
+        assert!(yolo.batch_sizes.contains(&1));
+        assert_eq!(yolo.head_channels, 14);
+        assert!(yolo.n_rates >= 5);
+    }
+
+    #[test]
+    fn parse_minimal_synthetic() {
+        let text = r#"{
+            "version": 1,
+            "input": {"t_bins": 5, "polarities": 2, "height": 64,
+                      "width": 64, "window_us": 50000},
+            "head": {"grid": 8, "anchors": [[14.0, 9.0], [4.0, 11.0]],
+                     "num_classes": 2, "cell": 8},
+            "models": [{
+                "name": "m", "trained": true, "params": 10,
+                "batch_sizes": [1], "files": {"1": "m_b1.hlo.txt"},
+                "outputs": {"head": ["B", 14, 8, 8], "rates": [6]}
+            }]
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.model("m").unwrap().files[0].1, "m_b1.hlo.txt");
+        m.check_spec().unwrap();
+        assert!(m.model("missing").is_err());
+    }
+
+    #[test]
+    fn spec_mismatch_detected() {
+        let text = r#"{
+            "version": 1,
+            "input": {"t_bins": 9, "polarities": 2, "height": 64,
+                      "width": 64, "window_us": 50000},
+            "head": {"grid": 8, "anchors": [], "num_classes": 2, "cell": 8},
+            "models": []
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert!(m.check_spec().is_err());
+    }
+}

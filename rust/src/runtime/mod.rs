@@ -1,0 +1,20 @@
+//! PJRT runtime — loads and executes the AOT artifacts (the NPU datapath).
+//!
+//! Python lowers each backbone to HLO *text* at build time (`make
+//! artifacts`); this module is everything the Rust side needs at run time:
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (shapes, batch sizes,
+//!   LIF constants — the build/run contract);
+//! * [`npu`]      — [`npu::NpuEngine`]: PJRT CPU client + one compiled
+//!   executable per (backbone, batch), voxel-in / head+rates-out, with
+//!   execute timing for E5.
+//!
+//! Interchange is HLO text because the image's xla_extension 0.5.1 rejects
+//! jax>=0.5 serialized protos (64-bit instruction ids) — see
+//! /opt/xla-example/README.md.
+
+pub mod manifest;
+pub mod npu;
+
+pub use manifest::Manifest;
+pub use npu::{NpuEngine, NpuOutput};

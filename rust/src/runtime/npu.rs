@@ -1,0 +1,175 @@
+//! NPU engine: PJRT CPU client + compiled backbone executables.
+//!
+//! One [`NpuEngine`] owns the PJRT client and a cache of compiled
+//! executables keyed by (backbone, batch). The hot-path call is
+//! [`NpuEngine::infer`]: voxel batch in, `(heads, rates, execute-µs)` out.
+//! Requests smaller than an exported batch size are zero-padded (a zero
+//! voxel drives zero spikes — inert by construction; cross-sample
+//! independence is asserted in `rust/tests/runtime_roundtrip.rs`).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+use crate::events::voxel::VoxelGrid;
+
+/// Output of one batched inference.
+#[derive(Debug, Clone)]
+pub struct NpuOutput {
+    /// Per-sample head maps, each `[A*(5+C) * S * S]` row-major.
+    pub heads: Vec<Vec<f32>>,
+    /// Per-spiking-layer mean firing rates (batch-aggregated by the model).
+    pub rates: Vec<f32>,
+    /// PJRT execute wall time.
+    pub execute_us: f64,
+}
+
+/// PJRT-backed NPU.
+pub struct NpuEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    backbone: String,
+    artifacts_dir: String,
+    /// batch -> compiled executable.
+    executables: HashMap<usize, xla::PjRtLoadedExecutable>,
+    head_len: usize,
+}
+
+impl NpuEngine {
+    /// Load the manifest and compile the executables for `backbone`.
+    pub fn new(artifacts_dir: &str, backbone: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        manifest.check_spec()?;
+        let entry = manifest.model(backbone)?.clone();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for (batch, file) in &entry.files {
+            let path = format!("{artifacts_dir}/{file}");
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {file}"))?;
+            executables.insert(*batch, exe);
+        }
+        let head_len =
+            entry.head_channels * manifest.grid * manifest.grid;
+        Ok(Self {
+            client,
+            backbone: backbone.to_string(),
+            artifacts_dir: artifacts_dir.to_string(),
+            executables,
+            head_len,
+            manifest,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn backbone(&self) -> &str {
+        &self.backbone
+    }
+
+    pub fn artifacts_dir(&self) -> &str {
+        &self.artifacts_dir
+    }
+
+    /// Exported batch sizes, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.executables.keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    /// Smallest exported batch size that fits `n` samples (or the largest
+    /// available — callers split bigger loads).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        let sizes = self.batch_sizes();
+        for &b in &sizes {
+            if b >= n {
+                return b;
+            }
+        }
+        *sizes.last().expect("at least one batch size")
+    }
+
+    /// Run one batch of voxel grids (`<=` the largest exported size).
+    pub fn infer(&self, voxels: &[&VoxelGrid]) -> Result<NpuOutput> {
+        if voxels.is_empty() {
+            bail!("empty batch");
+        }
+        let batch = self.pick_batch(voxels.len());
+        if voxels.len() > batch {
+            bail!("batch {} exceeds largest exported size {batch}", voxels.len());
+        }
+        let exe = &self.executables[&batch];
+        let m = &self.manifest;
+        let sample_len = m.t_bins * m.polarities * m.height * m.width;
+
+        // Pack (+ zero-pad) the batch.
+        let mut input = vec![0.0f32; batch * sample_len];
+        for (i, v) in voxels.iter().enumerate() {
+            debug_assert_eq!(v.data.len(), sample_len);
+            input[i * sample_len..(i + 1) * sample_len].copy_from_slice(&v.data);
+        }
+        let literal = xla::Literal::vec1(&input).reshape(&[
+            batch as i64,
+            m.t_bins as i64,
+            m.polarities as i64,
+            m.height as i64,
+            m.width as i64,
+        ])?;
+
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&[literal])?;
+        let out_literal = result[0][0].to_literal_sync()?;
+        let execute_us = t0.elapsed().as_secs_f64() * 1e6;
+
+        let parts = out_literal.to_tuple()?;
+        if parts.len() != 2 {
+            bail!("expected (head, rates) tuple, got {} parts", parts.len());
+        }
+        let head_flat: Vec<f32> = parts[0].to_vec()?;
+        let rates: Vec<f32> = parts[1].to_vec()?;
+        if head_flat.len() != batch * self.head_len {
+            bail!(
+                "head shape mismatch: {} != {}x{}",
+                head_flat.len(),
+                batch,
+                self.head_len
+            );
+        }
+        let heads = voxels
+            .iter()
+            .enumerate()
+            .map(|(i, _)| head_flat[i * self.head_len..(i + 1) * self.head_len].to_vec())
+            .collect();
+        Ok(NpuOutput { heads, rates, execute_us })
+    }
+
+    /// Compile + run the standalone LIF demo kernel (runtime smoke test).
+    pub fn run_lif_demo(artifacts_dir: &str, currents: &[f32], t: usize, n: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let file = manifest
+            .lif_demo
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no lif_demo in manifest"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(&format!("{artifacts_dir}/{file}"))?;
+        let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+        let lit = xla::Literal::vec1(currents).reshape(&[t as i64, n as i64])?;
+        let out = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        Ok((parts[0].to_vec()?, parts[1].to_vec()?))
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

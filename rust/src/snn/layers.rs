@@ -1,0 +1,242 @@
+//! Conv / pool primitives for the SNN twin (NCHW, SAME padding).
+//!
+//! Numerics mirror `jax.lax.conv_general_dilated(..., padding="SAME",
+//! dimension_numbers=("NCHW","OIHW","NCHW"), feature_group_count=groups)`
+//! plus bias. Accumulation is f32 in input order (kh, kw, ic) — same
+//! nesting the XLA CPU backend uses for small convs, keeping the twin
+//! within float tolerance of the artifacts.
+
+use super::tensor::Tensor;
+
+/// SAME-padding conv: input `[C_in, H, W]`, weight `[C_out, C_in/g, kh, kw]`.
+///
+/// Also accumulates **synops** (synaptic operations: MACs actually driven
+/// by non-zero inputs) into `synops` — the E4 energy meter. For binary
+/// spike inputs this equals the event-driven MAC count an FPGA NPU would
+/// perform.
+pub fn conv2d_same(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    synops: &mut u64,
+) -> Tensor {
+    assert_eq!(input.shape.len(), 3, "input must be [C,H,W]");
+    assert_eq!(weight.shape.len(), 4, "weight must be [O,I/g,kh,kw]");
+    let (c_in, h, w) = (input.shape[0], input.shape[1], input.shape[2]);
+    let (c_out, cig, kh, kw) = (
+        weight.shape[0],
+        weight.shape[1],
+        weight.shape[2],
+        weight.shape[3],
+    );
+    assert_eq!(c_in / groups, cig, "groups/channel mismatch");
+    assert_eq!(bias.len(), c_out);
+    assert_eq!(c_out % groups, 0);
+
+    let h_out = h.div_ceil(stride);
+    let w_out = w.div_ceil(stride);
+    // SAME padding (TF convention): total pad = (out-1)*stride + k - in
+    let pad_h = ((h_out - 1) * stride + kh).saturating_sub(h);
+    let pad_w = ((w_out - 1) * stride + kw).saturating_sub(w);
+    let (pad_top, pad_left) = (pad_h / 2, pad_w / 2);
+
+    let mut out = Tensor::zeros(&[c_out, h_out, w_out]);
+    let oc_per_g = c_out / groups;
+    let mut local_synops = 0u64;
+
+    for oc in 0..c_out {
+        let g = oc / oc_per_g;
+        let ic0 = g * cig;
+        for oy in 0..h_out {
+            for ox in 0..w_out {
+                let mut acc = 0.0f32;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad_top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad_left as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        for ic in 0..cig {
+                            let v = input.data
+                                [input.idx3(ic0 + ic, iy as usize, ix as usize)];
+                            if v != 0.0 {
+                                acc += v
+                                    * weight.data[weight.idx4(oc, ic, ky, kx)];
+                                local_synops += 1;
+                            }
+                        }
+                    }
+                }
+                { let i = out.idx3(oc, oy, ox); out.data[i] = acc + bias[oc]; }
+            }
+        }
+    }
+    *synops += local_synops;
+    out
+}
+
+/// Dense (non-sparse) MAC count of the same conv — the frame-CNN cost
+/// baseline for E4's energy comparison.
+pub fn conv2d_dense_macs(
+    c_in: usize,
+    h: usize,
+    w: usize,
+    c_out: usize,
+    k: usize,
+    stride: usize,
+    groups: usize,
+) -> u64 {
+    let h_out = h.div_ceil(stride) as u64;
+    let w_out = w.div_ceil(stride) as u64;
+    h_out * w_out * (c_out as u64) * (c_in / groups) as u64 * (k * k) as u64
+}
+
+/// 2x2 max-pool, stride 2 (VALID).
+pub fn maxpool2(input: &Tensor) -> Tensor {
+    let (c, h, w) = (input.shape[0], input.shape[1], input.shape[2]);
+    let (ho, wo) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[c, ho, wo]);
+    for ch in 0..c {
+        for y in 0..ho {
+            for x in 0..wo {
+                let mut m = f32::NEG_INFINITY;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        m = m.max(input.data[input.idx3(ch, 2 * y + dy, 2 * x + dx)]);
+                    }
+                }
+                { let i = out.idx3(ch, y, x); out.data[i] = m; }
+            }
+        }
+    }
+    out
+}
+
+/// Channel-concat two `[C,H,W]` tensors (DenseNet blocks).
+pub fn concat_channels(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape[1..], b.shape[1..], "spatial dims must match");
+    let mut out = Tensor::zeros(&[a.shape[0] + b.shape[0], a.shape[1], a.shape[2]]);
+    out.data[..a.len()].copy_from_slice(&a.data);
+    out.data[a.len()..].copy_from_slice(&b.data);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ident3x3(c: usize) -> (Tensor, Vec<f32>) {
+        // 3x3 identity kernel per channel (groups = c)
+        let mut w = Tensor::zeros(&[c, 1, 3, 3]);
+        for oc in 0..c {
+            { let i = w.idx4(oc, 0, 1, 1); w.data[i] = 1.0; }
+        }
+        (w, vec![0.0; c])
+    }
+
+    #[test]
+    fn identity_depthwise_conv_preserves_input() {
+        let mut input = Tensor::zeros(&[2, 4, 4]);
+        { let i = input.idx3(1, 2, 3); input.data[i] = 5.0; }
+        let (w, b) = ident3x3(2);
+        let mut synops = 0;
+        let out = conv2d_same(&input, &w, &b, 1, 2, &mut synops);
+        assert_eq!(out.shape, vec![2, 4, 4]);
+        assert_eq!(out.data, input.data);
+        // pixel (2,3) near the right border: covered by 3x2 output windows
+        assert_eq!(synops, 6);
+    }
+
+    #[test]
+    fn synops_counts_fanin_of_nonzero_pixels() {
+        // single nonzero pixel in the middle, full 3x3 kernel, 1->1 ch:
+        // it participates in 9 output positions -> 9 MACs.
+        let mut input = Tensor::zeros(&[1, 5, 5]);
+        { let i = input.idx3(0, 2, 2); input.data[i] = 1.0; }
+        let w = Tensor::from_vec(&[1, 1, 3, 3], vec![1.0; 9]);
+        let mut synops = 0;
+        conv2d_same(&input, &w, &[0.0], 1, 1, &mut synops);
+        assert_eq!(synops, 9);
+    }
+
+    #[test]
+    fn sum_kernel_counts_neighbors() {
+        let mut input = Tensor::zeros(&[1, 3, 3]);
+        for i in 0..9 {
+            input.data[i] = 1.0;
+        }
+        let w = Tensor::from_vec(&[1, 1, 3, 3], vec![1.0; 9]);
+        let mut synops = 0;
+        let out = conv2d_same(&input, &w, &[0.0], 1, 1, &mut synops);
+        assert_eq!(out.data[out.idx3(0, 1, 1)], 9.0); // center sees all
+        assert_eq!(out.data[out.idx3(0, 0, 0)], 4.0); // corner sees 4
+    }
+
+    #[test]
+    fn bias_applied() {
+        let input = Tensor::zeros(&[1, 2, 2]);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let mut synops = 0;
+        let out = conv2d_same(&input, &w, &[0.5], 1, 1, &mut synops);
+        assert!(out.data.iter().all(|&v| v == 0.5));
+        assert_eq!(synops, 0); // zero input drives no MACs
+    }
+
+    #[test]
+    fn stride2_halves_resolution() {
+        let input = Tensor::zeros(&[1, 8, 8]);
+        let w = Tensor::from_vec(&[1, 1, 3, 3], vec![0.0; 9]);
+        let mut synops = 0;
+        let out = conv2d_same(&input, &w, &[0.0], 2, 1, &mut synops);
+        assert_eq!(out.shape, vec![1, 4, 4]);
+    }
+
+    #[test]
+    fn grouped_conv_separates_channels() {
+        // 2 channels, groups=2; weight for ch1 zero -> out ch1 all bias.
+        let mut input = Tensor::zeros(&[2, 2, 2]);
+        input.data[..4].copy_from_slice(&[1.0, 1.0, 1.0, 1.0]); // ch0 = 1s
+        input.data[4..].copy_from_slice(&[9.0, 9.0, 9.0, 9.0]); // ch1 = 9s
+        let mut w = Tensor::zeros(&[2, 1, 1, 1]);
+        w.data[0] = 1.0; // ch0 passthrough
+        w.data[1] = 0.0; // ch1 zeroed
+        let mut synops = 0;
+        let out = conv2d_same(&input, &w, &[0.0, 0.0], 1, 2, &mut synops);
+        assert_eq!(&out.data[..4], &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(&out.data[4..], &[0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn dense_macs_formula() {
+        assert_eq!(conv2d_dense_macs(2, 4, 4, 8, 3, 1, 1), 16 * 8 * 2 * 9);
+        assert_eq!(conv2d_dense_macs(4, 4, 4, 4, 3, 1, 4), 16 * 4 * 1 * 9);
+        assert_eq!(conv2d_dense_macs(1, 8, 8, 1, 3, 2, 1), 16 * 9);
+    }
+
+    #[test]
+    fn maxpool_picks_max() {
+        let mut input = Tensor::zeros(&[1, 4, 4]);
+        { let i = input.idx3(0, 1, 1); input.data[i] = 7.0; }
+        { let i = input.idx3(0, 2, 3); input.data[i] = 3.0; }
+        let out = maxpool2(&input);
+        assert_eq!(out.shape, vec![1, 2, 2]);
+        assert_eq!(out.data[out.idx3(0, 0, 0)], 7.0);
+        assert_eq!(out.data[out.idx3(0, 1, 1)], 3.0);
+    }
+
+    #[test]
+    fn concat_stacks_channels() {
+        let a = Tensor::from_vec(&[1, 2, 2], vec![1.0; 4]);
+        let b = Tensor::from_vec(&[2, 2, 2], vec![2.0; 8]);
+        let c = concat_channels(&a, &b);
+        assert_eq!(c.shape, vec![3, 2, 2]);
+        assert_eq!(c.data[0], 1.0);
+        assert_eq!(c.data[4], 2.0);
+    }
+}

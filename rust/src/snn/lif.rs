@@ -1,0 +1,147 @@
+//! LIF neuron dynamics — Rust mirror of the L1 Pallas kernel / jnp oracle.
+//!
+//! Discrete-time update (paper §IV-B Eq. 1, zero-order hold, u_rest = 0,
+//! hard reset):
+//!
+//! ```text
+//! u[t] = decay * u[t-1] * (1 - s[t-1]) + I[t]
+//! s[t] = (u[t] >= v_th)
+//! ```
+//!
+//! Must agree bit-for-bit (f32) with `python/compile/kernels/ref.py`; the
+//! integration test `npu_twin.rs` checks agreement through the artifacts.
+
+/// Per-layer LIF state: one membrane value per neuron.
+#[derive(Debug, Clone)]
+pub struct LifState {
+    pub membrane: Vec<f32>,
+    pub decay: f32,
+    pub v_th: f32,
+}
+
+impl LifState {
+    pub fn new(n: usize, decay: f32, v_th: f32) -> Self {
+        Self { membrane: vec![0.0; n], decay, v_th }
+    }
+
+    pub fn reset(&mut self) {
+        self.membrane.iter_mut().for_each(|u| *u = 0.0);
+    }
+
+    /// One timestep: integrate `currents`, emit spikes into `spikes`
+    /// (0.0/1.0), apply hard reset. Returns the number of spikes.
+    pub fn step(&mut self, currents: &[f32], spikes: &mut [f32]) -> usize {
+        debug_assert_eq!(currents.len(), self.membrane.len());
+        debug_assert_eq!(spikes.len(), self.membrane.len());
+        let mut count = 0;
+        for i in 0..currents.len() {
+            // identical op order to the kernel: u = u_prev*decay + I
+            let u = self.membrane[i] * self.decay + currents[i];
+            if u >= self.v_th {
+                spikes[i] = 1.0;
+                self.membrane[i] = 0.0; // hard reset
+                count += 1;
+            } else {
+                spikes[i] = 0.0;
+                self.membrane[i] = u;
+            }
+        }
+        count
+    }
+}
+
+/// Run LIF over a full `[T, N]` current matrix (returns spikes `[T, N]`).
+pub fn lif_forward(currents: &[Vec<f32>], decay: f32, v_th: f32) -> Vec<Vec<f32>> {
+    let n = currents.first().map_or(0, |c| c.len());
+    let mut state = LifState::new(n, decay, v_th);
+    let mut out = Vec::with_capacity(currents.len());
+    for cur in currents {
+        let mut spikes = vec![0.0; n];
+        state.step(cur, &mut spikes);
+        out.push(spikes);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::forall;
+
+    #[test]
+    fn zero_current_never_spikes() {
+        let cur = vec![vec![0.0; 8]; 5];
+        let s = lif_forward(&cur, 0.75, 1.0);
+        assert!(s.iter().flatten().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn suprathreshold_fires_every_step() {
+        let cur = vec![vec![1.5; 4]; 5];
+        let s = lif_forward(&cur, 0.75, 1.0);
+        assert!(s.iter().flatten().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn subthreshold_integrates_then_fires() {
+        // 0.6 + 0.75*0.6 = 1.05 >= 1.0 -> fires at t=1 (same as kernel test).
+        let cur = vec![vec![0.6; 2]; 2];
+        let s = lif_forward(&cur, 0.75, 1.0);
+        assert_eq!(s[0], vec![0.0, 0.0]);
+        assert_eq!(s[1], vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn hard_reset_restarts_integration() {
+        let mut st = LifState::new(1, 0.5, 1.0);
+        let mut sp = vec![0.0];
+        st.step(&[2.0], &mut sp);
+        assert_eq!(sp[0], 1.0);
+        assert_eq!(st.membrane[0], 0.0);
+        st.step(&[0.5], &mut sp);
+        assert_eq!(sp[0], 0.0);
+        assert_eq!(st.membrane[0], 0.5); // not 0.5 + leaked residue
+    }
+
+    #[test]
+    fn step_returns_spike_count() {
+        let mut st = LifState::new(3, 0.75, 1.0);
+        let mut sp = vec![0.0; 3];
+        let n = st.step(&[2.0, 0.1, 1.0], &mut sp);
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn property_spikes_binary_and_reset_holds() {
+        forall("lif invariants", 100, |g| {
+            let n = g.usize_in(1, 64);
+            let t = g.usize_in(1, 8);
+            let cur: Vec<Vec<f32>> = (0..t)
+                .map(|_| (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect())
+                .collect();
+            let decay = g.f32_in(0.1, 0.99);
+            let s = lif_forward(&cur, decay, 1.0);
+            for row in &s {
+                for &v in row {
+                    assert!(v == 0.0 || v == 1.0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn property_membrane_below_threshold_after_step() {
+        forall("membrane < v_th after step", 100, |g| {
+            let n = g.usize_in(1, 32);
+            let mut st = LifState::new(n, g.f32_in(0.1, 0.99), 1.0);
+            let mut sp = vec![0.0; n];
+            for _ in 0..5 {
+                let cur: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect();
+                st.step(&cur, &mut sp);
+                for &u in &st.membrane {
+                    assert!(u < 1.0, "membrane {u} >= threshold after step");
+                }
+            }
+        });
+    }
+}

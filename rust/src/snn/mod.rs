@@ -1,0 +1,20 @@
+//! Rust-native SNN engine — the cycle-model twin of the PJRT artifacts.
+//!
+//! Plays three roles:
+//! 1. **Cross-check oracle**: its f32 forward must match the XLA-executed
+//!    artifacts (integration test `npu_twin.rs`);
+//! 2. **Quantized deployment model** (the paper evaluates *quantized*
+//!    backbones on FPGA): [`quant`] runs int8 weights with binary spike
+//!    activations, the arithmetic the paper's LUT/DSP datapath performs;
+//! 3. **Activity meter** for E4: per-layer spike counts and synaptic
+//!    operations (synops) feed the [`crate::hw::energy`] model.
+
+pub mod backbone;
+pub mod layers;
+pub mod lif;
+pub mod quant;
+pub mod tensor;
+pub mod wts;
+
+pub use backbone::{Backbone, BackboneKind, ForwardStats};
+pub use tensor::Tensor;

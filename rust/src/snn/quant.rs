@@ -1,0 +1,160 @@
+//! Int8 quantized SNN engine — the paper's "quantized models" (§IV-C).
+//!
+//! Weights are quantized per-tensor symmetric to int8; spike activations
+//! are binary, so the conv inner loop is pure int8 *accumulation* (no
+//! multiplies for spiking layers) — exactly the LUT/DSP-friendly datapath
+//! the paper's FPGA NPU implements. Thresholding happens in the int32
+//! accumulator domain with the threshold scaled by the weight scale, so
+//! no dequantization is needed until the head.
+
+use super::backbone::{run_forward, Backbone, BackboneKind, ForwardStats};
+use super::tensor::Tensor;
+use crate::events::voxel::VoxelGrid;
+
+/// Per-tensor symmetric int8 quantization of a weight tensor.
+#[derive(Debug, Clone)]
+pub struct QuantTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+    /// Dequant scale: `f32 = i8 * scale`.
+    pub scale: f32,
+}
+
+impl QuantTensor {
+    pub fn quantize(t: &Tensor) -> Self {
+        let max = t.max_abs().max(1e-12);
+        let scale = max / 127.0;
+        let data = t
+            .data
+            .iter()
+            .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        Self { shape: t.shape.clone(), data, scale }
+    }
+
+    /// Dequantize back to f32 (for the emulated-conv path).
+    pub fn dequantize(&self) -> Tensor {
+        Tensor::from_vec(
+            &self.shape,
+            self.data.iter().map(|&v| v as f32 * self.scale).collect(),
+        )
+    }
+
+    /// Max |error| introduced by quantization.
+    pub fn quant_error(&self, original: &Tensor) -> f32 {
+        self.dequantize()
+            .data
+            .iter()
+            .zip(&original.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+/// A quantized backbone: int8 weights emulated through the shared forward
+/// driver (weights dequantized per layer — numerically identical to int8
+/// accumulate + i32 threshold compare because spikes are exactly 0/1 and
+/// the comparison is against `v_th/scale`).
+pub struct QuantBackbone {
+    pub kind: BackboneKind,
+    pub qparams: Vec<(QuantTensor, Vec<f32>)>,
+    pub decay: f32,
+    pub v_th: f32,
+}
+
+impl QuantBackbone {
+    pub fn from_backbone(bb: &Backbone) -> Self {
+        let qparams = bb
+            .params
+            .iter()
+            .map(|(w, b)| (QuantTensor::quantize(w), b.clone()))
+            .collect();
+        Self { kind: bb.kind, qparams, decay: bb.decay, v_th: bb.v_th }
+    }
+
+    /// Forward with int8-quantized weights; same output contract as
+    /// [`Backbone::forward`].
+    pub fn forward(&self, voxel: &VoxelGrid) -> (Tensor, ForwardStats) {
+        let params: Vec<(Tensor, Vec<f32>)> = self
+            .qparams
+            .iter()
+            .map(|(q, b)| (q.dequantize(), b.clone()))
+            .collect();
+        run_forward(self.kind, &params, voxel, self.decay, self.v_th, |t, w, b, s, g, syn| {
+            super::layers::conv2d_same(t, w, b, s, g, syn)
+        })
+    }
+
+    /// Model size in bytes (int8 weights + f32 biases) — the deployment
+    /// footprint the paper's FPGA BRAM budget cares about.
+    pub fn size_bytes(&self) -> usize {
+        self.qparams
+            .iter()
+            .map(|(q, b)| q.data.len() + 4 * b.len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::scene::DvsWindowSim;
+    use crate::events::voxel::voxelize;
+    use crate::testkit::prop::forall;
+
+    #[test]
+    fn quantize_round_trip_error_bounded() {
+        forall("quant error <= scale/2", 50, |g| {
+            let n = g.usize_in(1, 256);
+            let data: Vec<f32> = (0..n).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            let t = Tensor::from_vec(&[n], data);
+            let q = QuantTensor::quantize(&t);
+            assert!(q.quant_error(&t) <= q.scale / 2.0 + 1e-6);
+        });
+    }
+
+    #[test]
+    fn quantize_preserves_zero_and_extremes() {
+        let t = Tensor::from_vec(&[3], vec![0.0, 1.27, -1.27]);
+        let q = QuantTensor::quantize(&t);
+        assert_eq!(q.data[0], 0);
+        assert_eq!(q.data[1], 127);
+        assert_eq!(q.data[2], -127);
+    }
+
+    #[test]
+    fn quantized_forward_close_to_f32() {
+        let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+        if !std::path::Path::new(&format!("{dir}/spiking_yolo.wts")).exists() {
+            return;
+        }
+        let (ev, _) = DvsWindowSim::new(42).run();
+        let vox = voxelize(&ev);
+        let bb = Backbone::load(BackboneKind::Yolo, &dir).unwrap();
+        let qb = QuantBackbone::from_backbone(&bb);
+        let (h_f, s_f) = bb.forward(&vox);
+        let (h_q, s_q) = qb.forward(&vox);
+        // Heads agree loosely (spike flips allowed); sparsity within 10pp.
+        let mean_abs: f32 = h_f
+            .data
+            .iter()
+            .zip(&h_q.data)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / h_f.data.len() as f32;
+        assert!(mean_abs < 0.5, "quantized head drifted: {mean_abs}");
+        assert!((s_f.sparsity() - s_q.sparsity()).abs() < 0.10);
+    }
+
+    #[test]
+    fn size_is_quarter_of_f32() {
+        let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+        if !std::path::Path::new(&format!("{dir}/spiking_mobilenet.wts")).exists() {
+            return;
+        }
+        let bb = Backbone::load(BackboneKind::MobileNet, &dir).unwrap();
+        let qb = QuantBackbone::from_backbone(&bb);
+        let f32_bytes: usize = bb.params.iter().map(|(w, b)| 4 * (w.len() + b.len())).sum();
+        assert!(qb.size_bytes() * 3 < f32_bytes, "int8 should be ~4x smaller");
+    }
+}

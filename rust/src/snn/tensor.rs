@@ -1,0 +1,83 @@
+//! Minimal dense f32 tensor (NCHW-style) for the Rust SNN twin.
+
+/// Row-major dense tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// 4-D index (CHW layout with leading dim).
+    #[inline]
+    pub fn idx4(&self, a: usize, b: usize, c: usize, d: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 4);
+        ((a * self.shape[1] + b) * self.shape[2] + c) * self.shape[3] + d
+    }
+
+    #[inline]
+    pub fn idx3(&self, a: usize, b: usize, c: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 3);
+        (a * self.shape[1] + b) * self.shape[2] + c
+    }
+
+    /// Count of non-zero entries (spike counting).
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shape() {
+        let t = Tensor::zeros(&[2, 3, 4, 5]);
+        assert_eq!(t.len(), 120);
+        assert_eq!(t.nnz(), 0);
+    }
+
+    #[test]
+    fn idx4_row_major() {
+        let t = Tensor::zeros(&[2, 3, 4, 5]);
+        assert_eq!(t.idx4(0, 0, 0, 1), 1);
+        assert_eq!(t.idx4(0, 0, 1, 0), 5);
+        assert_eq!(t.idx4(0, 1, 0, 0), 20);
+        assert_eq!(t.idx4(1, 0, 0, 0), 60);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn from_vec_checks_size() {
+        Tensor::from_vec(&[2, 2], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn max_abs() {
+        let t = Tensor::from_vec(&[3], vec![-2.5, 1.0, 2.0]);
+        assert_eq!(t.max_abs(), 2.5);
+    }
+}

@@ -1,0 +1,149 @@
+//! `.wts` weights loader — consumes the flat binary written by
+//! `python/compile/aot.py::write_weights_bin`.
+//!
+//! Layout (LE): magic `WTS1` · u32 n_tensors · per tensor
+//! `u32 ndim · u32 dims[ndim] · f32 data`. Tensor order `w0, b0, w1, b1...`.
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::Tensor;
+
+/// Load all tensors from a `.wts` file.
+pub fn load(path: &str) -> Result<Vec<Tensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    parse(&bytes)
+}
+
+/// Parse a `.wts` byte buffer.
+pub fn parse(bytes: &[u8]) -> Result<Vec<Tensor>> {
+    if bytes.len() < 8 || &bytes[..4] != b"WTS1" {
+        bail!("not a WTS1 file");
+    }
+    let mut pos = 4usize;
+    let read_u32 = |pos: &mut usize| -> Result<u32> {
+        if *pos + 4 > bytes.len() {
+            bail!("truncated WTS file at byte {}", *pos);
+        }
+        let v = u32::from_le_bytes(bytes[*pos..*pos + 4].try_into().unwrap());
+        *pos += 4;
+        Ok(v)
+    };
+    let n_tensors = read_u32(&mut pos)? as usize;
+    if n_tensors > 10_000 {
+        bail!("implausible tensor count {n_tensors}");
+    }
+    let mut out = Vec::with_capacity(n_tensors);
+    for t in 0..n_tensors {
+        let ndim = read_u32(&mut pos)? as usize;
+        if ndim > 8 {
+            bail!("tensor {t}: implausible ndim {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut pos)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        if pos + 4 * n > bytes.len() {
+            bail!("tensor {t}: truncated data");
+        }
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            data.push(f32::from_le_bytes(
+                bytes[pos + 4 * i..pos + 4 * i + 4].try_into().unwrap(),
+            ));
+        }
+        pos += 4 * n;
+        out.push(Tensor::from_vec(&shape, data));
+    }
+    if pos != bytes.len() {
+        bail!("trailing bytes in WTS file");
+    }
+    Ok(out)
+}
+
+/// Pair up `w, b` tensors into (weight, bias) conv params.
+pub fn into_conv_params(tensors: Vec<Tensor>) -> Result<Vec<(Tensor, Vec<f32>)>> {
+    if tensors.len() % 2 != 0 {
+        bail!("odd tensor count — expected w/b pairs");
+    }
+    let mut out = Vec::with_capacity(tensors.len() / 2);
+    let mut iter = tensors.into_iter();
+    while let (Some(w), Some(b)) = (iter.next(), iter.next()) {
+        if w.shape.len() != 4 {
+            bail!("weight must be 4-D, got {:?}", w.shape);
+        }
+        if b.shape.len() != 1 || b.shape[0] != w.shape[0] {
+            bail!("bias shape {:?} mismatches weight {:?}", b.shape, w.shape);
+        }
+        out.push((w, b.data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(tensors: &[Tensor]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"WTS1");
+        b.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for t in tensors {
+            b.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for &d in &t.shape {
+                b.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in &t.data {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn round_trip() {
+        let tensors = vec![
+            Tensor::from_vec(&[2, 1, 3, 3], (0..18).map(|i| i as f32).collect()),
+            Tensor::from_vec(&[2], vec![0.5, -0.5]),
+        ];
+        let bytes = encode(&tensors);
+        let parsed = parse(&bytes).unwrap();
+        assert_eq!(parsed, tensors);
+        let params = into_conv_params(parsed).unwrap();
+        assert_eq!(params.len(), 1);
+        assert_eq!(params[0].1, vec![0.5, -0.5]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse(b"XXXX\0\0\0\0").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let tensors = vec![Tensor::from_vec(&[4], vec![1.0; 4])];
+        let mut bytes = encode(&tensors);
+        bytes.truncate(bytes.len() - 2);
+        assert!(parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_mismatched_bias() {
+        let tensors = vec![
+            Tensor::from_vec(&[2, 1, 1, 1], vec![1.0, 2.0]),
+            Tensor::from_vec(&[3], vec![0.0; 3]),
+        ];
+        assert!(into_conv_params(tensors).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let path = format!("{}/artifacts/spiking_yolo.wts", env!("CARGO_MANIFEST_DIR"));
+        if std::path::Path::new(&path).exists() {
+            let params = into_conv_params(load(&path).unwrap()).unwrap();
+            assert!(params.len() >= 6);
+            // first conv takes 2 polarity channels
+            assert_eq!(params[0].0.shape[1], 2);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Mini property-testing + benchmarking framework.
+//!
+//! The image ships neither `proptest` nor `criterion`, so both are
+//! implemented here as substrates:
+//!
+//! * [`prop`] — generator-based property tests with shrinking and seeded
+//!   replay (`TESTKIT_SEED=... cargo test` reproduces a failure).
+//! * [`bench`] — warmup + timed iterations + percentile report, used by all
+//!   `[[bench]] harness = false` targets so every paper table/figure is
+//!   regenerated through one consistent harness.
+
+pub mod bench;
+pub mod prop;
+
+pub use bench::{Bench, BenchResult};
+pub use prop::{forall, Gen};

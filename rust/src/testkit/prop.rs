@@ -1,0 +1,151 @@
+//! Property testing: generators, shrinking, seeded replay.
+//!
+//! ```
+//! use acelerador::testkit::prop::{forall, Gen};
+//! forall("sum is commutative", 100, |g| {
+//!     let a = g.i64_in(-1000, 1000);
+//!     let b = g.i64_in(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! On failure the case's seed is printed; rerun with `TESTKIT_SEED=<seed>`
+//! to replay exactly that case (shrinking is by seed-replay with smaller
+//! size bounds — value-level shrinking is overkill for these tests).
+
+use crate::util::SplitMix64;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Size bound; shrink passes re-run with smaller sizes.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self { rng: SplitMix64::new(seed), size }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + (self.rng.next_u64() % (hi - lo) as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi > lo);
+        lo + (self.rng.next_u64() % (hi - lo) as u64) as i64
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn u8(&mut self) -> u8 {
+        (self.rng.next_u64() & 0xFF) as u8
+    }
+
+    /// Vec of length `<= size` (at least 1).
+    pub fn vec_u8(&mut self) -> Vec<u8> {
+        let n = self.usize_in(1, self.size.max(2));
+        (0..n).map(|_| self.u8()).collect()
+    }
+
+    pub fn vec_f32(&mut self, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(1, self.size.max(2));
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (with replay seed) on failure.
+pub fn forall(name: &str, cases: usize, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    // Seeded replay: TESTKIT_SEED pins the failing case.
+    if let Ok(seed_str) = std::env::var("TESTKIT_SEED") {
+        let seed: u64 = seed_str.parse().expect("TESTKIT_SEED must be u64");
+        let mut g = Gen::new(seed, 64);
+        prop(&mut g);
+        return;
+    }
+
+    let base = 0x5EED_0000u64;
+    for case in 0..cases {
+        let seed = base + case as u64;
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, 64);
+            prop(&mut g);
+        });
+        if result.is_err() {
+            // Shrink by size: replay the same seed with smaller bounds and
+            // report the smallest size that still fails.
+            let mut min_fail = 64usize;
+            for size in [2usize, 4, 8, 16, 32] {
+                let r = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, size);
+                    prop(&mut g);
+                });
+                if r.is_err() {
+                    min_fail = size;
+                    break;
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed}, min size {min_fail}); \
+                 replay with TESTKIT_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("x == x", 50, |g| {
+            let x = g.u64();
+            assert_eq!(x, x);
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut g = Gen::new(1, 64);
+        for _ in 0..200 {
+            let v = g.usize_in(5, 10);
+            assert!((5..10).contains(&v));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn vec_generators_nonempty() {
+        let mut g = Gen::new(2, 8);
+        for _ in 0..50 {
+            assert!(!g.vec_u8().is_empty());
+            assert!(!g.vec_f32(0.0, 1.0).is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with TESTKIT_SEED")]
+    fn failing_property_reports_seed() {
+        forall("always fails", 3, |g| {
+            let x = g.u64();
+            assert!(x == 0 && x != 0, "forced failure");
+        });
+    }
+}

@@ -1,0 +1,170 @@
+//! Fixed-point `Q(m.n)` arithmetic — the ISP's number system.
+//!
+//! The paper's ISP (§V-B.5) does its colour-space conversion and gain
+//! application in "configurable fixed-point arithmetic" — the natural HDL
+//! idiom. We model it exactly: an i64 raw value with a compile-time-free
+//! fractional bit count, saturating where the hardware would saturate, so
+//! the Rust pipeline computes the *same numbers* a synthesized datapath
+//! would (tests pin known bit patterns).
+
+/// Fixed-point value: `raw / 2^frac_bits`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Q {
+    raw: i64,
+    frac_bits: u32,
+}
+
+impl Q {
+    pub fn from_raw(raw: i64, frac_bits: u32) -> Self {
+        Self { raw, frac_bits }
+    }
+
+    /// Quantize an f64 (round half away from zero — HDL `$rtoi(x+0.5)`).
+    pub fn from_f64(x: f64, frac_bits: u32) -> Self {
+        let scaled = x * (1i64 << frac_bits) as f64;
+        let raw = if scaled >= 0.0 {
+            (scaled + 0.5).floor() as i64
+        } else {
+            (scaled - 0.5).ceil() as i64
+        };
+        Self { raw, frac_bits }
+    }
+
+    pub fn from_int(x: i64, frac_bits: u32) -> Self {
+        Self { raw: x << frac_bits, frac_bits }
+    }
+
+    pub fn raw(self) -> i64 {
+        self.raw
+    }
+
+    pub fn frac_bits(self) -> u32 {
+        self.frac_bits
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.raw as f64 / (1i64 << self.frac_bits) as f64
+    }
+
+    /// Integer part with truncation toward negative infinity (HDL `>>>`).
+    pub fn to_int_floor(self) -> i64 {
+        self.raw >> self.frac_bits
+    }
+
+    /// Round-to-nearest integer (adds half LSB then arithmetic shift).
+    pub fn to_int_round(self) -> i64 {
+        (self.raw + (1i64 << self.frac_bits >> 1)) >> self.frac_bits
+    }
+
+    fn align(self, other: Q) -> (i64, i64, u32) {
+        let fb = self.frac_bits.max(other.frac_bits);
+        (
+            self.raw << (fb - self.frac_bits),
+            other.raw << (fb - other.frac_bits),
+            fb,
+        )
+    }
+
+    pub fn add(self, other: Q) -> Q {
+        let (a, b, fb) = self.align(other);
+        Q::from_raw(a + b, fb)
+    }
+
+    pub fn sub(self, other: Q) -> Q {
+        let (a, b, fb) = self.align(other);
+        Q::from_raw(a - b, fb)
+    }
+
+    /// Full-precision multiply then rescale back to `self`'s format
+    /// (the DSP48 `P = A*B >> n` pattern).
+    pub fn mul(self, other: Q) -> Q {
+        let prod = self.raw * other.raw; // i64 product of <=32-bit operands
+        Q::from_raw(prod >> other.frac_bits, self.frac_bits)
+    }
+
+    /// Saturate to an unsigned `bits`-wide integer range (pixel clamp).
+    pub fn sat_u(self, bits: u32) -> i64 {
+        let v = self.to_int_round();
+        let hi = (1i64 << bits) - 1;
+        v.clamp(0, hi)
+    }
+}
+
+/// Multiply a u8 pixel by a Q-format gain and saturate back to u8 —
+/// the single most common ISP datapath op (AWB, digital gain).
+#[inline]
+pub fn gain_u8(pix: u8, gain: Q) -> u8 {
+    let prod = pix as i64 * gain.raw();
+    let rounded = (prod + (1i64 << gain.frac_bits() >> 1)) >> gain.frac_bits();
+    rounded.clamp(0, 255) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_round_trip() {
+        let q = Q::from_f64(1.5, 8);
+        assert_eq!(q.raw(), 384);
+        assert_eq!(q.to_f64(), 1.5);
+    }
+
+    #[test]
+    fn negative_rounding_half_away() {
+        assert_eq!(Q::from_f64(-1.5, 0).raw(), -2);
+        assert_eq!(Q::from_f64(1.5, 0).raw(), 2);
+        assert_eq!(Q::from_f64(-0.4, 0).raw(), 0);
+    }
+
+    #[test]
+    fn add_aligns_formats() {
+        let a = Q::from_f64(1.25, 4); // raw 20
+        let b = Q::from_f64(0.5, 8); // raw 128
+        let c = a.add(b);
+        assert_eq!(c.to_f64(), 1.75);
+        assert_eq!(c.frac_bits(), 8);
+    }
+
+    #[test]
+    fn mul_matches_float_within_lsb() {
+        let a = Q::from_f64(2.375, 8);
+        let b = Q::from_f64(1.625, 8);
+        let c = a.mul(b);
+        assert!((c.to_f64() - 2.375 * 1.625).abs() < 1.0 / 256.0);
+    }
+
+    #[test]
+    fn sat_clamps() {
+        assert_eq!(Q::from_f64(300.7, 8).sat_u(8), 255);
+        assert_eq!(Q::from_f64(-3.0, 8).sat_u(8), 0);
+        assert_eq!(Q::from_f64(42.0, 8).sat_u(8), 42);
+    }
+
+    #[test]
+    fn gain_u8_identity_and_saturation() {
+        let unity = Q::from_f64(1.0, 12);
+        for p in [0u8, 1, 127, 255] {
+            assert_eq!(gain_u8(p, unity), p);
+        }
+        let double = Q::from_f64(2.0, 12);
+        assert_eq!(gain_u8(200, double), 255);
+        assert_eq!(gain_u8(100, double), 200);
+    }
+
+    #[test]
+    fn gain_u8_rounds_to_nearest() {
+        // 100 * 1.5 = 150 exactly; 101 * 1.005 = 101.505 -> 102
+        assert_eq!(gain_u8(100, Q::from_f64(1.5, 12)), 150);
+        let g = Q::from_f64(1.005, 12);
+        let exact = 101.0 * g.to_f64();
+        assert_eq!(gain_u8(101, g) as f64, exact.round());
+    }
+
+    #[test]
+    fn int_floor_vs_round() {
+        let q = Q::from_f64(2.75, 8);
+        assert_eq!(q.to_int_floor(), 2);
+        assert_eq!(q.to_int_round(), 3);
+    }
+}

@@ -1,0 +1,177 @@
+//! Image buffers: single-channel u8/f32 planes and planar RGB.
+//!
+//! Row-major, `(x, y)` addressing, with the clamped-border accessor the ISP
+//! stages use (HDL line buffers replicate edge pixels).
+
+/// Single-channel u8 image (Bayer raw, Y plane, ...).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ImageU8 {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<u8>,
+}
+
+impl ImageU8 {
+    pub fn new(width: usize, height: usize) -> Self {
+        Self { width, height, data: vec![0; width * height] }
+    }
+
+    pub fn from_fn(width: usize, height: usize, mut f: impl FnMut(usize, usize) -> u8) -> Self {
+        let mut img = Self::new(width, height);
+        for y in 0..height {
+            for x in 0..width {
+                img.data[y * width + x] = f(x, y);
+            }
+        }
+        img
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> u8 {
+        self.data[y * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: u8) {
+        self.data[y * self.width + x] = v;
+    }
+
+    /// Clamped-border access (edge replication, as HDL line buffers do).
+    #[inline]
+    pub fn get_clamped(&self, x: isize, y: isize) -> u8 {
+        let xc = x.clamp(0, self.width as isize - 1) as usize;
+        let yc = y.clamp(0, self.height as isize - 1) as usize;
+        self.get(xc, yc)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.data.iter().map(|&v| v as f64).sum::<f64>() / self.data.len() as f64
+    }
+}
+
+/// Single-channel f32 image (intermediate planes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageF32 {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<f32>,
+}
+
+impl ImageF32 {
+    pub fn new(width: usize, height: usize) -> Self {
+        Self { width, height, data: vec![0.0; width * height] }
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> f32 {
+        self.data[y * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: f32) {
+        self.data[y * self.width + x] = v;
+    }
+}
+
+/// Planar RGB u8 image (ISP output / clean reference).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanarRgb {
+    pub width: usize,
+    pub height: usize,
+    pub r: Vec<u8>,
+    pub g: Vec<u8>,
+    pub b: Vec<u8>,
+}
+
+impl PlanarRgb {
+    pub fn new(width: usize, height: usize) -> Self {
+        let n = width * height;
+        Self { width, height, r: vec![0; n], g: vec![0; n], b: vec![0; n] }
+    }
+
+    #[inline]
+    pub fn idx(&self, x: usize, y: usize) -> usize {
+        y * self.width + x
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> (u8, u8, u8) {
+        let i = self.idx(x, y);
+        (self.r[i], self.g[i], self.b[i])
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, rgb: (u8, u8, u8)) {
+        let i = self.idx(x, y);
+        self.r[i] = rgb.0;
+        self.g[i] = rgb.1;
+        self.b[i] = rgb.2;
+    }
+
+    /// Interleave all three planes (for PSNR over whole images).
+    pub fn interleaved(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.r.len() * 3);
+        for i in 0..self.r.len() {
+            out.push(self.r[i]);
+            out.push(self.g[i]);
+            out.push(self.b[i]);
+        }
+        out
+    }
+
+    /// Per-channel means (AWB checks).
+    pub fn channel_means(&self) -> (f64, f64, f64) {
+        let n = self.r.len() as f64;
+        (
+            self.r.iter().map(|&v| v as f64).sum::<f64>() / n,
+            self.g.iter().map(|&v| v as f64).sum::<f64>() / n,
+            self.b.iter().map(|&v| v as f64).sum::<f64>() / n,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u8_addressing_row_major() {
+        let mut img = ImageU8::new(4, 3);
+        img.set(3, 2, 9);
+        assert_eq!(img.data[2 * 4 + 3], 9);
+        assert_eq!(img.get(3, 2), 9);
+    }
+
+    #[test]
+    fn clamped_border_replicates_edges() {
+        let img = ImageU8::from_fn(3, 3, |x, y| (y * 3 + x) as u8);
+        assert_eq!(img.get_clamped(-1, -1), 0);
+        assert_eq!(img.get_clamped(5, 1), img.get(2, 1));
+        assert_eq!(img.get_clamped(1, 7), img.get(1, 2));
+    }
+
+    #[test]
+    fn from_fn_fills() {
+        let img = ImageU8::from_fn(2, 2, |x, y| (10 * x + y) as u8);
+        assert_eq!(img.get(1, 0), 10);
+        assert_eq!(img.get(0, 1), 1);
+    }
+
+    #[test]
+    fn rgb_set_get_interleave() {
+        let mut img = PlanarRgb::new(2, 1);
+        img.set(0, 0, (1, 2, 3));
+        img.set(1, 0, (4, 5, 6));
+        assert_eq!(img.get(1, 0), (4, 5, 6));
+        assert_eq!(img.interleaved(), vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn channel_means() {
+        let mut img = PlanarRgb::new(2, 1);
+        img.set(0, 0, (10, 20, 30));
+        img.set(1, 0, (20, 40, 50));
+        let (r, g, b) = img.channel_means();
+        assert_eq!((r, g, b), (15.0, 30.0, 40.0));
+    }
+}

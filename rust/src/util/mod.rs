@@ -1,0 +1,16 @@
+//! Shared utilities: deterministic PRNG, fixed-point arithmetic, statistics,
+//! and image buffers.
+//!
+//! These are substrates in the DESIGN.md sense: the image ships no `rand`,
+//! `fixed` or `image` crates, so the pieces the paper's system leans on are
+//! implemented (and tested) here.
+
+pub mod fixed;
+pub mod image;
+pub mod rng;
+pub mod stats;
+
+pub use fixed::Q;
+pub use image::{ImageF32, ImageU8, PlanarRgb};
+pub use rng::SplitMix64;
+pub use stats::{percentile, Summary};

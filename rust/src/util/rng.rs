@@ -1,0 +1,126 @@
+//! SplitMix64 — the cross-language deterministic PRNG.
+//!
+//! Mirror of `python/compile/rng.py`, operation for operation: the synthetic
+//! dataset must be bit-identical between the Python (training) and Rust
+//! (evaluation/serving) sides. The golden parity test
+//! (`events::golden`) asserts this. **Any change here must be mirrored in
+//! Python and the golden files regenerated** (`python tools/gen_golden.py`).
+
+/// Deterministic 64-bit PRNG (Steele et al. splitmix64 finalizer).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// f64 in `[0, 1)`: top 53 bits / 2^53 — identical to the Python mirror.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Integer in `[lo, hi)` via modulo (bias acceptable for scene gen).
+    #[inline]
+    pub fn range_u32(&mut self, lo: u32, hi: u32) -> u32 {
+        debug_assert!(hi > lo);
+        lo + self.next_u32() % (hi - lo)
+    }
+
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Normal(0, 1) via Box–Muller (Rust-only; not used on the parity path).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-12);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Derive an independent stream (identical scheme in Python).
+    pub fn fork(&self, stream: u64) -> Self {
+        Self {
+            state: self.state ^ stream.wrapping_mul(0xA24B_AED4_963E_E407),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_sequence_matches_python_golden() {
+        // Same values asserted in python/tests/test_data.py::TestRng.
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(r.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(r.next_u64(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = SplitMix64::new(123);
+        let mut sum = 0.0;
+        for _ in 0..1000 {
+            let x = r.uniform();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 1000.0;
+        assert!(mean > 0.4 && mean < 0.6, "mean={mean}");
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let r = SplitMix64::new(7);
+        assert_ne!(r.fork(1).next_u64(), r.fork(2).next_u64());
+    }
+
+    #[test]
+    fn fork_matches_python_scheme() {
+        // fork(k).state = seed ^ (k * 0xA24BAED4963EE407)
+        let r = SplitMix64::new(42);
+        let f = r.fork(3);
+        assert_eq!(f.state, 42 ^ 3u64.wrapping_mul(0xA24B_AED4_963E_E407));
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = SplitMix64::new(9);
+        for _ in 0..500 {
+            let v = r.range_u32(3, 9);
+            assert!((3..9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_has_unit_scale() {
+        let mut r = SplitMix64::new(5);
+        let xs: Vec<f64> = (0..4000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / xs.len() as f64;
+        assert!(mean.abs() < 0.1, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.15, "var={var}");
+    }
+}

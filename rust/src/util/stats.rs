@@ -1,0 +1,158 @@
+//! Summary statistics and percentiles for benches and metrics.
+
+/// Percentile by linear interpolation on a *sorted* slice (p in [0,100]).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Streaming summary: count/mean/min/max + reservoir for percentiles.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self { samples: Vec::new(), sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() { 0.0 } else { self.sum / self.samples.len() as f64 }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    pub fn pct(&self, p: f64) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile(&s, p)
+    }
+
+    /// "mean ± std [p50 p99] (n)" — the bench report line.
+    pub fn report(&self, unit: &str) -> String {
+        format!(
+            "{:10.3} ± {:8.3} {unit}  [p50 {:10.3}, p99 {:10.3}] (n={})",
+            self.mean(),
+            self.std(),
+            self.pct(50.0),
+            self.pct(99.0),
+            self.count()
+        )
+    }
+}
+
+/// PSNR between two u8 buffers (image-quality metric for E2/E3).
+pub fn psnr_u8(a: &[u8], b: &[u8]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mse: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64;
+    if mse == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (255.0f64 * 255.0 / mse).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 100.0), 5.0);
+        assert_eq!(percentile(&s, 50.0), 3.0);
+        assert_eq!(percentile(&s, 25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_single() {
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.std() - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn psnr_identical_is_infinite() {
+        let a = vec![10u8; 64];
+        assert!(psnr_u8(&a, &a).is_infinite());
+    }
+
+    #[test]
+    fn psnr_known_value() {
+        // constant error of 1 -> MSE 1 -> 10*log10(65025) ≈ 48.13 dB
+        let a = vec![10u8; 64];
+        let b = vec![11u8; 64];
+        assert!((psnr_u8(&a, &b) - 48.1308).abs() < 1e-3);
+    }
+
+    #[test]
+    fn psnr_orders_degradation() {
+        let a = vec![100u8; 64];
+        let slightly = vec![102u8; 64];
+        let badly = vec![130u8; 64];
+        assert!(psnr_u8(&a, &slightly) > psnr_u8(&a, &badly));
+    }
+}

@@ -1,0 +1,116 @@
+//! Integration: ISP functional pipeline vs the cycle-accurate AXI model,
+//! sensor → pipeline composition, and parameter-bus semantics end to end.
+
+use acelerador::config::IspConfig;
+use acelerador::isp::axis::{isp_stage_latencies, run_pipeline, AxisWord, PipeStage, StallProfile};
+use acelerador::isp::gamma::GammaLut;
+use acelerador::isp::pipeline::{AwbMode, IspParams, IspPipeline};
+use acelerador::isp::sensor::SensorModel;
+use acelerador::util::stats::psnr_u8;
+use acelerador::util::{ImageU8, SplitMix64};
+
+fn scene(seed: u64) -> ImageU8 {
+    let mut rng = SplitMix64::new(seed);
+    ImageU8::from_fn(64, 64, |x, y| {
+        (50 + (2 * x + y) % 150 + (rng.next_u32() % 5) as usize) as u8
+    })
+}
+
+#[test]
+fn sensor_to_display_quality_chain() {
+    // full chain improves (or at least holds) as AWB converges over frames
+    let cap = {
+        let mut rng = SplitMix64::new(4);
+        SensorModel::default().capture(&scene(4), &mut rng)
+    };
+    let lut = GammaLut::power(IspConfig::default().gamma);
+    let truth = lut.apply_rgb(&cap.truth);
+    let mut isp = IspPipeline::new(&IspConfig::default());
+    let mut psnrs = Vec::new();
+    for _ in 0..5 {
+        let (rgb, _) = isp.process(&cap.raw);
+        psnrs.push(psnr_u8(&rgb.interleaved(), &truth.interleaved()));
+    }
+    assert!(
+        psnrs.last().unwrap() >= &(psnrs[0] - 0.5),
+        "quality regressed across frames: {psnrs:?}"
+    );
+    assert!(psnrs.last().unwrap() > &25.0, "final quality too low: {psnrs:?}");
+}
+
+#[test]
+fn held_gains_survive_scene_changes_auto_does_not() {
+    let mut isp = IspPipeline::new(&IspConfig::default());
+    let commanded = acelerador::isp::awb::AwbGains { r: 0.7, g: 1.0, b: 1.4 };
+    let mut p = IspParams::from_config(&IspConfig::default());
+    p.awb_mode = AwbMode::Held;
+    p.awb_gains = commanded;
+    isp.set_params(p);
+    for seed in 0..3u64 {
+        let mut rng = SplitMix64::new(seed);
+        let cap = SensorModel::default().capture(&scene(seed), &mut rng);
+        let (_, report) = isp.process(&cap.raw);
+        assert_eq!(report.applied_gains, commanded, "held gains drifted");
+    }
+}
+
+#[test]
+fn cycle_model_carries_full_frame_through_all_stages() {
+    // the timing twin must move exactly one frame of words through the same
+    // six stages the functional pipeline runs, in order, under stalls
+    let width = 64usize;
+    let words: Vec<AxisWord> = (0..width * width)
+        .map(|i| AxisWord { data: i as u32, last: (i + 1) % width == 0 })
+        .collect();
+    let stages: Vec<PipeStage> = isp_stage_latencies(width)
+        .into_iter()
+        .map(|(n, l)| PipeStage::new(n, l))
+        .collect();
+    assert_eq!(stages.len(), 6, "stage count mirrors the functional pipeline");
+    let stats = run_pipeline(stages, &words, 4, StallProfile::new(0.35, 99));
+    assert_eq!(stats.words_out as usize, words.len());
+    for (i, w) in stats.output.iter().enumerate() {
+        assert_eq!(w.data, i as u32, "reordered at {i}");
+    }
+    // accepted counts: every stage saw every word exactly once (II=1)
+    for (name, accepted, _, _) in &stats.stage_stats {
+        assert_eq!(*accepted as usize, words.len(), "stage {name} dropped words");
+    }
+}
+
+#[test]
+fn functional_latency_model_matches_cycle_sim_first_out() {
+    // unstalled: total cycles ≈ pixels + sum(latencies) within small slack
+    let width = 64usize;
+    let n = width * width;
+    let words: Vec<AxisWord> =
+        (0..n).map(|i| AxisWord { data: i as u32, last: false }).collect();
+    let latency: usize = isp_stage_latencies(width).iter().map(|(_, l)| l).sum();
+    let stages: Vec<PipeStage> = isp_stage_latencies(width)
+        .into_iter()
+        .map(|(nm, l)| PipeStage::new(nm, l))
+        .collect();
+    let stats = run_pipeline(stages, &words, 4, StallProfile::none());
+    let ideal = (n + latency) as u64;
+    assert!(
+        stats.cycles >= ideal && stats.cycles < ideal + (n / 4) as u64,
+        "cycles {} vs ideal {ideal}",
+        stats.cycles
+    );
+}
+
+#[test]
+fn dpc_threshold_propagates_from_params() {
+    // param bus -> pipeline: corrections stop when threshold is huge
+    let mut rng = SplitMix64::new(8);
+    let model = SensorModel { hot_frac: 0.01, dead_frac: 0.01, ..Default::default() };
+    let cap = model.capture(&scene(8), &mut rng);
+    let mut isp = IspPipeline::new(&IspConfig::default());
+    let (_, r1) = isp.process(&cap.raw);
+    assert!(r1.dpc_corrections > 0);
+    let mut p = isp.params().clone();
+    p.dpc_threshold = 100_000;
+    isp.set_params(p);
+    let (_, r2) = isp.process(&cap.raw);
+    assert_eq!(r2.dpc_corrections, 0);
+}

@@ -1,0 +1,156 @@
+//! Integration: AOT artifacts load, compile and execute on PJRT, and the
+//! XLA numerics agree with the Rust-native twin.
+//!
+//! Requires `make artifacts` (skips cleanly when absent, but `make test`
+//! always builds them first).
+
+use acelerador::detect::{decode_head, nms, YoloSpec};
+use acelerador::events::scene::DvsWindowSim;
+use acelerador::events::voxel::{voxelize, VoxelGrid};
+use acelerador::runtime::NpuEngine;
+use acelerador::snn::{Backbone, BackboneKind};
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!("{}/manifest.json", artifacts_dir())).exists()
+}
+
+#[test]
+fn lif_demo_kernel_matches_rust_lif() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (t, n) = (5usize, 1024usize);
+    let mut rng = acelerador::util::SplitMix64::new(12);
+    let currents: Vec<f32> = (0..t * n).map(|_| rng.normal() as f32 * 2.0).collect();
+    let (spikes, u_pre) =
+        NpuEngine::run_lif_demo(&artifacts_dir(), &currents, t, n).unwrap();
+    assert_eq!(spikes.len(), t * n);
+    assert_eq!(u_pre.len(), t * n);
+
+    // Rust twin: identical recurrence.
+    let rows: Vec<Vec<f32>> = (0..t).map(|i| currents[i * n..(i + 1) * n].to_vec()).collect();
+    let want = acelerador::snn::lif::lif_forward(
+        &rows,
+        acelerador::events::spec::LIF_DECAY,
+        acelerador::events::spec::LIF_THRESHOLD,
+    );
+    for ti in 0..t {
+        for ni in 0..n {
+            assert_eq!(
+                spikes[ti * n + ni],
+                want[ti][ni],
+                "spike mismatch at t={ti} n={ni}"
+            );
+        }
+    }
+    // spikes are binary
+    assert!(spikes.iter().all(|&s| s == 0.0 || s == 1.0));
+}
+
+#[test]
+fn npu_engine_loads_and_infers_all_backbones() {
+    if !have_artifacts() {
+        return;
+    }
+    let (ev, _) = DvsWindowSim::new(42).run();
+    let vox = voxelize(&ev);
+    for name in ["spiking_vgg", "spiking_densenet", "spiking_mobilenet", "spiking_yolo"] {
+        let engine = NpuEngine::new(&artifacts_dir(), name).unwrap();
+        let out = engine.infer(&[&vox]).unwrap();
+        assert_eq!(out.heads.len(), 1, "{name}");
+        assert_eq!(out.heads[0].len(), 14 * 8 * 8, "{name}");
+        assert!(out.rates.iter().all(|&r| (0.0..=1.0).contains(&r)), "{name}");
+        assert!(out.execute_us > 0.0);
+    }
+}
+
+#[test]
+fn xla_head_matches_rust_twin_within_float_tolerance() {
+    if !have_artifacts() {
+        return;
+    }
+    let (ev, _) = DvsWindowSim::new(7).run();
+    let vox = voxelize(&ev);
+    let engine = NpuEngine::new(&artifacts_dir(), "spiking_yolo").unwrap();
+    let out = engine.infer(&[&vox]).unwrap();
+    let twin = Backbone::load(BackboneKind::Yolo, &artifacts_dir()).unwrap();
+    let (head_twin, stats) = twin.forward(&vox);
+    assert_eq!(out.heads[0].len(), head_twin.data.len());
+    // Spiking nets amplify ulp differences through threshold crossings;
+    // trained nets keep margins, so heads should agree tightly.
+    let mut max_diff = 0.0f32;
+    for (a, b) in out.heads[0].iter().zip(&head_twin.data) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 0.15, "XLA vs twin max diff {max_diff}");
+    // rates agree too
+    let twin_rates = stats.rates();
+    assert_eq!(out.rates.len(), twin_rates.len());
+    for (a, b) in out.rates.iter().zip(&twin_rates) {
+        assert!((*a as f64 - b).abs() < 0.05, "rate {a} vs {b}");
+    }
+}
+
+#[test]
+fn batched_inference_is_sample_independent() {
+    if !have_artifacts() {
+        return;
+    }
+    let v1 = voxelize(&DvsWindowSim::new(1).run().0);
+    let v2 = voxelize(&DvsWindowSim::new(2).run().0);
+    let engine = NpuEngine::new(&artifacts_dir(), "spiking_mobilenet").unwrap();
+    let solo1 = engine.infer(&[&v1]).unwrap();
+    let solo2 = engine.infer(&[&v2]).unwrap();
+    let both = engine.infer(&[&v1, &v2]).unwrap();
+    assert_eq!(both.heads.len(), 2);
+    for (a, b) in both.heads[0].iter().zip(&solo1.heads[0]) {
+        assert!((a - b).abs() < 1e-5, "batching changed sample 1");
+    }
+    for (a, b) in both.heads[1].iter().zip(&solo2.heads[0]) {
+        assert!((a - b).abs() < 1e-5, "batching changed sample 2");
+    }
+}
+
+#[test]
+fn zero_padding_is_inert() {
+    if !have_artifacts() {
+        return;
+    }
+    // an explicit zero voxel produces a deterministic bias-only head and
+    // must not perturb the real sample's lane
+    let v = voxelize(&DvsWindowSim::new(3).run().0);
+    let engine = NpuEngine::new(&artifacts_dir(), "spiking_yolo").unwrap();
+    let zero = VoxelGrid::zeros();
+    let padded = engine.infer(&[&v, &zero, &zero, &zero]).unwrap();
+    let solo = engine.infer(&[&v]).unwrap();
+    for (a, b) in padded.heads[0].iter().zip(&solo.heads[0]) {
+        assert!((a - b).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn trained_yolo_detects_something_on_synthetic_scene() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = NpuEngine::new(&artifacts_dir(), "spiking_yolo").unwrap();
+    if !engine.manifest().model("spiking_yolo").unwrap().trained {
+        eprintln!("skipping: artifacts built without trained weights");
+        return;
+    }
+    // over a handful of scenes the trained detector should fire at least once
+    let spec = YoloSpec::default();
+    let mut any = 0;
+    for seed in 0..8u64 {
+        let vox = voxelize(&DvsWindowSim::new(seed).run().0);
+        let out = engine.infer(&[&vox]).unwrap();
+        let dets = nms(decode_head(&out.heads[0], &spec, 0.10), 0.45);
+        any += dets.len();
+    }
+    assert!(any > 0, "trained spiking_yolo produced zero detections on 8 scenes");
+}

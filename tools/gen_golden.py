@@ -1,0 +1,69 @@
+"""Generate golden parity files for the Python<->Rust DVS dataset mirror.
+
+For a fixed set of seeds, records the event count, an FNV-1a checksum over
+the (t,x,y,p) stream, the first/last events, and the ground-truth box count.
+The Rust test `events::golden` must reproduce every field bit-for-bit.
+
+Usage: python tools/gen_golden.py
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "python"))
+
+from compile import data  # noqa: E402
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK = (1 << 64) - 1
+
+
+def checksum(events) -> int:
+    h = FNV_OFFSET
+    for row in events:
+        for v in row:
+            h = ((h ^ (int(v) & MASK)) * FNV_PRIME) & MASK
+    return h
+
+
+def main() -> None:
+    cases = []
+    for seed in [1, 2, 3, 42, 1000]:
+        ev, boxes = data.dvs_window(seed)
+        cases.append(
+            {
+                "seed": seed,
+                "illum": 1.0,
+                "illum_end": None,
+                "n_events": int(ev.shape[0]),
+                "checksum": f"{checksum(ev):016x}",
+                "first": ev[0].tolist() if len(ev) else None,
+                "last": ev[-1].tolist() if len(ev) else None,
+                "n_boxes": len(boxes),
+            }
+        )
+    # One illumination-ramp case (exercises the cognitive-loop stimulus path).
+    ev, boxes = data.dvs_window(7, illum=1.0, illum_end=2.0)
+    cases.append(
+        {
+            "seed": 7,
+            "illum": 1.0,
+            "illum_end": 2.0,
+            "n_events": int(ev.shape[0]),
+            "checksum": f"{checksum(ev):016x}",
+            "first": ev[0].tolist(),
+            "last": ev[-1].tolist(),
+            "n_boxes": len(boxes),
+        }
+    )
+    out = os.path.join(os.path.dirname(__file__), "..", "rust", "golden", "dvs_parity.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"cases": cases}, f, indent=1)
+    print(f"wrote {out} ({len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    main()
