@@ -1,8 +1,8 @@
 //! Argument parser (the image has no clap).
 //!
-//! Subcommand-style CLI: `acelerador <command> [--flag value] [--switch]`.
-//! Declared flags are validated (unknown flags error), `--help` text is
-//! generated, and values parse through typed accessors.
+//! Subcommand-style CLI: `acelerador <command> [--flag value] [--flag=value]
+//! [--switch]`. Declared flags are validated (unknown flags error), `--help`
+//! text is generated, and values parse through typed accessors.
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -22,6 +22,8 @@ pub struct FlagSpec {
 pub struct Args {
     pub command: String,
     values: BTreeMap<String, String>,
+    /// Value-flag names the user actually passed (vs. declared defaults).
+    explicit: Vec<String>,
     switches: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -31,25 +33,39 @@ impl Args {
     pub fn parse(argv: &[String], specs: &[FlagSpec]) -> Result<Args> {
         let command = argv.first().cloned().unwrap_or_else(|| "help".to_string());
         let mut values = BTreeMap::new();
+        let mut explicit = Vec::new();
         let mut switches = Vec::new();
         let mut positional = Vec::new();
 
         let mut i = 1;
         while i < argv.len() {
             let arg = &argv[i];
-            if let Some(name) = arg.strip_prefix("--") {
+            if let Some(body) = arg.strip_prefix("--") {
+                // `--flag=value` and `--flag value` are equivalent; only
+                // the first '=' splits, so values may themselves contain '='.
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v)),
+                    None => (body, None),
+                };
                 let spec = specs
                     .iter()
                     .find(|s| s.name == name)
                     .ok_or_else(|| anyhow!("unknown flag --{name} (see --help)"))?;
                 if spec.is_switch {
+                    if inline.is_some() {
+                        bail!("switch --{name} takes no value");
+                    }
                     switches.push(name.to_string());
+                } else if let Some(val) = inline {
+                    values.insert(name.to_string(), val.to_string());
+                    explicit.push(name.to_string());
                 } else {
                     i += 1;
                     let val = argv
                         .get(i)
                         .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
                     values.insert(name.to_string(), val.clone());
+                    explicit.push(name.to_string());
                 }
             } else {
                 positional.push(arg.clone());
@@ -63,11 +79,21 @@ impl Args {
                 }
             }
         }
-        Ok(Args { command, values, switches, positional })
+        Ok(Args { command, values, explicit, switches, positional })
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Like [`Args::get`], but only when the user passed the flag —
+    /// declared defaults return `None`, so config-file values can win.
+    pub fn explicit(&self, name: &str) -> Option<&str> {
+        if self.explicit.iter().any(|n| n == name) {
+            self.get(name)
+        } else {
+            None
+        }
     }
 
     pub fn get_usize(&self, name: &str) -> Result<usize> {
@@ -147,6 +173,47 @@ mod tests {
         assert_eq!(a.get_usize("steps").unwrap(), 10);
         assert!(a.get("config").is_none());
         assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn explicit_distinguishes_user_flags_from_defaults() {
+        let a = Args::parse(&argv(&["run", "--config=x.json"]), &specs()).unwrap();
+        assert_eq!(a.explicit("config"), Some("x.json"));
+        assert!(a.explicit("steps").is_none(), "default must not be explicit");
+        assert_eq!(a.get("steps"), Some("10"), "default still visible via get");
+        let b = Args::parse(&argv(&["run", "--steps", "3"]), &specs()).unwrap();
+        assert_eq!(b.explicit("steps"), Some("3"));
+    }
+
+    #[test]
+    fn equals_syntax_parses_values() {
+        let a = Args::parse(&argv(&["run", "--steps=50", "--verbose"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 50);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_and_space_forms_mix() {
+        let a =
+            Args::parse(&argv(&["run", "--steps=7", "--config", "a.json"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 7);
+        assert_eq!(a.get("config"), Some("a.json"));
+    }
+
+    #[test]
+    fn equals_value_may_contain_equals() {
+        let a = Args::parse(&argv(&["run", "--config=k=v.json"]), &specs()).unwrap();
+        assert_eq!(a.get("config"), Some("k=v.json"));
+    }
+
+    #[test]
+    fn switch_with_equals_errors() {
+        assert!(Args::parse(&argv(&["run", "--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_with_equals_errors() {
+        assert!(Args::parse(&argv(&["run", "--nope=1"]), &specs()).is_err());
     }
 
     #[test]

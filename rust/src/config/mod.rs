@@ -122,6 +122,42 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Fleet runtime configuration: N concurrent cognitive loops multiplexing
+/// one shared NPU batcher (multi-camera serving, paper §VI scaled out).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Concurrent streams (one worker thread + cognitive loop each).
+    pub streams: usize,
+    /// Per-stream window budget: every stream runs this many 50 ms windows.
+    pub windows_per_stream: usize,
+    /// Root seed; per-stream scenario seeds are forked from it.
+    pub base_seed: u64,
+    /// Scenario mix (see `fleet::profile::known_mixes`): which
+    /// illumination profiles the streams get ("mixed" cycles through the
+    /// specific kinds stream-by-stream).
+    pub scenario_mix: String,
+    /// Admission limit: max windows in flight across the fleet
+    /// (backpressure). 0 = unbounded (admit all streams).
+    pub max_inflight: usize,
+    /// Rendezvous streams at every window boundary so their NPU requests
+    /// arrive together (maximizes batch occupancy and makes runs easy to
+    /// reason about). `false` = free-running streams.
+    pub lockstep: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            streams: 4,
+            windows_per_stream: 12,
+            base_seed: 42,
+            scenario_mix: "mixed".into(),
+            max_inflight: 0,
+            lockstep: true,
+        }
+    }
+}
+
 /// Hardware (FPGA) model configuration for `hw::` estimates.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HwConfig {
@@ -148,6 +184,7 @@ pub struct SystemConfig {
     pub npu: NpuConfig,
     pub isp: IspConfig,
     pub coordinator: CoordinatorConfig,
+    pub fleet: FleetConfig,
     pub hw: HwConfig,
 }
 
@@ -199,6 +236,14 @@ impl SystemConfig {
             read_f64(c, "target_luma", &mut self.coordinator.target_luma);
             read_usize(c, "queue_depth", &mut self.coordinator.queue_depth);
         }
+        if let Some(f) = json.get("fleet") {
+            read_usize(f, "streams", &mut self.fleet.streams);
+            read_usize(f, "windows_per_stream", &mut self.fleet.windows_per_stream);
+            read_u64_exact(f, "base_seed", &mut self.fleet.base_seed);
+            read_string(f, "scenario_mix", &mut self.fleet.scenario_mix);
+            read_usize(f, "max_inflight", &mut self.fleet.max_inflight);
+            read_bool(f, "lockstep", &mut self.fleet.lockstep);
+        }
         if let Some(h) = json.get("hw") {
             read_f64(h, "clock_mhz", &mut self.hw.clock_mhz);
             read_f64(h, "pj_per_mac", &mut self.hw.pj_per_mac);
@@ -233,6 +278,20 @@ impl SystemConfig {
         }
         if !(0.0..=1.0).contains(&self.coordinator.policy_alpha) {
             bail!("coordinator: policy_alpha must be in (0,1]");
+        }
+        if self.fleet.streams == 0 {
+            bail!("fleet: streams must be > 0");
+        }
+        if self.fleet.windows_per_stream == 0 {
+            bail!("fleet: windows_per_stream must be > 0");
+        }
+        let mixes = crate::fleet::profile::known_mixes();
+        if !mixes.contains(&self.fleet.scenario_mix.as_str()) {
+            bail!(
+                "fleet: unknown scenario_mix {:?}; available: {}",
+                self.fleet.scenario_mix,
+                mixes.join(", ")
+            );
         }
         if self.hw.clock_mhz <= 0.0 {
             bail!("hw: clock_mhz must be > 0");
@@ -290,6 +349,22 @@ impl SystemConfig {
                 ]),
             ),
             (
+                "fleet",
+                Json::obj(vec![
+                    ("streams", Json::num(self.fleet.streams as f64)),
+                    (
+                        "windows_per_stream",
+                        Json::num(self.fleet.windows_per_stream as f64),
+                    ),
+                    // decimal string, not Json::num: an f64 would corrupt
+                    // seeds above 2^53 and break digest reproducibility
+                    ("base_seed", Json::str(&self.fleet.base_seed.to_string())),
+                    ("scenario_mix", Json::str(&self.fleet.scenario_mix)),
+                    ("max_inflight", Json::num(self.fleet.max_inflight as f64)),
+                    ("lockstep", Json::Bool(self.fleet.lockstep)),
+                ]),
+            ),
+            (
                 "hw",
                 Json::obj(vec![
                     ("clock_mhz", Json::num(self.hw.clock_mhz)),
@@ -311,6 +386,24 @@ fn read_usize(j: &Json, k: &str, dst: &mut usize) {
 fn read_u64(j: &Json, k: &str, dst: &mut u64) {
     if let Some(v) = j.get(k).and_then(Json::as_i64) {
         *dst = v as u64;
+    }
+}
+
+/// u64 that must survive round trips bit-exactly (seeds): accepts a
+/// decimal string (lossless) or a number (convenient, lossy above 2^53).
+fn read_u64_exact(j: &Json, k: &str, dst: &mut u64) {
+    match j.get(k) {
+        Some(Json::Str(s)) => {
+            if let Ok(v) = s.parse() {
+                *dst = v;
+            }
+        }
+        Some(v) => {
+            if let Some(n) = v.as_i64() {
+                *dst = n as u64;
+            }
+        }
+        None => {}
     }
 }
 
@@ -341,6 +434,12 @@ fn read_f32(j: &Json, k: &str, dst: &mut f32) {
 fn read_string(j: &Json, k: &str, dst: &mut String) {
     if let Some(v) = j.get(k).and_then(Json::as_str) {
         *dst = v.to_string();
+    }
+}
+
+fn read_bool(j: &Json, k: &str, dst: &mut bool) {
+    if let Some(v) = j.get(k).and_then(Json::as_bool) {
+        *dst = v;
     }
 }
 
@@ -383,6 +482,46 @@ mod tests {
         let mut cfg = SystemConfig::default();
         cfg.npu.conf_threshold = 2.0;
         assert!(cfg.validate().is_err());
+
+        let mut cfg = SystemConfig::default();
+        cfg.fleet.streams = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SystemConfig::default();
+        cfg.fleet.scenario_mix = "marsrover".into();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_overlay_from_json() {
+        let mut cfg = SystemConfig::default();
+        let json = crate::jsonlite::parse(
+            r#"{"fleet": {"streams": 8, "scenario_mix": "night",
+                          "max_inflight": 3, "lockstep": false}}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&json).unwrap();
+        assert_eq!(cfg.fleet.streams, 8);
+        assert_eq!(cfg.fleet.scenario_mix, "night");
+        assert_eq!(cfg.fleet.max_inflight, 3);
+        assert!(!cfg.fleet.lockstep);
+        // untouched fleet fields keep defaults
+        assert_eq!(cfg.fleet.windows_per_stream, 12);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn big_seed_survives_json_round_trip_exactly() {
+        let mut cfg = SystemConfig::default();
+        cfg.fleet.base_seed = (1u64 << 53) + 1; // not representable in f64
+        let mut back = SystemConfig::default();
+        back.apply_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.fleet.base_seed, cfg.fleet.base_seed);
+        // numeric form still accepted for hand-written configs
+        let mut cfg2 = SystemConfig::default();
+        cfg2.apply_json(&crate::jsonlite::parse(r#"{"fleet":{"base_seed": 77}}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg2.fleet.base_seed, 77);
     }
 
     #[test]

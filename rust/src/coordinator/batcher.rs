@@ -6,12 +6,20 @@
 //! drains whatever is queued (up to the largest exported batch size) into
 //! ONE PJRT execute — the vLLM-style dynamic batching that amortizes
 //! dispatch overhead (measured by E5).
+//!
+//! The submit side is a cloneable [`NpuClient`]: any number of producers
+//! (the fleet runtime runs one per stream) multiplex through the same
+//! engine thread, so batches fill with cross-stream requests instead of
+//! zero-padding. Engine failures and shutdown are propagated with their
+//! cause to every queued caller and to all subsequent submissions —
+//! nobody is left holding a bare channel-closed error.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::config::NpuConfig;
 use crate::events::voxel::VoxelGrid;
@@ -36,9 +44,71 @@ struct Request {
     reply: Sender<Result<InferReply>>,
 }
 
-/// Handle to the NPU service thread.
+enum Msg {
+    Infer(Request),
+    /// Sent by `NpuService::drop`: serve everything queued ahead of this
+    /// marker, fail everything behind it with a cause, then exit.
+    Shutdown,
+}
+
+/// Why the engine thread stopped (shared with every client handle).
+type FaultCell = Arc<Mutex<Option<String>>>;
+
+/// Cloneable submit handle to the NPU service.
+///
+/// Clones share the engine thread's request queue; the batcher fuses
+/// whatever is pending across all producers into one PJRT execute. A
+/// handle may outlive the owning [`NpuService`] — submissions after
+/// shutdown fail fast with the recorded shutdown/fault cause.
+#[derive(Clone)]
+pub struct NpuClient {
+    tx: Sender<Msg>,
+    fault: FaultCell,
+}
+
+impl NpuClient {
+    /// Submit one window; returns the reply receiver (async handle).
+    ///
+    /// Never blocks. If the engine thread is gone the receiver yields an
+    /// error carrying the original failure cause.
+    pub fn submit(&self, voxel: VoxelGrid) -> Receiver<Result<InferReply>> {
+        let (reply_tx, reply_rx) = channel();
+        let req = Request { voxel, submitted: Instant::now(), reply: reply_tx };
+        if let Err(send_err) = self.tx.send(Msg::Infer(req)) {
+            if let Msg::Infer(req) = send_err.0 {
+                let cause = self.fault_cause();
+                let _ = req.reply.send(Err(anyhow!("npu service unavailable: {cause}")));
+            }
+        }
+        reply_rx
+    }
+
+    /// Submit and wait (convenience for examples/benches/loops).
+    pub fn infer_blocking(&self, voxel: VoxelGrid) -> Result<InferReply> {
+        match self.submit(voxel).recv() {
+            Ok(r) => r,
+            // reply sender destroyed with the queue (request raced the
+            // engine's shutdown drain) — surface the recorded cause
+            Err(_) => Err(anyhow!(
+                "npu service dropped the request ({})",
+                self.fault_cause()
+            )),
+        }
+    }
+
+    /// The recorded engine-stop cause (placeholder until one is recorded).
+    pub fn fault_cause(&self) -> String {
+        self.fault
+            .lock()
+            .unwrap()
+            .clone()
+            .unwrap_or_else(|| "service stopped".to_string())
+    }
+}
+
+/// Handle to the NPU service thread (owns the engine lifecycle).
 pub struct NpuService {
-    tx: Sender<Request>,
+    client: NpuClient,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -46,52 +116,63 @@ impl NpuService {
     /// Spawn the engine thread. Fails fast (synchronously) if the engine
     /// cannot be constructed.
     pub fn start(cfg: &NpuConfig) -> Result<Self> {
-        let (tx, rx) = channel::<Request>();
+        let (tx, rx) = channel::<Msg>();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let fault: FaultCell = Arc::new(Mutex::new(None));
         let cfg = cfg.clone();
+        let thread_fault = fault.clone();
         let handle = std::thread::Builder::new()
             .name("npu-engine".into())
-            .spawn(move || engine_thread(cfg, rx, ready_tx))
+            .spawn(move || engine_thread(cfg, rx, ready_tx, thread_fault))
             .context("spawning npu thread")?;
         ready_rx
             .recv()
             .context("npu thread died during init")??;
-        Ok(Self { tx, handle: Some(handle) })
+        Ok(Self { client: NpuClient { tx, fault }, handle: Some(handle) })
+    }
+
+    /// A cloneable submit handle. Hand one to each producer (fleet
+    /// streams); requests from all clones share the dynamic batcher.
+    pub fn client(&self) -> NpuClient {
+        self.client.clone()
     }
 
     /// Submit one window; returns the reply receiver (async handle).
     pub fn submit(&self, voxel: VoxelGrid) -> Receiver<Result<InferReply>> {
-        let (reply_tx, reply_rx) = channel();
-        let _ = self.tx.send(Request { voxel, submitted: Instant::now(), reply: reply_tx });
-        reply_rx
+        self.client.submit(voxel)
     }
 
     /// Submit and wait (convenience for examples/benches).
     pub fn infer_blocking(&self, voxel: VoxelGrid) -> Result<InferReply> {
-        self.submit(voxel)
-            .recv()
-            .context("npu service dropped the request")?
+        self.client.infer_blocking(voxel)
     }
 }
 
 impl Drop for NpuService {
     fn drop(&mut self) {
-        // Closing the channel stops the engine thread.
-        let (tx, _) = channel();
-        drop(std::mem::replace(&mut self.tx, tx));
+        // Graceful shutdown: requests already queued are served; anything
+        // submitted after the marker is failed with a cause. Outstanding
+        // `NpuClient` clones stay valid — their submissions error fast.
+        let _ = self.client.tx.send(Msg::Shutdown);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
     }
 }
 
-fn engine_thread(cfg: NpuConfig, rx: Receiver<Request>, ready: Sender<Result<()>>) {
+fn engine_thread(
+    cfg: NpuConfig,
+    rx: Receiver<Msg>,
+    ready: Sender<Result<()>>,
+    fault: FaultCell,
+) {
     let engine = match NpuEngine::new(&cfg.artifacts_dir, &cfg.backbone) {
         Ok(e) => {
             let _ = ready.send(Ok(()));
             e
         }
         Err(e) => {
+            *fault.lock().unwrap() = Some(format!("engine init failed: {e:#}"));
             let _ = ready.send(Err(e));
             return;
         }
@@ -104,10 +185,19 @@ fn engine_thread(cfg: NpuConfig, rx: Receiver<Request>, ready: Sender<Result<()>
     loop {
         // Block for the first request…
         let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // service dropped
+            Ok(Msg::Infer(r)) => r,
+            Ok(Msg::Shutdown) => {
+                return drain_on_stop(&rx, &fault, "service shut down");
+            }
+            Err(_) => {
+                // every sender (service + all clients) gone: nothing left
+                // to serve or fail
+                *fault.lock().unwrap() = Some("service shut down".to_string());
+                return;
+            }
         };
         let mut batch = vec![first];
+        let mut stopping = false;
         // …then give stragglers `batch_timeout` to join, up to max_batch.
         let deadline = Instant::now() + timeout;
         while batch.len() < max_batch {
@@ -116,7 +206,11 @@ fn engine_thread(cfg: NpuConfig, rx: Receiver<Request>, ready: Sender<Result<()>
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
+                Ok(Msg::Infer(r)) => batch.push(r),
+                Ok(Msg::Shutdown) => {
+                    stopping = true;
+                    break;
+                }
                 Err(_) => break,
             }
         }
@@ -137,11 +231,30 @@ fn engine_thread(cfg: NpuConfig, rx: Receiver<Request>, ready: Sender<Result<()>
                 }
             }
             Err(e) => {
+                // A failed PJRT execute means the engine is unusable: reply
+                // to the in-flight batch, record the cause, then fail every
+                // queued caller with it instead of dropping their senders.
                 let msg = format!("{e:#}");
                 for req in batch {
-                    let _ = req.reply.send(Err(anyhow::anyhow!("{msg}")));
+                    let _ = req.reply.send(Err(anyhow!("{msg}")));
                 }
+                return drain_on_stop(&rx, &fault, &format!("npu engine stopped: {msg}"));
             }
+        }
+        if stopping {
+            return drain_on_stop(&rx, &fault, "service shut down");
+        }
+    }
+}
+
+/// Record the stop cause and fail everything still queued with it.
+fn drain_on_stop(rx: &Receiver<Msg>, fault: &FaultCell, cause: &str) {
+    *fault.lock().unwrap() = Some(cause.to_string());
+    for msg in rx.try_iter() {
+        if let Msg::Infer(req) = msg {
+            let _ = req
+                .reply
+                .send(Err(anyhow!("request not served: {cause}")));
         }
     }
 }
@@ -195,6 +308,48 @@ mod tests {
         let max_batch = replies.iter().map(|r| r.batch_size).max().unwrap();
         assert!(max_batch >= 2, "no batching occurred (sizes: {:?})",
             replies.iter().map(|r| r.batch_size).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cloned_clients_share_one_batcher() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut c = cfg();
+        c.batch_timeout_us = 50_000;
+        let svc = NpuService::start(&c).unwrap();
+        svc.infer_blocking(voxelize(&DvsWindowSim::new(0).run().0)).unwrap();
+        // four independent client clones submit concurrently — their
+        // requests must fuse exactly as same-handle submissions do
+        let clients: Vec<NpuClient> = (0..4).map(|_| svc.client()).collect();
+        let rxs: Vec<_> = clients
+            .iter()
+            .enumerate()
+            .map(|(i, cl)| cl.submit(voxelize(&DvsWindowSim::new(i as u64).run().0)))
+            .collect();
+        let sizes: Vec<usize> = rxs
+            .into_iter()
+            .map(|r| r.recv().unwrap().unwrap().batch_size)
+            .collect();
+        assert!(sizes.iter().max().unwrap() >= &2, "no cross-client batching: {sizes:?}");
+    }
+
+    #[test]
+    fn shutdown_reports_cause_to_late_submitters() {
+        if !have_artifacts() {
+            return;
+        }
+        let svc = NpuService::start(&cfg()).unwrap();
+        let client = svc.client();
+        drop(svc); // joins the engine thread; client handle stays valid
+        let vox = voxelize(&DvsWindowSim::new(3).run().0);
+        let err = client.infer_blocking(vox).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("shut down") || msg.contains("unavailable"),
+            "uninformative shutdown error: {msg}"
+        );
+        assert!(client.fault_cause().contains("shut down"));
     }
 
     #[test]

@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::batcher::NpuService;
+use super::batcher::{NpuClient, NpuService};
 use super::bus::{ParamUpdate, ParameterBus};
 use super::policy::{illum_ratio_from_events, ControlPolicy, SceneObservation};
 use super::sync::SyncController;
@@ -40,6 +40,9 @@ pub struct WindowOutcome {
     pub nlm_h: f64,
     pub npu_execute_us: f64,
     pub npu_service_us: f64,
+    /// How many requests shared the NPU batch this window rode in (fleet
+    /// occupancy accounting; 1 when the loop runs alone).
+    pub npu_batch: usize,
     pub isp_us: f64,
     pub e2e_us: f64,
     pub illum: f64,
@@ -99,7 +102,13 @@ pub struct CognitiveLoop {
     sim: ScenarioSim,
     sensor: SensorModel,
     sensor_rng: SplitMix64,
-    npu: NpuService,
+    /// Submit handle — either to a privately-owned service or a shared
+    /// fleet batcher. Declared before `_npu_service` so the client drops
+    /// first (the service's Drop joins the engine thread).
+    npu: NpuClient,
+    /// Present when this loop owns its NPU service (single-loop mode);
+    /// `None` when inference rides a shared fleet service.
+    _npu_service: Option<NpuService>,
     policy: ControlPolicy,
     bus: ParameterBus,
     isp: IspPipeline,
@@ -113,9 +122,26 @@ pub struct CognitiveLoop {
 }
 
 impl CognitiveLoop {
+    /// Single-loop mode: starts (and owns) a private NPU service.
     pub fn new(cfg: &SystemConfig, scenario_seed: u64) -> Result<Self> {
-        let npu = NpuService::start(&cfg.npu)?;
-        Ok(Self {
+        let svc = NpuService::start(&cfg.npu)?;
+        let client = svc.client();
+        Ok(Self::assemble(cfg, scenario_seed, client, Some(svc)))
+    }
+
+    /// Fleet mode: drive this loop's inference through a shared NPU
+    /// service so windows from many streams fuse in one batcher.
+    pub fn with_shared(cfg: &SystemConfig, scenario_seed: u64, npu: NpuClient) -> Self {
+        Self::assemble(cfg, scenario_seed, npu, None)
+    }
+
+    fn assemble(
+        cfg: &SystemConfig,
+        scenario_seed: u64,
+        npu: NpuClient,
+        service: Option<NpuService>,
+    ) -> Self {
+        Self {
             cfg: cfg.clone(),
             sim: ScenarioSim::new(scenario_seed),
             sensor: SensorModel::default(),
@@ -128,8 +154,9 @@ impl CognitiveLoop {
             window_id: 0,
             closed_loop: true,
             npu,
+            _npu_service: service,
             metrics: SystemMetrics::new(),
-        })
+        }
     }
 
     /// Drive one window at scene illumination `illum`.
@@ -227,6 +254,7 @@ impl CognitiveLoop {
             nlm_h: self.isp.params().nlm_h,
             npu_execute_us: reply.execute_us,
             npu_service_us: reply.service_us,
+            npu_batch: reply.batch_size,
             isp_us,
             e2e_us,
             illum: self.sim.illum,

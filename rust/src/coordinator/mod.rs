@@ -13,7 +13,9 @@
 //! * [`windower`] — slices an absolute-time event stream into fixed
 //!   windows (paper §IV-A);
 //! * [`batcher`]  — dedicated NPU thread + request channel: fuses pending
-//!   windows into one PJRT execute (the serving-path amortization);
+//!   windows into one PJRT execute (the serving-path amortization). Its
+//!   cloneable [`NpuClient`] handle is what the [`crate::fleet`] runtime
+//!   fans out to N streams;
 //! * [`policy`]   — maps detections + scene statistics to ISP parameter
 //!   commands (AWB gains, gamma/exposure, NLM strength);
 //! * [`bus`]      — the §VI control interface: sequenced parameter
@@ -28,6 +30,6 @@ pub mod policy;
 pub mod sync;
 pub mod windower;
 
-pub use batcher::NpuService;
+pub use batcher::{NpuClient, NpuService};
 pub use cognitive::{CognitiveLoop, LoopReport, WindowOutcome};
 pub use policy::{ControlPolicy, SceneObservation};

@@ -1,0 +1,377 @@
+//! Fleet runtime: multi-stream cognitive serving over the shared NPU
+//! batcher.
+//!
+//! The paper's cognitive loop (§VI) runs one DVS+RGB pair. A deployed NPU
+//! is shared by many cameras — a multi-vehicle ADAS fleet or UAV swarm —
+//! which is exactly the regime where dynamic batching stops being a
+//! zero-padding exercise and starts fusing *real* work. This module runs N
+//! concurrent cognitive loops (one worker thread per stream, each with its
+//! own `ScenarioSim`, `SensorModel`, `IspPipeline`, `ControlPolicy`,
+//! deterministic seed, and a diverse illumination profile) that all
+//! multiplex inference through ONE [`NpuService`]:
+//!
+//! ```text
+//! stream 0: sim ─ voxelize ─┐                       ┌─ decode ─ policy ─ ISP 0
+//! stream 1: sim ─ voxelize ─┼─► shared batcher ─► NPU ─ decode ─ policy ─ ISP 1
+//!     ⋮                     │   (one PJRT engine)     ⋮
+//! stream N: sim ─ voxelize ─┘                       └─ decode ─ policy ─ ISP N
+//! ```
+//!
+//! Orchestration knobs ([`crate::config::FleetConfig`]):
+//!
+//! * **lockstep** — streams rendezvous at every window boundary so their
+//!   NPU requests arrive together (maximum occupancy, reproducible batch
+//!   shapes). Free-running mode measures the drifting-arrival regime.
+//! * **admission** — a counting gate bounds windows in flight across the
+//!   fleet (backpressure when the engine is the bottleneck).
+//!
+//! Everything scenario-derived in the resulting [`report::FleetReport`] is
+//! bit-deterministic for a fixed seed; timing fields are measured.
+
+pub mod profile;
+pub mod report;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::SystemConfig;
+use crate::coordinator::batcher::{NpuClient, NpuService};
+use crate::coordinator::CognitiveLoop;
+
+pub use profile::{build_profiles, ScenarioKind, StreamProfile};
+pub use report::{FleetReport, StreamSummary};
+
+/// How long the batcher waits for the other lockstep streams' requests.
+/// Per-window scene simulation spreads arrivals by well under this, so a
+/// rendezvous that divides evenly into the batch target flushes on the
+/// last arrival; a remainder batch (streams not a multiple of the
+/// engine's largest exported size, or an admission limit that doesn't
+/// divide the stream count) pays up to this timeout per window — keep it
+/// a bounded few ms, not a generous one.
+const LOCKSTEP_GATHER_US: u64 = 5_000;
+
+/// Reusable rendezvous with abort (std's `Barrier` cannot be poisoned: a
+/// participant that dies — worker error, panic, or a failed thread spawn —
+/// would strand every peer forever). `wait` returns `false` once aborted.
+pub struct RoundBarrier {
+    n: usize,
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+    aborted: bool,
+}
+
+impl RoundBarrier {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "barrier needs at least one participant");
+        Self {
+            n,
+            state: Mutex::new(BarrierState { arrived: 0, generation: 0, aborted: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until all `n` participants arrive (true) or the barrier is
+    /// aborted (false). After an abort every call returns false at once.
+    pub fn wait(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if s.aborted {
+            return false;
+        }
+        s.arrived += 1;
+        if s.arrived == self.n {
+            s.arrived = 0;
+            s.generation = s.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return true;
+        }
+        let gen = s.generation;
+        while s.generation == gen && !s.aborted {
+            s = self.cv.wait(s).unwrap();
+        }
+        !s.aborted
+    }
+
+    /// Permanently release current and future waiters with `false`.
+    pub fn abort(&self) {
+        self.state.lock().unwrap().aborted = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Counting semaphore (std ships none): fleet admission control.
+pub struct AdmissionGate {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+/// RAII permit — releases on drop.
+pub struct GatePermit<'a> {
+    gate: &'a AdmissionGate,
+}
+
+impl AdmissionGate {
+    pub fn new(permits: usize) -> Self {
+        assert!(permits > 0, "admission gate needs at least one permit");
+        Self { permits: Mutex::new(permits), cv: Condvar::new() }
+    }
+
+    /// Block until a permit is free.
+    pub fn acquire(&self) -> GatePermit<'_> {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+        GatePermit { gate: self }
+    }
+
+    /// Permits currently available (diagnostics).
+    pub fn available(&self) -> usize {
+        *self.permits.lock().unwrap()
+    }
+}
+
+impl Drop for GatePermit<'_> {
+    fn drop(&mut self) {
+        *self.gate.permits.lock().unwrap() += 1;
+        self.gate.cv.notify_one();
+    }
+}
+
+/// Run the configured fleet to completion and aggregate the report.
+///
+/// Spawns `cfg.fleet.streams` worker threads sharing one NPU service; the
+/// call blocks until every stream has consumed its window budget (or the
+/// first failure, which aborts the remaining streams and is returned with
+/// its stream id attached).
+pub fn run_fleet(cfg: &SystemConfig) -> Result<FleetReport> {
+    cfg.validate()?;
+    let fleet = cfg.fleet.clone();
+    let profiles = build_profiles(&fleet)?;
+
+    // Lockstep wants the whole rendezvous in one PJRT execute. Size the
+    // batch target to the number of requests that can actually be in
+    // flight (streams, or the admission limit when tighter) so a complete
+    // rendezvous flushes immediately instead of idling out the gather
+    // timeout; the engine clamps to its largest exported size. Remainder
+    // batches (non-dividing stream counts) and genuine stalls pay up to
+    // the (bounded) gather timeout.
+    let mut run_cfg = cfg.clone();
+    if fleet.lockstep {
+        let rendezvous = if fleet.max_inflight > 0 {
+            fleet.streams.min(fleet.max_inflight)
+        } else {
+            fleet.streams
+        };
+        run_cfg.npu.max_batch = rendezvous;
+        run_cfg.npu.batch_timeout_us = run_cfg.npu.batch_timeout_us.max(LOCKSTEP_GATHER_US);
+    }
+
+    let svc = NpuService::start(&run_cfg.npu)?;
+    let barrier = fleet
+        .lockstep
+        .then(|| Arc::new(RoundBarrier::new(fleet.streams)));
+    let gate = (fleet.max_inflight > 0)
+        .then(|| Arc::new(AdmissionGate::new(fleet.max_inflight)));
+    let abort = Arc::new(AtomicBool::new(false));
+
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(profiles.len());
+    let mut spawn_err: Option<anyhow::Error> = None;
+    for prof in profiles {
+        let client = svc.client();
+        let cfg = run_cfg.clone();
+        let barrier_c = barrier.clone();
+        let gate = gate.clone();
+        let abort_c = abort.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("fleet-{}", prof.stream_id))
+            .spawn(move || run_stream(cfg, prof, client, barrier_c, gate, abort_c));
+        match spawned {
+            Ok(handle) => handles.push(handle),
+            Err(e) => {
+                // Release the workers already spawned — they would wait
+                // forever on a rendezvous sized for the full fleet.
+                abort.store(true, Ordering::SeqCst);
+                if let Some(b) = &barrier {
+                    b.abort();
+                }
+                spawn_err = Some(anyhow::Error::new(e).context("spawning fleet worker"));
+                break;
+            }
+        }
+    }
+
+    let mut summaries = Vec::with_capacity(handles.len());
+    let mut first_err: Option<anyhow::Error> = spawn_err;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(s)) => summaries.push(s),
+            Ok(Err(e)) => {
+                first_err.get_or_insert(e);
+            }
+            Err(_) => {
+                first_err.get_or_insert(anyhow!("fleet worker panicked"));
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    if let Some(e) = first_err {
+        return Err(e.context("fleet run failed"));
+    }
+    Ok(FleetReport::assemble(fleet, summaries, wall_s))
+}
+
+/// One stream's worker: a full cognitive loop driven by the stream's
+/// illumination script, inferring through the shared client.
+fn run_stream(
+    cfg: SystemConfig,
+    prof: StreamProfile,
+    client: NpuClient,
+    barrier: Option<Arc<RoundBarrier>>,
+    gate: Option<Arc<AdmissionGate>>,
+    abort: Arc<AtomicBool>,
+) -> Result<StreamSummary> {
+    let mut l = CognitiveLoop::with_shared(&cfg, prof.seed, client);
+    let script = prof.script(cfg.fleet.windows_per_stream);
+    let mut outcomes = Vec::with_capacity(script.len());
+    let mut failure: Option<anyhow::Error> = None;
+
+    for &illum in &script {
+        if let Some(b) = &barrier {
+            if !b.wait() {
+                break; // fleet aborted — barrier released everyone
+            }
+        }
+        if abort.load(Ordering::SeqCst) {
+            break;
+        }
+        let _permit = gate.as_ref().map(|g| g.acquire());
+        if let Some(g) = &gate {
+            l.metrics.queue_depth.set((cfg.fleet.max_inflight - g.available()) as u64);
+        }
+        // A panicking step must not unwind past the rendezvous protocol;
+        // contain it and route it through the same abort path as an Err.
+        let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| l.step(illum)));
+        let err = match stepped {
+            Ok(Ok(o)) => {
+                outcomes.push(o);
+                continue;
+            }
+            Ok(Err(e)) => e,
+            Err(_) => anyhow!("worker panicked during step"),
+        };
+        abort.store(true, Ordering::SeqCst);
+        if let Some(b) = &barrier {
+            b.abort(); // release peers parked at the rendezvous
+        }
+        failure = Some(err);
+        break;
+    }
+
+    if let Some(e) = failure {
+        return Err(e.context(format!("stream {} ({})", prof.stream_id, prof.kind.name())));
+    }
+    Ok(StreamSummary::from_outcomes(&prof, &outcomes, &l.metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn round_barrier_synchronizes_rounds() {
+        let b = Arc::new(RoundBarrier::new(4));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let b = b.clone();
+            let counter = counter.clone();
+            handles.push(std::thread::spawn(move || {
+                for round in 0..25 {
+                    assert!(b.wait());
+                    // after a passed rendezvous, every participant has
+                    // finished all prior rounds
+                    let seen = counter.fetch_add(1, Ordering::SeqCst) + 1;
+                    assert!(seen > round * 4, "round {round}: only {seen} arrivals");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn round_barrier_abort_releases_parked_waiters() {
+        let b = Arc::new(RoundBarrier::new(2));
+        let bc = b.clone();
+        let parked = std::thread::spawn(move || bc.wait());
+        // give the waiter time to park, then abort instead of arriving
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        b.abort();
+        assert!(!parked.join().unwrap(), "aborted wait must return false");
+        assert!(!b.wait(), "post-abort waits fail immediately");
+    }
+
+    #[test]
+    fn gate_bounds_concurrency() {
+        let gate = Arc::new(AdmissionGate::new(2));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let gate = gate.clone();
+            let inflight = inflight.clone();
+            let peak = peak.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..20 {
+                    let _permit = gate.acquire();
+                    let now = inflight.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    std::thread::yield_now();
+                    inflight.fetch_sub(1, Ordering::SeqCst);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2, "peak {}", peak.load(Ordering::SeqCst));
+        assert_eq!(gate.available(), 2);
+    }
+
+    #[test]
+    fn gate_permit_released_on_drop() {
+        let gate = AdmissionGate::new(1);
+        {
+            let _p = gate.acquire();
+            assert_eq!(gate.available(), 0);
+        }
+        assert_eq!(gate.available(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one permit")]
+    fn gate_rejects_zero_permits() {
+        let _ = AdmissionGate::new(0);
+    }
+
+    #[test]
+    fn run_fleet_validates_config_without_artifacts() {
+        // invalid fleet config must fail before touching the NPU engine
+        let mut cfg = SystemConfig::default();
+        cfg.fleet.scenario_mix = "blizzard".into();
+        assert!(run_fleet(&cfg).is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! Per-stream scenario profiles: deterministic seeds + diverse
+//! illumination scripts.
+//!
+//! A fleet deployment never sees N copies of the same scene: one camera
+//! drives into a tunnel while another sits in steady daylight. Each stream
+//! gets (a) an independent scenario seed forked from the fleet's base seed
+//! and (b) an illumination script chosen by the configured mix — the same
+//! lighting-anomaly stimuli E3 uses, staggered across streams.
+
+use anyhow::{bail, Result};
+
+use crate::config::FleetConfig;
+use crate::util::SplitMix64;
+
+/// Illumination script families (the `scenario_mix` vocabulary minus
+/// "mixed", which cycles through these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// Steady daylight — the control stream.
+    Day,
+    /// Uniform low light: noise-dominated events, strong NLM regime.
+    Night,
+    /// Linear dusk ramp from daylight to 0.3x.
+    Dusk,
+    /// Daylight, hard drop to 0.2x for the middle third, back out —
+    /// the E3 recovery stimulus.
+    Tunnel,
+    /// Alternating bright/dim every two windows (failing street lamp).
+    Flicker,
+}
+
+/// Every accepted `scenario_mix` value: "mixed" plus each specific kind.
+/// This is the single source of the vocabulary — config validation calls
+/// it, so adding a [`ScenarioKind`] automatically extends the config.
+pub fn known_mixes() -> Vec<&'static str> {
+    let mut v = vec!["mixed"];
+    v.extend(MIX_CYCLE.iter().map(|k| k.name()));
+    v
+}
+
+/// The specific kinds "mixed" cycles through, in assignment order.
+pub const MIX_CYCLE: [ScenarioKind; 5] = [
+    ScenarioKind::Day,
+    ScenarioKind::Night,
+    ScenarioKind::Dusk,
+    ScenarioKind::Tunnel,
+    ScenarioKind::Flicker,
+];
+
+impl ScenarioKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioKind::Day => "day",
+            ScenarioKind::Night => "night",
+            ScenarioKind::Dusk => "dusk",
+            ScenarioKind::Tunnel => "tunnel",
+            ScenarioKind::Flicker => "flicker",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<ScenarioKind> {
+        for k in MIX_CYCLE {
+            if k.name() == name {
+                return Ok(k);
+            }
+        }
+        bail!("unknown scenario kind {name:?}");
+    }
+
+    /// The illumination script (one value per window).
+    pub fn script(&self, windows: usize) -> Vec<f64> {
+        (0..windows)
+            .map(|w| match self {
+                ScenarioKind::Day => 1.0,
+                ScenarioKind::Night => 0.25,
+                ScenarioKind::Dusk => {
+                    if windows <= 1 {
+                        1.0
+                    } else {
+                        1.0 + (0.3 - 1.0) * (w as f64 / (windows - 1) as f64)
+                    }
+                }
+                ScenarioKind::Tunnel => {
+                    // middle third, rounding the exit boundary up
+                    if w >= windows / 3 && w < (2 * windows + 2) / 3 {
+                        0.2
+                    } else {
+                        1.0
+                    }
+                }
+                ScenarioKind::Flicker => {
+                    if (w / 2) % 2 == 0 {
+                        1.0
+                    } else {
+                        0.45
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+/// One stream's assignment: identity, seed, and scenario.
+#[derive(Debug, Clone)]
+pub struct StreamProfile {
+    pub stream_id: usize,
+    /// Scenario seed for this stream's `ScenarioSim` + sensor RNG.
+    pub seed: u64,
+    pub kind: ScenarioKind,
+}
+
+impl StreamProfile {
+    pub fn script(&self, windows: usize) -> Vec<f64> {
+        self.kind.script(windows)
+    }
+}
+
+/// Deterministically expand a [`FleetConfig`] into per-stream profiles.
+///
+/// Seeds fork from `base_seed` per stream (never sequential — adjacent
+/// integer seeds would correlate the scene PRNG streams); the mix assigns
+/// scenario kinds round-robin ("mixed") or uniformly (a specific name).
+pub fn build_profiles(cfg: &FleetConfig) -> Result<Vec<StreamProfile>> {
+    let root = SplitMix64::new(cfg.base_seed);
+    (0..cfg.streams)
+        .map(|i| {
+            let kind = if cfg.scenario_mix == "mixed" {
+                MIX_CYCLE[i % MIX_CYCLE.len()]
+            } else {
+                ScenarioKind::from_name(&cfg.scenario_mix)?
+            };
+            // fork(0) would alias the root stream; offset by 1.
+            let seed = root.fork(i as u64 + 1).next_u64();
+            Ok(StreamProfile { stream_id: i, seed, kind })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FleetConfig;
+
+    #[test]
+    fn profiles_deterministic_and_distinct() {
+        let cfg = FleetConfig { streams: 6, ..Default::default() };
+        let a = build_profiles(&cfg).unwrap();
+        let b = build_profiles(&cfg).unwrap();
+        assert_eq!(a.len(), 6);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.kind, y.kind);
+        }
+        let mut seeds: Vec<u64> = a.iter().map(|p| p.seed).collect();
+        seeds.sort();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 6, "per-stream seeds must be distinct");
+    }
+
+    #[test]
+    fn mixed_cycles_through_kinds() {
+        let cfg = FleetConfig { streams: 7, scenario_mix: "mixed".into(), ..Default::default() };
+        let p = build_profiles(&cfg).unwrap();
+        assert_eq!(p[0].kind, ScenarioKind::Day);
+        assert_eq!(p[4].kind, ScenarioKind::Flicker);
+        assert_eq!(p[5].kind, ScenarioKind::Day); // wraps
+    }
+
+    #[test]
+    fn every_known_mix_builds_and_validates() {
+        for mix in known_mixes() {
+            let cfg = FleetConfig {
+                streams: 3,
+                scenario_mix: mix.to_string(),
+                ..Default::default()
+            };
+            build_profiles(&cfg).unwrap_or_else(|e| panic!("mix {mix}: {e}"));
+            let mut sys = crate::config::SystemConfig::default();
+            sys.fleet = cfg;
+            sys.validate().unwrap_or_else(|e| panic!("mix {mix}: {e}"));
+        }
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let cfg = FleetConfig { scenario_mix: "fog".into(), ..Default::default() };
+        assert!(build_profiles(&cfg).is_err());
+    }
+
+    #[test]
+    fn scripts_have_requested_length_and_sane_range() {
+        for kind in MIX_CYCLE {
+            for windows in [1usize, 2, 5, 12] {
+                let s = kind.script(windows);
+                assert_eq!(s.len(), windows, "{kind:?} w={windows}");
+                assert!(
+                    s.iter().all(|&v| (0.05..=4.0).contains(&v)),
+                    "{kind:?}: {s:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tunnel_dips_in_the_middle_only() {
+        let s = ScenarioKind::Tunnel.script(9);
+        assert_eq!(&s[0..3], &[1.0, 1.0, 1.0]);
+        assert_eq!(&s[3..6], &[0.2, 0.2, 0.2]);
+        assert_eq!(&s[6..9], &[1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn dusk_ramps_monotonically_down() {
+        let s = ScenarioKind::Dusk.script(8);
+        assert_eq!(s[0], 1.0);
+        assert!((s[7] - 0.3).abs() < 1e-12);
+        for w in s.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for k in MIX_CYCLE {
+            assert_eq!(ScenarioKind::from_name(k.name()).unwrap(), k);
+        }
+    }
+}

@@ -1,0 +1,424 @@
+//! Fleet run reporting: per-stream summaries, the fleet-level aggregate,
+//! and the determinism digest.
+//!
+//! The report separates two kinds of facts:
+//!
+//! * **deterministic** — events, detections, PSNR, commanded parameters.
+//!   These depend only on (seed, config); the digest covers exactly this
+//!   set, so two runs with the same seeds produce bit-identical digests
+//!   regardless of thread scheduling or batch composition (cross-sample
+//!   independence of the zero-padded NPU batch is asserted by
+//!   `runtime_roundtrip`);
+//! * **measured** — service latency, batch occupancy, windows/sec. These
+//!   characterize the serving system and legitimately vary run-to-run.
+
+use crate::config::FleetConfig;
+use crate::coordinator::WindowOutcome;
+use crate::jsonlite::Json;
+use crate::metrics::SystemMetrics;
+use crate::testkit::bench::Table;
+use crate::util::stats::Summary;
+
+use super::profile::StreamProfile;
+
+/// FNV-1a (64-bit) accumulator for the determinism digest.
+#[derive(Debug, Clone, Copy)]
+pub struct Digest(u64);
+
+impl Default for Digest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Digest {
+    pub fn new() -> Self {
+        Digest(0xCBF2_9CE4_8422_2325)
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn value(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One stream's end-of-run summary.
+#[derive(Debug, Clone)]
+pub struct StreamSummary {
+    pub stream_id: usize,
+    pub profile: String,
+    pub seed: u64,
+    pub windows: usize,
+    pub events: usize,
+    pub detections: usize,
+    pub mean_psnr_db: f64,
+    pub final_exposure: f64,
+    /// Mean NPU batch size over this stream's windows (occupancy share).
+    pub mean_occupancy: f64,
+    /// Raw per-window service latencies (µs) for fleet-level percentiles.
+    pub service_us: Vec<f64>,
+    /// Digest over this stream's deterministic outcome fields.
+    pub digest: u64,
+    /// The stream's `SystemMetrics` snapshot (measured; excluded from the
+    /// digest).
+    pub metrics: Json,
+}
+
+impl StreamSummary {
+    pub fn from_outcomes(
+        prof: &StreamProfile,
+        outcomes: &[WindowOutcome],
+        metrics: &SystemMetrics,
+    ) -> Self {
+        let mut digest = Digest::new();
+        digest.u64(prof.stream_id as u64);
+        digest.u64(prof.seed);
+        let mut events = 0usize;
+        let mut detections = 0usize;
+        let mut psnr_sum = 0.0;
+        let mut service_us = Vec::with_capacity(outcomes.len());
+        let mut occupancy = 0.0;
+        for o in outcomes {
+            digest.u64(o.window_id);
+            digest.u64(o.events as u64);
+            digest.u64(o.detections.len() as u64);
+            digest.f64(o.psnr_db);
+            digest.f64(o.mean_luma);
+            digest.f64(o.exposure_gain);
+            digest.f64(o.nlm_h);
+            events += o.events;
+            detections += o.detections.len();
+            psnr_sum += o.psnr_db;
+            service_us.push(o.npu_service_us);
+            occupancy += o.npu_batch as f64;
+        }
+        let n = outcomes.len().max(1) as f64;
+        Self {
+            stream_id: prof.stream_id,
+            profile: prof.kind.name().to_string(),
+            seed: prof.seed,
+            windows: outcomes.len(),
+            events,
+            detections,
+            mean_psnr_db: psnr_sum / n,
+            final_exposure: outcomes.last().map(|o| o.exposure_gain).unwrap_or(1.0),
+            mean_occupancy: occupancy / n,
+            service_us,
+            digest: digest.value(),
+            metrics: metrics.snapshot(),
+        }
+    }
+
+    fn service_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for &v in &self.service_us {
+            s.add(v);
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let (p50, p99) = if self.service_us.is_empty() {
+            (0.0, 0.0)
+        } else {
+            let s = self.service_summary();
+            (s.pct(50.0), s.pct(99.0))
+        };
+        Json::obj(vec![
+            ("stream_id", Json::num(self.stream_id as f64)),
+            ("profile", Json::str(&self.profile)),
+            ("seed", Json::str(&format!("{:016x}", self.seed))),
+            ("windows", Json::num(self.windows as f64)),
+            ("events", Json::num(self.events as f64)),
+            ("detections", Json::num(self.detections as f64)),
+            ("mean_psnr_db", Json::num(self.mean_psnr_db)),
+            ("final_exposure", Json::num(self.final_exposure)),
+            ("mean_occupancy", Json::num(self.mean_occupancy)),
+            ("service_p50_us", Json::num(p50)),
+            ("service_p99_us", Json::num(p99)),
+            ("digest", Json::str(&format!("{:016x}", self.digest))),
+            ("metrics", self.metrics.clone()),
+        ])
+    }
+}
+
+/// The fleet-level aggregate.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub cfg: FleetConfig,
+    /// Per-stream summaries, ordered by stream id.
+    pub streams: Vec<StreamSummary>,
+    /// Wall-clock duration of the parallel phase (seconds).
+    pub wall_s: f64,
+}
+
+impl FleetReport {
+    pub fn assemble(cfg: FleetConfig, mut streams: Vec<StreamSummary>, wall_s: f64) -> Self {
+        streams.sort_by_key(|s| s.stream_id);
+        Self { cfg, streams, wall_s }
+    }
+
+    pub fn total_windows(&self) -> usize {
+        self.streams.iter().map(|s| s.windows).sum()
+    }
+
+    pub fn windows_per_sec(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.total_windows() as f64 / self.wall_s
+        }
+    }
+
+    /// Achieved mean NPU batch occupancy across every window served. > 1
+    /// means cross-stream batching actually happened.
+    pub fn mean_occupancy(&self) -> f64 {
+        let n = self.total_windows();
+        if n == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .streams
+            .iter()
+            .map(|s| s.mean_occupancy * s.windows as f64)
+            .sum();
+        sum / n as f64
+    }
+
+    fn service_all(&self) -> Summary {
+        let mut sum = Summary::new();
+        for s in &self.streams {
+            for &v in &s.service_us {
+                sum.add(v);
+            }
+        }
+        sum
+    }
+
+    /// Fleet-wide service-latency percentile (µs), p in [0, 100].
+    pub fn service_pct_us(&self, p: f64) -> f64 {
+        let s = self.service_all();
+        if s.count() == 0 {
+            0.0
+        } else {
+            s.pct(p)
+        }
+    }
+
+    /// Order-independent-by-construction fleet digest: streams are folded
+    /// in stream-id order, each contributing its own deterministic digest.
+    pub fn digest(&self) -> u64 {
+        let mut d = Digest::new();
+        for s in &self.streams {
+            d.u64(s.stream_id as u64);
+            d.u64(s.digest);
+        }
+        d.value()
+    }
+
+    pub fn digest_hex(&self) -> String {
+        format!("{:016x}", self.digest())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let s = self.service_all();
+        let (p50, p99) = if s.count() == 0 { (0.0, 0.0) } else { (s.pct(50.0), s.pct(99.0)) };
+        Json::obj(vec![
+            (
+                "fleet",
+                Json::obj(vec![
+                    ("streams", Json::num(self.cfg.streams as f64)),
+                    (
+                        "windows_per_stream",
+                        Json::num(self.cfg.windows_per_stream as f64),
+                    ),
+                    ("scenario_mix", Json::str(&self.cfg.scenario_mix)),
+                    ("max_inflight", Json::num(self.cfg.max_inflight as f64)),
+                    ("lockstep", Json::Bool(self.cfg.lockstep)),
+                ]),
+            ),
+            (
+                "aggregate",
+                Json::obj(vec![
+                    ("total_windows", Json::num(self.total_windows() as f64)),
+                    ("wall_s", Json::num(self.wall_s)),
+                    ("windows_per_sec", Json::num(self.windows_per_sec())),
+                    ("mean_occupancy", Json::num(self.mean_occupancy())),
+                    ("service_p50_us", Json::num(p50)),
+                    ("service_p99_us", Json::num(p99)),
+                    ("digest", Json::str(&self.digest_hex())),
+                ]),
+            ),
+            (
+                "streams",
+                Json::arr(self.streams.iter().map(|s| s.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Human-readable report: per-stream table + aggregate block.
+    pub fn render(&self) -> String {
+        let mut table = Table::new(&[
+            "stream", "profile", "windows", "events", "dets", "psnr_db", "expo", "occ",
+            "p50_us", "p99_us",
+        ]);
+        for s in &self.streams {
+            let (p50, p99) = if s.service_us.is_empty() {
+                (0.0, 0.0)
+            } else {
+                let sum = s.service_summary();
+                (sum.pct(50.0), sum.pct(99.0))
+            };
+            table.row(&[
+                s.stream_id.to_string(),
+                s.profile.clone(),
+                s.windows.to_string(),
+                s.events.to_string(),
+                s.detections.to_string(),
+                format!("{:.1}", s.mean_psnr_db),
+                format!("{:.2}", s.final_exposure),
+                format!("{:.2}", s.mean_occupancy),
+                format!("{p50:.0}"),
+                format!("{p99:.0}"),
+            ]);
+        }
+        format!(
+            "{}\nfleet: {} streams x {} windows in {:.2}s = {:.1} windows/s\n\
+             occupancy {:.2} | service p50 {:.0}µs p99 {:.0}µs | digest {}\n",
+            table.render(),
+            self.streams.len(),
+            self.cfg.windows_per_stream,
+            self.wall_s,
+            self.windows_per_sec(),
+            self.mean_occupancy(),
+            self.service_pct_us(50.0),
+            self.service_pct_us(99.0),
+            self.digest_hex(),
+        )
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::profile::{ScenarioKind, StreamProfile};
+
+    fn outcome(window_id: u64, events: usize, psnr: f64, batch: usize) -> WindowOutcome {
+        WindowOutcome {
+            window_id,
+            events,
+            detections: vec![],
+            gt_boxes: 1,
+            psnr_db: psnr,
+            mean_luma: 120.0,
+            exposure_gain: 1.1,
+            nlm_h: 9.0,
+            npu_execute_us: 800.0,
+            npu_service_us: 1000.0 + window_id as f64,
+            npu_batch: batch,
+            isp_us: 300.0,
+            e2e_us: 1500.0,
+            illum: 1.0,
+        }
+    }
+
+    fn prof(id: usize) -> StreamProfile {
+        StreamProfile { stream_id: id, seed: 7 + id as u64, kind: ScenarioKind::Day }
+    }
+
+    fn summary(id: usize, outcomes: &[WindowOutcome]) -> StreamSummary {
+        StreamSummary::from_outcomes(&prof(id), outcomes, &SystemMetrics::new())
+    }
+
+    #[test]
+    fn digest_stable_for_identical_outcomes() {
+        let o = vec![outcome(0, 100, 30.0, 2), outcome(1, 120, 31.0, 2)];
+        assert_eq!(summary(0, &o).digest, summary(0, &o).digest);
+    }
+
+    #[test]
+    fn digest_ignores_timing_but_sees_results() {
+        let base = vec![outcome(0, 100, 30.0, 2)];
+        let base_digest = summary(0, &base).digest;
+        // different service latency + batch size: digest unchanged
+        let mut timing = base.clone();
+        timing[0].npu_service_us = 9999.0;
+        timing[0].npu_batch = 4;
+        timing[0].e2e_us = 1.0;
+        assert_eq!(base_digest, summary(0, &timing).digest);
+        // different PSNR: digest must move
+        let mut result = base.clone();
+        result[0].psnr_db = 29.0;
+        assert_ne!(base_digest, summary(0, &result).digest);
+        // different event count: digest must move
+        let mut result = base;
+        result[0].events = 101;
+        assert_ne!(base_digest, summary(0, &result).digest);
+    }
+
+    #[test]
+    fn aggregate_math() {
+        let s0 = summary(0, &[outcome(0, 10, 30.0, 1), outcome(1, 10, 30.0, 3)]);
+        let s1 = summary(1, &[outcome(0, 20, 28.0, 2), outcome(1, 20, 28.0, 2)]);
+        let r = FleetReport::assemble(FleetConfig::default(), vec![s1, s0], 2.0);
+        assert_eq!(r.total_windows(), 4);
+        assert_eq!(r.windows_per_sec(), 2.0);
+        assert!((r.mean_occupancy() - 2.0).abs() < 1e-12);
+        // sorted by stream id despite reversed insertion
+        assert_eq!(r.streams[0].stream_id, 0);
+        let p50 = r.service_pct_us(50.0);
+        assert!(p50 >= 1000.0 && p50 <= 1001.0, "p50={p50}");
+    }
+
+    #[test]
+    fn fleet_digest_changes_with_any_stream() {
+        let s0 = summary(0, &[outcome(0, 10, 30.0, 1)]);
+        let s1a = summary(1, &[outcome(0, 20, 28.0, 1)]);
+        let s1b = summary(1, &[outcome(0, 21, 28.0, 1)]);
+        let ra =
+            FleetReport::assemble(FleetConfig::default(), vec![s0.clone(), s1a], 1.0);
+        let rb = FleetReport::assemble(FleetConfig::default(), vec![s0, s1b], 1.0);
+        assert_ne!(ra.digest(), rb.digest());
+    }
+
+    #[test]
+    fn json_report_parses_and_carries_aggregate() {
+        let s0 = summary(0, &[outcome(0, 10, 30.0, 2)]);
+        let r = FleetReport::assemble(FleetConfig::default(), vec![s0], 0.5);
+        let j = r.to_json();
+        let text = j.to_string_pretty();
+        let back = crate::jsonlite::parse(&text).unwrap();
+        assert_eq!(back, j);
+        assert_eq!(
+            back.get("aggregate").unwrap().get("total_windows").unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(
+            back.get("streams").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn render_mentions_occupancy_and_digest() {
+        let s0 = summary(0, &[outcome(0, 10, 30.0, 2)]);
+        let r = FleetReport::assemble(FleetConfig::default(), vec![s0], 0.5);
+        let text = r.render();
+        assert!(text.contains("occupancy"));
+        assert!(text.contains(&r.digest_hex()));
+    }
+}

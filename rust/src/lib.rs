@@ -19,6 +19,21 @@
 //! scenes), [`isp::sensor`] (Bayer mosaic + defect injection), and [`hw`]
 //! (LUT/FF/BRAM/DSP resource, timing and energy models).
 //!
+//! On top of the single loop sits the [`fleet`] serving runtime: N
+//! concurrent cognitive loops — one per camera stream, each with its own
+//! scenario, sensor, ISP and control policy — multiplexing inference
+//! through ONE shared NPU batcher so batches fill with cross-stream
+//! requests instead of zero-padding:
+//!
+//! ```text
+//! stream 0 ─┐
+//! stream 1 ─┼─► shared dynamic batcher ─► NPU (PJRT) ─► per-stream ISP loops
+//! stream N ─┘
+//! ```
+//!
+//! `acelerador fleet --streams 8` drives it from the CLI; E8 sweeps
+//! stream count against throughput and batch occupancy.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -40,6 +55,7 @@ pub mod config;
 pub mod coordinator;
 pub mod detect;
 pub mod events;
+pub mod fleet;
 pub mod hw;
 pub mod isp;
 pub mod jsonlite;

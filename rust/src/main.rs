@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //! * `run`      — drive the closed cognitive loop on a scripted scenario
+//! * `fleet`    — serve N concurrent streams through one shared NPU batcher
 //! * `eval`     — backbone AP/sparsity evaluation (E1 rows)
 //! * `isp`      — process synthetic captures through the ISP, report PSNR
 //! * `capture`  — record a synthetic DVS stream to a `.evt` file
@@ -17,6 +18,7 @@ use acelerador::detect::{decode_head, nms, YoloSpec};
 use acelerador::events::scene::DvsWindowSim;
 use acelerador::events::voxel::voxelize;
 use acelerador::events::{io as evio, spec};
+use acelerador::fleet;
 use acelerador::hw::resources::IspResources;
 use acelerador::hw::timing::frame_timing;
 use acelerador::isp::pipeline::IspPipeline;
@@ -27,7 +29,8 @@ use acelerador::util::stats::psnr_u8;
 use acelerador::util::{ImageU8, SplitMix64};
 use anyhow::Result;
 
-const COMMANDS: [&str; 7] = ["run", "eval", "isp", "capture", "resources", "config", "help"];
+const COMMANDS: [&str; 8] =
+    ["run", "fleet", "eval", "isp", "capture", "resources", "config", "help"];
 
 fn flags() -> Vec<FlagSpec> {
     vec![
@@ -40,6 +43,11 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "out", help: "output file (capture)", is_switch: false, default: Some("scene.evt") },
         FlagSpec { name: "open-loop", help: "disable the cognitive loop (static ISP)", is_switch: true, default: None },
         FlagSpec { name: "width", help: "line width for resource table", is_switch: false, default: Some("1920") },
+        FlagSpec { name: "streams", help: "fleet: concurrent camera streams", is_switch: false, default: Some("4") },
+        FlagSpec { name: "mix", help: "fleet: scenario mix (mixed|day|night|dusk|tunnel|flicker)", is_switch: false, default: Some("mixed") },
+        FlagSpec { name: "max-inflight", help: "fleet: admission limit (0 = unbounded)", is_switch: false, default: Some("0") },
+        FlagSpec { name: "free-run", help: "fleet: disable per-window lockstep", is_switch: true, default: None },
+        FlagSpec { name: "json", help: "run/fleet: emit machine-readable JSON instead of tables", is_switch: true, default: None },
     ]
 }
 
@@ -48,10 +56,12 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
         Some(path) => SystemConfig::from_file(path)?,
         None => SystemConfig::default(),
     };
-    if let Some(b) = args.get("backbone") {
+    // only user-passed flags override the config file (declared flag
+    // defaults equal the config defaults, so bare invocations see them)
+    if let Some(b) = args.explicit("backbone") {
         cfg.npu.backbone = b.to_string();
     }
-    if let Some(a) = args.get("artifacts") {
+    if let Some(a) = args.explicit("artifacts") {
         cfg.npu.artifacts_dir = a.to_string();
     }
     cfg.validate()?;
@@ -64,10 +74,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed")?;
     let mut l = CognitiveLoop::new(&cfg, seed)?;
     l.closed_loop = !args.has("open-loop");
-    println!(
-        "cognitive loop: backbone={} windows={windows} closed={}",
-        cfg.npu.backbone, l.closed_loop
-    );
+    if !args.has("json") {
+        println!(
+            "cognitive loop: backbone={} windows={windows} closed={}",
+            cfg.npu.backbone, l.closed_loop
+        );
+    }
     // scripted lighting: steady → dark step at 1/3 → bright step at 2/3
     let mut script = Vec::new();
     for i in 0..windows {
@@ -80,6 +92,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         });
     }
     let report = l.run_script(&script)?;
+    if args.has("json") {
+        // machine-readable only: metrics snapshot, no tables/headers
+        println!("{}", l.metrics.snapshot().to_string_pretty());
+        return Ok(());
+    }
     let mut table = Table::new(&[
         "win", "illum", "events", "dets", "psnr_db", "luma", "expo", "nlm_h", "npu_us", "e2e_us",
     ]);
@@ -99,6 +116,48 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     table.print();
     println!("\n{}", l.metrics.report());
+    Ok(())
+}
+
+/// `fleet` — N concurrent cognitive loops sharing one NPU batcher. CLI
+/// flags override the config file's `fleet` section.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let mut cfg = load_config(args)?;
+    if args.explicit("streams").is_some() {
+        cfg.fleet.streams = args.get_usize("streams")?;
+    }
+    if args.explicit("windows").is_some() {
+        cfg.fleet.windows_per_stream = args.get_usize("windows")?;
+    }
+    if args.explicit("seed").is_some() {
+        cfg.fleet.base_seed = args.get_u64("seed")?;
+    }
+    if args.explicit("max-inflight").is_some() {
+        cfg.fleet.max_inflight = args.get_usize("max-inflight")?;
+    }
+    if let Some(mix) = args.explicit("mix") {
+        cfg.fleet.scenario_mix = mix.to_string();
+    }
+    if args.has("free-run") {
+        cfg.fleet.lockstep = false;
+    }
+    cfg.validate()?;
+    if !args.has("json") {
+        println!(
+            "fleet: backbone={} streams={} windows/stream={} mix={} lockstep={}",
+            cfg.npu.backbone,
+            cfg.fleet.streams,
+            cfg.fleet.windows_per_stream,
+            cfg.fleet.scenario_mix,
+            cfg.fleet.lockstep
+        );
+    }
+    let report = fleet::run_fleet(&cfg)?;
+    if args.has("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        report.print();
+    }
     Ok(())
 }
 
@@ -214,6 +273,7 @@ fn main() -> Result<()> {
     check_command(&args.command, &COMMANDS)?;
     match args.command.as_str() {
         "run" => cmd_run(&args),
+        "fleet" => cmd_fleet(&args),
         "eval" => cmd_eval(&args),
         "isp" => cmd_isp(&args),
         "capture" => cmd_capture(&args),

@@ -2,9 +2,13 @@
 //!
 //! The coordinator exposes these on its status endpoint / shutdown report.
 //! Lock-free on the hot path (atomics); histograms use fixed log-spaced
-//! buckets so recording is O(1) with no allocation.
+//! buckets so recording is O(1) with no allocation. [`SystemMetrics::snapshot`]
+//! exports the whole set as [`Json`] for machine-readable reports (the
+//! `run --json` and `fleet --json` CLI paths).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::jsonlite::Json;
 
 /// Monotonic counter.
 #[derive(Debug, Default)]
@@ -139,6 +143,16 @@ impl LatencyHist {
             self.pct_us(99.0)
         )
     }
+
+    /// Machine-readable summary (counts + bucket-approximate percentiles).
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("mean_us", Json::num(self.mean_us())),
+            ("p50_us", Json::num(self.pct_us(50.0) as f64)),
+            ("p99_us", Json::num(self.pct_us(99.0) as f64)),
+        ])
+    }
 }
 
 /// The coordinator's metric set (one instance per running system).
@@ -173,6 +187,35 @@ impl SystemMetrics {
             self.e2e_latency.report(),
             self.isp_latency.report(),
         )
+    }
+
+    /// Export every counter/gauge/histogram as one [`Json`] object —
+    /// the machine-readable twin of [`SystemMetrics::report`].
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            (
+                "counters",
+                Json::obj(vec![
+                    ("windows_in", Json::num(self.windows_in.get() as f64)),
+                    ("batches_executed", Json::num(self.batches_executed.get() as f64)),
+                    ("detections_out", Json::num(self.detections_out.get() as f64)),
+                    ("isp_frames", Json::num(self.isp_frames.get() as f64)),
+                    ("isp_param_updates", Json::num(self.isp_param_updates.get() as f64)),
+                ]),
+            ),
+            (
+                "gauges",
+                Json::obj(vec![("queue_depth", Json::num(self.queue_depth.get() as f64))]),
+            ),
+            (
+                "histograms",
+                Json::obj(vec![
+                    ("npu_latency", self.npu_latency.snapshot()),
+                    ("e2e_latency", self.e2e_latency.snapshot()),
+                    ("isp_latency", self.isp_latency.snapshot()),
+                ]),
+            ),
+        ])
     }
 }
 
@@ -239,5 +282,40 @@ mod tests {
         let r = m.report();
         assert!(r.contains("windows=1"));
         assert!(r.contains("npu:"));
+    }
+
+    #[test]
+    fn snapshot_exports_all_sections_as_json() {
+        let m = SystemMetrics::new();
+        m.windows_in.add(7);
+        m.queue_depth.set(3);
+        m.npu_latency.record_us(100);
+        m.npu_latency.record_us(200);
+        let j = m.snapshot();
+        assert_eq!(
+            j.get("counters").unwrap().get("windows_in").unwrap().as_f64(),
+            Some(7.0)
+        );
+        assert_eq!(
+            j.get("gauges").unwrap().get("queue_depth").unwrap().as_f64(),
+            Some(3.0)
+        );
+        let npu = j.get("histograms").unwrap().get("npu_latency").unwrap();
+        assert_eq!(npu.get("count").unwrap().as_f64(), Some(2.0));
+        assert_eq!(npu.get("mean_us").unwrap().as_f64(), Some(150.0));
+        // serializes and parses back
+        let text = j.to_string();
+        assert_eq!(crate::jsonlite::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn hist_snapshot_percentiles_match_report_path() {
+        let h = LatencyHist::new();
+        for us in [10u64, 20, 30, 1000] {
+            h.record_us(us);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.get("p50_us").unwrap().as_f64(), Some(h.pct_us(50.0) as f64));
+        assert_eq!(s.get("p99_us").unwrap().as_f64(), Some(h.pct_us(99.0) as f64));
     }
 }

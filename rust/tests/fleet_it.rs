@@ -1,0 +1,151 @@
+//! Integration: the fleet runtime across module boundaries — profiles →
+//! N cognitive loops → shared NPU batcher → aggregate report.
+//!
+//! NPU-backed tests gate on compiled artifacts (same convention as the
+//! other integration suites); profile/report determinism plumbing is
+//! exercised unconditionally.
+
+use acelerador::config::SystemConfig;
+use acelerador::fleet::{build_profiles, run_fleet, FleetReport};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!(
+        "{}/artifacts/manifest.json",
+        env!("CARGO_MANIFEST_DIR")
+    ))
+    .exists()
+}
+
+fn cfg(streams: usize, windows: usize, seed: u64) -> SystemConfig {
+    let mut c = SystemConfig::default();
+    c.npu.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    c.npu.backbone = "spiking_mobilenet".into(); // fastest
+    c.fleet.streams = streams;
+    c.fleet.windows_per_stream = windows;
+    c.fleet.base_seed = seed;
+    c.fleet.scenario_mix = "mixed".into();
+    c
+}
+
+/// (a) Same seeds ⇒ bit-identical fleet aggregate digest across runs —
+/// scenario outcomes must not depend on thread scheduling or batch
+/// composition.
+#[test]
+fn same_seed_fleet_digest_is_bit_identical() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = || -> FleetReport { run_fleet(&cfg(3, 4, 1234)).unwrap() };
+    let a = run();
+    let b = run();
+    assert_eq!(a.digest_hex(), b.digest_hex(), "aggregate digest must be reproducible");
+    for (x, y) in a.streams.iter().zip(&b.streams) {
+        assert_eq!(x.stream_id, y.stream_id);
+        assert_eq!(x.digest, y.digest, "stream {} digest drifted", x.stream_id);
+        assert_eq!(x.events, y.events);
+        assert_eq!(x.detections, y.detections);
+        assert!((x.mean_psnr_db - y.mean_psnr_db).abs() < 1e-12);
+    }
+    // different seed ⇒ different digest (the digest actually sees data)
+    let c = run_fleet(&cfg(3, 4, 4321)).unwrap();
+    assert_ne!(a.digest_hex(), c.digest_hex());
+}
+
+/// (b) N-stream runs achieve mean batch occupancy > 1 when N > 1 —
+/// cross-stream requests really fuse in the shared batcher.
+#[test]
+fn multi_stream_run_batches_across_streams() {
+    if !have_artifacts() {
+        return;
+    }
+    let report = run_fleet(&cfg(4, 6, 42)).unwrap();
+    assert_eq!(report.total_windows(), 24);
+    let occ = report.mean_occupancy();
+    assert!(
+        occ > 1.0,
+        "mean occupancy {occ:.2} — shared batcher saw no cross-stream batching"
+    );
+    for s in &report.streams {
+        assert_eq!(s.windows, 6, "stream {} dropped windows", s.stream_id);
+        assert!(s.mean_psnr_db.is_finite());
+        assert_eq!(s.service_us.len(), 6);
+    }
+}
+
+/// A single stream through the fleet path degenerates to occupancy 1 and
+/// still reports consistently.
+#[test]
+fn single_stream_fleet_degenerates_cleanly() {
+    if !have_artifacts() {
+        return;
+    }
+    let report = run_fleet(&cfg(1, 3, 7)).unwrap();
+    assert_eq!(report.streams.len(), 1);
+    assert_eq!(report.total_windows(), 3);
+    assert!((report.mean_occupancy() - 1.0).abs() < 1e-12);
+    assert!(report.windows_per_sec() > 0.0);
+}
+
+/// Admission limit below the stream count must still complete the full
+/// window budget (backpressure throttles, never drops).
+#[test]
+fn admission_limit_throttles_without_dropping() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = cfg(4, 3, 11);
+    c.fleet.max_inflight = 2;
+    let report = run_fleet(&c).unwrap();
+    assert_eq!(report.total_windows(), 12);
+}
+
+/// Free-running (no lockstep) serves the same deterministic scenario
+/// content — only timing/occupancy may differ from lockstep.
+#[test]
+fn freerun_matches_lockstep_digest() {
+    if !have_artifacts() {
+        return;
+    }
+    let lock = run_fleet(&cfg(2, 4, 99)).unwrap();
+    let mut c = cfg(2, 4, 99);
+    c.fleet.lockstep = false;
+    let free = run_fleet(&c).unwrap();
+    assert_eq!(
+        lock.digest_hex(),
+        free.digest_hex(),
+        "arrival timing must not leak into scenario outcomes"
+    );
+}
+
+// ---- no-artifact paths (always run) ------------------------------------
+
+#[test]
+fn profiles_are_reproducible_across_processes_shape() {
+    let c = cfg(5, 4, 77);
+    let a = build_profiles(&c.fleet).unwrap();
+    let b = build_profiles(&c.fleet).unwrap();
+    assert_eq!(a.len(), 5);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.seed, y.seed);
+        assert_eq!(x.kind.name(), y.kind.name());
+        assert_eq!(x.script(4), y.script(4));
+    }
+}
+
+#[test]
+fn fleet_config_round_trips_through_json() {
+    let mut c = cfg(6, 9, 5);
+    c.fleet.scenario_mix = "tunnel".into();
+    c.fleet.max_inflight = 3;
+    c.fleet.lockstep = false;
+    let mut back = SystemConfig::default();
+    back.apply_json(&c.to_json()).unwrap();
+    assert_eq!(back.fleet, c.fleet);
+}
+
+#[test]
+fn bad_fleet_config_fails_before_engine_start() {
+    let mut c = SystemConfig::default();
+    c.fleet.windows_per_stream = 0;
+    assert!(run_fleet(&c).is_err());
+}

@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (see ROADMAP.md) + formatting check.
+#
+# Usage: tools/verify.sh
+# Runs from the repository root regardless of the caller's cwd.
+
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "verify: cargo not found on PATH — cannot run the tier-1 gate" >&2
+    exit 1
+fi
+
+# The cargo project lives under rust/ when a manifest is present there.
+if [ -f rust/Cargo.toml ]; then
+    cd rust
+fi
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== style: cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "verify: rustfmt unavailable — skipping format check" >&2
+fi
+
+echo "verify: OK"
