@@ -8,6 +8,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::isp::graph::StageMask;
 use crate::jsonlite::Json;
 
 /// Event/DVS front-end configuration (mirrors `python/compile/spec.py`).
@@ -85,6 +86,10 @@ pub struct IspConfig {
     pub gamma: f64,
     /// Luma sharpen strength (0 disables).
     pub sharpen: f64,
+    /// Initial stage enable/bypass mask (JSON: a spec string accepted by
+    /// `StageMask::parse`, e.g. `"all"` or `"-nlm"`). The policy may
+    /// narrow it at runtime but never re-enables a stage disabled here.
+    pub stages: StageMask,
 }
 
 impl Default for IspConfig {
@@ -99,6 +104,7 @@ impl Default for IspConfig {
             nlm_search: 2,
             gamma: 2.2,
             sharpen: 0.5,
+            stages: StageMask::all(),
         }
     }
 }
@@ -229,6 +235,15 @@ impl SystemConfig {
             read_usize(i, "nlm_search", &mut self.isp.nlm_search);
             read_f64(i, "gamma", &mut self.isp.gamma);
             read_f64(i, "sharpen", &mut self.isp.sharpen);
+            if let Some(v) = i.get("stages") {
+                // a mis-typed value must fail loudly, not keep the default
+                // mask while the operator believes a stage is bypassed
+                let Some(spec) = v.as_str() else {
+                    bail!("isp.stages must be a string spec (e.g. \"all\" or \"-nlm\")");
+                };
+                self.isp.stages =
+                    StageMask::parse(spec).context("isp.stages in config")?;
+            }
         }
         if let Some(c) = json.get("coordinator") {
             read_usize(c, "workers", &mut self.coordinator.workers);
@@ -273,6 +288,7 @@ impl SystemConfig {
         if self.isp.gamma <= 0.0 {
             bail!("isp: gamma must be > 0");
         }
+        self.isp.stages.validate().context("isp.stages")?;
         if self.coordinator.workers == 0 {
             bail!("coordinator: workers must be > 0");
         }
@@ -337,6 +353,7 @@ impl SystemConfig {
                     ("nlm_search", Json::num(self.isp.nlm_search as f64)),
                     ("gamma", Json::num(self.isp.gamma)),
                     ("sharpen", Json::num(self.isp.sharpen)),
+                    ("stages", Json::str(&self.isp.stages.to_csv())),
                 ]),
             ),
             (
@@ -490,6 +507,21 @@ mod tests {
         let mut cfg = SystemConfig::default();
         cfg.fleet.scenario_mix = "marsrover".into();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn stage_mask_overlay_and_validation() {
+        let mut cfg = SystemConfig::default();
+        let json =
+            crate::jsonlite::parse(r#"{"isp": {"stages": "-nlm,-csc"}}"#).unwrap();
+        cfg.apply_json(&json).unwrap();
+        assert!(!cfg.isp.stages.enabled_name("nlm"));
+        assert!(cfg.isp.stages.enabled_name("demosaic"));
+        cfg.validate().unwrap();
+        // a mask without demosaic is rejected at parse time
+        let mut cfg = SystemConfig::default();
+        let bad = crate::jsonlite::parse(r#"{"isp": {"stages": "dpc,awb"}}"#).unwrap();
+        assert!(cfg.apply_json(&bad).is_err());
     }
 
     #[test]

@@ -118,6 +118,11 @@ pub struct CognitiveLoop {
     /// When false, the loop runs "open": NPU detections are computed but
     /// parameters are never pushed to the ISP (the E3 static baseline).
     pub closed_loop: bool,
+    /// Serving load relative to admission capacity (1.0 = at capacity;
+    /// above = oversubscribed). The fleet runtime derives it from its
+    /// configuration — deterministic per (seed, config) — so the policy
+    /// can shed ISP stages under oversubscription. 0 standalone.
+    pub load_factor: f64,
     pub metrics: SystemMetrics,
 }
 
@@ -146,13 +151,16 @@ impl CognitiveLoop {
             sim: ScenarioSim::new(scenario_seed),
             sensor: SensorModel::default(),
             sensor_rng: SplitMix64::new(scenario_seed ^ 0xDEAD_BEEF),
-            policy: ControlPolicy::new(&cfg.coordinator),
+            // the configured stage mask is the policy's ceiling: runtime
+            // bypasses narrow it, never widen it
+            policy: ControlPolicy::with_mask(&cfg.coordinator, cfg.isp.stages),
             bus: ParameterBus::new(),
             isp: IspPipeline::new(&cfg.isp),
             sync: SyncController::new(spec::WINDOW_US, 5_000),
             yolo: YoloSpec::default(),
             window_id: 0,
             closed_loop: true,
+            load_factor: 0.0,
             npu,
             _npu_service: service,
             metrics: SystemMetrics::new(),
@@ -191,6 +199,7 @@ impl CognitiveLoop {
             detections: dets.clone(),
             measured_gains: current_measured_gains(&self.isp),
             illum_ratio: illum_ratio_from_events(on, off, spec::WIDTH * spec::HEIGHT),
+            load_factor: self.load_factor,
         };
         let new_params = self.policy.step(self.isp.params(), &obs);
         if self.closed_loop {
@@ -204,6 +213,15 @@ impl CognitiveLoop {
         // --- RGB path -------------------------------------------------------
         // The sensor sees the *scene* illumination (exposure errors and all);
         // the ISP must undo it using the parameters the NPU commanded.
+        // Quality reference first ((gamma-encoded) clean scene) so the
+        // borrowed ISP output can be scored without a copy and without the
+        // reference build leaking into the measured ISP time.
+        let clean_img =
+            ImageU8 { width: spec::WIDTH, height: spec::HEIGHT, data: clean_frame };
+        let clean_rgb = crate::isp::sensor::colorize(&clean_img);
+        let lut = GammaLut::power(self.cfg.isp.gamma);
+        let reference = lut.apply_rgb(&clean_rgb);
+
         let t_isp = Instant::now();
         if let Some(update) = self.bus.take() {
             let mut p = update.params;
@@ -219,23 +237,19 @@ impl CognitiveLoop {
         let scene_frame = ImageU8 {
             width: spec::WIDTH,
             height: spec::HEIGHT,
-            data: scene_at_illum(&clean_frame, self.sim.illum),
+            data: scene_at_illum(&clean_img.data, self.sim.illum),
         };
         let cap = self.sensor.capture(&scene_frame, &mut self.sensor_rng);
-        let (rgb_out, report) = self.isp.process(&cap.raw);
-        let isp_us = t_isp.elapsed().as_secs_f64() * 1e6;
+        // Zero-copy path: the output borrows the stage graph's buffer pool.
+        let (psnr, report, isp_us) = {
+            let (rgb_out, report) = self.isp.process_ref(&cap.raw);
+            let isp_us = t_isp.elapsed().as_secs_f64() * 1e6;
+            let psnr = psnr_u8(&rgb_out.interleaved(), &reference.interleaved());
+            (psnr, report, isp_us)
+        };
         self.metrics.isp_frames.inc();
         self.metrics.isp_latency.record_us(isp_us as u64);
-
-        // Quality: compare (gamma-encoded) clean reference vs ISP output.
-        let clean_rgb = crate::isp::sensor::colorize(&ImageU8 {
-            width: spec::WIDTH,
-            height: spec::HEIGHT,
-            data: clean_frame,
-        });
-        let lut = GammaLut::power(self.cfg.isp.gamma);
-        let reference = lut.apply_rgb(&clean_rgb);
-        let psnr = psnr_u8(&rgb_out.interleaved(), &reference.interleaved());
+        self.metrics.isp_stages.record(&report.stage_times);
 
         self.sync.push_window(wid, window_start + spec::WINDOW_US);
         self.sync.push_frame(wid, window_start + spec::WINDOW_US);

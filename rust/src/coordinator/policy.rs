@@ -12,11 +12,19 @@
 //! * **AWB gains**     — commanded into `Held` mode when detections exist
 //!   (objects anchor the scene; gray-world drifts when a bright object
 //!   dominates), released to `Auto` otherwise;
-//! * all outputs EMA-smoothed so the ISP never sees parameter steps.
+//! * **stage bypasses** — the topology half of the control surface
+//!   (§V–§VI reconfiguration): NLM is bypassed in bright, detection-free
+//!   scenes (high luma at unity exposure ⇒ no amplified sensor noise)
+//!   with hysteresis plus a post-detection hold-off so the mask never
+//!   flaps, and the CSC/sharpen stage is shed when the serving system is
+//!   configured oversubscribed (quality garnish traded for per-frame
+//!   latency under load);
+//! * all scalar outputs EMA-smoothed so the ISP never sees parameter steps.
 
 use crate::config::CoordinatorConfig;
 use crate::detect::Detection;
 use crate::isp::awb::AwbGains;
+use crate::isp::graph::{StageMask, STAGE_CSC, STAGE_NLM};
 use crate::isp::pipeline::{AwbMode, IspParams};
 
 /// Per-window observation assembled by the cognitive loop.
@@ -35,7 +43,34 @@ pub struct SceneObservation {
     /// Illumination ratio estimated from ON/OFF event imbalance: >1 means
     /// the scene got brighter during this window.
     pub illum_ratio: f64,
+    /// Serving load relative to admission capacity: 0 standalone, 1.0 at
+    /// capacity, above 1.0 oversubscribed (streams contending for
+    /// permits — latency should be bought back wherever possible). Derived
+    /// from configuration, not live gate state, so closed-loop outcomes
+    /// stay deterministic per (seed, config).
+    pub load_factor: f64,
 }
+
+/// NLM bypass engages only in a *genuinely* bright scene. The output luma
+/// alone cannot tell bright from dark-but-servo-converged (the exposure
+/// servo steers every scene's luma toward the target), so engagement also
+/// requires the commanded exposure gain — the pre-servo noise signal — to
+/// sit at/below unity: no analog amplification means no amplified sensor
+/// noise for NLM to remove. Hysteresis gaps on both signals keep the mask
+/// from flapping at a threshold.
+const NLM_BYPASS_LUMA_ON: f64 = 0.8; // × target_luma, engage at/above
+const NLM_BYPASS_LUMA_OFF: f64 = 0.6; // × target_luma, release at/below
+const NLM_BYPASS_EXPO_ON: f64 = 1.1; // engage only at/below this gain
+const NLM_BYPASS_EXPO_OFF: f64 = 1.6; // release at/above (noise regime)
+
+/// Windows NLM is held on after the last detection (an object flickering
+/// in and out of the detector must not toggle the topology every window).
+const DET_HOLDOFF_WINDOWS: u32 = 3;
+
+/// Serving load (1.0 = at capacity) strictly above which the CSC/sharpen
+/// stage is shed: running exactly at capacity is fine, oversubscription
+/// is not.
+const LOAD_SHED_ABOVE: f64 = 1.0;
 
 /// The policy's persistent state.
 #[derive(Debug)]
@@ -44,17 +79,33 @@ pub struct ControlPolicy {
     exposure: f64,
     nlm_h: f64,
     held_gains: AwbGains,
+    /// The configured stage set — the policy's bypasses only ever narrow
+    /// this; a stage disabled at config level is never re-enabled.
+    base_mask: StageMask,
+    /// NLM bypass hysteresis latch.
+    nlm_bypassed: bool,
+    /// Windows remaining in the post-detection NLM hold-on.
+    det_holdoff: u32,
     /// Updates emitted so far (sequence number for the bus).
     pub updates: u64,
 }
 
 impl ControlPolicy {
     pub fn new(cfg: &CoordinatorConfig) -> Self {
+        Self::with_mask(cfg, StageMask::all())
+    }
+
+    /// Construct with the configured base stage mask (fleet profiles and
+    /// `--isp-stages` land here via the cognitive loop).
+    pub fn with_mask(cfg: &CoordinatorConfig, base_mask: StageMask) -> Self {
         Self {
             cfg: cfg.clone(),
             exposure: 1.0,
             nlm_h: 10.0,
             held_gains: AwbGains::unity(),
+            base_mask,
+            nlm_bypassed: false,
+            det_holdoff: 0,
             updates: 0,
         }
     }
@@ -110,6 +161,45 @@ impl ControlPolicy {
             AwbMode::Held
         };
 
+        // --- stage bypass scheduling (topology reconfiguration, §V–§VI).
+        // NLM: bypass only in genuinely bright scenes — high output luma
+        // AND no exposure amplification (a servo-converged night scene
+        // also sits at target luma, but its exposure gain is high and its
+        // amplified noise is exactly what NLM exists for). The latch is
+        // hysteretic on both signals, and engagement waits one update so
+        // the pre-first-frame luma proxy can't trigger it.
+        if luma <= NLM_BYPASS_LUMA_OFF * self.cfg.target_luma
+            || self.exposure >= NLM_BYPASS_EXPO_OFF
+        {
+            self.nlm_bypassed = false;
+        } else if self.updates > 0
+            && obs.detections.is_empty()
+            && luma >= NLM_BYPASS_LUMA_ON * self.cfg.target_luma
+            && self.exposure <= NLM_BYPASS_EXPO_ON
+        {
+            self.nlm_bypassed = true;
+        }
+        // Detections hold NLM on (tracked objects keep full quality) with
+        // a hold-off tail, so an object flickering in and out of the
+        // detector cannot toggle the topology every window. The hold is
+        // checked before the decrement, so the tail really lasts
+        // `DET_HOLDOFF_WINDOWS` windows past the last detection.
+        let nlm_held_for_detections = !obs.detections.is_empty() || self.det_holdoff > 0;
+        if obs.detections.is_empty() {
+            self.det_holdoff = self.det_holdoff.saturating_sub(1);
+        } else {
+            self.det_holdoff = DET_HOLDOFF_WINDOWS;
+        }
+        let mut stages = self.base_mask;
+        if self.nlm_bypassed && !nlm_held_for_detections {
+            stages.set(STAGE_NLM, false);
+        }
+        // CSC/sharpen: pure garnish — first overboard when the serving
+        // system is oversubscribed.
+        if obs.load_factor > LOAD_SHED_ABOVE {
+            stages.set(STAGE_CSC, false);
+        }
+
         self.updates += 1;
         IspParams {
             awb_mode,
@@ -119,6 +209,7 @@ impl ControlPolicy {
             nlm_h: self.nlm_h,
             sharpen: current.sharpen,
             dpc_threshold: current.dpc_threshold,
+            stages,
         }
     }
 }
@@ -148,6 +239,15 @@ mod tests {
             detections: vec![],
             measured_gains: AwbGains::unity(),
             illum_ratio: 1.0,
+            load_factor: 0.0,
+        }
+    }
+
+    fn det() -> Detection {
+        Detection {
+            bbox: crate::detect::BBox::new(10.0, 10.0, 14.0, 9.0),
+            score: 0.9,
+            cls: 0,
         }
     }
 
@@ -220,13 +320,116 @@ mod tests {
         let mut o = obs(110.0);
         let params = p.step(&base_params(), &o);
         assert_eq!(params.awb_mode, AwbMode::Auto);
-        o.detections.push(Detection {
-            bbox: crate::detect::BBox::new(10.0, 10.0, 14.0, 9.0),
-            score: 0.9,
-            cls: 0,
-        });
+        o.detections.push(det());
         let params = p.step(&base_params(), &o);
         assert_eq!(params.awb_mode, AwbMode::Held);
+    }
+
+    #[test]
+    fn bright_empty_scene_bypasses_nlm_with_hysteresis() {
+        let cfg = CoordinatorConfig::default(); // target_luma 170
+        let mut p = ControlPolicy::new(&cfg);
+        let bright = obs(0.9 * cfg.target_luma);
+        // first update never engages (pre-first-frame luma proxy guard)
+        let params = p.step(&base_params(), &bright);
+        assert!(params.stages.enabled(STAGE_NLM), "first update must not bypass");
+        // second bright, unity-exposure update engages
+        let params = p.step(&base_params(), &bright);
+        assert!(!params.stages.enabled(STAGE_NLM), "bright scene must drop NLM");
+        // mid-band luma (between off and on thresholds): latch sticks
+        let params = p.step(&base_params(), &obs(0.75 * cfg.target_luma));
+        assert!(!params.stages.enabled(STAGE_NLM), "hysteresis must hold");
+        // dark scene: stage re-enabled
+        let params = p.step(&base_params(), &obs(0.3 * cfg.target_luma));
+        assert!(params.stages.enabled(STAGE_NLM), "dark scene needs NLM back");
+        // mid-band again: now it sticks *enabled*
+        let params = p.step(&base_params(), &obs(0.75 * cfg.target_luma));
+        assert!(params.stages.enabled(STAGE_NLM));
+    }
+
+    #[test]
+    fn pending_detections_veto_nlm_bypass() {
+        let cfg = CoordinatorConfig::default();
+        let mut p = ControlPolicy::new(&cfg);
+        let mut o = obs(0.95 * cfg.target_luma);
+        o.detections.push(det());
+        p.step(&base_params(), &o);
+        let params = p.step(&base_params(), &o);
+        assert!(
+            params.stages.enabled(STAGE_NLM),
+            "tracked objects keep full quality"
+        );
+    }
+
+    #[test]
+    fn detection_flicker_does_not_flap_the_mask() {
+        let cfg = CoordinatorConfig::default();
+        let mut p = ControlPolicy::new(&cfg);
+        let bright = obs(0.9 * cfg.target_luma);
+        p.step(&base_params(), &bright); // warmup (first update never engages)
+        let params = p.step(&base_params(), &bright);
+        assert!(!params.stages.enabled(STAGE_NLM), "bypass engaged");
+        // a detection appears: NLM comes back on
+        let mut with_det = bright.clone();
+        with_det.detections.push(det());
+        let params = p.step(&base_params(), &with_det);
+        assert!(params.stages.enabled(STAGE_NLM));
+        // the detection disappears: the hold-off keeps NLM on for the full
+        // tail — no per-window topology flapping while the object flickers
+        for w in 0..DET_HOLDOFF_WINDOWS {
+            let params = p.step(&base_params(), &bright);
+            assert!(params.stages.enabled(STAGE_NLM), "hold-off window {w} flapped");
+        }
+        // hold-off expired in a still-bright scene: bypass resumes
+        let params = p.step(&base_params(), &bright);
+        assert!(!params.stages.enabled(STAGE_NLM));
+    }
+
+    #[test]
+    fn converged_dark_scene_keeps_nlm_despite_on_target_luma() {
+        let cfg = CoordinatorConfig::default();
+        let mut p = ControlPolicy::new(&cfg);
+        // drive the exposure servo into the night regime
+        for _ in 0..10 {
+            p.step(&base_params(), &obs(30.0));
+        }
+        assert!(
+            p.exposure() > NLM_BYPASS_EXPO_OFF,
+            "precondition: night regime, exposure {}",
+            p.exposure()
+        );
+        // the servo has converged — output luma reads on-target — but the
+        // amplified sensor noise is exactly what NLM exists for
+        let params = p.step(&base_params(), &obs(cfg.target_luma));
+        assert!(
+            params.stages.enabled(STAGE_NLM),
+            "servo-converged night scene lost NLM"
+        );
+    }
+
+    #[test]
+    fn load_shedding_drops_csc_stage() {
+        let mut p = ControlPolicy::new(&CoordinatorConfig::default());
+        let mut o = obs(110.0);
+        o.load_factor = 2.0; // oversubscribed 2:1
+        let params = p.step(&base_params(), &o);
+        assert!(!params.stages.enabled(STAGE_CSC), "oversubscription sheds sharpen");
+        o.load_factor = 1.0; // exactly at capacity: no shedding
+        let params = p.step(&base_params(), &o);
+        assert!(params.stages.enabled(STAGE_CSC), "at-capacity must keep sharpen");
+    }
+
+    #[test]
+    fn policy_never_widens_the_base_mask() {
+        let base = StageMask::all().without("gamma").unwrap();
+        let mut p = ControlPolicy::with_mask(&CoordinatorConfig::default(), base);
+        for luma in [30.0, 110.0, 200.0] {
+            let params = p.step(&base_params(), &obs(luma));
+            assert!(
+                !params.stages.enabled_name("gamma"),
+                "config-disabled stage re-enabled at luma {luma}"
+            );
+        }
     }
 
     #[test]

@@ -233,14 +233,33 @@ pub fn run_fleet(cfg: &SystemConfig) -> Result<FleetReport> {
 /// One stream's worker: a full cognitive loop driven by the stream's
 /// illumination script, inferring through the shared client.
 fn run_stream(
-    cfg: SystemConfig,
+    mut cfg: SystemConfig,
     prof: StreamProfile,
     client: NpuClient,
     barrier: Option<Arc<RoundBarrier>>,
     gate: Option<Arc<AdmissionGate>>,
     abort: Arc<AtomicBool>,
 ) -> Result<StreamSummary> {
+    // Scenario-specific ISP topology: the profile's default stage mask
+    // intersected with whatever the config/CLI already narrowed it to
+    // (e.g. day streams ship without NLM; night streams keep it).
+    cfg.isp.stages = cfg
+        .isp
+        .stages
+        .intersect(prof.kind.default_stage_mask())
+        .sanitized();
     let mut l = CognitiveLoop::with_shared(&cfg, prof.seed, client);
+    // Load-shedding signal for the control policy: the configured
+    // oversubscription ratio, NOT a live gate sample. Admission set below
+    // the stream count means sustained permit contention by construction;
+    // deriving the signal from config keeps it identical across runs, so
+    // the fleet digest stays scheduling-independent (a racy gate snapshot
+    // here would leak thread interleaving into psnr/luma and break
+    // `same_seed_fleet_digest_is_bit_identical`).
+    if cfg.fleet.max_inflight > 0 {
+        l.load_factor =
+            (cfg.fleet.streams as f64 / cfg.fleet.max_inflight as f64).min(4.0);
+    }
     let script = prof.script(cfg.fleet.windows_per_stream);
     let mut outcomes = Vec::with_capacity(script.len());
     let mut failure: Option<anyhow::Error> = None;
@@ -256,6 +275,7 @@ fn run_stream(
         }
         let _permit = gate.as_ref().map(|g| g.acquire());
         if let Some(g) = &gate {
+            // measured-only gauge (excluded from the determinism digest)
             l.metrics.queue_depth.set((cfg.fleet.max_inflight - g.available()) as u64);
         }
         // A panicking step must not unwind past the rendezvous protocol;

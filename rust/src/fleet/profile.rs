@@ -10,6 +10,7 @@
 use anyhow::{bail, Result};
 
 use crate::config::FleetConfig;
+use crate::isp::graph::StageMask;
 use crate::util::SplitMix64;
 
 /// Illumination script families (the `scenario_mix` vocabulary minus
@@ -65,6 +66,25 @@ impl ScenarioKind {
             }
         }
         bail!("unknown scenario kind {name:?}");
+    }
+
+    /// The default ISP stage mask for streams running this scenario —
+    /// the static half of the §V–§VI reconfiguration story. Night/dusk/
+    /// tunnel/flicker keep the full graph (low light ⇒ NLM earns its
+    /// cycles; transitions need every correction); steady daylight ships
+    /// without NLM, whose weights collapse to near-identity there. The
+    /// runtime intersects this with the configured mask, and the control
+    /// policy can only narrow it further.
+    pub fn default_stage_mask(&self) -> StageMask {
+        match self {
+            ScenarioKind::Day => StageMask::all()
+                .without("nlm")
+                .expect("nlm is a known stage"),
+            ScenarioKind::Night
+            | ScenarioKind::Dusk
+            | ScenarioKind::Tunnel
+            | ScenarioKind::Flicker => StageMask::all(),
+        }
     }
 
     /// The illumination script (one value per window).
@@ -217,6 +237,15 @@ mod tests {
         for w in s.windows(2) {
             assert!(w[1] < w[0]);
         }
+    }
+
+    #[test]
+    fn profile_masks_are_valid_and_day_skips_nlm() {
+        for k in MIX_CYCLE {
+            k.default_stage_mask().validate().unwrap_or_else(|e| panic!("{k:?}: {e}"));
+        }
+        assert!(!ScenarioKind::Day.default_stage_mask().enabled_name("nlm"));
+        assert!(ScenarioKind::Night.default_stage_mask().enabled_name("nlm"));
     }
 
     #[test]

@@ -14,6 +14,7 @@
 
 use crate::config::FleetConfig;
 use crate::coordinator::WindowOutcome;
+use crate::isp::graph::STAGE_NAMES;
 use crate::jsonlite::Json;
 use crate::metrics::SystemMetrics;
 use crate::testkit::bench::Table;
@@ -215,6 +216,46 @@ impl FleetReport {
         }
     }
 
+    /// Per-stage ISP timing aggregated across every stream's metrics
+    /// snapshot: `(stage, processed frames, mean µs/frame, bypassed
+    /// frames)` in canonical stage order. Frames are summed; means are
+    /// frame-weighted.
+    pub fn isp_stage_rows(&self) -> Vec<(String, u64, f64, u64)> {
+        STAGE_NAMES
+            .iter()
+            .map(|&name| {
+                let mut frames = 0u64;
+                let mut sum_us = 0.0f64;
+                let mut bypassed = 0u64;
+                for s in &self.streams {
+                    let Some(stage) = s
+                        .metrics
+                        .get(crate::metrics::ISP_STAGES_KEY)
+                        .and_then(|j| j.get(name))
+                    else {
+                        continue;
+                    };
+                    let f = stage
+                        .get(crate::metrics::STAGE_KEY_FRAMES)
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0);
+                    frames += f as u64;
+                    sum_us += f
+                        * stage
+                            .get(crate::metrics::STAGE_KEY_MEAN_US)
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0);
+                    bypassed += stage
+                        .get(crate::metrics::STAGE_KEY_BYPASSED)
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0) as u64;
+                }
+                let mean = if frames > 0 { sum_us / frames as f64 } else { 0.0 };
+                (name.to_string(), frames, mean, bypassed)
+            })
+            .collect()
+    }
+
     /// Order-independent-by-construction fleet digest: streams are folded
     /// in stream-id order, each contributing its own deterministic digest.
     pub fn digest(&self) -> u64 {
@@ -257,6 +298,24 @@ impl FleetReport {
                     ("service_p50_us", Json::num(p50)),
                     ("service_p99_us", Json::num(p99)),
                     ("digest", Json::str(&self.digest_hex())),
+                    (
+                        "isp_stages",
+                        Json::obj(
+                            self.isp_stage_rows()
+                                .iter()
+                                .map(|(name, frames, mean, bypassed)| {
+                                    (
+                                        name.as_str(),
+                                        Json::obj(vec![
+                                            ("frames", Json::num(*frames as f64)),
+                                            ("mean_us", Json::num(*mean)),
+                                            ("bypassed", Json::num(*bypassed as f64)),
+                                        ]),
+                                    )
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ]),
             ),
             (
@@ -292,9 +351,20 @@ impl FleetReport {
                 format!("{p99:.0}"),
             ]);
         }
+        let mut stage_table =
+            Table::new(&["isp stage", "frames", "mean_us", "bypassed"]);
+        for (name, frames, mean, bypassed) in self.isp_stage_rows() {
+            stage_table.row(&[
+                name,
+                frames.to_string(),
+                format!("{mean:.1}"),
+                bypassed.to_string(),
+            ]);
+        }
         format!(
             "{}\nfleet: {} streams x {} windows in {:.2}s = {:.1} windows/s\n\
-             occupancy {:.2} | service p50 {:.0}µs p99 {:.0}µs | digest {}\n",
+             occupancy {:.2} | service p50 {:.0}µs p99 {:.0}µs | digest {}\n\
+             \nper-stage ISP timing (frame-weighted means across streams):\n{}",
             table.render(),
             self.streams.len(),
             self.cfg.windows_per_stream,
@@ -304,6 +374,7 @@ impl FleetReport {
             self.service_pct_us(50.0),
             self.service_pct_us(99.0),
             self.digest_hex(),
+            stage_table.render(),
         )
     }
 
@@ -420,5 +491,45 @@ mod tests {
         let text = r.render();
         assert!(text.contains("occupancy"));
         assert!(text.contains(&r.digest_hex()));
+        assert!(text.contains("per-stage ISP timing"));
+    }
+
+    #[test]
+    fn isp_stage_rows_weight_means_by_frames() {
+        use crate::isp::graph::{StageSample, STAGE_NAMES};
+        let lane = |us: f64, nlm_bypassed: bool| -> Vec<StageSample> {
+            STAGE_NAMES
+                .iter()
+                .enumerate()
+                .map(|(index, &name)| {
+                    let bypassed = nlm_bypassed && name == "nlm";
+                    StageSample { name, index, us: if bypassed { 0.0 } else { us }, bypassed }
+                })
+                .collect()
+        };
+        // stream 0: one frame at 10µs/stage; stream 1: three frames at
+        // 50µs/stage with NLM bypassed throughout
+        let m0 = SystemMetrics::new();
+        m0.isp_stages.record(&lane(10.0, false));
+        let m1 = SystemMetrics::new();
+        for _ in 0..3 {
+            m1.isp_stages.record(&lane(50.0, true));
+        }
+        let s0 = StreamSummary::from_outcomes(&prof(0), &[outcome(0, 10, 30.0, 1)], &m0);
+        let s1 = StreamSummary::from_outcomes(&prof(1), &[outcome(0, 20, 28.0, 1)], &m1);
+        let r = FleetReport::assemble(FleetConfig::default(), vec![s0, s1], 1.0);
+        let rows = r.isp_stage_rows();
+        let dpc = rows.iter().find(|(n, ..)| n == "dpc").unwrap();
+        assert_eq!(dpc.1, 4, "1 + 3 dpc frames");
+        assert!((dpc.2 - 40.0).abs() < 1e-9, "frame-weighted mean, got {}", dpc.2);
+        let nlm = rows.iter().find(|(n, ..)| n == "nlm").unwrap();
+        assert_eq!((nlm.1, nlm.3), (1, 3), "nlm ran once, bypassed thrice");
+        // and the aggregate JSON carries the same numbers
+        let j = r.to_json();
+        let agg = j.get("aggregate").unwrap().get("isp_stages").unwrap();
+        assert_eq!(
+            agg.get("nlm").unwrap().get("bypassed").unwrap().as_f64(),
+            Some(3.0)
+        );
     }
 }

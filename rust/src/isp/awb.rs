@@ -119,21 +119,28 @@ impl AwbEstimator {
     }
 }
 
-/// Apply channel gains to a Bayer frame in Q4.12 (the HDL datapath).
-pub fn apply_gains_bayer(raw: &ImageU8, gains: &AwbGains) -> ImageU8 {
+/// Apply channel gains to a Bayer frame in place, Q4.12 (the HDL
+/// datapath is pointwise, so the stage graph runs it without a second
+/// buffer). Bit-identical to [`apply_gains_bayer`].
+pub fn apply_gains_bayer_inplace(raw: &mut ImageU8, gains: &AwbGains) {
     let (qr, qg, qb) = gains.to_q();
-    let mut out = ImageU8::new(raw.width, raw.height);
     for y in 0..raw.height {
         for x in 0..raw.width {
-            let v = raw.get(x, y);
             let q = match bayer_color(x, y) {
                 BayerColor::Red => qr,
                 BayerColor::GreenR | BayerColor::GreenB => qg,
                 BayerColor::Blue => qb,
             };
-            out.set(x, y, gain_u8(v, q));
+            let v = raw.get(x, y);
+            raw.set(x, y, gain_u8(v, q));
         }
     }
+}
+
+/// Apply channel gains to a Bayer frame in Q4.12 (the HDL datapath).
+pub fn apply_gains_bayer(raw: &ImageU8, gains: &AwbGains) -> ImageU8 {
+    let mut out = raw.clone();
+    apply_gains_bayer_inplace(&mut out, gains);
     out
 }
 

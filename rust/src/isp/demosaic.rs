@@ -7,7 +7,7 @@
 //! implementation uses (line buffers + shift-add, no multipliers beyond
 //! small constants).
 
-use super::linebuf::stream_frame;
+use super::linebuf::for_each_window;
 use super::sensor::{bayer_color, BayerColor};
 use crate::util::{ImageU8, PlanarRgb};
 
@@ -90,20 +90,30 @@ pub fn demosaic_window(w: &[[u8; 5]; 5], cx: usize, cy: usize) -> (u8, u8, u8) {
     }
 }
 
-/// Streaming Malvar–He–Cutler demosaic of a full RGGB frame.
-pub fn demosaic_frame(raw: &ImageU8) -> PlanarRgb {
-    let mut rgb = PlanarRgb::new(raw.width, raw.height);
-    // stream_frame maps u8->u8; run it for the window traversal and write
-    // the RGB triplet through the closure's captured buffer instead.
+/// Streaming Malvar–He–Cutler demosaic into a caller-owned RGB image
+/// (planes resized in place, reusing their allocations).
+pub fn demosaic_frame_into(raw: &ImageU8, rgb: &mut PlanarRgb) {
+    let n = raw.width * raw.height;
+    rgb.width = raw.width;
+    rgb.height = raw.height;
+    // every plane element is written below — same-size resizes are no-ops
+    rgb.r.resize(n, 0);
+    rgb.g.resize(n, 0);
+    rgb.b.resize(n, 0);
     let width = raw.width;
-    stream_frame::<5>(&raw.data, raw.width, raw.height, |w, cx, cy| {
+    for_each_window::<5>(&raw.data, raw.width, raw.height, |w, cx, cy| {
         let (r, g, b) = demosaic_window(w, cx, cy);
         let i = cy * width + cx;
         rgb.r[i] = r;
         rgb.g[i] = g;
         rgb.b[i] = b;
-        0
     });
+}
+
+/// Streaming Malvar–He–Cutler demosaic of a full RGGB frame.
+pub fn demosaic_frame(raw: &ImageU8) -> PlanarRgb {
+    let mut rgb = PlanarRgb::new(0, 0);
+    demosaic_frame_into(raw, &mut rgb);
     rgb
 }
 

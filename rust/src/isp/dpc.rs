@@ -8,7 +8,7 @@
 //! gradient). Correction replaces it with the median of the ring — the
 //! standard HDL-friendly estimator (sorting network on 8 values).
 
-use super::linebuf::stream_frame;
+use super::linebuf::stream_frame_into;
 use crate::util::ImageU8;
 
 /// DPC configuration.
@@ -55,11 +55,18 @@ pub fn is_defective(win: &[[u8; 5]; 5], threshold: i32) -> bool {
     above || below
 }
 
-/// Streaming DPC over a full Bayer frame. Returns the corrected frame and
-/// the flagged positions.
-pub fn dpc_frame(raw: &ImageU8, cfg: &DpcConfig) -> (ImageU8, Vec<(usize, usize)>) {
-    let mut flagged = Vec::new();
-    let data = stream_frame::<5>(&raw.data, raw.width, raw.height, |win, cx, cy| {
+/// Streaming DPC writing into caller-owned buffers (the stage-graph hot
+/// path: `out`'s plane and `flagged` are reused frame to frame).
+pub fn dpc_frame_into(
+    raw: &ImageU8,
+    cfg: &DpcConfig,
+    out: &mut ImageU8,
+    flagged: &mut Vec<(usize, usize)>,
+) {
+    flagged.clear();
+    out.width = raw.width;
+    out.height = raw.height;
+    stream_frame_into::<5>(&raw.data, raw.width, raw.height, &mut out.data, |win, cx, cy| {
         if is_defective(win, cfg.threshold) {
             flagged.push((cx, cy));
             if cfg.detect_only {
@@ -71,10 +78,15 @@ pub fn dpc_frame(raw: &ImageU8, cfg: &DpcConfig) -> (ImageU8, Vec<(usize, usize)
             win[2][2]
         }
     });
-    (
-        ImageU8 { width: raw.width, height: raw.height, data },
-        flagged,
-    )
+}
+
+/// Streaming DPC over a full Bayer frame. Returns the corrected frame and
+/// the flagged positions.
+pub fn dpc_frame(raw: &ImageU8, cfg: &DpcConfig) -> (ImageU8, Vec<(usize, usize)>) {
+    let mut out = ImageU8 { width: 0, height: 0, data: Vec::new() };
+    let mut flagged = Vec::new();
+    dpc_frame_into(raw, cfg, &mut out, &mut flagged);
+    (out, flagged)
 }
 
 #[cfg(test)]

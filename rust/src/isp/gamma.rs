@@ -56,12 +56,18 @@ impl GammaLut {
     }
 
     pub fn apply_rgb(&self, rgb: &PlanarRgb) -> PlanarRgb {
-        PlanarRgb {
-            width: rgb.width,
-            height: rgb.height,
-            r: rgb.r.iter().map(|&v| self.map(v)).collect(),
-            g: rgb.g.iter().map(|&v| self.map(v)).collect(),
-            b: rgb.b.iter().map(|&v| self.map(v)).collect(),
+        let mut out = rgb.clone();
+        self.apply_rgb_inplace(&mut out);
+        out
+    }
+
+    /// Map all three planes through the LUT in place (the lookup is
+    /// pointwise, so the stage graph runs it without a second buffer).
+    pub fn apply_rgb_inplace(&self, rgb: &mut PlanarRgb) {
+        for plane in [&mut rgb.r, &mut rgb.g, &mut rgb.b] {
+            for v in plane.iter_mut() {
+                *v = self.map(*v);
+            }
         }
     }
 }

@@ -1,0 +1,761 @@
+//! Reconfigurable ISP stage graph (paper §V–§VI).
+//!
+//! The paper's headline is a *dynamically reconfigurable* Cognitive ISP:
+//! which processing blocks are active is itself a control surface the NPU
+//! commands per scene, not a compile-time constant. This module makes the
+//! pipeline topology first-class:
+//!
+//! * [`IspStage`] — one trait impl per hardware block (DPC, AWB, demosaic,
+//!   NLM, gamma, CSC/sharpen), each wrapping the exact kernels in its
+//!   sibling module;
+//! * [`StageGraph`] — executes the enabled stages over a reusable
+//!   **ping-pong buffer pool** (two Bayer planes + two RGB images, resized
+//!   once and reused every frame — no full-frame allocation on the hot
+//!   path) and records per-stage wall time into the [`FrameReport`];
+//! * [`StageMask`] — the enable/bypass word, carried in [`IspParams`] and
+//!   applied atomically at frame boundaries like every other §VI
+//!   parameter-bus write. Demosaic is structural (Bayer→RGB domain change)
+//!   and cannot be bypassed; the mask is sanitized accordingly.
+//!
+//! [`super::pipeline::IspPipeline`] remains a thin façade over the graph,
+//! so every existing call site keeps its API.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::awb::{apply_gains_bayer_inplace, AwbEstimator, AwbGains};
+use super::demosaic::demosaic_frame_into;
+use super::dpc::{dpc_frame_into, DpcConfig};
+use super::gamma::GammaLut;
+use super::nlm::{nlm_rgb_shared_into, NlmConfig};
+use super::pipeline::{luma_mean, AwbMode, FrameReport, IspParams};
+use super::ycbcr::{csc_sharpen_into, CscScratch};
+use crate::config::IspConfig;
+use crate::util::{ImageU8, PlanarRgb};
+
+/// Number of stages in the canonical graph.
+pub const STAGE_COUNT: usize = 6;
+
+/// Canonical stage names, in execution order (the `--isp-stages` and
+/// metrics vocabulary; `axis::isp_stage_latencies` models the same six).
+pub const STAGE_NAMES: [&str; STAGE_COUNT] =
+    ["dpc", "awb", "demosaic", "nlm", "gamma", "csc"];
+
+/// Stage indices (bit positions in [`StageMask`]).
+pub const STAGE_DPC: usize = 0;
+pub const STAGE_AWB: usize = 1;
+pub const STAGE_DEMOSAIC: usize = 2;
+pub const STAGE_NLM: usize = 3;
+pub const STAGE_GAMMA: usize = 4;
+pub const STAGE_CSC: usize = 5;
+
+/// Stages that cannot be bypassed (demosaic changes the data domain).
+const REQUIRED_BITS: u8 = 1 << STAGE_DEMOSAIC;
+
+/// Enable/bypass word over the canonical stages — the topology half of the
+/// §VI control surface. Rides in [`IspParams`], so a bus write swaps the
+/// active graph atomically at the next frame boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageMask(u8);
+
+impl Default for StageMask {
+    fn default() -> Self {
+        Self::all()
+    }
+}
+
+impl StageMask {
+    /// Every stage enabled (the seed pipeline's fixed topology).
+    pub fn all() -> Self {
+        StageMask((1u8 << STAGE_COUNT) - 1)
+    }
+
+    /// Index of a stage name in the canonical order.
+    pub fn index_of(name: &str) -> Option<usize> {
+        STAGE_NAMES.iter().position(|n| *n == name)
+    }
+
+    #[inline]
+    pub fn enabled(&self, index: usize) -> bool {
+        index < STAGE_COUNT && self.0 & (1 << index) != 0
+    }
+
+    pub fn enabled_name(&self, name: &str) -> bool {
+        Self::index_of(name).is_some_and(|i| self.enabled(i))
+    }
+
+    pub fn set(&mut self, index: usize, on: bool) {
+        if index < STAGE_COUNT {
+            if on {
+                self.0 |= 1 << index;
+            } else {
+                self.0 &= !(1 << index);
+            }
+        }
+    }
+
+    /// This mask with `name` disabled (errors on unknown names).
+    pub fn without(mut self, name: &str) -> Result<Self> {
+        match Self::index_of(name) {
+            Some(i) => {
+                self.set(i, false);
+                Ok(self)
+            }
+            None => bail!("unknown ISP stage {name:?}; known: {}", STAGE_NAMES.join(", ")),
+        }
+    }
+
+    /// Stages enabled in both masks.
+    pub fn intersect(self, other: Self) -> Self {
+        StageMask(self.0 & other.0)
+    }
+
+    /// Force the non-bypassable stages on (the graph applies this before
+    /// every frame so a bad mask can degrade quality but never topology).
+    pub fn sanitized(self) -> Self {
+        StageMask(self.0 | REQUIRED_BITS)
+    }
+
+    /// A valid mask keeps every structural stage enabled.
+    pub fn validate(&self) -> Result<()> {
+        if self.0 & REQUIRED_BITS != REQUIRED_BITS {
+            bail!("ISP stage mask must keep \"demosaic\" enabled (structural stage)");
+        }
+        Ok(())
+    }
+
+    /// Parse a mask spec: `"all"`, a comma-separated list of the stages to
+    /// enable (`"dpc,awb,demosaic,gamma"`), or `-stage` terms subtracted
+    /// from the full graph (`"-nlm,-csc"`, equivalently `"all,-nlm,-csc"`).
+    /// Mixing add and subtract forms is rejected.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "all" {
+            return Ok(Self::all());
+        }
+        let mut terms: Vec<&str> =
+            spec.split(',').map(str::trim).filter(|t| !t.is_empty()).collect();
+        // a leading "all" is sugar for the subtract form
+        let explicit_all = terms.first() == Some(&"all");
+        if explicit_all {
+            terms.remove(0);
+        }
+        if terms.is_empty() {
+            return Ok(Self::all());
+        }
+        let subtract = explicit_all || terms[0].starts_with('-');
+        let mut mask = if subtract { Self::all() } else { StageMask(0) };
+        for term in terms {
+            match (subtract, term.strip_prefix('-')) {
+                (true, Some(name)) => mask = mask.without(name)?,
+                (false, None) => match Self::index_of(term) {
+                    Some(i) => mask.set(i, true),
+                    None => bail!(
+                        "unknown ISP stage {term:?}; known: {}",
+                        STAGE_NAMES.join(", ")
+                    ),
+                },
+                _ => bail!("ISP stage spec {spec:?} mixes add and subtract terms"),
+            }
+        }
+        mask.validate()?;
+        Ok(mask)
+    }
+
+    /// Enabled stage names, comma-separated (the inverse of [`parse`]).
+    ///
+    /// [`parse`]: StageMask::parse
+    pub fn to_csv(&self) -> String {
+        STAGE_NAMES
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.enabled(*i))
+            .map(|(_, n)| *n)
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Number of enabled stages.
+    pub fn count(&self) -> usize {
+        self.0.count_ones() as usize
+    }
+}
+
+/// One stage's contribution to the per-frame report.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageReport {
+    /// Stage-specific event count (DPC: corrected pixels; others 0).
+    pub corrections: usize,
+}
+
+/// Wall-time sample for one stage of one frame (feeds
+/// `SystemMetrics::isp_stages` and the E7 breakdown).
+#[derive(Debug, Clone, Copy)]
+pub struct StageSample {
+    pub name: &'static str,
+    /// Canonical stage index (bit position in the mask).
+    pub index: usize,
+    pub us: f64,
+    pub bypassed: bool,
+}
+
+/// Reusable frame storage: ping-pong pairs for each data domain. Buffers
+/// are resized on the first frame (or a resolution change) and reused —
+/// the steady-state hot path performs zero full-frame allocations.
+#[derive(Debug, Default)]
+struct BufferPool {
+    raw: [ImageU8; 2],
+    rgb: [PlanarRgb; 2],
+    raw_cur: usize,
+    rgb_cur: usize,
+}
+
+impl BufferPool {
+    /// Reset the ping-pong cursors for a new frame.
+    fn reset(&mut self) {
+        self.raw_cur = 0;
+        self.rgb_cur = 0;
+    }
+
+    /// Copy a frame into the current Bayer buffer, reusing its allocation
+    /// (only needed when an in-place stage is the first raw writer).
+    fn load_raw(&mut self, src: &ImageU8) {
+        let dst = &mut self.raw[self.raw_cur];
+        dst.width = src.width;
+        dst.height = src.height;
+        dst.data.clear();
+        dst.data.extend_from_slice(&src.data);
+    }
+}
+
+/// The mutable context a stage operates on: the input frame, the buffer
+/// pool, and the per-frame observations stages publish for the
+/// report/policy. Everything parameter-shaped reaches stages through
+/// [`IspStage::param_update`] at the frame boundary — deliberately NOT
+/// through this context, so no stage can sidestep the shadow-register
+/// semantics mid-frame.
+pub struct FrameCtx<'a> {
+    /// The caller's pristine input frame. The first Bayer-domain *writer*
+    /// consumes it: windowed stages read it directly (no ingest copy);
+    /// an in-place stage materializes the one unavoidable copy first.
+    src: Option<&'a ImageU8>,
+    pool: &'a mut BufferPool,
+    /// AWB: the gains actually applied this frame.
+    pub applied_gains: AwbGains,
+    /// AWB: the estimator's EMA gains after this frame's measurement.
+    pub auto_gains: AwbGains,
+}
+
+impl FrameCtx<'_> {
+    /// Current Bayer plane.
+    pub fn raw(&self) -> &ImageU8 {
+        self.src.unwrap_or(&self.pool.raw[self.pool.raw_cur])
+    }
+
+    /// Current Bayer plane, mutable (for in-place pointwise stages) —
+    /// materializes the input copy if nothing has written raw yet.
+    pub fn raw_mut(&mut self) -> &mut ImageU8 {
+        if let Some(s) = self.src.take() {
+            self.pool.load_raw(s);
+        }
+        &mut self.pool.raw[self.pool.raw_cur]
+    }
+
+    /// (current, spare) Bayer planes for windowed stages; call
+    /// [`FrameCtx::swap_raw`] after filling the spare. Before any raw
+    /// write, "current" is the caller's input itself.
+    pub fn raw_pair(&mut self) -> (&ImageU8, &mut ImageU8) {
+        if let Some(s) = self.src {
+            return (s, &mut self.pool.raw[self.pool.raw_cur]);
+        }
+        let (a, b) = self.pool.raw.split_at_mut(1);
+        if self.pool.raw_cur == 0 {
+            (&a[0], &mut b[0])
+        } else {
+            (&b[0], &mut a[0])
+        }
+    }
+
+    pub fn swap_raw(&mut self) {
+        // writing "into the pair" while the input was still current lands
+        // in the current pool slot — consume the input, keep the cursor
+        if self.src.take().is_none() {
+            self.pool.raw_cur ^= 1;
+        }
+    }
+
+    /// Current RGB image.
+    pub fn rgb(&self) -> &PlanarRgb {
+        &self.pool.rgb[self.pool.rgb_cur]
+    }
+
+    /// Current RGB image, mutable (for in-place pointwise stages).
+    pub fn rgb_mut(&mut self) -> &mut PlanarRgb {
+        &mut self.pool.rgb[self.pool.rgb_cur]
+    }
+
+    /// (current, spare) RGB images for windowed stages; call
+    /// [`FrameCtx::swap_rgb`] after filling the spare.
+    pub fn rgb_pair(&mut self) -> (&PlanarRgb, &mut PlanarRgb) {
+        let (a, b) = self.pool.rgb.split_at_mut(1);
+        if self.pool.rgb_cur == 0 {
+            (&a[0], &mut b[0])
+        } else {
+            (&b[0], &mut a[0])
+        }
+    }
+
+    pub fn swap_rgb(&mut self) {
+        self.pool.rgb_cur ^= 1;
+    }
+
+    /// The domain crossing: current Bayer plane + the RGB image the
+    /// demosaic stage fills.
+    pub fn raw_and_rgb_mut(&mut self) -> (&ImageU8, &mut PlanarRgb) {
+        match self.src {
+            Some(s) => (s, &mut self.pool.rgb[self.pool.rgb_cur]),
+            None => (
+                &self.pool.raw[self.pool.raw_cur],
+                &mut self.pool.rgb[self.pool.rgb_cur],
+            ),
+        }
+    }
+}
+
+/// One reconfigurable processing block of the Cognitive ISP.
+pub trait IspStage: Send {
+    /// Canonical name (must match its [`STAGE_NAMES`] slot).
+    fn name(&self) -> &'static str;
+
+    /// `false` for structural stages the mask cannot disable.
+    fn bypassable(&self) -> bool {
+        true
+    }
+
+    /// Frame-boundary parameter application (§VI): snapshot what this
+    /// stage needs from the current [`IspParams`] before the frame starts.
+    fn param_update(&mut self, _params: &IspParams, _cfg: &IspConfig) {}
+
+    /// Process one frame's worth of data in the context.
+    fn process(&mut self, ctx: &mut FrameCtx<'_>) -> StageReport;
+}
+
+// ---------------------------------------------------------------------------
+// Stage implementations (each wraps its sibling kernel module verbatim —
+// the graph with a full mask is bit-identical to the seed pipeline).
+// ---------------------------------------------------------------------------
+
+/// Dynamic defective pixel correction (wraps [`super::dpc`]).
+struct DpcStage {
+    threshold: i32,
+    out_flagged: Vec<(usize, usize)>,
+}
+
+impl IspStage for DpcStage {
+    fn name(&self) -> &'static str {
+        "dpc"
+    }
+
+    fn param_update(&mut self, params: &IspParams, _cfg: &IspConfig) {
+        self.threshold = params.dpc_threshold;
+    }
+
+    fn process(&mut self, ctx: &mut FrameCtx<'_>) -> StageReport {
+        let cfg = DpcConfig { threshold: self.threshold, detect_only: false };
+        let (src, dst) = ctx.raw_pair();
+        dpc_frame_into(src, &cfg, dst, &mut self.out_flagged);
+        ctx.swap_raw();
+        StageReport { corrections: self.out_flagged.len() }
+    }
+}
+
+/// Auto white balance: measurement state machine + Q4.12 gain applier
+/// (wraps [`super::awb`]). The estimator tracks EVERY processed frame —
+/// `Held` mode only changes which gains are *applied*, so the NPU's
+/// observation of the measured estimate stays fresh.
+struct AwbStage {
+    estimator: AwbEstimator,
+    auto_gains: AwbGains,
+    mode: AwbMode,
+    commanded: AwbGains,
+}
+
+impl IspStage for AwbStage {
+    fn name(&self) -> &'static str {
+        "awb"
+    }
+
+    fn param_update(&mut self, params: &IspParams, _cfg: &IspConfig) {
+        self.mode = params.awb_mode;
+        self.commanded = params.awb_gains;
+    }
+
+    fn process(&mut self, ctx: &mut FrameCtx<'_>) -> StageReport {
+        self.estimator.reset();
+        self.estimator.measure_frame(ctx.raw());
+        if let Some(g) = self.estimator.gains() {
+            // EMA smoothing (state machine damping)
+            let a = 0.5;
+            self.auto_gains = AwbGains {
+                r: (1.0 - a) * self.auto_gains.r + a * g.r,
+                g: 1.0,
+                b: (1.0 - a) * self.auto_gains.b + a * g.b,
+            };
+        }
+        let gains = match self.mode {
+            AwbMode::Auto => self.auto_gains,
+            AwbMode::Held => self.commanded,
+        };
+        apply_gains_bayer_inplace(ctx.raw_mut(), &gains);
+        ctx.applied_gains = gains;
+        ctx.auto_gains = self.auto_gains;
+        StageReport::default()
+    }
+}
+
+/// Malvar–He–Cutler demosaic — the Bayer→RGB domain crossing (wraps
+/// [`super::demosaic`]). Structural: cannot be bypassed.
+struct DemosaicStage;
+
+impl IspStage for DemosaicStage {
+    fn name(&self) -> &'static str {
+        "demosaic"
+    }
+
+    fn bypassable(&self) -> bool {
+        false
+    }
+
+    fn process(&mut self, ctx: &mut FrameCtx<'_>) -> StageReport {
+        let (raw, rgb) = ctx.raw_and_rgb_mut();
+        demosaic_frame_into(raw, rgb);
+        StageReport::default()
+    }
+}
+
+/// Luma-shared-weight NLM denoise (wraps [`super::nlm`]).
+struct NlmStage {
+    h: f64,
+    search: usize,
+    luma: Vec<u8>,
+}
+
+impl IspStage for NlmStage {
+    fn name(&self) -> &'static str {
+        "nlm"
+    }
+
+    fn param_update(&mut self, params: &IspParams, cfg: &IspConfig) {
+        self.h = params.nlm_h;
+        self.search = cfg.nlm_search;
+    }
+
+    fn process(&mut self, ctx: &mut FrameCtx<'_>) -> StageReport {
+        if self.h <= 0.0 {
+            // strength 0 is a parameter-level skip (seed semantics),
+            // distinct from a mask-level bypass
+            return StageReport::default();
+        }
+        let cfg = NlmConfig { h: self.h, search: self.search };
+        let (src, dst) = ctx.rgb_pair();
+        nlm_rgb_shared_into(src, &cfg, dst, &mut self.luma);
+        ctx.swap_rgb();
+        StageReport::default()
+    }
+}
+
+/// Gamma LUT with folded digital exposure (wraps [`super::gamma`]).
+struct GammaStage {
+    lut: GammaLut,
+    key: (f64, f64),
+}
+
+impl IspStage for GammaStage {
+    fn name(&self) -> &'static str {
+        "gamma"
+    }
+
+    fn param_update(&mut self, params: &IspParams, _cfg: &IspConfig) {
+        let key = (params.gamma, params.exposure_gain);
+        if key != self.key {
+            self.lut = GammaLut::power_with_gain(key.0, key.1);
+            self.key = key;
+        }
+    }
+
+    fn process(&mut self, ctx: &mut FrameCtx<'_>) -> StageReport {
+        self.lut.apply_rgb_inplace(ctx.rgb_mut());
+        StageReport::default()
+    }
+}
+
+/// Fixed-point CSC + luma sharpen (wraps [`super::ycbcr`]).
+struct CscStage {
+    strength: f64,
+    scratch: CscScratch,
+}
+
+impl IspStage for CscStage {
+    fn name(&self) -> &'static str {
+        "csc"
+    }
+
+    fn param_update(&mut self, params: &IspParams, _cfg: &IspConfig) {
+        self.strength = params.sharpen;
+    }
+
+    fn process(&mut self, ctx: &mut FrameCtx<'_>) -> StageReport {
+        let (src, dst) = ctx.rgb_pair();
+        csc_sharpen_into(src, self.strength, &mut self.scratch, dst);
+        ctx.swap_rgb();
+        StageReport::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The graph executor
+// ---------------------------------------------------------------------------
+
+/// The composed reconfigurable pipeline: owns the stages, the buffer pool,
+/// and the live parameter set.
+pub struct StageGraph {
+    cfg: IspConfig,
+    params: IspParams,
+    stages: Vec<Box<dyn IspStage>>,
+    pool: BufferPool,
+    last_mean_luma: Option<f64>,
+    auto_gains: AwbGains,
+}
+
+impl StageGraph {
+    pub fn new(cfg: &IspConfig) -> Self {
+        let params = IspParams::from_config(cfg);
+        let stages: Vec<Box<dyn IspStage>> = vec![
+            Box::new(DpcStage { threshold: params.dpc_threshold, out_flagged: Vec::new() }),
+            Box::new(AwbStage {
+                estimator: AwbEstimator::new(cfg.awb_low, cfg.awb_high),
+                auto_gains: AwbGains::unity(),
+                mode: params.awb_mode,
+                commanded: params.awb_gains,
+            }),
+            Box::new(DemosaicStage),
+            Box::new(NlmStage { h: params.nlm_h, search: cfg.nlm_search, luma: Vec::new() }),
+            Box::new(GammaStage {
+                lut: GammaLut::power_with_gain(params.gamma, params.exposure_gain),
+                key: (params.gamma, params.exposure_gain),
+            }),
+            Box::new(CscStage { strength: params.sharpen, scratch: CscScratch::default() }),
+        ];
+        debug_assert!(stages
+            .iter()
+            .zip(STAGE_NAMES.iter())
+            .all(|(s, n)| s.name() == *n));
+        Self {
+            cfg: cfg.clone(),
+            params,
+            stages,
+            pool: BufferPool::default(),
+            last_mean_luma: None,
+            auto_gains: AwbGains::unity(),
+        }
+    }
+
+    /// Mean luma of the most recent output frame (policy feedback).
+    pub fn last_mean_luma(&self) -> Option<f64> {
+        self.last_mean_luma
+    }
+
+    /// The AWB estimator's current EMA gains (policy observation).
+    pub fn auto_gains(&self) -> AwbGains {
+        self.auto_gains
+    }
+
+    /// The §VI parameter-bus write: replaces tunables (including the stage
+    /// mask) atomically; the graph applies them at the next frame start.
+    pub fn set_params(&mut self, p: IspParams) {
+        self.params = p;
+    }
+
+    pub fn params(&self) -> &IspParams {
+        &self.params
+    }
+
+    /// The mask the next frame will execute with (post-sanitizing).
+    pub fn active_mask(&self) -> StageMask {
+        self.params.stages.sanitized()
+    }
+
+    /// Process one raw RGGB frame into display RGB. The returned image
+    /// borrows the graph's buffer pool — copy it out if it must outlive
+    /// the next call (the [`super::pipeline::IspPipeline`] façade does).
+    pub fn process(&mut self, raw: &ImageU8) -> (&PlanarRgb, FrameReport) {
+        // Frame boundary: apply the commanded parameters to every stage
+        // before the first pixel moves (the HDL applies the shadow
+        // registers at frame start — nothing retunes mid-frame).
+        let mask = self.active_mask();
+        for s in self.stages.iter_mut() {
+            s.param_update(&self.params, &self.cfg);
+        }
+
+        self.pool.reset();
+        let mut ctx = FrameCtx {
+            src: Some(raw),
+            pool: &mut self.pool,
+            applied_gains: AwbGains::unity(),
+            auto_gains: self.auto_gains,
+        };
+
+        // Fixed-size sample set (no per-frame heap traffic): every slot
+        // starts as "bypassed" and the stages that run overwrite theirs.
+        let mut stage_times: [StageSample; STAGE_COUNT] = std::array::from_fn(|i| {
+            StageSample { name: STAGE_NAMES[i], index: i, us: 0.0, bypassed: true }
+        });
+        let mut corrections = 0usize;
+        for (index, stage) in self.stages.iter_mut().enumerate() {
+            if !mask.enabled(index) && stage.bypassable() {
+                continue;
+            }
+            let t = Instant::now();
+            let rep = stage.process(&mut ctx);
+            stage_times[index] = StageSample {
+                name: stage.name(),
+                index,
+                us: t.elapsed().as_secs_f64() * 1e6,
+                bypassed: false,
+            };
+            corrections += rep.corrections;
+        }
+
+        let applied_gains = ctx.applied_gains;
+        self.auto_gains = ctx.auto_gains;
+        let rgb = &self.pool.rgb[self.pool.rgb_cur];
+        let mean_luma = luma_mean(rgb);
+        self.last_mean_luma = Some(mean_luma);
+        (
+            rgb,
+            FrameReport {
+                applied_gains,
+                dpc_corrections: corrections,
+                mean_luma,
+                stage_times,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isp::sensor::SensorModel;
+    use crate::util::SplitMix64;
+
+    fn capture(seed: u64) -> ImageU8 {
+        let mut rng = SplitMix64::new(seed);
+        let frame = ImageU8::from_fn(64, 64, |x, y| (50 + (x * 2 + y) % 140) as u8);
+        SensorModel::default().capture(&frame, &mut rng).raw
+    }
+
+    #[test]
+    fn mask_parse_forms_round_trip() {
+        assert_eq!(StageMask::parse("all").unwrap(), StageMask::all());
+        assert_eq!(StageMask::parse("").unwrap(), StageMask::all());
+        let sub = StageMask::parse("-nlm,-csc").unwrap();
+        assert!(!sub.enabled(STAGE_NLM) && !sub.enabled(STAGE_CSC));
+        assert!(sub.enabled(STAGE_DPC) && sub.enabled(STAGE_DEMOSAIC));
+        let add = StageMask::parse("dpc,awb,demosaic,gamma").unwrap();
+        assert_eq!(add, sub.intersect(add));
+        assert_eq!(StageMask::parse(&add.to_csv()).unwrap(), add);
+        assert_eq!(StageMask::all().to_csv(), STAGE_NAMES.join(","));
+        // "all,-stage" sugar for the subtract form
+        assert_eq!(
+            StageMask::parse("all,-nlm,-csc").unwrap(),
+            StageMask::parse("-nlm,-csc").unwrap()
+        );
+    }
+
+    #[test]
+    fn mask_parse_rejects_bad_specs() {
+        assert!(StageMask::parse("fog").is_err(), "unknown stage");
+        assert!(StageMask::parse("-nlm,gamma").is_err(), "mixed forms");
+        assert!(StageMask::parse("all,gamma").is_err(), "'all' plus add term");
+        assert!(StageMask::parse("dpc,awb").is_err(), "demosaic missing");
+        assert!(StageMask::all().without("warp").is_err());
+    }
+
+    #[test]
+    fn sanitize_forces_structural_stages_on() {
+        let mut m = StageMask::all();
+        m.set(STAGE_DEMOSAIC, false);
+        assert!(m.validate().is_err());
+        assert!(m.sanitized().enabled(STAGE_DEMOSAIC));
+        assert!(m.sanitized().validate().is_ok());
+    }
+
+    #[test]
+    fn full_mask_reports_all_stages_timed() {
+        let mut g = StageGraph::new(&IspConfig::default());
+        let (_, report) = g.process(&capture(1));
+        assert_eq!(report.stage_times.len(), STAGE_COUNT);
+        for (i, s) in report.stage_times.iter().enumerate() {
+            assert_eq!(s.index, i);
+            assert_eq!(s.name, STAGE_NAMES[i]);
+            assert!(!s.bypassed);
+            assert!(s.us >= 0.0);
+        }
+    }
+
+    #[test]
+    fn bypassed_stage_is_flagged_and_skipped() {
+        let mut g = StageGraph::new(&IspConfig::default());
+        let raw = capture(2);
+        let (full, _) = g.process(&raw);
+        let full = full.clone();
+        let mut p = g.params().clone();
+        p.stages = StageMask::all().without("nlm").unwrap();
+        g.set_params(p);
+        let (out, report) = g.process(&raw);
+        assert_ne!(out.interleaved(), full.interleaved(), "NLM must matter");
+        let nlm = &report.stage_times[STAGE_NLM];
+        assert!(nlm.bypassed && nlm.us == 0.0);
+        assert!(!report.stage_times[STAGE_GAMMA].bypassed);
+    }
+
+    #[test]
+    fn dpc_bypass_leaves_defects_uncounted() {
+        let mut raw = ImageU8::from_fn(32, 32, |_, _| 100);
+        raw.set(16, 16, 255); // hot pixel
+        let mut g = StageGraph::new(&IspConfig::default());
+        let (_, r) = g.process(&raw);
+        assert!(r.dpc_corrections > 0);
+        let mut p = g.params().clone();
+        p.stages = StageMask::all().without("dpc").unwrap();
+        g.set_params(p);
+        let (_, r) = g.process(&raw);
+        assert_eq!(r.dpc_corrections, 0);
+    }
+
+    #[test]
+    fn masked_demosaic_is_ignored_via_sanitizing() {
+        let mut g = StageGraph::new(&IspConfig::default());
+        let mut p = g.params().clone();
+        p.stages.set(STAGE_DEMOSAIC, false);
+        g.set_params(p);
+        let (out, report) = g.process(&capture(3));
+        assert_eq!(out.r.len(), 64 * 64, "demosaic must still run");
+        assert!(!report.stage_times[STAGE_DEMOSAIC].bypassed);
+    }
+
+    #[test]
+    fn pool_survives_resolution_changes() {
+        let mut g = StageGraph::new(&IspConfig::default());
+        let (a, _) = g.process(&capture(4));
+        assert_eq!((a.width, a.height), (64, 64));
+        let small = ImageU8::from_fn(16, 16, |x, y| ((x * y) % 200) as u8);
+        let (b, _) = g.process(&small);
+        assert_eq!((b.width, b.height), (16, 16));
+        assert_eq!(b.r.len(), 256);
+        let (c, _) = g.process(&capture(4));
+        assert_eq!((c.width, c.height), (64, 64));
+    }
+}

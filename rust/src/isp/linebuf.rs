@@ -117,24 +117,54 @@ impl<const K: usize> WindowFormer<K> {
     }
 }
 
+/// Drive a KxK window kernel over a full frame *through the streaming
+/// former* without producing an output plane — the traversal primitive the
+/// windowed stages share (multi-plane stages write through the closure).
+pub fn for_each_window<const K: usize>(
+    data: &[u8],
+    width: usize,
+    height: usize,
+    mut f: impl FnMut(&[[u8; K]; K], usize, usize),
+) {
+    let mut former = WindowFormer::<K>::new(width);
+    for &px in data {
+        for (win, cx, cy) in former.push(px) {
+            f(&win, cx, cy);
+        }
+    }
+    for (win, cx, cy) in former.flush(height) {
+        f(&win, cx, cy);
+    }
+}
+
+/// Like [`stream_frame`] but writes into a caller-owned buffer (resized to
+/// the frame, reusing its allocation) — the stage-graph hot path uses this
+/// so no stage allocates a full frame per invocation.
+pub fn stream_frame_into<const K: usize>(
+    data: &[u8],
+    width: usize,
+    height: usize,
+    out: &mut Vec<u8>,
+    mut f: impl FnMut(&[[u8; K]; K], usize, usize) -> u8,
+) {
+    // no clear(): every element is overwritten below, so a same-size
+    // resize is a no-op instead of a full-frame memset
+    out.resize(width * height, 0);
+    for_each_window::<K>(data, width, height, |win, cx, cy| {
+        out[cy * width + cx] = f(win, cx, cy);
+    });
+}
+
 /// Run a KxK window kernel over a full frame *through the streaming former*
 /// — the reference driver every windowed stage uses.
 pub fn stream_frame<const K: usize>(
     data: &[u8],
     width: usize,
     height: usize,
-    mut f: impl FnMut(&[[u8; K]; K], usize, usize) -> u8,
+    f: impl FnMut(&[[u8; K]; K], usize, usize) -> u8,
 ) -> Vec<u8> {
-    let mut former = WindowFormer::<K>::new(width);
-    let mut out = vec![0u8; width * height];
-    for &px in data {
-        for (win, cx, cy) in former.push(px) {
-            out[cy * width + cx] = f(&win, cx, cy);
-        }
-    }
-    for (win, cx, cy) in former.flush(height) {
-        out[cy * width + cx] = f(&win, cx, cy);
-    }
+    let mut out = Vec::new();
+    stream_frame_into::<K>(data, width, height, &mut out, f);
     out
 }
 
@@ -212,6 +242,18 @@ mod tests {
             0
         });
         assert_eq!(count, 63);
+    }
+
+    #[test]
+    fn into_variant_matches_and_reuses_allocation() {
+        let mut rng = SplitMix64::new(21);
+        let img = ImageU8::from_fn(12, 9, |_, _| (rng.next_u32() & 0xFF) as u8);
+        let direct = stream_frame::<3>(&img.data, 12, 9, |w, _, _| w[1][1]);
+        let mut out = Vec::with_capacity(12 * 9);
+        let cap_before = out.capacity();
+        stream_frame_into::<3>(&img.data, 12, 9, &mut out, |w, _, _| w[1][1]);
+        assert_eq!(out, direct);
+        assert_eq!(out.capacity(), cap_before, "into-variant must not reallocate");
     }
 
     #[test]

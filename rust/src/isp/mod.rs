@@ -14,18 +14,23 @@
 //!
 //! [`sensor`] simulates the Bayer RGB sensor (mosaic, noise, defects,
 //! exposure/colour cast) — the defects these stages exist to correct.
-//! [`pipeline`] composes everything and accepts live parameter updates from
-//! the NPU control bus (paper §VI).
+//! [`graph`] composes the stages into a **reconfigurable stage graph**
+//! (trait-based stages, a reusable ping-pong buffer pool, and a
+//! [`graph::StageMask`] enable/bypass word the NPU commands per scene);
+//! [`pipeline`] is the thin façade over it that accepts live parameter
+//! updates from the NPU control bus (paper §VI).
 
 pub mod axis;
 pub mod awb;
 pub mod demosaic;
 pub mod dpc;
 pub mod gamma;
+pub mod graph;
 pub mod linebuf;
 pub mod nlm;
 pub mod pipeline;
 pub mod sensor;
 pub mod ycbcr;
 
+pub use graph::{IspStage, StageGraph, StageMask};
 pub use pipeline::{IspParams, IspPipeline};

@@ -12,8 +12,8 @@
 //! * weight LUT: 16-entry step approximation of `exp(-d / h²)` in Q0.8 —
 //!   integer multiply-accumulate only, like the HDL datapath.
 
-use super::linebuf::stream_frame;
-use crate::util::ImageU8;
+use super::linebuf::{for_each_window, stream_frame};
+use crate::util::{ImageU8, PlanarRgb};
 
 /// NLM configuration (strength `h` is NPU-tunable via the parameter bus).
 #[derive(Debug, Clone, Copy)]
@@ -92,34 +92,26 @@ pub fn nlm_frame(img: &ImageU8, cfg: &NlmConfig) -> ImageU8 {
     ImageU8 { width: img.width, height: img.height, data }
 }
 
-/// RGB NLM with **luma-shared weights** (perf pass, EXPERIMENTS.md §Perf):
-/// patch distances are computed once on the luma plane and the resulting
-/// weights reused for all three channels — 3× less SSD work for near-equal
-/// quality (chroma shares the luma's structure). This matches the
-/// Koizumi–Maruyama hardware structure, which runs ONE distance datapath.
-pub fn nlm_rgb_shared(
-    r: &ImageU8,
-    g: &ImageU8,
-    b: &ImageU8,
-    cfg: &NlmConfig,
-) -> (ImageU8, ImageU8, ImageU8) {
-    let lut = weight_lut(cfg.h);
-    let (width, height) = (r.width, r.height);
-    let n = width * height;
-    // luma plane (BT.601 integer approximation: (2R + 5G + B) / 8)
-    let luma: Vec<u8> = (0..n)
-        .map(|i| {
-            ((2 * r.data[i] as u32 + 5 * g.data[i] as u32 + b.data[i] as u32) / 8) as u8
-        })
-        .collect();
-
-    let s = cfg.search.min(2) as isize;
-    let mut out_r = vec![0u8; n];
-    let mut out_g = vec![0u8; n];
-    let mut out_b = vec![0u8; n];
+/// Shared-weight NLM core: the luma plane drives ONE distance datapath
+/// whose weights filter all three channel planes. Callers own every buffer.
+#[allow(clippy::too_many_arguments)]
+fn nlm_shared_core(
+    luma: &[u8],
+    r: &[u8],
+    g: &[u8],
+    b: &[u8],
+    width: usize,
+    height: usize,
+    lut: &[u16; 16],
+    search: usize,
+    out_r: &mut [u8],
+    out_g: &mut [u8],
+    out_b: &mut [u8],
+) {
+    let s = search.min(2) as isize;
     // weight field per pixel: (den, num_r, num_g, num_b) accumulated from
     // the luma-derived weights at each search offset
-    super::linebuf::stream_frame::<7>(&luma, width, height, |w, cx, cy| {
+    for_each_window::<7>(luma, width, height, |w, cx, cy| {
         let mut den = 0u32;
         let mut num_r = 0u32;
         let mut num_g = 0u32;
@@ -137,17 +129,76 @@ pub fn nlm_rgb_shared(
                 let sy = (cy as isize + dy).clamp(0, height as isize - 1) as usize;
                 let idx = sy * width + sx;
                 den += wgt;
-                num_r += wgt * r.data[idx] as u32;
-                num_g += wgt * g.data[idx] as u32;
-                num_b += wgt * b.data[idx] as u32;
+                num_r += wgt * r[idx] as u32;
+                num_g += wgt * g[idx] as u32;
+                num_b += wgt * b[idx] as u32;
             }
         }
         let i = cy * width + cx;
         out_r[i] = ((num_r + den / 2) / den) as u8;
         out_g[i] = ((num_g + den / 2) / den) as u8;
         out_b[i] = ((num_b + den / 2) / den) as u8;
-        0
     });
+}
+
+/// Fill `luma` with the BT.601 integer approximation `(2R + 5G + B) / 8`
+/// — the ONE place the shared-weight luma expression lives.
+fn luma_plane_into(r: &[u8], g: &[u8], b: &[u8], n: usize, luma: &mut Vec<u8>) {
+    luma.clear();
+    luma.extend(
+        (0..n).map(|i| ((2 * r[i] as u32 + 5 * g[i] as u32 + b[i] as u32) / 8) as u8),
+    );
+}
+
+/// Planar-RGB shared-weight NLM into a caller-owned destination (the
+/// stage-graph hot path: `dst` and the `luma` scratch plane are reused
+/// frame to frame, and no per-channel plane copies are made).
+pub fn nlm_rgb_shared_into(
+    src: &PlanarRgb,
+    cfg: &NlmConfig,
+    dst: &mut PlanarRgb,
+    luma: &mut Vec<u8>,
+) {
+    let lut = weight_lut(cfg.h);
+    let (width, height) = (src.width, src.height);
+    let n = width * height;
+    luma_plane_into(&src.r, &src.g, &src.b, n, luma);
+    dst.width = width;
+    dst.height = height;
+    // every plane element is written by the core — same-size resizes are
+    // no-ops, not full-frame memsets
+    dst.r.resize(n, 0);
+    dst.g.resize(n, 0);
+    dst.b.resize(n, 0);
+    nlm_shared_core(
+        luma, &src.r, &src.g, &src.b, width, height, &lut, cfg.search, &mut dst.r,
+        &mut dst.g, &mut dst.b,
+    );
+}
+
+/// RGB NLM with **luma-shared weights** (perf pass, EXPERIMENTS.md §Perf):
+/// patch distances are computed once on the luma plane and the resulting
+/// weights reused for all three channels — 3× less SSD work for near-equal
+/// quality (chroma shares the luma's structure). This matches the
+/// Koizumi–Maruyama hardware structure, which runs ONE distance datapath.
+pub fn nlm_rgb_shared(
+    r: &ImageU8,
+    g: &ImageU8,
+    b: &ImageU8,
+    cfg: &NlmConfig,
+) -> (ImageU8, ImageU8, ImageU8) {
+    let lut = weight_lut(cfg.h);
+    let (width, height) = (r.width, r.height);
+    let n = width * height;
+    let mut luma = Vec::new();
+    luma_plane_into(&r.data, &g.data, &b.data, n, &mut luma);
+    let mut out_r = vec![0u8; n];
+    let mut out_g = vec![0u8; n];
+    let mut out_b = vec![0u8; n];
+    nlm_shared_core(
+        &luma, &r.data, &g.data, &b.data, width, height, &lut, cfg.search, &mut out_r,
+        &mut out_g, &mut out_b,
+    );
     (
         ImageU8 { width, height, data: out_r },
         ImageU8 { width, height, data: out_g },
@@ -239,6 +290,28 @@ mod tests {
             .map(|(&a, &b)| (a as i32 - b as i32).unsigned_abs())
             .sum();
         assert!(diff < noisy.data.len() as u32 / 2, "diff {diff}");
+    }
+
+    #[test]
+    fn shared_into_matches_plane_copy_path() {
+        let mut rng = SplitMix64::new(12);
+        let src = PlanarRgb {
+            width: 24,
+            height: 20,
+            r: (0..480).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+            g: (0..480).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+            b: (0..480).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+        };
+        let cfg = NlmConfig::default();
+        let plane = |d: &Vec<u8>| ImageU8 { width: 24, height: 20, data: d.clone() };
+        let (er, eg, eb) =
+            nlm_rgb_shared(&plane(&src.r), &plane(&src.g), &plane(&src.b), &cfg);
+        let mut dst = PlanarRgb::new(0, 0);
+        let mut luma = Vec::new();
+        nlm_rgb_shared_into(&src, &cfg, &mut dst, &mut luma);
+        assert_eq!(dst.r, er.data);
+        assert_eq!(dst.g, eg.data);
+        assert_eq!(dst.b, eb.data);
     }
 
     #[test]

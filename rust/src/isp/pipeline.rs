@@ -2,23 +2,24 @@
 //!
 //! `raw RGGB → DPC → AWB gains → Malvar demosaic → NLM → gamma LUT →
 //! YCbCr + luma sharpen → RGB out`, with every NPU-tunable parameter
-//! (`AWB gains`, `gamma`, `NLM strength`, sharpen) updatable **between
-//! frames** through [`IspParams`] — the control surface the coordinator's
-//! parameter bus writes (§VI).
+//! (`AWB gains`, `gamma`, `NLM strength`, sharpen, and the stage
+//! enable/bypass mask) updatable **between frames** through [`IspParams`]
+//! — the control surface the coordinator's parameter bus writes (§VI).
+//!
+//! Since the stage-graph refactor, [`IspPipeline`] is a thin façade over
+//! [`super::graph::StageGraph`]: the graph owns the stages, the reusable
+//! buffer pool, and the per-stage timing; this type preserves the original
+//! owning `process` API for every existing call site.
 //!
 //! AWB runs in one of two modes:
-//! * `Auto` — the measurement state machine updates gains每 frame with EMA
-//!   smoothing (self-contained ISP, the paper's fallback path);
+//! * `Auto` — the measurement state machine updates gains every frame with
+//!   EMA smoothing (self-contained ISP, the paper's fallback path);
 //! * `Held` — gains frozen at whatever the NPU last commanded (the
 //!   cognitive path; the NPU sees scene-level context the gray-world
 //!   heuristic lacks).
 
-use super::awb::{apply_gains_bayer, AwbEstimator, AwbGains};
-use super::demosaic::demosaic_frame;
-use super::dpc::{dpc_frame, DpcConfig};
-use super::gamma::GammaLut;
-use super::nlm::{nlm_rgb_shared, NlmConfig};
-use super::ycbcr::csc_sharpen;
+use super::awb::AwbGains;
+use super::graph::{StageGraph, StageMask, StageSample, STAGE_COUNT};
 use crate::config::IspConfig;
 use crate::util::{ImageU8, PlanarRgb};
 
@@ -46,6 +47,10 @@ pub struct IspParams {
     pub sharpen: f64,
     /// DPC threshold.
     pub dpc_threshold: i32,
+    /// Stage enable/bypass mask — the *topology* half of the control
+    /// surface, applied atomically at the next frame boundary like every
+    /// other field.
+    pub stages: StageMask,
 }
 
 impl IspParams {
@@ -58,143 +63,78 @@ impl IspParams {
             nlm_h: cfg.nlm_h,
             sharpen: cfg.sharpen,
             dpc_threshold: cfg.dpc_threshold,
+            stages: cfg.stages,
         }
     }
 }
 
-/// Per-frame processing report (stage timings feed `hw::timing`; gains are
-/// observable for the cognitive-loop tests).
+/// Per-frame processing report (per-stage wall times feed
+/// `SystemMetrics::isp_stages`; gains are observable for the
+/// cognitive-loop tests).
 #[derive(Debug, Clone)]
 pub struct FrameReport {
     pub applied_gains: AwbGains,
     pub dpc_corrections: usize,
     pub mean_luma: f64,
+    /// Wall time per canonical stage, bypassed stages flagged at 0 µs.
+    pub stage_times: [StageSample; STAGE_COUNT],
 }
 
-/// The composed streaming pipeline.
+impl FrameReport {
+    /// Summed wall time of the stages that actually ran this frame (µs).
+    pub fn total_stage_us(&self) -> f64 {
+        self.stage_times.iter().map(|s| s.us).sum()
+    }
+}
+
+/// The composed streaming pipeline — a thin façade over the stage graph.
 pub struct IspPipeline {
-    cfg: IspConfig,
-    params: IspParams,
-    estimator: AwbEstimator,
-    /// EMA-smoothed auto gains.
-    auto_gains: AwbGains,
-    lut: GammaLut,
-    lut_key: (f64, f64),
-    last_mean_luma: Option<f64>,
+    graph: StageGraph,
 }
 
 impl IspPipeline {
     pub fn new(cfg: &IspConfig) -> Self {
-        let params = IspParams::from_config(cfg);
-        let lut = GammaLut::power_with_gain(params.gamma, params.exposure_gain);
-        Self {
-            cfg: cfg.clone(),
-            lut_key: (params.gamma, params.exposure_gain),
-            estimator: AwbEstimator::new(cfg.awb_low, cfg.awb_high),
-            auto_gains: AwbGains::unity(),
-            params,
-            lut,
-            last_mean_luma: None,
-        }
+        Self { graph: StageGraph::new(cfg) }
     }
 
     /// Mean luma of the most recent output frame (policy feedback).
     pub fn last_mean_luma(&self) -> Option<f64> {
-        self.last_mean_luma
+        self.graph.last_mean_luma()
     }
 
     /// The estimator's current EMA gains (policy observation).
     pub fn auto_gains(&self) -> AwbGains {
-        self.auto_gains
+        self.graph.auto_gains()
     }
 
     /// The §VI parameter-bus write: replaces tunables atomically between
     /// frames (the HDL applies them at the next frame start).
     pub fn set_params(&mut self, p: IspParams) {
-        self.params = p;
+        self.graph.set_params(p);
     }
 
     pub fn params(&self) -> &IspParams {
-        &self.params
+        self.graph.params()
     }
 
-    fn refresh_lut(&mut self) {
-        let key = (self.params.gamma, self.params.exposure_gain);
-        if key != self.lut_key {
-            self.lut = GammaLut::power_with_gain(key.0, key.1);
-            self.lut_key = key;
-        }
+    /// The stage mask the next frame will execute with.
+    pub fn active_mask(&self) -> StageMask {
+        self.graph.active_mask()
     }
 
-    /// Process one raw RGGB frame into display RGB.
+    /// Process one raw RGGB frame into display RGB (owning output — one
+    /// copy out of the graph's buffer pool, for callers that keep frames).
     pub fn process(&mut self, raw: &ImageU8) -> (PlanarRgb, FrameReport) {
-        self.refresh_lut();
-
-        // 1. DPC
-        let dpc_cfg = DpcConfig { threshold: self.params.dpc_threshold, detect_only: false };
-        let (clean_raw, flagged) = dpc_frame(raw, &dpc_cfg);
-
-        // 2. AWB: measure (always — keeps the estimator warm), pick gains.
-        self.estimator.reset();
-        self.estimator.measure_frame(&clean_raw);
-        // The estimator tracks EVERY frame (the measurement state machine
-        // never sleeps) — Held mode only changes which gains are *applied*,
-        // so the NPU's observation of the measured estimate stays fresh.
-        if let Some(g) = self.estimator.gains() {
-            // EMA smoothing (state machine damping)
-            let a = 0.5;
-            self.auto_gains = AwbGains {
-                r: (1.0 - a) * self.auto_gains.r + a * g.r,
-                g: 1.0,
-                b: (1.0 - a) * self.auto_gains.b + a * g.b,
-            };
-        }
-        let gains = match self.params.awb_mode {
-            AwbMode::Auto => self.auto_gains,
-            AwbMode::Held => self.params.awb_gains,
-        };
-        let balanced = apply_gains_bayer(&clean_raw, &gains);
-
-        // 3. Demosaic (Malvar–He–Cutler)
-        let rgb = demosaic_frame(&balanced);
-
-        // 4. NLM denoise — luma-shared weights across the three channels
-        //    (one distance datapath, as in the Koizumi–Maruyama hardware;
-        //    see EXPERIMENTS.md §Perf for the 3x win over per-channel NLM)
-        let nlm_cfg = NlmConfig { h: self.params.nlm_h, search: self.cfg.nlm_search };
-        let rgb = if self.params.nlm_h > 0.0 {
-            let (r, g, b) = nlm_rgb_shared(
-                &plane(&rgb.r, rgb.width, rgb.height),
-                &plane(&rgb.g, rgb.width, rgb.height),
-                &plane(&rgb.b, rgb.width, rgb.height),
-                &nlm_cfg,
-            );
-            PlanarRgb { width: rgb.width, height: rgb.height, r: r.data, g: g.data, b: b.data }
-        } else {
-            rgb
-        };
-
-        // 5. Gamma LUT (+ folded exposure)
-        let rgb = self.lut.apply_rgb(&rgb);
-
-        // 6. Fixed-point CSC + luma sharpening
-        let rgb = csc_sharpen(&rgb, self.params.sharpen);
-
-        let mean_luma = luma_mean(&rgb);
-        self.last_mean_luma = Some(mean_luma);
-        (
-            rgb,
-            FrameReport {
-                applied_gains: gains,
-                dpc_corrections: flagged.len(),
-                mean_luma,
-            },
-        )
+        let (rgb, report) = self.graph.process(raw);
+        (rgb.clone(), report)
     }
-}
 
-fn plane(data: &[u8], width: usize, height: usize) -> ImageU8 {
-    ImageU8 { width, height, data: data.to_vec() }
+    /// Zero-copy variant: the returned image borrows the graph's buffer
+    /// pool and is valid until the next `process*` call — the cognitive
+    /// loop's hot path.
+    pub fn process_ref(&mut self, raw: &ImageU8) -> (&PlanarRgb, FrameReport) {
+        self.graph.process(raw)
+    }
 }
 
 /// BT.601 luma mean of an RGB image.
@@ -210,6 +150,7 @@ pub fn luma_mean(rgb: &PlanarRgb) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::isp::gamma::GammaLut;
     use crate::isp::sensor::SensorModel;
     use crate::util::stats::psnr_u8;
     use crate::util::SplitMix64;
@@ -304,6 +245,26 @@ mod tests {
         isp.set_params(p);
         let (out, _) = isp.process(&cap.raw);
         assert_eq!(out.width, 64); // smoke: path exercised without NLM
+    }
+
+    #[test]
+    fn stage_mask_commands_through_params() {
+        let cap = capture(7, &SensorModel::default());
+        let mut isp = IspPipeline::new(&IspConfig::default());
+        let (full, _) = isp.process(&cap.raw);
+        let mut p = isp.params().clone();
+        p.stages = p.stages.without("csc").unwrap().without("nlm").unwrap();
+        isp.set_params(p);
+        assert_eq!(isp.active_mask().count(), 4);
+        let (lean, report) = isp.process(&cap.raw);
+        assert_ne!(full.interleaved(), lean.interleaved());
+        let bypassed: Vec<&str> = report
+            .stage_times
+            .iter()
+            .filter(|s| s.bypassed)
+            .map(|s| s.name)
+            .collect();
+        assert_eq!(bypassed, vec!["nlm", "csc"]);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! implementation. Luma sharpening is a 3×3 unsharp mask applied to Y only
 //! (the point of converting: chroma stays untouched), then converted back.
 
-use super::linebuf::stream_frame;
+use super::linebuf::stream_frame_into;
 use crate::util::{ImageU8, PlanarRgb};
 
 /// Fractional bits of the CSC coefficients.
@@ -68,6 +68,7 @@ pub fn ycbcr_to_rgb(y: u8, cb: u8, cr: u8) -> (u8, u8, u8) {
 }
 
 /// YCbCr planes of an RGB image.
+#[derive(Debug, Clone, Default)]
 pub struct YCbCr {
     pub width: usize,
     pub height: usize,
@@ -76,21 +77,27 @@ pub struct YCbCr {
     pub cr: Vec<u8>,
 }
 
-pub fn convert_rgb(rgb: &PlanarRgb) -> YCbCr {
+/// Convert into a caller-owned [`YCbCr`] (planes resized in place).
+pub fn convert_rgb_into(rgb: &PlanarRgb, out: &mut YCbCr) {
     let n = rgb.r.len();
-    let mut out = YCbCr {
-        width: rgb.width,
-        height: rgb.height,
-        y: vec![0; n],
-        cb: vec![0; n],
-        cr: vec![0; n],
-    };
-    for i in 0..n {
-        let (y, cb, cr) = rgb_to_ycbcr(rgb.r[i], rgb.g[i], rgb.b[i]);
+    out.width = rgb.width;
+    out.height = rgb.height;
+    // every plane element is written below — same-size resizes are no-ops
+    out.y.resize(n, 0);
+    out.cb.resize(n, 0);
+    out.cr.resize(n, 0);
+    for (i, (&r, (&g, &b))) in rgb.r.iter().zip(rgb.g.iter().zip(&rgb.b)).enumerate() {
+        let (y, cb, cr) = rgb_to_ycbcr(r, g, b);
         out.y[i] = y;
         out.cb[i] = cb;
         out.cr[i] = cr;
     }
+}
+
+pub fn convert_rgb(rgb: &PlanarRgb) -> YCbCr {
+    let mut out =
+        YCbCr { width: 0, height: 0, y: Vec::new(), cb: Vec::new(), cr: Vec::new() };
+    convert_rgb_into(rgb, &mut out);
     out
 }
 
@@ -106,14 +113,22 @@ pub fn convert_back(ycc: &YCbCr) -> PlanarRgb {
     rgb
 }
 
-/// 3×3 unsharp mask on the Y plane: `y + strength * (y - blur(y))`,
-/// strength in Q4.4 steps (HDL-quantized).
-pub fn sharpen_luma(y_plane: &ImageU8, strength: f64) -> ImageU8 {
+/// 3×3 unsharp mask over a raw Y plane into a caller-owned buffer —
+/// `y + strength * (y - blur(y))`, strength in Q4.4 steps (HDL-quantized).
+pub fn sharpen_luma_into(
+    y: &[u8],
+    width: usize,
+    height: usize,
+    strength: f64,
+    out: &mut Vec<u8>,
+) {
     let s_q = (strength * 16.0).round() as i32; // Q4.4
     if s_q == 0 {
-        return y_plane.clone();
+        out.clear();
+        out.extend_from_slice(y);
+        return;
     }
-    let data = stream_frame::<3>(&y_plane.data, y_plane.width, y_plane.height, |w, _, _| {
+    stream_frame_into::<3>(y, width, height, out, |w, _, _| {
         let mut sum = 0i32;
         for row in w {
             for &v in row {
@@ -125,15 +140,57 @@ pub fn sharpen_luma(y_plane: &ImageU8, strength: f64) -> ImageU8 {
         let sharp = c + (s_q * (c - blur)) / 16;
         sharp.clamp(0, 255) as u8
     });
+}
+
+/// 3×3 unsharp mask on the Y plane (allocating convenience wrapper).
+pub fn sharpen_luma(y_plane: &ImageU8, strength: f64) -> ImageU8 {
+    let mut data = Vec::new();
+    sharpen_luma_into(&y_plane.data, y_plane.width, y_plane.height, strength, &mut data);
     ImageU8 { width: y_plane.width, height: y_plane.height, data }
+}
+
+/// Reusable intermediate planes for [`csc_sharpen_into`] — one set per
+/// stage instance, so the hot path never allocates.
+#[derive(Default)]
+pub struct CscScratch {
+    ycc: YCbCr,
+    y_sharp: Vec<u8>,
+}
+
+/// Full stage into a caller-owned destination: RGB -> YCbCr -> sharpen Y
+/// -> RGB, with every intermediate living in `scratch`.
+pub fn csc_sharpen_into(
+    rgb: &PlanarRgb,
+    strength: f64,
+    scratch: &mut CscScratch,
+    out: &mut PlanarRgb,
+) {
+    convert_rgb_into(rgb, &mut scratch.ycc);
+    sharpen_luma_into(&scratch.ycc.y, rgb.width, rgb.height, strength, &mut scratch.y_sharp);
+    let n = rgb.r.len();
+    out.width = rgb.width;
+    out.height = rgb.height;
+    out.r.resize(n, 0);
+    out.g.resize(n, 0);
+    out.b.resize(n, 0);
+    let planes = scratch
+        .y_sharp
+        .iter()
+        .zip(scratch.ycc.cb.iter().zip(&scratch.ycc.cr));
+    for (i, (&y, (&cb, &cr))) in planes.enumerate() {
+        let (r, g, b) = ycbcr_to_rgb(y, cb, cr);
+        out.r[i] = r;
+        out.g[i] = g;
+        out.b[i] = b;
+    }
 }
 
 /// Full stage: RGB -> YCbCr -> sharpen Y -> RGB.
 pub fn csc_sharpen(rgb: &PlanarRgb, strength: f64) -> PlanarRgb {
-    let mut ycc = convert_rgb(rgb);
-    let y_img = ImageU8 { width: ycc.width, height: ycc.height, data: ycc.y };
-    ycc.y = sharpen_luma(&y_img, strength).data;
-    convert_back(&ycc)
+    let mut scratch = CscScratch::default();
+    let mut out = PlanarRgb::new(0, 0);
+    csc_sharpen_into(rgb, strength, &mut scratch, &mut out);
+    out
 }
 
 #[cfg(test)]

@@ -21,6 +21,7 @@ use acelerador::events::{io as evio, spec};
 use acelerador::fleet;
 use acelerador::hw::resources::IspResources;
 use acelerador::hw::timing::frame_timing;
+use acelerador::isp::graph::StageMask;
 use acelerador::isp::pipeline::IspPipeline;
 use acelerador::isp::sensor::SensorModel;
 use acelerador::runtime::NpuEngine;
@@ -48,6 +49,7 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "max-inflight", help: "fleet: admission limit (0 = unbounded)", is_switch: false, default: Some("0") },
         FlagSpec { name: "free-run", help: "fleet: disable per-window lockstep", is_switch: true, default: None },
         FlagSpec { name: "json", help: "run/fleet: emit machine-readable JSON instead of tables", is_switch: true, default: None },
+        FlagSpec { name: "isp-stages", help: "ISP stage mask: \"all\", a list of stages to enable (dpc,awb,demosaic,nlm,gamma,csc), or -stage terms to drop from the full graph (e.g. \"-nlm,-csc\")", is_switch: false, default: None },
     ]
 }
 
@@ -63,6 +65,9 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     }
     if let Some(a) = args.explicit("artifacts") {
         cfg.npu.artifacts_dir = a.to_string();
+    }
+    if let Some(spec) = args.explicit("isp-stages") {
+        cfg.isp.stages = StageMask::parse(spec)?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -214,6 +219,18 @@ fn cmd_isp(args: &Args) -> Result<()> {
         report.mean_luma,
         psnr_u8(&rgb.interleaved(), &truth.interleaved())
     );
+    let stages: Vec<String> = report
+        .stage_times
+        .iter()
+        .map(|s| {
+            if s.bypassed {
+                format!("{}=bypassed", s.name)
+            } else {
+                format!("{}={:.0}µs", s.name, s.us)
+            }
+        })
+        .collect();
+    println!("stages: {}", stages.join(" "));
     Ok(())
 }
 

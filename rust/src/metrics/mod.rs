@@ -8,6 +8,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::isp::graph::{StageSample, STAGE_COUNT, STAGE_NAMES};
 use crate::jsonlite::Json;
 
 /// Monotonic counter.
@@ -155,6 +156,111 @@ impl LatencyHist {
     }
 }
 
+/// JSON keys of the per-stage export — shared with
+/// `fleet::report::FleetReport::isp_stage_rows` so the producer and the
+/// fleet-side consumer cannot silently drift apart.
+pub const ISP_STAGES_KEY: &str = "isp_stages";
+pub const STAGE_KEY_FRAMES: &str = "frames";
+pub const STAGE_KEY_MEAN_US: &str = "mean_us";
+pub const STAGE_KEY_BYPASSED: &str = "bypassed";
+
+/// One ISP stage's accumulators: processed frames, total wall time, and
+/// frames where the stage was mask-bypassed. Time accumulates in
+/// nanoseconds so sub-microsecond stages (the gamma LUT on small frames)
+/// don't truncate to zero per frame.
+#[derive(Debug, Default)]
+struct StageLane {
+    sum_ns: AtomicU64,
+    frames: AtomicU64,
+    bypassed: AtomicU64,
+}
+
+/// Per-stage ISP timing, keyed by the canonical stage order — fed from
+/// `FrameReport::stage_times`, exported in [`SystemMetrics::snapshot`].
+#[derive(Debug)]
+pub struct IspStageMetrics {
+    lanes: [StageLane; STAGE_COUNT],
+}
+
+impl Default for IspStageMetrics {
+    fn default() -> Self {
+        Self { lanes: std::array::from_fn(|_| StageLane::default()) }
+    }
+}
+
+impl IspStageMetrics {
+    /// Fold one frame's stage samples in (lock-free).
+    pub fn record(&self, samples: &[StageSample]) {
+        for s in samples {
+            if s.index >= STAGE_COUNT {
+                continue;
+            }
+            let lane = &self.lanes[s.index];
+            if s.bypassed {
+                lane.bypassed.fetch_add(1, Ordering::Relaxed);
+            } else {
+                lane.frames.fetch_add(1, Ordering::Relaxed);
+                lane.sum_ns.fetch_add((s.us.max(0.0) * 1e3) as u64, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn frames(&self, index: usize) -> u64 {
+        self.lanes[index].frames.load(Ordering::Relaxed)
+    }
+
+    pub fn bypassed(&self, index: usize) -> u64 {
+        self.lanes[index].bypassed.load(Ordering::Relaxed)
+    }
+
+    /// Mean wall time per processed frame for one stage (µs).
+    pub fn mean_us(&self, index: usize) -> f64 {
+        let f = self.frames(index);
+        if f == 0 {
+            0.0
+        } else {
+            self.lanes[index].sum_ns.load(Ordering::Relaxed) as f64 / 1e3 / f as f64
+        }
+    }
+
+    /// One line per stage: `name mean_us xN (bypassed M)`.
+    pub fn report(&self) -> String {
+        STAGE_NAMES
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                format!(
+                    "{n}={:.0}µs/{}f/{}b",
+                    self.mean_us(i),
+                    self.frames(i),
+                    self.bypassed(i)
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// `{stage: {frames, mean_us, bypassed}}` for the JSON export.
+    pub fn snapshot(&self) -> Json {
+        Json::obj(
+            STAGE_NAMES
+                .iter()
+                .enumerate()
+                .map(|(i, n)| {
+                    (
+                        *n,
+                        Json::obj(vec![
+                            (STAGE_KEY_FRAMES, Json::num(self.frames(i) as f64)),
+                            (STAGE_KEY_MEAN_US, Json::num(self.mean_us(i))),
+                            (STAGE_KEY_BYPASSED, Json::num(self.bypassed(i) as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
 /// The coordinator's metric set (one instance per running system).
 #[derive(Debug, Default)]
 pub struct SystemMetrics {
@@ -167,6 +273,8 @@ pub struct SystemMetrics {
     pub npu_latency: LatencyHist,
     pub e2e_latency: LatencyHist,
     pub isp_latency: LatencyHist,
+    /// Per-stage ISP wall time + bypass counts (the stage-graph breakdown).
+    pub isp_stages: IspStageMetrics,
 }
 
 impl SystemMetrics {
@@ -177,7 +285,7 @@ impl SystemMetrics {
     pub fn report(&self) -> String {
         format!(
             "windows={} batches={} detections={} isp_frames={} param_updates={}\n\
-             npu:  {}\ne2e:  {}\nisp:  {}",
+             npu:  {}\ne2e:  {}\nisp:  {}\nstages: {}",
             self.windows_in.get(),
             self.batches_executed.get(),
             self.detections_out.get(),
@@ -186,6 +294,7 @@ impl SystemMetrics {
             self.npu_latency.report(),
             self.e2e_latency.report(),
             self.isp_latency.report(),
+            self.isp_stages.report(),
         )
     }
 
@@ -215,6 +324,7 @@ impl SystemMetrics {
                     ("isp_latency", self.isp_latency.snapshot()),
                 ]),
             ),
+            (ISP_STAGES_KEY, self.isp_stages.snapshot()),
         ])
     }
 }
@@ -306,6 +416,34 @@ mod tests {
         // serializes and parses back
         let text = j.to_string();
         assert_eq!(crate::jsonlite::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn stage_lanes_accumulate_and_export() {
+        let m = SystemMetrics::new();
+        let frame = |us: f64, nlm_bypassed: bool| -> Vec<StageSample> {
+            STAGE_NAMES
+                .iter()
+                .enumerate()
+                .map(|(index, &name)| {
+                    let bypassed = nlm_bypassed && name == "nlm";
+                    StageSample { name, index, us: if bypassed { 0.0 } else { us }, bypassed }
+                })
+                .collect()
+        };
+        m.isp_stages.record(&frame(10.0, false));
+        m.isp_stages.record(&frame(30.0, true));
+        let nlm = STAGE_NAMES.iter().position(|n| *n == "nlm").unwrap();
+        assert_eq!(m.isp_stages.frames(0), 2);
+        assert_eq!(m.isp_stages.frames(nlm), 1);
+        assert_eq!(m.isp_stages.bypassed(nlm), 1);
+        assert!((m.isp_stages.mean_us(0) - 20.0).abs() < 1e-9);
+        assert!((m.isp_stages.mean_us(nlm) - 10.0).abs() < 1e-9);
+        let j = m.snapshot();
+        let stage = j.get("isp_stages").unwrap().get("nlm").unwrap();
+        assert_eq!(stage.get("frames").unwrap().as_f64(), Some(1.0));
+        assert_eq!(stage.get("bypassed").unwrap().as_f64(), Some(1.0));
+        assert!(m.report().contains("stages:"));
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! stages use (HDL line buffers replicate edge pixels).
 
 /// Single-channel u8 image (Bayer raw, Y plane, ...).
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ImageU8 {
     pub width: usize,
     pub height: usize,
@@ -74,7 +74,7 @@ impl ImageF32 {
 }
 
 /// Planar RGB u8 image (ISP output / clean reference).
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct PlanarRgb {
     pub width: usize,
     pub height: usize,

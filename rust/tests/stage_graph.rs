@@ -1,0 +1,232 @@
+//! Stage-graph acceptance: the refactored ISP must be a *refactor*, not a
+//! behavior change — the full-mask graph reproduces the seed
+//! `IspPipeline::process` chain bit-exactly — and the §VI bypass command
+//! must land exactly at the next frame boundary.
+//!
+//! What this file proves, precisely: the graph preserved the seed's
+//! *composition* (stage order, AWB measure-EMA-apply sequencing on the
+//! post-DPC raw, the LUT refresh rule, the NLM `h > 0` gate, report
+//! plumbing). It deliberately reuses the public kernel functions, so
+//! kernel-*value* parity is not re-proven here — that layer is pinned by
+//! each kernel's own unit tests with hard-coded expectations (AWB Q4.12
+//! vs float within 1 LSB, gamma known values, demosaic flat-field
+//! exactness, YCbCr primary mappings and round-trip bounds, NLM
+//! `shared_into` vs the plane-copy path) which did not change in this
+//! refactor. Where an untouched primitive exists, the replica prefers it
+//! (`convert_back` below) to keep the two sides as independent as the
+//! container (no Rust toolchain, so no way to freeze pre-refactor golden
+//! frames) allows.
+
+use acelerador::config::IspConfig;
+use acelerador::isp::awb::{apply_gains_bayer, AwbEstimator, AwbGains};
+use acelerador::isp::demosaic::demosaic_frame;
+use acelerador::isp::dpc::{dpc_frame, DpcConfig};
+use acelerador::isp::gamma::GammaLut;
+use acelerador::isp::graph::StageMask;
+use acelerador::isp::nlm::{nlm_rgb_shared, NlmConfig};
+use acelerador::isp::pipeline::{AwbMode, FrameReport, IspParams, IspPipeline};
+use acelerador::isp::sensor::SensorModel;
+use acelerador::isp::ycbcr::{convert_back, convert_rgb, sharpen_luma};
+use acelerador::util::{ImageU8, PlanarRgb, SplitMix64};
+
+/// Inline replica of the pre-refactor `IspPipeline::process` (the seed's
+/// fixed function chain, verbatim): DPC → AWB measure/EMA/apply →
+/// demosaic → NLM (h > 0) → gamma LUT → CSC + sharpen. The kernels
+/// themselves are untouched by the refactor, so byte-equality against this
+/// replica proves the graph preserved the composition semantics.
+struct SeedPipeline {
+    cfg: IspConfig,
+    params: IspParams,
+    estimator: AwbEstimator,
+    auto_gains: AwbGains,
+    lut: GammaLut,
+    lut_key: (f64, f64),
+}
+
+impl SeedPipeline {
+    fn new(cfg: &IspConfig) -> Self {
+        let params = IspParams::from_config(cfg);
+        let lut = GammaLut::power_with_gain(params.gamma, params.exposure_gain);
+        Self {
+            cfg: cfg.clone(),
+            lut_key: (params.gamma, params.exposure_gain),
+            estimator: AwbEstimator::new(cfg.awb_low, cfg.awb_high),
+            auto_gains: AwbGains::unity(),
+            params,
+            lut,
+        }
+    }
+
+    fn set_params(&mut self, p: IspParams) {
+        self.params = p;
+    }
+
+    fn process(&mut self, raw: &ImageU8) -> (PlanarRgb, usize, AwbGains) {
+        let key = (self.params.gamma, self.params.exposure_gain);
+        if key != self.lut_key {
+            self.lut = GammaLut::power_with_gain(key.0, key.1);
+            self.lut_key = key;
+        }
+        let dpc_cfg =
+            DpcConfig { threshold: self.params.dpc_threshold, detect_only: false };
+        let (clean_raw, flagged) = dpc_frame(raw, &dpc_cfg);
+        self.estimator.reset();
+        self.estimator.measure_frame(&clean_raw);
+        if let Some(g) = self.estimator.gains() {
+            let a = 0.5;
+            self.auto_gains = AwbGains {
+                r: (1.0 - a) * self.auto_gains.r + a * g.r,
+                g: 1.0,
+                b: (1.0 - a) * self.auto_gains.b + a * g.b,
+            };
+        }
+        let gains = match self.params.awb_mode {
+            AwbMode::Auto => self.auto_gains,
+            AwbMode::Held => self.params.awb_gains,
+        };
+        let balanced = apply_gains_bayer(&clean_raw, &gains);
+        let rgb = demosaic_frame(&balanced);
+        let nlm_cfg = NlmConfig { h: self.params.nlm_h, search: self.cfg.nlm_search };
+        let rgb = if self.params.nlm_h > 0.0 {
+            let plane = |d: &[u8]| ImageU8 {
+                width: rgb.width,
+                height: rgb.height,
+                data: d.to_vec(),
+            };
+            let (r, g, b) =
+                nlm_rgb_shared(&plane(&rgb.r), &plane(&rgb.g), &plane(&rgb.b), &nlm_cfg);
+            PlanarRgb {
+                width: rgb.width,
+                height: rgb.height,
+                r: r.data,
+                g: g.data,
+                b: b.data,
+            }
+        } else {
+            rgb
+        };
+        let rgb = self.lut.apply_rgb(&rgb);
+        // seed csc_sharpen inlined through the untouched convert_back
+        // primitive: RGB -> YCbCr -> sharpen Y -> RGB
+        let mut ycc = convert_rgb(&rgb);
+        let y_img = ImageU8 { width: ycc.width, height: ycc.height, data: ycc.y };
+        ycc.y = sharpen_luma(&y_img, self.params.sharpen).data;
+        let rgb = convert_back(&ycc);
+        (rgb, flagged.len(), gains)
+    }
+}
+
+fn capture(seed: u64) -> ImageU8 {
+    let mut rng = SplitMix64::new(seed);
+    let frame = ImageU8::from_fn(64, 64, |x, y| {
+        (50 + (x * 2 + y) % 130 + (rng.next_u32() % 7) as usize) as u8
+    });
+    let mut cap_rng = SplitMix64::new(seed ^ 0xBEEF);
+    SensorModel::default().capture(&frame, &mut cap_rng).raw
+}
+
+fn assert_frames_equal(a: &PlanarRgb, b: &PlanarRgb, what: &str) {
+    assert_eq!(a.interleaved(), b.interleaved(), "{what}: output bytes differ");
+}
+
+/// Golden parity: full-mask stage graph ≡ seed chain, bit for bit, across
+/// several frames (AWB EMA state evolving) and several scene seeds.
+#[test]
+fn full_mask_graph_matches_seed_pipeline_bit_exactly() {
+    for seed in [1u64, 7, 42] {
+        let cfg = IspConfig::default();
+        let raw = capture(seed);
+        let mut seed_isp = SeedPipeline::new(&cfg);
+        let mut graph_isp = IspPipeline::new(&cfg);
+        assert_eq!(graph_isp.params().stages, StageMask::all());
+        for frame in 0..4 {
+            let (want, want_dpc, want_gains) = seed_isp.process(&raw);
+            let (got, report): (PlanarRgb, FrameReport) = graph_isp.process(&raw);
+            assert_frames_equal(&want, &got, &format!("seed {seed} frame {frame}"));
+            assert_eq!(report.dpc_corrections, want_dpc);
+            assert_eq!(
+                (report.applied_gains.r.to_bits(), report.applied_gains.b.to_bits()),
+                (want_gains.r.to_bits(), want_gains.b.to_bits()),
+                "seed {seed} frame {frame}: gains diverged"
+            );
+        }
+    }
+}
+
+/// Parity must survive mid-run parameter-bus writes (LUT refresh, Held
+/// gains, NLM strength) — the paths the cognitive loop exercises.
+#[test]
+fn parity_holds_through_parameter_updates() {
+    let cfg = IspConfig::default();
+    let raw = capture(3);
+    let mut seed_isp = SeedPipeline::new(&cfg);
+    let mut graph_isp = IspPipeline::new(&cfg);
+    let (a, ..) = seed_isp.process(&raw);
+    let (b, _) = graph_isp.process(&raw);
+    assert_frames_equal(&a, &b, "pre-update");
+
+    let mut p = IspParams::from_config(&cfg);
+    p.exposure_gain = 1.7;
+    p.awb_mode = AwbMode::Held;
+    p.awb_gains = AwbGains { r: 0.8, g: 1.0, b: 1.3 };
+    p.nlm_h = 14.5;
+    p.sharpen = 0.9;
+    seed_isp.set_params(p.clone());
+    graph_isp.set_params(p);
+    for frame in 0..2 {
+        let (want, ..) = seed_isp.process(&raw);
+        let (got, _) = graph_isp.process(&raw);
+        assert_frames_equal(&want, &got, &format!("post-update frame {frame}"));
+    }
+}
+
+/// A bypass commanded between frames takes effect exactly at the next
+/// frame boundary: frames before the command match an always-full
+/// pipeline, frames after match a pipeline that never had the stage —
+/// including the AWB state trajectory (the estimator is upstream of NLM,
+/// so histories stay aligned).
+#[test]
+fn bypass_command_lands_exactly_at_next_frame_boundary() {
+    let cfg = IspConfig::default();
+    let raw = capture(11);
+    let frames = 4usize;
+    let cut = 2usize; // command issued between frame 1 and frame 2
+
+    let mut always_full = IspPipeline::new(&cfg);
+    let mut commanded = IspPipeline::new(&cfg);
+    let mut never_nlm_cfg = cfg.clone();
+    never_nlm_cfg.stages = StageMask::all().without("nlm").unwrap();
+    let mut never_nlm = IspPipeline::new(&never_nlm_cfg);
+
+    let mut full_out = Vec::new();
+    let mut cmd_out = Vec::new();
+    let mut lean_out = Vec::new();
+    for i in 0..frames {
+        if i == cut {
+            // the §VI write: same params, NLM masked off
+            let mut p = commanded.params().clone();
+            p.stages = p.stages.without("nlm").unwrap();
+            commanded.set_params(p);
+        }
+        full_out.push(always_full.process(&raw).0);
+        cmd_out.push(commanded.process(&raw).0);
+        lean_out.push(never_nlm.process(&raw).0);
+    }
+    for i in 0..cut {
+        assert_frames_equal(&cmd_out[i], &full_out[i], &format!("pre-cut frame {i}"));
+        // sanity: the bypass is observable at all
+        assert_ne!(
+            full_out[i].interleaved(),
+            lean_out[i].interleaved(),
+            "NLM must affect the output for this test to mean anything"
+        );
+    }
+    for i in cut..frames {
+        assert_frames_equal(&cmd_out[i], &lean_out[i], &format!("post-cut frame {i}"));
+        assert_ne!(
+            cmd_out[i].interleaved(),
+            full_out[i].interleaved(),
+            "post-cut frame {i} still matches the full pipeline — bypass never landed"
+        );
+    }
+}

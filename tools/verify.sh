@@ -31,4 +31,11 @@ else
     echo "verify: rustfmt unavailable — skipping format check" >&2
 fi
 
+echo "== lint: cargo clippy -- -D warnings =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "verify: clippy unavailable — skipping lint" >&2
+fi
+
 echo "verify: OK"
