@@ -13,7 +13,7 @@ use acelerador::events::voxel::voxelize;
 use acelerador::hw::energy::EnergyModel;
 use acelerador::hw::timing::npu_timing;
 use acelerador::snn::{Backbone, BackboneKind};
-use acelerador::testkit::bench::Table;
+use acelerador::testkit::bench::{black_box, Bench, Table};
 
 const SCENES: usize = 16;
 
@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
             layer_activity: vec![(0, neurons * 5)],
             synops: synops_w,
             dense_macs: dense_w,
+            ..Default::default()
         };
         let e_snn = energy.snn_inference(&stats_mean, frame_us);
         let e_cnn = energy.cnn_inference(dense_w, frame_us);
@@ -63,6 +64,42 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t.print();
+
+    // --- measured sparse vs dense wall time (the twin's own hot path) -----
+    // The energy model above is a *model*; this is a *measurement*: the
+    // same forward, threshold-pinned to the event-driven kernels (1.0) vs
+    // the dense kernel (0.0). Outputs are bit-identical (sparse_parity);
+    // only wall time moves, and it must move with each backbone's sparsity.
+    println!("\n--- measured sparse/dense twin wall time (identical outputs) ---");
+    let bench = Bench::new(1, 6);
+    let vox0 = &voxels[0];
+    let mut tw = Table::new(&[
+        "backbone", "sparse µs", "dense µs", "speedup", "sparse layers", "head synops",
+    ]);
+    for kind in BackboneKind::all() {
+        let bb = Backbone::load(kind, "artifacts")?;
+        let s = bench.run(&format!("{} sparse", kind.name()), || {
+            black_box(bb.forward_with_threshold(vox0, 1.0))
+        });
+        let d = bench.run(&format!("{} dense", kind.name()), || {
+            black_box(bb.forward_with_threshold(vox0, 0.0))
+        });
+        let (_, stats) = bb.forward(vox0); // adaptive: the deployed config
+        let sparse_layers = stats
+            .layer_dispatch
+            .iter()
+            .filter(|disp| disp.dense == 0)
+            .count();
+        tw.row(&[
+            kind.name().to_string(),
+            format!("{:.0}", s.mean_us()),
+            format!("{:.0}", d.mean_us()),
+            format!("{:.2}x", d.mean_us() / s.mean_us()),
+            format!("{}/{}", sparse_layers, stats.layer_dispatch.len()),
+            stats.layer_synops.last().copied().unwrap_or(0).to_string(),
+        ]);
+    }
+    tw.print();
 
     // --- frame-CNN baseline on the same topology --------------------------
     let cnn = FrameCnn::load("artifacts")?;

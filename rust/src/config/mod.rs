@@ -53,6 +53,11 @@ pub struct NpuConfig {
     pub conf_threshold: f32,
     /// NMS IoU threshold.
     pub nms_iou: f32,
+    /// Activity-adaptive dispatch threshold for the event-driven SNN
+    /// core: a layer whose measured spike rate exceeds it is served by
+    /// the dense kernel instead of the sparse gather/popcount paths.
+    /// Outputs are identical either way; this trades wall time only.
+    pub sparse_threshold: f32,
 }
 
 impl Default for NpuConfig {
@@ -64,6 +69,7 @@ impl Default for NpuConfig {
             batch_timeout_us: 2_000,
             conf_threshold: 0.10,
             nms_iou: 0.45,
+            sparse_threshold: crate::snn::DEFAULT_SPARSE_THRESHOLD,
         }
     }
 }
@@ -224,6 +230,7 @@ impl SystemConfig {
             read_u64(n, "batch_timeout_us", &mut self.npu.batch_timeout_us);
             read_f32(n, "conf_threshold", &mut self.npu.conf_threshold);
             read_f32(n, "nms_iou", &mut self.npu.nms_iou);
+            read_f32(n, "sparse_threshold", &mut self.npu.sparse_threshold);
         }
         if let Some(i) = json.get("isp") {
             read_usize(i, "width", &mut self.isp.width);
@@ -282,6 +289,9 @@ impl SystemConfig {
         if !(0.0..=1.0).contains(&(self.npu.conf_threshold as f64)) {
             bail!("npu: conf_threshold must be in [0,1]");
         }
+        if !(0.0..=1.0).contains(&(self.npu.sparse_threshold as f64)) {
+            bail!("npu: sparse_threshold must be in [0,1] (a spike rate)");
+        }
         if self.isp.awb_low >= self.isp.awb_high {
             bail!("isp: awb_low must be < awb_high");
         }
@@ -339,6 +349,7 @@ impl SystemConfig {
                     ("batch_timeout_us", Json::num(self.npu.batch_timeout_us as f64)),
                     ("conf_threshold", Json::num(self.npu.conf_threshold as f64)),
                     ("nms_iou", Json::num(self.npu.nms_iou as f64)),
+                    ("sparse_threshold", Json::num(self.npu.sparse_threshold as f64)),
                 ]),
             ),
             (
@@ -501,12 +512,28 @@ mod tests {
         assert!(cfg.validate().is_err());
 
         let mut cfg = SystemConfig::default();
+        cfg.npu.sparse_threshold = 1.5;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SystemConfig::default();
         cfg.fleet.streams = 0;
         assert!(cfg.validate().is_err());
 
         let mut cfg = SystemConfig::default();
         cfg.fleet.scenario_mix = "marsrover".into();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn sparse_threshold_overlay_and_default() {
+        let cfg = SystemConfig::default();
+        assert_eq!(cfg.npu.sparse_threshold, crate::snn::DEFAULT_SPARSE_THRESHOLD);
+        let mut cfg = SystemConfig::default();
+        let json =
+            crate::jsonlite::parse(r#"{"npu": {"sparse_threshold": 0.1}}"#).unwrap();
+        cfg.apply_json(&json).unwrap();
+        assert_eq!(cfg.npu.sparse_threshold, 0.1);
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -30,6 +30,9 @@ use crate::runtime::NpuEngine;
 pub struct InferReply {
     pub head: Vec<f32>,
     pub rates: Vec<f32>,
+    /// Per-layer dispatch plan of the activity-adaptive NPU core (`true`
+    /// = sparse event path; same indexing as `rates`).
+    pub sparse_layers: Vec<bool>,
     /// PJRT execute time of the batch this request rode in.
     pub execute_us: f64,
     /// How many requests shared the batch.
@@ -167,7 +170,8 @@ fn engine_thread(
     fault: FaultCell,
 ) {
     let engine = match NpuEngine::new(&cfg.artifacts_dir, &cfg.backbone) {
-        Ok(e) => {
+        Ok(mut e) => {
+            e.set_sparse_threshold(cfg.sparse_threshold);
             let _ = ready.send(Ok(()));
             e
         }
@@ -224,6 +228,7 @@ fn engine_thread(
                     let _ = req.reply.send(Ok(InferReply {
                         head,
                         rates: out.rates.clone(),
+                        sparse_layers: out.sparse_layers.clone(),
                         execute_us: out.execute_us,
                         batch_size: n,
                         service_us,

@@ -182,6 +182,7 @@ impl CognitiveLoop {
         let reply = self.npu.infer_blocking(vox)?;
         self.metrics.batches_executed.inc();
         self.metrics.npu_latency.record_us(reply.execute_us as u64);
+        self.metrics.snn_layers.record(&reply.rates, &reply.sparse_layers);
 
         let dets = nms(
             decode_head(&reply.head, &self.yolo, self.cfg.npu.conf_threshold),

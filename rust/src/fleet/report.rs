@@ -256,6 +256,64 @@ impl FleetReport {
             .collect()
     }
 
+    /// Per-layer SNN spike-rate + dispatch aggregated across every
+    /// stream's metrics snapshot: `(layer, windows, mean rate, sparse
+    /// windows, dense windows)`. Windows are summed; rates are
+    /// window-weighted (frame-weighted in fleet terms) — where the
+    /// sparsity budget goes per layer across the fleet.
+    pub fn snn_layer_rows(&self) -> Vec<(usize, u64, f64, u64, u64)> {
+        use crate::metrics::{
+            SNN_KEY_DENSE, SNN_KEY_LAYER, SNN_KEY_MEAN_RATE, SNN_KEY_SPARSE,
+            SNN_KEY_WINDOWS, SNN_LAYERS_KEY,
+        };
+        let mut rows: Vec<(usize, u64, f64, u64, u64)> = Vec::new();
+        for s in &self.streams {
+            let Some(layers) = s
+                .metrics
+                .get(SNN_LAYERS_KEY)
+                .and_then(|j| j.get("layers"))
+                .and_then(Json::as_arr)
+            else {
+                continue;
+            };
+            for entry in layers {
+                let Some(layer) = entry.get(SNN_KEY_LAYER).and_then(Json::as_usize)
+                else {
+                    continue;
+                };
+                if rows.len() <= layer {
+                    rows.resize(layer + 1, (0, 0, 0.0, 0, 0));
+                }
+                let w = entry
+                    .get(SNN_KEY_WINDOWS)
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0);
+                let row = &mut rows[layer];
+                row.1 += w as u64;
+                row.2 += w
+                    * entry
+                        .get(SNN_KEY_MEAN_RATE)
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0);
+                row.3 += entry
+                    .get(SNN_KEY_SPARSE)
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0) as u64;
+                row.4 += entry
+                    .get(SNN_KEY_DENSE)
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0) as u64;
+            }
+        }
+        for (i, row) in rows.iter_mut().enumerate() {
+            row.0 = i;
+            if row.1 > 0 {
+                row.2 /= row.1 as f64;
+            }
+        }
+        rows
+    }
+
     /// Order-independent-by-construction fleet digest: streams are folded
     /// in stream-id order, each contributing its own deterministic digest.
     pub fn digest(&self) -> u64 {
@@ -316,6 +374,23 @@ impl FleetReport {
                                 .collect(),
                         ),
                     ),
+                    (
+                        "snn_layers",
+                        Json::arr(
+                            self.snn_layer_rows()
+                                .iter()
+                                .map(|(layer, windows, rate, sparse, dense)| {
+                                    Json::obj(vec![
+                                        ("layer", Json::num(*layer as f64)),
+                                        ("windows", Json::num(*windows as f64)),
+                                        ("mean_rate", Json::num(*rate)),
+                                        ("sparse", Json::num(*sparse as f64)),
+                                        ("dense", Json::num(*dense as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ]),
             ),
             (
@@ -361,10 +436,22 @@ impl FleetReport {
                 bypassed.to_string(),
             ]);
         }
+        let mut snn_table =
+            Table::new(&["snn layer", "windows", "rate %", "sparse", "dense"]);
+        for (layer, windows, rate, sparse, dense) in self.snn_layer_rows() {
+            snn_table.row(&[
+                layer.to_string(),
+                windows.to_string(),
+                format!("{:.2}", 100.0 * rate),
+                sparse.to_string(),
+                dense.to_string(),
+            ]);
+        }
         format!(
             "{}\nfleet: {} streams x {} windows in {:.2}s = {:.1} windows/s\n\
              occupancy {:.2} | service p50 {:.0}µs p99 {:.0}µs | digest {}\n\
-             \nper-stage ISP timing (frame-weighted means across streams):\n{}",
+             \nper-stage ISP timing (frame-weighted means across streams):\n{}\
+             \nper-layer SNN spike rate + dispatch (window-weighted across streams):\n{}",
             table.render(),
             self.streams.len(),
             self.cfg.windows_per_stream,
@@ -375,6 +462,7 @@ impl FleetReport {
             self.service_pct_us(99.0),
             self.digest_hex(),
             stage_table.render(),
+            snn_table.render(),
         )
     }
 
@@ -492,6 +580,36 @@ mod tests {
         assert!(text.contains("occupancy"));
         assert!(text.contains(&r.digest_hex()));
         assert!(text.contains("per-stage ISP timing"));
+    }
+
+    #[test]
+    fn snn_layer_rows_weight_rates_by_windows() {
+        // stream 0: one window at rates [0.1, 0.3], all sparse;
+        // stream 1: three windows at rates [0.2, 0.5], layer 1 dense
+        let m0 = SystemMetrics::new();
+        m0.snn_layers.record(&[0.1, 0.3], &[true, true]);
+        let m1 = SystemMetrics::new();
+        for _ in 0..3 {
+            m1.snn_layers.record(&[0.2, 0.5], &[true, false]);
+        }
+        let s0 = StreamSummary::from_outcomes(&prof(0), &[outcome(0, 10, 30.0, 1)], &m0);
+        let s1 = StreamSummary::from_outcomes(&prof(1), &[outcome(0, 20, 28.0, 1)], &m1);
+        let r = FleetReport::assemble(FleetConfig::default(), vec![s0, s1], 1.0);
+        let rows = r.snn_layer_rows();
+        assert_eq!(rows.len(), 2);
+        let (layer, windows, rate, sparse, dense) = rows[0];
+        assert_eq!((layer, windows), (0, 4));
+        assert!((rate - (0.1 + 3.0 * 0.2) / 4.0).abs() < 1e-6, "weighted rate {rate}");
+        assert_eq!((sparse, dense), (4, 0));
+        let (_, _, rate1, sparse1, dense1) = rows[1];
+        assert!((rate1 - (0.3 + 3.0 * 0.5) / 4.0).abs() < 1e-6);
+        assert_eq!((sparse1, dense1), (1, 3));
+        // the aggregate JSON and rendered table carry the same numbers
+        let j = r.to_json();
+        let agg = j.get("aggregate").unwrap().get("snn_layers").unwrap();
+        let l1 = &agg.as_arr().unwrap()[1];
+        assert_eq!(l1.get("dense").unwrap().as_f64(), Some(3.0));
+        assert!(r.render().contains("per-layer SNN spike rate"));
     }
 
     #[test]

@@ -4,8 +4,11 @@
 //! energy versus frame-based CNNs. Make it a measurement:
 //!
 //! * SNN NPU:  `E = synops * pj_per_synop + neuron_steps * pj_update`
-//!   (synops counted by the Rust twin; a synop is a sparse int8
-//!   accumulate, far cheaper than a dense MAC);
+//!   (`ForwardStats.synops` is **exact** since the event-driven compute
+//!   core: every gathered (spike, weight) pair is counted at its gather
+//!   site on whichever kernel served the layer — no dense-MAC-derived
+//!   proxy; a synop is a sparse int8 accumulate, far cheaper than a
+//!   dense MAC);
 //! * frame CNN: `E = dense_macs * pj_per_mac`;
 //! * ISP:      `E = pixels * pj_per_pixel_stage * stages`;
 //! * plus static power integrated over the frame time.
@@ -56,6 +59,17 @@ impl EnergyModel {
         }
     }
 
+    /// Per-conv-layer dynamic synop energy (µJ), from the exact
+    /// `layer_synops` counts (spiking layers, head last) — where the
+    /// sparsity budget goes inside one inference.
+    pub fn snn_layer_uj(&self, stats: &ForwardStats) -> Vec<f64> {
+        stats
+            .layer_synops
+            .iter()
+            .map(|&s| s as f64 * self.hw.pj_per_synop * 1e-6)
+            .collect()
+    }
+
     /// Dense frame-CNN energy for the same workload (the E4 baseline).
     pub fn cnn_inference(&self, dense_macs: u64, frame_us: f64) -> EnergyReport {
         EnergyReport {
@@ -87,6 +101,7 @@ mod tests {
             layer_activity: vec![(spikes, neurons)],
             synops,
             dense_macs: synops * 10,
+            ..Default::default()
         }
     }
 
@@ -133,5 +148,24 @@ mod tests {
     fn report_total_is_sum() {
         let r = EnergyReport { dynamic_uj: 1.5, static_uj: 0.5 };
         assert_eq!(r.total_uj(), 2.0);
+    }
+
+    #[test]
+    fn layer_energy_splits_exact_synops() {
+        let m = EnergyModel::new(&HwConfig::default());
+        let s = ForwardStats {
+            layer_activity: vec![(10, 100), (5, 100)],
+            synops: 1_700,
+            layer_synops: vec![1_000, 500, 200], // two layers + head
+            dense_macs: 50_000,
+            ..Default::default()
+        };
+        let per_layer = m.snn_layer_uj(&s);
+        assert_eq!(per_layer.len(), 3);
+        // layer split sums to the total synop energy term
+        let total_synop_uj = s.synops as f64 * m.hw.pj_per_synop * 1e-6;
+        let sum: f64 = per_layer.iter().sum();
+        assert!((sum - total_synop_uj).abs() < 1e-12);
+        assert!(per_layer[0] > per_layer[2]);
     }
 }

@@ -50,6 +50,7 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "free-run", help: "fleet: disable per-window lockstep", is_switch: true, default: None },
         FlagSpec { name: "json", help: "run/fleet: emit machine-readable JSON instead of tables", is_switch: true, default: None },
         FlagSpec { name: "isp-stages", help: "ISP stage mask: \"all\", a list of stages to enable (dpc,awb,demosaic,nlm,gamma,csc), or -stage terms to drop from the full graph (e.g. \"-nlm,-csc\")", is_switch: false, default: None },
+        FlagSpec { name: "sparse-threshold", help: "SNN activity-adaptive dispatch threshold: spike rate (0..1) above which the NPU plans a layer onto the dense kernel instead of the event-driven sparse path (outputs are identical either way; drives the sparse/dense split reported in metrics and the fleet report)", is_switch: false, default: None },
     ]
 }
 
@@ -68,6 +69,11 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     }
     if let Some(spec) = args.explicit("isp-stages") {
         cfg.isp.stages = StageMask::parse(spec)?;
+    }
+    if let Some(t) = args.explicit("sparse-threshold") {
+        cfg.npu.sparse_threshold = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--sparse-threshold must be a number in [0,1]"))?;
     }
     cfg.validate()?;
     Ok(cfg)

@@ -261,6 +261,152 @@ impl IspStageMetrics {
     }
 }
 
+/// JSON keys of the per-layer SNN export — shared with
+/// `fleet::report::FleetReport::snn_layer_rows` so producer and consumer
+/// cannot silently drift apart.
+pub const SNN_LAYERS_KEY: &str = "snn_layers";
+pub const SNN_KEY_LAYER: &str = "layer";
+pub const SNN_KEY_WINDOWS: &str = "windows";
+pub const SNN_KEY_MEAN_RATE: &str = "mean_rate";
+pub const SNN_KEY_SPARSE: &str = "sparse";
+pub const SNN_KEY_DENSE: &str = "dense";
+
+/// Upper bounds (spike rate) of the spike-rate histogram buckets.
+pub const SNN_RATE_BUCKETS: [f64; 8] =
+    [0.005, 0.01, 0.02, 0.05, 0.10, 0.20, 0.50, 1.0];
+
+/// Deepest spiking stack we track (the four backbones top out at 10
+/// spiking layers; extra headroom costs a few atomics).
+pub const MAX_SNN_LAYERS: usize = 16;
+
+/// One spiking layer's accumulators: windows observed, summed firing
+/// rate (parts-per-million so an atomic u64 carries it losslessly for
+/// any realistic window count), and sparse-vs-dense dispatch tallies.
+#[derive(Debug, Default)]
+struct SnnLane {
+    rate_ppm_sum: AtomicU64,
+    windows: AtomicU64,
+    sparse: AtomicU64,
+    dense: AtomicU64,
+}
+
+/// Per-layer SNN spike-rate + dispatch metrics, fed from `InferReply`
+/// (`rates` + `sparse_layers`), exported in [`SystemMetrics::snapshot`]
+/// under [`SNN_LAYERS_KEY`] — where the sparsity budget goes.
+#[derive(Debug)]
+pub struct SnnLayerMetrics {
+    lanes: [SnnLane; MAX_SNN_LAYERS],
+    /// Histogram over every (layer, window) rate sample.
+    rate_hist: [AtomicU64; SNN_RATE_BUCKETS.len()],
+}
+
+impl Default for SnnLayerMetrics {
+    fn default() -> Self {
+        Self {
+            lanes: std::array::from_fn(|_| SnnLane::default()),
+            rate_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl SnnLayerMetrics {
+    /// Fold one window's per-layer rates + dispatch plan in (lock-free).
+    /// `sparse` uses the same layer indexing as `rates`.
+    pub fn record(&self, rates: &[f32], sparse: &[bool]) {
+        for (i, &r) in rates.iter().take(MAX_SNN_LAYERS).enumerate() {
+            let r = r.clamp(0.0, 1.0) as f64;
+            let lane = &self.lanes[i];
+            lane.rate_ppm_sum.fetch_add((r * 1e6).round() as u64, Ordering::Relaxed);
+            lane.windows.fetch_add(1, Ordering::Relaxed);
+            if sparse.get(i).copied().unwrap_or(true) {
+                lane.sparse.fetch_add(1, Ordering::Relaxed);
+            } else {
+                lane.dense.fetch_add(1, Ordering::Relaxed);
+            }
+            let bucket = SNN_RATE_BUCKETS
+                .iter()
+                .position(|&hi| r <= hi)
+                .unwrap_or(SNN_RATE_BUCKETS.len() - 1);
+            self.rate_hist[bucket].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Layers that have received at least one window.
+    pub fn layers(&self) -> usize {
+        self.lanes
+            .iter()
+            .rposition(|l| l.windows.load(Ordering::Relaxed) > 0)
+            .map_or(0, |i| i + 1)
+    }
+
+    pub fn windows(&self, layer: usize) -> u64 {
+        self.lanes[layer].windows.load(Ordering::Relaxed)
+    }
+
+    /// Mean firing rate of one layer across recorded windows.
+    pub fn mean_rate(&self, layer: usize) -> f64 {
+        let w = self.windows(layer);
+        if w == 0 {
+            0.0
+        } else {
+            self.lanes[layer].rate_ppm_sum.load(Ordering::Relaxed) as f64 / 1e6 / w as f64
+        }
+    }
+
+    pub fn sparse(&self, layer: usize) -> u64 {
+        self.lanes[layer].sparse.load(Ordering::Relaxed)
+    }
+
+    pub fn dense(&self, layer: usize) -> u64 {
+        self.lanes[layer].dense.load(Ordering::Relaxed)
+    }
+
+    /// One line per active layer: `L<i>=rate%/sparse/dense`.
+    pub fn report(&self) -> String {
+        if self.layers() == 0 {
+            return "none".to_string();
+        }
+        (0..self.layers())
+            .map(|i| {
+                format!(
+                    "L{i}={:.1}%/{}s/{}d",
+                    100.0 * self.mean_rate(i),
+                    self.sparse(i),
+                    self.dense(i)
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// `{layers: [{layer, windows, mean_rate, sparse, dense}...],
+    ///   rate_hist: [{le, count}...]}` for the JSON export.
+    pub fn snapshot(&self) -> Json {
+        let layers = (0..self.layers())
+            .map(|i| {
+                Json::obj(vec![
+                    (SNN_KEY_LAYER, Json::num(i as f64)),
+                    (SNN_KEY_WINDOWS, Json::num(self.windows(i) as f64)),
+                    (SNN_KEY_MEAN_RATE, Json::num(self.mean_rate(i))),
+                    (SNN_KEY_SPARSE, Json::num(self.sparse(i) as f64)),
+                    (SNN_KEY_DENSE, Json::num(self.dense(i) as f64)),
+                ])
+            })
+            .collect();
+        let hist = SNN_RATE_BUCKETS
+            .iter()
+            .enumerate()
+            .map(|(i, &hi)| {
+                Json::obj(vec![
+                    ("le", Json::num(hi)),
+                    ("count", Json::num(self.rate_hist[i].load(Ordering::Relaxed) as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("layers", Json::arr(layers)), ("rate_hist", Json::arr(hist))])
+    }
+}
+
 /// The coordinator's metric set (one instance per running system).
 #[derive(Debug, Default)]
 pub struct SystemMetrics {
@@ -275,6 +421,9 @@ pub struct SystemMetrics {
     pub isp_latency: LatencyHist,
     /// Per-stage ISP wall time + bypass counts (the stage-graph breakdown).
     pub isp_stages: IspStageMetrics,
+    /// Per-layer SNN spike rates + sparse/dense dispatch (the sparsity
+    /// budget breakdown).
+    pub snn_layers: SnnLayerMetrics,
 }
 
 impl SystemMetrics {
@@ -285,7 +434,7 @@ impl SystemMetrics {
     pub fn report(&self) -> String {
         format!(
             "windows={} batches={} detections={} isp_frames={} param_updates={}\n\
-             npu:  {}\ne2e:  {}\nisp:  {}\nstages: {}",
+             npu:  {}\ne2e:  {}\nisp:  {}\nstages: {}\nsnn:  {}",
             self.windows_in.get(),
             self.batches_executed.get(),
             self.detections_out.get(),
@@ -295,6 +444,7 @@ impl SystemMetrics {
             self.e2e_latency.report(),
             self.isp_latency.report(),
             self.isp_stages.report(),
+            self.snn_layers.report(),
         )
     }
 
@@ -325,6 +475,7 @@ impl SystemMetrics {
                 ]),
             ),
             (ISP_STAGES_KEY, self.isp_stages.snapshot()),
+            (SNN_LAYERS_KEY, self.snn_layers.snapshot()),
         ])
     }
 }
@@ -444,6 +595,49 @@ mod tests {
         assert_eq!(stage.get("frames").unwrap().as_f64(), Some(1.0));
         assert_eq!(stage.get("bypassed").unwrap().as_f64(), Some(1.0));
         assert!(m.report().contains("stages:"));
+    }
+
+    #[test]
+    fn snn_lanes_accumulate_and_export() {
+        let m = SystemMetrics::new();
+        m.snn_layers.record(&[0.10, 0.30, 0.004], &[true, false, true]);
+        m.snn_layers.record(&[0.20, 0.40, 0.006], &[true, false, true]);
+        assert_eq!(m.snn_layers.layers(), 3);
+        assert_eq!(m.snn_layers.windows(0), 2);
+        assert!((m.snn_layers.mean_rate(0) - 0.15).abs() < 1e-6);
+        assert!((m.snn_layers.mean_rate(1) - 0.35).abs() < 1e-6);
+        assert_eq!(m.snn_layers.sparse(0), 2);
+        assert_eq!((m.snn_layers.sparse(1), m.snn_layers.dense(1)), (0, 2));
+        let j = m.snapshot();
+        let layers = j.get(SNN_LAYERS_KEY).unwrap().get("layers").unwrap();
+        let l1 = &layers.as_arr().unwrap()[1];
+        assert_eq!(l1.get(SNN_KEY_LAYER).unwrap().as_f64(), Some(1.0));
+        assert_eq!(l1.get(SNN_KEY_DENSE).unwrap().as_f64(), Some(2.0));
+        assert!((l1.get(SNN_KEY_MEAN_RATE).unwrap().as_f64().unwrap() - 0.35).abs() < 1e-6);
+        // histogram: 0.004 -> bucket 0 (<=0.005), 0.006 -> bucket 1
+        let hist = j.get(SNN_LAYERS_KEY).unwrap().get("rate_hist").unwrap();
+        let b0 = &hist.as_arr().unwrap()[0];
+        assert_eq!(b0.get("count").unwrap().as_f64(), Some(1.0));
+        assert!(m.report().contains("snn:"));
+        // serializes and parses back
+        let text = j.to_string();
+        assert_eq!(crate::jsonlite::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn snn_missing_dispatch_defaults_to_sparse() {
+        let m = SnnLayerMetrics::default();
+        m.record(&[0.1, 0.2], &[]); // dispatch plan absent (old artifacts)
+        assert_eq!(m.sparse(0), 1);
+        assert_eq!(m.dense(1), 0);
+    }
+
+    #[test]
+    fn snn_empty_reports_none() {
+        let m = SnnLayerMetrics::default();
+        assert_eq!(m.layers(), 0);
+        assert_eq!(m.report(), "none");
+        assert_eq!(m.snapshot().get("layers").unwrap().as_arr().unwrap().len(), 0);
     }
 
     #[test]

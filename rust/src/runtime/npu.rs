@@ -22,6 +22,13 @@ pub struct NpuOutput {
     pub heads: Vec<Vec<f32>>,
     /// Per-spiking-layer mean firing rates (batch-aggregated by the model).
     pub rates: Vec<f32>,
+    /// Per-spiking-layer dispatch plan of the activity-adaptive NPU core:
+    /// `true` = the layer's *input* activity (voxel occupancy for layer
+    /// 0, the previous layer's rate after) keeps it on the event-driven
+    /// sparse path, `false` = it crossed the threshold into the dense
+    /// kernel. Same indexing as `rates`; the choice never affects
+    /// outputs — it's the sparsity budget the fleet report tracks.
+    pub sparse_layers: Vec<bool>,
     /// PJRT execute wall time.
     pub execute_us: f64,
 }
@@ -35,6 +42,8 @@ pub struct NpuEngine {
     /// batch -> compiled executable.
     executables: HashMap<usize, xla::PjRtLoadedExecutable>,
     head_len: usize,
+    /// Activity-adaptive dispatch threshold (see `NpuConfig::sparse_threshold`).
+    sparse_threshold: f32,
 }
 
 impl NpuEngine {
@@ -64,11 +73,38 @@ impl NpuEngine {
             executables,
             head_len,
             manifest,
+            sparse_threshold: crate::snn::DEFAULT_SPARSE_THRESHOLD,
         })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Configure the activity-adaptive dispatch threshold (spike rate
+    /// above which a layer is planned onto the dense kernel).
+    pub fn set_sparse_threshold(&mut self, threshold: f32) {
+        self.sparse_threshold = threshold;
+    }
+
+    pub fn sparse_threshold(&self) -> f32 {
+        self.sparse_threshold
+    }
+
+    /// Dispatch plan from measured activity: layer `i` is dispatched on
+    /// the rate of its **input** plane — the voxel occupancy for layer 0,
+    /// then layer `i-1`'s output rate (the closest signal the artifact
+    /// reports; pooling/concat between layers shift it slightly). `true`
+    /// = the event-driven path serves the layer, `false` = dense
+    /// fallback. Mirrors `snn::layers::conv2d_adaptive`'s decision.
+    pub fn dispatch_plan(&self, input_rate: f32, rates: &[f32]) -> Vec<bool> {
+        let mut plan = Vec::with_capacity(rates.len());
+        let mut feeding = input_rate;
+        for &r in rates {
+            plan.push(feeding <= self.sparse_threshold);
+            feeding = r;
+        }
+        plan
     }
 
     pub fn backbone(&self) -> &str {
@@ -149,7 +185,18 @@ impl NpuEngine {
             .enumerate()
             .map(|(i, _)| head_flat[i * self.head_len..(i + 1) * self.head_len].to_vec())
             .collect();
-        Ok(NpuOutput { heads, rates, execute_us })
+        // Input spike rate over the real (non-padded) samples: what the
+        // first layer's dispatcher actually sees.
+        let active: usize = voxels.iter().map(|v| v.occupancy()).sum();
+        let input_rate = active as f32 / (voxels.len() * sample_len) as f32;
+        // Zero-padded samples are inert (drive no spikes) yet still count
+        // in the model's batch-mean `rates`; undo the n/batch dilution so
+        // the plan reflects real-sample activity, as `input_rate` does.
+        let pad_scale = batch as f32 / voxels.len() as f32;
+        let real_rates: Vec<f32> =
+            rates.iter().map(|&r| (r * pad_scale).min(1.0)).collect();
+        let sparse_layers = self.dispatch_plan(input_rate, &real_rates);
+        Ok(NpuOutput { heads, rates, sparse_layers, execute_us })
     }
 
     /// Compile + run the standalone LIF demo kernel (runtime smoke test).

@@ -7,9 +7,9 @@
 
 use anyhow::{bail, Result};
 
-use super::layers::{concat_channels, conv2d_same, conv2d_dense_macs, maxpool2};
+use super::layers::{conv2d_adaptive, conv2d_dense_macs, ConvKernel, DEFAULT_SPARSE_THRESHOLD};
 use super::lif::LifState;
-use super::tensor::Tensor;
+use super::tensor::{SpikePlane, Tensor};
 use super::wts;
 use crate::events::spec;
 use crate::events::voxel::VoxelGrid;
@@ -116,15 +116,54 @@ pub fn backbone_spec(kind: BackboneKind) -> Vec<LayerSpec> {
     }
 }
 
+/// How many timesteps of one conv layer each kernel served — the
+/// dispatcher's per-layer record (rates vary across timesteps, so one
+/// layer can legitimately mix kernels within a window).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DispatchCounts {
+    pub gather: u64,
+    pub popcount: u64,
+    pub dense: u64,
+}
+
+impl DispatchCounts {
+    pub fn note(&mut self, kernel: ConvKernel) {
+        match kernel {
+            ConvKernel::SparseGather => self.gather += 1,
+            ConvKernel::Popcount => self.popcount += 1,
+            ConvKernel::Dense => self.dense += 1,
+        }
+    }
+
+    /// Timesteps served on an event-driven path.
+    pub fn sparse(&self) -> u64 {
+        self.gather + self.popcount
+    }
+
+    pub fn total(&self) -> u64 {
+        self.gather + self.popcount + self.dense
+    }
+}
+
 /// Per-forward activity statistics (E1 sparsity / E4 energy inputs).
+///
+/// `synops` is **exact**: every gathered (spike, weight) pair increments
+/// it at the gather site, on every kernel path — `hw::energy` consumes a
+/// measurement, not a dense-MAC-derived estimate.
 #[derive(Debug, Clone, Default)]
 pub struct ForwardStats {
     /// Per spiking layer: (spikes emitted, neuron-steps).
     pub layer_activity: Vec<(u64, u64)>,
-    /// Event-driven MACs actually performed.
+    /// Event-driven MACs actually performed (exact, counted at gather sites).
     pub synops: u64,
     /// Dense MACs an equivalent frame-CNN would perform (one frame).
     pub dense_macs: u64,
+    /// Exact synops per conv layer: one entry per spiking layer, plus the
+    /// non-spiking head as the final entry.
+    pub layer_synops: Vec<u64>,
+    /// Kernel-dispatch decisions per conv layer (same indexing as
+    /// `layer_synops`: spiking layers then head).
+    pub layer_dispatch: Vec<DispatchCounts>,
 }
 
 impl ForwardStats {
@@ -161,6 +200,13 @@ pub struct Backbone {
     pub params: Vec<(Tensor, Vec<f32>)>,
     pub decay: f32,
     pub v_th: f32,
+    /// Activity-adaptive dispatch threshold: a layer-timestep whose input
+    /// spike rate exceeds it runs the dense kernel. Defaults to
+    /// [`DEFAULT_SPARSE_THRESHOLD`]; twin users set it explicitly (e.g.
+    /// [`Backbone::with_sparse_threshold`] from `npu.sparse_threshold`) —
+    /// the serving path's `--sparse-threshold` flag governs the NPU
+    /// engine's dispatch plan, not this field.
+    pub sparse_threshold: f32,
 }
 
 impl Backbone {
@@ -176,16 +222,56 @@ impl Backbone {
                 params.len()
             );
         }
-        Ok(Self { kind, params, decay: spec::LIF_DECAY, v_th: spec::LIF_THRESHOLD })
+        Ok(Self {
+            kind,
+            params,
+            decay: spec::LIF_DECAY,
+            v_th: spec::LIF_THRESHOLD,
+            sparse_threshold: DEFAULT_SPARSE_THRESHOLD,
+        })
+    }
+
+    /// Set the dispatch threshold (builder style) — e.g. from a
+    /// `NpuConfig::sparse_threshold` when a config-driven caller runs the
+    /// twin. [`QuantBackbone::from_backbone`](super::quant::QuantBackbone)
+    /// inherits it.
+    pub fn with_sparse_threshold(mut self, threshold: f32) -> Self {
+        self.sparse_threshold = threshold;
+        self
     }
 
     /// Forward one voxel window; returns `(head [A*(5+C),S,S], stats)`.
     ///
-    /// Numerics mirror the Python `apply` (rate-decoded non-spiking head).
+    /// Numerics mirror the Python `apply` (rate-decoded non-spiking head);
+    /// every kernel the dispatcher may pick is bit-exact with the dense
+    /// reference, so outputs are independent of the threshold.
     pub fn forward(&self, voxel: &VoxelGrid) -> (Tensor, ForwardStats) {
-        run_forward(self.kind, &self.params, voxel, self.decay, self.v_th, |t, w, b, s, g, syn| {
-            conv2d_same(t, w, b, s, g, syn)
+        self.forward_with_threshold(voxel, self.sparse_threshold)
+    }
+
+    /// Forward with an explicit dispatch threshold: `1.0` forces the
+    /// sparse paths, `0.0` forces dense on any activity (bench pinning).
+    pub fn forward_with_threshold(
+        &self,
+        voxel: &VoxelGrid,
+        threshold: f32,
+    ) -> (Tensor, ForwardStats) {
+        run_forward(self.kind, &self.params, voxel, self.decay, self.v_th, |x, p, s, g, stats| {
+            conv2d_adaptive(x, &p.0, &p.1, s, g, threshold, &mut stats.synops)
         })
+    }
+}
+
+/// Weight-shape access the shared forward driver needs from any param
+/// representation (f32 or int8) to track topology and dense-MAC cost.
+pub trait ConvWeights {
+    /// `[C_out, C_in/groups, kh, kw]`.
+    fn wshape(&self) -> &[usize];
+}
+
+impl ConvWeights for (Tensor, Vec<f32>) {
+    fn wshape(&self) -> &[usize] {
+        &self.0.shape
     }
 }
 
@@ -203,29 +289,41 @@ pub fn expected_param_count(kind: BackboneKind) -> usize {
     n + 1 // head
 }
 
-/// Shared forward driver, parameterized over the conv implementation so the
-/// int8 engine ([`super::quant`]) reuses the exact control flow.
-pub fn run_forward<F>(
+/// Shared forward driver, parameterized over the param representation and
+/// conv implementation so the int8 engine ([`super::quant`]) reuses the
+/// exact control flow.
+///
+/// Activations flow between layers as bit-packed [`SpikePlane`]s: the LIF
+/// step emits packed words + the event list + the spike count in one pass
+/// (no f32 spike buffer, no nonzero re-scan), and each conv gathers
+/// straight from the plane. The closure returns the current tensor plus
+/// which kernel served the call; per-layer synops and dispatch decisions
+/// land in [`ForwardStats`].
+pub fn run_forward<P, F>(
     kind: BackboneKind,
-    params: &[(Tensor, Vec<f32>)],
+    params: &[P],
     voxel: &VoxelGrid,
     decay: f32,
     v_th: f32,
     mut conv: F,
 ) -> (Tensor, ForwardStats)
 where
-    F: FnMut(&Tensor, &Tensor, &[f32], usize, usize, &mut u64) -> Tensor,
+    P: ConvWeights,
+    F: FnMut(&SpikePlane, &P, usize, usize, &mut ForwardStats) -> (Tensor, ConvKernel),
 {
     let t_bins = voxel.t_bins;
     let mut stats = ForwardStats::default();
 
-    // Per-timestep input planes [P, H, W].
+    // Per-timestep input planes [P, H, W] — the voxel grid is one-hot
+    // binary, so it packs losslessly.
     let plane = voxel.polarities * voxel.height * voxel.width;
-    let mut xs: Vec<Tensor> = (0..t_bins)
+    let mut xs: Vec<SpikePlane> = (0..t_bins)
         .map(|t| {
-            Tensor::from_vec(
-                &[voxel.polarities, voxel.height, voxel.width],
-                voxel.data[t * plane..(t + 1) * plane].to_vec(),
+            SpikePlane::from_slice(
+                voxel.polarities,
+                voxel.height,
+                voxel.width,
+                &voxel.data[t * plane..(t + 1) * plane],
             )
         })
         .collect();
@@ -233,29 +331,36 @@ where
     let mut idx = 0usize;
 
     // One spiking conv applied at every timestep + shared LIF state.
-    let mut spiking_conv = |xs: &mut Vec<Tensor>,
+    let mut spiking_conv = |xs: &mut Vec<SpikePlane>,
                             idx: &mut usize,
                             stride: usize,
                             groups_of: &dyn Fn(usize) -> usize,
                             stats: &mut ForwardStats| {
-        let (w, b) = &params[*idx];
+        let p = &params[*idx];
         *idx += 1;
+        let ws = p.wshape();
         let mut lif: Option<LifState> = None;
         let mut spikes_total = 0u64;
         let mut neuron_steps = 0u64;
+        let mut disp = DispatchCounts::default();
+        let syn0 = stats.synops;
         for x in xs.iter_mut() {
-            let groups = groups_of(x.shape[0]);
+            let groups = groups_of(x.channels);
             stats.dense_macs += conv2d_dense_macs(
-                x.shape[0], x.shape[1], x.shape[2], w.shape[0], w.shape[2], stride, groups,
+                x.channels, x.height, x.width, ws[0], ws[2], stride, groups,
             );
-            let cur = conv(x, w, b, stride, groups, &mut stats.synops);
+            let (cur, kernel) = conv(x, p, stride, groups, stats);
+            disp.note(kernel);
             let st = lif.get_or_insert_with(|| LifState::new(cur.len(), decay, v_th));
-            let mut sp = vec![0.0f32; cur.len()];
-            spikes_total += st.step(&cur.data, &mut sp) as u64;
+            // the input plane is consumed — recycle its allocations as
+            // this timestep's output plane (step_plane clears it)
+            x.reset_shape(cur.shape[0], cur.shape[1], cur.shape[2]);
+            spikes_total += st.step_plane(&cur, x) as u64;
             neuron_steps += cur.len() as u64;
-            *x = Tensor::from_vec(&cur.shape, sp);
         }
         stats.layer_activity.push((spikes_total, neuron_steps));
+        stats.layer_synops.push(stats.synops - syn0);
+        stats.layer_dispatch.push(disp);
     };
 
     for layer in backbone_spec(kind) {
@@ -265,15 +370,15 @@ where
             }
             LayerSpec::Pool => {
                 for x in xs.iter_mut() {
-                    *x = maxpool2(x);
+                    *x = x.maxpool2();
                 }
             }
             LayerSpec::DenseBlock { layers, .. } => {
                 for _ in 0..layers {
-                    let saved: Vec<Tensor> = xs.clone();
+                    let saved: Vec<SpikePlane> = xs.clone();
                     spiking_conv(&mut xs, &mut idx, 1, &|_| 1, &mut stats);
                     for (x, s) in xs.iter_mut().zip(saved.iter()) {
-                        *x = concat_channels(s, x);
+                        *x = s.concat(x);
                     }
                 }
             }
@@ -285,13 +390,17 @@ where
     }
 
     // Non-spiking head: average head-conv currents over time.
-    let (w, b) = &params[idx];
+    let p = &params[idx];
+    let ws = p.wshape();
     let mut head: Option<Tensor> = None;
+    let mut head_disp = DispatchCounts::default();
+    let head_syn0 = stats.synops;
     for x in &xs {
         stats.dense_macs += conv2d_dense_macs(
-            x.shape[0], x.shape[1], x.shape[2], w.shape[0], w.shape[2], 1, 1,
+            x.channels, x.height, x.width, ws[0], ws[2], 1, 1,
         );
-        let cur = conv(x, w, b, 1, 1, &mut stats.synops);
+        let (cur, kernel) = conv(x, p, 1, 1, &mut stats);
+        head_disp.note(kernel);
         match &mut head {
             None => head = Some(cur),
             Some(h) => {
@@ -301,6 +410,8 @@ where
             }
         }
     }
+    stats.layer_synops.push(stats.synops - head_syn0);
+    stats.layer_dispatch.push(head_disp);
     let mut head = head.expect("at least one timestep");
     for v in head.data.iter_mut() {
         *v /= t_bins as f32;

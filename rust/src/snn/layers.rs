@@ -1,12 +1,50 @@
-//! Conv / pool primitives for the SNN twin (NCHW, SAME padding).
+//! Conv / pool primitives for the SNN twin (NCHW, SAME padding) — the
+//! event-driven sparse compute core.
 //!
 //! Numerics mirror `jax.lax.conv_general_dilated(..., padding="SAME",
 //! dimension_numbers=("NCHW","OIHW","NCHW"), feature_group_count=groups)`
 //! plus bias. Accumulation is f32 in input order (kh, kw, ic) — same
 //! nesting the XLA CPU backend uses for small convs, keeping the twin
 //! within float tolerance of the artifacts.
+//!
+//! Three kernels serve the spiking layers, all **bit-exact** with the
+//! dense reference because they perform the *same additions in the same
+//! order* (spike × weight = weight for binary spikes, and silent taps
+//! contribute nothing):
+//!
+//! * [`conv2d_same`] — the dense NCHW loop (seed kernel, high-activity
+//!   fallback and the parity oracle);
+//! * [`conv2d_sparse_same`] — gather-conv over a [`SpikePlane`]: per
+//!   output tap it tests one per-group occupancy bit and only scans
+//!   channels when some spike exists there, so cost scales with activity;
+//! * [`conv2d_popcount_1x1`] — pointwise layers scan packed words with
+//!   `trailing_zeros`, skipping 64 silent pixels per test; synops are
+//!   accounted bit-parallel via `count_ones`.
+//!
+//! [`conv2d_adaptive`] picks per call from the measured spike rate: above
+//! the crossover threshold the dense kernel wins (the e1 sweep locates
+//! it); below it the sparse paths win. Dispatch never changes outputs —
+//! only wall time — which `tests/sparse_parity.rs` proves.
 
-use super::tensor::Tensor;
+use super::tensor::{SpikePlane, Tensor};
+
+/// Default activity-adaptive dispatch threshold: layers whose *input*
+/// spike rate exceeds this run the dense kernel. Calibrated by the e1
+/// synthetic-rate sweep (`cargo bench --bench e1_backbones`): on the
+/// 3x3 gather path the crossover sits between 20% and 50% activity;
+/// 0.25 keeps the common (<10%) regime sparse with margin.
+pub const DEFAULT_SPARSE_THRESHOLD: f32 = 0.25;
+
+/// Which kernel the dispatcher chose for one conv application.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvKernel {
+    /// Event-gathering conv (occupancy-masked taps).
+    SparseGather,
+    /// Bit-parallel pointwise path (1x1, stride 1, ungrouped).
+    Popcount,
+    /// Dense NCHW loop (high activity, or int8 dense fallback).
+    Dense,
+}
 
 /// SAME-padding conv: input `[C_in, H, W]`, weight `[C_out, C_in/g, kh, kw]`.
 ///
@@ -35,13 +73,7 @@ pub fn conv2d_same(
     assert_eq!(bias.len(), c_out);
     assert_eq!(c_out % groups, 0);
 
-    let h_out = h.div_ceil(stride);
-    let w_out = w.div_ceil(stride);
-    // SAME padding (TF convention): total pad = (out-1)*stride + k - in
-    let pad_h = ((h_out - 1) * stride + kh).saturating_sub(h);
-    let pad_w = ((w_out - 1) * stride + kw).saturating_sub(w);
-    let (pad_top, pad_left) = (pad_h / 2, pad_w / 2);
-
+    let (h_out, w_out, pad_top, pad_left) = same_geometry(h, w, kh, kw, stride);
     let mut out = Tensor::zeros(&[c_out, h_out, w_out]);
     let oc_per_g = c_out / groups;
     let mut local_synops = 0u64;
@@ -79,6 +111,206 @@ pub fn conv2d_same(
     }
     *synops += local_synops;
     out
+}
+
+/// SAME-padding conv geometry shared by every kernel (TF convention):
+/// `(h_out, w_out, pad_top, pad_left)`.
+#[inline]
+pub fn same_geometry(h: usize, w: usize, kh: usize, kw: usize, stride: usize) -> (usize, usize, usize, usize) {
+    let h_out = h.div_ceil(stride);
+    let w_out = w.div_ceil(stride);
+    let pad_h = ((h_out - 1) * stride + kh).saturating_sub(h);
+    let pad_w = ((w_out - 1) * stride + kw).saturating_sub(w);
+    (h_out, w_out, pad_h / 2, pad_w / 2)
+}
+
+/// Shared gather skeleton over a spike plane: [`conv2d_same`]'s loop
+/// nesting (oc, oy, ox, ky, kx, ic) with a per-group occupancy-mask tap
+/// skip, generic over the accumulator so the f32 gather kernel and the
+/// int8/i32 kernel (`quant::conv2d_i8_dense`) share one
+/// geometry/ordering/synop implementation — a one-sided edge-case fix
+/// here cannot break the parity contract. `add(acc, oc, ic, ky, kx)`
+/// folds one gathered (spike, weight) pair; `store(oc, site, acc)`
+/// receives the finished accumulator at output site `oy * w_out + ox`.
+pub(crate) fn gather_conv_same<A: Copy>(
+    input: &SpikePlane,
+    wshape: &[usize],
+    stride: usize,
+    groups: usize,
+    synops: &mut u64,
+    zero: A,
+    mut add: impl FnMut(A, usize, usize, usize, usize) -> A,
+    mut store: impl FnMut(usize, usize, A),
+) {
+    assert_eq!(wshape.len(), 4, "weight must be [O,I/g,kh,kw]");
+    let (c_in, h, w) = (input.channels, input.height, input.width);
+    let (c_out, cig, kh, kw) = (wshape[0], wshape[1], wshape[2], wshape[3]);
+    assert_eq!(c_in / groups, cig, "groups/channel mismatch");
+    assert_eq!(c_out % groups, 0);
+
+    let (h_out, w_out, pad_top, pad_left) = same_geometry(h, w, kh, kw, stride);
+    let oc_per_g = c_out / groups;
+    let wpr = input.words_per_row;
+    let rw = h * wpr;
+    let masks = input.group_or_masks(groups);
+    let mut local_synops = 0u64;
+
+    for oc in 0..c_out {
+        let g = oc / oc_per_g;
+        let ic0 = g * cig;
+        let gmask = &masks[g * rw..(g + 1) * rw];
+        for oy in 0..h_out {
+            for ox in 0..w_out {
+                let mut acc = zero;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad_top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let iy = iy as usize;
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad_left as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let ix = ix as usize;
+                        if gmask[iy * wpr + ix / 64] >> (ix % 64) & 1 == 0 {
+                            continue; // no channel in this group spiked here
+                        }
+                        for ic in 0..cig {
+                            if input.get(ic0 + ic, iy, ix) {
+                                acc = add(acc, oc, ic, ky, kx);
+                                local_synops += 1;
+                            }
+                        }
+                    }
+                }
+                store(oc, oy * w_out + ox, acc);
+            }
+        }
+    }
+    *synops += local_synops;
+}
+
+/// Event-driven gather-conv over a bit-packed spike plane.
+///
+/// Same loop nesting as [`conv2d_same`] (oc, oy, ox, ky, kx, ic), but a
+/// tap `(iy, ix)` is skipped with ONE bit test against the group's OR-ed
+/// occupancy mask when no channel spiked there; at active taps the inner
+/// loop adds the weight (spike × weight = weight — no multiplies) for
+/// each set channel bit, in ascending `ic` order. The addition sequence
+/// per output site is therefore identical to the dense kernel's, making
+/// the result bit-exact in f32, and `synops` counts exactly the gathered
+/// (spike, weight) pairs — the same pairs the dense kernel counts.
+pub fn conv2d_sparse_same(
+    input: &SpikePlane,
+    weight: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    synops: &mut u64,
+) -> Tensor {
+    assert_eq!(weight.shape.len(), 4, "weight must be [O,I/g,kh,kw]");
+    let c_out = weight.shape[0];
+    assert_eq!(bias.len(), c_out);
+    let (h_out, w_out, _, _) = same_geometry(
+        input.height, input.width, weight.shape[2], weight.shape[3], stride,
+    );
+    let mut out = Tensor::zeros(&[c_out, h_out, w_out]);
+    let hw = h_out * w_out;
+    gather_conv_same(
+        input,
+        &weight.shape,
+        stride,
+        groups,
+        synops,
+        0.0f32,
+        |acc, oc, ic, ky, kx| acc + weight.data[weight.idx4(oc, ic, ky, kx)],
+        |oc, site, acc| out.data[oc * hw + site] = acc + bias[oc],
+    );
+    out
+}
+
+/// Bit-parallel pointwise conv (1x1, stride 1, groups 1).
+///
+/// Scans each channel's packed occupancy words; a zero word skips 64
+/// pixels at once, set bits are walked with `trailing_zeros`, and the
+/// channel's weight column is added into every output channel at that
+/// pixel. The outer loop ascends `ic`, so per output site the additions
+/// happen in the dense kernel's order — bit-exact f32. Synops are
+/// accounted bit-parallel: `count_ones` per word × fan-out.
+pub fn conv2d_popcount_1x1(
+    input: &SpikePlane,
+    weight: &Tensor,
+    bias: &[f32],
+    synops: &mut u64,
+) -> Tensor {
+    assert_eq!(weight.shape.len(), 4);
+    assert_eq!((weight.shape[2], weight.shape[3]), (1, 1), "kernel must be 1x1");
+    let (c_in, h, w) = (input.channels, input.height, input.width);
+    assert_eq!(weight.shape[1], c_in, "popcount path is ungrouped");
+    let c_out = weight.shape[0];
+    assert_eq!(bias.len(), c_out);
+
+    let hw = h * w;
+    let mut acc = vec![0.0f32; c_out * hw];
+    let mut active = 0u64;
+    for ic in 0..c_in {
+        for y in 0..h {
+            for wi in 0..input.words_per_row {
+                let mut word = input.word(ic, y, wi);
+                if word == 0 {
+                    continue;
+                }
+                active += word.count_ones() as u64;
+                while word != 0 {
+                    let x = wi * 64 + word.trailing_zeros() as usize;
+                    word &= word - 1;
+                    let site = y * w + x;
+                    for (oc, lane) in acc.chunks_exact_mut(hw).enumerate() {
+                        // weight[oc, ic, 0, 0]
+                        lane[site] += weight.data[oc * c_in + ic];
+                    }
+                }
+            }
+        }
+    }
+    *synops += active * c_out as u64;
+    let mut out = Tensor::zeros(&[c_out, h, w]);
+    for oc in 0..c_out {
+        let b = bias[oc];
+        for (o, a) in out.data[oc * hw..(oc + 1) * hw]
+            .iter_mut()
+            .zip(&acc[oc * hw..(oc + 1) * hw])
+        {
+            *o = a + b;
+        }
+    }
+    out
+}
+
+/// Activity-adaptive dispatch: measured input spike rate above
+/// `threshold` falls back to the dense kernel (on the unpacked plane);
+/// below it, pointwise layers take the popcount path and everything else
+/// the gather path. All three are bit-exact, so the choice affects only
+/// wall time — never outputs (proven by `tests/sparse_parity.rs`).
+pub fn conv2d_adaptive(
+    input: &SpikePlane,
+    weight: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    threshold: f32,
+    synops: &mut u64,
+) -> (Tensor, ConvKernel) {
+    if input.rate() > threshold as f64 {
+        let dense = input.to_dense();
+        (conv2d_same(&dense, weight, bias, stride, groups, synops), ConvKernel::Dense)
+    } else if weight.shape[2] == 1 && weight.shape[3] == 1 && stride == 1 && groups == 1 {
+        (conv2d_popcount_1x1(input, weight, bias, synops), ConvKernel::Popcount)
+    } else {
+        (conv2d_sparse_same(input, weight, bias, stride, groups, synops), ConvKernel::SparseGather)
+    }
 }
 
 /// Dense (non-sparse) MAC count of the same conv — the frame-CNN cost
@@ -217,6 +449,102 @@ mod tests {
         assert_eq!(conv2d_dense_macs(2, 4, 4, 8, 3, 1, 1), 16 * 8 * 2 * 9);
         assert_eq!(conv2d_dense_macs(4, 4, 4, 4, 3, 1, 4), 16 * 4 * 1 * 9);
         assert_eq!(conv2d_dense_macs(1, 8, 8, 1, 3, 2, 1), 16 * 9);
+    }
+
+    use crate::snn::tensor::SpikePlane;
+    use crate::testkit::prop::forall;
+    use crate::util::SplitMix64;
+
+    fn random_binary(rng: &mut SplitMix64, n: usize, rate: f64) -> Vec<f32> {
+        (0..n).map(|_| if rng.uniform_in(0.0, 1.0) < rate { 1.0 } else { 0.0 }).collect()
+    }
+
+    #[test]
+    fn sparse_gather_bit_exact_with_dense() {
+        forall("sparse gather == dense conv (f32 bits)", 40, |g| {
+            let mut rng = SplitMix64::new(g.u64());
+            let groups = [1usize, 2][g.usize_in(0, 2)];
+            let cig = g.usize_in(1, 4);
+            let c_in = cig * groups;
+            let c_out = groups * g.usize_in(1, 4);
+            let k = [1usize, 3][g.usize_in(0, 2)];
+            let stride = g.usize_in(1, 3);
+            let (h, w) = (g.usize_in(2, 12), g.usize_in(2, 70));
+            let rate = [0.01, 0.05, 0.2, 0.5][g.usize_in(0, 4)];
+            let data = random_binary(&mut rng, c_in * h * w, rate);
+            let dense_in = Tensor::from_vec(&[c_in, h, w], data);
+            let plane = SpikePlane::from_dense(&dense_in);
+            let weight = Tensor::from_vec(
+                &[c_out, cig, k, k],
+                (0..c_out * cig * k * k).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+            );
+            let bias: Vec<f32> =
+                (0..c_out).map(|_| rng.uniform_in(-0.5, 0.5) as f32).collect();
+            let (mut syn_d, mut syn_s) = (0u64, 0u64);
+            let want = conv2d_same(&dense_in, &weight, &bias, stride, groups, &mut syn_d);
+            let got =
+                conv2d_sparse_same(&plane, &weight, &bias, stride, groups, &mut syn_s);
+            assert_eq!(want.shape, got.shape);
+            assert_eq!(want.data, got.data, "f32 outputs must be bit-exact");
+            assert_eq!(syn_d, syn_s, "synop accounting must agree");
+        });
+    }
+
+    #[test]
+    fn popcount_1x1_bit_exact_with_dense() {
+        forall("popcount 1x1 == dense conv (f32 bits)", 40, |g| {
+            let mut rng = SplitMix64::new(g.u64());
+            let c_in = g.usize_in(1, 8);
+            let c_out = g.usize_in(1, 8);
+            let (h, w) = (g.usize_in(1, 10), g.usize_in(1, 70));
+            let rate = [0.01, 0.05, 0.2, 0.5][g.usize_in(0, 4)];
+            let data = random_binary(&mut rng, c_in * h * w, rate);
+            let dense_in = Tensor::from_vec(&[c_in, h, w], data);
+            let plane = SpikePlane::from_dense(&dense_in);
+            let weight = Tensor::from_vec(
+                &[c_out, c_in, 1, 1],
+                (0..c_out * c_in).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+            );
+            let bias: Vec<f32> =
+                (0..c_out).map(|_| rng.uniform_in(-0.5, 0.5) as f32).collect();
+            let (mut syn_d, mut syn_s) = (0u64, 0u64);
+            let want = conv2d_same(&dense_in, &weight, &bias, 1, 1, &mut syn_d);
+            let got = conv2d_popcount_1x1(&plane, &weight, &bias, &mut syn_s);
+            assert_eq!(want.data, got.data, "f32 outputs must be bit-exact");
+            assert_eq!(syn_d, syn_s);
+        });
+    }
+
+    #[test]
+    fn adaptive_dispatch_picks_by_rate_and_shape() {
+        let mut rng = SplitMix64::new(9);
+        let data = random_binary(&mut rng, 4 * 8 * 8, 0.1);
+        let plane = SpikePlane::from_dense(&Tensor::from_vec(&[4, 8, 8], data));
+        let w3 = Tensor::from_vec(&[4, 4, 3, 3], vec![0.1; 4 * 4 * 9]);
+        let w1 = Tensor::from_vec(&[4, 4, 1, 1], vec![0.1; 16]);
+        let b = vec![0.0; 4];
+        let mut syn = 0u64;
+        let (_, k) = conv2d_adaptive(&plane, &w3, &b, 1, 1, 0.5, &mut syn);
+        assert_eq!(k, ConvKernel::SparseGather);
+        let (_, k) = conv2d_adaptive(&plane, &w1, &b, 1, 1, 0.5, &mut syn);
+        assert_eq!(k, ConvKernel::Popcount);
+        let (_, k) = conv2d_adaptive(&plane, &w3, &b, 1, 1, 0.01, &mut syn);
+        assert_eq!(k, ConvKernel::Dense, "rate above threshold must go dense");
+        // grouped 1x1 must not take the ungrouped popcount fast path
+        let wg = Tensor::from_vec(&[4, 2, 1, 1], vec![0.1; 8]);
+        let (_, k) = conv2d_adaptive(&plane, &wg, &b, 1, 2, 0.5, &mut syn);
+        assert_eq!(k, ConvKernel::SparseGather);
+    }
+
+    #[test]
+    fn empty_plane_sparse_conv_is_bias_only() {
+        let plane = SpikePlane::new(2, 4, 4);
+        let w = Tensor::from_vec(&[3, 2, 3, 3], vec![1.0; 3 * 2 * 9]);
+        let mut syn = 0u64;
+        let out = conv2d_sparse_same(&plane, &w, &[0.5, -0.5, 0.0], 1, 1, &mut syn);
+        assert_eq!(syn, 0);
+        assert!(out.data[..16].iter().all(|&v| v == 0.5));
+        assert!(out.data[16..32].iter().all(|&v| v == -0.5));
     }
 
     #[test]

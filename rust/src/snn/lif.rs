@@ -11,6 +11,8 @@
 //! Must agree bit-for-bit (f32) with `python/compile/kernels/ref.py`; the
 //! integration test `npu_twin.rs` checks agreement through the artifacts.
 
+use super::tensor::{SpikePlane, Tensor};
+
 /// Per-layer LIF state: one membrane value per neuron.
 #[derive(Debug, Clone)]
 pub struct LifState {
@@ -44,6 +46,48 @@ impl LifState {
             } else {
                 spikes[i] = 0.0;
                 self.membrane[i] = u;
+            }
+        }
+        count
+    }
+
+    /// One timestep straight into a bit-packed [`SpikePlane`]: integrate
+    /// the `[C, H, W]` `currents`, set occupancy bits and append events
+    /// for firing neurons, apply hard reset. Returns the spike count.
+    ///
+    /// Identical op order and fire decisions to [`LifState::step`], but
+    /// the packed words + raster-order event list are built in the same
+    /// pass — no f32 spike buffer is materialized and no re-scan for
+    /// nonzeros happens downstream.
+    pub fn step_plane(&mut self, currents: &Tensor, out: &mut SpikePlane) -> usize {
+        debug_assert_eq!(currents.shape.len(), 3, "currents must be [C,H,W]");
+        debug_assert_eq!(currents.len(), self.membrane.len());
+        debug_assert_eq!(
+            out.channels * out.height * out.width,
+            currents.len(),
+            "plane shape mismatch"
+        );
+        out.clear();
+        let (h, w) = (out.height, out.width);
+        let wpr = out.words_per_row;
+        let mut count = 0;
+        let mut i = 0;
+        for c in 0..out.channels {
+            for y in 0..h {
+                let row = (c * h + y) * wpr;
+                for x in 0..w {
+                    // identical op order to the kernel: u = u_prev*decay + I
+                    let u = self.membrane[i] * self.decay + currents.data[i];
+                    if u >= self.v_th {
+                        out.words[row + x / 64] |= 1u64 << (x % 64);
+                        out.events.push((c as u32, y as u32, x as u32));
+                        self.membrane[i] = 0.0; // hard reset
+                        count += 1;
+                    } else {
+                        self.membrane[i] = u;
+                    }
+                    i += 1;
+                }
             }
         }
         count
@@ -125,6 +169,31 @@ mod tests {
                 for &v in row {
                     assert!(v == 0.0 || v == 1.0);
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn property_step_plane_matches_step() {
+        forall("step_plane == step (spikes, membranes, count)", 100, |g| {
+            let c = g.usize_in(1, 4);
+            let h = g.usize_in(1, 8);
+            let w = g.usize_in(1, 70);
+            let decay = g.f32_in(0.1, 0.99);
+            let mut flat = LifState::new(c * h * w, decay, 1.0);
+            let mut packed = LifState::new(c * h * w, decay, 1.0);
+            let mut plane = SpikePlane::new(c, h, w);
+            for _ in 0..4 {
+                let cur: Vec<f32> =
+                    (0..c * h * w).map(|_| g.f32_in(-2.0, 2.0)).collect();
+                let mut sp = vec![0.0f32; cur.len()];
+                let n_flat = flat.step(&cur, &mut sp);
+                let t = Tensor::from_vec(&[c, h, w], cur);
+                let n_packed = packed.step_plane(&t, &mut plane);
+                assert_eq!(n_flat, n_packed);
+                assert_eq!(plane.count(), n_packed);
+                assert_eq!(plane.to_dense().data, sp, "spike patterns differ");
+                assert_eq!(flat.membrane, packed.membrane, "membranes diverged");
             }
         });
     }

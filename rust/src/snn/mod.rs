@@ -1,13 +1,23 @@
-//! Rust-native SNN engine — the cycle-model twin of the PJRT artifacts.
+//! Rust-native SNN engine — the cycle-model twin of the PJRT artifacts,
+//! built around an event-driven sparse compute core.
 //!
 //! Plays three roles:
 //! 1. **Cross-check oracle**: its f32 forward must match the XLA-executed
 //!    artifacts (integration test `npu_twin.rs`);
 //! 2. **Quantized deployment model** (the paper evaluates *quantized*
-//!    backbones on FPGA): [`quant`] runs int8 weights with binary spike
-//!    activations, the arithmetic the paper's LUT/DSP datapath performs;
-//! 3. **Activity meter** for E4: per-layer spike counts and synaptic
-//!    operations (synops) feed the [`crate::hw::energy`] model.
+//!    backbones on FPGA): [`quant`] accumulates int8 weights in i32 over
+//!    the spike event list, the arithmetic the paper's LUT/DSP datapath
+//!    performs;
+//! 3. **Activity meter** for E4: per-layer spike counts and *exact*
+//!    synaptic-operation counts (gathered (spike, weight) pairs) feed the
+//!    [`crate::hw::energy`] model.
+//!
+//! Activations travel between layers as bit-packed [`tensor::SpikePlane`]s
+//! (occupancy words + event list, built by the LIF step in one pass).
+//! [`layers::conv2d_adaptive`] dispatches each layer-timestep to a
+//! gather-conv, a bit-parallel popcount pointwise path, or the dense
+//! fallback based on the measured spike rate — all bit-exact, so hot-path
+//! cost scales with activity while outputs never depend on the choice.
 
 pub mod backbone;
 pub mod layers;
@@ -16,5 +26,6 @@ pub mod quant;
 pub mod tensor;
 pub mod wts;
 
-pub use backbone::{Backbone, BackboneKind, ForwardStats};
-pub use tensor::Tensor;
+pub use backbone::{Backbone, BackboneKind, DispatchCounts, ForwardStats};
+pub use layers::{ConvKernel, DEFAULT_SPARSE_THRESHOLD};
+pub use tensor::{SpikePlane, Tensor};

@@ -3,12 +3,21 @@
 //! Weights are quantized per-tensor symmetric to int8; spike activations
 //! are binary, so the conv inner loop is pure int8 *accumulation* (no
 //! multiplies for spiking layers) — exactly the LUT/DSP-friendly datapath
-//! the paper's FPGA NPU implements. Thresholding happens in the int32
-//! accumulator domain with the threshold scaled by the weight scale, so
-//! no dequantization is needed until the head.
+//! the paper's FPGA NPU implements. Since PR 3 the accumulation is real:
+//! [`conv2d_i8_events`] scatters int8 weight taps over the
+//! [`SpikePlane`] event list into i32 accumulators (integer addition is
+//! associative, so scatter order cannot change the result), and
+//! [`conv2d_i8_dense`] is the bit-tested dense loop used above the
+//! dispatch threshold and as the parity oracle. Both produce identical
+//! i32 sums, converted to f32 currents (`acc * scale + bias`) only at the
+//! LIF boundary — the f32 and int8 forward paths share one driver
+//! ([`run_forward`]) and differ solely in the conv closure.
 
-use super::backbone::{run_forward, Backbone, BackboneKind, ForwardStats};
-use super::tensor::Tensor;
+use super::backbone::{
+    run_forward, Backbone, BackboneKind, ConvWeights, ForwardStats,
+};
+use super::layers::{gather_conv_same, same_geometry, ConvKernel};
+use super::tensor::{SpikePlane, Tensor};
 use crate::events::voxel::VoxelGrid;
 
 /// Per-tensor symmetric int8 quantization of a weight tensor.
@@ -32,7 +41,7 @@ impl QuantTensor {
         Self { shape: t.shape.clone(), data, scale }
     }
 
-    /// Dequantize back to f32 (for the emulated-conv path).
+    /// Dequantize back to f32 (error measurement / debugging).
     pub fn dequantize(&self) -> Tensor {
         Tensor::from_vec(
             &self.shape,
@@ -49,17 +58,168 @@ impl QuantTensor {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max)
     }
+
+    #[inline]
+    fn idx4(&self, a: usize, b: usize, c: usize, d: usize) -> usize {
+        ((a * self.shape[1] + b) * self.shape[2] + c) * self.shape[3] + d
+    }
 }
 
-/// A quantized backbone: int8 weights emulated through the shared forward
-/// driver (weights dequantized per layer — numerically identical to int8
-/// accumulate + i32 threshold compare because spikes are exactly 0/1 and
-/// the comparison is against `v_th/scale`).
+impl ConvWeights for (QuantTensor, Vec<f32>) {
+    fn wshape(&self) -> &[usize] {
+        &self.0.shape
+    }
+}
+
+/// Convert an i32 accumulator grid to f32 currents: `acc * scale + bias`.
+fn currents_from_acc(
+    acc: &[i32],
+    shape: &[usize; 3],
+    scale: f32,
+    bias: &[f32],
+) -> Tensor {
+    let hw = shape[1] * shape[2];
+    let mut out = Tensor::zeros(&[shape[0], shape[1], shape[2]]);
+    for oc in 0..shape[0] {
+        let b = bias[oc];
+        for (o, &a) in out.data[oc * hw..(oc + 1) * hw]
+            .iter_mut()
+            .zip(&acc[oc * hw..(oc + 1) * hw])
+        {
+            *o = a as f32 * scale + b;
+        }
+    }
+    out
+}
+
+/// Event-driven int8 conv: scatter each spike's weight taps into i32
+/// accumulators. Zero multiplies (binary spikes select weight rows);
+/// `synops` counts exactly the gathered (spike, weight) pairs — the same
+/// pairs [`conv2d_i8_dense`] counts, and the i32 sums are identical
+/// because integer addition is associative.
+pub fn conv2d_i8_events(
+    input: &SpikePlane,
+    weight: &QuantTensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    synops: &mut u64,
+) -> Tensor {
+    assert_eq!(weight.shape.len(), 4, "weight must be [O,I/g,kh,kw]");
+    let (c_in, h, w) = (input.channels, input.height, input.width);
+    let (c_out, cig, kh, kw) =
+        (weight.shape[0], weight.shape[1], weight.shape[2], weight.shape[3]);
+    assert_eq!(c_in / groups, cig, "groups/channel mismatch");
+    assert_eq!(bias.len(), c_out);
+    assert_eq!(c_out % groups, 0);
+
+    let (h_out, w_out, pad_top, pad_left) = same_geometry(h, w, kh, kw, stride);
+    let oc_per_g = c_out / groups;
+    let mut acc = vec![0i32; c_out * h_out * w_out];
+    let mut local_synops = 0u64;
+
+    for &(c, y, x) in &input.events {
+        let (c, y, x) = (c as usize, y as usize, x as usize);
+        let g = c / cig;
+        let ic = c - g * cig;
+        let oc0 = g * oc_per_g;
+        for ky in 0..kh {
+            // output rows this spike feeds through tap ky:
+            // oy*stride + ky - pad_top == y
+            let num_y = y as isize + pad_top as isize - ky as isize;
+            if num_y < 0 || num_y % stride as isize != 0 {
+                continue;
+            }
+            let oy = (num_y / stride as isize) as usize;
+            if oy >= h_out {
+                continue;
+            }
+            for kx in 0..kw {
+                let num_x = x as isize + pad_left as isize - kx as isize;
+                if num_x < 0 || num_x % stride as isize != 0 {
+                    continue;
+                }
+                let ox = (num_x / stride as isize) as usize;
+                if ox >= w_out {
+                    continue;
+                }
+                let site = oy * w_out + ox;
+                for oc in oc0..oc0 + oc_per_g {
+                    acc[oc * h_out * w_out + site] +=
+                        weight.data[weight.idx4(oc, ic, ky, kx)] as i32;
+                    local_synops += 1;
+                }
+            }
+        }
+    }
+    *synops += local_synops;
+    currents_from_acc(&acc, &[c_out, h_out, w_out], weight.scale, bias)
+}
+
+/// Dense int8 reference: the shared gather skeleton
+/// ([`super::layers::gather_conv_same`] — the same geometry, ordering and
+/// synop accounting the f32 gather kernel uses) with i32 accumulators.
+/// Used above the dispatch threshold and as the value-exactness oracle
+/// for [`conv2d_i8_events`].
+pub fn conv2d_i8_dense(
+    input: &SpikePlane,
+    weight: &QuantTensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    synops: &mut u64,
+) -> Tensor {
+    assert_eq!(weight.shape.len(), 4, "weight must be [O,I/g,kh,kw]");
+    let c_out = weight.shape[0];
+    assert_eq!(bias.len(), c_out);
+    let (h_out, w_out, _, _) = same_geometry(
+        input.height, input.width, weight.shape[2], weight.shape[3], stride,
+    );
+    let hw = h_out * w_out;
+    let mut acc = vec![0i32; c_out * hw];
+    gather_conv_same(
+        input,
+        &weight.shape,
+        stride,
+        groups,
+        synops,
+        0i32,
+        |a, oc, ic, ky, kx| a + weight.data[weight.idx4(oc, ic, ky, kx)] as i32,
+        |oc, site, a| acc[oc * hw + site] = a,
+    );
+    currents_from_acc(&acc, &[c_out, h_out, w_out], weight.scale, bias)
+}
+
+/// Activity-adaptive int8 dispatch: event scatter below the threshold,
+/// dense bit-tested loop above it. Both paths produce identical i32 sums,
+/// so the choice affects only wall time.
+pub fn conv2d_i8_adaptive(
+    input: &SpikePlane,
+    weight: &QuantTensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    threshold: f32,
+    synops: &mut u64,
+) -> (Tensor, ConvKernel) {
+    if input.rate() > threshold as f64 {
+        (conv2d_i8_dense(input, weight, bias, stride, groups, synops), ConvKernel::Dense)
+    } else {
+        (conv2d_i8_events(input, weight, bias, stride, groups, synops), ConvKernel::SparseGather)
+    }
+}
+
+/// A quantized backbone: int8 weights accumulated in i32 over the spike
+/// event list through the shared forward driver — the datapath the
+/// paper's FPGA NPU implements, with thresholding effectively in the
+/// accumulator domain (the f32 conversion of an exact i32 sum is exact).
 pub struct QuantBackbone {
     pub kind: BackboneKind,
     pub qparams: Vec<(QuantTensor, Vec<f32>)>,
     pub decay: f32,
     pub v_th: f32,
+    /// Dispatch threshold, inherited from the source backbone.
+    pub sparse_threshold: f32,
 }
 
 impl QuantBackbone {
@@ -69,19 +229,30 @@ impl QuantBackbone {
             .iter()
             .map(|(w, b)| (QuantTensor::quantize(w), b.clone()))
             .collect();
-        Self { kind: bb.kind, qparams, decay: bb.decay, v_th: bb.v_th }
+        Self {
+            kind: bb.kind,
+            qparams,
+            decay: bb.decay,
+            v_th: bb.v_th,
+            sparse_threshold: bb.sparse_threshold,
+        }
     }
 
     /// Forward with int8-quantized weights; same output contract as
     /// [`Backbone::forward`].
     pub fn forward(&self, voxel: &VoxelGrid) -> (Tensor, ForwardStats) {
-        let params: Vec<(Tensor, Vec<f32>)> = self
-            .qparams
-            .iter()
-            .map(|(q, b)| (q.dequantize(), b.clone()))
-            .collect();
-        run_forward(self.kind, &params, voxel, self.decay, self.v_th, |t, w, b, s, g, syn| {
-            super::layers::conv2d_same(t, w, b, s, g, syn)
+        self.forward_with_threshold(voxel, self.sparse_threshold)
+    }
+
+    /// Forward with an explicit dispatch threshold (bench pinning; `1.0`
+    /// forces the event path, `0.0` forces dense on any activity).
+    pub fn forward_with_threshold(
+        &self,
+        voxel: &VoxelGrid,
+        threshold: f32,
+    ) -> (Tensor, ForwardStats) {
+        run_forward(self.kind, &self.qparams, voxel, self.decay, self.v_th, |x, p, s, g, stats| {
+            conv2d_i8_adaptive(x, &p.0, &p.1, s, g, threshold, &mut stats.synops)
         })
     }
 
@@ -101,6 +272,7 @@ mod tests {
     use crate::events::scene::DvsWindowSim;
     use crate::events::voxel::voxelize;
     use crate::testkit::prop::forall;
+    use crate::util::SplitMix64;
 
     #[test]
     fn quantize_round_trip_error_bounded() {
@@ -120,6 +292,39 @@ mod tests {
         assert_eq!(q.data[0], 0);
         assert_eq!(q.data[1], 127);
         assert_eq!(q.data[2], -127);
+    }
+
+    #[test]
+    fn i8_event_scatter_value_exact_with_i8_dense() {
+        forall("i8 events == i8 dense (i32 sums)", 40, |g| {
+            let mut rng = SplitMix64::new(g.u64());
+            let groups = [1usize, 2][g.usize_in(0, 2)];
+            let cig = g.usize_in(1, 4);
+            let c_in = cig * groups;
+            let c_out = groups * g.usize_in(1, 4);
+            let k = [1usize, 3][g.usize_in(0, 2)];
+            let stride = g.usize_in(1, 3);
+            let (h, w) = (g.usize_in(2, 12), g.usize_in(2, 70));
+            let rate = [0.01, 0.05, 0.2, 0.5][g.usize_in(0, 4)];
+            let data: Vec<f32> = (0..c_in * h * w)
+                .map(|_| if rng.uniform_in(0.0, 1.0) < rate { 1.0 } else { 0.0 })
+                .collect();
+            let plane = SpikePlane::from_slice(c_in, h, w, &data);
+            let wq = QuantTensor::quantize(&Tensor::from_vec(
+                &[c_out, cig, k, k],
+                (0..c_out * cig * k * k)
+                    .map(|_| rng.uniform_in(-1.0, 1.0) as f32)
+                    .collect(),
+            ));
+            let bias: Vec<f32> =
+                (0..c_out).map(|_| rng.uniform_in(-0.5, 0.5) as f32).collect();
+            let (mut syn_e, mut syn_d) = (0u64, 0u64);
+            let ev = conv2d_i8_events(&plane, &wq, &bias, stride, groups, &mut syn_e);
+            let de = conv2d_i8_dense(&plane, &wq, &bias, stride, groups, &mut syn_d);
+            assert_eq!(ev.shape, de.shape);
+            assert_eq!(ev.data, de.data, "i8 paths must be value-exact");
+            assert_eq!(syn_e, syn_d, "synop accounting must agree");
+        });
     }
 
     #[test]
@@ -144,6 +349,22 @@ mod tests {
             / h_f.data.len() as f32;
         assert!(mean_abs < 0.5, "quantized head drifted: {mean_abs}");
         assert!((s_f.sparsity() - s_q.sparsity()).abs() < 0.10);
+    }
+
+    #[test]
+    fn quantized_dispatch_does_not_change_outputs() {
+        let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+        if !std::path::Path::new(&format!("{dir}/spiking_mobilenet.wts")).exists() {
+            return;
+        }
+        let (ev, _) = DvsWindowSim::new(5).run();
+        let vox = voxelize(&ev);
+        let bb = Backbone::load(BackboneKind::MobileNet, &dir).unwrap();
+        let qb = QuantBackbone::from_backbone(&bb);
+        let (h_sparse, s_sparse) = qb.forward_with_threshold(&vox, 1.0);
+        let (h_dense, s_dense) = qb.forward_with_threshold(&vox, 0.0);
+        assert_eq!(h_sparse.data, h_dense.data);
+        assert_eq!(s_sparse.synops, s_dense.synops);
     }
 
     #[test]

@@ -1,4 +1,17 @@
-//! Minimal dense f32 tensor (NCHW-style) for the Rust SNN twin.
+//! Tensors for the Rust SNN twin: the dense f32 [`Tensor`] and the
+//! bit-packed binary [`SpikePlane`] the event-driven kernels consume.
+//!
+//! LIF spikes are exactly 0.0/1.0, so a layer's activation is fully
+//! described by *which* sites fired. [`SpikePlane`] stores that set twice,
+//! both views built in the same pass (the LIF step or `from_dense`):
+//!
+//! * **packed words** — one `u64` per 64 columns per (channel, row), the
+//!   occupancy bitmap the gather/popcount conv kernels test and scan;
+//! * **event list** — active `(c, y, x)` sites in raster order, which the
+//!   int8 engine accumulates over directly (integer addition is
+//!   associative, so scatter order cannot change the result).
+//!
+//! Invariant: `events.len()` always equals the number of set bits.
 
 /// Row-major dense tensor.
 #[derive(Debug, Clone, PartialEq)]
@@ -49,6 +62,205 @@ impl Tensor {
     }
 }
 
+/// One active spike site: `(channel, y, x)`.
+pub type SpikeSite = (u32, u32, u32);
+
+/// Bit-packed binary spike plane `[C, H, W]` plus its active-site list.
+///
+/// Bit `x % 64` of word `(c * height + y) * words_per_row + x / 64` is set
+/// iff neuron `(c, y, x)` spiked. The event list holds the same sites in
+/// the order they were inserted (raster order when built by
+/// [`SpikePlane::from_dense`] or `LifState::step_plane`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpikePlane {
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    /// `ceil(width / 64)`.
+    pub words_per_row: usize,
+    /// `channels * height * words_per_row` occupancy words.
+    pub words: Vec<u64>,
+    /// Active sites; `events.len()` == number of set bits.
+    pub events: Vec<SpikeSite>,
+}
+
+impl SpikePlane {
+    pub fn new(channels: usize, height: usize, width: usize) -> Self {
+        let words_per_row = width.div_ceil(64);
+        Self {
+            channels,
+            height,
+            width,
+            words_per_row,
+            words: vec![0u64; channels * height * words_per_row],
+            events: Vec::new(),
+        }
+    }
+
+    /// Rebuild-in-place: zero the bitmap, forget the events, keep capacity.
+    pub fn clear(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+        self.events.clear();
+    }
+
+    /// Reconfigure dimensions in place, reusing the word/event
+    /// allocations (the forward driver recycles each consumed input plane
+    /// as the layer's output plane — no per-timestep allocation on the
+    /// hot path). Bit contents are unspecified afterwards; pair with a
+    /// builder that clears first, like `LifState::step_plane`.
+    pub fn reset_shape(&mut self, channels: usize, height: usize, width: usize) {
+        self.channels = channels;
+        self.height = height;
+        self.width = width;
+        self.words_per_row = width.div_ceil(64);
+        self.words.resize(channels * height * self.words_per_row, 0);
+        self.events.clear();
+    }
+
+    #[inline]
+    fn word_index(&self, c: usize, y: usize, x: usize) -> usize {
+        (c * self.height + y) * self.words_per_row + x / 64
+    }
+
+    /// Mark `(c, y, x)` active. Must not be called twice for one site
+    /// (would break the set-bits == events invariant).
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize) {
+        let wi = self.word_index(c, y, x);
+        debug_assert_eq!(self.words[wi] >> (x % 64) & 1, 0, "site set twice");
+        self.words[wi] |= 1u64 << (x % 64);
+        self.events.push((c as u32, y as u32, x as u32));
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> bool {
+        self.words[self.word_index(c, y, x)] >> (x % 64) & 1 == 1
+    }
+
+    /// Occupancy word `wi` of row `(c, y)`.
+    #[inline]
+    pub fn word(&self, c: usize, y: usize, wi: usize) -> u64 {
+        self.words[(c * self.height + y) * self.words_per_row + wi]
+    }
+
+    /// Number of active sites.
+    pub fn count(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Spike rate = active sites / neurons (the dispatcher's input).
+    pub fn rate(&self) -> f64 {
+        let n = self.channels * self.height * self.width;
+        if n == 0 { 0.0 } else { self.events.len() as f64 / n as f64 }
+    }
+
+    /// Pack a dense `[C, H, W]` activation (any nonzero counts as a spike;
+    /// callers must only hand in binary 0/1 planes — the sparse kernels
+    /// reconstruct values as exactly 1.0).
+    pub fn from_dense(t: &Tensor) -> Self {
+        assert_eq!(t.shape.len(), 3, "spike plane must be [C,H,W]");
+        Self::from_slice(t.shape[0], t.shape[1], t.shape[2], &t.data)
+    }
+
+    /// Pack a raw binary slice in `[C, H, W]` raster order.
+    pub fn from_slice(channels: usize, height: usize, width: usize, data: &[f32]) -> Self {
+        assert_eq!(channels * height * width, data.len(), "shape/data mismatch");
+        let mut plane = Self::new(channels, height, width);
+        let mut i = 0;
+        for c in 0..channels {
+            for y in 0..height {
+                for x in 0..width {
+                    if data[i] != 0.0 {
+                        plane.set(c, y, x);
+                    }
+                    i += 1;
+                }
+            }
+        }
+        plane
+    }
+
+    /// Unpack to a dense f32 tensor (exact 0.0/1.0 values) — the adaptive
+    /// dispatcher's dense-kernel fallback input.
+    pub fn to_dense(&self) -> Tensor {
+        let mut t = Tensor::zeros(&[self.channels, self.height, self.width]);
+        for &(c, y, x) in &self.events {
+            let i = t.idx3(c as usize, y as usize, x as usize);
+            t.data[i] = 1.0;
+        }
+        t
+    }
+
+    /// 2x2 max-pool, stride 2 (VALID). On binary planes max == OR, so this
+    /// matches `layers::maxpool2` on the dense view exactly.
+    pub fn maxpool2(&self) -> SpikePlane {
+        let (ho, wo) = (self.height / 2, self.width / 2);
+        let mut out = SpikePlane::new(self.channels, ho, wo);
+        for c in 0..self.channels {
+            for y in 0..ho {
+                // skip fully-silent source row pairs with word-level ORs
+                let mut any = 0u64;
+                for wi in 0..self.words_per_row {
+                    any |= self.word(c, 2 * y, wi) | self.word(c, 2 * y + 1, wi);
+                }
+                if any == 0 {
+                    continue;
+                }
+                for x in 0..wo {
+                    if self.get(c, 2 * y, 2 * x)
+                        || self.get(c, 2 * y, 2 * x + 1)
+                        || self.get(c, 2 * y + 1, 2 * x)
+                        || self.get(c, 2 * y + 1, 2 * x + 1)
+                    {
+                        out.set(c, y, x);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Channel-concat (DenseNet blocks): `self`'s channels first, then
+    /// `other`'s shifted up. Event order is self-then-other (the int8
+    /// scatter path is order-independent).
+    pub fn concat(&self, other: &SpikePlane) -> SpikePlane {
+        assert_eq!(
+            (self.height, self.width),
+            (other.height, other.width),
+            "spatial dims must match"
+        );
+        let mut out = SpikePlane::new(self.channels + other.channels, self.height, self.width);
+        let split = self.words.len();
+        out.words[..split].copy_from_slice(&self.words);
+        out.words[split..].copy_from_slice(&other.words);
+        out.events.extend_from_slice(&self.events);
+        out.events.extend(
+            other.events.iter().map(|&(c, y, x)| (c + self.channels as u32, y, x)),
+        );
+        out
+    }
+
+    /// Per-group OR of channel occupancy rows: word `wi` of row `y` of
+    /// group `g` lives at `(g * height + y) * words_per_row + wi`. The
+    /// gather kernel tests one bit here to skip taps with no active
+    /// channel in the group.
+    pub fn group_or_masks(&self, groups: usize) -> Vec<u64> {
+        assert_eq!(self.channels % groups, 0, "groups must divide channels");
+        let cig = self.channels / groups;
+        let rw = self.height * self.words_per_row;
+        let mut masks = vec![0u64; groups * rw];
+        for g in 0..groups {
+            for c in g * cig..(g + 1) * cig {
+                let src = &self.words[c * rw..(c + 1) * rw];
+                for (d, s) in masks[g * rw..(g + 1) * rw].iter_mut().zip(src) {
+                    *d |= *s;
+                }
+            }
+        }
+        masks
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,5 +291,104 @@ mod tests {
     fn max_abs() {
         let t = Tensor::from_vec(&[3], vec![-2.5, 1.0, 2.0]);
         assert_eq!(t.max_abs(), 2.5);
+    }
+
+    use crate::testkit::prop::forall;
+    use crate::util::SplitMix64;
+
+    fn random_plane(seed: u64, c: usize, h: usize, w: usize, rate: f64) -> SpikePlane {
+        let mut rng = SplitMix64::new(seed);
+        let data: Vec<f32> = (0..c * h * w)
+            .map(|_| if rng.uniform_in(0.0, 1.0) < rate { 1.0 } else { 0.0 })
+            .collect();
+        SpikePlane::from_slice(c, h, w, &data)
+    }
+
+    #[test]
+    fn plane_round_trips_through_dense() {
+        forall("plane pack/unpack round trip", 50, |g| {
+            let c = g.usize_in(1, 8);
+            let h = g.usize_in(1, 20);
+            let w = g.usize_in(1, 70); // crosses the 64-bit word boundary
+            let p = random_plane(g.u64(), c, h, w, 0.3);
+            let back = SpikePlane::from_dense(&p.to_dense());
+            assert_eq!(p.words, back.words);
+            assert_eq!(p.count(), back.count());
+            assert_eq!(p.count(), p.to_dense().nnz());
+        });
+    }
+
+    #[test]
+    fn plane_events_match_bits() {
+        let p = random_plane(7, 4, 9, 66, 0.2);
+        let total: u32 = p.words.iter().map(|w| w.count_ones()).sum();
+        assert_eq!(total as usize, p.events.len());
+        for &(c, y, x) in &p.events {
+            assert!(p.get(c as usize, y as usize, x as usize));
+        }
+    }
+
+    #[test]
+    fn plane_maxpool_matches_dense_or() {
+        forall("bit maxpool == dense maxpool", 30, |g| {
+            let c = g.usize_in(1, 4);
+            let h = 2 * g.usize_in(1, 8);
+            let w = 2 * g.usize_in(1, 34);
+            let p = random_plane(g.u64(), c, h, w, 0.25);
+            let pooled = p.maxpool2();
+            let dense_pooled = crate::snn::layers::maxpool2(&p.to_dense());
+            assert_eq!(pooled.to_dense().data, dense_pooled.data);
+            assert_eq!(pooled.count(), dense_pooled.nnz());
+        });
+    }
+
+    #[test]
+    fn plane_concat_offsets_channels() {
+        let a = random_plane(1, 2, 4, 4, 0.5);
+        let b = random_plane(2, 3, 4, 4, 0.5);
+        let cat = a.concat(&b);
+        assert_eq!(cat.channels, 5);
+        assert_eq!(cat.count(), a.count() + b.count());
+        let dense = crate::snn::layers::concat_channels(&a.to_dense(), &b.to_dense());
+        assert_eq!(cat.to_dense().data, dense.data);
+    }
+
+    #[test]
+    fn group_masks_or_channels() {
+        let mut p = SpikePlane::new(4, 2, 8);
+        p.set(0, 0, 1);
+        p.set(1, 0, 3);
+        p.set(3, 1, 7);
+        // groups = 2 -> group 0 = ch {0,1}, group 1 = ch {2,3}
+        let m = p.group_or_masks(2);
+        let rw = p.height * p.words_per_row;
+        assert_eq!(m[0], (1 << 1) | (1 << 3)); // group 0 row 0
+        assert_eq!(m[rw + 1], 1 << 7); // group 1 row 1
+        assert_eq!(m[1], 0); // group 0 row 1 silent
+    }
+
+    #[test]
+    fn reset_shape_recycles_into_clean_plane_after_clear() {
+        let mut p = random_plane(3, 8, 10, 70, 0.4);
+        let cap = p.words.capacity();
+        p.reset_shape(2, 5, 33); // shrink: words buffer reused
+        assert!(p.words.capacity() >= cap.min(p.words.len()));
+        assert_eq!(p.words.len(), 2 * 5 * 1);
+        assert!(p.events.is_empty());
+        p.clear(); // the step_plane contract: clear before building
+        assert!(p.words.iter().all(|&w| w == 0));
+        p.set(1, 4, 32);
+        assert!(p.get(1, 4, 32));
+        assert_eq!(p.count(), 1);
+        assert_eq!(p.to_dense().nnz(), 1);
+    }
+
+    #[test]
+    fn rate_counts_active_fraction() {
+        let mut p = SpikePlane::new(1, 2, 2);
+        assert_eq!(p.rate(), 0.0);
+        p.set(0, 0, 0);
+        p.set(0, 1, 1);
+        assert!((p.rate() - 0.5).abs() < 1e-12);
     }
 }

@@ -1,0 +1,212 @@
+//! Sparse/dense parity suite — the event-driven compute core's contract.
+//!
+//! Proves, without needing compiled artifacts, that on random spike
+//! planes across sparsity levels and all four backbone specs:
+//!
+//! * the sparse gather-conv and popcount 1x1 path are **bit-exact** (f32)
+//!   with the seed dense `conv2d_same`;
+//! * the int8 event-scatter path is **value-exact** with the dense int8
+//!   reference;
+//! * activity-adaptive dispatch never changes outputs or synop counts —
+//!   only which kernel (and therefore how much wall time) serves a layer;
+//! * `ForwardStats.synops` is exactly the number of gathered
+//!   (spike, weight) pairs, and the per-layer split sums to it.
+
+use acelerador::events::voxel::VoxelGrid;
+use acelerador::snn::backbone::{backbone_spec, LayerSpec};
+use acelerador::snn::quant::QuantBackbone;
+use acelerador::snn::{Backbone, BackboneKind, Tensor};
+use acelerador::util::SplitMix64;
+
+const T_BINS: usize = 3;
+const POLARITIES: usize = 2;
+const SIZE: usize = 16; // 3 pools -> 2x2 head grid
+const DECAY: f32 = 0.75;
+const V_TH: f32 = 1.0;
+
+fn random_tensor(rng: &mut SplitMix64, shape: &[usize], lo: f32, hi: f32) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::from_vec(
+        shape,
+        (0..n).map(|_| rng.uniform_in(lo as f64, hi as f64) as f32).collect(),
+    )
+}
+
+/// Synthetic conv params tracking the spec's channel flow (weights sized
+/// exactly as `run_forward` will apply them; head is a 1x1 to 14 ch).
+fn synthetic_params(kind: BackboneKind, seed: u64) -> Vec<(Tensor, Vec<f32>)> {
+    let mut rng = SplitMix64::new(seed);
+    let mut params = Vec::new();
+    let mut c = POLARITIES;
+    let push = |rng: &mut SplitMix64, shape: &[usize]| -> Vec<f32> {
+        (0..shape[0]).map(|_| rng.uniform_in(-0.1, 0.3) as f32).collect()
+    };
+    for layer in backbone_spec(kind) {
+        match layer {
+            LayerSpec::Conv { out, k } => {
+                let w = random_tensor(&mut rng, &[out, c, k, k], -0.6, 0.6);
+                let b = push(&mut rng, &w.shape);
+                params.push((w, b));
+                c = out;
+            }
+            LayerSpec::Conv1x1 { out } | LayerSpec::Transition { out } => {
+                let w = random_tensor(&mut rng, &[out, c, 1, 1], -0.6, 0.6);
+                let b = push(&mut rng, &w.shape);
+                params.push((w, b));
+                c = out;
+            }
+            LayerSpec::Pool => {}
+            LayerSpec::DenseBlock { growth, layers } => {
+                for _ in 0..layers {
+                    let w = random_tensor(&mut rng, &[growth, c, 3, 3], -0.6, 0.6);
+                    let b = push(&mut rng, &w.shape);
+                    params.push((w, b));
+                    c += growth; // concat
+                }
+            }
+            LayerSpec::DwSep { out } => {
+                let dw = random_tensor(&mut rng, &[c, 1, 3, 3], -0.6, 0.6);
+                let db = push(&mut rng, &dw.shape);
+                params.push((dw, db));
+                let pw = random_tensor(&mut rng, &[out, c, 1, 1], -0.6, 0.6);
+                let pb = push(&mut rng, &pw.shape);
+                params.push((pw, pb));
+                c = out;
+            }
+        }
+    }
+    let head = random_tensor(&mut rng, &[14, c, 1, 1], -0.6, 0.6);
+    let hb = (0..14).map(|_| rng.uniform_in(-0.1, 0.1) as f32).collect();
+    params.push((head, hb));
+    params
+}
+
+fn synthetic_backbone(kind: BackboneKind, seed: u64) -> Backbone {
+    Backbone {
+        kind,
+        params: synthetic_params(kind, seed),
+        decay: DECAY,
+        v_th: V_TH,
+        sparse_threshold: acelerador::snn::DEFAULT_SPARSE_THRESHOLD,
+    }
+}
+
+fn synthetic_voxel(seed: u64, density: f64) -> VoxelGrid {
+    let mut rng = SplitMix64::new(seed);
+    let n = T_BINS * POLARITIES * SIZE * SIZE;
+    VoxelGrid {
+        t_bins: T_BINS,
+        polarities: POLARITIES,
+        height: SIZE,
+        width: SIZE,
+        data: (0..n)
+            .map(|_| if rng.uniform_in(0.0, 1.0) < density { 1.0 } else { 0.0 })
+            .collect(),
+    }
+}
+
+#[test]
+fn f32_dispatch_identical_across_thresholds_all_backbones() {
+    for kind in BackboneKind::all() {
+        let bb = synthetic_backbone(kind, 0xACE1 + kind.name().len() as u64);
+        for &density in &[0.02, 0.2] {
+            let vox = synthetic_voxel(7 * kind.name().len() as u64 + 1, density);
+            // 0.0 = dense on any activity; 1.0 = always sparse; default mixes
+            let (h_dense, s_dense) = bb.forward_with_threshold(&vox, 0.0);
+            let (h_sparse, s_sparse) = bb.forward_with_threshold(&vox, 1.0);
+            let (h_mixed, s_mixed) = bb.forward_with_threshold(&vox, 0.25);
+            assert_eq!(
+                h_dense.data, h_sparse.data,
+                "{kind:?} density {density}: sparse path diverged (f32 bits)"
+            );
+            assert_eq!(
+                h_dense.data, h_mixed.data,
+                "{kind:?} density {density}: adaptive dispatch changed outputs"
+            );
+            assert_eq!(s_dense.synops, s_sparse.synops, "{kind:?}: synops must not depend on kernel");
+            assert_eq!(s_dense.synops, s_mixed.synops);
+            assert!(s_mixed.synops > 0, "{kind:?}: no synops at density {density}");
+            assert_eq!(s_dense.layer_activity, s_sparse.layer_activity);
+        }
+    }
+}
+
+#[test]
+fn int8_dispatch_identical_across_thresholds_all_backbones() {
+    for kind in BackboneKind::all() {
+        let bb = synthetic_backbone(kind, 0xBEE5 + kind.name().len() as u64);
+        let qb = QuantBackbone::from_backbone(&bb);
+        for &density in &[0.02, 0.2] {
+            let vox = synthetic_voxel(31 + kind.name().len() as u64, density);
+            let (h_dense, s_dense) = qb.forward_with_threshold(&vox, 0.0);
+            let (h_events, s_events) = qb.forward_with_threshold(&vox, 1.0);
+            assert_eq!(
+                h_dense.data, h_events.data,
+                "{kind:?} density {density}: int8 event path diverged"
+            );
+            assert_eq!(s_dense.synops, s_events.synops);
+            assert_eq!(s_dense.layer_activity, s_events.layer_activity);
+        }
+    }
+}
+
+#[test]
+fn synops_are_exact_and_split_per_layer() {
+    for kind in BackboneKind::all() {
+        let bb = synthetic_backbone(kind, 0xD15C);
+        let vox = synthetic_voxel(99, 0.1);
+        let (_, stats) = bb.forward(&vox);
+        // one synop entry per spiking layer plus the head
+        assert_eq!(stats.layer_synops.len(), stats.layer_activity.len() + 1, "{kind:?}");
+        assert_eq!(stats.layer_dispatch.len(), stats.layer_synops.len());
+        let split_sum: u64 = stats.layer_synops.iter().sum();
+        assert_eq!(split_sum, stats.synops, "{kind:?}: per-layer split must sum exactly");
+        // the first layer's synops are exactly (input spikes x fan-out
+        // pairs): independently countable from the voxel occupancy
+        assert!(stats.layer_synops[0] > 0, "{kind:?}: silent first layer");
+        // every conv application was dispatched exactly once per timestep
+        for d in &stats.layer_dispatch {
+            assert_eq!(d.total(), T_BINS as u64, "{kind:?}: dispatch tally mismatch");
+        }
+        assert!(stats.dense_macs > stats.synops, "{kind:?}: synops should be sparse");
+    }
+}
+
+#[test]
+fn forced_thresholds_pin_dispatch_kernels() {
+    let bb = synthetic_backbone(BackboneKind::Vgg, 0xF00D);
+    let vox = synthetic_voxel(5, 0.2);
+    let (_, sparse) = bb.forward_with_threshold(&vox, 1.0);
+    assert!(
+        sparse.layer_dispatch.iter().all(|d| d.dense == 0),
+        "threshold 1.0 must never fall back dense: {:?}",
+        sparse.layer_dispatch
+    );
+    let (_, dense) = bb.forward_with_threshold(&vox, 0.0);
+    // at 20% input density the first layers see activity every timestep;
+    // dense must dominate somewhere once the threshold forbids sparsity
+    let dense_total: u64 = dense.layer_dispatch.iter().map(|d| d.dense).sum();
+    assert!(dense_total > 0, "threshold 0.0 never dispatched dense");
+    // head (1x1, ungrouped, stride 1) rides the popcount path when sparse
+    let head = sparse.layer_dispatch.last().unwrap();
+    assert_eq!(head.popcount, T_BINS as u64, "head should take the popcount path");
+}
+
+#[test]
+fn exact_synops_match_hand_count_single_spike() {
+    // One input spike through a 3x3 conv: it participates in 9 output
+    // taps per output channel (interior pixel) — synops must be exactly
+    // that, on both the sparse and dense paths.
+    use acelerador::snn::layers::{conv2d_same, conv2d_sparse_same};
+    use acelerador::snn::SpikePlane;
+    let mut plane = SpikePlane::new(1, 7, 7);
+    plane.set(0, 3, 3);
+    let w = Tensor::from_vec(&[2, 1, 3, 3], vec![0.5; 18]);
+    let bias = vec![0.0; 2];
+    let (mut syn_s, mut syn_d) = (0u64, 0u64);
+    let a = conv2d_sparse_same(&plane, &w, &bias, 1, 1, &mut syn_s);
+    let b = conv2d_same(&plane.to_dense(), &w, &bias, 1, 1, &mut syn_d);
+    assert_eq!(a.data, b.data);
+    assert_eq!(syn_s, 9 * 2, "one interior spike x 9 taps x 2 out channels");
+    assert_eq!(syn_d, syn_s);
+}

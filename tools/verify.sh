@@ -24,6 +24,25 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== targeted: sparse/dense parity suite =="
+# The event-driven compute core's contract (bit-exact kernels, exact
+# synops) — run by name so a failure is unmistakable in CI logs. Skips
+# gracefully if the test binary is unavailable (same pattern as clippy).
+if cargo test -q --test sparse_parity -- --list >/dev/null 2>&1; then
+    cargo test -q --test sparse_parity
+else
+    echo "verify: sparse_parity target unavailable — skipping targeted run" >&2
+fi
+
+echo "== compile gate: cargo bench --no-run =="
+# Bench targets (e1 sweep, e4 wall-time ratio) must at least compile;
+# skip gracefully when the bench profile is unusable on this toolchain.
+if cargo bench --help >/dev/null 2>&1; then
+    cargo bench --no-run
+else
+    echo "verify: cargo bench unavailable — skipping bench compile gate" >&2
+fi
+
 echo "== style: cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check
