@@ -13,11 +13,16 @@ use acelerador::detect::{decode_head, nms, YoloSpec};
 use acelerador::events::scene::DvsWindowSim;
 use acelerador::events::voxel::voxelize;
 use acelerador::events::{spec, GtBox};
+use acelerador::jsonlite::Json;
+use acelerador::runtime::pool::{auto_workers, WorkerPool};
 use acelerador::runtime::NpuEngine;
-use acelerador::snn::layers::{conv2d_popcount_1x1, conv2d_same, conv2d_sparse_same};
+use acelerador::snn::layers::{
+    conv2d_popcount_1x1, conv2d_same, conv2d_same_par, conv2d_sparse_same,
+    conv2d_sparse_same_par,
+};
 use acelerador::snn::quant::QuantBackbone;
 use acelerador::snn::{Backbone, BackboneKind, SpikePlane, Tensor};
-use acelerador::testkit::bench::{black_box, Bench, Table};
+use acelerador::testkit::bench::{black_box, write_bench_artifact, Bench, Table};
 use acelerador::util::SplitMix64;
 
 const SCENES: usize = 64;
@@ -25,9 +30,11 @@ const VAL_SEED: u64 = 50_000;
 
 /// Synthetic spike-rate sweep: time the sparse kernels against the seed
 /// dense conv at fixed activity levels to locate the dense-dispatch
-/// crossover that calibrates `DEFAULT_SPARSE_THRESHOLD`. Runs without
-/// artifacts; sparse wall time must fall monotonically with sparsity.
-fn sparsity_sweep() {
+/// crossover that calibrates `DEFAULT_SPARSE_THRESHOLD`, plus the
+/// channel-banded kernels on the machine's pool. Runs without artifacts;
+/// sparse wall time must fall monotonically with sparsity. Returns the
+/// rows that feed `BENCH_e1.json`.
+fn sparsity_sweep() -> Vec<Json> {
     println!("--- synthetic spike-rate sweep (dense-dispatch crossover) ---");
     let mut rng = SplitMix64::new(0xE1_57EE9);
     let mk_plane = |rng: &mut SplitMix64, c: usize, hw: usize, rate: f64| {
@@ -47,9 +54,12 @@ fn sparsity_sweep() {
     let b3 = vec![0.0f32; 32];
     let b1 = vec![0.0f32; 64];
     let bench = Bench::new(2, 12);
+    let pool = WorkerPool::new(auto_workers());
     let mut t = Table::new(&[
-        "spike rate", "gather µs", "dense3x3 µs", "g-ratio", "popcnt µs", "dense1x1 µs", "p-ratio",
+        "spike rate", "gather µs", "dense3x3 µs", "g-ratio", "popcnt µs", "dense1x1 µs",
+        "p-ratio", "gatherN µs", "denseN µs",
     ]);
+    let mut rows = Vec::new();
     let mut crossover: Option<f64> = None;
     for &rate in &[0.01, 0.05, 0.20, 0.50] {
         let p3 = mk_plane(&mut rng, 32, 32, rate);
@@ -73,9 +83,29 @@ fn sparsity_sweep() {
             syn = 0;
             black_box(conv2d_same(&d1, &w1, &b1, 1, 1, &mut syn))
         });
+        // channel-banded kernels on the machine's pool (bit-exact; the
+        // table shows the parallel wall time next to the scalar one)
+        let gp = bench.run(&format!("gather par {}w @{rate}", pool.size()), || {
+            syn = 0;
+            black_box(conv2d_sparse_same_par(&pool, &p3, &w3, &b3, 1, 1, &mut syn))
+        });
+        let dn = bench.run(&format!("dense  par {}w @{rate}", pool.size()), || {
+            syn = 0;
+            black_box(conv2d_same_par(&pool, &d3, &w3, &b3, 1, 1, &mut syn))
+        });
         if crossover.is_none() && g.mean_us() >= dd.mean_us() {
             crossover = Some(rate);
         }
+        rows.push(Json::obj(vec![
+            ("rate", Json::num(rate)),
+            ("gather_us", Json::num(g.mean_us())),
+            ("dense3x3_us", Json::num(dd.mean_us())),
+            ("popcount_us", Json::num(pc.mean_us())),
+            ("dense1x1_us", Json::num(dp.mean_us())),
+            ("gather_par_us", Json::num(gp.mean_us())),
+            ("dense_par_us", Json::num(dn.mean_us())),
+            ("pool_workers", Json::num(pool.size() as f64)),
+        ]));
         t.row(&[
             format!("{:.0}%", rate * 100.0),
             format!("{:.0}", g.mean_us()),
@@ -84,6 +114,8 @@ fn sparsity_sweep() {
             format!("{:.0}", pc.mean_us()),
             format!("{:.0}", dp.mean_us()),
             format!("{:.2}x", dp.mean_us() / pc.mean_us()),
+            format!("{:.0}", gp.mean_us()),
+            format!("{:.0}", dn.mean_us()),
         ]);
     }
     println!();
@@ -101,11 +133,21 @@ fn sparsity_sweep() {
         ),
     }
     println!();
+    rows
 }
 
 fn main() -> anyhow::Result<()> {
     println!("=== E1: backbone AP@0.5 + sparsity (paper §IV-C table) ===\n");
-    sparsity_sweep();
+    let sweep_rows = sparsity_sweep();
+    // persist the artifact-free half immediately so BENCH_e1.json exists
+    // even when the PJRT artifacts aren't built
+    let artifact = Json::obj(vec![
+        ("bench", Json::str("e1_backbones")),
+        ("sparse_threshold", Json::num(acelerador::snn::DEFAULT_SPARSE_THRESHOLD as f64)),
+        ("rate_sweep", Json::arr(sweep_rows)),
+    ]);
+    let path = write_bench_artifact("e1", &artifact)?;
+    println!("wrote {path}\n");
     let yolo = YoloSpec::default();
     let val: Vec<(Vec<GtBox>, _)> = (0..SCENES)
         .map(|i| {

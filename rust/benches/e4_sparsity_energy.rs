@@ -12,6 +12,7 @@ use acelerador::events::scene::DvsWindowSim;
 use acelerador::events::voxel::voxelize;
 use acelerador::hw::energy::EnergyModel;
 use acelerador::hw::timing::npu_timing;
+use acelerador::runtime::pool::{auto_workers, WorkerPool};
 use acelerador::snn::{Backbone, BackboneKind};
 use acelerador::testkit::bench::{black_box, Bench, Table};
 
@@ -100,6 +101,32 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     tw.print();
+
+    // --- per-layer wall time, scalar vs channel-banded pool ----------------
+    // ForwardStats.layer_us is the measured parallel wall time per conv
+    // layer (spiking layers then head); outputs and synops are identical
+    // at every worker count — this table shows where the banding wins go.
+    println!("\n--- per-layer twin wall time (spiking_yolo, scalar vs {}-worker pool) ---",
+        auto_workers());
+    let scalar = Backbone::load(BackboneKind::Yolo, "artifacts")?;
+    let pooled = Backbone::load(BackboneKind::Yolo, "artifacts")?
+        .with_pool(WorkerPool::new(auto_workers()));
+    // warm once, then measure one forward each (layer_us is per-forward)
+    let _ = (scalar.forward(vox0), pooled.forward(vox0));
+    let (_, s1) = scalar.forward(vox0);
+    let (_, sn) = pooled.forward(vox0);
+    let mut tl = Table::new(&["layer", "synops", "scalar µs", "pooled µs", "speedup"]);
+    for (i, (&us1, &usn)) in s1.layer_us.iter().zip(&sn.layer_us).enumerate() {
+        let name = if i + 1 == s1.layer_us.len() { "head".to_string() } else { format!("L{i}") };
+        tl.row(&[
+            name,
+            s1.layer_synops.get(i).copied().unwrap_or(0).to_string(),
+            format!("{us1:.0}"),
+            format!("{usn:.0}"),
+            format!("{:.2}x", us1 / usn.max(1e-9)),
+        ]);
+    }
+    tl.print();
 
     // --- frame-CNN baseline on the same topology --------------------------
     let cnn = FrameCnn::load("artifacts")?;

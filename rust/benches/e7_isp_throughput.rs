@@ -7,8 +7,12 @@
 //! FIFO depth sizing effects.
 //!
 //! Plus the functional stage-graph breakdown: per-stage wall time of the
-//! software ISP and the measured win from a policy-style NLM bypass (the
-//! §V–§VI reconfiguration story in numbers).
+//! software ISP, the measured win from a policy-style NLM bypass (the
+//! §V–§VI reconfiguration story in numbers), and the worker-pool sweep
+//! (1/2/4/N row bands — bit-identical output, wall time only).
+//!
+//! Emits `BENCH_e7.json` at the repo root so the perf trajectory is
+//! tracked across PRs.
 //!
 //! Run: `cargo bench --bench e7_isp_throughput`
 
@@ -17,7 +21,9 @@ use acelerador::isp::axis::{isp_stage_latencies, run_pipeline, AxisWord, PipeSta
 use acelerador::isp::graph::{StageMask, STAGE_COUNT, STAGE_NAMES};
 use acelerador::isp::pipeline::IspPipeline;
 use acelerador::isp::sensor::SensorModel;
-use acelerador::testkit::bench::Table;
+use acelerador::jsonlite::Json;
+use acelerador::runtime::pool::{auto_workers, WorkerPool};
+use acelerador::testkit::bench::{write_bench_artifact, Table};
 use acelerador::util::{ImageU8, SplitMix64};
 
 fn stages(width: usize) -> Vec<PipeStage> {
@@ -145,5 +151,85 @@ fn main() -> anyhow::Result<()> {
         full_total - lean_total,
         100.0 * (full_total - lean_total) / full_total.max(1e-9)
     );
+
+    // --- worker-pool sweep: row-band parallelism speedup curve ---------------
+    // larger frame so band fan-out has rows to chew on; output is
+    // bit-identical for every worker count (tests/parallel_parity.rs) —
+    // this sweep measures wall time only.
+    let big_raw = {
+        let mut rng = SplitMix64::new(21);
+        let frame = ImageU8::from_fn(256, 256, |x, y| (55 + (x * 2 + y) % 140) as u8);
+        SensorModel::default().capture(&frame, &mut rng).raw
+    };
+    let n_auto = auto_workers();
+    let mut worker_counts = vec![1usize, 2, 4];
+    if !worker_counts.contains(&n_auto) {
+        worker_counts.push(n_auto);
+    }
+    let time_workers = |workers: usize| -> f64 {
+        let mut isp = IspPipeline::new(&IspConfig::default());
+        isp.set_worker_pool(WorkerPool::new(workers));
+        let mut total = 0.0;
+        for i in 0..warmup + frames {
+            let (_, report) = isp.process_ref(&big_raw);
+            if i >= warmup {
+                total += report.total_stage_us();
+            }
+        }
+        total / frames as f64
+    };
+    let base_us = time_workers(1);
+    println!("\n=== worker-pool sweep (256x256 frames, full mask, mean of {frames}) ===\n");
+    let mut t5 = Table::new(&["workers", "µs/frame", "speedup", "fps"]);
+    let mut sweep_rows: Vec<(usize, f64)> = Vec::new();
+    for &workers in &worker_counts {
+        let us = if workers == 1 { base_us } else { time_workers(workers) };
+        sweep_rows.push((workers, us));
+        t5.row(&[
+            workers.to_string(),
+            format!("{us:.0}"),
+            format!("{:.2}x", base_us / us.max(1e-9)),
+            format!("{:.0}", 1e6 / us.max(1e-9)),
+        ]);
+    }
+    t5.print();
+    println!(
+        "\n(bit-identical output at every worker count; the speedup rides the NLM/\n\
+         demosaic row bands — Amdahl holds the ceiling at the serial AWB measure)"
+    );
+
+    // --- machine-readable artifact at the repo root --------------------------
+    let artifact = Json::obj(vec![
+        ("bench", Json::str("e7_isp_throughput")),
+        (
+            "stage_breakdown_64x64",
+            Json::obj(
+                STAGE_NAMES
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &n)| (n, Json::num(full[i])))
+                    .collect(),
+            ),
+        ),
+        ("full_mask_us_per_frame", Json::num(full_total)),
+        ("nlm_off_us_per_frame", Json::num(lean_total)),
+        (
+            "workers_sweep_256x256",
+            Json::arr(
+                sweep_rows
+                    .iter()
+                    .map(|&(workers, us)| {
+                        Json::obj(vec![
+                            ("workers", Json::num(workers as f64)),
+                            ("us_per_frame", Json::num(us)),
+                            ("speedup", Json::num(base_us / us.max(1e-9))),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = write_bench_artifact("e7", &artifact)?;
+    println!("\nwrote {path}");
     Ok(())
 }

@@ -7,11 +7,15 @@
 //! streams scale, in both lockstep (rendezvous) and free-running arrival
 //! regimes.
 //!
+//! Emits `BENCH_e8.json` at the repo root so the fleet-throughput
+//! trajectory is tracked across PRs.
+//!
 //! Run: `cargo bench --bench e8_fleet_throughput`
 
 use acelerador::config::SystemConfig;
 use acelerador::fleet::run_fleet;
-use acelerador::testkit::bench::Table;
+use acelerador::jsonlite::Json;
+use acelerador::testkit::bench::{write_bench_artifact, Table};
 
 fn base_cfg() -> SystemConfig {
     let mut cfg = SystemConfig::default();
@@ -25,6 +29,7 @@ fn base_cfg() -> SystemConfig {
 fn main() -> anyhow::Result<()> {
     println!("=== E8: fleet throughput & cross-stream batch occupancy ===\n");
 
+    let mut artifact_rows: Vec<Json> = Vec::new();
     for (label, lockstep) in [("lockstep", true), ("free-run", false)] {
         println!("--- {label} arrivals ---");
         let mut t = Table::new(&[
@@ -35,6 +40,15 @@ fn main() -> anyhow::Result<()> {
             cfg.fleet.streams = streams;
             cfg.fleet.lockstep = lockstep;
             let r = run_fleet(&cfg)?;
+            let (pool_workers, ..) = r.pool_row();
+            artifact_rows.push(Json::obj(vec![
+                ("mode", Json::str(label)),
+                ("streams", Json::num(streams as f64)),
+                ("windows_per_sec", Json::num(r.windows_per_sec())),
+                ("occupancy", Json::num(r.mean_occupancy())),
+                ("service_p99_us", Json::num(r.service_pct_us(99.0))),
+                ("pool_workers", Json::num(pool_workers as f64)),
+            ]));
             t.row(&[
                 streams.to_string(),
                 r.total_windows().to_string(),
@@ -48,6 +62,32 @@ fn main() -> anyhow::Result<()> {
         t.print();
         println!();
     }
+
+    // Worker sweep: same 4-stream lockstep fleet at 1/2/4 band workers —
+    // digests must match while wall time drops (the speedup criterion).
+    println!("--- worker-pool sweep (4 streams, lockstep) ---");
+    let mut tw = Table::new(&["workers", "win/s", "occupancy", "digest"]);
+    for workers in [1usize, 2, 4] {
+        let mut cfg = base_cfg();
+        cfg.fleet.streams = 4;
+        cfg.runtime.workers = workers;
+        let r = run_fleet(&cfg)?;
+        artifact_rows.push(Json::obj(vec![
+            ("mode", Json::str("workers-sweep")),
+            ("streams", Json::num(4.0)),
+            ("workers", Json::num(workers as f64)),
+            ("windows_per_sec", Json::num(r.windows_per_sec())),
+            ("digest", Json::str(&r.digest_hex())),
+        ]));
+        tw.row(&[
+            workers.to_string(),
+            format!("{:.1}", r.windows_per_sec()),
+            format!("{:.2}", r.mean_occupancy()),
+            r.digest_hex(),
+        ]);
+    }
+    tw.print();
+    println!("(identical digests across the sweep = determinism holds under banding)\n");
 
     // Admission control: cap in-flight windows below the stream count and
     // watch occupancy/backpressure trade against service latency.
@@ -72,5 +112,12 @@ fn main() -> anyhow::Result<()> {
          means the dynamic batcher fuses cross-stream work (no zero-pad waste), and\n\
          windows/sec should grow with streams until the engine saturates."
     );
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::str("e8_fleet_throughput")),
+        ("rows", Json::arr(artifact_rows)),
+    ]);
+    let path = write_bench_artifact("e8", &artifact)?;
+    println!("\nwrote {path}");
     Ok(())
 }

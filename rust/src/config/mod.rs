@@ -170,6 +170,29 @@ impl Default for FleetConfig {
     }
 }
 
+/// Execution-runtime configuration: the deterministic worker pool both
+/// compute planes (ISP row bands, SNN channel bands) fan out onto.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RuntimeConfig {
+    /// Worker-pool width. `0` = auto (`available_parallelism`); `1`
+    /// degenerates every parallel path to the inline scalar loop.
+    /// Outputs are bit-identical for any value — this trades wall time
+    /// only (proven by `tests/parallel_parity.rs`).
+    pub workers: usize,
+}
+
+impl RuntimeConfig {
+    /// The effective pool width: `workers`, or the machine's parallelism
+    /// when configured 0 (auto).
+    pub fn resolve_workers(&self) -> usize {
+        if self.workers == 0 {
+            crate::runtime::pool::auto_workers()
+        } else {
+            self.workers
+        }
+    }
+}
+
 /// Hardware (FPGA) model configuration for `hw::` estimates.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HwConfig {
@@ -197,6 +220,7 @@ pub struct SystemConfig {
     pub isp: IspConfig,
     pub coordinator: CoordinatorConfig,
     pub fleet: FleetConfig,
+    pub runtime: RuntimeConfig,
     pub hw: HwConfig,
 }
 
@@ -266,6 +290,9 @@ impl SystemConfig {
             read_usize(f, "max_inflight", &mut self.fleet.max_inflight);
             read_bool(f, "lockstep", &mut self.fleet.lockstep);
         }
+        if let Some(r) = json.get("runtime") {
+            read_usize(r, "workers", &mut self.runtime.workers);
+        }
         if let Some(h) = json.get("hw") {
             read_f64(h, "clock_mhz", &mut self.hw.clock_mhz);
             read_f64(h, "pj_per_mac", &mut self.hw.pj_per_mac);
@@ -318,6 +345,9 @@ impl SystemConfig {
                 self.fleet.scenario_mix,
                 mixes.join(", ")
             );
+        }
+        if self.runtime.workers > 1024 {
+            bail!("runtime: workers must be <= 1024 (0 = auto)");
         }
         if self.hw.clock_mhz <= 0.0 {
             bail!("hw: clock_mhz must be > 0");
@@ -391,6 +421,10 @@ impl SystemConfig {
                     ("max_inflight", Json::num(self.fleet.max_inflight as f64)),
                     ("lockstep", Json::Bool(self.fleet.lockstep)),
                 ]),
+            ),
+            (
+                "runtime",
+                Json::obj(vec![("workers", Json::num(self.runtime.workers as f64))]),
             ),
             (
                 "hw",
@@ -581,6 +615,21 @@ mod tests {
         cfg2.apply_json(&crate::jsonlite::parse(r#"{"fleet":{"base_seed": 77}}"#).unwrap())
             .unwrap();
         assert_eq!(cfg2.fleet.base_seed, 77);
+    }
+
+    #[test]
+    fn runtime_workers_overlay_and_resolution() {
+        let cfg = SystemConfig::default();
+        assert_eq!(cfg.runtime.workers, 0, "default is auto");
+        assert!(cfg.runtime.resolve_workers() >= 1);
+        let mut cfg = SystemConfig::default();
+        let json = crate::jsonlite::parse(r#"{"runtime": {"workers": 3}}"#).unwrap();
+        cfg.apply_json(&json).unwrap();
+        assert_eq!(cfg.runtime.workers, 3);
+        assert_eq!(cfg.runtime.resolve_workers(), 3);
+        cfg.validate().unwrap();
+        cfg.runtime.workers = 4096;
+        assert!(cfg.validate().is_err(), "absurd worker counts rejected");
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! reference. The [`LoopReport`] carries everything E3 plots: per-window
 //! detections, applied parameters, image quality, and latencies.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -23,6 +24,7 @@ use crate::isp::pipeline::IspPipeline;
 use crate::isp::sensor::SensorModel;
 use crate::isp::gamma::GammaLut;
 use crate::metrics::SystemMetrics;
+use crate::runtime::pool::WorkerPool;
 use crate::util::stats::psnr_u8;
 use crate::util::{ImageU8, SplitMix64};
 
@@ -123,21 +125,32 @@ pub struct CognitiveLoop {
     /// configuration — deterministic per (seed, config) — so the policy
     /// can shed ISP stages under oversubscription. 0 standalone.
     pub load_factor: f64,
+    /// The deterministic worker pool the ISP stage graph bands onto
+    /// (owned in single-loop mode, shared across streams in fleet mode).
+    pool: Arc<WorkerPool>,
     pub metrics: SystemMetrics,
 }
 
 impl CognitiveLoop {
-    /// Single-loop mode: starts (and owns) a private NPU service.
+    /// Single-loop mode: starts (and owns) a private NPU service and a
+    /// worker pool sized by `runtime.workers`.
     pub fn new(cfg: &SystemConfig, scenario_seed: u64) -> Result<Self> {
         let svc = NpuService::start(&cfg.npu)?;
         let client = svc.client();
-        Ok(Self::assemble(cfg, scenario_seed, client, Some(svc)))
+        let pool = WorkerPool::new(cfg.runtime.resolve_workers());
+        Ok(Self::assemble(cfg, scenario_seed, client, Some(svc), pool))
     }
 
     /// Fleet mode: drive this loop's inference through a shared NPU
-    /// service so windows from many streams fuse in one batcher.
-    pub fn with_shared(cfg: &SystemConfig, scenario_seed: u64, npu: NpuClient) -> Self {
-        Self::assemble(cfg, scenario_seed, npu, None)
+    /// service so windows from many streams fuse in one batcher, and
+    /// band ISP work onto the fleet's shared worker pool.
+    pub fn with_shared(
+        cfg: &SystemConfig,
+        scenario_seed: u64,
+        npu: NpuClient,
+        pool: Arc<WorkerPool>,
+    ) -> Self {
+        Self::assemble(cfg, scenario_seed, npu, None, pool)
     }
 
     fn assemble(
@@ -145,7 +158,10 @@ impl CognitiveLoop {
         scenario_seed: u64,
         npu: NpuClient,
         service: Option<NpuService>,
+        pool: Arc<WorkerPool>,
     ) -> Self {
+        let mut isp = IspPipeline::new(&cfg.isp);
+        isp.set_worker_pool(pool.clone());
         Self {
             cfg: cfg.clone(),
             sim: ScenarioSim::new(scenario_seed),
@@ -155,7 +171,7 @@ impl CognitiveLoop {
             // bypasses narrow it, never widen it
             policy: ControlPolicy::with_mask(&cfg.coordinator, cfg.isp.stages),
             bus: ParameterBus::new(),
-            isp: IspPipeline::new(&cfg.isp),
+            isp,
             sync: SyncController::new(spec::WINDOW_US, 5_000),
             yolo: YoloSpec::default(),
             window_id: 0,
@@ -163,6 +179,7 @@ impl CognitiveLoop {
             load_factor: 0.0,
             npu,
             _npu_service: service,
+            pool,
             metrics: SystemMetrics::new(),
         }
     }
@@ -257,6 +274,8 @@ impl CognitiveLoop {
 
         let e2e_us = t_loop.elapsed().as_secs_f64() * 1e6;
         self.metrics.e2e_latency.record_us(e2e_us as u64);
+        // measured-only gauges (shared pool totals; excluded from digests)
+        self.metrics.pool.record(&self.pool.stats());
 
         Ok(WindowOutcome {
             window_id: wid,

@@ -40,6 +40,7 @@ use anyhow::{anyhow, Result};
 use crate::config::SystemConfig;
 use crate::coordinator::batcher::{NpuClient, NpuService};
 use crate::coordinator::CognitiveLoop;
+use crate::runtime::pool::{band_bounds, WorkerPool};
 
 pub use profile::{build_profiles, ScenarioKind, StreamProfile};
 pub use report::{FleetReport, StreamSummary};
@@ -148,78 +149,105 @@ impl Drop for GatePermit<'_> {
 
 /// Run the configured fleet to completion and aggregate the report.
 ///
-/// Spawns `cfg.fleet.streams` worker threads sharing one NPU service; the
-/// call blocks until every stream has consumed its window budget (or the
-/// first failure, which aborts the remaining streams and is returned with
-/// its stream id attached).
+/// Streams are multiplexed onto at most `min(streams, runtime.workers)`
+/// **carrier threads** (oversubscription-aware: a 64-stream fleet on an
+/// 8-core box runs 8 carriers of 8 streams each instead of 64 unbounded
+/// threads), all sharing one NPU service and one deterministic band
+/// worker pool. The call blocks until every stream has consumed its
+/// window budget (or the first failure, which aborts the remaining
+/// streams and is returned with its stream id attached).
+///
+/// Stream *results* are independent of the carrier assignment: each
+/// stream owns its sim/sensor/ISP/policy state and the load signal is
+/// config-derived, so the determinism digest is identical for any
+/// `--workers` value (proven by `tests/parallel_parity.rs`).
 pub fn run_fleet(cfg: &SystemConfig) -> Result<FleetReport> {
     cfg.validate()?;
     let fleet = cfg.fleet.clone();
     let profiles = build_profiles(&fleet)?;
+    let workers = cfg.runtime.resolve_workers();
+    let carriers = fleet.streams.min(workers).max(1);
 
     // Lockstep wants the whole rendezvous in one PJRT execute. Size the
     // batch target to the number of requests that can actually be in
-    // flight (streams, or the admission limit when tighter) so a complete
-    // rendezvous flushes immediately instead of idling out the gather
-    // timeout; the engine clamps to its largest exported size. Remainder
-    // batches (non-dividing stream counts) and genuine stalls pay up to
-    // the (bounded) gather timeout.
+    // flight simultaneously — one per carrier (each carrier submits its
+    // streams' windows sequentially within a round), or the admission
+    // limit when tighter — so a complete rendezvous flushes immediately
+    // instead of idling out the gather timeout; the engine clamps to its
+    // largest exported size. Remainder batches (carriers with unequal
+    // stream counts finishing a round early) and genuine stalls pay up
+    // to the (bounded) gather timeout.
     let mut run_cfg = cfg.clone();
     if fleet.lockstep {
         let rendezvous = if fleet.max_inflight > 0 {
-            fleet.streams.min(fleet.max_inflight)
+            carriers.min(fleet.max_inflight)
         } else {
-            fleet.streams
+            carriers
         };
         run_cfg.npu.max_batch = rendezvous;
         run_cfg.npu.batch_timeout_us = run_cfg.npu.batch_timeout_us.max(LOCKSTEP_GATHER_US);
     }
 
     let svc = NpuService::start(&run_cfg.npu)?;
+    // ONE shared band pool for every stream's ISP (and any twin work) —
+    // total band threads stay bounded by runtime.workers no matter how
+    // many streams the fleet serves.
+    let band_pool = WorkerPool::new(workers);
     let barrier = fleet
         .lockstep
-        .then(|| Arc::new(RoundBarrier::new(fleet.streams)));
+        .then(|| Arc::new(RoundBarrier::new(carriers)));
     let gate = (fleet.max_inflight > 0)
         .then(|| Arc::new(AdmissionGate::new(fleet.max_inflight)));
     let abort = Arc::new(AtomicBool::new(false));
 
+    // Contiguous deterministic partition of the streams over carriers.
+    let mut assignments: Vec<Vec<StreamProfile>> = Vec::with_capacity(carriers);
+    {
+        let bounds = band_bounds(profiles.len(), carriers);
+        let mut iter = profiles.into_iter();
+        for &(s0, s1) in &bounds {
+            assignments.push(iter.by_ref().take(s1 - s0).collect());
+        }
+    }
+
     let t0 = Instant::now();
-    let mut handles = Vec::with_capacity(profiles.len());
+    let mut handles = Vec::with_capacity(assignments.len());
     let mut spawn_err: Option<anyhow::Error> = None;
-    for prof in profiles {
+    for (carrier_id, profs) in assignments.into_iter().enumerate() {
         let client = svc.client();
         let cfg = run_cfg.clone();
         let barrier_c = barrier.clone();
         let gate = gate.clone();
         let abort_c = abort.clone();
+        let pool_c = band_pool.clone();
         let spawned = std::thread::Builder::new()
-            .name(format!("fleet-{}", prof.stream_id))
-            .spawn(move || run_stream(cfg, prof, client, barrier_c, gate, abort_c));
+            .name(format!("fleet-carrier-{carrier_id}"))
+            .spawn(move || run_carrier(cfg, profs, client, barrier_c, gate, abort_c, pool_c));
         match spawned {
             Ok(handle) => handles.push(handle),
             Err(e) => {
-                // Release the workers already spawned — they would wait
-                // forever on a rendezvous sized for the full fleet.
+                // Release the carriers already spawned — they would wait
+                // forever on a rendezvous sized for the full set.
                 abort.store(true, Ordering::SeqCst);
                 if let Some(b) = &barrier {
                     b.abort();
                 }
-                spawn_err = Some(anyhow::Error::new(e).context("spawning fleet worker"));
+                spawn_err = Some(anyhow::Error::new(e).context("spawning fleet carrier"));
                 break;
             }
         }
     }
 
-    let mut summaries = Vec::with_capacity(handles.len());
+    let mut summaries = Vec::new();
     let mut first_err: Option<anyhow::Error> = spawn_err;
     for h in handles {
         match h.join() {
-            Ok(Ok(s)) => summaries.push(s),
+            Ok(Ok(mut s)) => summaries.append(&mut s),
             Ok(Err(e)) => {
                 first_err.get_or_insert(e);
             }
             Err(_) => {
-                first_err.get_or_insert(anyhow!("fleet worker panicked"));
+                first_err.get_or_insert(anyhow!("fleet carrier panicked"));
             }
         }
     }
@@ -230,41 +258,61 @@ pub fn run_fleet(cfg: &SystemConfig) -> Result<FleetReport> {
     Ok(FleetReport::assemble(fleet, summaries, wall_s))
 }
 
-/// One stream's worker: a full cognitive loop driven by the stream's
-/// illumination script, inferring through the shared client.
-fn run_stream(
-    mut cfg: SystemConfig,
-    prof: StreamProfile,
+/// One carrier thread: a fixed set of streams, each a full cognitive
+/// loop driven by its illumination script, stepped window-major (every
+/// stream's window `w` before any stream's window `w+1`) so cross-stream
+/// requests keep fusing in the shared batcher. In lockstep mode the
+/// carriers — not the individual streams — rendezvous per window round.
+fn run_carrier(
+    cfg: SystemConfig,
+    profs: Vec<StreamProfile>,
     client: NpuClient,
     barrier: Option<Arc<RoundBarrier>>,
     gate: Option<Arc<AdmissionGate>>,
     abort: Arc<AtomicBool>,
-) -> Result<StreamSummary> {
-    // Scenario-specific ISP topology: the profile's default stage mask
-    // intersected with whatever the config/CLI already narrowed it to
-    // (e.g. day streams ship without NLM; night streams keep it).
-    cfg.isp.stages = cfg
-        .isp
-        .stages
-        .intersect(prof.kind.default_stage_mask())
-        .sanitized();
-    let mut l = CognitiveLoop::with_shared(&cfg, prof.seed, client);
-    // Load-shedding signal for the control policy: the configured
-    // oversubscription ratio, NOT a live gate sample. Admission set below
-    // the stream count means sustained permit contention by construction;
-    // deriving the signal from config keeps it identical across runs, so
-    // the fleet digest stays scheduling-independent (a racy gate snapshot
-    // here would leak thread interleaving into psnr/luma and break
-    // `same_seed_fleet_digest_is_bit_identical`).
-    if cfg.fleet.max_inflight > 0 {
-        l.load_factor =
-            (cfg.fleet.streams as f64 / cfg.fleet.max_inflight as f64).min(4.0);
+    band_pool: Arc<WorkerPool>,
+) -> Result<Vec<StreamSummary>> {
+    struct StreamState {
+        prof: StreamProfile,
+        l: CognitiveLoop,
+        script: Vec<f64>,
+        outcomes: Vec<crate::coordinator::WindowOutcome>,
     }
-    let script = prof.script(cfg.fleet.windows_per_stream);
-    let mut outcomes = Vec::with_capacity(script.len());
+
+    let mut streams = Vec::with_capacity(profs.len());
+    for prof in profs {
+        // Scenario-specific ISP topology: the profile's default stage
+        // mask intersected with whatever the config/CLI already narrowed
+        // it to (e.g. day streams ship without NLM; night streams keep it).
+        let mut cfg = cfg.clone();
+        cfg.isp.stages = cfg
+            .isp
+            .stages
+            .intersect(prof.kind.default_stage_mask())
+            .sanitized();
+        let mut l =
+            CognitiveLoop::with_shared(&cfg, prof.seed, client.clone(), band_pool.clone());
+        // Load-shedding signal for the control policy: the configured
+        // oversubscription ratio, NOT a live gate sample. Admission set
+        // below the stream count means sustained permit contention by
+        // construction; deriving the signal from config keeps it
+        // identical across runs AND across worker counts, so the fleet
+        // digest stays scheduling-independent (a racy gate snapshot here
+        // would leak thread interleaving into psnr/luma and break
+        // `same_seed_fleet_digest_is_bit_identical`).
+        if cfg.fleet.max_inflight > 0 {
+            l.load_factor =
+                (cfg.fleet.streams as f64 / cfg.fleet.max_inflight as f64).min(4.0);
+        }
+        let script = prof.script(cfg.fleet.windows_per_stream);
+        let outcomes = Vec::with_capacity(script.len());
+        streams.push(StreamState { prof, l, script, outcomes });
+    }
+
+    let windows = cfg.fleet.windows_per_stream;
     let mut failure: Option<anyhow::Error> = None;
 
-    for &illum in &script {
+    'rounds: for w in 0..windows {
         if let Some(b) = &barrier {
             if !b.wait() {
                 break; // fleet aborted — barrier released everyone
@@ -273,34 +321,52 @@ fn run_stream(
         if abort.load(Ordering::SeqCst) {
             break;
         }
-        let _permit = gate.as_ref().map(|g| g.acquire());
-        if let Some(g) = &gate {
-            // measured-only gauge (excluded from the determinism digest)
-            l.metrics.queue_depth.set((cfg.fleet.max_inflight - g.available()) as u64);
-        }
-        // A panicking step must not unwind past the rendezvous protocol;
-        // contain it and route it through the same abort path as an Err.
-        let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| l.step(illum)));
-        let err = match stepped {
-            Ok(Ok(o)) => {
-                outcomes.push(o);
-                continue;
+        for st in streams.iter_mut() {
+            if abort.load(Ordering::SeqCst) {
+                break 'rounds;
             }
-            Ok(Err(e)) => e,
-            Err(_) => anyhow!("worker panicked during step"),
-        };
-        abort.store(true, Ordering::SeqCst);
-        if let Some(b) = &barrier {
-            b.abort(); // release peers parked at the rendezvous
+            let illum = st.script[w];
+            let _permit = gate.as_ref().map(|g| g.acquire());
+            if let Some(g) = &gate {
+                // measured-only gauge (excluded from the determinism digest)
+                st.l.metrics
+                    .queue_depth
+                    .set((cfg.fleet.max_inflight - g.available()) as u64);
+            }
+            // A panicking step (including a band-worker panic re-raised
+            // by the pool) must not unwind past the rendezvous protocol;
+            // contain it and route it through the same abort path as an
+            // Err — the panic becomes an engine error, not a silent join.
+            let stepped =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| st.l.step(illum)));
+            let err = match stepped {
+                Ok(Ok(o)) => {
+                    st.outcomes.push(o);
+                    continue;
+                }
+                Ok(Err(e)) => e,
+                Err(_) => anyhow!("worker panicked during step"),
+            };
+            abort.store(true, Ordering::SeqCst);
+            if let Some(b) = &barrier {
+                b.abort(); // release peers parked at the rendezvous
+            }
+            failure = Some(err.context(format!(
+                "stream {} ({})",
+                st.prof.stream_id,
+                st.prof.kind.name()
+            )));
+            break 'rounds;
         }
-        failure = Some(err);
-        break;
     }
 
     if let Some(e) = failure {
-        return Err(e.context(format!("stream {} ({})", prof.stream_id, prof.kind.name())));
+        return Err(e);
     }
-    Ok(StreamSummary::from_outcomes(&prof, &outcomes, &l.metrics))
+    Ok(streams
+        .iter()
+        .map(|st| StreamSummary::from_outcomes(&st.prof, &st.outcomes, &st.l.metrics))
+        .collect())
 }
 
 #[cfg(test)]

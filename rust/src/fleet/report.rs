@@ -314,6 +314,29 @@ impl FleetReport {
         rows
     }
 
+    /// Worker-pool utilization across the fleet: `(workers, runs, tasks,
+    /// utilization)`. Every stream snapshots the SAME shared pool's
+    /// monotonic totals, so aggregation takes the maximum (the latest
+    /// snapshot), never a sum.
+    pub fn pool_row(&self) -> (u64, u64, u64, f64) {
+        let mut row = (0u64, 0u64, 0u64, 0.0f64);
+        for s in &self.streams {
+            let Some(pool) = s.metrics.get(crate::metrics::POOL_KEY) else {
+                continue;
+            };
+            let get = |k: &str| pool.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            if get("tasks") as u64 >= row.2 {
+                row = (
+                    get("workers") as u64,
+                    get("runs") as u64,
+                    get("tasks") as u64,
+                    get("utilization"),
+                );
+            }
+        }
+        row
+    }
+
     /// Order-independent-by-construction fleet digest: streams are folded
     /// in stream-id order, each contributing its own deterministic digest.
     pub fn digest(&self) -> u64 {
@@ -356,6 +379,15 @@ impl FleetReport {
                     ("service_p50_us", Json::num(p50)),
                     ("service_p99_us", Json::num(p99)),
                     ("digest", Json::str(&self.digest_hex())),
+                    ("pool", {
+                        let (workers, runs, tasks, utilization) = self.pool_row();
+                        Json::obj(vec![
+                            ("workers", Json::num(workers as f64)),
+                            ("runs", Json::num(runs as f64)),
+                            ("tasks", Json::num(tasks as f64)),
+                            ("utilization", Json::num(utilization)),
+                        ])
+                    }),
                     (
                         "isp_stages",
                         Json::obj(
@@ -447,9 +479,12 @@ impl FleetReport {
                 dense.to_string(),
             ]);
         }
+        let (workers, runs, tasks, utilization) = self.pool_row();
         format!(
             "{}\nfleet: {} streams x {} windows in {:.2}s = {:.1} windows/s\n\
              occupancy {:.2} | service p50 {:.0}µs p99 {:.0}µs | digest {}\n\
+             pool: {workers} workers, {runs} parallel runs, {tasks} band tasks, \
+             {:.0}% utilization\n\
              \nper-stage ISP timing (frame-weighted means across streams):\n{}\
              \nper-layer SNN spike rate + dispatch (window-weighted across streams):\n{}",
             table.render(),
@@ -461,6 +496,7 @@ impl FleetReport {
             self.service_pct_us(50.0),
             self.service_pct_us(99.0),
             self.digest_hex(),
+            100.0 * utilization,
             stage_table.render(),
             snn_table.render(),
         )
@@ -610,6 +646,38 @@ mod tests {
         let l1 = &agg.as_arr().unwrap()[1];
         assert_eq!(l1.get("dense").unwrap().as_f64(), Some(3.0));
         assert!(r.render().contains("per-layer SNN spike rate"));
+    }
+
+    #[test]
+    fn pool_row_takes_latest_shared_snapshot() {
+        // streams snapshot the same shared pool at different times; the
+        // report must carry the latest (max-tasks) totals, not a sum
+        let m0 = SystemMetrics::new();
+        m0.pool.record(&crate::runtime::pool::PoolStats {
+            workers: 4,
+            runs: 5,
+            tasks: 20,
+            busy_us: 100.0,
+            span_us: 50.0,
+        });
+        let m1 = SystemMetrics::new();
+        m1.pool.record(&crate::runtime::pool::PoolStats {
+            workers: 4,
+            runs: 9,
+            tasks: 36,
+            busy_us: 200.0,
+            span_us: 100.0,
+        });
+        let s0 = StreamSummary::from_outcomes(&prof(0), &[outcome(0, 10, 30.0, 1)], &m0);
+        let s1 = StreamSummary::from_outcomes(&prof(1), &[outcome(0, 20, 28.0, 1)], &m1);
+        let r = FleetReport::assemble(FleetConfig::default(), vec![s0, s1], 1.0);
+        let (workers, runs, tasks, util) = r.pool_row();
+        assert_eq!((workers, runs, tasks), (4, 9, 36));
+        assert!((util - 0.5).abs() < 1e-9);
+        let j = r.to_json();
+        let pool = j.get("aggregate").unwrap().get("pool").unwrap();
+        assert_eq!(pool.get("tasks").unwrap().as_f64(), Some(36.0));
+        assert!(r.render().contains("pool:"));
     }
 
     #[test]

@@ -137,6 +137,41 @@ pub fn apply_gains_bayer_inplace(raw: &mut ImageU8, gains: &AwbGains) {
     }
 }
 
+/// Row-band parallel [`apply_gains_bayer_inplace`]: the gain is pure per
+/// Bayer site (absolute coordinates pick the channel), so disjoint row
+/// bands are bit-identical to the scalar sweep for any worker count.
+pub fn apply_gains_bayer_inplace_par(
+    pool: &crate::runtime::pool::WorkerPool,
+    raw: &mut ImageU8,
+    gains: &AwbGains,
+) {
+    if pool.is_inline() || raw.height < 2 {
+        apply_gains_bayer_inplace(raw, gains);
+        return;
+    }
+    let (qr, qg, qb) = gains.to_q();
+    let width = raw.width;
+    let bounds = crate::runtime::pool::band_bounds(raw.height, pool.size());
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
+    let chunks = crate::runtime::pool::split_bands(raw.data.as_mut_slice(), &bounds, width);
+    for (band, &(y0, _y1)) in chunks.into_iter().zip(&bounds) {
+        jobs.push(Box::new(move || {
+            for (row_i, row) in band.chunks_mut(width).enumerate() {
+                let y = y0 + row_i;
+                for (x, v) in row.iter_mut().enumerate() {
+                    let q = match bayer_color(x, y) {
+                        BayerColor::Red => qr,
+                        BayerColor::GreenR | BayerColor::GreenB => qg,
+                        BayerColor::Blue => qb,
+                    };
+                    *v = gain_u8(*v, q);
+                }
+            }
+        }));
+    }
+    pool.run_scoped(jobs);
+}
+
 /// Apply channel gains to a Bayer frame in Q4.12 (the HDL datapath).
 pub fn apply_gains_bayer(raw: &ImageU8, gains: &AwbGains) -> ImageU8 {
     let mut out = raw.clone();

@@ -7,8 +7,9 @@
 //! implementation uses (line buffers + shift-add, no multipliers beyond
 //! small constants).
 
-use super::linebuf::for_each_window;
+use super::linebuf::{for_each_window, window_at};
 use super::sensor::{bayer_color, BayerColor};
+use crate::runtime::pool::{band_bounds, split_bands, WorkerPool};
 use crate::util::{ImageU8, PlanarRgb};
 
 #[inline]
@@ -108,6 +109,47 @@ pub fn demosaic_frame_into(raw: &ImageU8, rgb: &mut PlanarRgb) {
         rgb.g[i] = g;
         rgb.b[i] = b;
     });
+}
+
+/// Row-band parallel [`demosaic_frame_into`]: each band fills its
+/// disjoint rows of all three planes from clamped reads of the shared
+/// Bayer input. The stencils are pure per window, so the planes are
+/// bit-identical to the streaming former for any worker count.
+pub fn demosaic_frame_into_par(pool: &WorkerPool, raw: &ImageU8, rgb: &mut PlanarRgb) {
+    if pool.is_inline() || raw.height < 2 {
+        demosaic_frame_into(raw, rgb);
+        return;
+    }
+    let (width, height) = (raw.width, raw.height);
+    let n = width * height;
+    rgb.width = width;
+    rgb.height = height;
+    rgb.r.resize(n, 0);
+    rgb.g.resize(n, 0);
+    rgb.b.resize(n, 0);
+    let bounds = band_bounds(height, pool.size());
+    let data = &raw.data;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
+    let chunks_r = split_bands(rgb.r.as_mut_slice(), &bounds, width);
+    let chunks_g = split_bands(rgb.g.as_mut_slice(), &bounds, width);
+    let chunks_b = split_bands(rgb.b.as_mut_slice(), &bounds, width);
+    for (((br, bg), bb), &(y0, y1)) in
+        chunks_r.into_iter().zip(chunks_g).zip(chunks_b).zip(&bounds)
+    {
+        jobs.push(Box::new(move || {
+            for cy in y0..y1 {
+                for cx in 0..width {
+                    let win = window_at::<5>(data, width, height, cx, cy);
+                    let (r, g, b) = demosaic_window(&win, cx, cy);
+                    let i = (cy - y0) * width + cx;
+                    br[i] = r;
+                    bg[i] = g;
+                    bb[i] = b;
+                }
+            }
+        }));
+    }
+    pool.run_scoped(jobs);
 }
 
 /// Streaming Malvar–He–Cutler demosaic of a full RGGB frame.
@@ -234,6 +276,23 @@ mod tests {
         let bil = psnr_rgb(&demosaic_bilinear(&raw), &truth);
         assert!(mhc > bil, "malvar {mhc:.1} !> bilinear {bil:.1}");
         assert!(bil > nn, "bilinear {bil:.1} !> nearest {nn:.1}");
+    }
+
+    #[test]
+    fn banded_demosaic_bit_identical() {
+        use crate::runtime::pool::WorkerPool;
+        let mut rng = SplitMix64::new(13);
+        let frame = ImageU8::from_fn(32, 18, |x, y| {
+            (40 + (x * 5 + y * 3) % 160 + (rng.next_u32() % 10) as usize) as u8
+        });
+        let raw = mosaic_clean(&colorize(&frame));
+        let want = demosaic_frame(&raw);
+        for workers in [1usize, 2, 3, 8] {
+            let pool = WorkerPool::new(workers);
+            let mut got = PlanarRgb::new(0, 0);
+            demosaic_frame_into_par(&pool, &raw, &mut got);
+            assert_eq!(got, want, "{workers} workers");
+        }
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //! gradient). Correction replaces it with the median of the ring — the
 //! standard HDL-friendly estimator (sorting network on 8 values).
 
-use super::linebuf::stream_frame_into;
+use super::linebuf::{stream_frame_into, window_at};
+use crate::runtime::pool::{band_bounds, split_bands, WorkerPool};
 use crate::util::ImageU8;
 
 /// DPC configuration.
@@ -78,6 +79,62 @@ pub fn dpc_frame_into(
             win[2][2]
         }
     });
+}
+
+/// Row-band parallel [`dpc_frame_into`]: each band corrects its disjoint
+/// output rows (halo rows are clamped reads of the shared input) and
+/// collects its own flagged list; band lists are concatenated in band
+/// order, so `flagged` keeps exact raster order and the output plane is
+/// bit-identical to the scalar path for any worker count.
+pub fn dpc_frame_into_par(
+    pool: &WorkerPool,
+    raw: &ImageU8,
+    cfg: &DpcConfig,
+    out: &mut ImageU8,
+    flagged: &mut Vec<(usize, usize)>,
+) {
+    if pool.is_inline() || raw.height < 2 {
+        dpc_frame_into(raw, cfg, out, flagged);
+        return;
+    }
+    flagged.clear();
+    out.width = raw.width;
+    out.height = raw.height;
+    let (width, height) = (raw.width, raw.height);
+    out.data.resize(width * height, 0);
+    let bounds = band_bounds(height, pool.size());
+    let mut band_flags: Vec<Vec<(usize, usize)>> = bounds.iter().map(|_| Vec::new()).collect();
+    {
+        let data = &raw.data;
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
+        let chunks = split_bands(out.data.as_mut_slice(), &bounds, width);
+        for ((band, flags), &(y0, y1)) in
+            chunks.into_iter().zip(band_flags.iter_mut()).zip(&bounds)
+        {
+            jobs.push(Box::new(move || {
+                for cy in y0..y1 {
+                    for cx in 0..width {
+                        let win = window_at::<5>(data, width, height, cx, cy);
+                        let v = if is_defective(&win, cfg.threshold) {
+                            flags.push((cx, cy));
+                            if cfg.detect_only {
+                                win[2][2]
+                            } else {
+                                median8(ring(&win))
+                            }
+                        } else {
+                            win[2][2]
+                        };
+                        band[(cy - y0) * width + cx] = v;
+                    }
+                }
+            }));
+        }
+        pool.run_scoped(jobs);
+    }
+    for mut flags in band_flags {
+        flagged.append(&mut flags);
+    }
 }
 
 /// Streaming DPC over a full Bayer frame. Returns the corrected frame and
@@ -183,6 +240,28 @@ mod tests {
         let after = psnr_u8(&fixed.data, &clean.data);
         assert!(after > before + 5.0, "PSNR {before:.1} -> {after:.1}");
         assert!(flagged.len() >= cap.defects.len() / 2);
+    }
+
+    #[test]
+    fn banded_dpc_bit_identical_with_raster_flag_order() {
+        use crate::runtime::pool::WorkerPool;
+        let mut rng = SplitMix64::new(77);
+        let mut img = ImageU8::from_fn(24, 9, |_, _| 100);
+        for _ in 0..12 {
+            let x = (rng.next_u32() % 24) as usize;
+            let y = (rng.next_u32() % 9) as usize;
+            img.set(x, y, if rng.next_u32() % 2 == 0 { 255 } else { 0 });
+        }
+        let cfg = DpcConfig::default();
+        let (want, want_flags) = dpc_frame(&img, &cfg);
+        for workers in [1usize, 2, 3, 8] {
+            let pool = WorkerPool::new(workers);
+            let mut out = ImageU8::new(0, 0);
+            let mut flags = Vec::new();
+            dpc_frame_into_par(&pool, &img, &cfg, &mut out, &mut flags);
+            assert_eq!(out.data, want.data, "{workers} workers");
+            assert_eq!(flags, want_flags, "flag order must stay raster");
+        }
     }
 
     #[test]

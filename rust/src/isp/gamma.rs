@@ -70,6 +70,34 @@ impl GammaLut {
             }
         }
     }
+
+    /// Band-parallel [`GammaLut::apply_rgb_inplace`]: each pool lane maps
+    /// a disjoint chunk of each plane. Pointwise, so trivially
+    /// bit-identical for any worker count.
+    pub fn apply_rgb_inplace_par(
+        &self,
+        pool: &crate::runtime::pool::WorkerPool,
+        rgb: &mut PlanarRgb,
+    ) {
+        if pool.is_inline() || rgb.r.len() < 2 {
+            self.apply_rgb_inplace(rgb);
+            return;
+        }
+        let bands = pool.size();
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(3 * bands);
+        let table = &self.table;
+        for plane in [&mut rgb.r, &mut rgb.g, &mut rgb.b] {
+            let chunk = plane.len().div_ceil(bands);
+            for band in plane.chunks_mut(chunk) {
+                jobs.push(Box::new(move || {
+                    for v in band.iter_mut() {
+                        *v = table[*v as usize];
+                    }
+                }));
+            }
+        }
+        pool.run_scoped(jobs);
+    }
 }
 
 #[cfg(test)]

@@ -20,18 +20,20 @@
 //! [`super::pipeline::IspPipeline`] remains a thin façade over the graph,
 //! so every existing call site keeps its API.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use super::awb::{apply_gains_bayer_inplace, AwbEstimator, AwbGains};
-use super::demosaic::demosaic_frame_into;
-use super::dpc::{dpc_frame_into, DpcConfig};
+use super::awb::{apply_gains_bayer_inplace_par, AwbEstimator, AwbGains};
+use super::demosaic::demosaic_frame_into_par;
+use super::dpc::{dpc_frame_into_par, DpcConfig};
 use super::gamma::GammaLut;
-use super::nlm::{nlm_rgb_shared_into, NlmConfig};
+use super::nlm::{nlm_rgb_shared_into_par, NlmConfig};
 use super::pipeline::{luma_mean, AwbMode, FrameReport, IspParams};
-use super::ycbcr::{csc_sharpen_into, CscScratch};
+use super::ycbcr::{csc_sharpen_into_par, CscScratch};
 use crate::config::IspConfig;
+use crate::runtime::pool::WorkerPool;
 use crate::util::{ImageU8, PlanarRgb};
 
 /// Number of stages in the canonical graph.
@@ -241,6 +243,9 @@ pub struct FrameCtx<'a> {
     /// an in-place stage materializes the one unavoidable copy first.
     src: Option<&'a ImageU8>,
     pool: &'a mut BufferPool,
+    /// The shared deterministic worker pool stages fan their row bands
+    /// onto (`runtime.workers`; inline when 1 — the scalar path).
+    pub workers: &'a WorkerPool,
     /// AWB: the gains actually applied this frame.
     pub applied_gains: AwbGains,
     /// AWB: the estimator's EMA gains after this frame's measurement.
@@ -363,8 +368,9 @@ impl IspStage for DpcStage {
 
     fn process(&mut self, ctx: &mut FrameCtx<'_>) -> StageReport {
         let cfg = DpcConfig { threshold: self.threshold, detect_only: false };
+        let workers = ctx.workers;
         let (src, dst) = ctx.raw_pair();
-        dpc_frame_into(src, &cfg, dst, &mut self.out_flagged);
+        dpc_frame_into_par(workers, src, &cfg, dst, &mut self.out_flagged);
         ctx.swap_raw();
         StageReport { corrections: self.out_flagged.len() }
     }
@@ -407,7 +413,8 @@ impl IspStage for AwbStage {
             AwbMode::Auto => self.auto_gains,
             AwbMode::Held => self.commanded,
         };
-        apply_gains_bayer_inplace(ctx.raw_mut(), &gains);
+        let workers = ctx.workers;
+        apply_gains_bayer_inplace_par(workers, ctx.raw_mut(), &gains);
         ctx.applied_gains = gains;
         ctx.auto_gains = self.auto_gains;
         StageReport::default()
@@ -428,8 +435,9 @@ impl IspStage for DemosaicStage {
     }
 
     fn process(&mut self, ctx: &mut FrameCtx<'_>) -> StageReport {
+        let workers = ctx.workers;
         let (raw, rgb) = ctx.raw_and_rgb_mut();
-        demosaic_frame_into(raw, rgb);
+        demosaic_frame_into_par(workers, raw, rgb);
         StageReport::default()
     }
 }
@@ -458,8 +466,9 @@ impl IspStage for NlmStage {
             return StageReport::default();
         }
         let cfg = NlmConfig { h: self.h, search: self.search };
+        let workers = ctx.workers;
         let (src, dst) = ctx.rgb_pair();
-        nlm_rgb_shared_into(src, &cfg, dst, &mut self.luma);
+        nlm_rgb_shared_into_par(workers, src, &cfg, dst, &mut self.luma);
         ctx.swap_rgb();
         StageReport::default()
     }
@@ -485,7 +494,8 @@ impl IspStage for GammaStage {
     }
 
     fn process(&mut self, ctx: &mut FrameCtx<'_>) -> StageReport {
-        self.lut.apply_rgb_inplace(ctx.rgb_mut());
+        let workers = ctx.workers;
+        self.lut.apply_rgb_inplace_par(workers, ctx.rgb_mut());
         StageReport::default()
     }
 }
@@ -506,8 +516,9 @@ impl IspStage for CscStage {
     }
 
     fn process(&mut self, ctx: &mut FrameCtx<'_>) -> StageReport {
+        let workers = ctx.workers;
         let (src, dst) = ctx.rgb_pair();
-        csc_sharpen_into(src, self.strength, &mut self.scratch, dst);
+        csc_sharpen_into_par(workers, src, self.strength, &mut self.scratch, dst);
         ctx.swap_rgb();
         StageReport::default()
     }
@@ -524,6 +535,9 @@ pub struct StageGraph {
     params: IspParams,
     stages: Vec<Box<dyn IspStage>>,
     pool: BufferPool,
+    /// Deterministic worker pool the stages band onto (inline by
+    /// default; the cognitive loop / fleet install the shared pool).
+    workers: Arc<WorkerPool>,
     last_mean_luma: Option<f64>,
     auto_gains: AwbGains,
 }
@@ -556,9 +570,17 @@ impl StageGraph {
             params,
             stages,
             pool: BufferPool::default(),
+            workers: WorkerPool::inline(),
             last_mean_luma: None,
             auto_gains: AwbGains::unity(),
         }
+    }
+
+    /// Install the shared worker pool the stages band their rows onto.
+    /// Output bytes are identical for any pool size — this trades wall
+    /// time only (`tests/parallel_parity.rs`).
+    pub fn set_worker_pool(&mut self, pool: Arc<WorkerPool>) {
+        self.workers = pool;
     }
 
     /// Mean luma of the most recent output frame (policy feedback).
@@ -602,6 +624,7 @@ impl StageGraph {
         let mut ctx = FrameCtx {
             src: Some(raw),
             pool: &mut self.pool,
+            workers: self.workers.as_ref(),
             applied_gains: AwbGains::unity(),
             auto_gains: self.auto_gains,
         };
@@ -744,6 +767,25 @@ mod tests {
         let (out, report) = g.process(&capture(3));
         assert_eq!(out.r.len(), 64 * 64, "demosaic must still run");
         assert!(!report.stage_times[STAGE_DEMOSAIC].bypassed);
+    }
+
+    #[test]
+    fn graph_output_bit_identical_across_worker_pools() {
+        let raw = capture(11);
+        let mut base = StageGraph::new(&IspConfig::default());
+        let mut want = Vec::new();
+        for _ in 0..3 {
+            let (out, _) = base.process(&raw);
+            want.push(out.clone());
+        }
+        for workers in [2usize, 3, 8] {
+            let mut g = StageGraph::new(&IspConfig::default());
+            g.set_worker_pool(WorkerPool::new(workers));
+            for (i, expect) in want.iter().enumerate() {
+                let (out, _) = g.process(&raw);
+                assert_eq!(out, expect, "frame {i} @ {workers} workers");
+            }
+        }
     }
 
     #[test]

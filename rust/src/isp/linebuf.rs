@@ -117,6 +117,65 @@ impl<const K: usize> WindowFormer<K> {
     }
 }
 
+/// Clamped-border KxK window read directly from the full frame — the
+/// band executor's window former. Bit-identical to [`WindowFormer`]: the
+/// oracle tests below prove the streaming former emits exactly this
+/// clamped read at every center, so a row band that forms windows this
+/// way (its halo rows are plain reads into the shared input — no copies)
+/// produces the same bytes as the serial stream.
+#[inline]
+pub fn window_at<const K: usize>(
+    data: &[u8],
+    width: usize,
+    height: usize,
+    cx: usize,
+    cy: usize,
+) -> [[u8; K]; K] {
+    let r = (K / 2) as isize;
+    let mut win = [[0u8; K]; K];
+    for (dy, row_out) in win.iter_mut().enumerate() {
+        let sy = (cy as isize + dy as isize - r).clamp(0, height as isize - 1) as usize;
+        let row = &data[sy * width..(sy + 1) * width];
+        for (dx, v) in row_out.iter_mut().enumerate() {
+            let sx = (cx as isize + dx as isize - r).clamp(0, width as isize - 1) as usize;
+            *v = row[sx];
+        }
+    }
+    win
+}
+
+/// Band-parallel [`stream_frame_into`]: the frame's rows are split into
+/// one contiguous band per pool lane; each band forms its windows with
+/// [`window_at`] (halo rows read the shared input in place) and writes
+/// its disjoint slice of the output. The kernel is pure per window, so
+/// output bytes are bit-identical to the streaming former for ANY worker
+/// count — including frames shorter than the pool.
+pub fn stream_frame_into_bands<const K: usize>(
+    pool: &crate::runtime::pool::WorkerPool,
+    data: &[u8],
+    width: usize,
+    height: usize,
+    out: &mut Vec<u8>,
+    f: impl Fn(&[[u8; K]; K], usize, usize) -> u8 + Sync,
+) {
+    out.resize(width * height, 0);
+    let bounds = crate::runtime::pool::band_bounds(height, pool.size());
+    let f = &f;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
+    let chunks = crate::runtime::pool::split_bands(out.as_mut_slice(), &bounds, width);
+    for (band, &(y0, y1)) in chunks.into_iter().zip(&bounds) {
+        jobs.push(Box::new(move || {
+            for cy in y0..y1 {
+                for cx in 0..width {
+                    let win = window_at::<K>(data, width, height, cx, cy);
+                    band[(cy - y0) * width + cx] = f(&win, cx, cy);
+                }
+            }
+        }));
+    }
+    pool.run_scoped(jobs);
+}
+
 /// Drive a KxK window kernel over a full frame *through the streaming
 /// former* without producing an output plane — the traversal primitive the
 /// windowed stages share (multi-plane stages write through the closure).
@@ -216,6 +275,48 @@ mod tests {
             assert_eq!(*w, oracle_window::<5>(&img2, cx, cy), "at ({cx},{cy})");
             w[2][2]
         });
+    }
+
+    #[test]
+    fn all_windows_match_oracle_7x7() {
+        let mut rng = SplitMix64::new(31);
+        let img = ImageU8::from_fn(9, 5, |_, _| (rng.next_u32() & 0xFF) as u8);
+        let img2 = img.clone();
+        stream_frame::<7>(&img.data, 9, 5, |w, cx, cy| {
+            assert_eq!(*w, oracle_window::<7>(&img2, cx, cy), "at ({cx},{cy})");
+            w[3][3]
+        });
+    }
+
+    #[test]
+    fn window_at_equals_streaming_former() {
+        let mut rng = SplitMix64::new(40);
+        let img = ImageU8::from_fn(11, 7, |_, _| (rng.next_u32() & 0xFF) as u8);
+        stream_frame::<5>(&img.data, 11, 7, |w, cx, cy| {
+            assert_eq!(*w, window_at::<5>(&img.data, 11, 7, cx, cy));
+            w[2][2]
+        });
+    }
+
+    #[test]
+    fn banded_stream_bit_identical_for_any_worker_count() {
+        use crate::runtime::pool::WorkerPool;
+        let mut rng = SplitMix64::new(55);
+        // heights include odd values smaller than the pool width
+        for (w, h) in [(12usize, 9usize), (8, 1), (9, 2), (16, 3), (7, 5)] {
+            let img = ImageU8::from_fn(w, h, |_, _| (rng.next_u32() & 0xFF) as u8);
+            let want = stream_frame::<5>(&img.data, w, h, |win, cx, cy| {
+                win[2][2] ^ ((cx + cy) as u8)
+            });
+            for workers in [1usize, 2, 3, 8] {
+                let pool = WorkerPool::new(workers);
+                let mut got = Vec::new();
+                stream_frame_into_bands::<5>(&pool, &img.data, w, h, &mut got, |win, cx, cy| {
+                    win[2][2] ^ ((cx + cy) as u8)
+                });
+                assert_eq!(got, want, "{w}x{h} @ {workers} workers");
+            }
+        }
     }
 
     #[test]

@@ -11,8 +11,35 @@
 //! * patch distance = SSD over the 3×3 patch, normalized;
 //! * weight LUT: 16-entry step approximation of `exp(-d / h²)` in Q0.8 —
 //!   integer multiply-accumulate only, like the HDL datapath.
+//!
+//! ## Incremental column-SSD recurrence (the hot-path core)
+//!
+//! The naive kernel recomputes all nine taps of every patch SSD at every
+//! pixel. The production core ([`nlm_rgb_shared_into`] and its banded
+//! variant) instead exploits that for a fixed search offset `(dx, dy)`
+//! the 3×3 patch SSD is a sum of three **column SSDs**
+//! `C(u) = Σ_{py∈{-1,0,1}} (L[cy+py][u] - L[cy+dy+py][u+dx])²`
+//! (coordinates clamped per side, exactly as the window former clamps):
+//!
+//! ```text
+//! patchSSD(cx) = C(cx-1) + C(cx) + C(cx+1)
+//! ```
+//!
+//! Sliding `cx → cx+1` reuses two of the three columns, so each pixel
+//! evaluates ONE fresh column (3 squared diffs) instead of nine per
+//! offset — a 3× cut in the dominant SSD work. Every operation is exact
+//! u32 integer arithmetic and addition is associative, so the summed SSD
+//! — and therefore the LUT bin, the weights, and the output bytes — are
+//! **bit-identical** to the direct kernel (`shared_into_matches_plane_
+//! copy_path` proves it). LUT binning itself is an integer shift
+//! (`ssd >> SSD_SHIFT`), not a float divide; see [`SSD_SHIFT`].
+//!
+//! Row bands parallelize on top: each band owns disjoint output rows and
+//! reads its halo rows straight from the shared luma plane, so the banded
+//! output is bit-identical for any worker count.
 
 use super::linebuf::{for_each_window, stream_frame};
+use crate::runtime::pool::{band_bounds, split_bands, WorkerPool};
 use crate::util::{ImageU8, PlanarRgb};
 
 /// NLM configuration (strength `h` is NPU-tunable via the parameter bus).
@@ -46,6 +73,20 @@ pub fn weight_lut(h: f64) -> [u16; 16] {
 /// Mean-SSD quantization step per LUT bin.
 pub const SSD_STEP: f64 = 32.0;
 
+/// `log2(SSD_STEP)`: the hot loop bins a u32 mean-SSD with an integer
+/// shift (`ssd >> SSD_SHIFT`) instead of the float divide-and-cast the
+/// seed used — bit-exact, because `(ssd as f64 / 32.0) as usize` is
+/// exactly `ssd / 32` for any u32 (f64 holds every u32 exactly and the
+/// cast truncates toward zero).
+pub const SSD_SHIFT: u32 = 5;
+
+// The shift and the step must describe the same quantization — a drifted
+// SSD_STEP would silently rescale every LUT bin.
+const _: () = assert!(
+    SSD_STEP == (1u64 << SSD_SHIFT) as f64,
+    "SSD_STEP must equal 2^SSD_SHIFT"
+);
+
 /// 3x3 patch SSD (mean over 9 taps) between patches centered at
 /// `(cx, cy)` and `(cx+dx, cy+dy)` inside a 7x7 window (center 3,3).
 #[inline]
@@ -73,7 +114,7 @@ pub fn nlm_window(w: &[[u8; 7]; 7], lut: &[u16; 16], search: usize) -> u8 {
                 256 // self weight = 1.0 (standard NLM center handling)
             } else {
                 let ssd = patch_ssd(w, dx, dy);
-                let bin = ((ssd as f64 / SSD_STEP) as usize).min(15);
+                let bin = ((ssd >> SSD_SHIFT) as usize).min(15);
                 lut[bin] as u32
             };
             num += wgt * w[(3 + dy) as usize][(3 + dx) as usize] as u32;
@@ -122,7 +163,7 @@ fn nlm_shared_core(
                     256
                 } else {
                     let ssd = patch_ssd(w, dx, dy);
-                    let bin = ((ssd as f64 / SSD_STEP) as usize).min(15);
+                    let bin = ((ssd >> SSD_SHIFT) as usize).min(15);
                     lut[bin] as u32
                 };
                 let sx = (cx as isize + dx).clamp(0, width as isize - 1) as usize;
@@ -141,6 +182,99 @@ fn nlm_shared_core(
     });
 }
 
+/// Incremental shared-weight NLM over the row band `[y0, y1)` (see the
+/// module docs for the column-SSD recurrence). Output slices are the
+/// band's rows only (`(y1 - y0) * width` elements); halo rows read the
+/// shared input planes in place. Bit-identical to [`nlm_shared_core`].
+#[allow(clippy::too_many_arguments)]
+fn nlm_band_incremental(
+    luma: &[u8],
+    r: &[u8],
+    g: &[u8],
+    b: &[u8],
+    width: usize,
+    height: usize,
+    lut: &[u16; 16],
+    search: usize,
+    y0: usize,
+    y1: usize,
+    out_r: &mut [u8],
+    out_g: &mut [u8],
+    out_b: &mut [u8],
+) {
+    let s = search.min(2) as isize;
+    let w_i = width as isize;
+    let h_i = height as isize;
+    // per-row weight accumulators (den, per-channel numerators)
+    let mut den = vec![0u32; width];
+    let mut num_r = vec![0u32; width];
+    let mut num_g = vec![0u32; width];
+    let mut num_b = vec![0u32; width];
+    for cy in y0..y1 {
+        // center tap first: self weight 256 (order-free — u32 adds)
+        let row0 = cy * width;
+        for x in 0..width {
+            den[x] = 256;
+            num_r[x] = 256 * r[row0 + x] as u32;
+            num_g[x] = 256 * g[row0 + x] as u32;
+            num_b[x] = 256 * b[row0 + x] as u32;
+        }
+        for dy in -s..=s {
+            for dx in -s..=s {
+                if dx == 0 && dy == 0 {
+                    continue;
+                }
+                // the three patch rows on each side, clamped vertically
+                // exactly as the window former clamps
+                let row_start =
+                    |off: isize| ((cy as isize + off).clamp(0, h_i - 1) as usize) * width;
+                let (r_a0, r_a1, r_a2) = (row_start(-1), row_start(0), row_start(1));
+                let (r_b0, r_b1, r_b2) =
+                    (row_start(dy - 1), row_start(dy), row_start(dy + 1));
+                let a0 = &luma[r_a0..r_a0 + width];
+                let a1 = &luma[r_a1..r_a1 + width];
+                let a2 = &luma[r_a2..r_a2 + width];
+                let b0 = &luma[r_b0..r_b0 + width];
+                let b1 = &luma[r_b1..r_b1 + width];
+                let b2 = &luma[r_b2..r_b2 + width];
+                // column SSD at absolute column u (each side clamped
+                // horizontally on its own, as in `patch_ssd`)
+                let col = |u: isize| -> u32 {
+                    let ax = u.clamp(0, w_i - 1) as usize;
+                    let bx = (u + dx).clamp(0, w_i - 1) as usize;
+                    let d0 = a0[ax] as i32 - b0[bx] as i32;
+                    let d1 = a1[ax] as i32 - b1[bx] as i32;
+                    let d2 = a2[ax] as i32 - b2[bx] as i32;
+                    (d0 * d0 + d1 * d1 + d2 * d2) as u32
+                };
+                let src_row = ((cy as isize + dy).clamp(0, h_i - 1) as usize) * width;
+                let mut c_prev = col(-1);
+                let mut c_cur = col(0);
+                for cx in 0..width {
+                    let c_next = col(cx as isize + 1);
+                    let ssd = (c_prev + c_cur + c_next) / 9;
+                    let bin = ((ssd >> SSD_SHIFT) as usize).min(15);
+                    let wgt = lut[bin] as u32;
+                    let sx = (cx as isize + dx).clamp(0, w_i - 1) as usize;
+                    let idx = src_row + sx;
+                    den[cx] += wgt;
+                    num_r[cx] += wgt * r[idx] as u32;
+                    num_g[cx] += wgt * g[idx] as u32;
+                    num_b[cx] += wgt * b[idx] as u32;
+                    c_prev = c_cur;
+                    c_cur = c_next;
+                }
+            }
+        }
+        let base = (cy - y0) * width;
+        for x in 0..width {
+            out_r[base + x] = ((num_r[x] + den[x] / 2) / den[x]) as u8;
+            out_g[base + x] = ((num_g[x] + den[x] / 2) / den[x]) as u8;
+            out_b[base + x] = ((num_b[x] + den[x] / 2) / den[x]) as u8;
+        }
+    }
+}
+
 /// Fill `luma` with the BT.601 integer approximation `(2R + 5G + B) / 8`
 /// — the ONE place the shared-weight luma expression lives.
 fn luma_plane_into(r: &[u8], g: &[u8], b: &[u8], n: usize, luma: &mut Vec<u8>) {
@@ -152,7 +286,9 @@ fn luma_plane_into(r: &[u8], g: &[u8], b: &[u8], n: usize, luma: &mut Vec<u8>) {
 
 /// Planar-RGB shared-weight NLM into a caller-owned destination (the
 /// stage-graph hot path: `dst` and the `luma` scratch plane are reused
-/// frame to frame, and no per-channel plane copies are made).
+/// frame to frame, and no per-channel plane copies are made). Runs the
+/// incremental column-SSD core serially — bit-identical to the direct
+/// [`nlm_rgb_shared`] reference.
 pub fn nlm_rgb_shared_into(
     src: &PlanarRgb,
     cfg: &NlmConfig,
@@ -170,10 +306,54 @@ pub fn nlm_rgb_shared_into(
     dst.r.resize(n, 0);
     dst.g.resize(n, 0);
     dst.b.resize(n, 0);
-    nlm_shared_core(
-        luma, &src.r, &src.g, &src.b, width, height, &lut, cfg.search, &mut dst.r,
-        &mut dst.g, &mut dst.b,
+    nlm_band_incremental(
+        luma, &src.r, &src.g, &src.b, width, height, &lut, cfg.search, 0, height,
+        &mut dst.r, &mut dst.g, &mut dst.b,
     );
+}
+
+/// Row-band parallel [`nlm_rgb_shared_into`]: the incremental core runs
+/// one band per pool lane over disjoint output rows. Band boundaries
+/// only change which thread computes a row — never its bytes — so the
+/// output is bit-identical for any worker count.
+pub fn nlm_rgb_shared_into_par(
+    pool: &WorkerPool,
+    src: &PlanarRgb,
+    cfg: &NlmConfig,
+    dst: &mut PlanarRgb,
+    luma: &mut Vec<u8>,
+) {
+    if pool.is_inline() || src.height < 2 {
+        nlm_rgb_shared_into(src, cfg, dst, luma);
+        return;
+    }
+    let lut = weight_lut(cfg.h);
+    let (width, height) = (src.width, src.height);
+    let n = width * height;
+    luma_plane_into(&src.r, &src.g, &src.b, n, luma);
+    dst.width = width;
+    dst.height = height;
+    dst.r.resize(n, 0);
+    dst.g.resize(n, 0);
+    dst.b.resize(n, 0);
+    let bounds = band_bounds(height, pool.size());
+    let (lut, luma) = (&lut, &luma[..]);
+    let (r, g, b) = (&src.r[..], &src.g[..], &src.b[..]);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
+    let chunks_r = split_bands(dst.r.as_mut_slice(), &bounds, width);
+    let chunks_g = split_bands(dst.g.as_mut_slice(), &bounds, width);
+    let chunks_b = split_bands(dst.b.as_mut_slice(), &bounds, width);
+    for (((br, bg), bb), &(y0, y1)) in
+        chunks_r.into_iter().zip(chunks_g).zip(chunks_b).zip(&bounds)
+    {
+        let search = cfg.search;
+        jobs.push(Box::new(move || {
+            nlm_band_incremental(
+                luma, r, g, b, width, height, lut, search, y0, y1, br, bg, bb,
+            );
+        }));
+    }
+    pool.run_scoped(jobs);
 }
 
 /// RGB NLM with **luma-shared weights** (perf pass, EXPERIMENTS.md §Perf):
@@ -312,6 +492,76 @@ mod tests {
         assert_eq!(dst.r, er.data);
         assert_eq!(dst.g, eg.data);
         assert_eq!(dst.b, eb.data);
+    }
+
+    #[test]
+    fn shift_binning_matches_float_binning() {
+        // the satellite contract: (ssd as f64 / SSD_STEP) as usize ==
+        // ssd >> SSD_SHIFT for every u32 the datapath can produce
+        for ssd in (0u32..20_000).step_by(7).chain([0, 31, 32, 33, 511, 512, u32::MAX / 9]) {
+            assert_eq!(
+                (ssd as f64 / SSD_STEP) as usize,
+                (ssd >> SSD_SHIFT) as usize,
+                "ssd={ssd}"
+            );
+        }
+    }
+
+    #[test]
+    fn incremental_core_bit_identical_to_direct_core() {
+        // odd sizes, both search radii, random content: the recurrence
+        // must reproduce the direct 9-tap kernel exactly
+        let mut rng = SplitMix64::new(0x17C4);
+        for &(w, h) in &[(24usize, 20usize), (7, 7), (9, 3), (32, 5), (11, 13)] {
+            for search in [1usize, 2] {
+                let n = w * h;
+                let src = PlanarRgb {
+                    width: w,
+                    height: h,
+                    r: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+                    g: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+                    b: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+                };
+                let cfg = NlmConfig { h: 10.0, search };
+                let plane = |d: &Vec<u8>| ImageU8 { width: w, height: h, data: d.clone() };
+                let (er, eg, eb) =
+                    nlm_rgb_shared(&plane(&src.r), &plane(&src.g), &plane(&src.b), &cfg);
+                let mut dst = PlanarRgb::new(0, 0);
+                let mut luma = Vec::new();
+                nlm_rgb_shared_into(&src, &cfg, &mut dst, &mut luma);
+                assert_eq!(dst.r, er.data, "{w}x{h} s={search}");
+                assert_eq!(dst.g, eg.data, "{w}x{h} s={search}");
+                assert_eq!(dst.b, eb.data, "{w}x{h} s={search}");
+            }
+        }
+    }
+
+    #[test]
+    fn banded_nlm_bit_identical_across_worker_counts() {
+        use crate::runtime::pool::WorkerPool;
+        let mut rng = SplitMix64::new(0xBA4D);
+        // heights include odd values smaller than the pool width
+        for &(w, h) in &[(16usize, 12usize), (9, 3), (24, 5)] {
+            let n = w * h;
+            let src = PlanarRgb {
+                width: w,
+                height: h,
+                r: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+                g: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+                b: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+            };
+            let cfg = NlmConfig::default();
+            let mut want = PlanarRgb::new(0, 0);
+            let mut luma = Vec::new();
+            nlm_rgb_shared_into(&src, &cfg, &mut want, &mut luma);
+            for workers in [1usize, 2, 3, 8] {
+                let pool = WorkerPool::new(workers);
+                let mut got = PlanarRgb::new(0, 0);
+                let mut luma2 = Vec::new();
+                nlm_rgb_shared_into_par(&pool, &src, &cfg, &mut got, &mut luma2);
+                assert_eq!(got, want, "{w}x{h} @ {workers} workers");
+            }
+        }
     }
 
     #[test]

@@ -97,6 +97,13 @@ impl IspPipeline {
         Self { graph: StageGraph::new(cfg) }
     }
 
+    /// Install the shared deterministic worker pool the stage graph bands
+    /// its rows onto (see `runtime::pool`). Bit-identical output for any
+    /// pool size — wall time is the only thing that changes.
+    pub fn set_worker_pool(&mut self, pool: std::sync::Arc<crate::runtime::pool::WorkerPool>) {
+        self.graph.set_worker_pool(pool);
+    }
+
     /// Mean luma of the most recent output frame (policy feedback).
     pub fn last_mean_luma(&self) -> Option<f64> {
         self.graph.last_mean_luma()

@@ -5,7 +5,8 @@
 //! implementation. Luma sharpening is a 3×3 unsharp mask applied to Y only
 //! (the point of converting: chroma stays untouched), then converted back.
 
-use super::linebuf::stream_frame_into;
+use super::linebuf::{stream_frame_into, stream_frame_into_bands};
+use crate::runtime::pool::{band_bounds, split_bands, WorkerPool};
 use crate::util::{ImageU8, PlanarRgb};
 
 /// Fractional bits of the CSC coefficients.
@@ -185,6 +186,107 @@ pub fn csc_sharpen_into(
     }
 }
 
+/// Row-band parallel [`csc_sharpen_into`]: the two pointwise conversions
+/// band over disjoint plane chunks and the 3×3 unsharp mask bands with
+/// halo reads. Every sub-step is bit-identical to the scalar path, so
+/// the stage output never depends on the worker count.
+pub fn csc_sharpen_into_par(
+    pool: &WorkerPool,
+    rgb: &PlanarRgb,
+    strength: f64,
+    scratch: &mut CscScratch,
+    out: &mut PlanarRgb,
+) {
+    if pool.is_inline() || rgb.height < 2 {
+        csc_sharpen_into(rgb, strength, scratch, out);
+        return;
+    }
+    let (width, height) = (rgb.width, rgb.height);
+    let n = rgb.r.len();
+    // forward CSC, banded over rows
+    scratch.ycc.width = width;
+    scratch.ycc.height = height;
+    scratch.ycc.y.resize(n, 0);
+    scratch.ycc.cb.resize(n, 0);
+    scratch.ycc.cr.resize(n, 0);
+    let bounds = band_bounds(height, pool.size());
+    {
+        let (r, g, b) = (&rgb.r[..], &rgb.g[..], &rgb.b[..]);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
+        let chunks_y = split_bands(scratch.ycc.y.as_mut_slice(), &bounds, width);
+        let chunks_cb = split_bands(scratch.ycc.cb.as_mut_slice(), &bounds, width);
+        let chunks_cr = split_bands(scratch.ycc.cr.as_mut_slice(), &bounds, width);
+        for (((by, bcb), bcr), &(y0, _)) in
+            chunks_y.into_iter().zip(chunks_cb).zip(chunks_cr).zip(&bounds)
+        {
+            let base = y0 * width;
+            jobs.push(Box::new(move || {
+                for i in 0..by.len() {
+                    let (y, cb, cr) = rgb_to_ycbcr(r[base + i], g[base + i], b[base + i]);
+                    by[i] = y;
+                    bcb[i] = cb;
+                    bcr[i] = cr;
+                }
+            }));
+        }
+        pool.run_scoped(jobs);
+    }
+    // sharpen Y, banded with halo reads (same zero-strength short-circuit
+    // as the scalar path)
+    let s_q = (strength * 16.0).round() as i32; // Q4.4
+    if s_q == 0 {
+        scratch.y_sharp.clear();
+        scratch.y_sharp.extend_from_slice(&scratch.ycc.y);
+    } else {
+        stream_frame_into_bands::<3>(
+            pool,
+            &scratch.ycc.y,
+            width,
+            height,
+            &mut scratch.y_sharp,
+            |w, _, _| {
+                let mut sum = 0i32;
+                for row in w {
+                    for &v in row {
+                        sum += v as i32;
+                    }
+                }
+                let blur = sum / 9;
+                let c = w[1][1] as i32;
+                let sharp = c + (s_q * (c - blur)) / 16;
+                sharp.clamp(0, 255) as u8
+            },
+        );
+    }
+    // inverse CSC, banded over rows
+    out.width = width;
+    out.height = height;
+    out.r.resize(n, 0);
+    out.g.resize(n, 0);
+    out.b.resize(n, 0);
+    {
+        let (ys, cb, cr) = (&scratch.y_sharp[..], &scratch.ycc.cb[..], &scratch.ycc.cr[..]);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
+        let chunks_r = split_bands(out.r.as_mut_slice(), &bounds, width);
+        let chunks_g = split_bands(out.g.as_mut_slice(), &bounds, width);
+        let chunks_b = split_bands(out.b.as_mut_slice(), &bounds, width);
+        for (((br, bg), bb), &(y0, _)) in
+            chunks_r.into_iter().zip(chunks_g).zip(chunks_b).zip(&bounds)
+        {
+            let base = y0 * width;
+            jobs.push(Box::new(move || {
+                for i in 0..br.len() {
+                    let (r, g, b) = ycbcr_to_rgb(ys[base + i], cb[base + i], cr[base + i]);
+                    br[i] = r;
+                    bg[i] = g;
+                    bb[i] = b;
+                }
+            }));
+        }
+        pool.run_scoped(jobs);
+    }
+}
+
 /// Full stage: RGB -> YCbCr -> sharpen Y -> RGB.
 pub fn csc_sharpen(rgb: &PlanarRgb, strength: f64) -> PlanarRgb {
     let mut scratch = CscScratch::default();
@@ -238,6 +340,33 @@ mod tests {
             let (y, _, _) = rgb_to_ycbcr(r as u8, gg as u8, b as u8);
             assert!((y as f64 - yf).abs() <= 1.0, "{y} vs {yf}");
         });
+    }
+
+    #[test]
+    fn banded_csc_sharpen_bit_identical() {
+        use crate::runtime::pool::WorkerPool;
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(0xC5C);
+        for &(w, h) in &[(20usize, 14usize), (9, 3), (16, 5)] {
+            let n = w * h;
+            let src = PlanarRgb {
+                width: w,
+                height: h,
+                r: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+                g: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+                b: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+            };
+            for strength in [0.0, 0.5, 1.0] {
+                let want = csc_sharpen(&src, strength);
+                for workers in [1usize, 2, 3, 8] {
+                    let pool = WorkerPool::new(workers);
+                    let mut scratch = CscScratch::default();
+                    let mut got = PlanarRgb::new(0, 0);
+                    csc_sharpen_into_par(&pool, &src, strength, &mut scratch, &mut got);
+                    assert_eq!(got, want, "{w}x{h} s={strength} @ {workers} workers");
+                }
+            }
+        }
     }
 
     #[test]

@@ -51,6 +51,7 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "json", help: "run/fleet: emit machine-readable JSON instead of tables", is_switch: true, default: None },
         FlagSpec { name: "isp-stages", help: "ISP stage mask: \"all\", a list of stages to enable (dpc,awb,demosaic,nlm,gamma,csc), or -stage terms to drop from the full graph (e.g. \"-nlm,-csc\")", is_switch: false, default: None },
         FlagSpec { name: "sparse-threshold", help: "SNN activity-adaptive dispatch threshold: spike rate (0..1) above which the NPU plans a layer onto the dense kernel instead of the event-driven sparse path (outputs are identical either way; drives the sparse/dense split reported in metrics and the fleet report)", is_switch: false, default: None },
+        FlagSpec { name: "workers", help: "deterministic worker-pool width for ISP row bands and SNN channel bands (0 = available_parallelism, 1 = inline scalar path; outputs are bit-identical for any value)", is_switch: false, default: None },
     ]
 }
 
@@ -74,6 +75,11 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
         cfg.npu.sparse_threshold = t
             .parse()
             .map_err(|_| anyhow::anyhow!("--sparse-threshold must be a number in [0,1]"))?;
+    }
+    if let Some(w) = args.explicit("workers") {
+        cfg.runtime.workers = w
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--workers must be a non-negative integer"))?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -209,6 +215,9 @@ fn cmd_isp(args: &Args) -> Result<()> {
     });
     let cap = SensorModel::default().capture(&frame, &mut rng);
     let mut isp = IspPipeline::new(&cfg.isp);
+    isp.set_worker_pool(acelerador::runtime::pool::WorkerPool::new(
+        cfg.runtime.resolve_workers(),
+    ));
     let mut last = None;
     for _ in 0..4 {
         last = Some(isp.process(&cap.raw));

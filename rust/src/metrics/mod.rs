@@ -407,6 +407,70 @@ impl SnnLayerMetrics {
     }
 }
 
+/// JSON key of the worker-pool export.
+pub const POOL_KEY: &str = "pool";
+
+/// Worker-pool utilization gauges, refreshed from
+/// [`crate::runtime::pool::PoolStats`] snapshots after each window. The
+/// pool's counters are monotonic totals (shared across every stream that
+/// uses the pool), so these are last-value gauges, not per-stream sums —
+/// fleet aggregation takes the max across streams.
+#[derive(Debug, Default)]
+pub struct PoolMetrics {
+    pub workers: Gauge,
+    pub runs: Gauge,
+    pub tasks: Gauge,
+    /// Total µs spent inside band jobs (stored as integer µs).
+    pub busy_us: Gauge,
+    /// µs during which at least one parallel region was open (exclusive
+    /// across overlapping submitters — see `pool::PoolStats::span_us`).
+    pub span_us: Gauge,
+}
+
+impl PoolMetrics {
+    /// Refresh from a pool snapshot (monotonic totals).
+    pub fn record(&self, stats: &crate::runtime::pool::PoolStats) {
+        self.workers.set(stats.workers as u64);
+        self.runs.set(stats.runs);
+        self.tasks.set(stats.tasks);
+        self.busy_us.set(stats.busy_us as u64);
+        self.span_us.set(stats.span_us as u64);
+    }
+
+    /// `busy / (span * workers)` — the fraction of open parallel-region
+    /// capacity that did useful work.
+    pub fn utilization(&self) -> f64 {
+        let capacity = self.span_us.get() as f64 * self.workers.get() as f64;
+        if capacity <= 0.0 {
+            0.0
+        } else {
+            (self.busy_us.get() as f64 / capacity).min(1.0)
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "workers={} runs={} tasks={} util={:.0}%",
+            self.workers.get(),
+            self.runs.get(),
+            self.tasks.get(),
+            100.0 * self.utilization()
+        )
+    }
+
+    /// `{workers, runs, tasks, busy_us, span_us, utilization}`.
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::num(self.workers.get() as f64)),
+            ("runs", Json::num(self.runs.get() as f64)),
+            ("tasks", Json::num(self.tasks.get() as f64)),
+            ("busy_us", Json::num(self.busy_us.get() as f64)),
+            ("span_us", Json::num(self.span_us.get() as f64)),
+            ("utilization", Json::num(self.utilization())),
+        ])
+    }
+}
+
 /// The coordinator's metric set (one instance per running system).
 #[derive(Debug, Default)]
 pub struct SystemMetrics {
@@ -424,6 +488,8 @@ pub struct SystemMetrics {
     /// Per-layer SNN spike rates + sparse/dense dispatch (the sparsity
     /// budget breakdown).
     pub snn_layers: SnnLayerMetrics,
+    /// Worker-pool utilization (the parallel execution budget).
+    pub pool: PoolMetrics,
 }
 
 impl SystemMetrics {
@@ -434,7 +500,7 @@ impl SystemMetrics {
     pub fn report(&self) -> String {
         format!(
             "windows={} batches={} detections={} isp_frames={} param_updates={}\n\
-             npu:  {}\ne2e:  {}\nisp:  {}\nstages: {}\nsnn:  {}",
+             npu:  {}\ne2e:  {}\nisp:  {}\nstages: {}\nsnn:  {}\npool: {}",
             self.windows_in.get(),
             self.batches_executed.get(),
             self.detections_out.get(),
@@ -445,6 +511,7 @@ impl SystemMetrics {
             self.isp_latency.report(),
             self.isp_stages.report(),
             self.snn_layers.report(),
+            self.pool.report(),
         )
     }
 
@@ -476,6 +543,7 @@ impl SystemMetrics {
             ),
             (ISP_STAGES_KEY, self.isp_stages.snapshot()),
             (SNN_LAYERS_KEY, self.snn_layers.snapshot()),
+            (POOL_KEY, self.pool.snapshot()),
         ])
     }
 }
@@ -622,6 +690,27 @@ mod tests {
         // serializes and parses back
         let text = j.to_string();
         assert_eq!(crate::jsonlite::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn pool_metrics_record_and_export() {
+        let m = SystemMetrics::new();
+        let stats = crate::runtime::pool::PoolStats {
+            workers: 4,
+            runs: 10,
+            tasks: 40,
+            busy_us: 2000.0,
+            span_us: 1000.0,
+        };
+        m.pool.record(&stats);
+        assert_eq!(m.pool.workers.get(), 4);
+        assert!((m.pool.utilization() - 0.5).abs() < 1e-9);
+        let j = m.snapshot();
+        let pool = j.get(POOL_KEY).unwrap();
+        assert_eq!(pool.get("workers").unwrap().as_f64(), Some(4.0));
+        assert_eq!(pool.get("tasks").unwrap().as_f64(), Some(40.0));
+        assert!((pool.get("utilization").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
+        assert!(m.report().contains("pool:"));
     }
 
     #[test]

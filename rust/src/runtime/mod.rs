@@ -7,7 +7,10 @@
 //!   LIF constants — the build/run contract);
 //! * [`npu`]      — [`npu::NpuEngine`]: PJRT CPU client + one compiled
 //!   executable per (backbone, batch), voxel-in / head+rates-out, with
-//!   execute timing for E5.
+//!   execute timing for E5;
+//! * [`pool`]     — [`pool::WorkerPool`]: the deterministic fixed-size
+//!   worker pool both compute planes (ISP row bands, SNN output-channel
+//!   bands) fan out onto, sized by `runtime.workers` / `--workers`.
 //!
 //! Interchange is HLO text because the image's xla_extension 0.5.1 rejects
 //! jax>=0.5 serialized protos (64-bit instruction ids) — see
@@ -15,6 +18,8 @@
 
 pub mod manifest;
 pub mod npu;
+pub mod pool;
 
 pub use manifest::Manifest;
 pub use npu::{NpuEngine, NpuOutput};
+pub use pool::{PoolStats, WorkerPool};

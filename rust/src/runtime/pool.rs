@@ -1,0 +1,530 @@
+//! Deterministic fixed-size worker pool — the software stand-in for the
+//! spatial parallelism the FPGA datapath has for free.
+//!
+//! NeuroHSMD and the automotive neuromorphic perception line both get
+//! their headline speedups from exploiting row/channel parallelism in
+//! hardware; this pool brings the same parallelism to the software
+//! reproduction **without sacrificing determinism**: every consumer
+//! partitions its work into *disjoint* bands (ISP row bands, SNN output
+//! channels), each band computes exactly the bytes the scalar path would,
+//! and band-local tallies (DPC flags, synops) are reduced in band order.
+//! Output bits therefore never depend on the worker count or on thread
+//! scheduling — `tests/parallel_parity.rs` proves it.
+//!
+//! Design points:
+//!
+//! * **Fixed size** — `WorkerPool::new(n)` spawns `n` long-lived threads
+//!   once (sized by `runtime.workers` / `--workers`, default
+//!   `available_parallelism`). `n <= 1` spawns nothing: every
+//!   [`WorkerPool::run_scoped`] degenerates to the inline scalar path.
+//! * **Scoped jobs** — jobs may borrow the caller's stack; `run_scoped`
+//!   blocks until every job has finished before returning, which is what
+//!   makes the (internal) lifetime erasure sound.
+//! * **Panic propagation** — a panicking band job never kills a worker
+//!   and is never silently swallowed by a join: the first payload is
+//!   re-raised on the *submitting* thread after all jobs complete, so a
+//!   fleet stream converts it into an engine error like any other step
+//!   failure.
+//! * **Utilization accounting** — lock-free counters (parallel runs,
+//!   band tasks, busy/span wall time) feed `SystemMetrics` → `--json` →
+//!   the fleet report.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// A queued, lifetime-erased band job.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Shared FIFO the workers drain.
+struct JobQueue {
+    /// (pending jobs, shutdown flag).
+    state: Mutex<(VecDeque<Job>, bool)>,
+    cv: Condvar,
+}
+
+/// Lock-free utilization counters (shared with the worker threads).
+#[derive(Debug, Default)]
+struct PoolCounters {
+    /// `run_scoped` invocations that actually fanned out (>1 job).
+    runs: AtomicU64,
+    /// Band jobs executed (inline or on a worker).
+    tasks: AtomicU64,
+    /// Summed wall time spent *inside* band jobs (ns).
+    busy_ns: AtomicU64,
+    /// Wall time during which AT LEAST ONE parallel region was open (ns).
+    /// Tracked exclusively (overlapping submitters — fleet carriers
+    /// sharing the pool — count an interval once), so
+    /// `busy / (span * workers)` is a true utilization, not one diluted
+    /// by the submitter count.
+    span_ns: AtomicU64,
+}
+
+/// Exclusive open-region span tracker: the first submitter in starts the
+/// clock, the last one out banks it. (A mutex, not atomics — entered
+/// once per `run_scoped`, never per task.)
+#[derive(Debug, Default)]
+struct SpanTracker {
+    /// (open regions, start of the current open window).
+    state: Mutex<(usize, Option<Instant>)>,
+}
+
+impl SpanTracker {
+    fn enter(&self) {
+        let mut s = self.state.lock().unwrap();
+        if s.0 == 0 {
+            s.1 = Some(Instant::now());
+        }
+        s.0 += 1;
+    }
+
+    /// Returns the ns to bank when this exit closes the window.
+    fn exit(&self) -> u64 {
+        let mut s = self.state.lock().unwrap();
+        s.0 -= 1;
+        if s.0 == 0 {
+            s.1.take().map_or(0, |t| t.elapsed().as_nanos() as u64)
+        } else {
+            0
+        }
+    }
+}
+
+/// Monotonic snapshot of the pool's utilization counters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolStats {
+    /// Parallelism width (1 = inline, no threads).
+    pub workers: usize,
+    /// Fan-out invocations.
+    pub runs: u64,
+    /// Band jobs executed.
+    pub tasks: u64,
+    /// Total time spent inside band jobs (µs).
+    pub busy_us: f64,
+    /// Wall time at least one parallel region was open (µs; overlapping
+    /// submitters count an interval once).
+    pub span_us: f64,
+}
+
+impl PoolStats {
+    /// Fraction of the pool's theoretical capacity that did useful work
+    /// while a parallel region was open: `busy / (span * workers)`.
+    /// Because `span` is exclusive, concurrent submitters (fleet
+    /// carriers) don't dilute the number.
+    pub fn utilization(&self) -> f64 {
+        let capacity = self.span_us * self.workers as f64;
+        if capacity <= 0.0 {
+            0.0
+        } else {
+            (self.busy_us / capacity).min(1.0)
+        }
+    }
+}
+
+/// Completion latch for one `run_scoped` call: remaining-job count plus
+/// the first captured panic payload.
+struct Latch {
+    state: Mutex<(usize, Option<Box<dyn Any + Send>>)>,
+    cv: Condvar,
+}
+
+/// The fixed-size deterministic worker pool.
+pub struct WorkerPool {
+    size: usize,
+    queue: Arc<JobQueue>,
+    counters: Arc<PoolCounters>,
+    span: SpanTracker,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("size", &self.size).finish()
+    }
+}
+
+impl WorkerPool {
+    /// Build a pool of `size` lanes. `size <= 1` spawns no threads: the
+    /// pool exists but every run executes inline on the caller (the
+    /// scalar path — used as the parity baseline everywhere).
+    pub fn new(size: usize) -> Arc<Self> {
+        let size = size.max(1);
+        let queue = Arc::new(JobQueue {
+            state: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+        });
+        let counters = Arc::new(PoolCounters::default());
+        let mut threads = Vec::new();
+        if size > 1 {
+            for i in 0..size {
+                let q = queue.clone();
+                let t = std::thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || worker_loop(q))
+                    .expect("spawning pool worker");
+                threads.push(t);
+            }
+        }
+        Arc::new(Self { size, queue, counters, span: SpanTracker::default(), threads })
+    }
+
+    /// The degenerate single-lane pool (inline execution, no threads).
+    pub fn inline() -> Arc<Self> {
+        Self::new(1)
+    }
+
+    /// A pool sized to the machine (`available_parallelism`).
+    pub fn auto() -> Arc<Self> {
+        Self::new(auto_workers())
+    }
+
+    /// Parallelism width (bands consumers should split into).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// True when this pool runs everything inline on the caller.
+    pub fn is_inline(&self) -> bool {
+        self.threads.is_empty()
+    }
+
+    /// Execute the scoped band jobs, blocking until every one completes.
+    ///
+    /// Jobs may borrow from the caller's stack (`'scope`); the blocking
+    /// wait guarantees those borrows outlive every job, which is exactly
+    /// what makes the internal lifetime erasure sound. On an inline pool
+    /// (or a single job) the jobs run sequentially in submission order on
+    /// this thread — byte-identical results either way, because callers
+    /// only ever submit disjoint bands of pure work.
+    ///
+    /// If a job panics, the first payload is re-raised HERE, on the
+    /// submitting thread, after all jobs have finished — a band panic
+    /// surfaces like any inline panic instead of dying in a detached
+    /// join (the fleet worker's `catch_unwind` then turns it into an
+    /// engine error).
+    pub fn run_scoped<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        self.counters.tasks.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        self.span.enter();
+        if self.is_inline() || jobs.len() == 1 {
+            let mut first_panic: Option<Box<dyn Any + Send>> = None;
+            for job in jobs {
+                let t_job = Instant::now();
+                if let Err(p) = catch_unwind(AssertUnwindSafe(job)) {
+                    first_panic.get_or_insert(p);
+                }
+                self.counters
+                    .busy_ns
+                    .fetch_add(t_job.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            let banked = self.span.exit();
+            self.counters.span_ns.fetch_add(banked, Ordering::Relaxed);
+            if let Some(p) = first_panic {
+                resume_unwind(p);
+            }
+            return;
+        }
+
+        self.counters.runs.fetch_add(1, Ordering::Relaxed);
+        let latch = Arc::new(Latch {
+            state: Mutex::new((jobs.len(), None)),
+            cv: Condvar::new(),
+        });
+        {
+            let mut q = self.queue.state.lock().unwrap();
+            for job in jobs {
+                // SAFETY: only the lifetime is erased ('scope -> 'static);
+                // the layout of Box<dyn FnOnce() + Send> is unchanged. The
+                // latch wait below blocks this frame until the job has run
+                // to completion (or panicked and been captured), so every
+                // 'scope borrow inside the job strictly outlives its use.
+                let job: Job = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'scope>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(job)
+                };
+                let latch = latch.clone();
+                let counters = self.counters.clone();
+                q.0.push_back(Box::new(move || {
+                    let t_job = Instant::now();
+                    let result = catch_unwind(AssertUnwindSafe(job));
+                    counters
+                        .busy_ns
+                        .fetch_add(t_job.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    let mut s = latch.state.lock().unwrap();
+                    if let Err(p) = result {
+                        if s.1.is_none() {
+                            s.1 = Some(p);
+                        }
+                    }
+                    s.0 -= 1;
+                    if s.0 == 0 {
+                        latch.cv.notify_all();
+                    }
+                }));
+            }
+            self.queue.cv.notify_all();
+        }
+        let first_panic = {
+            let mut s = latch.state.lock().unwrap();
+            while s.0 > 0 {
+                s = latch.cv.wait(s).unwrap();
+            }
+            s.1.take()
+        };
+        let banked = self.span.exit();
+        self.counters.span_ns.fetch_add(banked, Ordering::Relaxed);
+        if let Some(p) = first_panic {
+            resume_unwind(p);
+        }
+    }
+
+    /// Utilization counter snapshot.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.size,
+            runs: self.counters.runs.load(Ordering::Relaxed),
+            tasks: self.counters.tasks.load(Ordering::Relaxed),
+            busy_us: self.counters.busy_ns.load(Ordering::Relaxed) as f64 / 1e3,
+            span_us: self.counters.span_ns.load(Ordering::Relaxed) as f64 / 1e3,
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.queue.state.lock().unwrap();
+            q.1 = true;
+            self.queue.cv.notify_all();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn worker_loop(queue: Arc<JobQueue>) {
+    loop {
+        let job = {
+            let mut s = queue.state.lock().unwrap();
+            loop {
+                if let Some(j) = s.0.pop_front() {
+                    break j;
+                }
+                if s.1 {
+                    return;
+                }
+                s = queue.cv.wait(s).unwrap();
+            }
+        };
+        // jobs are wrapped in catch_unwind at enqueue time — a band
+        // panic cannot take a worker down with it
+        job();
+    }
+}
+
+/// The machine's parallelism (>= 1) — the `runtime.workers = 0` default.
+pub fn auto_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `data` into one disjoint mutable chunk per band: band `(b0, b1)`
+/// gets `(b1 - b0) * unit` contiguous elements (`unit` = row width for
+/// ISP row bands, `h_out * w_out` for SNN channel bands). This is THE
+/// disjointness step of every banded kernel — one implementation of the
+/// error-prone split walk instead of a copy per call site.
+pub fn split_bands<'a, T>(
+    data: &'a mut [T],
+    bounds: &[(usize, usize)],
+    unit: usize,
+) -> Vec<&'a mut [T]> {
+    let mut chunks = Vec::with_capacity(bounds.len());
+    let mut rest = data;
+    for &(b0, b1) in bounds {
+        let (chunk, tail) = rest.split_at_mut((b1 - b0) * unit);
+        chunks.push(chunk);
+        rest = tail;
+    }
+    debug_assert!(rest.is_empty(), "bounds must cover the slice exactly");
+    chunks
+}
+
+/// Deterministic contiguous partition of `0..n` into at most `bands`
+/// non-empty ranges (earlier bands take the remainder). The partition
+/// depends only on `(n, bands)` — never on scheduling.
+pub fn band_bounds(n: usize, bands: usize) -> Vec<(usize, usize)> {
+    let bands = bands.max(1).min(n.max(1));
+    if n == 0 {
+        return vec![(0, 0)];
+    }
+    let base = n / bands;
+    let extra = n % bands;
+    let mut out = Vec::with_capacity(bands);
+    let mut start = 0;
+    for i in 0..bands {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn inline_pool_runs_jobs_in_order() {
+        let pool = WorkerPool::inline();
+        assert!(pool.is_inline());
+        let collected = Mutex::new(Vec::new());
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|i| {
+                let c = &collected;
+                Box::new(move || c.lock().unwrap().push(i)) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(*collected.lock().unwrap(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn parallel_pool_executes_all_scoped_jobs() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.size(), 4);
+        let mut data = vec![0u64; 64];
+        let chunks: Vec<&mut [u64]> = data.chunks_mut(16).collect();
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+            .into_iter()
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 16 + j) as u64;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
+        let s = pool.stats();
+        assert_eq!(s.tasks, 4);
+        assert_eq!(s.runs, 1);
+        assert!(s.busy_us >= 0.0 && s.span_us > 0.0);
+    }
+
+    #[test]
+    fn pool_survives_many_rounds() {
+        let pool = WorkerPool::new(3);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..5)
+                .map(|_| {
+                    let c = &counter;
+                    Box::new(move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(jobs);
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 250);
+    }
+
+    #[test]
+    fn band_job_panic_propagates_to_submitter_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let done = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| panic!("band exploded")),
+                Box::new(|| {
+                    done.fetch_add(1, Ordering::SeqCst);
+                }),
+            ];
+            pool.run_scoped(jobs);
+        }));
+        assert!(result.is_err(), "panic must reach the submitting thread");
+        assert_eq!(done.load(Ordering::SeqCst), 1, "other bands still ran");
+        // the pool is still alive and usable after the panic
+        let ok = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let c = &ok;
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(ok.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn inline_panic_propagates_too() {
+        let pool = WorkerPool::inline();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_scoped(vec![Box::new(|| panic!("inline band"))]);
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn band_bounds_partition_exactly() {
+        assert_eq!(band_bounds(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(band_bounds(2, 8), vec![(0, 1), (1, 2)], "bands capped at n");
+        assert_eq!(band_bounds(5, 1), vec![(0, 5)]);
+        assert_eq!(band_bounds(0, 4), vec![(0, 0)]);
+        // exhaustive: contiguous, non-empty, covering
+        for n in 1..40 {
+            for b in 1..10 {
+                let bounds = band_bounds(n, b);
+                assert!(bounds.len() <= b);
+                assert_eq!(bounds[0].0, 0);
+                assert_eq!(bounds.last().unwrap().1, n);
+                for w in bounds.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+                assert!(bounds.iter().all(|(a, z)| z > a));
+            }
+        }
+    }
+
+    #[test]
+    fn split_bands_partitions_disjointly() {
+        let mut data: Vec<u32> = (0..24).collect();
+        let bounds = band_bounds(6, 3); // rows of width 4
+        let chunks = split_bands(&mut data, &bounds, 4);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0].len(), 8);
+        assert_eq!(chunks[0][0], 0);
+        assert_eq!(chunks[1][0], 8);
+        assert_eq!(chunks[2][0], 16);
+        let total: usize = chunks.iter().map(|c| c.len()).sum();
+        assert_eq!(total, 24);
+    }
+
+    #[test]
+    fn utilization_is_bounded() {
+        let s = PoolStats { workers: 4, runs: 1, tasks: 4, busy_us: 1e9, span_us: 1.0 };
+        assert!(s.utilization() <= 1.0);
+        let idle = PoolStats { workers: 4, runs: 0, tasks: 0, busy_us: 0.0, span_us: 0.0 };
+        assert_eq!(idle.utilization(), 0.0);
+    }
+
+    #[test]
+    fn auto_workers_at_least_one() {
+        assert!(auto_workers() >= 1);
+    }
+}

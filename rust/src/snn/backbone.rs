@@ -5,14 +5,20 @@
 //! batched serving path is the PJRT artifact — this twin is the
 //! quantization/energy model and cross-check oracle).
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use anyhow::{bail, Result};
 
-use super::layers::{conv2d_adaptive, conv2d_dense_macs, ConvKernel, DEFAULT_SPARSE_THRESHOLD};
+use super::layers::{
+    conv2d_adaptive_par, conv2d_dense_macs, ConvKernel, DEFAULT_SPARSE_THRESHOLD,
+};
 use super::lif::LifState;
 use super::tensor::{SpikePlane, Tensor};
 use super::wts;
 use crate::events::spec;
 use crate::events::voxel::VoxelGrid;
+use crate::runtime::pool::WorkerPool;
 
 /// The four evaluated backbones (paper §IV-C).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -164,6 +170,11 @@ pub struct ForwardStats {
     /// Kernel-dispatch decisions per conv layer (same indexing as
     /// `layer_synops`: spiking layers then head).
     pub layer_dispatch: Vec<DispatchCounts>,
+    /// Measured wall time per conv layer across all timesteps (µs; same
+    /// indexing as `layer_synops`). The *parallel* wall time when the
+    /// kernels band over a worker pool — measured, never part of any
+    /// determinism contract.
+    pub layer_us: Vec<f64>,
 }
 
 impl ForwardStats {
@@ -207,6 +218,10 @@ pub struct Backbone {
     /// the serving path's `--sparse-threshold` flag governs the NPU
     /// engine's dispatch plan, not this field.
     pub sparse_threshold: f32,
+    /// Worker pool the conv kernels band output channels onto. Inline by
+    /// default (the scalar path); outputs are bit-identical for any pool
+    /// size, so this only trades wall time (`tests/parallel_parity.rs`).
+    pub pool: Arc<WorkerPool>,
 }
 
 impl Backbone {
@@ -228,7 +243,15 @@ impl Backbone {
             decay: spec::LIF_DECAY,
             v_th: spec::LIF_THRESHOLD,
             sparse_threshold: DEFAULT_SPARSE_THRESHOLD,
+            pool: WorkerPool::inline(),
         })
+    }
+
+    /// Set the worker pool (builder style) — e.g. the runtime's shared
+    /// pool. Bit-identical outputs for any size.
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.pool = pool;
+        self
     }
 
     /// Set the dispatch threshold (builder style) — e.g. from a
@@ -256,8 +279,9 @@ impl Backbone {
         voxel: &VoxelGrid,
         threshold: f32,
     ) -> (Tensor, ForwardStats) {
+        let pool = self.pool.as_ref();
         run_forward(self.kind, &self.params, voxel, self.decay, self.v_th, |x, p, s, g, stats| {
-            conv2d_adaptive(x, &p.0, &p.1, s, g, threshold, &mut stats.synops)
+            conv2d_adaptive_par(pool, x, &p.0, &p.1, s, g, threshold, &mut stats.synops)
         })
     }
 }
@@ -344,6 +368,7 @@ where
         let mut neuron_steps = 0u64;
         let mut disp = DispatchCounts::default();
         let syn0 = stats.synops;
+        let t_layer = Instant::now();
         for x in xs.iter_mut() {
             let groups = groups_of(x.channels);
             stats.dense_macs += conv2d_dense_macs(
@@ -361,6 +386,7 @@ where
         stats.layer_activity.push((spikes_total, neuron_steps));
         stats.layer_synops.push(stats.synops - syn0);
         stats.layer_dispatch.push(disp);
+        stats.layer_us.push(t_layer.elapsed().as_secs_f64() * 1e6);
     };
 
     for layer in backbone_spec(kind) {
@@ -395,6 +421,7 @@ where
     let mut head: Option<Tensor> = None;
     let mut head_disp = DispatchCounts::default();
     let head_syn0 = stats.synops;
+    let t_head = Instant::now();
     for x in &xs {
         stats.dense_macs += conv2d_dense_macs(
             x.channels, x.height, x.width, ws[0], ws[2], 1, 1,
@@ -412,6 +439,7 @@ where
     }
     stats.layer_synops.push(stats.synops - head_syn0);
     stats.layer_dispatch.push(head_disp);
+    stats.layer_us.push(t_head.elapsed().as_secs_f64() * 1e6);
     let mut head = head.expect("at least one timestep");
     for v in head.data.iter_mut() {
         *v /= t_bins as f32;

@@ -26,7 +26,10 @@
 //! it); below it the sparse paths win. Dispatch never changes outputs —
 //! only wall time — which `tests/sparse_parity.rs` proves.
 
+use std::ops::Range;
+
 use super::tensor::{SpikePlane, Tensor};
+use crate::runtime::pool::{band_bounds, split_bands, WorkerPool};
 
 /// Default activity-adaptive dispatch threshold: layers whose *input*
 /// spike rate exceeds this run the dense kernel. Calibrated by the e1
@@ -73,12 +76,44 @@ pub fn conv2d_same(
     assert_eq!(bias.len(), c_out);
     assert_eq!(c_out % groups, 0);
 
-    let (h_out, w_out, pad_top, pad_left) = same_geometry(h, w, kh, kw, stride);
+    let (h_out, w_out, _, _) = same_geometry(h, w, kh, kw, stride);
     let mut out = Tensor::zeros(&[c_out, h_out, w_out]);
+    dense_conv_range(input, weight, bias, stride, groups, 0..c_out, &mut out.data, synops);
+    out
+}
+
+/// The dense NCHW loop over an output-channel band `ocs`, writing into
+/// the band's contiguous output chunk (`(ocs.len()) * h_out * w_out`
+/// f32s). [`conv2d_same`] is the full-range call; the banded kernel
+/// gives each pool lane a disjoint range — per output channel the
+/// computation is untouched, so banding cannot change a single bit.
+#[allow(clippy::too_many_arguments)]
+fn dense_conv_range(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    ocs: Range<usize>,
+    out_chunk: &mut [f32],
+    synops: &mut u64,
+) {
+    let (c_in, h, w) = (input.shape[0], input.shape[1], input.shape[2]);
+    let (c_out, cig, kh, kw) = (
+        weight.shape[0],
+        weight.shape[1],
+        weight.shape[2],
+        weight.shape[3],
+    );
+    debug_assert_eq!(c_in / groups, cig);
+    let (h_out, w_out, pad_top, pad_left) = same_geometry(h, w, kh, kw, stride);
+    debug_assert_eq!(out_chunk.len(), ocs.len() * h_out * w_out);
     let oc_per_g = c_out / groups;
+    let hw = h_out * w_out;
+    let oc0 = ocs.start;
     let mut local_synops = 0u64;
 
-    for oc in 0..c_out {
+    for oc in ocs {
         let g = oc / oc_per_g;
         let ic0 = g * cig;
         for oy in 0..h_out {
@@ -105,11 +140,59 @@ pub fn conv2d_same(
                         }
                     }
                 }
-                { let i = out.idx3(oc, oy, ox); out.data[i] = acc + bias[oc]; }
+                out_chunk[(oc - oc0) * hw + oy * w_out + ox] = acc + bias[oc];
             }
         }
     }
     *synops += local_synops;
+}
+
+/// Output-channel banded [`conv2d_same`]: each pool lane computes a
+/// disjoint channel band; band synop tallies are reduced in band order.
+/// Bit-exact with the scalar kernel for any worker count.
+pub fn conv2d_same_par(
+    pool: &WorkerPool,
+    input: &Tensor,
+    weight: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    synops: &mut u64,
+) -> Tensor {
+    assert_eq!(input.shape.len(), 3, "input must be [C,H,W]");
+    assert_eq!(weight.shape.len(), 4, "weight must be [O,I/g,kh,kw]");
+    let c_out = weight.shape[0];
+    if pool.is_inline() || c_out < 2 {
+        return conv2d_same(input, weight, bias, stride, groups, synops);
+    }
+    assert_eq!(input.shape[0] / groups, weight.shape[1], "groups/channel mismatch");
+    assert_eq!(bias.len(), c_out);
+    assert_eq!(c_out % groups, 0);
+    let (h_out, w_out, _, _) = same_geometry(
+        input.shape[1], input.shape[2], weight.shape[2], weight.shape[3], stride,
+    );
+    let hw = h_out * w_out;
+    let mut out = Tensor::zeros(&[c_out, h_out, w_out]);
+    let bounds = band_bounds(c_out, pool.size());
+    let mut band_synops = vec![0u64; bounds.len()];
+    {
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
+        let chunks = split_bands(out.data.as_mut_slice(), &bounds, hw);
+        for ((chunk, syn), &(o0, o1)) in
+            chunks.into_iter().zip(band_synops.iter_mut()).zip(&bounds)
+        {
+            jobs.push(Box::new(move || {
+                dense_conv_range(input, weight, bias, stride, groups, o0..o1, chunk, syn);
+            }));
+        }
+        pool.run_scoped(jobs);
+    }
+    // deterministic reduction in band order (u64 addition is exact and
+    // the bands partition the channels, so the total equals the scalar
+    // kernel's count bit-for-bit)
+    for s in band_synops {
+        *synops += s;
+    }
     out
 }
 
@@ -139,10 +222,33 @@ pub(crate) fn gather_conv_same<A: Copy>(
     groups: usize,
     synops: &mut u64,
     zero: A,
+    add: impl FnMut(A, usize, usize, usize, usize) -> A,
+    store: impl FnMut(usize, usize, A),
+) {
+    assert_eq!(wshape.len(), 4, "weight must be [O,I/g,kh,kw]");
+    let c_out = wshape[0];
+    let masks = input.group_or_masks(groups);
+    gather_conv_range(input, wshape, stride, groups, &masks, 0..c_out, synops, zero, add, store);
+}
+
+/// The gather skeleton over an output-channel band `ocs`. The full-range
+/// wrapper above computes the group masks once; the banded kernels
+/// compute them once per call and hand each lane its disjoint range —
+/// per output channel nothing changes, so banding is bit-free.
+/// `store` still receives ABSOLUTE output-channel indices.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gather_conv_range<A: Copy>(
+    input: &SpikePlane,
+    wshape: &[usize],
+    stride: usize,
+    groups: usize,
+    masks: &[u64],
+    ocs: Range<usize>,
+    synops: &mut u64,
+    zero: A,
     mut add: impl FnMut(A, usize, usize, usize, usize) -> A,
     mut store: impl FnMut(usize, usize, A),
 ) {
-    assert_eq!(wshape.len(), 4, "weight must be [O,I/g,kh,kw]");
     let (c_in, h, w) = (input.channels, input.height, input.width);
     let (c_out, cig, kh, kw) = (wshape[0], wshape[1], wshape[2], wshape[3]);
     assert_eq!(c_in / groups, cig, "groups/channel mismatch");
@@ -152,10 +258,9 @@ pub(crate) fn gather_conv_same<A: Copy>(
     let oc_per_g = c_out / groups;
     let wpr = input.words_per_row;
     let rw = h * wpr;
-    let masks = input.group_or_masks(groups);
     let mut local_synops = 0u64;
 
-    for oc in 0..c_out {
+    for oc in ocs {
         let g = oc / oc_per_g;
         let ic0 = g * cig;
         let gmask = &masks[g * rw..(g + 1) * rw];
@@ -231,6 +336,64 @@ pub fn conv2d_sparse_same(
     out
 }
 
+/// Output-channel banded [`conv2d_sparse_same`]: the group occupancy
+/// masks are built once, then each pool lane gathers a disjoint channel
+/// band into its own output chunk. Per output site the addition sequence
+/// is the scalar kernel's, and band synop tallies reduce in band order —
+/// bit-exact outputs and exact synops for any worker count.
+pub fn conv2d_sparse_same_par(
+    pool: &WorkerPool,
+    input: &SpikePlane,
+    weight: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    synops: &mut u64,
+) -> Tensor {
+    assert_eq!(weight.shape.len(), 4, "weight must be [O,I/g,kh,kw]");
+    let c_out = weight.shape[0];
+    if pool.is_inline() || c_out < 2 {
+        return conv2d_sparse_same(input, weight, bias, stride, groups, synops);
+    }
+    assert_eq!(bias.len(), c_out);
+    let (h_out, w_out, _, _) = same_geometry(
+        input.height, input.width, weight.shape[2], weight.shape[3], stride,
+    );
+    let hw = h_out * w_out;
+    let mut out = Tensor::zeros(&[c_out, h_out, w_out]);
+    let masks = input.group_or_masks(groups);
+    let bounds = band_bounds(c_out, pool.size());
+    let mut band_synops = vec![0u64; bounds.len()];
+    {
+        let masks = &masks[..];
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
+        let chunks = split_bands(out.data.as_mut_slice(), &bounds, hw);
+        for ((chunk, syn), &(o0, o1)) in
+            chunks.into_iter().zip(band_synops.iter_mut()).zip(&bounds)
+        {
+            jobs.push(Box::new(move || {
+                gather_conv_range(
+                    input,
+                    &weight.shape,
+                    stride,
+                    groups,
+                    masks,
+                    o0..o1,
+                    syn,
+                    0.0f32,
+                    |acc, oc, ic, ky, kx| acc + weight.data[weight.idx4(oc, ic, ky, kx)],
+                    |oc, site, acc| chunk[(oc - o0) * hw + site] = acc + bias[oc],
+                );
+            }));
+        }
+        pool.run_scoped(jobs);
+    }
+    for s in band_synops {
+        *synops += s;
+    }
+    out
+}
+
 /// Bit-parallel pointwise conv (1x1, stride 1, groups 1).
 ///
 /// Scans each channel's packed occupancy words; a zero word skips 64
@@ -289,6 +452,76 @@ pub fn conv2d_popcount_1x1(
     out
 }
 
+/// Output-channel banded [`conv2d_popcount_1x1`]: each pool lane scans
+/// the packed words once and accumulates only its own output-channel
+/// lanes. Per lane the additions happen in the scalar kernel's
+/// (ic, site) order — bit-exact f32; synops are the set-bit count times
+/// the fan-out, the exact number the scalar kernel tallies.
+pub fn conv2d_popcount_1x1_par(
+    pool: &WorkerPool,
+    input: &SpikePlane,
+    weight: &Tensor,
+    bias: &[f32],
+    synops: &mut u64,
+) -> Tensor {
+    assert_eq!(weight.shape.len(), 4);
+    assert_eq!((weight.shape[2], weight.shape[3]), (1, 1), "kernel must be 1x1");
+    let c_out = weight.shape[0];
+    if pool.is_inline() || c_out < 2 {
+        return conv2d_popcount_1x1(input, weight, bias, synops);
+    }
+    let (c_in, h, w) = (input.channels, input.height, input.width);
+    assert_eq!(weight.shape[1], c_in, "popcount path is ungrouped");
+    assert_eq!(bias.len(), c_out);
+    let hw = h * w;
+    let mut out = Tensor::zeros(&[c_out, h, w]);
+    let bounds = band_bounds(c_out, pool.size());
+    {
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
+        let chunks = split_bands(out.data.as_mut_slice(), &bounds, hw);
+        for (chunk, &(o0, o1)) in chunks.into_iter().zip(&bounds) {
+            jobs.push(Box::new(move || {
+                let mut acc = vec![0.0f32; (o1 - o0) * hw];
+                for ic in 0..c_in {
+                    for y in 0..h {
+                        for wi in 0..input.words_per_row {
+                            let mut word = input.word(ic, y, wi);
+                            if word == 0 {
+                                continue;
+                            }
+                            while word != 0 {
+                                let x = wi * 64 + word.trailing_zeros() as usize;
+                                word &= word - 1;
+                                let site = y * w + x;
+                                for (lane_i, lane) in
+                                    acc.chunks_exact_mut(hw).enumerate()
+                                {
+                                    // weight[o0 + lane_i, ic, 0, 0]
+                                    lane[site] +=
+                                        weight.data[(o0 + lane_i) * c_in + ic];
+                                }
+                            }
+                        }
+                    }
+                }
+                for (lane_i, lane) in acc.chunks_exact(hw).enumerate() {
+                    let b = bias[o0 + lane_i];
+                    for (o, a) in
+                        chunk[lane_i * hw..(lane_i + 1) * hw].iter_mut().zip(lane)
+                    {
+                        *o = a + b;
+                    }
+                }
+            }));
+        }
+        pool.run_scoped(jobs);
+    }
+    // exact: every set bit drives one weight-column add per output
+    // channel — the same pairs the scalar kernel counts bit-parallel
+    *synops += input.count() as u64 * c_out as u64;
+    out
+}
+
 /// Activity-adaptive dispatch: measured input spike rate above
 /// `threshold` falls back to the dense kernel (on the unpacked plane);
 /// below it, pointwise layers take the popcount path and everything else
@@ -310,6 +543,41 @@ pub fn conv2d_adaptive(
         (conv2d_popcount_1x1(input, weight, bias, synops), ConvKernel::Popcount)
     } else {
         (conv2d_sparse_same(input, weight, bias, stride, groups, synops), ConvKernel::SparseGather)
+    }
+}
+
+/// [`conv2d_adaptive`] with every kernel banded over output channels on
+/// the pool. Dispatch decisions are identical (they depend only on the
+/// measured rate and the weight shape), and every banded kernel is
+/// bit-exact with its scalar twin — so the worker count can never change
+/// an output bit or a synop count, only wall time.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_adaptive_par(
+    pool: &WorkerPool,
+    input: &SpikePlane,
+    weight: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    threshold: f32,
+    synops: &mut u64,
+) -> (Tensor, ConvKernel) {
+    if pool.is_inline() {
+        return conv2d_adaptive(input, weight, bias, stride, groups, threshold, synops);
+    }
+    if input.rate() > threshold as f64 {
+        let dense = input.to_dense();
+        (
+            conv2d_same_par(pool, &dense, weight, bias, stride, groups, synops),
+            ConvKernel::Dense,
+        )
+    } else if weight.shape[2] == 1 && weight.shape[3] == 1 && stride == 1 && groups == 1 {
+        (conv2d_popcount_1x1_par(pool, input, weight, bias, synops), ConvKernel::Popcount)
+    } else {
+        (
+            conv2d_sparse_same_par(pool, input, weight, bias, stride, groups, synops),
+            ConvKernel::SparseGather,
+        )
     }
 }
 
@@ -512,6 +780,63 @@ mod tests {
             let got = conv2d_popcount_1x1(&plane, &weight, &bias, &mut syn_s);
             assert_eq!(want.data, got.data, "f32 outputs must be bit-exact");
             assert_eq!(syn_d, syn_s);
+        });
+    }
+
+    #[test]
+    fn banded_kernels_bit_exact_for_any_worker_count() {
+        forall("banded conv == scalar conv (f32 bits + synops)", 25, |g| {
+            let mut rng = SplitMix64::new(g.u64());
+            let groups = [1usize, 2][g.usize_in(0, 2)];
+            let cig = g.usize_in(1, 4);
+            let c_in = cig * groups;
+            // include c_out smaller than the pool width
+            let c_out = groups * g.usize_in(1, 5);
+            let k = [1usize, 3][g.usize_in(0, 2)];
+            let stride = g.usize_in(1, 3);
+            let (h, w) = (g.usize_in(2, 10), g.usize_in(2, 70));
+            let rate = [0.02, 0.2, 0.5][g.usize_in(0, 3)];
+            let data = random_binary(&mut rng, c_in * h * w, rate);
+            let dense_in = Tensor::from_vec(&[c_in, h, w], data);
+            let plane = SpikePlane::from_dense(&dense_in);
+            let weight = Tensor::from_vec(
+                &[c_out, cig, k, k],
+                (0..c_out * cig * k * k).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+            );
+            let bias: Vec<f32> =
+                (0..c_out).map(|_| rng.uniform_in(-0.5, 0.5) as f32).collect();
+            let mut syn_want = 0u64;
+            let want_dense = conv2d_same(&dense_in, &weight, &bias, stride, groups, &mut syn_want);
+            let mut syn_gather = 0u64;
+            let want_gather =
+                conv2d_sparse_same(&plane, &weight, &bias, stride, groups, &mut syn_gather);
+            assert_eq!(want_dense.data, want_gather.data);
+            for workers in [2usize, 3, 8] {
+                let pool = crate::runtime::pool::WorkerPool::new(workers);
+                let mut syn = 0u64;
+                let got =
+                    conv2d_same_par(&pool, &dense_in, &weight, &bias, stride, groups, &mut syn);
+                assert_eq!(got.data, want_dense.data, "dense_par @ {workers}");
+                assert_eq!(syn, syn_want, "dense_par synops @ {workers}");
+                let mut syn = 0u64;
+                let got = conv2d_sparse_same_par(
+                    &pool, &plane, &weight, &bias, stride, groups, &mut syn,
+                );
+                assert_eq!(got.data, want_dense.data, "gather_par @ {workers}");
+                assert_eq!(syn, syn_want, "gather_par synops @ {workers}");
+                if k == 1 && stride == 1 && groups == 1 {
+                    let mut syn = 0u64;
+                    let got = conv2d_popcount_1x1_par(&pool, &plane, &weight, &bias, &mut syn);
+                    assert_eq!(got.data, want_dense.data, "popcount_par @ {workers}");
+                    assert_eq!(syn, syn_want, "popcount_par synops @ {workers}");
+                }
+                let mut syn = 0u64;
+                let (got, _) = conv2d_adaptive_par(
+                    &pool, &plane, &weight, &bias, stride, groups, 0.25, &mut syn,
+                );
+                assert_eq!(got.data, want_dense.data, "adaptive_par @ {workers}");
+                assert_eq!(syn, syn_want, "adaptive_par synops @ {workers}");
+            }
         });
     }
 

@@ -13,12 +13,15 @@
 //! LIF boundary — the f32 and int8 forward paths share one driver
 //! ([`run_forward`]) and differ solely in the conv closure.
 
+use std::sync::Arc;
+
 use super::backbone::{
     run_forward, Backbone, BackboneKind, ConvWeights, ForwardStats,
 };
-use super::layers::{gather_conv_same, same_geometry, ConvKernel};
+use super::layers::{gather_conv_range, gather_conv_same, same_geometry, ConvKernel};
 use super::tensor::{SpikePlane, Tensor};
 use crate::events::voxel::VoxelGrid;
+use crate::runtime::pool::{band_bounds, split_bands, WorkerPool};
 
 /// Per-tensor symmetric int8 quantization of a weight tensor.
 #[derive(Debug, Clone)]
@@ -190,6 +193,162 @@ pub fn conv2d_i8_dense(
     currents_from_acc(&acc, &[c_out, h_out, w_out], weight.scale, bias)
 }
 
+/// Output-channel banded [`conv2d_i8_events`]: every pool lane walks the
+/// full event list but scatters only into its own channel band's i32
+/// accumulators. Integer addition is associative, each (spike, weight)
+/// pair lands in exactly one band, and band synop tallies reduce in band
+/// order — value-exact sums and exact synops for any worker count.
+pub fn conv2d_i8_events_par(
+    pool: &WorkerPool,
+    input: &SpikePlane,
+    weight: &QuantTensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    synops: &mut u64,
+) -> Tensor {
+    assert_eq!(weight.shape.len(), 4, "weight must be [O,I/g,kh,kw]");
+    let c_out = weight.shape[0];
+    if pool.is_inline() || c_out < 2 {
+        return conv2d_i8_events(input, weight, bias, stride, groups, synops);
+    }
+    let (c_in, h, w) = (input.channels, input.height, input.width);
+    let cig = weight.shape[1];
+    let (kh, kw) = (weight.shape[2], weight.shape[3]);
+    assert_eq!(c_in / groups, cig, "groups/channel mismatch");
+    assert_eq!(bias.len(), c_out);
+    assert_eq!(c_out % groups, 0);
+
+    let (h_out, w_out, pad_top, pad_left) = same_geometry(h, w, kh, kw, stride);
+    let hw = h_out * w_out;
+    let oc_per_g = c_out / groups;
+    let mut out = Tensor::zeros(&[c_out, h_out, w_out]);
+    let bounds = band_bounds(c_out, pool.size());
+    let mut band_synops = vec![0u64; bounds.len()];
+    {
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
+        let chunks = split_bands(out.data.as_mut_slice(), &bounds, hw);
+        for ((chunk, syn), &(b0, b1)) in
+            chunks.into_iter().zip(band_synops.iter_mut()).zip(&bounds)
+        {
+            jobs.push(Box::new(move || {
+                let mut acc = vec![0i32; (b1 - b0) * hw];
+                let mut local_synops = 0u64;
+                for &(c, y, x) in &input.events {
+                    let (c, y, x) = (c as usize, y as usize, x as usize);
+                    let g = c / cig;
+                    let ic = c - g * cig;
+                    // this band's slice of the spike's output-channel fan
+                    let oc_lo = (g * oc_per_g).max(b0);
+                    let oc_hi = ((g + 1) * oc_per_g).min(b1);
+                    if oc_lo >= oc_hi {
+                        continue;
+                    }
+                    for ky in 0..kh {
+                        let num_y = y as isize + pad_top as isize - ky as isize;
+                        if num_y < 0 || num_y % stride as isize != 0 {
+                            continue;
+                        }
+                        let oy = (num_y / stride as isize) as usize;
+                        if oy >= h_out {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let num_x = x as isize + pad_left as isize - kx as isize;
+                            if num_x < 0 || num_x % stride as isize != 0 {
+                                continue;
+                            }
+                            let ox = (num_x / stride as isize) as usize;
+                            if ox >= w_out {
+                                continue;
+                            }
+                            let site = oy * w_out + ox;
+                            for oc in oc_lo..oc_hi {
+                                acc[(oc - b0) * hw + site] +=
+                                    weight.data[weight.idx4(oc, ic, ky, kx)] as i32;
+                                local_synops += 1;
+                            }
+                        }
+                    }
+                }
+                for (lane_i, lane) in acc.chunks_exact(hw).enumerate() {
+                    let b = bias[b0 + lane_i];
+                    for (o, &a) in
+                        chunk[lane_i * hw..(lane_i + 1) * hw].iter_mut().zip(lane)
+                    {
+                        *o = a as f32 * weight.scale + b;
+                    }
+                }
+                *syn += local_synops;
+            }));
+        }
+        pool.run_scoped(jobs);
+    }
+    for s in band_synops {
+        *synops += s;
+    }
+    out
+}
+
+/// Output-channel banded [`conv2d_i8_dense`]: the shared gather skeleton
+/// over disjoint channel bands with i32 accumulators, converted to f32
+/// currents inside each band. Value-exact for any worker count.
+pub fn conv2d_i8_dense_par(
+    pool: &WorkerPool,
+    input: &SpikePlane,
+    weight: &QuantTensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    synops: &mut u64,
+) -> Tensor {
+    assert_eq!(weight.shape.len(), 4, "weight must be [O,I/g,kh,kw]");
+    let c_out = weight.shape[0];
+    if pool.is_inline() || c_out < 2 {
+        return conv2d_i8_dense(input, weight, bias, stride, groups, synops);
+    }
+    assert_eq!(bias.len(), c_out);
+    let (h_out, w_out, _, _) = same_geometry(
+        input.height, input.width, weight.shape[2], weight.shape[3], stride,
+    );
+    let hw = h_out * w_out;
+    let mut out = Tensor::zeros(&[c_out, h_out, w_out]);
+    let masks = input.group_or_masks(groups);
+    let bounds = band_bounds(c_out, pool.size());
+    let mut band_synops = vec![0u64; bounds.len()];
+    {
+        let masks = &masks[..];
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
+        let chunks = split_bands(out.data.as_mut_slice(), &bounds, hw);
+        for ((chunk, syn), &(b0, b1)) in
+            chunks.into_iter().zip(band_synops.iter_mut()).zip(&bounds)
+        {
+            jobs.push(Box::new(move || {
+                gather_conv_range(
+                    input,
+                    &weight.shape,
+                    stride,
+                    groups,
+                    masks,
+                    b0..b1,
+                    syn,
+                    0i32,
+                    |a, oc, ic, ky, kx| a + weight.data[weight.idx4(oc, ic, ky, kx)] as i32,
+                    |oc, site, a| {
+                        chunk[(oc - b0) * hw + site] =
+                            a as f32 * weight.scale + bias[oc];
+                    },
+                );
+            }));
+        }
+        pool.run_scoped(jobs);
+    }
+    for s in band_synops {
+        *synops += s;
+    }
+    out
+}
+
 /// Activity-adaptive int8 dispatch: event scatter below the threshold,
 /// dense bit-tested loop above it. Both paths produce identical i32 sums,
 /// so the choice affects only wall time.
@@ -209,6 +368,35 @@ pub fn conv2d_i8_adaptive(
     }
 }
 
+/// [`conv2d_i8_adaptive`] with both kernels banded over output channels
+/// on the pool — value-exact for any worker count, wall time only.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_i8_adaptive_par(
+    pool: &WorkerPool,
+    input: &SpikePlane,
+    weight: &QuantTensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    threshold: f32,
+    synops: &mut u64,
+) -> (Tensor, ConvKernel) {
+    if pool.is_inline() {
+        return conv2d_i8_adaptive(input, weight, bias, stride, groups, threshold, synops);
+    }
+    if input.rate() > threshold as f64 {
+        (
+            conv2d_i8_dense_par(pool, input, weight, bias, stride, groups, synops),
+            ConvKernel::Dense,
+        )
+    } else {
+        (
+            conv2d_i8_events_par(pool, input, weight, bias, stride, groups, synops),
+            ConvKernel::SparseGather,
+        )
+    }
+}
+
 /// A quantized backbone: int8 weights accumulated in i32 over the spike
 /// event list through the shared forward driver — the datapath the
 /// paper's FPGA NPU implements, with thresholding effectively in the
@@ -220,6 +408,9 @@ pub struct QuantBackbone {
     pub v_th: f32,
     /// Dispatch threshold, inherited from the source backbone.
     pub sparse_threshold: f32,
+    /// Worker pool the conv kernels band output channels onto
+    /// (inherited from the source backbone; inline by default).
+    pub pool: Arc<WorkerPool>,
 }
 
 impl QuantBackbone {
@@ -235,7 +426,14 @@ impl QuantBackbone {
             decay: bb.decay,
             v_th: bb.v_th,
             sparse_threshold: bb.sparse_threshold,
+            pool: bb.pool.clone(),
         }
+    }
+
+    /// Set the worker pool (builder style) — value-exact for any size.
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.pool = pool;
+        self
     }
 
     /// Forward with int8-quantized weights; same output contract as
@@ -251,8 +449,9 @@ impl QuantBackbone {
         voxel: &VoxelGrid,
         threshold: f32,
     ) -> (Tensor, ForwardStats) {
+        let pool = self.pool.as_ref();
         run_forward(self.kind, &self.qparams, voxel, self.decay, self.v_th, |x, p, s, g, stats| {
-            conv2d_i8_adaptive(x, &p.0, &p.1, s, g, threshold, &mut stats.synops)
+            conv2d_i8_adaptive_par(pool, x, &p.0, &p.1, s, g, threshold, &mut stats.synops)
         })
     }
 
@@ -324,6 +523,48 @@ mod tests {
             assert_eq!(ev.shape, de.shape);
             assert_eq!(ev.data, de.data, "i8 paths must be value-exact");
             assert_eq!(syn_e, syn_d, "synop accounting must agree");
+        });
+    }
+
+    #[test]
+    fn banded_i8_kernels_value_exact_for_any_worker_count() {
+        forall("banded i8 conv == scalar i8 conv", 20, |g| {
+            let mut rng = SplitMix64::new(g.u64());
+            let groups = [1usize, 2][g.usize_in(0, 2)];
+            let cig = g.usize_in(1, 4);
+            let c_in = cig * groups;
+            let c_out = groups * g.usize_in(1, 5);
+            let k = [1usize, 3][g.usize_in(0, 2)];
+            let stride = g.usize_in(1, 3);
+            let (h, w) = (g.usize_in(2, 10), g.usize_in(2, 70));
+            let rate = [0.02, 0.2][g.usize_in(0, 2)];
+            let data: Vec<f32> = (0..c_in * h * w)
+                .map(|_| if rng.uniform_in(0.0, 1.0) < rate { 1.0 } else { 0.0 })
+                .collect();
+            let plane = SpikePlane::from_slice(c_in, h, w, &data);
+            let wq = QuantTensor::quantize(&Tensor::from_vec(
+                &[c_out, cig, k, k],
+                (0..c_out * cig * k * k)
+                    .map(|_| rng.uniform_in(-1.0, 1.0) as f32)
+                    .collect(),
+            ));
+            let bias: Vec<f32> =
+                (0..c_out).map(|_| rng.uniform_in(-0.5, 0.5) as f32).collect();
+            let mut syn_want = 0u64;
+            let want = conv2d_i8_dense(&plane, &wq, &bias, stride, groups, &mut syn_want);
+            for workers in [2usize, 3, 8] {
+                let pool = WorkerPool::new(workers);
+                let mut syn = 0u64;
+                let got =
+                    conv2d_i8_dense_par(&pool, &plane, &wq, &bias, stride, groups, &mut syn);
+                assert_eq!(got.data, want.data, "i8 dense_par @ {workers}");
+                assert_eq!(syn, syn_want, "i8 dense_par synops @ {workers}");
+                let mut syn = 0u64;
+                let got =
+                    conv2d_i8_events_par(&pool, &plane, &wq, &bias, stride, groups, &mut syn);
+                assert_eq!(got.data, want.data, "i8 events_par @ {workers}");
+                assert_eq!(syn, syn_want, "i8 events_par synops @ {workers}");
+            }
         });
     }
 

@@ -1,0 +1,258 @@
+//! Parallel-execution parity suite — the determinism contract of the
+//! worker pool (ISSUE 4 acceptance criteria).
+//!
+//! Proves, without needing compiled artifacts, that for worker counts
+//! {1, 2, 3, 8}:
+//!
+//! * a full ISP frame (every stage banded over rows) is **bit-identical**
+//!   to the scalar path, including frames with odd heights smaller than
+//!   the worker count;
+//! * the SNN forward (f32 AND int8, all four backbone specs, channel-
+//!   banded kernels through the generic `run_forward`) is value-exact:
+//!   identical head bits, identical exact synop counts and per-layer
+//!   splits;
+//! * a 2-stream fleet run's determinism digest is invariant across
+//!   worker counts (artifacts-gated — skips cleanly without them).
+
+use std::sync::Arc;
+
+use acelerador::config::SystemConfig;
+use acelerador::events::voxel::VoxelGrid;
+use acelerador::isp::pipeline::IspPipeline;
+use acelerador::isp::sensor::SensorModel;
+use acelerador::runtime::pool::WorkerPool;
+use acelerador::snn::backbone::{backbone_spec, LayerSpec};
+use acelerador::snn::quant::QuantBackbone;
+use acelerador::snn::{Backbone, BackboneKind, Tensor};
+use acelerador::util::{ImageU8, SplitMix64};
+
+const WORKER_COUNTS: [usize; 4] = [1, 2, 3, 8];
+
+const T_BINS: usize = 3;
+const POLARITIES: usize = 2;
+const SIZE: usize = 16; // 3 pools -> 2x2 head grid
+const DECAY: f32 = 0.75;
+const V_TH: f32 = 1.0;
+
+fn random_tensor(rng: &mut SplitMix64, shape: &[usize], lo: f32, hi: f32) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::from_vec(
+        shape,
+        (0..n).map(|_| rng.uniform_in(lo as f64, hi as f64) as f32).collect(),
+    )
+}
+
+/// Synthetic conv params tracking the spec's channel flow (same scheme
+/// as `tests/sparse_parity.rs`; head is a 1x1 to 14 ch).
+fn synthetic_params(kind: BackboneKind, seed: u64) -> Vec<(Tensor, Vec<f32>)> {
+    let mut rng = SplitMix64::new(seed);
+    let mut params = Vec::new();
+    let mut c = POLARITIES;
+    let push = |rng: &mut SplitMix64, shape: &[usize]| -> Vec<f32> {
+        (0..shape[0]).map(|_| rng.uniform_in(-0.1, 0.3) as f32).collect()
+    };
+    for layer in backbone_spec(kind) {
+        match layer {
+            LayerSpec::Conv { out, k } => {
+                let w = random_tensor(&mut rng, &[out, c, k, k], -0.6, 0.6);
+                let b = push(&mut rng, &w.shape);
+                params.push((w, b));
+                c = out;
+            }
+            LayerSpec::Conv1x1 { out } | LayerSpec::Transition { out } => {
+                let w = random_tensor(&mut rng, &[out, c, 1, 1], -0.6, 0.6);
+                let b = push(&mut rng, &w.shape);
+                params.push((w, b));
+                c = out;
+            }
+            LayerSpec::Pool => {}
+            LayerSpec::DenseBlock { growth, layers } => {
+                for _ in 0..layers {
+                    let w = random_tensor(&mut rng, &[growth, c, 3, 3], -0.6, 0.6);
+                    let b = push(&mut rng, &w.shape);
+                    params.push((w, b));
+                    c += growth; // concat
+                }
+            }
+            LayerSpec::DwSep { out } => {
+                let dw = random_tensor(&mut rng, &[c, 1, 3, 3], -0.6, 0.6);
+                let db = push(&mut rng, &dw.shape);
+                params.push((dw, db));
+                let pw = random_tensor(&mut rng, &[out, c, 1, 1], -0.6, 0.6);
+                let pb = push(&mut rng, &pw.shape);
+                params.push((pw, pb));
+                c = out;
+            }
+        }
+    }
+    let head = random_tensor(&mut rng, &[14, c, 1, 1], -0.6, 0.6);
+    let hb = (0..14).map(|_| rng.uniform_in(-0.1, 0.1) as f32).collect();
+    params.push((head, hb));
+    params
+}
+
+fn synthetic_backbone(kind: BackboneKind, seed: u64, pool: Arc<WorkerPool>) -> Backbone {
+    Backbone {
+        kind,
+        params: synthetic_params(kind, seed),
+        decay: DECAY,
+        v_th: V_TH,
+        sparse_threshold: acelerador::snn::DEFAULT_SPARSE_THRESHOLD,
+        pool,
+    }
+}
+
+fn synthetic_voxel(seed: u64, density: f64) -> VoxelGrid {
+    let mut rng = SplitMix64::new(seed);
+    let n = T_BINS * POLARITIES * SIZE * SIZE;
+    VoxelGrid {
+        t_bins: T_BINS,
+        polarities: POLARITIES,
+        height: SIZE,
+        width: SIZE,
+        data: (0..n)
+            .map(|_| if rng.uniform_in(0.0, 1.0) < density { 1.0 } else { 0.0 })
+            .collect(),
+    }
+}
+
+fn capture(seed: u64, width: usize, height: usize) -> ImageU8 {
+    let mut rng = SplitMix64::new(seed);
+    let frame = ImageU8::from_fn(width, height, |x, y| (50 + (x * 2 + y) % 140) as u8);
+    SensorModel::default().capture(&frame, &mut rng).raw
+}
+
+#[test]
+fn isp_frame_bit_identical_across_worker_counts() {
+    let cfg = SystemConfig::default();
+    let raw = capture(42, 64, 64);
+    // scalar baseline: 3 frames so the AWB EMA state evolves too
+    let mut base = IspPipeline::new(&cfg.isp);
+    let mut want = Vec::new();
+    for _ in 0..3 {
+        let (out, report) = base.process(&raw);
+        want.push((out, report.dpc_corrections));
+    }
+    for &workers in &WORKER_COUNTS[1..] {
+        let mut isp = IspPipeline::new(&cfg.isp);
+        isp.set_worker_pool(WorkerPool::new(workers));
+        for (i, (expect, expect_dpc)) in want.iter().enumerate() {
+            let (out, report) = isp.process(&raw);
+            assert_eq!(&out, expect, "frame {i} diverged @ {workers} workers");
+            assert_eq!(
+                report.dpc_corrections, *expect_dpc,
+                "DPC tally diverged @ {workers} workers"
+            );
+        }
+    }
+}
+
+#[test]
+fn isp_odd_heights_smaller_than_worker_count() {
+    // frames whose height is below the pool width: bands cap at the row
+    // count and the output must still be bit-identical
+    let cfg = SystemConfig::default();
+    for &(w, h) in &[(64usize, 3usize), (64, 5), (64, 2)] {
+        let raw = capture(7, w, h);
+        let mut base = IspPipeline::new(&cfg.isp);
+        let (want, _) = base.process(&raw);
+        for &workers in &WORKER_COUNTS[1..] {
+            let mut isp = IspPipeline::new(&cfg.isp);
+            isp.set_worker_pool(WorkerPool::new(workers));
+            let (out, _) = isp.process(&raw);
+            assert_eq!(out, want, "{w}x{h} @ {workers} workers");
+        }
+    }
+}
+
+#[test]
+fn snn_f32_forward_value_exact_across_worker_counts_all_backbones() {
+    for kind in BackboneKind::all() {
+        let seed = 0x9A5 ^ kind.name().len() as u64;
+        let base = synthetic_backbone(kind, seed, WorkerPool::inline());
+        for &density in &[0.02, 0.2] {
+            let vox = synthetic_voxel(11 + kind.name().len() as u64, density);
+            let (want_head, want_stats) = base.forward(&vox);
+            for &workers in &WORKER_COUNTS[1..] {
+                let bb = synthetic_backbone(kind, seed, WorkerPool::new(workers));
+                let (head, stats) = bb.forward(&vox);
+                assert_eq!(
+                    head.data, want_head.data,
+                    "{kind:?} density {density} @ {workers} workers: f32 bits diverged"
+                );
+                assert_eq!(
+                    stats.synops, want_stats.synops,
+                    "{kind:?} @ {workers} workers: synops diverged"
+                );
+                assert_eq!(stats.layer_synops, want_stats.layer_synops);
+                assert_eq!(stats.layer_activity, want_stats.layer_activity);
+            }
+        }
+    }
+}
+
+#[test]
+fn snn_i8_forward_value_exact_across_worker_counts_all_backbones() {
+    for kind in BackboneKind::all() {
+        let seed = 0xBEEF ^ kind.name().len() as u64;
+        let base = synthetic_backbone(kind, seed, WorkerPool::inline());
+        let qbase = QuantBackbone::from_backbone(&base);
+        for &density in &[0.02, 0.2] {
+            let vox = synthetic_voxel(23 + kind.name().len() as u64, density);
+            let (want_head, want_stats) = qbase.forward(&vox);
+            for &workers in &WORKER_COUNTS[1..] {
+                let qb = QuantBackbone::from_backbone(&base)
+                    .with_pool(WorkerPool::new(workers));
+                let (head, stats) = qb.forward(&vox);
+                assert_eq!(
+                    head.data, want_head.data,
+                    "{kind:?} density {density} @ {workers} workers: i8 path diverged"
+                );
+                assert_eq!(stats.synops, want_stats.synops);
+                assert_eq!(stats.layer_synops, want_stats.layer_synops);
+            }
+        }
+    }
+}
+
+#[test]
+fn layer_wall_time_tracks_every_conv_layer() {
+    let bb = synthetic_backbone(BackboneKind::Vgg, 0xF1A7, WorkerPool::new(2));
+    let vox = synthetic_voxel(3, 0.1);
+    let (_, stats) = bb.forward(&vox);
+    // one wall-time entry per spiking layer plus the head, all finite
+    assert_eq!(stats.layer_us.len(), stats.layer_synops.len());
+    assert!(stats.layer_us.iter().all(|us| us.is_finite() && *us >= 0.0));
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!(
+        "{}/artifacts/manifest.json",
+        env!("CARGO_MANIFEST_DIR")
+    ))
+    .exists()
+}
+
+#[test]
+fn fleet_digest_invariant_across_worker_counts() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut digests = Vec::new();
+    for &workers in &[1usize, 4] {
+        let mut cfg = SystemConfig::default();
+        cfg.npu.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+        cfg.npu.backbone = "spiking_mobilenet".into(); // fastest
+        cfg.fleet.streams = 2;
+        cfg.fleet.windows_per_stream = 4;
+        cfg.fleet.base_seed = 99;
+        cfg.runtime.workers = workers;
+        let report = acelerador::fleet::run_fleet(&cfg).expect("fleet run");
+        digests.push(report.digest_hex());
+    }
+    assert_eq!(
+        digests[0], digests[1],
+        "fleet determinism digest must not depend on the worker count"
+    );
+}

@@ -88,6 +88,7 @@ fn synthetic_backbone(kind: BackboneKind, seed: u64) -> Backbone {
         decay: DECAY,
         v_th: V_TH,
         sparse_threshold: acelerador::snn::DEFAULT_SPARSE_THRESHOLD,
+        pool: acelerador::runtime::pool::WorkerPool::inline(),
     }
 }
 

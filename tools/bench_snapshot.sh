@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Perf-trajectory snapshot: run the e1/e7/e8 benches and persist their
+# machine-readable BENCH_*.json artifacts at the repo root so the
+# speedup curve is visible (and diffable) across PRs.
+#
+# Usage: tools/bench_snapshot.sh
+# Runs from the repository root regardless of the caller's cwd.
+# Gracefully skips when cargo is unavailable; e8 (and e1's backbone
+# table) additionally need the PJRT artifacts and are skipped without
+# them — e7 and e1's synthetic sweep always run.
+
+set -uo pipefail
+
+cd "$(dirname "$0")/.."
+repo_root=$(pwd)
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "bench_snapshot: cargo not found on PATH — skipping (no artifacts written)" >&2
+    exit 0
+fi
+
+if [ -f rust/Cargo.toml ]; then
+    cd rust
+fi
+
+run_bench() {
+    local name="$1"
+    echo "== bench: $name =="
+    if cargo bench --bench "$name"; then
+        return 0
+    fi
+    echo "bench_snapshot: $name failed (missing PJRT artifacts?) — continuing" >&2
+    return 0
+}
+
+run_bench e7_isp_throughput
+run_bench e1_backbones
+run_bench e8_fleet_throughput
+
+echo
+echo "== artifacts at the repo root =="
+ls -l "$repo_root"/BENCH_*.json 2>/dev/null \
+    || echo "bench_snapshot: no BENCH_*.json produced" >&2

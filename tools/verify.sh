@@ -34,6 +34,41 @@ else
     echo "verify: sparse_parity target unavailable — skipping targeted run" >&2
 fi
 
+echo "== targeted: parallel parity suite =="
+# The worker pool's determinism contract (bit-identical ISP frames and
+# value-exact SNN forwards for any worker count). Skips gracefully if
+# the test binary is unavailable.
+if cargo test -q --test parallel_parity -- --list >/dev/null 2>&1; then
+    cargo test -q --test parallel_parity
+else
+    echo "verify: parallel_parity target unavailable — skipping targeted run" >&2
+fi
+
+echo "== determinism: fleet digest across worker counts =="
+# Run the same 2-stream fleet with --workers 1 and --workers 4 and
+# compare digests — the end-to-end version of the parity suite. Needs
+# the CLI to build AND the PJRT artifacts; skips gracefully otherwise.
+if [ -f artifacts/manifest.json ] && cargo build --release 2>/dev/null; then
+    extract_digest() {
+        # the aggregate digest is the first "digest" key in the JSON
+        grep -o '"digest": "[0-9a-f]*"' | head -1
+    }
+    d1=$(cargo run --release --quiet -- fleet --streams 2 --windows 4 \
+        --workers 1 --json 2>/dev/null | extract_digest || true)
+    d4=$(cargo run --release --quiet -- fleet --streams 2 --windows 4 \
+        --workers 4 --json 2>/dev/null | extract_digest || true)
+    if [ -z "$d1" ] || [ -z "$d4" ]; then
+        echo "verify: fleet run produced no digest — skipping comparison" >&2
+    elif [ "$d1" != "$d4" ]; then
+        echo "verify: FLEET DIGEST DIVERGED ACROSS WORKER COUNTS: $d1 vs $d4" >&2
+        exit 1
+    else
+        echo "digest invariant across --workers 1/4: $d1"
+    fi
+else
+    echo "verify: artifacts/CLI unavailable — skipping digest comparison" >&2
+fi
+
 echo "== compile gate: cargo bench --no-run =="
 # Bench targets (e1 sweep, e4 wall-time ratio) must at least compile;
 # skip gracefully when the bench profile is unusable on this toolchain.
