@@ -71,6 +71,34 @@ fn main() -> anyhow::Result<()> {
             None => println!("adaptation after {name} step: not recovered in-script"),
         }
     }
+    // Staged dataflow: the same closed-loop scenario under the serial
+    // schedule vs the pipelined schedule (loop.feedback_latency = 1,
+    // window t's ISP render overlapping its NPU inference). Results
+    // differ by one frame of control delay by design; the wall clock is
+    // the throughput payoff, the e2e mean is the latency price.
+    println!("\n--- schedule comparison (closed loop) ---");
+    let mut t3 = Table::new(&["schedule", "wall ms", "mean e2e ms", "mean PSNR dB"]);
+    for (label, latency) in [("serial (latency 0)", 0u64), ("pipelined (latency 1)", 1)] {
+        let mut cfg = SystemConfig::default();
+        cfg.npu.backbone = "spiking_yolo".into();
+        cfg.loop_.feedback_latency = latency;
+        let mut l = CognitiveLoop::new(&cfg, 42)?;
+        let t0 = std::time::Instant::now();
+        let r = l.run_script(&script())?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let e2e_ms = r.outcomes.iter().map(|o| o.e2e_us).sum::<f64>()
+            / r.outcomes.len() as f64
+            / 1e3;
+        t3.row(&[
+            label.to_string(),
+            format!("{wall_ms:.1}"),
+            format!("{e2e_ms:.2}"),
+            format!("{:.1}", r.mean_psnr(2)),
+        ]);
+    }
+    t3.print();
+    println!("(pipelined e2e carries the one-frame feedback delay; wall is the win)");
+
     let lat_npu: f64 = closed.outcomes.iter().map(|o| o.npu_execute_us).sum::<f64>()
         / closed.outcomes.len() as f64;
     let lat_e2e: f64 =

@@ -89,6 +89,64 @@ fn main() -> anyhow::Result<()> {
     tw.print();
     println!("(identical digests across the sweep = determinism holds under banding)\n");
 
+    // Feedback-latency sweep: the same 4-stream lockstep fleet with the
+    // serial schedule (latency 0) vs the pipelined schedule (>= 1).
+    // Each latency has its own deterministic digest; the pipelined rows
+    // must come in at or below the serial wall clock (ISSUE 5), since
+    // every stream's ISP render overlaps its NPU inference.
+    println!("--- feedback-latency sweep (4 streams, lockstep) ---");
+    let mut tl = Table::new(&["latency", "win/s", "wall s", "occupancy", "digest"]);
+    let mut serial_wall = 0.0f64;
+    for latency in [0u64, 1, 2] {
+        let mut cfg = base_cfg();
+        cfg.fleet.streams = 4;
+        cfg.loop_.feedback_latency = latency;
+        let r = run_fleet(&cfg)?;
+        if latency == 0 {
+            serial_wall = r.wall_s;
+        }
+        artifact_rows.push(Json::obj(vec![
+            ("mode", Json::str("latency-sweep")),
+            ("streams", Json::num(4.0)),
+            ("feedback_latency", Json::num(latency as f64)),
+            ("windows_per_sec", Json::num(r.windows_per_sec())),
+            ("wall_s", Json::num(r.wall_s)),
+            ("occupancy", Json::num(r.mean_occupancy())),
+            ("digest", Json::str(&r.digest_hex())),
+        ]));
+        tl.row(&[
+            latency.to_string(),
+            format!("{:.1}", r.windows_per_sec()),
+            format!("{:.3}", r.wall_s),
+            format!("{:.2}", r.mean_occupancy()),
+            r.digest_hex(),
+        ]);
+        if latency == 1 {
+            println!(
+                "pipelined wall {:.3}s vs serial {:.3}s ({})",
+                r.wall_s,
+                serial_wall,
+                if r.wall_s <= serial_wall {
+                    "pipelining won or tied"
+                } else {
+                    "WARNING: pipelining slower — check stage occupancy"
+                }
+            );
+            let mut tp = Table::new(&["pipe stage", "windows", "mean_us", "occupancy"]);
+            for (name, windows, mean, occupancy) in r.pipeline_rows() {
+                tp.row(&[
+                    name,
+                    windows.to_string(),
+                    format!("{mean:.1}"),
+                    format!("{occupancy:.2}"),
+                ]);
+            }
+            tp.print();
+        }
+    }
+    tl.print();
+    println!("(digests differ BETWEEN latencies by design; each is stable within one)\n");
+
     // Admission control: cap in-flight windows below the stream count and
     // watch occupancy/backpressure trade against service latency.
     println!("--- admission limit sweep (8 streams, lockstep) ---");

@@ -134,6 +134,25 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Cognitive-loop dataflow configuration (JSON section `"loop"`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LoopConfig {
+    /// Feedback-latency register on the parameter bus (frames): a command
+    /// decided from window `t` is applied at frame `t + latency`.
+    ///
+    /// * `0` — serial schedule: decide and apply inside the same window
+    ///   (bit-exact with the pre-staged loop, the default);
+    /// * `>= 1` — pipelined schedule: window `t+1`'s Sense and window
+    ///   `t`'s Render overlap window `t`'s NPU inference, trading one (or
+    ///   more) frames of control latency for wall-clock throughput. Each
+    ///   latency value has its own deterministic digest, invariant across
+    ///   worker counts and stream interleavings.
+    ///
+    /// Bounded by the bus register depth
+    /// ([`crate::coordinator::bus::MAX_FEEDBACK_LATENCY`]).
+    pub feedback_latency: u64,
+}
+
 /// Fleet runtime configuration: N concurrent cognitive loops multiplexing
 /// one shared NPU batcher (multi-camera serving, paper §VI scaled out).
 #[derive(Debug, Clone, PartialEq)]
@@ -219,6 +238,9 @@ pub struct SystemConfig {
     pub npu: NpuConfig,
     pub isp: IspConfig,
     pub coordinator: CoordinatorConfig,
+    /// The staged-dataflow section (`"loop"` in JSON; `loop` is a Rust
+    /// keyword, hence the trailing underscore).
+    pub loop_: LoopConfig,
     pub fleet: FleetConfig,
     pub runtime: RuntimeConfig,
     pub hw: HwConfig,
@@ -282,6 +304,9 @@ impl SystemConfig {
             read_f64(c, "target_luma", &mut self.coordinator.target_luma);
             read_usize(c, "queue_depth", &mut self.coordinator.queue_depth);
         }
+        if let Some(l) = json.get("loop") {
+            read_u64(l, "feedback_latency", &mut self.loop_.feedback_latency);
+        }
         if let Some(f) = json.get("fleet") {
             read_usize(f, "streams", &mut self.fleet.streams);
             read_usize(f, "windows_per_stream", &mut self.fleet.windows_per_stream);
@@ -331,6 +356,12 @@ impl SystemConfig {
         }
         if !(0.0..=1.0).contains(&self.coordinator.policy_alpha) {
             bail!("coordinator: policy_alpha must be in (0,1]");
+        }
+        if self.loop_.feedback_latency > crate::coordinator::bus::MAX_FEEDBACK_LATENCY {
+            bail!(
+                "loop: feedback_latency must be <= {} (the bus register depth)",
+                crate::coordinator::bus::MAX_FEEDBACK_LATENCY
+            );
         }
         if self.fleet.streams == 0 {
             bail!("fleet: streams must be > 0");
@@ -405,6 +436,13 @@ impl SystemConfig {
                     ("target_luma", Json::num(self.coordinator.target_luma)),
                     ("queue_depth", Json::num(self.coordinator.queue_depth as f64)),
                 ]),
+            ),
+            (
+                "loop",
+                Json::obj(vec![(
+                    "feedback_latency",
+                    Json::num(self.loop_.feedback_latency as f64),
+                )]),
             ),
             (
                 "fleet",
@@ -615,6 +653,21 @@ mod tests {
         cfg2.apply_json(&crate::jsonlite::parse(r#"{"fleet":{"base_seed": 77}}"#).unwrap())
             .unwrap();
         assert_eq!(cfg2.fleet.base_seed, 77);
+    }
+
+    #[test]
+    fn feedback_latency_overlay_and_validation() {
+        let cfg = SystemConfig::default();
+        assert_eq!(cfg.loop_.feedback_latency, 0, "default is the serial schedule");
+        let mut cfg = SystemConfig::default();
+        let json =
+            crate::jsonlite::parse(r#"{"loop": {"feedback_latency": 2}}"#).unwrap();
+        cfg.apply_json(&json).unwrap();
+        assert_eq!(cfg.loop_.feedback_latency, 2);
+        cfg.validate().unwrap();
+        cfg.loop_.feedback_latency =
+            crate::coordinator::bus::MAX_FEEDBACK_LATENCY + 1;
+        assert!(cfg.validate().is_err(), "register depth bounds the latency");
     }
 
     #[test]

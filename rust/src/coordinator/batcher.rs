@@ -86,9 +86,13 @@ impl NpuClient {
         reply_rx
     }
 
-    /// Submit and wait (convenience for examples/benches/loops).
-    pub fn infer_blocking(&self, voxel: VoxelGrid) -> Result<InferReply> {
-        match self.submit(voxel).recv() {
+    /// Await one reply receiver, mapping a dropped channel to the
+    /// recorded fault cause. THE reply-await path — shared by
+    /// [`NpuClient::infer_blocking`] and the staged executor's
+    /// Infer-collect stage, so the two can never report different errors
+    /// for the same service failure.
+    pub fn recv_reply(&self, rx: Receiver<Result<InferReply>>) -> Result<InferReply> {
+        match rx.recv() {
             Ok(r) => r,
             // reply sender destroyed with the queue (request raced the
             // engine's shutdown drain) — surface the recorded cause
@@ -97,6 +101,12 @@ impl NpuClient {
                 self.fault_cause()
             )),
         }
+    }
+
+    /// Submit and wait (convenience for examples/benches/loops).
+    pub fn infer_blocking(&self, voxel: VoxelGrid) -> Result<InferReply> {
+        let rx = self.submit(voxel);
+        self.recv_reply(rx)
     }
 
     /// The recorded engine-stop cause (placeholder until one is recorded).

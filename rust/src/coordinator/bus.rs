@@ -4,8 +4,24 @@
 //! updates, applied atomically at frame boundaries, with stale-update
 //! rejection (an out-of-order command from a slow path must not overwrite
 //! a newer one) and an update log for the E3 latency measurement.
+//!
+//! The bus carries an explicit **feedback-latency register**: a command
+//! decided from window *t* becomes eligible for application at frame
+//! *t + latency*. Latency 0 is the serial cognitive loop (decide and
+//! apply inside the same window — today's semantics, bit-exact). Latency
+//! ≥ 1 models the pipelined hardware dataflow, where the policy's command
+//! crosses the clock-domain boundary and lands one (or more) frame
+//! periods later — the price of overlapping the ISP with the NPU. The
+//! staged executor ([`crate::coordinator::pipeline`]) relies on this
+//! register: it is what makes the pipelined schedule's data dependencies
+//! explicit instead of accidental.
 
 use crate::isp::pipeline::IspParams;
+
+/// Largest feedback latency the register accepts (frames). A real
+/// register file is a few entries deep; a software queue that grows
+/// without bound would hide a scheduling bug, not model hardware.
+pub const MAX_FEEDBACK_LATENCY: u64 = 8;
 
 /// One sequenced parameter command.
 #[derive(Debug, Clone)]
@@ -16,19 +32,43 @@ pub struct ParamUpdate {
     pub params: IspParams,
 }
 
-/// The bus: latest-wins mailbox with sequence checking.
+/// The bus: latest-wins mailbox with sequence checking and a
+/// feedback-latency register.
 #[derive(Debug, Default)]
 pub struct ParameterBus {
-    pending: Option<ParamUpdate>,
+    /// Feedback latency in frames: a command from window `t` is eligible
+    /// at frame `t + latency`.
+    latency: u64,
+    /// Pending commands in publish (= seq) order, tagged with the frame
+    /// at which each becomes eligible. Bounded by construction: the
+    /// publisher issues at most one command per window and the consumer
+    /// drains every eligible command per frame, so the queue never holds
+    /// more than `latency + 1` entries.
+    pending: Vec<(u64, ParamUpdate)>,
     last_applied_seq: u64,
     pub writes: u64,
     pub stale_rejected: u64,
     pub applied: u64,
+    /// Eligible commands dropped because a newer eligible command arrived
+    /// before the frame boundary could apply them (latest-wins).
+    pub superseded: u64,
 }
 
 impl ParameterBus {
+    /// A zero-latency bus (serial semantics).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A bus whose commands land `latency` frames after their source
+    /// window. `latency` is clamped to [`MAX_FEEDBACK_LATENCY`].
+    pub fn with_latency(latency: u64) -> Self {
+        Self { latency: latency.min(MAX_FEEDBACK_LATENCY), ..Self::default() }
+    }
+
+    /// The configured feedback latency (frames).
+    pub fn latency(&self) -> u64 {
+        self.latency
     }
 
     /// NPU side: publish a command. Stale (seq <= newest seen) is rejected.
@@ -36,27 +76,60 @@ impl ParameterBus {
         self.writes += 1;
         let newest = self
             .pending
-            .as_ref()
-            .map(|p| p.seq)
+            .last()
+            .map(|(_, p)| p.seq)
             .unwrap_or(self.last_applied_seq);
-        if update.seq <= newest && (self.pending.is_some() || self.last_applied_seq > 0) {
+        if update.seq <= newest && (!self.pending.is_empty() || self.last_applied_seq > 0) {
             self.stale_rejected += 1;
             return false;
         }
-        self.pending = Some(update);
+        let eligible_at = update.source_window + self.latency;
+        self.pending.push((eligible_at, update));
         true
     }
 
-    /// ISP side: take the latest command at a frame boundary (if any).
-    pub fn take(&mut self) -> Option<ParamUpdate> {
-        let u = self.pending.take()?;
+    /// ISP side: take the newest command eligible at frame `window` (if
+    /// any). Older eligible commands are dropped latest-wins and counted
+    /// as superseded; commands still inside the latency register stay
+    /// queued for a later frame.
+    pub fn take_for(&mut self, window: u64) -> Option<ParamUpdate> {
+        let ready = self.pending.iter().filter(|(at, _)| *at <= window).count();
+        if ready == 0 {
+            return None;
+        }
+        // pending is in seq order, so the last ready entry is the newest
+        let mut taken = None;
+        let mut seen = 0;
+        self.pending.retain(|(at, u)| {
+            if *at > window {
+                return true;
+            }
+            seen += 1;
+            if seen == ready {
+                taken = Some(u.clone());
+            }
+            false
+        });
+        let u = taken.expect("ready > 0 guarantees a newest eligible entry");
+        self.superseded += (ready - 1) as u64;
         self.last_applied_seq = u.seq;
         self.applied += 1;
         Some(u)
     }
 
+    /// ISP side: take the newest command regardless of eligibility frame
+    /// (latency-0 callers and tests).
+    pub fn take(&mut self) -> Option<ParamUpdate> {
+        self.take_for(u64::MAX)
+    }
+
     pub fn has_pending(&self) -> bool {
-        self.pending.is_some()
+        !self.pending.is_empty()
+    }
+
+    /// True when at least one command is eligible at frame `window`.
+    pub fn ready_at(&self, window: u64) -> bool {
+        self.pending.iter().any(|(at, _)| *at <= window)
     }
 }
 
@@ -71,6 +144,10 @@ mod tests {
 
     fn upd(seq: u64) -> ParamUpdate {
         ParamUpdate { seq, source_window: seq, params: params() }
+    }
+
+    fn upd_at(seq: u64, source_window: u64) -> ParamUpdate {
+        ParamUpdate { seq, source_window, params: params() }
     }
 
     #[test]
@@ -90,6 +167,7 @@ mod tests {
         bus.publish(upd(1));
         bus.publish(upd(2));
         assert_eq!(bus.take().unwrap().seq, 2);
+        assert_eq!(bus.superseded, 1);
         assert!(bus.take().is_none());
     }
 
@@ -108,5 +186,65 @@ mod tests {
     fn empty_take_is_none() {
         let mut bus = ParameterBus::new();
         assert!(bus.take().is_none());
+    }
+
+    #[test]
+    fn zero_latency_applies_same_window() {
+        let mut bus = ParameterBus::with_latency(0);
+        bus.publish(upd_at(1, 7));
+        assert!(bus.ready_at(7));
+        assert_eq!(bus.take_for(7).unwrap().seq, 1);
+    }
+
+    #[test]
+    fn latency_defers_application_by_n_frames() {
+        let mut bus = ParameterBus::with_latency(2);
+        assert_eq!(bus.latency(), 2);
+        bus.publish(upd_at(1, 10)); // eligible at frame 12
+        assert!(bus.take_for(10).is_none());
+        assert!(bus.take_for(11).is_none());
+        assert!(bus.has_pending(), "command must stay queued in the register");
+        let u = bus.take_for(12).unwrap();
+        assert_eq!(u.seq, 1);
+        assert_eq!(u.source_window, 10, "provenance survives the register");
+        assert_eq!(bus.applied, 1);
+    }
+
+    #[test]
+    fn catch_up_applies_newest_and_counts_superseded() {
+        let mut bus = ParameterBus::with_latency(1);
+        bus.publish(upd_at(1, 0)); // eligible at 1
+        bus.publish(upd_at(2, 1)); // eligible at 2
+        bus.publish(upd_at(3, 2)); // eligible at 3
+        // the consumer skipped frames 1..2 and asks at frame 3: newest wins
+        let u = bus.take_for(3).unwrap();
+        assert_eq!(u.seq, 3);
+        assert_eq!(bus.superseded, 2);
+        assert!(bus.take_for(3).is_none());
+    }
+
+    #[test]
+    fn register_holds_commands_for_distinct_frames() {
+        let mut bus = ParameterBus::with_latency(1);
+        bus.publish(upd_at(1, 0)); // eligible at 1
+        bus.publish(upd_at(2, 1)); // eligible at 2
+        assert_eq!(bus.take_for(1).unwrap().seq, 1);
+        assert_eq!(bus.take_for(2).unwrap().seq, 2);
+        assert_eq!(bus.superseded, 0, "distinct frame boundaries supersede nothing");
+        assert_eq!(bus.applied, 2);
+    }
+
+    #[test]
+    fn latency_clamped_to_register_depth() {
+        let bus = ParameterBus::with_latency(10_000);
+        assert_eq!(bus.latency(), MAX_FEEDBACK_LATENCY);
+    }
+
+    #[test]
+    fn stale_rejection_with_latency_in_flight() {
+        let mut bus = ParameterBus::with_latency(2);
+        bus.publish(upd_at(5, 5));
+        assert!(!bus.publish(upd_at(4, 6)), "in-register newest still guards staleness");
+        assert_eq!(bus.stale_rejected, 1);
     }
 }

@@ -1,28 +1,40 @@
 //! The composed cognitive loop (paper §VI) — the end-to-end system.
 //!
-//! Per window: simulate the scene → DVS events → voxelize → NPU service
-//! (batched PJRT) → decode + NMS → control policy → parameter bus → Bayer
-//! capture → ISP (with the commanded parameters) → PSNR vs the clean
-//! reference. The [`LoopReport`] carries everything E3 plots: per-window
-//! detections, applied parameters, image quality, and latencies.
+//! Per window: simulate the scene → DVS events → windower → voxelize →
+//! NPU service (batched PJRT) → decode + NMS → control policy → parameter
+//! bus → Bayer capture → ISP (with the commanded parameters) → PSNR vs
+//! the clean reference. The [`LoopReport`] carries everything E3 plots:
+//! per-window detections, applied parameters, image quality, and
+//! latencies.
+//!
+//! The loop body is decomposed into four **stage nodes** — Sense, Infer,
+//! Decide, Render (see [`super::pipeline`]) — so the same organs compose
+//! two ways: serially ([`CognitiveLoop::step`], feedback latency 0,
+//! bit-exact with the pre-staged loop) or as a software pipeline
+//! ([`CognitiveLoop::step_window`] with `loop.feedback_latency >= 1`),
+//! where window *t*'s Render overlaps the NPU executing window *t* and
+//! the look-ahead Sense of *t+1*.
 
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::batcher::{NpuClient, NpuService};
-use super::bus::{ParamUpdate, ParameterBus};
+use super::batcher::{InferReply, NpuClient, NpuService};
+use super::bus::{ParamUpdate, ParameterBus, MAX_FEEDBACK_LATENCY};
+use super::pipeline::{PipeStage, PipelineState, RenderOut, SenseFrame};
 use super::policy::{illum_ratio_from_events, ControlPolicy, SceneObservation};
 use super::sync::SyncController;
+use super::windower::Windower;
 use crate::config::SystemConfig;
 use crate::detect::{decode_head, nms, Detection, YoloSpec};
 use crate::events::scene::ScenarioSim;
-use crate::events::voxel::voxelize_at;
 use crate::events::spec;
+use crate::events::voxel::{voxelize_at, VoxelGrid};
+use crate::isp::gamma::GammaLut;
 use crate::isp::pipeline::IspPipeline;
 use crate::isp::sensor::SensorModel;
-use crate::isp::gamma::GammaLut;
 use crate::metrics::SystemMetrics;
 use crate::runtime::pool::WorkerPool;
 use crate::util::stats::psnr_u8;
@@ -46,6 +58,9 @@ pub struct WindowOutcome {
     /// occupancy accounting; 1 when the loop runs alone).
     pub npu_batch: usize,
     pub isp_us: f64,
+    /// Sense-start → Decide-complete wall time. Under the pipelined
+    /// schedule this spans more than one tick (the feedback-latency
+    /// price); throughput is the tick wall time in the pipeline metrics.
     pub e2e_us: f64,
     pub illum: f64,
 }
@@ -102,6 +117,10 @@ impl LoopReport {
 pub struct CognitiveLoop {
     cfg: SystemConfig,
     sim: ScenarioSim,
+    /// Streaming event segmentation (paper §IV-A): the Sense stage pushes
+    /// the sim's absolute-time events through it and voxelizes the closed
+    /// window — the same path a live DVS stream would take.
+    windower: Windower,
     sensor: SensorModel,
     sensor_rng: SplitMix64,
     /// Submit handle — either to a privately-owned service or a shared
@@ -117,6 +136,12 @@ pub struct CognitiveLoop {
     sync: SyncController,
     yolo: YoloSpec,
     window_id: u64,
+    /// Feedback latency in frames (`loop.feedback_latency`): 0 = serial
+    /// schedule, >= 1 = pipelined schedule with commands applied
+    /// `latency` frame boundaries after their source window.
+    feedback_latency: u64,
+    /// Pipelined-executor state (the bounded Sense→Infer look-ahead).
+    pub(crate) pipeline: PipelineState,
     /// When false, the loop runs "open": NPU detections are computed but
     /// parameters are never pushed to the ISP (the E3 static baseline).
     pub closed_loop: bool,
@@ -162,86 +187,176 @@ impl CognitiveLoop {
     ) -> Self {
         let mut isp = IspPipeline::new(&cfg.isp);
         isp.set_worker_pool(pool.clone());
-        Self {
+        // Clamp ONCE so the loop's reported latency, the depth gauge, and
+        // the bus register can never disagree (config validation rejects
+        // out-of-range values, but library callers may skip validate()).
+        let latency = cfg.loop_.feedback_latency.min(MAX_FEEDBACK_LATENCY);
+        let loop_ = Self {
             cfg: cfg.clone(),
             sim: ScenarioSim::new(scenario_seed),
+            windower: Windower::new(spec::WINDOW_US),
             sensor: SensorModel::default(),
             sensor_rng: SplitMix64::new(scenario_seed ^ 0xDEAD_BEEF),
             // the configured stage mask is the policy's ceiling: runtime
             // bypasses narrow it, never widen it
             policy: ControlPolicy::with_mask(&cfg.coordinator, cfg.isp.stages),
-            bus: ParameterBus::new(),
+            bus: ParameterBus::with_latency(latency),
             isp,
             sync: SyncController::new(spec::WINDOW_US, 5_000),
             yolo: YoloSpec::default(),
             window_id: 0,
+            feedback_latency: latency,
+            pipeline: PipelineState::new(),
             closed_loop: true,
             load_factor: 0.0,
             npu,
             _npu_service: service,
             pool,
             metrics: SystemMetrics::new(),
-        }
+        };
+        loop_.metrics.pipeline.depth.set(latency);
+        loop_
     }
 
-    /// Drive one window at scene illumination `illum`.
-    pub fn step(&mut self, illum: f64) -> Result<WindowOutcome> {
-        let t_loop = Instant::now();
+    /// The configured feedback latency (frames) — the bus register depth.
+    pub fn feedback_latency(&self) -> u64 {
+        self.feedback_latency
+    }
+
+    // --- stage nodes ------------------------------------------------------
+    //
+    // Each node owns a disjoint slice of the loop's mutable state (Sense:
+    // sim + windower; Decide: policy + bus-publish; Render: sensor RNG +
+    // ISP + bus-take), so any schedule that preserves per-stage order
+    // preserves determinism. Cross-stage data rides in `SenseFrame`.
+
+    /// Sense: advance the sim one window, stream its events through the
+    /// windower, and voxelize the closed window.
+    pub(crate) fn sense(&mut self, illum: f64) -> (SenseFrame, VoxelGrid) {
+        let t0 = Instant::now();
         let wid = self.window_id;
         self.window_id += 1;
-        let window_start = wid as i64 * spec::WINDOW_US;
-
-        // --- DVS path -----------------------------------------------------
         let (events, gt_boxes, clean_frame) = self.sim.window(illum);
         self.metrics.windows_in.inc();
-        let vox = voxelize_at(&events, window_start);
+        let mut late = 0usize;
+        for e in &events {
+            if !self.windower.push(*e) {
+                late += 1;
+            }
+        }
+        self.windower.flush();
+        let mut done = self.windower.pop_completed();
+        debug_assert_eq!(late, 0, "sim events must respect window boundaries");
+        debug_assert_eq!(done.len(), 1, "one sim window closes one stream window");
+        let win = done
+            .pop()
+            .expect("windower must close the window the sim just produced");
+        debug_assert_eq!(win.id, wid);
+        let on_events = win.events.iter().filter(|e| e.p == 1).count();
+        let vox = voxelize_at(&win.events, win.start_us);
+        let frame = SenseFrame {
+            wid,
+            window_start: win.start_us,
+            illum: self.sim.illum,
+            events_total: win.events.len(),
+            on_events,
+            gt_count: gt_boxes.len(),
+            clean_frame,
+            t0,
+        };
+        self.metrics
+            .pipeline
+            .record_stage(PipeStage::Sense, t0.elapsed().as_secs_f64() * 1e6);
+        (frame, vox)
+    }
 
-        let reply = self.npu.infer_blocking(vox)?;
+    /// Infer (submit half): hand the voxel grid to the NPU batcher.
+    /// Non-blocking — the service thread fuses and executes.
+    pub(crate) fn submit_infer(&mut self, vox: VoxelGrid) -> Receiver<Result<InferReply>> {
+        self.npu.submit(vox)
+    }
+
+    /// Infer (collect half): wait for the reply and fold its metrics in.
+    /// The Infer lane records the window's NPU **service span** (queue +
+    /// execute, measured from submission at the batcher) — the interval
+    /// during which the NPU plane worked on this window. Under the
+    /// pipelined schedule that span overlaps the carrier's Render span,
+    /// which is exactly what pushes the summed stage occupancy above 1.0;
+    /// the carrier's residual blocked time here shrinks toward zero.
+    pub(crate) fn collect_infer(
+        &mut self,
+        rx: Receiver<Result<InferReply>>,
+    ) -> Result<InferReply> {
+        let reply = self.npu.recv_reply(rx)?;
+        self.metrics
+            .pipeline
+            .record_stage(PipeStage::Infer, reply.service_us);
         self.metrics.batches_executed.inc();
         self.metrics.npu_latency.record_us(reply.execute_us as u64);
         self.metrics.snn_layers.record(&reply.rates, &reply.sparse_layers);
+        Ok(reply)
+    }
 
+    /// Decide: decode + NMS the head, observe the scene, run the control
+    /// policy, and publish the parameter command (closed loop only).
+    pub(crate) fn decide(&mut self, frame: &SenseFrame, reply: &InferReply) -> Vec<Detection> {
+        let t = Instant::now();
         let dets = nms(
             decode_head(&reply.head, &self.yolo, self.cfg.npu.conf_threshold),
             self.cfg.npu.nms_iou,
         );
         self.metrics.detections_out.add(dets.len() as u64);
-
-        // --- control policy -------------------------------------------------
-        let on = events.iter().filter(|e| e.p == 1).count();
-        let off = events.len() - on;
+        let off = frame.events_total - frame.on_events;
         let obs = SceneObservation {
             mean_luma: last_luma(&self.isp),
-            event_count: events.len(),
+            event_count: frame.events_total,
             noise_floor: self.cfg.events.noise_rate * spec::SUBFRAMES as f64,
             detections: dets.clone(),
             measured_gains: current_measured_gains(&self.isp),
-            illum_ratio: illum_ratio_from_events(on, off, spec::WIDTH * spec::HEIGHT),
+            illum_ratio: illum_ratio_from_events(
+                frame.on_events,
+                off,
+                spec::WIDTH * spec::HEIGHT,
+            ),
             load_factor: self.load_factor,
         };
         let new_params = self.policy.step(self.isp.params(), &obs);
         if self.closed_loop {
             self.bus.publish(ParamUpdate {
                 seq: self.policy.updates,
-                source_window: wid,
+                source_window: frame.wid,
                 params: new_params,
             });
         }
+        self.sync.push_window(frame.wid, frame.window_start + spec::WINDOW_US);
+        self.metrics
+            .pipeline
+            .record_stage(PipeStage::Decide, t.elapsed().as_secs_f64() * 1e6);
+        dets
+    }
 
-        // --- RGB path -------------------------------------------------------
-        // The sensor sees the *scene* illumination (exposure errors and all);
-        // the ISP must undo it using the parameters the NPU commanded.
-        // Quality reference first ((gamma-encoded) clean scene) so the
-        // borrowed ISP output can be scored without a copy and without the
-        // reference build leaking into the measured ISP time.
-        let clean_img =
-            ImageU8 { width: spec::WIDTH, height: spec::HEIGHT, data: clean_frame };
+    /// Render: apply whatever command the bus deems eligible at this
+    /// frame, capture the Bayer frame the sensor sees, run the ISP, and
+    /// score PSNR against the clean reference.
+    pub(crate) fn render(&mut self, frame: &mut SenseFrame) -> RenderOut {
+        let t_stage = Instant::now();
+        // The sensor sees the *scene* illumination (exposure errors and
+        // all); the ISP must undo it using the parameters the NPU
+        // commanded. Quality reference first ((gamma-encoded) clean
+        // scene) so the borrowed ISP output can be scored without a copy
+        // and without the reference build leaking into the measured ISP
+        // time.
+        let clean_img = ImageU8 {
+            width: spec::WIDTH,
+            height: spec::HEIGHT,
+            data: std::mem::take(&mut frame.clean_frame),
+        };
         let clean_rgb = crate::isp::sensor::colorize(&clean_img);
         let lut = GammaLut::power(self.cfg.isp.gamma);
         let reference = lut.apply_rgb(&clean_rgb);
 
         let t_isp = Instant::now();
-        if let Some(update) = self.bus.take() {
+        if let Some(update) = self.bus.take_for(frame.wid) {
             let mut p = update.params;
             // Camera-side actuation (paper §I: the NPU "dynamically
             // reconfigures the RGB camera parameters"): exposure goes to
@@ -255,7 +370,7 @@ impl CognitiveLoop {
         let scene_frame = ImageU8 {
             width: spec::WIDTH,
             height: spec::HEIGHT,
-            data: scene_at_illum(&clean_img.data, self.sim.illum),
+            data: scene_at_illum(&clean_img.data, frame.illum),
         };
         let cap = self.sensor.capture(&scene_frame, &mut self.sensor_rng);
         // Zero-copy path: the output borrows the stage graph's buffer pool.
@@ -268,38 +383,77 @@ impl CognitiveLoop {
         self.metrics.isp_frames.inc();
         self.metrics.isp_latency.record_us(isp_us as u64);
         self.metrics.isp_stages.record(&report.stage_times);
+        self.sync.push_frame(frame.wid, frame.window_start + spec::WINDOW_US);
+        self.metrics
+            .pipeline
+            .record_stage(PipeStage::Render, t_stage.elapsed().as_secs_f64() * 1e6);
+        RenderOut {
+            psnr_db: psnr,
+            mean_luma: report.mean_luma,
+            isp_us,
+            exposure_gain: self.sensor.exposure,
+            nlm_h: self.isp.params().nlm_h,
+        }
+    }
 
-        self.sync.push_window(wid, window_start + spec::WINDOW_US);
-        self.sync.push_frame(wid, window_start + spec::WINDOW_US);
-
-        let e2e_us = t_loop.elapsed().as_secs_f64() * 1e6;
+    /// Assemble one window's outcome (and the per-window gauges).
+    pub(crate) fn outcome(
+        &mut self,
+        frame: &SenseFrame,
+        dets: Vec<Detection>,
+        reply: &InferReply,
+        render: RenderOut,
+    ) -> WindowOutcome {
+        let e2e_us = frame.t0.elapsed().as_secs_f64() * 1e6;
         self.metrics.e2e_latency.record_us(e2e_us as u64);
         // measured-only gauges (shared pool totals; excluded from digests)
         self.metrics.pool.record(&self.pool.stats());
-
-        Ok(WindowOutcome {
-            window_id: wid,
-            events: events.len(),
+        WindowOutcome {
+            window_id: frame.wid,
+            events: frame.events_total,
             detections: dets,
-            gt_boxes: gt_boxes.len(),
-            psnr_db: psnr,
-            mean_luma: report.mean_luma,
-            exposure_gain: self.sensor.exposure,
-            nlm_h: self.isp.params().nlm_h,
+            gt_boxes: frame.gt_count,
+            psnr_db: render.psnr_db,
+            mean_luma: render.mean_luma,
+            exposure_gain: render.exposure_gain,
+            nlm_h: render.nlm_h,
             npu_execute_us: reply.execute_us,
             npu_service_us: reply.service_us,
             npu_batch: reply.batch_size,
-            isp_us,
+            isp_us: render.isp_us,
             e2e_us,
-            illum: self.sim.illum,
-        })
+            illum: frame.illum,
+        }
     }
 
-    /// Run a scripted illumination profile; returns the report.
+    /// Drive one window at scene illumination `illum` — the **serial**
+    /// schedule (Sense → Infer → Decide → Render inside one window),
+    /// i.e. feedback latency 0. Callers running a pipelined loop use
+    /// [`CognitiveLoop::step_window`]; mixing the two mid-run is not
+    /// supported (the pipeline would skip its in-flight window).
+    pub fn step(&mut self, illum: f64) -> Result<WindowOutcome> {
+        debug_assert!(
+            self.pipeline.inflight.is_empty(),
+            "serial step() while a pipelined window is in flight"
+        );
+        let (mut frame, vox) = self.sense(illum);
+        let rx = self.submit_infer(vox);
+        let reply = self.collect_infer(rx)?;
+        let dets = self.decide(&frame, &reply);
+        let render = self.render(&mut frame);
+        let out = self.outcome(&frame, dets, &reply, render);
+        self.metrics.pipeline.record_tick(out.e2e_us);
+        Ok(out)
+    }
+
+    /// Run a scripted illumination profile; returns the report. Uses the
+    /// schedule the configured feedback latency selects (serial at 0,
+    /// pipelined at >= 1 with one-window look-ahead).
     pub fn run_script(&mut self, script: &[f64]) -> Result<LoopReport> {
         let mut report = LoopReport::default();
-        for &illum in script {
-            report.outcomes.push(self.step(illum)?);
+        for (i, &illum) in script.iter().enumerate() {
+            let next = script.get(i + 1).copied();
+            report.outcomes.push(self.step_window(illum, next)?);
         }
         Ok(report)
     }
@@ -389,5 +543,27 @@ mod tests {
         let report = l.run_script(&script).unwrap();
         let last = report.outcomes.last().unwrap();
         assert!((last.exposure_gain - 1.0).abs() < 1e-9, "static ISP must not adapt");
+    }
+
+    #[test]
+    fn pipelined_loop_runs_and_defers_first_command() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut c = cfg();
+        c.loop_.feedback_latency = 1;
+        let mut l = CognitiveLoop::new(&c, 7).unwrap();
+        assert_eq!(l.feedback_latency(), 1);
+        let report = l.run_script(&[0.25; 6]).unwrap();
+        assert_eq!(report.outcomes.len(), 6);
+        // window 0's frame renders before any command is eligible
+        assert!(
+            (report.outcomes[0].exposure_gain - 1.0).abs() < 1e-12,
+            "latency 1 must leave frame 0 at power-on parameters"
+        );
+        // by the end the deferred commands have landed
+        assert!(report.outcomes.last().unwrap().exposure_gain > 1.0);
+        assert_eq!(l.pairings(), 6, "sync still pairs under frame-leads-window order");
+        assert!(l.metrics.pipeline.inflight_peak.get() >= 2);
     }
 }

@@ -19,17 +19,22 @@
 //! * [`policy`]   — maps detections + scene statistics to ISP parameter
 //!   commands (AWB gains, gamma/exposure, NLM strength);
 //! * [`bus`]      — the §VI control interface: sequenced parameter
-//!   updates applied at frame boundaries;
+//!   updates applied at frame boundaries, behind an explicit
+//!   feedback-latency register;
 //! * [`sync`]     — aligns DVS windows with RGB frames;
+//! * [`pipeline`] — the staged dataflow: Sense/Infer/Decide/Render stage
+//!   nodes and the pipelined window executor (`loop.feedback_latency`);
 //! * [`cognitive`] — the composed loop used by `examples/cognitive_loop`.
 
 pub mod batcher;
 pub mod bus;
 pub mod cognitive;
+pub mod pipeline;
 pub mod policy;
 pub mod sync;
 pub mod windower;
 
 pub use batcher::{NpuClient, NpuService};
 pub use cognitive::{CognitiveLoop, LoopReport, WindowOutcome};
+pub use pipeline::{PipeStage, StageLink, PIPE_STAGE_COUNT, PIPE_STAGE_NAMES};
 pub use policy::{ControlPolicy, SceneObservation};

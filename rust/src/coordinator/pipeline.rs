@@ -1,0 +1,300 @@
+//! Staged cognitive dataflow (paper §VI as a pipeline, not a loop body).
+//!
+//! The hardware the paper describes is a set of concurrently clocked IP
+//! cores — DVS windowing, NPU inference, decision logic, and the
+//! streaming ISP — exchanging data through registers and applying
+//! feedback at frame boundaries. This module makes that structure
+//! explicit in the software reproduction. One window's work decomposes
+//! into four stage nodes:
+//!
+//! ```text
+//!  Sense ──► Infer ──► Decide ──► (parameter bus, +latency frames)
+//!    │  sim + DVS +      decode+NMS+policy        │
+//!    │  windower +                                ▼
+//!    └─ voxelize ─────────────────────────────► Render
+//!                                    Bayer capture + ISP + PSNR
+//! ```
+//!
+//! * **Sense** — advance the scenario sim, stream its events through the
+//!   §IV-A [`super::windower::Windower`], voxelize the closed window;
+//! * **Infer** — submit the voxel grid to the shared NPU batcher
+//!   (non-blocking) and later collect the reply;
+//! * **Decide** — decode + NMS the head, run the control policy, publish
+//!   the parameter command on the bus;
+//! * **Render** — apply whatever command is *eligible at this frame*
+//!   (the bus's feedback-latency register decides), capture the Bayer
+//!   frame, run the ISP stage graph, score PSNR.
+//!
+//! With `loop.feedback_latency = 0` the stages compose serially inside
+//! one window — bit-exactly the pre-staged `CognitiveLoop::step`
+//! semantics. With latency ≥ 1 the executor here runs a software
+//! pipeline: Render of window *t* needs only Decide(*t−latency*), so it
+//! executes while the NPU is still crunching window *t* (and the
+//! look-ahead Sense of *t+1* keeps the batcher fed). The carrier thread
+//! (a fleet carrier, or the caller of `run_script`) drives the schedule;
+//! the actual overlap comes from the two independent execution
+//! resources the system already has — the NPU service thread and the
+//! banded worker pool — so no new threads are spawned per stream.
+//!
+//! Every computation still happens in a fixed program order on the
+//! carrier, and NPU replies are batch-composition independent, so the
+//! pipelined schedule has its own deterministic digest: invariant across
+//! worker counts, carrier assignments, and lockstep/free-run arrival
+//! regimes (`rust/tests/pipeline_parity.rs`).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Receiver;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::batcher::InferReply;
+use super::cognitive::{CognitiveLoop, WindowOutcome};
+
+/// Canonical pipeline stage order (shared with
+/// [`crate::metrics::PipelineMetrics`] so the producer and the JSON
+/// export cannot drift apart).
+pub const PIPE_STAGE_NAMES: [&str; 4] = ["sense", "infer", "decide", "render"];
+pub const PIPE_STAGE_COUNT: usize = 4;
+
+/// One pipeline stage (index into [`PIPE_STAGE_NAMES`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipeStage {
+    Sense = 0,
+    Infer = 1,
+    Decide = 2,
+    Render = 3,
+}
+
+impl PipeStage {
+    pub fn name(self) -> &'static str {
+        PIPE_STAGE_NAMES[self as usize]
+    }
+}
+
+/// Bounded in-order buffer between stage nodes — the software stand-in
+/// for the skid FIFO between two clocked IP cores. Capacity is the
+/// pipeline's look-ahead depth; overflow is a scheduling bug and fails
+/// loudly instead of growing without bound.
+#[derive(Debug)]
+pub struct StageLink<T> {
+    cap: usize,
+    q: VecDeque<T>,
+}
+
+impl<T> StageLink<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "a stage link needs at least one slot");
+        Self { cap, q: VecDeque::with_capacity(cap) }
+    }
+
+    /// Enqueue in order; errors when the link is full (the producer ran
+    /// ahead of the schedule).
+    pub fn push(&mut self, v: T) -> Result<()> {
+        if self.q.len() >= self.cap {
+            bail!("stage link full (capacity {})", self.cap);
+        }
+        self.q.push_back(v);
+        Ok(())
+    }
+
+    /// Dequeue the oldest entry (in-order delivery).
+    pub fn pop(&mut self) -> Option<T> {
+        self.q.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+/// Everything Sense hands downstream for one window. The raw event list
+/// stays inside Sense (Decide only needs counts; Render only needs the
+/// clean reference frame), which keeps the inter-stage payload small.
+#[derive(Debug)]
+pub(crate) struct SenseFrame {
+    pub wid: u64,
+    pub window_start: i64,
+    /// The window's target illumination (the sim's post-window value),
+    /// captured at sense time so a look-ahead Sense of window t+1 cannot
+    /// leak its illumination into window t's Render.
+    pub illum: f64,
+    pub events_total: usize,
+    pub on_events: usize,
+    pub gt_count: usize,
+    /// Clean unit-illumination frame (Render builds the PSNR reference
+    /// and the sensor's scene view from it; taken by value there).
+    pub clean_frame: Vec<u8>,
+    /// Window wall-clock origin (e2e latency measures from here).
+    pub t0: Instant,
+}
+
+/// A window in flight between Sense/Infer-submit and Infer-collect.
+pub(crate) struct PendingWindow {
+    pub frame: SenseFrame,
+    pub rx: Receiver<Result<InferReply>>,
+}
+
+/// What Render hands to the outcome assembly.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct RenderOut {
+    pub psnr_db: f64,
+    pub mean_luma: f64,
+    pub isp_us: f64,
+    pub exposure_gain: f64,
+    pub nlm_h: f64,
+}
+
+/// Per-loop pipeline executor state: the bounded Sense→Infer look-ahead
+/// link. (The Decide→Render link is the parameter bus itself — its
+/// feedback-latency register is the channel's depth.)
+#[derive(Debug)]
+pub(crate) struct PipelineState {
+    pub inflight: StageLink<PendingWindow>,
+}
+
+impl std::fmt::Debug for PendingWindow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PendingWindow").field("wid", &self.frame.wid).finish()
+    }
+}
+
+/// How many windows Sense/Infer may run ahead of Decide. One is enough
+/// to overlap Render(t) with the NPU executing t (and t+1's submission
+/// keeps the batcher fed through Decide); deeper look-ahead would only
+/// grow feedback latency without adding overlap on a single carrier.
+pub const PIPELINE_LOOKAHEAD: usize = 1;
+
+impl PipelineState {
+    pub fn new() -> Self {
+        Self { inflight: StageLink::new(PIPELINE_LOOKAHEAD) }
+    }
+}
+
+impl Default for PipelineState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CognitiveLoop {
+    /// Drive one window through the staged dataflow.
+    ///
+    /// `next_illum` is the following window's illumination script value
+    /// (None at end of script). With `feedback_latency == 0` this is
+    /// exactly [`CognitiveLoop::step`] — the serial schedule, bit-exact
+    /// with the pre-staged loop — and `next_illum` is ignored. With
+    /// latency ≥ 1 the pipelined schedule below runs; callers must then
+    /// feed consecutive script values (`illum` of call *k+1* must equal
+    /// `next_illum` of call *k*).
+    pub fn step_window(&mut self, illum: f64, next_illum: Option<f64>) -> Result<WindowOutcome> {
+        if self.feedback_latency() == 0 {
+            return self.step(illum);
+        }
+        self.step_pipelined(illum, next_illum)
+    }
+
+    /// The pipelined schedule (feedback latency ≥ 1), one tick:
+    ///
+    /// ```text
+    /// tick t:  [pop Sense/Infer of t — submitted last tick]
+    ///          Sense(t+1); submit Infer(t+1)      # keep the NPU fed
+    ///          Render(t)                          # overlaps NPU execute
+    ///          collect Infer(t); Decide(t)        # publishes for frame t+L
+    /// ```
+    ///
+    /// Render(t) applies the command Decide(t−latency) published — the
+    /// bus's latency register guarantees it is already eligible — so no
+    /// stage ever waits on a same-window dependency and the ISP works
+    /// while the NPU spikes.
+    fn step_pipelined(&mut self, illum: f64, next_illum: Option<f64>) -> Result<WindowOutcome> {
+        let t_tick = Instant::now();
+        let cur = match self.pipeline.inflight.pop() {
+            Some(p) => p,
+            // pipeline fill (first window, or a caller that never passes
+            // next_illum): sense + submit now; Render below still
+            // overlaps this window's NPU execute
+            None => {
+                let (frame, vox) = self.sense(illum);
+                let rx = self.submit_infer(vox);
+                PendingWindow { frame, rx }
+            }
+        };
+        debug_assert_eq!(
+            cur.frame.illum.to_bits(),
+            illum.to_bits(),
+            "pipelined callers must feed consecutive script values"
+        );
+        if let Some(ni) = next_illum {
+            let (frame, vox) = self.sense(ni);
+            let rx = self.submit_infer(vox);
+            self.pipeline.inflight.push(PendingWindow { frame, rx })?;
+        }
+        let inflight = 1 + self.pipeline.inflight.len();
+        if inflight as u64 > self.metrics.pipeline.inflight_peak.get() {
+            self.metrics.pipeline.inflight_peak.set(inflight as u64);
+        }
+
+        let mut frame = cur.frame;
+        let render = self.render(&mut frame);
+        let reply = self.collect_infer(cur.rx)?;
+        let dets = self.decide(&frame, &reply);
+        let out = self.outcome(&frame, dets, &reply, render);
+        self.metrics
+            .pipeline
+            .record_tick(t_tick.elapsed().as_secs_f64() * 1e6);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_match_metrics_lanes() {
+        assert_eq!(PIPE_STAGE_NAMES.len(), PIPE_STAGE_COUNT);
+        assert_eq!(PipeStage::Sense.name(), "sense");
+        assert_eq!(PipeStage::Infer.name(), "infer");
+        assert_eq!(PipeStage::Decide.name(), "decide");
+        assert_eq!(PipeStage::Render.name(), "render");
+        assert_eq!(PipeStage::Render as usize, PIPE_STAGE_COUNT - 1);
+    }
+
+    #[test]
+    fn stage_link_is_bounded_and_in_order() {
+        let mut link: StageLink<u32> = StageLink::new(2);
+        assert!(link.is_empty());
+        link.push(1).unwrap();
+        link.push(2).unwrap();
+        assert_eq!(link.len(), 2);
+        assert!(link.push(3).is_err(), "overflow must fail loudly");
+        assert_eq!(link.pop(), Some(1), "in-order delivery");
+        link.push(3).unwrap();
+        assert_eq!(link.pop(), Some(2));
+        assert_eq!(link.pop(), Some(3));
+        assert_eq!(link.pop(), None);
+        assert_eq!(link.capacity(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one slot")]
+    fn zero_capacity_link_rejected() {
+        let _: StageLink<u32> = StageLink::new(0);
+    }
+
+    #[test]
+    fn pipeline_state_has_single_slot_lookahead() {
+        let s = PipelineState::new();
+        assert_eq!(s.inflight.capacity(), PIPELINE_LOOKAHEAD);
+        assert!(s.inflight.is_empty());
+    }
+}

@@ -6,6 +6,10 @@
 //! skew, and reports pairing latency. It is the component that lets the
 //! loop attribute an ISP frame to the NPU window that tuned it (E3's
 //! adaptation-latency metric depends on this attribution).
+//!
+//! Arrival order is free: the serial loop pushes window-then-frame, the
+//! pipelined schedule ([`super::pipeline`]) renders before it decides and
+//! therefore pushes frame-then-window — pairing is identical either way.
 
 /// A DVS-window/RGB-frame pairing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -126,6 +130,25 @@ mod tests {
             s.push_frame(i, (i as i64 + 1) * 50_000);
         }
         assert_eq!(s.pairings.len(), 3);
+    }
+
+    #[test]
+    fn frame_leading_window_pairs_identically() {
+        // the pipelined schedule pushes each frame BEFORE its window
+        // (Render runs ahead of Decide) — pairing must not care
+        let mut lead = SyncController::new(50_000, 5_000);
+        let mut trail = SyncController::new(50_000, 5_000);
+        for i in 0..4u64 {
+            let t = (i as i64 + 1) * 50_000;
+            lead.push_frame(i, t + 200);
+            lead.push_window(i, t);
+            trail.push_window(i, t);
+            trail.push_frame(i, t + 200);
+        }
+        assert_eq!(lead.pairings, trail.pairings);
+        assert_eq!(lead.pairings.len(), 4);
+        assert_eq!(lead.dropped_frames, 0);
+        assert_eq!(lead.dropped_windows, 0);
     }
 
     #[test]

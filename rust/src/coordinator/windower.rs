@@ -157,6 +157,95 @@ mod tests {
     }
 
     #[test]
+    fn every_boundary_multiple_lands_in_preceding_window() {
+        // events exactly on k*W belong to window k-1 for every k — the
+        // convention the sim's last subframe (t == k*W) depends on
+        let mut w = Windower::new(1000);
+        for k in 1..=4i64 {
+            assert!(w.push(ev(k * 1000)), "boundary event {k} must be accepted");
+        }
+        w.flush();
+        let done = w.pop_completed();
+        assert_eq!(done.len(), 4);
+        for (k, win) in done.iter().enumerate() {
+            assert_eq!(win.id, k as u64);
+            assert_eq!(win.events.len(), 1, "window {k} holds exactly its boundary event");
+            assert_eq!(win.events[0].t_us, (k as i64 + 1) * 1000);
+        }
+        // one past the boundary starts the next window instead
+        let mut w = Windower::new(1000);
+        w.push(ev(1000));
+        w.push(ev(1001));
+        w.flush();
+        let done = w.pop_completed();
+        assert_eq!(done[0].events.len(), 1);
+        assert_eq!(done[1].events.len(), 1);
+    }
+
+    #[test]
+    fn sparse_bursts_yield_empty_windows_between_them() {
+        // two bursts ten windows apart: every window in between must
+        // materialize (empty), so downstream voxelization sees a gap,
+        // not a time warp
+        let mut w = Windower::new(1000);
+        for t in [100, 200, 300] {
+            assert!(w.push(ev(t)));
+        }
+        for t in [10_500, 10_600] {
+            assert!(w.push(ev(t)));
+        }
+        w.flush();
+        let done = w.pop_completed();
+        assert_eq!(done.len(), 11, "windows 0..=10 must all close");
+        assert_eq!(done[0].events.len(), 3);
+        for win in &done[1..10] {
+            assert_eq!(win.events.len(), 0, "gap window {} must be empty", win.id);
+            assert_eq!(win.start_us, win.id as i64 * 1000);
+        }
+        assert_eq!(done[10].events.len(), 2);
+        // a second sparse burst later still lines up
+        assert!(w.push(ev(13_001)));
+        w.flush();
+        let tail = w.pop_completed();
+        assert_eq!(tail.len(), 3, "windows 11..=13 close");
+        assert_eq!(tail[2].events.len(), 1);
+    }
+
+    #[test]
+    fn timestamp_regressions_within_window_ok_across_window_dropped() {
+        let mut w = Windower::new(1000);
+        // in-window disorder is tolerated (DVS readout reorders slightly)
+        assert!(w.push(ev(800)));
+        assert!(w.push(ev(400)), "in-window regression must be accepted");
+        // crossing into window 1 rolls window 0 …
+        assert!(w.push(ev(1500)));
+        // … after which anything from window 0 is late: dropped, counted
+        // by the return value, and the stream keeps going
+        assert!(!w.push(ev(999)), "cross-window regression must be dropped");
+        assert!(!w.push(ev(1)), "arbitrarily old events stay dropped");
+        assert!(w.push(ev(1200)), "the current window still accepts");
+        w.flush();
+        let done = w.pop_completed();
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].events.len(), 2, "window 0 kept only pre-roll events");
+        assert_eq!(done[1].events.len(), 2, "late events never leak into window 1");
+        // ids remain monotone after the drops
+        assert_eq!(done[1].id, 1);
+        assert_eq!(w.current_window_id(), 2);
+    }
+
+    #[test]
+    fn flush_of_empty_stream_closes_one_empty_window() {
+        let mut w = Windower::new(1000);
+        w.flush();
+        let done = w.pop_completed();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 0);
+        assert!(done[0].events.is_empty());
+        assert_eq!(w.current_window_id(), 1);
+    }
+
+    #[test]
     fn window_ids_monotone() {
         let (events, _) = DvsWindowSim::new(1).run();
         let mut w = Windower::default();

@@ -263,6 +263,15 @@ pub fn run_fleet(cfg: &SystemConfig) -> Result<FleetReport> {
 /// stream's window `w` before any stream's window `w+1`) so cross-stream
 /// requests keep fusing in the shared batcher. In lockstep mode the
 /// carriers — not the individual streams — rendezvous per window round.
+/// With `loop.feedback_latency >= 1` each stream runs the staged
+/// pipelined schedule on its carrier: window `w`'s ISP render overlaps
+/// its NPU inference, and — when no admission limit is configured —
+/// window `w+1`'s Sense is submitted in the same round to keep the
+/// batcher fed (under `max_inflight` the look-ahead is disabled so the
+/// gate's bound stays honest). The per-stage occupancy rows in the
+/// fleet report show the overlap. Stream results stay
+/// carrier-assignment independent either way (the pipelined schedule
+/// is a fixed program order per stream).
 fn run_carrier(
     cfg: SystemConfig,
     profs: Vec<StreamProfile>,
@@ -326,6 +335,21 @@ fn run_carrier(
                 break 'rounds;
             }
             let illum = st.script[w];
+            // The staged executor's look-ahead: window w+1's Sense/Infer
+            // submission rides this round when the loop is pipelined
+            // (feedback_latency >= 1); ignored by the serial schedule.
+            // Under admission control the look-ahead is disabled — a
+            // submission that outlives its permit would let every stream
+            // park one extra request in the batcher and silently void
+            // the max_inflight bound. The pipelined overlap survives
+            // (each tick still renders while its own window infers);
+            // only the cross-window batcher feeding is given up. The
+            // choice is config-derived, so digests stay deterministic.
+            let next_illum = if cfg.fleet.max_inflight > 0 {
+                None
+            } else {
+                st.script.get(w + 1).copied()
+            };
             let _permit = gate.as_ref().map(|g| g.acquire());
             if let Some(g) = &gate {
                 // measured-only gauge (excluded from the determinism digest)
@@ -337,8 +361,9 @@ fn run_carrier(
             // by the pool) must not unwind past the rendezvous protocol;
             // contain it and route it through the same abort path as an
             // Err — the panic becomes an engine error, not a silent join.
-            let stepped =
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| st.l.step(illum)));
+            let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                st.l.step_window(illum, next_illum)
+            }));
             let err = match stepped {
                 Ok(Ok(o)) => {
                     st.outcomes.push(o);

@@ -48,6 +48,20 @@ impl Digest {
         self.u64(v.to_bits());
     }
 
+    /// Fold one window outcome's deterministic fields — THE canonical
+    /// field set of the determinism digest (timing fields excluded).
+    /// Shared by [`StreamSummary::from_outcomes`] and the parity tests
+    /// (`rust/tests/pipeline_parity.rs`) so they can never drift apart.
+    pub fn fold_outcome(&mut self, o: &WindowOutcome) {
+        self.u64(o.window_id);
+        self.u64(o.events as u64);
+        self.u64(o.detections.len() as u64);
+        self.f64(o.psnr_db);
+        self.f64(o.mean_luma);
+        self.f64(o.exposure_gain);
+        self.f64(o.nlm_h);
+    }
+
     pub fn value(&self) -> u64 {
         self.0
     }
@@ -90,13 +104,7 @@ impl StreamSummary {
         let mut service_us = Vec::with_capacity(outcomes.len());
         let mut occupancy = 0.0;
         for o in outcomes {
-            digest.u64(o.window_id);
-            digest.u64(o.events as u64);
-            digest.u64(o.detections.len() as u64);
-            digest.f64(o.psnr_db);
-            digest.f64(o.mean_luma);
-            digest.f64(o.exposure_gain);
-            digest.f64(o.nlm_h);
+            digest.fold_outcome(o);
             events += o.events;
             detections += o.detections.len();
             psnr_sum += o.psnr_db;
@@ -314,6 +322,68 @@ impl FleetReport {
         rows
     }
 
+    /// Per-stage pipeline occupancy aggregated across every stream's
+    /// metrics snapshot: `(stage, windows, mean µs/window, occupancy)`
+    /// in canonical Sense/Infer/Decide/Render order. Windows and busy
+    /// time are summed; occupancy is summed stage busy time over summed
+    /// tick wall time — stages of a pipelined fleet sum above 1.0, and
+    /// that excess is the measured Render/Infer overlap.
+    pub fn pipeline_rows(&self) -> Vec<(String, u64, f64, f64)> {
+        use crate::coordinator::pipeline::PIPE_STAGE_NAMES;
+        use crate::metrics::{PIPELINE_KEY, PIPE_KEY_BUSY_US, PIPE_KEY_WINDOWS};
+        let mut span_sum = 0.0f64;
+        for s in &self.streams {
+            span_sum += s
+                .metrics
+                .get(PIPELINE_KEY)
+                .and_then(|p| p.get("span_us"))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0);
+        }
+        PIPE_STAGE_NAMES
+            .iter()
+            .map(|&name| {
+                let mut windows = 0u64;
+                let mut busy_us = 0.0f64;
+                for s in &self.streams {
+                    let Some(stage) = s
+                        .metrics
+                        .get(PIPELINE_KEY)
+                        .and_then(|p| p.get("stages"))
+                        .and_then(|st| st.get(name))
+                    else {
+                        continue;
+                    };
+                    windows += stage
+                        .get(PIPE_KEY_WINDOWS)
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0) as u64;
+                    busy_us += stage
+                        .get(PIPE_KEY_BUSY_US)
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0);
+                }
+                let mean = if windows > 0 { busy_us / windows as f64 } else { 0.0 };
+                let occupancy = if span_sum > 0.0 { busy_us / span_sum } else { 0.0 };
+                (name.to_string(), windows, mean, occupancy)
+            })
+            .collect()
+    }
+
+    /// The deepest feedback-latency register any stream ran with (they
+    /// share one config, so this is THE fleet's pipeline depth).
+    pub fn pipeline_depth(&self) -> u64 {
+        self.streams
+            .iter()
+            .filter_map(|s| {
+                s.metrics
+                    .get(crate::metrics::PIPELINE_KEY)
+                    .and_then(|p| p.get("depth"))
+                    .and_then(Json::as_f64)
+            })
+            .fold(0.0, f64::max) as u64
+    }
+
     /// Worker-pool utilization across the fleet: `(workers, runs, tasks,
     /// utilization)`. Every stream snapshots the SAME shared pool's
     /// monotonic totals, so aggregation takes the maximum (the latest
@@ -407,6 +477,30 @@ impl FleetReport {
                         ),
                     ),
                     (
+                        "pipeline",
+                        Json::obj(vec![
+                            ("depth", Json::num(self.pipeline_depth() as f64)),
+                            (
+                                "stages",
+                                Json::obj(
+                                    self.pipeline_rows()
+                                        .iter()
+                                        .map(|(name, windows, mean, occupancy)| {
+                                            (
+                                                name.as_str(),
+                                                Json::obj(vec![
+                                                    ("windows", Json::num(*windows as f64)),
+                                                    ("mean_us", Json::num(*mean)),
+                                                    ("occupancy", Json::num(*occupancy)),
+                                                ]),
+                                            )
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ]),
+                    ),
+                    (
                         "snn_layers",
                         Json::arr(
                             self.snn_layer_rows()
@@ -468,6 +562,16 @@ impl FleetReport {
                 bypassed.to_string(),
             ]);
         }
+        let mut pipe_table =
+            Table::new(&["pipe stage", "windows", "mean_us", "occupancy"]);
+        for (name, windows, mean, occupancy) in self.pipeline_rows() {
+            pipe_table.row(&[
+                name,
+                windows.to_string(),
+                format!("{mean:.1}"),
+                format!("{:.2}", occupancy),
+            ]);
+        }
         let mut snn_table =
             Table::new(&["snn layer", "windows", "rate %", "sparse", "dense"]);
         for (layer, windows, rate, sparse, dense) in self.snn_layer_rows() {
@@ -485,6 +589,8 @@ impl FleetReport {
              occupancy {:.2} | service p50 {:.0}µs p99 {:.0}µs | digest {}\n\
              pool: {workers} workers, {runs} parallel runs, {tasks} band tasks, \
              {:.0}% utilization\n\
+             \npipeline dataflow (feedback latency {} frames; occupancy = stage busy /\n\
+             tick wall — pipelined stages sum above 1.0):\n{}\
              \nper-stage ISP timing (frame-weighted means across streams):\n{}\
              \nper-layer SNN spike rate + dispatch (window-weighted across streams):\n{}",
             table.render(),
@@ -497,6 +603,8 @@ impl FleetReport {
             self.service_pct_us(99.0),
             self.digest_hex(),
             100.0 * utilization,
+            self.pipeline_depth(),
+            pipe_table.render(),
             stage_table.render(),
             snn_table.render(),
         )
@@ -646,6 +754,62 @@ mod tests {
         let l1 = &agg.as_arr().unwrap()[1];
         assert_eq!(l1.get("dense").unwrap().as_f64(), Some(3.0));
         assert!(r.render().contains("per-layer SNN spike rate"));
+    }
+
+    #[test]
+    fn pipeline_rows_aggregate_busy_over_span() {
+        use crate::coordinator::pipeline::PipeStage;
+        // stream 0: one pipelined window, render+infer overlapping;
+        // stream 1: one window, render only
+        let m0 = SystemMetrics::new();
+        m0.pipeline.depth.set(1);
+        m0.pipeline.record_stage(PipeStage::Render, 300.0);
+        m0.pipeline.record_stage(PipeStage::Infer, 300.0);
+        m0.pipeline.record_tick(400.0);
+        let m1 = SystemMetrics::new();
+        m1.pipeline.depth.set(1);
+        m1.pipeline.record_stage(PipeStage::Render, 100.0);
+        m1.pipeline.record_tick(100.0);
+        let s0 = StreamSummary::from_outcomes(&prof(0), &[outcome(0, 10, 30.0, 1)], &m0);
+        let s1 = StreamSummary::from_outcomes(&prof(1), &[outcome(0, 20, 28.0, 1)], &m1);
+        let r = FleetReport::assemble(FleetConfig::default(), vec![s0, s1], 1.0);
+        assert_eq!(r.pipeline_depth(), 1);
+        let rows = r.pipeline_rows();
+        let render = rows
+            .iter()
+            .find(|(n, ..)| n == "render")
+            .expect("pipeline rows must carry the render stage");
+        assert_eq!(render.1, 2, "render windows summed across streams");
+        assert!((render.2 - 200.0).abs() < 1e-9, "mean µs/window, got {}", render.2);
+        assert!((render.3 - 0.8).abs() < 1e-9, "busy/span occupancy, got {}", render.3);
+        let infer = rows
+            .iter()
+            .find(|(n, ..)| n == "infer")
+            .expect("pipeline rows must carry the infer stage");
+        assert!((infer.3 - 0.6).abs() < 1e-9);
+        // the aggregate JSON and the rendered report carry the same rows
+        let j = r.to_json();
+        let pipe = j
+            .get("aggregate")
+            .expect("report must carry an aggregate section")
+            .get("pipeline")
+            .expect("aggregate must carry a pipeline section");
+        assert_eq!(pipe.get("depth").expect("pipeline depth key").as_f64(), Some(1.0));
+        let jr = pipe
+            .get("stages")
+            .expect("pipeline must carry stages")
+            .get("render")
+            .expect("stages must carry render");
+        assert!(
+            (jr.get("occupancy")
+                .expect("render occupancy key")
+                .as_f64()
+                .expect("occupancy must be numeric")
+                - 0.8)
+                .abs()
+                < 1e-9
+        );
+        assert!(r.render().contains("pipeline dataflow"));
     }
 
     #[test]

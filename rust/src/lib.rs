@@ -13,6 +13,13 @@
 //!   Bayer RGB sensor ([`isp`]), dynamically reconfigured by the NPU's
 //!   detections through the [`coordinator`] parameter bus.
 //!
+//! The loop itself executes as a **staged dataflow**
+//! ([`coordinator::pipeline`]): Sense, Infer, Decide, and Render stage
+//! nodes behind an explicit feedback-latency register on the parameter
+//! bus. Latency 0 is the serial schedule (bit-exact with the classic
+//! loop); latency ≥ 1 overlaps each window's ISP render with its NPU
+//! inference — the paper's concurrently clocked IP cores, in software.
+//!
 //! Everything hardware-gated in the paper (FPGA fabric, Prophesee GEN1
 //! recordings, DVS + RGB sensors) is substituted by simulators per
 //! DESIGN.md §3: [`events`] (DVS pixel model + synthetic automotive

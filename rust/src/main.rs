@@ -52,6 +52,7 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "isp-stages", help: "ISP stage mask: \"all\", a list of stages to enable (dpc,awb,demosaic,nlm,gamma,csc), or -stage terms to drop from the full graph (e.g. \"-nlm,-csc\")", is_switch: false, default: None },
         FlagSpec { name: "sparse-threshold", help: "SNN activity-adaptive dispatch threshold: spike rate (0..1) above which the NPU plans a layer onto the dense kernel instead of the event-driven sparse path (outputs are identical either way; drives the sparse/dense split reported in metrics and the fleet report)", is_switch: false, default: None },
         FlagSpec { name: "workers", help: "deterministic worker-pool width for ISP row bands and SNN channel bands (0 = available_parallelism, 1 = inline scalar path; outputs are bit-identical for any value)", is_switch: false, default: None },
+        FlagSpec { name: "feedback-latency", help: "parameter-bus feedback-latency register in frames: 0 = serial schedule (decide and apply inside the same window, bit-exact with the classic loop), >= 1 = pipelined schedule (window t's ISP render overlaps its NPU inference; commands land latency frame boundaries after their source window). Each value has its own deterministic digest", is_switch: false, default: None },
     ]
 }
 
@@ -81,6 +82,11 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
             .parse()
             .map_err(|_| anyhow::anyhow!("--workers must be a non-negative integer"))?;
     }
+    if let Some(l) = args.explicit("feedback-latency") {
+        cfg.loop_.feedback_latency = l.parse().map_err(|_| {
+            anyhow::anyhow!("--feedback-latency must be a non-negative frame count")
+        })?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -93,8 +99,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     l.closed_loop = !args.has("open-loop");
     if !args.has("json") {
         println!(
-            "cognitive loop: backbone={} windows={windows} closed={}",
-            cfg.npu.backbone, l.closed_loop
+            "cognitive loop: backbone={} windows={windows} closed={} feedback_latency={}",
+            cfg.npu.backbone,
+            l.closed_loop,
+            l.feedback_latency()
         );
     }
     // scripted lighting: steady → dark step at 1/3 → bright step at 2/3
@@ -161,12 +169,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     cfg.validate()?;
     if !args.has("json") {
         println!(
-            "fleet: backbone={} streams={} windows/stream={} mix={} lockstep={}",
+            "fleet: backbone={} streams={} windows/stream={} mix={} lockstep={} feedback_latency={}",
             cfg.npu.backbone,
             cfg.fleet.streams,
             cfg.fleet.windows_per_stream,
             cfg.fleet.scenario_mix,
-            cfg.fleet.lockstep
+            cfg.fleet.lockstep,
+            cfg.loop_.feedback_latency
         );
     }
     let report = fleet::run_fleet(&cfg)?;

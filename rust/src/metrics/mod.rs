@@ -8,6 +8,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::coordinator::pipeline::{PipeStage, PIPE_STAGE_COUNT, PIPE_STAGE_NAMES};
 use crate::isp::graph::{StageSample, STAGE_COUNT, STAGE_NAMES};
 use crate::jsonlite::Json;
 
@@ -137,20 +138,22 @@ impl LatencyHist {
 
     pub fn report(&self) -> String {
         format!(
-            "n={} mean={:.1}µs p50≈{}µs p99≈{}µs",
+            "n={} mean={:.1}µs p50≈{}µs p95≈{}µs p99≈{}µs",
             self.count(),
             self.mean_us(),
             self.pct_us(50.0),
+            self.pct_us(95.0),
             self.pct_us(99.0)
         )
     }
 
-    /// Machine-readable summary (counts + bucket-approximate percentiles).
+    /// Machine-readable summary (counts + bucket-approximate p50/p95/p99).
     pub fn snapshot(&self) -> Json {
         Json::obj(vec![
             ("count", Json::num(self.count() as f64)),
             ("mean_us", Json::num(self.mean_us())),
             ("p50_us", Json::num(self.pct_us(50.0) as f64)),
+            ("p95_us", Json::num(self.pct_us(95.0) as f64)),
             ("p99_us", Json::num(self.pct_us(99.0) as f64)),
         ])
     }
@@ -471,6 +474,153 @@ impl PoolMetrics {
     }
 }
 
+/// JSON key of the pipeline-dataflow export.
+pub const PIPELINE_KEY: &str = "pipeline";
+pub const PIPE_KEY_WINDOWS: &str = "windows";
+pub const PIPE_KEY_BUSY_US: &str = "busy_us";
+pub const PIPE_KEY_MEAN_US: &str = "mean_us";
+pub const PIPE_KEY_OCCUPANCY: &str = "occupancy";
+
+/// One pipeline stage's accumulators: windows processed and summed busy
+/// wall time (ns, so sub-µs Decide spans don't truncate to zero).
+#[derive(Debug, Default)]
+struct PipeLane {
+    busy_ns: AtomicU64,
+    windows: AtomicU64,
+}
+
+/// Per-stage busy spans of the staged cognitive dataflow (Sense / Infer /
+/// Decide / Render — see [`crate::coordinator::pipeline`]), plus the
+/// pipeline-shape gauges. Sense/Decide/Render record carrier-thread
+/// spans; the Infer lane records the window's NPU **service span**
+/// (queue + execute at the batcher), which is the span that genuinely
+/// runs on another thread. Occupancy is a stage's busy time over the
+/// summed tick wall time: serial schedules stack to ~1.0 total, while a
+/// pipelined schedule's Infer span overlaps Render and the stages sum
+/// **above** the tick span — the direct measure of the overlap.
+#[derive(Debug)]
+pub struct PipelineMetrics {
+    lanes: [PipeLane; PIPE_STAGE_COUNT],
+    /// Configured feedback latency (the bus register depth).
+    pub depth: Gauge,
+    /// Peak windows simultaneously in flight (1 serial, >= 2 pipelined).
+    pub inflight_peak: Gauge,
+    /// Summed per-tick wall time (ns) — the throughput denominator.
+    span_ns: AtomicU64,
+    ticks: AtomicU64,
+}
+
+impl Default for PipelineMetrics {
+    fn default() -> Self {
+        Self {
+            lanes: std::array::from_fn(|_| PipeLane::default()),
+            depth: Gauge::new(),
+            inflight_peak: Gauge::new(),
+            span_ns: AtomicU64::new(0),
+            ticks: AtomicU64::new(0),
+        }
+    }
+}
+
+impl PipelineMetrics {
+    /// Fold one stage's busy span for one window in (lock-free).
+    pub fn record_stage(&self, stage: PipeStage, us: f64) {
+        let lane = &self.lanes[stage as usize];
+        lane.windows.fetch_add(1, Ordering::Relaxed);
+        lane.busy_ns.fetch_add((us.max(0.0) * 1e3) as u64, Ordering::Relaxed);
+    }
+
+    /// Fold one executor tick's wall time in.
+    pub fn record_tick(&self, us: f64) {
+        self.ticks.fetch_add(1, Ordering::Relaxed);
+        self.span_ns.fetch_add((us.max(0.0) * 1e3) as u64, Ordering::Relaxed);
+    }
+
+    pub fn windows(&self, stage: usize) -> u64 {
+        self.lanes[stage].windows.load(Ordering::Relaxed)
+    }
+
+    /// Total busy wall time of one stage (µs).
+    pub fn busy_us(&self, stage: usize) -> f64 {
+        self.lanes[stage].busy_ns.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Mean busy time per window for one stage (µs).
+    pub fn mean_us(&self, stage: usize) -> f64 {
+        let w = self.windows(stage);
+        if w == 0 {
+            0.0
+        } else {
+            self.busy_us(stage) / w as f64
+        }
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.ticks.load(Ordering::Relaxed)
+    }
+
+    /// Summed tick wall time (µs).
+    pub fn span_us(&self) -> f64 {
+        self.span_ns.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Stage busy time / summed tick wall time. Stages of a pipelined
+    /// schedule sum above 1.0 in aggregate — that excess IS the overlap.
+    pub fn occupancy(&self, stage: usize) -> f64 {
+        let span = self.span_us();
+        if span <= 0.0 {
+            0.0
+        } else {
+            self.busy_us(stage) / span
+        }
+    }
+
+    /// One line: `depth=N inflight<=M sense=..% infer=..% ...`.
+    pub fn report(&self) -> String {
+        let stages = PIPE_STAGE_NAMES
+            .iter()
+            .enumerate()
+            .map(|(i, n)| format!("{n}={:.0}%", 100.0 * self.occupancy(i)))
+            .collect::<Vec<_>>()
+            .join(" ");
+        format!(
+            "depth={} inflight<={} {stages}",
+            self.depth.get(),
+            self.inflight_peak.get().max(1)
+        )
+    }
+
+    /// `{depth, inflight_peak, ticks, span_us, stages: {name: {...}}}`.
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("depth", Json::num(self.depth.get() as f64)),
+            ("inflight_peak", Json::num(self.inflight_peak.get() as f64)),
+            ("ticks", Json::num(self.ticks() as f64)),
+            ("span_us", Json::num(self.span_us())),
+            (
+                "stages",
+                Json::obj(
+                    PIPE_STAGE_NAMES
+                        .iter()
+                        .enumerate()
+                        .map(|(i, n)| {
+                            (
+                                *n,
+                                Json::obj(vec![
+                                    (PIPE_KEY_WINDOWS, Json::num(self.windows(i) as f64)),
+                                    (PIPE_KEY_BUSY_US, Json::num(self.busy_us(i))),
+                                    (PIPE_KEY_MEAN_US, Json::num(self.mean_us(i))),
+                                    (PIPE_KEY_OCCUPANCY, Json::num(self.occupancy(i))),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 /// The coordinator's metric set (one instance per running system).
 #[derive(Debug, Default)]
 pub struct SystemMetrics {
@@ -490,6 +640,8 @@ pub struct SystemMetrics {
     pub snn_layers: SnnLayerMetrics,
     /// Worker-pool utilization (the parallel execution budget).
     pub pool: PoolMetrics,
+    /// Staged-dataflow busy spans + pipeline shape (the overlap budget).
+    pub pipeline: PipelineMetrics,
 }
 
 impl SystemMetrics {
@@ -500,7 +652,7 @@ impl SystemMetrics {
     pub fn report(&self) -> String {
         format!(
             "windows={} batches={} detections={} isp_frames={} param_updates={}\n\
-             npu:  {}\ne2e:  {}\nisp:  {}\nstages: {}\nsnn:  {}\npool: {}",
+             npu:  {}\ne2e:  {}\nisp:  {}\nstages: {}\nsnn:  {}\npool: {}\npipe: {}",
             self.windows_in.get(),
             self.batches_executed.get(),
             self.detections_out.get(),
@@ -512,6 +664,7 @@ impl SystemMetrics {
             self.isp_stages.report(),
             self.snn_layers.report(),
             self.pool.report(),
+            self.pipeline.report(),
         )
     }
 
@@ -544,6 +697,7 @@ impl SystemMetrics {
             (ISP_STAGES_KEY, self.isp_stages.snapshot()),
             (SNN_LAYERS_KEY, self.snn_layers.snapshot()),
             (POOL_KEY, self.pool.snapshot()),
+            (PIPELINE_KEY, self.pipeline.snapshot()),
         ])
     }
 }
@@ -622,19 +776,38 @@ mod tests {
         m.npu_latency.record_us(200);
         let j = m.snapshot();
         assert_eq!(
-            j.get("counters").unwrap().get("windows_in").unwrap().as_f64(),
+            j.get("counters")
+                .expect("snapshot must carry a counters section")
+                .get("windows_in")
+                .expect("counters must carry windows_in")
+                .as_f64(),
             Some(7.0)
         );
         assert_eq!(
-            j.get("gauges").unwrap().get("queue_depth").unwrap().as_f64(),
+            j.get("gauges")
+                .expect("snapshot must carry a gauges section")
+                .get("queue_depth")
+                .expect("gauges must carry queue_depth")
+                .as_f64(),
             Some(3.0)
         );
-        let npu = j.get("histograms").unwrap().get("npu_latency").unwrap();
-        assert_eq!(npu.get("count").unwrap().as_f64(), Some(2.0));
-        assert_eq!(npu.get("mean_us").unwrap().as_f64(), Some(150.0));
+        let npu = j
+            .get("histograms")
+            .expect("snapshot must carry a histograms section")
+            .get("npu_latency")
+            .expect("histograms must carry npu_latency");
+        assert_eq!(npu.get("count").expect("hist count key").as_f64(), Some(2.0));
+        assert_eq!(npu.get("mean_us").expect("hist mean_us key").as_f64(), Some(150.0));
+        assert!(
+            npu.get("p95_us").is_some(),
+            "histograms must export the p95 percentile"
+        );
         // serializes and parses back
         let text = j.to_string();
-        assert_eq!(crate::jsonlite::parse(&text).unwrap(), j);
+        assert_eq!(
+            crate::jsonlite::parse(&text).expect("snapshot must serialize to valid JSON"),
+            j
+        );
     }
 
     #[test]
@@ -659,9 +832,16 @@ mod tests {
         assert!((m.isp_stages.mean_us(0) - 20.0).abs() < 1e-9);
         assert!((m.isp_stages.mean_us(nlm) - 10.0).abs() < 1e-9);
         let j = m.snapshot();
-        let stage = j.get("isp_stages").unwrap().get("nlm").unwrap();
-        assert_eq!(stage.get("frames").unwrap().as_f64(), Some(1.0));
-        assert_eq!(stage.get("bypassed").unwrap().as_f64(), Some(1.0));
+        let stage = j
+            .get("isp_stages")
+            .expect("snapshot must carry an isp_stages section")
+            .get("nlm")
+            .expect("isp_stages must carry the nlm lane");
+        assert_eq!(stage.get("frames").expect("stage frames key").as_f64(), Some(1.0));
+        assert_eq!(
+            stage.get("bypassed").expect("stage bypassed key").as_f64(),
+            Some(1.0)
+        );
         assert!(m.report().contains("stages:"));
     }
 
@@ -677,19 +857,38 @@ mod tests {
         assert_eq!(m.snn_layers.sparse(0), 2);
         assert_eq!((m.snn_layers.sparse(1), m.snn_layers.dense(1)), (0, 2));
         let j = m.snapshot();
-        let layers = j.get(SNN_LAYERS_KEY).unwrap().get("layers").unwrap();
-        let l1 = &layers.as_arr().unwrap()[1];
-        assert_eq!(l1.get(SNN_KEY_LAYER).unwrap().as_f64(), Some(1.0));
-        assert_eq!(l1.get(SNN_KEY_DENSE).unwrap().as_f64(), Some(2.0));
-        assert!((l1.get(SNN_KEY_MEAN_RATE).unwrap().as_f64().unwrap() - 0.35).abs() < 1e-6);
+        let layers = j
+            .get(SNN_LAYERS_KEY)
+            .expect("snapshot must carry an snn_layers section")
+            .get("layers")
+            .expect("snn_layers must carry a layers array");
+        let l1 = &layers.as_arr().expect("snn layers must be an array")[1];
+        assert_eq!(l1.get(SNN_KEY_LAYER).expect("snn layer key").as_f64(), Some(1.0));
+        assert_eq!(l1.get(SNN_KEY_DENSE).expect("snn dense key").as_f64(), Some(2.0));
+        assert!(
+            (l1.get(SNN_KEY_MEAN_RATE)
+                .expect("snn mean_rate key")
+                .as_f64()
+                .expect("snn mean_rate must be numeric")
+                - 0.35)
+                .abs()
+                < 1e-6
+        );
         // histogram: 0.004 -> bucket 0 (<=0.005), 0.006 -> bucket 1
-        let hist = j.get(SNN_LAYERS_KEY).unwrap().get("rate_hist").unwrap();
-        let b0 = &hist.as_arr().unwrap()[0];
-        assert_eq!(b0.get("count").unwrap().as_f64(), Some(1.0));
+        let hist = j
+            .get(SNN_LAYERS_KEY)
+            .expect("snapshot must carry an snn_layers section")
+            .get("rate_hist")
+            .expect("snn_layers must carry a rate_hist array");
+        let b0 = &hist.as_arr().expect("rate_hist must be an array")[0];
+        assert_eq!(b0.get("count").expect("rate_hist count key").as_f64(), Some(1.0));
         assert!(m.report().contains("snn:"));
         // serializes and parses back
         let text = j.to_string();
-        assert_eq!(crate::jsonlite::parse(&text).unwrap(), j);
+        assert_eq!(
+            crate::jsonlite::parse(&text).expect("snapshot must serialize to valid JSON"),
+            j
+        );
     }
 
     #[test]
@@ -706,10 +905,19 @@ mod tests {
         assert_eq!(m.pool.workers.get(), 4);
         assert!((m.pool.utilization() - 0.5).abs() < 1e-9);
         let j = m.snapshot();
-        let pool = j.get(POOL_KEY).unwrap();
-        assert_eq!(pool.get("workers").unwrap().as_f64(), Some(4.0));
-        assert_eq!(pool.get("tasks").unwrap().as_f64(), Some(40.0));
-        assert!((pool.get("utilization").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
+        let pool = j.get(POOL_KEY).expect("snapshot must carry a pool section");
+        assert_eq!(pool.get("workers").expect("pool workers key").as_f64(), Some(4.0));
+        assert_eq!(pool.get("tasks").expect("pool tasks key").as_f64(), Some(40.0));
+        assert!(
+            (pool
+                .get("utilization")
+                .expect("pool utilization key")
+                .as_f64()
+                .expect("pool utilization must be numeric")
+                - 0.5)
+                .abs()
+                < 1e-9
+        );
         assert!(m.report().contains("pool:"));
     }
 
@@ -726,7 +934,15 @@ mod tests {
         let m = SnnLayerMetrics::default();
         assert_eq!(m.layers(), 0);
         assert_eq!(m.report(), "none");
-        assert_eq!(m.snapshot().get("layers").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(
+            m.snapshot()
+                .get("layers")
+                .expect("snn snapshot must carry a layers array")
+                .as_arr()
+                .expect("snn layers must be an array")
+                .len(),
+            0
+        );
     }
 
     #[test]
@@ -736,7 +952,79 @@ mod tests {
             h.record_us(us);
         }
         let s = h.snapshot();
-        assert_eq!(s.get("p50_us").unwrap().as_f64(), Some(h.pct_us(50.0) as f64));
-        assert_eq!(s.get("p99_us").unwrap().as_f64(), Some(h.pct_us(99.0) as f64));
+        assert_eq!(
+            s.get("p50_us").expect("hist p50_us key").as_f64(),
+            Some(h.pct_us(50.0) as f64)
+        );
+        assert_eq!(
+            s.get("p95_us").expect("hist p95_us key").as_f64(),
+            Some(h.pct_us(95.0) as f64)
+        );
+        assert_eq!(
+            s.get("p99_us").expect("hist p99_us key").as_f64(),
+            Some(h.pct_us(99.0) as f64)
+        );
+    }
+
+    #[test]
+    fn pipeline_lanes_accumulate_and_export() {
+        let m = SystemMetrics::new();
+        m.pipeline.depth.set(1);
+        m.pipeline.inflight_peak.set(2);
+        // two windows: render overlaps infer, so stage busy sums exceed
+        // the tick span — occupancy totals above 1.0 are the overlap
+        for _ in 0..2 {
+            m.pipeline.record_stage(PipeStage::Sense, 100.0);
+            m.pipeline.record_stage(PipeStage::Infer, 400.0);
+            m.pipeline.record_stage(PipeStage::Decide, 50.0);
+            m.pipeline.record_stage(PipeStage::Render, 450.0);
+            m.pipeline.record_tick(600.0);
+        }
+        assert_eq!(m.pipeline.ticks(), 2);
+        assert_eq!(m.pipeline.windows(PipeStage::Render as usize), 2);
+        assert!((m.pipeline.mean_us(PipeStage::Infer as usize) - 400.0).abs() < 1e-9);
+        assert!((m.pipeline.span_us() - 1200.0).abs() < 1e-9);
+        assert!((m.pipeline.occupancy(PipeStage::Render as usize) - 0.75).abs() < 1e-9);
+        let total: f64 =
+            (0..PIPE_STAGE_COUNT).map(|i| m.pipeline.occupancy(i)).sum();
+        assert!(total > 1.0, "overlapped stages must sum above 1.0, got {total}");
+        let j = m.snapshot();
+        let pipe = j.get(PIPELINE_KEY).expect("snapshot must carry a pipeline section");
+        assert_eq!(pipe.get("depth").expect("pipeline depth key").as_f64(), Some(1.0));
+        assert_eq!(
+            pipe.get("inflight_peak").expect("pipeline inflight_peak key").as_f64(),
+            Some(2.0)
+        );
+        let render = pipe
+            .get("stages")
+            .expect("pipeline must carry a stages section")
+            .get("render")
+            .expect("pipeline stages must carry the render lane");
+        assert_eq!(
+            render.get(PIPE_KEY_WINDOWS).expect("render windows key").as_f64(),
+            Some(2.0)
+        );
+        assert!(
+            (render
+                .get(PIPE_KEY_OCCUPANCY)
+                .expect("render occupancy key")
+                .as_f64()
+                .expect("render occupancy must be numeric")
+                - 0.75)
+                .abs()
+                < 1e-9
+        );
+        assert!(m.report().contains("pipe:"));
+    }
+
+    #[test]
+    fn pipeline_empty_is_all_zeros() {
+        let m = PipelineMetrics::default();
+        assert_eq!(m.ticks(), 0);
+        for i in 0..PIPE_STAGE_COUNT {
+            assert_eq!(m.windows(i), 0);
+            assert_eq!(m.mean_us(i), 0.0);
+            assert_eq!(m.occupancy(i), 0.0);
+        }
     }
 }

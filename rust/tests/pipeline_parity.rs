@@ -1,0 +1,204 @@
+//! Parity + determinism contract of the staged cognitive dataflow
+//! (ISSUE 5 acceptance):
+//!
+//! * `feedback_latency = 0` is the serial schedule and must be bit-exact
+//!   with the classic monolithic loop for any worker count — the staged
+//!   decomposition (and the windower now sitting inside Sense) is pure
+//!   refactoring at latency 0;
+//! * `feedback_latency >= 1` is the pipelined schedule with its own
+//!   deterministic digest: identical on replay, across worker counts,
+//!   and across lockstep/free-run arrival regimes;
+//! * the latency register actually defers commands (frame 0 renders at
+//!   power-on parameters; the final window's command is never applied).
+//!
+//! NPU-backed cases skip without `rust/artifacts/`; the windower
+//! transparency tests are artifact-free and always run.
+
+use acelerador::config::SystemConfig;
+use acelerador::coordinator::windower::Windower;
+use acelerador::coordinator::{CognitiveLoop, WindowOutcome};
+use acelerador::events::scene::ScenarioSim;
+use acelerador::events::spec;
+use acelerador::fleet::report::Digest;
+use acelerador::fleet::run_fleet;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!(
+        "{}/artifacts/manifest.json",
+        env!("CARGO_MANIFEST_DIR")
+    ))
+    .exists()
+}
+
+fn cfg(workers: usize, feedback_latency: u64) -> SystemConfig {
+    let mut c = SystemConfig::default();
+    c.npu.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    c.npu.backbone = "spiking_mobilenet".into(); // smallest: fastest tests
+    c.runtime.workers = workers;
+    c.loop_.feedback_latency = feedback_latency;
+    c
+}
+
+fn script() -> Vec<f64> {
+    let mut s = vec![1.0; 3];
+    s.extend(vec![0.25; 5]);
+    s.extend(vec![2.0; 4]);
+    s
+}
+
+/// Digest over the deterministic `WindowOutcome` fields, via the SAME
+/// canonical fold `fleet::report::StreamSummary` uses — the tests can
+/// never drift from the digest verify.sh and e8 compare.
+fn digest_outcomes(outcomes: &[WindowOutcome]) -> u64 {
+    let mut d = Digest::new();
+    for o in outcomes {
+        d.fold_outcome(o);
+    }
+    d.value()
+}
+
+// --- windower transparency (artifact-free) -------------------------------
+
+/// The Sense stage streams the sim's events through the §IV-A windower.
+/// For latency-0 parity with the pre-staged loop this segmentation must
+/// be a perfect passthrough: every event of sim window t lands in stream
+/// window t, in order, with none dropped.
+#[test]
+fn windower_is_transparent_to_sim_windows() {
+    for seed in [1u64, 5, 9, 42] {
+        let mut sim = ScenarioSim::new(seed);
+        let mut w = Windower::new(spec::WINDOW_US);
+        for (t, &illum) in [1.0, 0.25, 2.0, 1.0].iter().enumerate() {
+            let (events, _, _) = sim.window(illum);
+            let mut late = 0usize;
+            for e in &events {
+                if !w.push(*e) {
+                    late += 1;
+                }
+            }
+            w.flush();
+            let done = w.pop_completed();
+            assert_eq!(late, 0, "seed {seed} window {t}: no sim event may be late");
+            assert_eq!(done.len(), 1, "seed {seed} window {t}: exactly one window closes");
+            let win = &done[0];
+            assert_eq!(win.id, t as u64);
+            assert_eq!(win.start_us, t as i64 * spec::WINDOW_US);
+            assert_eq!(win.events.len(), events.len());
+            assert!(
+                win.events.iter().zip(&events).all(|(a, b)| a == b),
+                "seed {seed} window {t}: event order must be preserved"
+            );
+        }
+    }
+}
+
+// --- latency 0: serial parity --------------------------------------------
+
+#[test]
+fn latency0_digest_invariant_across_worker_counts() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut digests = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let mut l = CognitiveLoop::new(&cfg(workers, 0), 42).unwrap();
+        let r = l.run_script(&script()).unwrap();
+        digests.push(digest_outcomes(&r.outcomes));
+    }
+    assert!(
+        digests.windows(2).all(|w| w[0] == w[1]),
+        "latency-0 digests diverged across workers: {digests:x?}"
+    );
+}
+
+#[test]
+fn step_and_step_window_agree_at_latency_zero() {
+    if !have_artifacts() {
+        return;
+    }
+    let s = script();
+    // serial entry point, window at a time
+    let mut a = CognitiveLoop::new(&cfg(2, 0), 7).unwrap();
+    let ra: Vec<WindowOutcome> = s.iter().map(|&i| a.step(i).unwrap()).collect();
+    // staged entry point with look-ahead hints — must ignore them at 0
+    let mut b = CognitiveLoop::new(&cfg(2, 0), 7).unwrap();
+    let rb: Vec<WindowOutcome> = s
+        .iter()
+        .enumerate()
+        .map(|(k, &i)| b.step_window(i, s.get(k + 1).copied()).unwrap())
+        .collect();
+    for (x, y) in ra.iter().zip(&rb) {
+        assert_eq!(x.window_id, y.window_id);
+        assert_eq!(x.events, y.events);
+        assert_eq!(x.detections.len(), y.detections.len());
+        assert_eq!(x.psnr_db.to_bits(), y.psnr_db.to_bits());
+        assert_eq!(x.mean_luma.to_bits(), y.mean_luma.to_bits());
+        assert_eq!(x.exposure_gain.to_bits(), y.exposure_gain.to_bits());
+        assert_eq!(x.nlm_h.to_bits(), y.nlm_h.to_bits());
+    }
+}
+
+// --- latency >= 1: the pipelined golden digest ---------------------------
+
+#[test]
+fn pipelined_digest_replays_and_survives_worker_counts() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |workers: usize| {
+        let mut l = CognitiveLoop::new(&cfg(workers, 1), 42).unwrap();
+        let r = l.run_script(&script()).unwrap();
+        digest_outcomes(&r.outcomes)
+    };
+    let golden = run(1);
+    assert_eq!(golden, run(1), "pipelined schedule must replay bit-identically");
+    assert_eq!(golden, run(2), "pipelined digest must not depend on band workers");
+    assert_eq!(golden, run(4));
+}
+
+#[test]
+fn latency_register_defers_and_never_applies_the_last_command() {
+    if !have_artifacts() {
+        return;
+    }
+    let n = script().len() as u64;
+    // serial: every window's command is applied within its own window
+    let mut l0 = CognitiveLoop::new(&cfg(1, 0), 42).unwrap();
+    l0.run_script(&script()).unwrap();
+    assert_eq!(l0.metrics.isp_param_updates.get(), n);
+    // pipelined: window t's command lands at frame t+1 — frame 0 renders
+    // at power-on parameters and the final command is still in flight
+    // when the script ends
+    let mut l1 = CognitiveLoop::new(&cfg(1, 1), 42).unwrap();
+    let r1 = l1.run_script(&script()).unwrap();
+    assert_eq!(l1.metrics.isp_param_updates.get(), n - 1);
+    assert!(
+        (r1.outcomes[0].exposure_gain - 1.0).abs() < 1e-12,
+        "frame 0 must predate the first eligible command"
+    );
+    assert_eq!(l1.pairings(), n as usize, "sync pairs under frame-leads-window order");
+    assert!(l1.metrics.pipeline.inflight_peak.get() >= 2, "pipeline actually overlapped");
+    assert_eq!(l1.metrics.pipeline.depth.get(), 1);
+}
+
+#[test]
+fn pipelined_fleet_digest_invariant_across_workers_and_arrival_regime() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |workers: usize, lockstep: bool| {
+        let mut c = cfg(workers, 1);
+        c.fleet.streams = 2;
+        c.fleet.windows_per_stream = 4;
+        c.fleet.lockstep = lockstep;
+        run_fleet(&c).unwrap().digest()
+    };
+    let golden = run(1, true);
+    assert_eq!(golden, run(2, true), "carrier count must not move the digest");
+    assert_eq!(golden, run(4, true));
+    assert_eq!(
+        golden,
+        run(2, false),
+        "free-running arrivals (different batch fusion) must not move the digest"
+    );
+}

@@ -15,7 +15,9 @@ cd "$(dirname "$0")/.."
 repo_root=$(pwd)
 
 if ! command -v cargo >/dev/null 2>&1; then
-    echo "bench_snapshot: cargo not found on PATH — skipping (no artifacts written)" >&2
+    echo "bench_snapshot: WARNING: cargo not found on PATH — no BENCH_*.json artifact" >&2
+    echo "bench_snapshot: WARNING: can be written, so the perf trajectory stays" >&2
+    echo "bench_snapshot: WARNING: invisible until this runs on a cargo-equipped host" >&2
     exit 0
 fi
 

@@ -8,6 +8,24 @@ set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
+echo "== bench artifacts: presence + staleness =="
+# The BENCH_*.json perf-trajectory artifacts (tools/bench_snapshot.sh)
+# are how regressions are spotted across PRs. Absence or staleness is a
+# loud warning, not a failure — the trajectory being invisible is the
+# problem being flagged.
+bench_warned=0
+for b in e1 e7 e8; do
+    f="BENCH_${b}.json"
+    if [ ! -f "$f" ]; then
+        echo "verify: WARNING: $f is MISSING — run tools/bench_snapshot.sh (needs cargo) so the perf trajectory is tracked" >&2
+        bench_warned=1
+    elif [ -n "$(find rust/src rust/benches -name '*.rs' -newer "$f" 2>/dev/null | head -1)" ]; then
+        echo "verify: WARNING: $f is STALE (rust sources newer than the artifact) — re-run tools/bench_snapshot.sh" >&2
+        bench_warned=1
+    fi
+done
+[ "$bench_warned" = 0 ] && echo "bench artifacts present and fresh"
+
 if ! command -v cargo >/dev/null 2>&1; then
     echo "verify: cargo not found on PATH — cannot run the tier-1 gate" >&2
     exit 1
@@ -44,6 +62,16 @@ else
     echo "verify: parallel_parity target unavailable — skipping targeted run" >&2
 fi
 
+echo "== targeted: pipeline parity suite =="
+# The staged dataflow's contract (latency 0 bit-exact with the serial
+# loop; latency >= 1 deterministic across workers and arrival regimes).
+# Skips gracefully if the test binary is unavailable.
+if cargo test -q --test pipeline_parity -- --list >/dev/null 2>&1; then
+    cargo test -q --test pipeline_parity
+else
+    echo "verify: pipeline_parity target unavailable — skipping targeted run" >&2
+fi
+
 echo "== determinism: fleet digest across worker counts =="
 # Run the same 2-stream fleet with --workers 1 and --workers 4 and
 # compare digests — the end-to-end version of the parity suite. Needs
@@ -64,6 +92,19 @@ if [ -f artifacts/manifest.json ] && cargo build --release 2>/dev/null; then
         exit 1
     else
         echo "digest invariant across --workers 1/4: $d1"
+    fi
+    # and the pipelined schedule's own golden digest (latency 1)
+    p1=$(cargo run --release --quiet -- fleet --streams 2 --windows 4 \
+        --workers 1 --feedback-latency 1 --json 2>/dev/null | extract_digest || true)
+    p4=$(cargo run --release --quiet -- fleet --streams 2 --windows 4 \
+        --workers 4 --feedback-latency 1 --json 2>/dev/null | extract_digest || true)
+    if [ -z "$p1" ] || [ -z "$p4" ]; then
+        echo "verify: pipelined fleet run produced no digest — skipping comparison" >&2
+    elif [ "$p1" != "$p4" ]; then
+        echo "verify: PIPELINED FLEET DIGEST DIVERGED ACROSS WORKER COUNTS: $p1 vs $p4" >&2
+        exit 1
+    else
+        echo "pipelined (latency 1) digest invariant across --workers 1/4: $p1"
     fi
 else
     echo "verify: artifacts/CLI unavailable — skipping digest comparison" >&2
