@@ -7,7 +7,9 @@
 
 use acelerador::config::SystemConfig;
 use acelerador::coordinator::{CognitiveLoop, LoopReport};
+use acelerador::fleet::report::Digest;
 use acelerador::testkit::bench::Table;
+use acelerador::trace::{TraceSink, Tracer};
 
 fn script() -> Vec<f64> {
     let mut s = vec![1.0; 8];
@@ -98,6 +100,35 @@ fn main() -> anyhow::Result<()> {
     }
     t3.print();
     println!("(pipelined e2e carries the one-frame feedback delay; wall is the win)");
+
+    // Observability price: the same closed-loop run with the structured
+    // tracer disabled vs armed. The digest column proves tracing is
+    // purely observational; the wall delta is the recording overhead.
+    println!("\n--- tracing overhead (closed loop) ---");
+    let mut t4 = Table::new(&["tracing", "wall ms", "events", "dropped", "digest"]);
+    for traced in [false, true] {
+        let sink = TraceSink::new(1 << 16);
+        let tracer = if traced { Tracer::with_sink(sink.clone()) } else { Tracer::disabled() };
+        let mut cfg = SystemConfig::default();
+        cfg.npu.backbone = "spiking_yolo".into();
+        let mut l = CognitiveLoop::new_traced(&cfg, 42, tracer)?;
+        let t0 = std::time::Instant::now();
+        let r = l.run_script(&script())?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut d = Digest::new();
+        for o in &r.outcomes {
+            d.fold_outcome(o);
+        }
+        t4.row(&[
+            if traced { "on" } else { "off" }.to_string(),
+            format!("{wall_ms:.1}"),
+            sink.len().to_string(),
+            sink.dropped_events().to_string(),
+            format!("{:016x}", d.value()),
+        ]);
+    }
+    t4.print();
+    println!("(identical digests on both rows = tracing never perturbs the loop)");
 
     let lat_npu: f64 = closed.outcomes.iter().map(|o| o.npu_execute_us).sum::<f64>()
         / closed.outcomes.len() as f64;

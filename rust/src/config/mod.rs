@@ -212,6 +212,36 @@ impl RuntimeConfig {
     }
 }
 
+/// Tracing + watchdog configuration (JSON section `"trace"`). Only
+/// consulted when `--trace` enables the sink; thresholds also drive the
+/// watchdog's health verdict in `--json` snapshots and fleet reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    /// Ring-buffer capacity in events (rounded up to a shard multiple);
+    /// on overflow the oldest events are dropped, never blocking.
+    pub buffer_events: usize,
+    /// Watchdog: a Sense/Infer/Decide/Render span longer than this is a
+    /// stalled stage (µs).
+    pub stall_stage_us: u64,
+    /// Watchdog: a request waiting longer than this in the batcher
+    /// queue is an aging queue (µs).
+    pub queue_age_us: u64,
+    /// Watchdog: a gap longer than this between consecutive rounds on a
+    /// carrier (or windows on a stream) is starvation (µs).
+    pub starve_gap_us: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            buffer_events: 65_536,
+            stall_stage_us: 1_000_000,
+            queue_age_us: 200_000,
+            starve_gap_us: 1_000_000,
+        }
+    }
+}
+
 /// Hardware (FPGA) model configuration for `hw::` estimates.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HwConfig {
@@ -243,6 +273,7 @@ pub struct SystemConfig {
     pub loop_: LoopConfig,
     pub fleet: FleetConfig,
     pub runtime: RuntimeConfig,
+    pub trace: TraceConfig,
     pub hw: HwConfig,
 }
 
@@ -318,6 +349,12 @@ impl SystemConfig {
         if let Some(r) = json.get("runtime") {
             read_usize(r, "workers", &mut self.runtime.workers);
         }
+        if let Some(t) = json.get("trace") {
+            read_usize(t, "buffer_events", &mut self.trace.buffer_events);
+            read_u64(t, "stall_stage_us", &mut self.trace.stall_stage_us);
+            read_u64(t, "queue_age_us", &mut self.trace.queue_age_us);
+            read_u64(t, "starve_gap_us", &mut self.trace.starve_gap_us);
+        }
         if let Some(h) = json.get("hw") {
             read_f64(h, "clock_mhz", &mut self.hw.clock_mhz);
             read_f64(h, "pj_per_mac", &mut self.hw.pj_per_mac);
@@ -379,6 +416,15 @@ impl SystemConfig {
         }
         if self.runtime.workers > 1024 {
             bail!("runtime: workers must be <= 1024 (0 = auto)");
+        }
+        if self.trace.buffer_events == 0 {
+            bail!("trace: buffer_events must be > 0");
+        }
+        if self.trace.stall_stage_us == 0
+            || self.trace.queue_age_us == 0
+            || self.trace.starve_gap_us == 0
+        {
+            bail!("trace: watchdog thresholds must be > 0");
         }
         if self.hw.clock_mhz <= 0.0 {
             bail!("hw: clock_mhz must be > 0");
@@ -463,6 +509,15 @@ impl SystemConfig {
             (
                 "runtime",
                 Json::obj(vec![("workers", Json::num(self.runtime.workers as f64))]),
+            ),
+            (
+                "trace",
+                Json::obj(vec![
+                    ("buffer_events", Json::num(self.trace.buffer_events as f64)),
+                    ("stall_stage_us", Json::num(self.trace.stall_stage_us as f64)),
+                    ("queue_age_us", Json::num(self.trace.queue_age_us as f64)),
+                    ("starve_gap_us", Json::num(self.trace.starve_gap_us as f64)),
+                ]),
             ),
             (
                 "hw",
@@ -683,6 +738,27 @@ mod tests {
         cfg.validate().unwrap();
         cfg.runtime.workers = 4096;
         assert!(cfg.validate().is_err(), "absurd worker counts rejected");
+    }
+
+    #[test]
+    fn trace_overlay_and_validation() {
+        let cfg = SystemConfig::default();
+        assert_eq!(cfg.trace.buffer_events, 65_536);
+        let mut cfg = SystemConfig::default();
+        let json = crate::jsonlite::parse(
+            r#"{"trace": {"buffer_events": 1024, "queue_age_us": 50000}}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&json).unwrap();
+        assert_eq!(cfg.trace.buffer_events, 1024);
+        assert_eq!(cfg.trace.queue_age_us, 50_000);
+        assert_eq!(cfg.trace.stall_stage_us, 1_000_000, "untouched keeps default");
+        cfg.validate().unwrap();
+        cfg.trace.buffer_events = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = SystemConfig::default();
+        cfg.trace.starve_gap_us = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -24,6 +24,10 @@ use anyhow::{anyhow, Context, Result};
 use crate::config::NpuConfig;
 use crate::events::voxel::VoxelGrid;
 use crate::runtime::NpuEngine;
+use crate::trace::{
+    Category, Lane, TraceData, Tracer, WindowTraceId, INSTANT_BATCH, SPAN_NPU_EXECUTE,
+    SPAN_NPU_QUEUE,
+};
 
 /// One inference result (per submitted window).
 #[derive(Debug, Clone)]
@@ -45,6 +49,9 @@ struct Request {
     voxel: VoxelGrid,
     submitted: Instant,
     reply: Sender<Result<InferReply>>,
+    /// Causal window identity when the submitting loop traces; `None`
+    /// otherwise. Purely observational — batching never looks at it.
+    trace: Option<WindowTraceId>,
 }
 
 enum Msg {
@@ -75,8 +82,20 @@ impl NpuClient {
     /// Never blocks. If the engine thread is gone the receiver yields an
     /// error carrying the original failure cause.
     pub fn submit(&self, voxel: VoxelGrid) -> Receiver<Result<InferReply>> {
+        self.submit_traced(voxel, None)
+    }
+
+    /// [`NpuClient::submit`] with a causal window tag the engine thread
+    /// records queue-wait and execute spans against. Tag handling is
+    /// observational only: batch composition and reply content are
+    /// identical whether `trace` is set or not.
+    pub fn submit_traced(
+        &self,
+        voxel: VoxelGrid,
+        trace: Option<WindowTraceId>,
+    ) -> Receiver<Result<InferReply>> {
         let (reply_tx, reply_rx) = channel();
-        let req = Request { voxel, submitted: Instant::now(), reply: reply_tx };
+        let req = Request { voxel, submitted: Instant::now(), reply: reply_tx, trace };
         if let Err(send_err) = self.tx.send(Msg::Infer(req)) {
             if let Msg::Infer(req) = send_err.0 {
                 let cause = self.fault_cause();
@@ -129,6 +148,13 @@ impl NpuService {
     /// Spawn the engine thread. Fails fast (synchronously) if the engine
     /// cannot be constructed.
     pub fn start(cfg: &NpuConfig) -> Result<Self> {
+        Self::start_traced(cfg, Tracer::disabled())
+    }
+
+    /// [`NpuService::start`] with a tracer the engine thread uses to
+    /// record queue-wait/execute spans and batch-composition instants on
+    /// the batcher lane (for tagged requests only).
+    pub fn start_traced(cfg: &NpuConfig, tracer: Tracer) -> Result<Self> {
         let (tx, rx) = channel::<Msg>();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let fault: FaultCell = Arc::new(Mutex::new(None));
@@ -136,7 +162,7 @@ impl NpuService {
         let thread_fault = fault.clone();
         let handle = std::thread::Builder::new()
             .name("npu-engine".into())
-            .spawn(move || engine_thread(cfg, rx, ready_tx, thread_fault))
+            .spawn(move || engine_thread(cfg, rx, ready_tx, thread_fault, tracer))
             .context("spawning npu thread")?;
         ready_rx
             .recv()
@@ -178,6 +204,7 @@ fn engine_thread(
     rx: Receiver<Msg>,
     ready: Sender<Result<()>>,
     fault: FaultCell,
+    tracer: Tracer,
 ) {
     let engine = match NpuEngine::new(&cfg.artifacts_dir, &cfg.backbone) {
         Ok(mut e) => {
@@ -230,9 +257,48 @@ fn engine_thread(
         }
 
         let voxels: Vec<&VoxelGrid> = batch.iter().map(|r| &r.voxel).collect();
+        let t_exec0 = tracer.enabled().then(Instant::now);
         match engine.infer(&voxels) {
             Ok(out) => {
                 let n = batch.len();
+                if let Some(t_exec0) = t_exec0 {
+                    let t_exec1 = Instant::now();
+                    let mut announced = false;
+                    for req in batch.iter() {
+                        let Some(tid) = req.trace else { continue };
+                        // queue-wait and execute as async spans on the
+                        // batcher lane: windows overlap there, so sync
+                        // B/E pairs would interleave illegally
+                        tracer.span_async(
+                            SPAN_NPU_QUEUE,
+                            Category::Npu,
+                            tid,
+                            Lane::Batcher,
+                            req.submitted,
+                            t_exec0,
+                            TraceData::None,
+                        );
+                        tracer.span_async(
+                            SPAN_NPU_EXECUTE,
+                            Category::Npu,
+                            tid,
+                            Lane::Batcher,
+                            t_exec0,
+                            t_exec1,
+                            TraceData::Batch { size: n as u32 },
+                        );
+                        if !announced {
+                            announced = true;
+                            tracer.instant(
+                                INSTANT_BATCH,
+                                Category::Npu,
+                                tid,
+                                Lane::Batcher,
+                                TraceData::Batch { size: n as u32 },
+                            );
+                        }
+                    }
+                }
                 for (req, head) in batch.into_iter().zip(out.heads.into_iter()) {
                     let service_us = req.submitted.elapsed().as_secs_f64() * 1e6;
                     let _ = req.reply.send(Ok(InferReply {

@@ -37,6 +37,10 @@ use crate::isp::pipeline::IspPipeline;
 use crate::isp::sensor::SensorModel;
 use crate::metrics::SystemMetrics;
 use crate::runtime::pool::WorkerPool;
+use crate::trace::{
+    self, Category, Lane, TraceCtx, TraceData, Tracer, WindowTraceId, INSTANT_APPLY,
+    INSTANT_PUBLISH, SPAN_WINDOW,
+};
 use crate::util::stats::psnr_u8;
 use crate::util::{ImageU8, SplitMix64};
 
@@ -153,6 +157,10 @@ pub struct CognitiveLoop {
     /// The deterministic worker pool the ISP stage graph bands onto
     /// (owned in single-loop mode, shared across streams in fleet mode).
     pool: Arc<WorkerPool>,
+    /// Trace recording handle (disabled = no-op). Every stage node stamps
+    /// its span with this stream's [`WindowTraceId`]; all events are
+    /// measured-only and excluded from digests.
+    tracer: Tracer,
     pub metrics: SystemMetrics,
 }
 
@@ -160,10 +168,17 @@ impl CognitiveLoop {
     /// Single-loop mode: starts (and owns) a private NPU service and a
     /// worker pool sized by `runtime.workers`.
     pub fn new(cfg: &SystemConfig, scenario_seed: u64) -> Result<Self> {
-        let svc = NpuService::start(&cfg.npu)?;
+        Self::new_traced(cfg, scenario_seed, Tracer::disabled())
+    }
+
+    /// Single-loop mode with tracing: the service thread and the band
+    /// pool record into the same sink the stage nodes use.
+    pub fn new_traced(cfg: &SystemConfig, scenario_seed: u64, tracer: Tracer) -> Result<Self> {
+        let svc = NpuService::start_traced(&cfg.npu, tracer.clone())?;
         let client = svc.client();
         let pool = WorkerPool::new(cfg.runtime.resolve_workers());
-        Ok(Self::assemble(cfg, scenario_seed, client, Some(svc), pool))
+        pool.set_tracer(tracer.clone());
+        Ok(Self::assemble(cfg, scenario_seed, client, Some(svc), pool, tracer))
     }
 
     /// Fleet mode: drive this loop's inference through a shared NPU
@@ -175,7 +190,20 @@ impl CognitiveLoop {
         npu: NpuClient,
         pool: Arc<WorkerPool>,
     ) -> Self {
-        Self::assemble(cfg, scenario_seed, npu, None, pool)
+        Self::with_shared_traced(cfg, scenario_seed, npu, pool, Tracer::disabled())
+    }
+
+    /// Fleet mode with tracing: the caller stamps the tracer with this
+    /// stream's id (`Tracer::for_stream`) and owns sink setup on the
+    /// shared service and pool.
+    pub fn with_shared_traced(
+        cfg: &SystemConfig,
+        scenario_seed: u64,
+        npu: NpuClient,
+        pool: Arc<WorkerPool>,
+        tracer: Tracer,
+    ) -> Self {
+        Self::assemble(cfg, scenario_seed, npu, None, pool, tracer)
     }
 
     fn assemble(
@@ -184,6 +212,7 @@ impl CognitiveLoop {
         npu: NpuClient,
         service: Option<NpuService>,
         pool: Arc<WorkerPool>,
+        tracer: Tracer,
     ) -> Self {
         let mut isp = IspPipeline::new(&cfg.isp);
         isp.set_worker_pool(pool.clone());
@@ -212,6 +241,7 @@ impl CognitiveLoop {
             npu,
             _npu_service: service,
             pool,
+            tracer,
             metrics: SystemMetrics::new(),
         };
         loop_.metrics.pipeline.depth.set(latency);
@@ -221,6 +251,18 @@ impl CognitiveLoop {
     /// The configured feedback latency (frames) — the bus register depth.
     pub fn feedback_latency(&self) -> u64 {
         self.feedback_latency
+    }
+
+    /// This loop's trace handle (disabled unless constructed `_traced`).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// The stage-span lane for this stream — each stream gets its own
+    /// export track so its sequential stage spans nest cleanly even when
+    /// several streams share a carrier thread.
+    fn stream_lane(&self) -> Lane {
+        Lane::Stream(self.tracer.stream())
     }
 
     // --- stage nodes ------------------------------------------------------
@@ -256,6 +298,7 @@ impl CognitiveLoop {
         let vox = voxelize_at(&win.events, win.start_us);
         let frame = SenseFrame {
             wid,
+            trace: self.tracer.id(wid),
             window_start: win.start_us,
             illum: self.sim.illum,
             events_total: win.events.len(),
@@ -264,16 +307,33 @@ impl CognitiveLoop {
             clean_frame,
             t0,
         };
+        let t1 = Instant::now();
         self.metrics
             .pipeline
-            .record_stage(PipeStage::Sense, t0.elapsed().as_secs_f64() * 1e6);
+            .record_stage(PipeStage::Sense, (t1 - t0).as_secs_f64() * 1e6);
+        self.tracer.span(
+            PipeStage::Sense.name(),
+            Category::Stage,
+            frame.trace,
+            self.stream_lane(),
+            t0,
+            t1,
+            TraceData::None,
+        );
         (frame, vox)
     }
 
-    /// Infer (submit half): hand the voxel grid to the NPU batcher.
-    /// Non-blocking — the service thread fuses and executes.
-    pub(crate) fn submit_infer(&mut self, vox: VoxelGrid) -> Receiver<Result<InferReply>> {
-        self.npu.submit(vox)
+    /// Infer (submit half): hand the voxel grid to the NPU batcher,
+    /// tagged with the window's trace id so the batcher can attribute its
+    /// queue-wait and execute spans. Non-blocking — the service thread
+    /// fuses and executes.
+    pub(crate) fn submit_infer(
+        &mut self,
+        vox: VoxelGrid,
+        tid: WindowTraceId,
+    ) -> Receiver<Result<InferReply>> {
+        let tag = if self.tracer.enabled() { Some(tid) } else { None };
+        self.npu.submit_traced(vox, tag)
     }
 
     /// Infer (collect half): wait for the reply and fold its metrics in.
@@ -286,8 +346,23 @@ impl CognitiveLoop {
     pub(crate) fn collect_infer(
         &mut self,
         rx: Receiver<Result<InferReply>>,
+        tid: WindowTraceId,
     ) -> Result<InferReply> {
+        // the carrier-side Infer span is the blocking collect wait (the
+        // service span itself is traced at the batcher, per request)
+        let t_wait = self.tracer.enabled().then(Instant::now);
         let reply = self.npu.recv_reply(rx)?;
+        if let Some(t0) = t_wait {
+            self.tracer.span(
+                PipeStage::Infer.name(),
+                Category::Stage,
+                tid,
+                self.stream_lane(),
+                t0,
+                Instant::now(),
+                TraceData::Batch { size: reply.batch_size as u32 },
+            );
+        }
         self.metrics
             .pipeline
             .record_stage(PipeStage::Infer, reply.service_us);
@@ -322,16 +397,34 @@ impl CognitiveLoop {
         };
         let new_params = self.policy.step(self.isp.params(), &obs);
         if self.closed_loop {
+            let seq = self.policy.updates;
             self.bus.publish(ParamUpdate {
-                seq: self.policy.updates,
+                seq,
                 source_window: frame.wid,
                 params: new_params,
             });
+            self.tracer.instant(
+                INSTANT_PUBLISH,
+                Category::Param,
+                frame.trace,
+                self.stream_lane(),
+                TraceData::Param { seq, superseded: 0 },
+            );
         }
         self.sync.push_window(frame.wid, frame.window_start + spec::WINDOW_US);
+        let t1 = Instant::now();
         self.metrics
             .pipeline
-            .record_stage(PipeStage::Decide, t.elapsed().as_secs_f64() * 1e6);
+            .record_stage(PipeStage::Decide, (t1 - t).as_secs_f64() * 1e6);
+        self.tracer.span(
+            PipeStage::Decide.name(),
+            Category::Stage,
+            frame.trace,
+            self.stream_lane(),
+            t,
+            t1,
+            TraceData::None,
+        );
         dets
     }
 
@@ -340,6 +433,14 @@ impl CognitiveLoop {
     /// score PSNR against the clean reference.
     pub(crate) fn render(&mut self, frame: &mut SenseFrame) -> RenderOut {
         let t_stage = Instant::now();
+        // publish this window's (id, stage) on the carrier thread so the
+        // worker pool can parent the band-job spans the ISP fans out
+        let _ctx = self.tracer.enabled().then(|| {
+            trace::ScopedCtx::enter(TraceCtx {
+                id: frame.trace,
+                stage: PipeStage::Render as u8,
+            })
+        });
         // The sensor sees the *scene* illumination (exposure errors and
         // all); the ISP must undo it using the parameters the NPU
         // commanded. Quality reference first ((gamma-encoded) clean
@@ -356,7 +457,19 @@ impl CognitiveLoop {
         let reference = lut.apply_rgb(&clean_rgb);
 
         let t_isp = Instant::now();
+        let superseded_before = self.bus.superseded;
         if let Some(update) = self.bus.take_for(frame.wid) {
+            let seq = update.seq;
+            self.tracer.instant(
+                INSTANT_APPLY,
+                Category::Param,
+                frame.trace,
+                self.stream_lane(),
+                TraceData::Param {
+                    seq,
+                    superseded: self.bus.superseded - superseded_before,
+                },
+            );
             let mut p = update.params;
             // Camera-side actuation (paper §I: the NPU "dynamically
             // reconfigures the RGB camera parameters"): exposure goes to
@@ -384,9 +497,19 @@ impl CognitiveLoop {
         self.metrics.isp_latency.record_us(isp_us as u64);
         self.metrics.isp_stages.record(&report.stage_times);
         self.sync.push_frame(frame.wid, frame.window_start + spec::WINDOW_US);
+        let t1 = Instant::now();
         self.metrics
             .pipeline
-            .record_stage(PipeStage::Render, t_stage.elapsed().as_secs_f64() * 1e6);
+            .record_stage(PipeStage::Render, (t1 - t_stage).as_secs_f64() * 1e6);
+        self.tracer.span(
+            PipeStage::Render.name(),
+            Category::Stage,
+            frame.trace,
+            self.stream_lane(),
+            t_stage,
+            t1,
+            TraceData::None,
+        );
         RenderOut {
             psnr_db: psnr,
             mean_luma: report.mean_luma,
@@ -404,8 +527,19 @@ impl CognitiveLoop {
         reply: &InferReply,
         render: RenderOut,
     ) -> WindowOutcome {
-        let e2e_us = frame.t0.elapsed().as_secs_f64() * 1e6;
+        let t_end = Instant::now();
+        let e2e_us = (t_end - frame.t0).as_secs_f64() * 1e6;
         self.metrics.e2e_latency.record_us(e2e_us as u64);
+        // the whole-window async span: sense start → outcome assembly
+        self.tracer.span_async(
+            SPAN_WINDOW,
+            Category::Window,
+            frame.trace,
+            self.stream_lane(),
+            frame.t0,
+            t_end,
+            TraceData::None,
+        );
         // measured-only gauges (shared pool totals; excluded from digests)
         self.metrics.pool.record(&self.pool.stats());
         WindowOutcome {
@@ -437,8 +571,8 @@ impl CognitiveLoop {
             "serial step() while a pipelined window is in flight"
         );
         let (mut frame, vox) = self.sense(illum);
-        let rx = self.submit_infer(vox);
-        let reply = self.collect_infer(rx)?;
+        let rx = self.submit_infer(vox, frame.trace);
+        let reply = self.collect_infer(rx, frame.trace)?;
         let dets = self.decide(&frame, &reply);
         let render = self.render(&mut frame);
         let out = self.outcome(&frame, dets, &reply, render);

@@ -122,6 +122,11 @@ impl<T> StageLink<T> {
 #[derive(Debug)]
 pub(crate) struct SenseFrame {
     pub wid: u64,
+    /// Causal trace identity (stream + window) — stamped at Sense and
+    /// carried through every downstream stage, the NPU batcher, and the
+    /// band jobs they fan out, so the trace export can attribute every
+    /// span to the window that caused it.
+    pub trace: crate::trace::WindowTraceId,
     pub window_start: i64,
     /// The window's target illumination (the sim's post-window value),
     /// captured at sense time so a look-ahead Sense of window t+1 cannot
@@ -224,7 +229,7 @@ impl CognitiveLoop {
             // overlaps this window's NPU execute
             None => {
                 let (frame, vox) = self.sense(illum);
-                let rx = self.submit_infer(vox);
+                let rx = self.submit_infer(vox, frame.trace);
                 PendingWindow { frame, rx }
             }
         };
@@ -235,7 +240,7 @@ impl CognitiveLoop {
         );
         if let Some(ni) = next_illum {
             let (frame, vox) = self.sense(ni);
-            let rx = self.submit_infer(vox);
+            let rx = self.submit_infer(vox, frame.trace);
             self.pipeline.inflight.push(PendingWindow { frame, rx })?;
         }
         let inflight = 1 + self.pipeline.inflight.len();
@@ -245,7 +250,7 @@ impl CognitiveLoop {
 
         let mut frame = cur.frame;
         let render = self.render(&mut frame);
-        let reply = self.collect_infer(cur.rx)?;
+        let reply = self.collect_infer(cur.rx, frame.trace)?;
         let dets = self.decide(&frame, &reply);
         let out = self.outcome(&frame, dets, &reply, render);
         self.metrics

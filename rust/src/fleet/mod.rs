@@ -41,6 +41,8 @@ use crate::config::SystemConfig;
 use crate::coordinator::batcher::{NpuClient, NpuService};
 use crate::coordinator::CognitiveLoop;
 use crate::runtime::pool::{band_bounds, WorkerPool};
+use crate::trace::watchdog::{HealthReport, Watchdog};
+use crate::trace::{Category, Lane, TraceData, Tracer, WindowTraceId, SPAN_ROUND};
 
 pub use profile::{build_profiles, ScenarioKind, StreamProfile};
 pub use report::{FleetReport, StreamSummary};
@@ -162,6 +164,13 @@ impl Drop for GatePermit<'_> {
 /// config-derived, so the determinism digest is identical for any
 /// `--workers` value (proven by `tests/parallel_parity.rs`).
 pub fn run_fleet(cfg: &SystemConfig) -> Result<FleetReport> {
+    run_fleet_with(cfg, Tracer::disabled())
+}
+
+/// [`run_fleet`] with a tracer: streams trace under their own stream
+/// ids, carriers record per-round spans, and the report's `health` row
+/// is assessed from the collected event stream by the [`Watchdog`].
+pub fn run_fleet_with(cfg: &SystemConfig, tracer: Tracer) -> Result<FleetReport> {
     cfg.validate()?;
     let fleet = cfg.fleet.clone();
     let profiles = build_profiles(&fleet)?;
@@ -188,11 +197,12 @@ pub fn run_fleet(cfg: &SystemConfig) -> Result<FleetReport> {
         run_cfg.npu.batch_timeout_us = run_cfg.npu.batch_timeout_us.max(LOCKSTEP_GATHER_US);
     }
 
-    let svc = NpuService::start(&run_cfg.npu)?;
+    let svc = NpuService::start_traced(&run_cfg.npu, tracer.clone())?;
     // ONE shared band pool for every stream's ISP (and any twin work) —
     // total band threads stay bounded by runtime.workers no matter how
     // many streams the fleet serves.
     let band_pool = WorkerPool::new(workers);
+    band_pool.set_tracer(tracer.clone());
     let barrier = fleet
         .lockstep
         .then(|| Arc::new(RoundBarrier::new(carriers)));
@@ -220,9 +230,12 @@ pub fn run_fleet(cfg: &SystemConfig) -> Result<FleetReport> {
         let gate = gate.clone();
         let abort_c = abort.clone();
         let pool_c = band_pool.clone();
+        let tracer_c = tracer.clone();
         let spawned = std::thread::Builder::new()
             .name(format!("fleet-carrier-{carrier_id}"))
-            .spawn(move || run_carrier(cfg, profs, client, barrier_c, gate, abort_c, pool_c));
+            .spawn(move || {
+                run_carrier(cfg, profs, client, barrier_c, gate, abort_c, pool_c, carrier_id, tracer_c)
+            });
         match spawned {
             Ok(handle) => handles.push(handle),
             Err(e) => {
@@ -255,7 +268,13 @@ pub fn run_fleet(cfg: &SystemConfig) -> Result<FleetReport> {
     if let Some(e) = first_err {
         return Err(e.context("fleet run failed"));
     }
-    Ok(FleetReport::assemble(fleet, summaries, wall_s))
+    let health = match tracer.sink() {
+        Some(sink) => {
+            Watchdog::from_config(&cfg.trace).assess(&sink.events(), sink.dropped_events())
+        }
+        None => HealthReport::unknown(),
+    };
+    Ok(FleetReport::assemble(fleet, summaries, wall_s).with_health(health))
 }
 
 /// One carrier thread: a fixed set of streams, each a full cognitive
@@ -272,6 +291,7 @@ pub fn run_fleet(cfg: &SystemConfig) -> Result<FleetReport> {
 /// fleet report show the overlap. Stream results stay
 /// carrier-assignment independent either way (the pipelined schedule
 /// is a fixed program order per stream).
+#[allow(clippy::too_many_arguments)]
 fn run_carrier(
     cfg: SystemConfig,
     profs: Vec<StreamProfile>,
@@ -280,6 +300,8 @@ fn run_carrier(
     gate: Option<Arc<AdmissionGate>>,
     abort: Arc<AtomicBool>,
     band_pool: Arc<WorkerPool>,
+    carrier_id: usize,
+    tracer: Tracer,
 ) -> Result<Vec<StreamSummary>> {
     struct StreamState {
         prof: StreamProfile,
@@ -299,8 +321,13 @@ fn run_carrier(
             .stages
             .intersect(prof.kind.default_stage_mask())
             .sanitized();
-        let mut l =
-            CognitiveLoop::with_shared(&cfg, prof.seed, client.clone(), band_pool.clone());
+        let mut l = CognitiveLoop::with_shared_traced(
+            &cfg,
+            prof.seed,
+            client.clone(),
+            band_pool.clone(),
+            tracer.for_stream(prof.stream_id as u32),
+        );
         // Load-shedding signal for the control policy: the configured
         // oversubscription ratio, NOT a live gate sample. Admission set
         // below the stream count means sustained permit contention by
@@ -330,6 +357,10 @@ fn run_carrier(
         if abort.load(Ordering::SeqCst) {
             break;
         }
+        // one sync span per window round on this carrier's lane — the
+        // watchdog's carrier-starvation check measures the gaps between
+        // consecutive rounds
+        let t_round = tracer.enabled().then(Instant::now);
         for st in streams.iter_mut() {
             if abort.load(Ordering::SeqCst) {
                 break 'rounds;
@@ -382,6 +413,17 @@ fn run_carrier(
                 st.prof.kind.name()
             )));
             break 'rounds;
+        }
+        if let Some(t0) = t_round {
+            tracer.span(
+                SPAN_ROUND,
+                Category::Carrier,
+                WindowTraceId { stream: carrier_id as u32, window: w as u64 },
+                Lane::Carrier(carrier_id as u16),
+                t0,
+                Instant::now(),
+                TraceData::None,
+            );
         }
     }
 

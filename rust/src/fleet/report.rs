@@ -18,6 +18,7 @@ use crate::isp::graph::STAGE_NAMES;
 use crate::jsonlite::Json;
 use crate::metrics::SystemMetrics;
 use crate::testkit::bench::Table;
+use crate::trace::watchdog::HealthReport;
 use crate::util::stats::Summary;
 
 use super::profile::StreamProfile;
@@ -137,11 +138,11 @@ impl StreamSummary {
     }
 
     pub fn to_json(&self) -> Json {
-        let (p50, p99) = if self.service_us.is_empty() {
-            (0.0, 0.0)
+        let (p50, p95, p99) = if self.service_us.is_empty() {
+            (0.0, 0.0, 0.0)
         } else {
             let s = self.service_summary();
-            (s.pct(50.0), s.pct(99.0))
+            (s.pct(50.0), s.pct(95.0), s.pct(99.0))
         };
         Json::obj(vec![
             ("stream_id", Json::num(self.stream_id as f64)),
@@ -154,6 +155,7 @@ impl StreamSummary {
             ("final_exposure", Json::num(self.final_exposure)),
             ("mean_occupancy", Json::num(self.mean_occupancy)),
             ("service_p50_us", Json::num(p50)),
+            ("service_p95_us", Json::num(p95)),
             ("service_p99_us", Json::num(p99)),
             ("digest", Json::str(&format!("{:016x}", self.digest))),
             ("metrics", self.metrics.clone()),
@@ -169,12 +171,22 @@ pub struct FleetReport {
     pub streams: Vec<StreamSummary>,
     /// Wall-clock duration of the parallel phase (seconds).
     pub wall_s: f64,
+    /// Watchdog assessment of the run's trace-event stream (measured;
+    /// `unknown` when tracing was off — never part of the digest).
+    pub health: HealthReport,
 }
 
 impl FleetReport {
     pub fn assemble(cfg: FleetConfig, mut streams: Vec<StreamSummary>, wall_s: f64) -> Self {
         streams.sort_by_key(|s| s.stream_id);
-        Self { cfg, streams, wall_s }
+        Self { cfg, streams, wall_s, health: HealthReport::unknown() }
+    }
+
+    /// Attach the watchdog's assessment (set by
+    /// [`super::run_fleet_with`] when a tracer is live).
+    pub fn with_health(mut self, health: HealthReport) -> Self {
+        self.health = health;
+        self
     }
 
     pub fn total_windows(&self) -> usize {
@@ -424,7 +436,11 @@ impl FleetReport {
 
     pub fn to_json(&self) -> Json {
         let s = self.service_all();
-        let (p50, p99) = if s.count() == 0 { (0.0, 0.0) } else { (s.pct(50.0), s.pct(99.0)) };
+        let (p50, p95, p99) = if s.count() == 0 {
+            (0.0, 0.0, 0.0)
+        } else {
+            (s.pct(50.0), s.pct(95.0), s.pct(99.0))
+        };
         Json::obj(vec![
             (
                 "fleet",
@@ -447,6 +463,7 @@ impl FleetReport {
                     ("windows_per_sec", Json::num(self.windows_per_sec())),
                     ("mean_occupancy", Json::num(self.mean_occupancy())),
                     ("service_p50_us", Json::num(p50)),
+                    ("service_p95_us", Json::num(p95)),
                     ("service_p99_us", Json::num(p99)),
                     ("digest", Json::str(&self.digest_hex())),
                     ("pool", {
@@ -519,6 +536,7 @@ impl FleetReport {
                     ),
                 ]),
             ),
+            ("health", self.health.to_json()),
             (
                 "streams",
                 Json::arr(self.streams.iter().map(|s| s.to_json()).collect()),
@@ -530,14 +548,14 @@ impl FleetReport {
     pub fn render(&self) -> String {
         let mut table = Table::new(&[
             "stream", "profile", "windows", "events", "dets", "psnr_db", "expo", "occ",
-            "p50_us", "p99_us",
+            "p50_us", "p95_us", "p99_us",
         ]);
         for s in &self.streams {
-            let (p50, p99) = if s.service_us.is_empty() {
-                (0.0, 0.0)
+            let (p50, p95, p99) = if s.service_us.is_empty() {
+                (0.0, 0.0, 0.0)
             } else {
                 let sum = s.service_summary();
-                (sum.pct(50.0), sum.pct(99.0))
+                (sum.pct(50.0), sum.pct(95.0), sum.pct(99.0))
             };
             table.row(&[
                 s.stream_id.to_string(),
@@ -549,6 +567,7 @@ impl FleetReport {
                 format!("{:.2}", s.final_exposure),
                 format!("{:.2}", s.mean_occupancy),
                 format!("{p50:.0}"),
+                format!("{p95:.0}"),
                 format!("{p99:.0}"),
             ]);
         }
@@ -586,9 +605,10 @@ impl FleetReport {
         let (workers, runs, tasks, utilization) = self.pool_row();
         format!(
             "{}\nfleet: {} streams x {} windows in {:.2}s = {:.1} windows/s\n\
-             occupancy {:.2} | service p50 {:.0}µs p99 {:.0}µs | digest {}\n\
+             occupancy {:.2} | service p50 {:.0}µs p95 {:.0}µs p99 {:.0}µs | digest {}\n\
              pool: {workers} workers, {runs} parallel runs, {tasks} band tasks, \
              {:.0}% utilization\n\
+             health: {}\n\
              \npipeline dataflow (feedback latency {} frames; occupancy = stage busy /\n\
              tick wall — pipelined stages sum above 1.0):\n{}\
              \nper-stage ISP timing (frame-weighted means across streams):\n{}\
@@ -600,9 +620,11 @@ impl FleetReport {
             self.windows_per_sec(),
             self.mean_occupancy(),
             self.service_pct_us(50.0),
+            self.service_pct_us(95.0),
             self.service_pct_us(99.0),
             self.digest_hex(),
             100.0 * utilization,
+            self.health.render_line(),
             self.pipeline_depth(),
             pipe_table.render(),
             stage_table.render(),
@@ -713,6 +735,23 @@ mod tests {
         assert_eq!(
             back.get("streams").unwrap().as_arr().unwrap().len(),
             1
+        );
+        // p50/p95/p99 surface consistently in the aggregate and per stream
+        let agg = back.get("aggregate").unwrap();
+        for k in ["service_p50_us", "service_p95_us", "service_p99_us"] {
+            assert!(agg.get(k).and_then(Json::as_f64).is_some(), "aggregate missing {k}");
+            assert!(
+                back.get("streams").unwrap().as_arr().unwrap()[0]
+                    .get(k)
+                    .and_then(Json::as_f64)
+                    .is_some(),
+                "stream summary missing {k}"
+            );
+        }
+        // health always present; unknown without a tracer
+        assert_eq!(
+            back.get("health").unwrap().get("state").unwrap().as_str(),
+            Some("unknown")
         );
     }
 

@@ -98,6 +98,15 @@ impl Json {
         Json::Str(s.to_string())
     }
 
+    /// Insert or replace a key on an object — used to graft computed
+    /// sections (e.g. `health`, `telemetry`) onto an existing snapshot.
+    /// No-op on non-objects.
+    pub fn set(&mut self, key: &str, v: Json) {
+        if let Json::Obj(m) = self {
+            m.insert(key.to_string(), v);
+        }
+    }
+
     // ---- serialization --------------------------------------------------
 
     pub fn to_string(&self) -> String {
@@ -415,6 +424,18 @@ mod tests {
     fn integers_print_without_fraction() {
         assert_eq!(Json::num(5.0).to_string(), "5");
         assert_eq!(Json::num(5.5).to_string(), "5.5");
+    }
+
+    #[test]
+    fn set_inserts_and_replaces_on_objects() {
+        let mut j = Json::obj(vec![("a", Json::num(1.0))]);
+        j.set("b", Json::str("x"));
+        j.set("a", Json::num(2.0));
+        assert_eq!(j.get("b").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("a").unwrap().as_f64(), Some(2.0));
+        let mut n = Json::num(1.0);
+        n.set("k", Json::Null); // no-op, no panic
+        assert_eq!(n, Json::num(1.0));
     }
 
     #[test]

@@ -69,7 +69,9 @@ pub mod jsonlite;
 pub mod metrics;
 pub mod runtime;
 pub mod snn;
+pub mod telemetry;
 pub mod testkit;
+pub mod trace;
 pub mod util;
 
 /// Crate-wide result alias (anyhow is the only error dependency).

@@ -26,6 +26,8 @@ use acelerador::isp::pipeline::IspPipeline;
 use acelerador::isp::sensor::SensorModel;
 use acelerador::runtime::NpuEngine;
 use acelerador::testkit::bench::Table;
+use acelerador::trace::watchdog::{HealthReport, Watchdog};
+use acelerador::trace::{chrome, TraceSink, Tracer};
 use acelerador::util::stats::psnr_u8;
 use acelerador::util::{ImageU8, SplitMix64};
 use anyhow::Result;
@@ -53,6 +55,7 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "sparse-threshold", help: "SNN activity-adaptive dispatch threshold: spike rate (0..1) above which the NPU plans a layer onto the dense kernel instead of the event-driven sparse path (outputs are identical either way; drives the sparse/dense split reported in metrics and the fleet report)", is_switch: false, default: None },
         FlagSpec { name: "workers", help: "deterministic worker-pool width for ISP row bands and SNN channel bands (0 = available_parallelism, 1 = inline scalar path; outputs are bit-identical for any value)", is_switch: false, default: None },
         FlagSpec { name: "feedback-latency", help: "parameter-bus feedback-latency register in frames: 0 = serial schedule (decide and apply inside the same window, bit-exact with the classic loop), >= 1 = pipelined schedule (window t's ISP render overlaps its NPU inference; commands land latency frame boundaries after their source window). Each value has its own deterministic digest", is_switch: false, default: None },
+        FlagSpec { name: "trace", help: "run/fleet: write a Chrome trace-event JSON file (open in Perfetto or chrome://tracing) with per-window Sense/Infer/Decide/Render spans, NPU queue/execute spans, and band-job child spans, then print a span summary and the watchdog health line. Tracing is observational: digests are bit-identical with and without it", is_switch: false, default: None },
     ]
 }
 
@@ -91,11 +94,58 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     Ok(cfg)
 }
 
+/// `--trace <path>` setup shared by run/fleet: a bounded sink plus a
+/// tracer feeding it, or a disabled tracer when the flag is absent.
+fn make_tracer(
+    args: &Args,
+    cfg: &SystemConfig,
+) -> (Option<String>, Option<std::sync::Arc<TraceSink>>, Tracer) {
+    match args.get("trace") {
+        Some(path) => {
+            let sink = TraceSink::new(cfg.trace.buffer_events);
+            let tracer = Tracer::with_sink(sink.clone());
+            (Some(path.to_string()), Some(sink), tracer)
+        }
+        None => (None, None, Tracer::disabled()),
+    }
+}
+
+/// Serialize the sink as Chrome trace-event JSON (plus grafted extra
+/// sections) to `path`.
+fn write_trace(
+    path: &str,
+    sink: &TraceSink,
+    extra: Vec<(&str, acelerador::jsonlite::Json)>,
+) -> Result<()> {
+    let doc = chrome::export(sink, extra);
+    std::fs::write(path, doc.to_string_pretty())
+        .map_err(|e| anyhow::anyhow!("writing trace to {path}: {e}"))?;
+    Ok(())
+}
+
+/// Compact per-span rollup printed after a traced run.
+fn print_trace_summary(sink: &TraceSink, health: &HealthReport) {
+    let mut t = Table::new(&["cat", "span", "count", "total_us", "max_us"]);
+    for r in chrome::summary(&sink.events()) {
+        t.row(&[
+            r.cat.to_string(),
+            r.name.to_string(),
+            r.count.to_string(),
+            format!("{:.0}", r.total_us),
+            format!("{:.0}", r.max_us),
+        ]);
+    }
+    println!("\ntrace summary ({} events, {} dropped):", sink.len(), sink.dropped_events());
+    t.print();
+    println!("health: {}", health.render_line());
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let windows = args.get_usize("windows")?;
     let seed = args.get_u64("seed")?;
-    let mut l = CognitiveLoop::new(&cfg, seed)?;
+    let (trace_out, sink, tracer) = make_tracer(args, &cfg);
+    let mut l = CognitiveLoop::new_traced(&cfg, seed, tracer)?;
     l.closed_loop = !args.has("open-loop");
     if !args.has("json") {
         println!(
@@ -117,9 +167,28 @@ fn cmd_run(args: &Args) -> Result<()> {
         });
     }
     let report = l.run_script(&script)?;
+    let health = match &sink {
+        Some(s) => Watchdog::from_config(&cfg.trace).assess(&s.events(), s.dropped_events()),
+        None => HealthReport::unknown(),
+    };
+    if let (Some(path), Some(s)) = (&trace_out, &sink) {
+        write_trace(
+            path,
+            s,
+            vec![
+                ("telemetry", l.metrics.registry().snapshot()),
+                ("health", health.to_json()),
+            ],
+        )?;
+        if !args.has("json") {
+            println!("trace: {} events ({} dropped) -> {path}", s.len(), s.dropped_events());
+        }
+    }
     if args.has("json") {
         // machine-readable only: metrics snapshot, no tables/headers
-        println!("{}", l.metrics.snapshot().to_string_pretty());
+        let mut snap = l.metrics.snapshot();
+        snap.set("health", health.to_json());
+        println!("{}", snap.to_string_pretty());
         return Ok(());
     }
     let mut table = Table::new(&[
@@ -141,6 +210,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     table.print();
     println!("\n{}", l.metrics.report());
+    if let Some(s) = &sink {
+        print_trace_summary(s, &health);
+    }
     Ok(())
 }
 
@@ -178,11 +250,21 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             cfg.loop_.feedback_latency
         );
     }
-    let report = fleet::run_fleet(&cfg)?;
+    let (trace_out, sink, tracer) = make_tracer(args, &cfg);
+    let report = fleet::run_fleet_with(&cfg, tracer)?;
+    if let (Some(path), Some(s)) = (&trace_out, &sink) {
+        write_trace(path, s, vec![("health", report.health.to_json())])?;
+        if !args.has("json") {
+            println!("trace: {} events ({} dropped) -> {path}", s.len(), s.dropped_events());
+        }
+    }
     if args.has("json") {
         println!("{}", report.to_json().to_string_pretty());
     } else {
         report.print();
+        if let Some(s) = &sink {
+            print_trace_summary(s, &report.health);
+        }
     }
     Ok(())
 }

@@ -474,6 +474,9 @@ impl PoolMetrics {
     }
 }
 
+/// JSON key of the unified telemetry-registry export.
+pub const TELEMETRY_KEY: &str = "telemetry";
+
 /// JSON key of the pipeline-dataflow export.
 pub const PIPELINE_KEY: &str = "pipeline";
 pub const PIPE_KEY_WINDOWS: &str = "windows";
@@ -668,8 +671,67 @@ impl SystemMetrics {
         )
     }
 
+    /// Flatten every counter/gauge/histogram into the unified
+    /// [`telemetry::Registry`](crate::telemetry::Registry) under the
+    /// `subsystem.object.metric` naming scheme — the single view that
+    /// feeds `--json` (under `"telemetry"`), the Chrome trace export,
+    /// and the serving plane's future `/metrics`.
+    pub fn registry(&self) -> crate::telemetry::Registry {
+        let mut r = crate::telemetry::Registry::new();
+        r.counter("loop.windows_in", self.windows_in.get());
+        r.counter("npu.batches_executed", self.batches_executed.get());
+        r.counter("detect.detections_out", self.detections_out.get());
+        r.counter("isp.frames", self.isp_frames.get());
+        r.counter("isp.param_updates", self.isp_param_updates.get());
+        r.gauge("npu.queue_depth", self.queue_depth.get() as f64);
+        for (name, h) in [
+            ("latency.npu", &self.npu_latency),
+            ("latency.e2e", &self.e2e_latency),
+            ("latency.isp", &self.isp_latency),
+        ] {
+            r.histogram(
+                name,
+                h.count(),
+                h.mean_us(),
+                h.pct_us(50.0),
+                h.pct_us(95.0),
+                h.pct_us(99.0),
+            );
+        }
+        for (i, n) in STAGE_NAMES.iter().enumerate() {
+            r.counter(format!("isp.stage.{n}.frames"), self.isp_stages.frames(i));
+            r.counter(format!("isp.stage.{n}.bypassed"), self.isp_stages.bypassed(i));
+            r.gauge(format!("isp.stage.{n}.mean_us"), self.isp_stages.mean_us(i));
+        }
+        for i in 0..self.snn_layers.layers() {
+            r.counter(format!("snn.layer{i}.windows"), self.snn_layers.windows(i));
+            r.counter(format!("snn.layer{i}.sparse"), self.snn_layers.sparse(i));
+            r.counter(format!("snn.layer{i}.dense"), self.snn_layers.dense(i));
+            r.gauge(format!("snn.layer{i}.mean_rate"), self.snn_layers.mean_rate(i));
+        }
+        r.gauge("pool.workers", self.pool.workers.get() as f64);
+        r.gauge("pool.runs", self.pool.runs.get() as f64);
+        r.gauge("pool.tasks", self.pool.tasks.get() as f64);
+        r.gauge("pool.busy_us", self.pool.busy_us.get() as f64);
+        r.gauge("pool.span_us", self.pool.span_us.get() as f64);
+        r.gauge("pool.utilization", self.pool.utilization());
+        r.gauge("pipe.depth", self.pipeline.depth.get() as f64);
+        r.gauge("pipe.inflight_peak", self.pipeline.inflight_peak.get() as f64);
+        r.gauge("pipe.ticks", self.pipeline.ticks() as f64);
+        r.gauge("pipe.span_us", self.pipeline.span_us());
+        for (i, n) in PIPE_STAGE_NAMES.iter().enumerate() {
+            r.counter(format!("pipe.stage.{n}.windows"), self.pipeline.windows(i));
+            r.gauge(format!("pipe.stage.{n}.mean_us"), self.pipeline.mean_us(i));
+            r.gauge(format!("pipe.stage.{n}.occupancy"), self.pipeline.occupancy(i));
+        }
+        r
+    }
+
     /// Export every counter/gauge/histogram as one [`Json`] object —
-    /// the machine-readable twin of [`SystemMetrics::report`].
+    /// the machine-readable twin of [`SystemMetrics::report`]. The
+    /// structured sections stay (fleet-report rows consume their keys);
+    /// `"telemetry"` carries the same data flattened through the
+    /// unified registry.
     pub fn snapshot(&self) -> Json {
         Json::obj(vec![
             (
@@ -698,6 +760,7 @@ impl SystemMetrics {
             (SNN_LAYERS_KEY, self.snn_layers.snapshot()),
             (POOL_KEY, self.pool.snapshot()),
             (PIPELINE_KEY, self.pipeline.snapshot()),
+            (TELEMETRY_KEY, self.registry().snapshot()),
         ])
     }
 }
@@ -964,6 +1027,48 @@ mod tests {
             s.get("p99_us").expect("hist p99_us key").as_f64(),
             Some(h.pct_us(99.0) as f64)
         );
+    }
+
+    #[test]
+    fn registry_flattens_every_subsystem() {
+        let m = SystemMetrics::new();
+        m.windows_in.add(5);
+        m.npu_latency.record_us(300);
+        m.snn_layers.record(&[0.1], &[true]);
+        m.pipeline.record_stage(PipeStage::Sense, 100.0);
+        let r = m.registry();
+        use crate::telemetry::MetricValue;
+        match &r.get("loop.windows_in").expect("loop.windows_in").value {
+            MetricValue::Counter(v) => assert_eq!(*v, 5),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        match &r.get("latency.npu").expect("latency.npu").value {
+            MetricValue::Histogram { count, p50_us, p95_us, p99_us, .. } => {
+                assert_eq!(*count, 1);
+                assert_eq!(*p50_us, m.npu_latency.pct_us(50.0));
+                assert_eq!(*p95_us, m.npu_latency.pct_us(95.0));
+                assert_eq!(*p99_us, m.npu_latency.pct_us(99.0));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        assert!(r.get("snn.layer0.windows").is_some());
+        assert!(r.get("isp.stage.nlm.frames").is_some());
+        assert!(r.get("pipe.stage.sense.windows").is_some());
+        assert!(r.get("pool.utilization").is_some());
+        // the snapshot carries the registry under the shared key
+        let j = m.snapshot();
+        let tel = j.get(TELEMETRY_KEY).expect("snapshot must carry telemetry");
+        assert_eq!(
+            tel.get("counters").unwrap().get("loop.windows_in").unwrap().as_f64(),
+            Some(5.0)
+        );
+        assert!(tel
+            .get("histograms")
+            .unwrap()
+            .get("latency.npu")
+            .unwrap()
+            .get("p95_us")
+            .is_some());
     }
 
     #[test]

@@ -32,9 +32,11 @@
 use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+use crate::trace::{self, Category, Lane, TraceData, Tracer, SPAN_BAND};
 
 /// A queued, lifetime-erased band job.
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -137,6 +139,11 @@ pub struct WorkerPool {
     queue: Arc<JobQueue>,
     counters: Arc<PoolCounters>,
     span: SpanTracker,
+    /// Fast-path gate for the tracer below: checked once per
+    /// `run_scoped`, never per job, so disabled tracing costs one
+    /// relaxed load.
+    trace_on: AtomicBool,
+    tracer: Mutex<Tracer>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -163,12 +170,34 @@ impl WorkerPool {
                 let q = queue.clone();
                 let t = std::thread::Builder::new()
                     .name(format!("pool-{i}"))
-                    .spawn(move || worker_loop(q))
+                    .spawn(move || {
+                        // lane 0 is the inline/submitting thread; workers
+                        // register 1-based lanes for band-span attribution
+                        trace::set_worker_lane((i + 1) as u16);
+                        worker_loop(q)
+                    })
                     .expect("spawning pool worker");
                 threads.push(t);
             }
         }
-        Arc::new(Self { size, queue, counters, span: SpanTracker::default(), threads })
+        Arc::new(Self {
+            size,
+            queue,
+            counters,
+            span: SpanTracker::default(),
+            trace_on: AtomicBool::new(false),
+            tracer: Mutex::new(Tracer::disabled()),
+            threads,
+        })
+    }
+
+    /// Attach a tracer so band jobs record child spans (nested under the
+    /// submitting stage's span via [`trace::current_ctx`]). Observational
+    /// only: scheduling, band order, and results are unaffected.
+    pub fn set_tracer(&self, tracer: Tracer) {
+        let on = tracer.enabled();
+        *self.tracer.lock().unwrap() = tracer;
+        self.trace_on.store(on, Ordering::Release);
     }
 
     /// The degenerate single-lane pool (inline execution, no threads).
@@ -209,6 +238,40 @@ impl WorkerPool {
         if jobs.is_empty() {
             return;
         }
+        // Band-span wrapping: only when tracing is on AND the submitting
+        // thread published a window context (the Render stage does).
+        // Captured at submit time so the parent identity rides into the
+        // worker threads with the job.
+        let jobs = match self
+            .trace_on
+            .load(Ordering::Acquire)
+            .then(trace::current_ctx)
+            .flatten()
+        {
+            None => jobs,
+            Some(ctx) => {
+                let tracer = self.tracer.lock().unwrap().clone();
+                jobs.into_iter()
+                    .enumerate()
+                    .map(|(idx, job)| {
+                        let tracer = tracer.clone();
+                        Box::new(move || {
+                            let t0 = Instant::now();
+                            job();
+                            tracer.span(
+                                SPAN_BAND,
+                                Category::Pool,
+                                ctx.id,
+                                Lane::Worker(trace::worker_lane()),
+                                t0,
+                                Instant::now(),
+                                TraceData::Band { job: idx as u32, parent_stage: ctx.stage },
+                            );
+                        }) as Box<dyn FnOnce() + Send + 'scope>
+                    })
+                    .collect()
+            }
+        };
         self.counters.tasks.fetch_add(jobs.len() as u64, Ordering::Relaxed);
         self.span.enter();
         if self.is_inline() || jobs.len() == 1 {

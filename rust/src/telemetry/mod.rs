@@ -1,0 +1,241 @@
+//! Unified telemetry registry (ISSUE 6).
+//!
+//! The repo grew its counters organically: pool stats, `PipelineMetrics`
+//! busy lanes, per-ISP-stage frames, per-SNN-layer rates, latency
+//! histograms — each with its own struct and snapshot shape. The
+//! [`Registry`] flattens all of them behind one naming scheme
+//! (`subsystem.object.metric`, e.g. `latency.npu.p95_us`,
+//! `isp.stage.nlm.frames`, `pool.utilization`) with exactly three metric
+//! kinds, and one snapshot path: `SystemMetrics::registry()` builds it,
+//! and the same JSON feeds `--json` output (under `"telemetry"`), the
+//! Chrome trace export, and — next — ROADMAP item 1's `/metrics`
+//! endpoint.
+//!
+//! This module depends only on `jsonlite`; `metrics` populates it.
+
+use crate::jsonlite::Json;
+
+/// Point-in-time value of one named metric.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetricValue {
+    /// Monotonically increasing count.
+    Counter(u64),
+    /// Instantaneous level (may go up and down).
+    Gauge(f64),
+    /// Latency distribution digest (µs percentiles from `LatencyHist`).
+    Histogram {
+        count: u64,
+        mean_us: f64,
+        p50_us: u64,
+        p95_us: u64,
+        p99_us: u64,
+    },
+}
+
+impl MetricValue {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            MetricValue::Counter(_) => "counter",
+            MetricValue::Gauge(_) => "gauge",
+            MetricValue::Histogram { .. } => "histogram",
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metric {
+    pub name: String,
+    pub value: MetricValue,
+}
+
+/// A flat, named view over every metric the system exposes.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    rows: Vec<Metric>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&mut self, name: impl Into<String>, v: u64) {
+        self.push(name.into(), MetricValue::Counter(v));
+    }
+
+    pub fn gauge(&mut self, name: impl Into<String>, v: f64) {
+        self.push(name.into(), MetricValue::Gauge(v));
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn histogram(
+        &mut self,
+        name: impl Into<String>,
+        count: u64,
+        mean_us: f64,
+        p50_us: u64,
+        p95_us: u64,
+        p99_us: u64,
+    ) {
+        self.push(
+            name.into(),
+            MetricValue::Histogram { count, mean_us, p50_us, p95_us, p99_us },
+        );
+    }
+
+    fn push(&mut self, name: String, value: MetricValue) {
+        debug_assert!(
+            self.get(&name).is_none(),
+            "duplicate metric name {name:?}"
+        );
+        self.rows.push(Metric { name, value });
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Metric> {
+        self.rows.iter().find(|m| m.name == name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Rows sorted by name (snapshot order is deterministic).
+    pub fn sorted(&self) -> Vec<&Metric> {
+        let mut v: Vec<&Metric> = self.rows.iter().collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// The single snapshot shape every consumer reads:
+    /// `{"counters": {...}, "gauges": {...}, "histograms": {name:
+    /// {count, mean_us, p50_us, p95_us, p99_us}}}`.
+    pub fn snapshot(&self) -> Json {
+        let mut counters = Vec::new();
+        let mut gauges = Vec::new();
+        let mut hists = Vec::new();
+        for m in self.sorted() {
+            match &m.value {
+                MetricValue::Counter(v) => {
+                    counters.push((m.name.as_str(), Json::num(*v as f64)))
+                }
+                MetricValue::Gauge(v) => gauges.push((m.name.as_str(), Json::num(*v))),
+                MetricValue::Histogram { count, mean_us, p50_us, p95_us, p99_us } => {
+                    hists.push((
+                        m.name.as_str(),
+                        Json::obj(vec![
+                            ("count", Json::num(*count as f64)),
+                            ("mean_us", Json::num((mean_us * 10.0).round() / 10.0)),
+                            ("p50_us", Json::num(*p50_us as f64)),
+                            ("p95_us", Json::num(*p95_us as f64)),
+                            ("p99_us", Json::num(*p99_us as f64)),
+                        ]),
+                    ))
+                }
+            }
+        }
+        Json::obj(vec![
+            ("counters", Json::obj(counters)),
+            ("gauges", Json::obj(gauges)),
+            ("histograms", Json::obj(hists)),
+        ])
+    }
+
+    /// Compact fixed-width table of every metric, for the `--trace`
+    /// summary print.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let width = self
+            .rows
+            .iter()
+            .map(|m| m.name.len())
+            .max()
+            .unwrap_or(0)
+            .max(6);
+        for m in self.sorted() {
+            let val = match &m.value {
+                MetricValue::Counter(v) => format!("{v}"),
+                MetricValue::Gauge(v) => {
+                    if v.fract() == 0.0 {
+                        format!("{v:.0}")
+                    } else {
+                        format!("{v:.3}")
+                    }
+                }
+                MetricValue::Histogram { count, mean_us, p50_us, p95_us, p99_us } => {
+                    format!(
+                        "n={count} mean={mean_us:.0}us p50~{p50_us}us p95~{p95_us}us p99~{p99_us}us"
+                    )
+                }
+            };
+            out.push_str(&format!(
+                "{:<width$}  {:<9}  {}\n",
+                m.name,
+                m.value.kind(),
+                val,
+                width = width
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Registry {
+        let mut r = Registry::new();
+        r.counter("loop.windows_in", 12);
+        r.gauge("pool.utilization", 0.75);
+        r.histogram("latency.npu", 12, 850.0, 700, 1400, 2100);
+        r
+    }
+
+    #[test]
+    fn kinds_and_lookup() {
+        let r = sample();
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.get("loop.windows_in").unwrap().value.kind(), "counter");
+        assert_eq!(r.get("pool.utilization").unwrap().value.kind(), "gauge");
+        assert_eq!(r.get("latency.npu").unwrap().value.kind(), "histogram");
+        assert!(r.get("nope").is_none());
+    }
+
+    #[test]
+    fn snapshot_sections_and_round_trip() {
+        let j = sample().snapshot();
+        assert_eq!(
+            j.get("counters").unwrap().get("loop.windows_in").unwrap().as_f64(),
+            Some(12.0)
+        );
+        assert_eq!(
+            j.get("gauges").unwrap().get("pool.utilization").unwrap().as_f64(),
+            Some(0.75)
+        );
+        let h = j.get("histograms").unwrap().get("latency.npu").unwrap();
+        assert_eq!(h.get("p50_us").unwrap().as_f64(), Some(700.0));
+        assert_eq!(h.get("p95_us").unwrap().as_f64(), Some(1400.0));
+        assert_eq!(h.get("p99_us").unwrap().as_f64(), Some(2100.0));
+        let parsed = crate::jsonlite::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed, j);
+    }
+
+    #[test]
+    fn render_lists_every_row() {
+        let text = sample().render();
+        for name in ["loop.windows_in", "pool.utilization", "latency.npu"] {
+            assert!(text.contains(name), "missing {name} in:\n{text}");
+        }
+        assert!(text.contains("p95~1400us"));
+    }
+
+    #[test]
+    fn sorted_is_by_name() {
+        let names: Vec<&str> = sample().sorted().iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, vec!["latency.npu", "loop.windows_in", "pool.utilization"]);
+    }
+}

@@ -1,0 +1,325 @@
+//! Chrome trace-event JSON export (Perfetto / `chrome://tracing`).
+//!
+//! Emits the JSON-object flavor of the format: `{"traceEvents": [...],
+//! "displayTimeUnit": "ms"}` with optional extra top-level sections
+//! (`telemetry`, `health`, `summary`) — viewers ignore unknown keys.
+//!
+//! Mapping:
+//! * [`Phase::Span`]    → paired `B`/`E` duration events on their lane's
+//!   `tid` (balanced by construction — each recorded span emits exactly
+//!   one `B` and one `E`);
+//! * [`Phase::AsyncSpan`] → paired `b`/`e` async events correlated by the
+//!   window id, so spans of different in-flight windows may overlap;
+//! * [`Phase::Instant`] → `i` events with thread scope;
+//! * each lane gets an `M` thread-name metadata record.
+//!
+//! Timestamps are microseconds (f64) from the sink's epoch.
+
+use super::{Category, Lane, Phase, TraceData, TraceEvent, TraceSink};
+use crate::jsonlite::Json;
+
+/// pid for the whole process tree (single-process system).
+const PID: f64 = 1.0;
+
+/// Lane → Chrome tid. Distinct numeric ranges keep tracks grouped:
+/// batcher=2, streams from 10, pool workers from 100, carriers from 1000.
+fn tid_of(lane: Lane) -> u64 {
+    match lane {
+        Lane::Batcher => 2,
+        Lane::Stream(s) => 10 + s as u64,
+        Lane::Worker(w) => 100 + w as u64,
+        Lane::Carrier(c) => 1000 + c as u64,
+    }
+}
+
+fn lane_name(lane: Lane) -> String {
+    match lane {
+        Lane::Batcher => "npu-batcher".into(),
+        Lane::Stream(s) => format!("stream-{s}"),
+        Lane::Worker(0) => "pool-inline".into(),
+        Lane::Worker(w) => format!("pool-worker-{}", w - 1),
+        Lane::Carrier(c) => format!("carrier-{c}"),
+    }
+}
+
+fn args_of(ev: &TraceEvent) -> Json {
+    let mut pairs = vec![
+        ("stream", Json::num(ev.id.stream as f64)),
+        ("window", Json::num(ev.id.window as f64)),
+    ];
+    match ev.data {
+        TraceData::None => {}
+        TraceData::Batch { size } => pairs.push(("batch_size", Json::num(size as f64))),
+        TraceData::Param { seq, superseded } => {
+            pairs.push(("seq", Json::num(seq as f64)));
+            pairs.push(("superseded", Json::num(superseded as f64)));
+        }
+        TraceData::Band { job, parent_stage } => {
+            pairs.push(("job", Json::num(job as f64)));
+            pairs.push(("parent_stage", Json::num(parent_stage as f64)));
+        }
+    }
+    Json::obj(pairs)
+}
+
+/// One emitted record plus its sort key. `rank` orders records sharing a
+/// timestamp so `B`/`E` pairs stay properly nested: ends (0) before
+/// begins (2); at equal (ts, rank), longer spans open first / shorter
+/// spans close first (tie key).
+struct Emitted {
+    ts_ns: u64,
+    rank: u8,
+    tie: u64,
+    json: Json,
+}
+
+fn base(ev: &TraceEvent, ph: &str, ts_ns: u64) -> Vec<(&'static str, Json)> {
+    vec![
+        ("name", Json::str(ev.name)),
+        ("cat", Json::str(ev.cat.as_str())),
+        ("ph", Json::Str(ph.to_string())),
+        ("pid", Json::num(PID)),
+        ("tid", Json::num(tid_of(ev.lane) as f64)),
+        ("ts", Json::num(ts_ns as f64 / 1000.0)),
+    ]
+}
+
+/// Render the sink's retained events as a Chrome trace-event document.
+/// `extra` key/value sections are grafted onto the top-level object.
+pub fn export(sink: &TraceSink, extra: Vec<(&str, Json)>) -> Json {
+    let events = sink.events();
+    let mut out: Vec<Emitted> = Vec::with_capacity(events.len() * 2 + 8);
+
+    // thread-name metadata, one per lane seen
+    let mut lanes: Vec<Lane> = Vec::new();
+    for ev in &events {
+        if !lanes.contains(&ev.lane) {
+            lanes.push(ev.lane);
+        }
+    }
+    lanes.sort_by_key(|l| tid_of(*l));
+    for lane in lanes {
+        let pairs = vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(PID)),
+            ("tid", Json::num(tid_of(lane) as f64)),
+            (
+                "args",
+                Json::obj(vec![("name", Json::Str(lane_name(lane)))]),
+            ),
+        ];
+        out.push(Emitted { ts_ns: 0, rank: 0, tie: 0, json: Json::obj(pairs) });
+    }
+
+    for ev in &events {
+        // zero-duration spans get 1ns so the close sorts after the open
+        let t1 = if ev.ph == Phase::Instant { ev.t0_ns } else { ev.t1_ns.max(ev.t0_ns + 1) };
+        let dur = t1 - ev.t0_ns;
+        match ev.ph {
+            Phase::Span => {
+                let mut open = base(ev, "B", ev.t0_ns);
+                open.push(("args", args_of(ev)));
+                out.push(Emitted {
+                    ts_ns: ev.t0_ns,
+                    rank: 2,
+                    tie: u64::MAX - dur,
+                    json: Json::obj(open),
+                });
+                out.push(Emitted {
+                    ts_ns: t1,
+                    rank: 0,
+                    tie: dur,
+                    json: Json::obj(base(ev, "E", t1)),
+                });
+            }
+            Phase::AsyncSpan => {
+                let id_str = format!("0x{:x}", ev.id.key());
+                let mut open = base(ev, "b", ev.t0_ns);
+                open.push(("id", Json::Str(id_str.clone())));
+                open.push(("args", args_of(ev)));
+                out.push(Emitted {
+                    ts_ns: ev.t0_ns,
+                    rank: 2,
+                    tie: u64::MAX - dur,
+                    json: Json::obj(open),
+                });
+                let mut close = base(ev, "e", t1);
+                close.push(("id", Json::Str(id_str)));
+                out.push(Emitted { ts_ns: t1, rank: 0, tie: dur, json: Json::obj(close) });
+            }
+            Phase::Instant => {
+                let mut rec = base(ev, "i", ev.t0_ns);
+                rec.push(("s", Json::str("t")));
+                rec.push(("args", args_of(ev)));
+                out.push(Emitted { ts_ns: ev.t0_ns, rank: 1, tie: 0, json: Json::obj(rec) });
+            }
+        }
+    }
+
+    out.sort_by(|a, b| {
+        (a.ts_ns, a.rank, a.tie).cmp(&(b.ts_ns, b.rank, b.tie))
+    });
+
+    let mut doc = vec![
+        ("displayTimeUnit", Json::str("ms")),
+        (
+            "traceEvents",
+            Json::Arr(out.into_iter().map(|e| e.json).collect()),
+        ),
+        (
+            "summary",
+            summary_json(&events, sink.dropped_events()),
+        ),
+    ];
+    for (k, v) in extra {
+        doc.push((k, v));
+    }
+    Json::obj(doc)
+}
+
+/// Per-(category, name) roll-up of the retained events.
+#[derive(Debug, Clone)]
+pub struct SummaryRow {
+    pub cat: &'static str,
+    pub name: &'static str,
+    pub count: u64,
+    pub total_us: f64,
+    pub max_us: f64,
+}
+
+/// Compact per-event-name summary, sorted by category then name.
+pub fn summary(events: &[TraceEvent]) -> Vec<SummaryRow> {
+    let mut rows: Vec<SummaryRow> = Vec::new();
+    for ev in events {
+        let us = ev.dur_ns() as f64 / 1000.0;
+        match rows
+            .iter_mut()
+            .find(|r| r.cat == ev.cat.as_str() && r.name == ev.name)
+        {
+            Some(r) => {
+                r.count += 1;
+                r.total_us += us;
+                r.max_us = r.max_us.max(us);
+            }
+            None => rows.push(SummaryRow {
+                cat: ev.cat.as_str(),
+                name: ev.name,
+                count: 1,
+                total_us: us,
+                max_us: us,
+            }),
+        }
+    }
+    rows.sort_by(|a, b| (a.cat, a.name).cmp(&(b.cat, b.name)));
+    rows
+}
+
+fn summary_json(events: &[TraceEvent], dropped: u64) -> Json {
+    let rows = summary(events)
+        .into_iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("cat", Json::str(r.cat)),
+                ("name", Json::str(r.name)),
+                ("count", Json::num(r.count as f64)),
+                ("total_us", Json::num((r.total_us * 1000.0).round() / 1000.0)),
+                ("max_us", Json::num((r.max_us * 1000.0).round() / 1000.0)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("events", Json::num(events.len() as f64)),
+        ("dropped_events", Json::num(dropped as f64)),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Tracer, WindowTraceId};
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    fn sample_sink() -> std::sync::Arc<TraceSink> {
+        let sink = TraceSink::new(64);
+        let t = Tracer::with_sink(sink.clone());
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_micros(50);
+        let t2 = t0 + Duration::from_micros(90);
+        let id = WindowTraceId::new(0, 3);
+        t.span_async(super::super::SPAN_WINDOW, Category::Window, id, Lane::Stream(0), t0, t2, TraceData::None);
+        t.span("sense", Category::Stage, id, Lane::Stream(0), t0, t1, TraceData::None);
+        t.span(
+            super::super::SPAN_BAND,
+            Category::Pool,
+            id,
+            Lane::Worker(1),
+            t0 + Duration::from_micros(5),
+            t0 + Duration::from_micros(20),
+            TraceData::Band { job: 0, parent_stage: 0 },
+        );
+        t.instant(
+            super::super::INSTANT_BATCH,
+            Category::Npu,
+            id,
+            Lane::Batcher,
+            TraceData::Batch { size: 2 },
+        );
+        sink
+    }
+
+    fn count_ph(doc: &Json, ph: &str) -> usize {
+        doc.get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some(ph))
+            .count()
+    }
+
+    #[test]
+    fn export_round_trips_and_balances() {
+        let sink = sample_sink();
+        let doc = export(&sink, vec![]);
+        let text = doc.to_string_pretty();
+        let parsed = crate::jsonlite::parse(&text).unwrap();
+        assert_eq!(parsed, doc);
+        assert_eq!(count_ph(&doc, "B"), count_ph(&doc, "E"));
+        assert_eq!(count_ph(&doc, "b"), count_ph(&doc, "e"));
+        assert!(count_ph(&doc, "B") >= 2);
+        assert!(count_ph(&doc, "i") >= 1);
+        assert!(count_ph(&doc, "M") >= 3); // stream, worker, batcher lanes
+        assert_eq!(doc.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    }
+
+    #[test]
+    fn events_sorted_with_ends_before_begins() {
+        let sink = sample_sink();
+        let doc = export(&sink, vec![]);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut last_ts = -1.0f64;
+        for e in evs {
+            let ts = e.get("ts").map(|t| t.as_f64().unwrap()).unwrap_or(0.0);
+            assert!(ts >= last_ts, "timestamps must be non-decreasing");
+            last_ts = ts;
+        }
+    }
+
+    #[test]
+    fn extra_sections_grafted() {
+        let sink = sample_sink();
+        let doc = export(&sink, vec![("health", Json::str("ok"))]);
+        assert_eq!(doc.get("health").unwrap().as_str(), Some("ok"));
+        assert!(doc.get("summary").unwrap().get("events").is_some());
+    }
+
+    #[test]
+    fn summary_rolls_up_by_name() {
+        let sink = sample_sink();
+        let rows = summary(&sink.events());
+        assert!(rows.iter().any(|r| r.name == "sense" && r.count == 1));
+        assert!(rows.iter().any(|r| r.cat == "pool"));
+    }
+}

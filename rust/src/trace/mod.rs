@@ -1,0 +1,500 @@
+//! Causal per-window tracing across the cognitive pipeline (ISSUE 6).
+//!
+//! A bounded, sharded-mutex ring buffer ([`TraceSink`]) records typed
+//! span/instant events tagged with a [`WindowTraceId`] (stream + window),
+//! a [`Lane`] (which logical execution track recorded it), and nanosecond
+//! timestamps from one monotonic epoch captured at sink creation. The
+//! cheap clonable [`Tracer`] handle is threaded through the dataflow:
+//! stage nodes, the NPU batcher, worker-pool band jobs, the parameter
+//! bus, and fleet carriers all record into the same sink.
+//!
+//! Contract (enforced by `tests/trace_it.rs`):
+//! * zero-cost when disabled — a disabled tracer is an `Option::None`
+//!   check and records nothing; no per-event allocation on the hot path
+//!   (events are `Copy` with `&'static str` names and fixed payloads);
+//! * never perturbs determinism — every event is measured-only, and all
+//!   golden digests are bit-identical with tracing on and off;
+//! * never blocks — on overflow the ring drops the *oldest* events and
+//!   counts them in [`TraceSink::dropped_events`].
+//!
+//! Export to Chrome trace-event JSON lives in [`chrome`]; the stall/
+//! starvation analyzer lives in [`watchdog`].
+
+pub mod chrome;
+pub mod watchdog;
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Causal identity of one window flowing Sense→Infer→Decide→Render.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WindowTraceId {
+    pub stream: u32,
+    pub window: u64,
+}
+
+impl WindowTraceId {
+    pub fn new(stream: u32, window: u64) -> Self {
+        Self { stream, window }
+    }
+
+    /// Stable scalar key for Chrome async-span correlation.
+    pub fn key(&self) -> u64 {
+        ((self.stream as u64) << 48) | (self.window & 0xffff_ffff_ffff)
+    }
+}
+
+/// Which logical execution track recorded an event. Mapped to a Chrome
+/// `tid` at export so each track renders as its own lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lane {
+    /// A stream's stage nodes (sequential per stream, even when several
+    /// streams share one carrier thread).
+    Stream(u32),
+    /// The NPU batcher engine thread.
+    Batcher,
+    /// Worker-pool lane: 0 = inline on the submitting thread, `1 + i`
+    /// = pool worker `i`.
+    Worker(u16),
+    /// A fleet carrier's round loop.
+    Carrier(u16),
+}
+
+/// Event category — drives export grouping and watchdog rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Sense/Infer/Decide/Render stage spans on a stream lane.
+    Stage,
+    /// Whole-window async spans (sense start → outcome).
+    Window,
+    /// Batcher queue-wait / execute spans + batch composition instants.
+    Npu,
+    /// Worker-pool band-job child spans.
+    Pool,
+    /// Feedback-register publish/apply/supersede instants.
+    Param,
+    /// Fleet carrier round spans.
+    Carrier,
+}
+
+impl Category {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Category::Stage => "stage",
+            Category::Window => "window",
+            Category::Npu => "npu",
+            Category::Pool => "pool",
+            Category::Param => "param",
+            Category::Carrier => "carrier",
+        }
+    }
+}
+
+/// How the event renders in the Chrome trace-event export.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Duration span on its lane (`ph: B`/`E`). Spans on one lane must
+    /// not partially overlap — guaranteed by lane construction.
+    Span,
+    /// Async span correlated by window id (`ph: b`/`e`) — used where
+    /// spans of different windows may overlap in time.
+    AsyncSpan,
+    /// Point event (`ph: i`).
+    Instant,
+}
+
+/// Fixed-size typed payload — keeps events `Copy` and allocation-free.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceData {
+    None,
+    /// NPU batch composition: fused request count.
+    Batch { size: u32 },
+    /// Feedback-register traffic: command seq + how many queued
+    /// commands this apply superseded (latest-wins).
+    Param { seq: u64, superseded: u64 },
+    /// Band job `job` of a fan-out submitted by stage `parent_stage`
+    /// (index into `PIPE_STAGE_NAMES`).
+    Band { job: u32, parent_stage: u8 },
+}
+
+/// One recorded event. `t1_ns == t0_ns` for instants.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub cat: Category,
+    pub ph: Phase,
+    pub id: WindowTraceId,
+    pub lane: Lane,
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+    pub data: TraceData,
+}
+
+impl TraceEvent {
+    pub fn dur_ns(&self) -> u64 {
+        self.t1_ns.saturating_sub(self.t0_ns)
+    }
+}
+
+// Span/instant names (one place, so tests and the watchdog can match).
+pub const SPAN_WINDOW: &str = "window";
+pub const SPAN_NPU_QUEUE: &str = "npu-queue";
+pub const SPAN_NPU_EXECUTE: &str = "npu-execute";
+pub const SPAN_BAND: &str = "band";
+pub const SPAN_ROUND: &str = "round";
+pub const INSTANT_BATCH: &str = "npu-batch";
+pub const INSTANT_PUBLISH: &str = "param-publish";
+pub const INSTANT_APPLY: &str = "param-apply";
+
+const SHARDS: usize = 8;
+
+/// Bounded sharded-mutex ring buffer of trace events.
+///
+/// Shard selection round-robins per event (one relaxed atomic add), so
+/// contention between carriers/workers spreads across `SHARDS` mutexes
+/// and drop-oldest behaves like a single global ring. Capacity is
+/// rounded up to a multiple of [`SHARDS`].
+pub struct TraceSink {
+    epoch: Instant,
+    shards: Vec<Mutex<VecDeque<TraceEvent>>>,
+    per_shard: usize,
+    next: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+impl TraceSink {
+    pub fn new(capacity: usize) -> Arc<Self> {
+        let per_shard = capacity.div_ceil(SHARDS).max(1);
+        Arc::new(Self {
+            epoch: Instant::now(),
+            shards: (0..SHARDS)
+                .map(|_| Mutex::new(VecDeque::with_capacity(per_shard)))
+                .collect(),
+            per_shard,
+            next: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Effective capacity (requested, rounded up to a shard multiple).
+    pub fn capacity(&self) -> usize {
+        self.per_shard * SHARDS
+    }
+
+    /// Nanoseconds since the sink's epoch for an externally captured
+    /// monotonic timestamp. Instants predating the epoch clamp to 0.
+    pub fn ns_of(&self, t: Instant) -> u64 {
+        t.checked_duration_since(self.epoch)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0)
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record one event; never blocks on a full ring — the shard drops
+    /// its oldest event instead and bumps the drop counter.
+    pub fn record(&self, ev: TraceEvent) {
+        let idx = self.next.fetch_add(1, Ordering::Relaxed) % SHARDS;
+        let mut shard = self.shards[idx].lock().unwrap();
+        if shard.len() >= self.per_shard {
+            shard.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        shard.push_back(ev);
+    }
+
+    /// Events dropped to overflow since creation.
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot all retained events, sorted by start timestamp.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out: Vec<TraceEvent> = Vec::with_capacity(self.len());
+        for s in &self.shards {
+            out.extend(s.lock().unwrap().iter().copied());
+        }
+        out.sort_by_key(|e| (e.t0_ns, e.t1_ns));
+        out
+    }
+}
+
+/// Cheap clonable recording handle. `sink == None` means disabled: every
+/// record method returns immediately without touching the clock.
+#[derive(Clone, Default)]
+pub struct Tracer {
+    sink: Option<Arc<TraceSink>>,
+    stream: u32,
+}
+
+impl Tracer {
+    pub fn disabled() -> Self {
+        Self { sink: None, stream: 0 }
+    }
+
+    pub fn with_sink(sink: Arc<TraceSink>) -> Self {
+        Self { sink: Some(sink), stream: 0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    pub fn sink(&self) -> Option<&Arc<TraceSink>> {
+        self.sink.as_ref()
+    }
+
+    /// A handle stamping events with `stream` — one per fleet stream.
+    pub fn for_stream(&self, stream: u32) -> Self {
+        Self { sink: self.sink.clone(), stream }
+    }
+
+    pub fn stream(&self) -> u32 {
+        self.stream
+    }
+
+    pub fn id(&self, window: u64) -> WindowTraceId {
+        WindowTraceId::new(self.stream, window)
+    }
+
+    fn record(
+        &self,
+        name: &'static str,
+        cat: Category,
+        ph: Phase,
+        id: WindowTraceId,
+        lane: Lane,
+        t0: Instant,
+        t1: Instant,
+        data: TraceData,
+    ) {
+        let Some(sink) = &self.sink else { return };
+        let t0_ns = sink.ns_of(t0);
+        let t1_ns = sink.ns_of(t1).max(t0_ns);
+        sink.record(TraceEvent { name, cat, ph, id, lane, t0_ns, t1_ns, data });
+    }
+
+    /// Completed duration span on `lane` (both endpoints captured by the
+    /// caller — one event, recorded at span end).
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &self,
+        name: &'static str,
+        cat: Category,
+        id: WindowTraceId,
+        lane: Lane,
+        t0: Instant,
+        t1: Instant,
+        data: TraceData,
+    ) {
+        self.record(name, cat, Phase::Span, id, lane, t0, t1, data);
+    }
+
+    /// Completed async span (window-correlated, may overlap peers).
+    #[allow(clippy::too_many_arguments)]
+    pub fn span_async(
+        &self,
+        name: &'static str,
+        cat: Category,
+        id: WindowTraceId,
+        lane: Lane,
+        t0: Instant,
+        t1: Instant,
+        data: TraceData,
+    ) {
+        self.record(name, cat, Phase::AsyncSpan, id, lane, t0, t1, data);
+    }
+
+    /// Point event stamped "now".
+    pub fn instant(
+        &self,
+        name: &'static str,
+        cat: Category,
+        id: WindowTraceId,
+        lane: Lane,
+        data: TraceData,
+    ) {
+        let Some(sink) = &self.sink else { return };
+        let t = sink.now_ns();
+        sink.record(TraceEvent {
+            name,
+            cat,
+            ph: Phase::Instant,
+            id,
+            lane,
+            t0_ns: t,
+            t1_ns: t,
+            data,
+        });
+    }
+}
+
+// --- thread-local trace context -----------------------------------------
+//
+// Parent-span inheritance for pool band jobs: the stage node sets the
+// current (window, stage) context on the submitting thread; the pool
+// reads it at submit time and tags each band-job span with it, so banded
+// ISP/conv work nests under its stage span in the export.
+
+/// The (window, stage) a submitting thread is currently executing.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceCtx {
+    pub id: WindowTraceId,
+    pub stage: u8,
+}
+
+thread_local! {
+    static CURRENT_CTX: Cell<Option<TraceCtx>> = const { Cell::new(None) };
+    static WORKER_LANE: Cell<u16> = const { Cell::new(0) };
+}
+
+/// Current stage context on this thread (set by the cognitive loop while
+/// a stage node runs, read by `WorkerPool::run_scoped` at submit time).
+pub fn current_ctx() -> Option<TraceCtx> {
+    CURRENT_CTX.with(|c| c.get())
+}
+
+/// RAII guard installing a stage context; restores the previous one on
+/// drop (stage nodes never nest today, but be correct if they do).
+pub struct ScopedCtx {
+    prev: Option<TraceCtx>,
+}
+
+impl ScopedCtx {
+    pub fn enter(ctx: TraceCtx) -> Self {
+        let prev = CURRENT_CTX.with(|c| c.replace(Some(ctx)));
+        Self { prev }
+    }
+}
+
+impl Drop for ScopedCtx {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        CURRENT_CTX.with(|c| c.set(prev));
+    }
+}
+
+/// Pool worker threads register their lane (1 + worker index) at spawn;
+/// lane 0 is inline execution on the submitting thread.
+pub fn set_worker_lane(lane: u16) {
+    WORKER_LANE.with(|w| w.set(lane));
+}
+
+pub fn worker_lane() -> u16 {
+    WORKER_LANE.with(|w| w.get())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(sink: &TraceSink, n: u64) -> TraceEvent {
+        TraceEvent {
+            name: "t",
+            cat: Category::Stage,
+            ph: Phase::Span,
+            id: WindowTraceId::new(0, n),
+            lane: Lane::Stream(0),
+            t0_ns: n,
+            t1_ns: n + 1,
+            data: TraceData::None,
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled();
+        assert!(!t.enabled());
+        let now = Instant::now();
+        t.span(
+            "x",
+            Category::Stage,
+            t.id(0),
+            Lane::Stream(0),
+            now,
+            now,
+            TraceData::None,
+        );
+        t.instant("y", Category::Param, t.id(0), Lane::Stream(0), TraceData::None);
+        assert!(t.sink().is_none());
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let sink = TraceSink::new(64);
+        assert_eq!(sink.capacity(), 64);
+        for n in 0..(64 + 24) {
+            sink.record(ev(&sink, n as u64));
+        }
+        assert_eq!(sink.len(), 64);
+        assert_eq!(sink.dropped_events(), 24);
+        // round-robin sharding drops the globally oldest events: every
+        // survivor is newer than every dropped one
+        let min_t0 = sink.events().iter().map(|e| e.t0_ns).min().unwrap();
+        assert_eq!(min_t0, 24);
+    }
+
+    #[test]
+    fn events_sorted_by_start() {
+        let sink = TraceSink::new(16);
+        for n in [5u64, 1, 9, 3] {
+            sink.record(ev(&sink, n));
+        }
+        let ts: Vec<u64> = sink.events().iter().map(|e| e.t0_ns).collect();
+        assert_eq!(ts, vec![1, 3, 5, 9]);
+    }
+
+    #[test]
+    fn stream_handles_stamp_ids() {
+        let sink = TraceSink::new(16);
+        let t = Tracer::with_sink(sink.clone()).for_stream(3);
+        assert_eq!(t.id(7), WindowTraceId::new(3, 7));
+        assert_eq!(t.id(7).key(), (3u64 << 48) | 7);
+        let now = Instant::now();
+        t.span(
+            "s",
+            Category::Stage,
+            t.id(7),
+            Lane::Stream(3),
+            now,
+            now,
+            TraceData::None,
+        );
+        assert_eq!(sink.events()[0].id.stream, 3);
+    }
+
+    #[test]
+    fn scoped_ctx_nests_and_restores() {
+        assert!(current_ctx().is_none());
+        {
+            let _a = ScopedCtx::enter(TraceCtx { id: WindowTraceId::new(0, 1), stage: 3 });
+            assert_eq!(current_ctx().unwrap().id.window, 1);
+            {
+                let _b = ScopedCtx::enter(TraceCtx { id: WindowTraceId::new(0, 2), stage: 1 });
+                assert_eq!(current_ctx().unwrap().id.window, 2);
+            }
+            assert_eq!(current_ctx().unwrap().id.window, 1);
+        }
+        assert!(current_ctx().is_none());
+    }
+
+    #[test]
+    fn pre_epoch_instants_clamp_to_zero() {
+        let early = Instant::now();
+        let sink = TraceSink::new(8);
+        assert_eq!(sink.ns_of(early), 0);
+    }
+}

@@ -1,0 +1,272 @@
+//! Liveness watchdog over the trace event stream (ISSUE 6).
+//!
+//! Consumes the same events the Chrome exporter renders and flags the
+//! three pathologies a live serving plane cares about (ROADMAP item 1's
+//! `/healthz` will read this):
+//!
+//! * **stalled stage** — a Sense/Infer/Decide/Render span exceeding the
+//!   stall threshold;
+//! * **aging batcher queue** — an `npu-queue` wait span exceeding the
+//!   queue-age threshold;
+//! * **starved carrier/stream** — a gap between consecutive round spans
+//!   on one carrier lane (or window spans on one stream) exceeding the
+//!   starvation threshold.
+//!
+//! Thresholds come from the `trace` config section. The assessment is
+//! measured-only and runs after (or beside) the workload — it never sits
+//! on the hot path.
+
+use super::{Category, Lane, TraceEvent, SPAN_NPU_QUEUE, SPAN_ROUND, SPAN_WINDOW};
+use crate::config::TraceConfig;
+use crate::jsonlite::Json;
+
+/// Tri-state health signal. `Unknown` means tracing was off (or the run
+/// produced no events) so the event-stream checks could not run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    Ok,
+    Warn,
+    Unknown,
+}
+
+impl HealthState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HealthState::Ok => "ok",
+            HealthState::Warn => "warn",
+            HealthState::Unknown => "unknown",
+        }
+    }
+}
+
+/// Outcome of one watchdog pass over the event stream.
+#[derive(Debug, Clone)]
+pub struct HealthReport {
+    pub state: HealthState,
+    pub findings: Vec<String>,
+    pub spans_checked: u64,
+    pub dropped_events: u64,
+}
+
+/// Cap on retained finding strings — the counts stay exact, the text
+/// stays bounded.
+const MAX_FINDINGS: usize = 8;
+
+impl HealthReport {
+    pub fn unknown() -> Self {
+        Self {
+            state: HealthState::Unknown,
+            findings: vec!["tracing disabled — event-stream checks skipped".into()],
+            spans_checked: 0,
+            dropped_events: 0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("state", Json::str(self.state.as_str())),
+            (
+                "findings",
+                Json::Arr(self.findings.iter().map(|f| Json::str(f)).collect()),
+            ),
+            ("spans_checked", Json::num(self.spans_checked as f64)),
+            ("dropped_events", Json::num(self.dropped_events as f64)),
+        ])
+    }
+
+    /// One-line rendering for report tables.
+    pub fn render_line(&self) -> String {
+        if self.findings.is_empty() {
+            format!("{} ({} spans checked)", self.state.as_str(), self.spans_checked)
+        } else {
+            format!(
+                "{} ({} spans checked): {}",
+                self.state.as_str(),
+                self.spans_checked,
+                self.findings.join("; ")
+            )
+        }
+    }
+}
+
+/// Threshold-driven analyzer. Construct once from config, feed it the
+/// drained event stream.
+#[derive(Debug, Clone)]
+pub struct Watchdog {
+    stall_stage_us: u64,
+    queue_age_us: u64,
+    starve_gap_us: u64,
+}
+
+impl Watchdog {
+    pub fn from_config(cfg: &TraceConfig) -> Self {
+        Self {
+            stall_stage_us: cfg.stall_stage_us,
+            queue_age_us: cfg.queue_age_us,
+            starve_gap_us: cfg.starve_gap_us,
+        }
+    }
+
+    /// Scan `events` (sorted by start time, as `TraceSink::events`
+    /// returns them) and produce a health verdict.
+    pub fn assess(&self, events: &[TraceEvent], dropped_events: u64) -> HealthReport {
+        if events.is_empty() {
+            let mut r = HealthReport::unknown();
+            r.dropped_events = dropped_events;
+            return r;
+        }
+        let mut findings: Vec<String> = Vec::new();
+        let mut overflow = 0usize;
+        let mut push = |f: String| {
+            if findings.len() < MAX_FINDINGS {
+                findings.push(f);
+            } else {
+                overflow += 1;
+            }
+        };
+        let mut spans = 0u64;
+
+        // stalled stages + aging queues: single pass over spans
+        for ev in events {
+            let dur_us = ev.dur_ns() / 1000;
+            match ev.cat {
+                Category::Stage => {
+                    spans += 1;
+                    if dur_us > self.stall_stage_us {
+                        push(format!(
+                            "stalled stage: {} s{}w{} ran {}us (> {}us)",
+                            ev.name, ev.id.stream, ev.id.window, dur_us, self.stall_stage_us
+                        ));
+                    }
+                }
+                Category::Npu if ev.name == SPAN_NPU_QUEUE => {
+                    spans += 1;
+                    if dur_us > self.queue_age_us {
+                        push(format!(
+                            "aging batcher queue: s{}w{} waited {}us (> {}us)",
+                            ev.id.stream, ev.id.window, dur_us, self.queue_age_us
+                        ));
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // starvation: gaps between consecutive spans on the same track
+        let mut check_gaps = |name: &str, what: &str, key_of: fn(&TraceEvent) -> Option<u64>| {
+            let mut last_end: std::collections::BTreeMap<u64, u64> = Default::default();
+            for ev in events {
+                if ev.name != name {
+                    continue;
+                }
+                let Some(k) = key_of(ev) else { continue };
+                if let Some(&end) = last_end.get(&k) {
+                    let gap_us = ev.t0_ns.saturating_sub(end) / 1000;
+                    if gap_us > self.starve_gap_us {
+                        push(format!(
+                            "starved {what} {k}: {gap_us}us idle between {name} spans (> {}us)",
+                            self.starve_gap_us
+                        ));
+                    }
+                }
+                let e = last_end.entry(k).or_insert(0);
+                *e = (*e).max(ev.t1_ns);
+            }
+        };
+        check_gaps(SPAN_ROUND, "carrier", |ev| match ev.lane {
+            Lane::Carrier(c) => Some(c as u64),
+            _ => None,
+        });
+        check_gaps(SPAN_WINDOW, "stream", |ev| Some(ev.id.stream as u64));
+
+        if overflow > 0 {
+            findings.push(format!("...and {overflow} more findings"));
+        }
+        let state = if findings.is_empty() { HealthState::Ok } else { HealthState::Warn };
+        HealthReport { state, findings, spans_checked: spans, dropped_events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Phase, TraceData, WindowTraceId};
+    use super::*;
+
+    fn span(
+        name: &'static str,
+        cat: Category,
+        lane: Lane,
+        stream: u32,
+        window: u64,
+        t0_us: u64,
+        t1_us: u64,
+    ) -> TraceEvent {
+        TraceEvent {
+            name,
+            cat,
+            ph: Phase::Span,
+            id: WindowTraceId::new(stream, window),
+            lane,
+            t0_ns: t0_us * 1000,
+            t1_ns: t1_us * 1000,
+            data: TraceData::None,
+        }
+    }
+
+    fn dog() -> Watchdog {
+        Watchdog { stall_stage_us: 1000, queue_age_us: 500, starve_gap_us: 2000 }
+    }
+
+    #[test]
+    fn empty_stream_is_unknown() {
+        let r = dog().assess(&[], 0);
+        assert_eq!(r.state, HealthState::Unknown);
+    }
+
+    #[test]
+    fn healthy_stream_is_ok() {
+        let evs = vec![
+            span("sense", Category::Stage, Lane::Stream(0), 0, 0, 0, 100),
+            span(SPAN_NPU_QUEUE, Category::Npu, Lane::Batcher, 0, 0, 100, 200),
+        ];
+        let r = dog().assess(&evs, 0);
+        assert_eq!(r.state, HealthState::Ok);
+        assert_eq!(r.spans_checked, 2);
+        assert!(r.findings.is_empty());
+    }
+
+    #[test]
+    fn flags_stalled_stage_and_aging_queue() {
+        let evs = vec![
+            span("render", Category::Stage, Lane::Stream(1), 1, 4, 0, 5000),
+            span(SPAN_NPU_QUEUE, Category::Npu, Lane::Batcher, 0, 2, 0, 900),
+        ];
+        let r = dog().assess(&evs, 0);
+        assert_eq!(r.state, HealthState::Warn);
+        assert!(r.findings.iter().any(|f| f.contains("stalled stage: render s1w4")));
+        assert!(r.findings.iter().any(|f| f.contains("aging batcher queue: s0w2")));
+    }
+
+    #[test]
+    fn flags_starved_carrier() {
+        let evs = vec![
+            span(SPAN_ROUND, Category::Carrier, Lane::Carrier(0), 0, 0, 0, 100),
+            span(SPAN_ROUND, Category::Carrier, Lane::Carrier(0), 0, 1, 9000, 9100),
+        ];
+        let r = dog().assess(&evs, 0);
+        assert_eq!(r.state, HealthState::Warn);
+        assert!(r.findings.iter().any(|f| f.contains("starved carrier 0")));
+    }
+
+    #[test]
+    fn report_serializes() {
+        let r = dog().assess(
+            &[span("sense", Category::Stage, Lane::Stream(0), 0, 0, 0, 10)],
+            3,
+        );
+        let j = r.to_json();
+        assert_eq!(j.get("state").unwrap().as_str(), Some("ok"));
+        assert_eq!(j.get("dropped_events").unwrap().as_f64(), Some(3.0));
+        crate::jsonlite::parse(&j.to_string()).unwrap();
+    }
+}

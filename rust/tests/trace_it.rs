@@ -1,0 +1,271 @@
+//! Observability contract of the causal tracing subsystem (ISSUE 6
+//! acceptance):
+//!
+//! * tracing never perturbs determinism — run and fleet digests are
+//!   bit-identical with tracing on and off, across worker counts and
+//!   feedback latencies;
+//! * exported spans nest causally — every band-job span sits inside its
+//!   parent stage's span, every Infer stage span inside its window's
+//!   async span;
+//! * the bounded ring never blocks — overflow drops the *oldest* events
+//!   and reports them through `dropped_events`;
+//! * the Chrome export is valid JSON with balanced `B`/`E` and `b`/`e`
+//!   pairs (loadable in Perfetto / chrome://tracing).
+//!
+//! NPU-backed cases skip without `rust/artifacts/`; the ring and export
+//! tests are artifact-free and always run.
+
+use std::time::Instant;
+
+use acelerador::config::SystemConfig;
+use acelerador::coordinator::pipeline::PIPE_STAGE_NAMES;
+use acelerador::coordinator::{CognitiveLoop, WindowOutcome};
+use acelerador::fleet::report::Digest;
+use acelerador::fleet::{run_fleet, run_fleet_with};
+use acelerador::jsonlite::Json;
+use acelerador::trace::watchdog::HealthState;
+use acelerador::trace::{
+    chrome, Category, Lane, TraceData, TraceSink, Tracer, WindowTraceId, INSTANT_PUBLISH,
+    SPAN_BAND, SPAN_WINDOW,
+};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!(
+        "{}/artifacts/manifest.json",
+        env!("CARGO_MANIFEST_DIR")
+    ))
+    .exists()
+}
+
+fn cfg(workers: usize, feedback_latency: u64) -> SystemConfig {
+    let mut c = SystemConfig::default();
+    c.npu.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    c.npu.backbone = "spiking_mobilenet".into(); // smallest: fastest tests
+    c.runtime.workers = workers;
+    c.loop_.feedback_latency = feedback_latency;
+    c
+}
+
+fn script() -> Vec<f64> {
+    vec![1.0, 0.25, 0.25, 2.0, 1.0, 0.5]
+}
+
+/// Digest over the deterministic `WindowOutcome` fields, via the SAME
+/// canonical fold the fleet report uses.
+fn digest_outcomes(outcomes: &[WindowOutcome]) -> u64 {
+    let mut d = Digest::new();
+    for o in outcomes {
+        d.fold_outcome(o);
+    }
+    d.value()
+}
+
+fn run_digest(workers: usize, latency: u64, tracer: Tracer) -> u64 {
+    let mut l = CognitiveLoop::new_traced(&cfg(workers, latency), 42, tracer).unwrap();
+    let r = l.run_script(&script()).unwrap();
+    digest_outcomes(&r.outcomes)
+}
+
+// --- determinism: tracing is observational -------------------------------
+
+#[test]
+fn run_digests_identical_with_tracing_on_and_off() {
+    if !have_artifacts() {
+        return;
+    }
+    for workers in [1usize, 4] {
+        for latency in [0u64, 2] {
+            let off = run_digest(workers, latency, Tracer::disabled());
+            let sink = TraceSink::new(1 << 16);
+            let on = run_digest(workers, latency, Tracer::with_sink(sink.clone()));
+            assert_eq!(
+                off, on,
+                "digest moved with tracing (workers={workers} latency={latency})"
+            );
+            assert!(!sink.is_empty(), "a traced run must record events");
+        }
+    }
+}
+
+#[test]
+fn fleet_digests_identical_with_tracing_on_and_off() {
+    if !have_artifacts() {
+        return;
+    }
+    for workers in [1usize, 4] {
+        for latency in [0u64, 2] {
+            let mut c = cfg(workers, latency);
+            c.fleet.streams = 2;
+            c.fleet.windows_per_stream = 3;
+            let off = run_fleet(&c).unwrap().digest();
+            let sink = TraceSink::new(1 << 16);
+            let rep = run_fleet_with(&c, Tracer::with_sink(sink.clone())).unwrap();
+            assert_eq!(
+                off,
+                rep.digest(),
+                "fleet digest moved with tracing (workers={workers} latency={latency})"
+            );
+            assert!(!sink.is_empty(), "a traced fleet must record events");
+            assert_ne!(
+                rep.health.state,
+                HealthState::Unknown,
+                "a traced fleet must carry a real watchdog assessment"
+            );
+        }
+    }
+}
+
+#[test]
+fn untraced_fleet_reports_unknown_health() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = cfg(1, 0);
+    c.fleet.streams = 2;
+    c.fleet.windows_per_stream = 2;
+    let rep = run_fleet(&c).unwrap();
+    assert_eq!(rep.health.state, HealthState::Unknown);
+    assert!(rep.to_json().get("health").is_some());
+}
+
+// --- causal nesting -------------------------------------------------------
+
+#[test]
+fn spans_nest_band_within_stage_and_infer_within_window() {
+    if !have_artifacts() {
+        return;
+    }
+    let sink = TraceSink::new(1 << 16);
+    let mut l =
+        CognitiveLoop::new_traced(&cfg(4, 1), 42, Tracer::with_sink(sink.clone())).unwrap();
+    l.run_script(&script()).unwrap();
+    assert_eq!(sink.dropped_events(), 0, "test sink must be large enough");
+    let events = sink.events();
+
+    let windows: Vec<_> = events.iter().filter(|e| e.name == SPAN_WINDOW).collect();
+    assert_eq!(windows.len(), script().len(), "one window span per script window");
+
+    // every Infer stage span nests within its window's async span
+    let mut infers = 0;
+    for e in events
+        .iter()
+        .filter(|e| e.cat == Category::Stage && e.name == "infer")
+    {
+        infers += 1;
+        let w = windows
+            .iter()
+            .find(|w| w.id == e.id)
+            .expect("every infer span needs its window span");
+        assert!(
+            w.t0_ns <= e.t0_ns && e.t1_ns <= w.t1_ns,
+            "infer span of window {} escapes its window span",
+            e.id.window
+        );
+    }
+    assert_eq!(infers, script().len());
+
+    // every band-job span nests within the stage span that submitted it
+    let mut bands = 0;
+    for e in events.iter().filter(|e| e.name == SPAN_BAND) {
+        bands += 1;
+        let TraceData::Band { parent_stage, .. } = e.data else {
+            panic!("band spans must carry Band payloads");
+        };
+        let stage_name = PIPE_STAGE_NAMES[parent_stage as usize];
+        let s = events
+            .iter()
+            .find(|s| s.cat == Category::Stage && s.id == e.id && s.name == stage_name)
+            .expect("every band span needs its parent stage span");
+        assert!(
+            s.t0_ns <= e.t0_ns && e.t1_ns <= s.t1_ns,
+            "band span of window {} escapes its {} span",
+            e.id.window,
+            stage_name
+        );
+    }
+    assert!(bands > 0, "banded ISP work must record band spans at workers=4");
+}
+
+// --- bounded ring (artifact-free) ----------------------------------------
+
+#[test]
+fn ring_overflow_drops_oldest_and_counts_instead_of_blocking() {
+    let sink = TraceSink::new(32);
+    let t = Tracer::with_sink(sink.clone());
+    let base = Instant::now();
+    for n in 0..100u64 {
+        t.span(
+            "s",
+            Category::Stage,
+            WindowTraceId::new(0, n),
+            Lane::Stream(0),
+            base,
+            Instant::now(),
+            TraceData::None,
+        );
+    }
+    assert_eq!(sink.len(), 32);
+    assert_eq!(sink.dropped_events(), 68);
+    // round-robin sharding makes drop-oldest global: the survivors are
+    // exactly the newest 32 windows
+    let min_window = sink.events().iter().map(|e| e.id.window).min().unwrap();
+    assert_eq!(min_window, 68);
+}
+
+// --- Chrome export (artifact-free) ---------------------------------------
+
+#[test]
+fn export_is_valid_json_with_balanced_pairs() {
+    let sink = TraceSink::new(64);
+    let t = Tracer::with_sink(sink.clone()).for_stream(1);
+    let base = Instant::now();
+    for w in 0..5u64 {
+        let id = t.id(w);
+        t.span_async(
+            SPAN_WINDOW,
+            Category::Window,
+            id,
+            Lane::Stream(1),
+            base,
+            Instant::now(),
+            TraceData::None,
+        );
+        t.span(
+            "sense",
+            Category::Stage,
+            id,
+            Lane::Stream(1),
+            base,
+            Instant::now(),
+            TraceData::None,
+        );
+        t.instant(
+            INSTANT_PUBLISH,
+            Category::Param,
+            id,
+            Lane::Stream(1),
+            TraceData::Param { seq: w, superseded: 0 },
+        );
+    }
+    let doc = chrome::export(&sink, vec![("extra", Json::str("grafted"))]);
+    let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let count = |ph: &str| {
+        evs.iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some(ph))
+            .count()
+    };
+    assert_eq!(count("B"), count("E"), "sync span pairs must balance");
+    assert_eq!(count("b"), count("e"), "async span pairs must balance");
+    assert_eq!(count("b"), 5);
+    assert_eq!(count("i"), 5);
+    // valid JSON that round-trips through the parser
+    let text = doc.to_string_pretty();
+    let back = acelerador::jsonlite::parse(&text).unwrap();
+    assert_eq!(back, doc);
+    // the summary section carries totals + the drop counter, and extra
+    // sections survive the graft
+    let summary = doc.get("summary").unwrap();
+    assert_eq!(summary.get("dropped_events").unwrap().as_f64(), Some(0.0));
+    assert!(summary.get("events").unwrap().as_usize().unwrap() >= 15);
+    assert_eq!(doc.get("extra").unwrap().as_str(), Some("grafted"));
+}

@@ -110,6 +110,40 @@ else
     echo "verify: artifacts/CLI unavailable — skipping digest comparison" >&2
 fi
 
+echo "== observability: trace export smoke =="
+# A short traced run must emit a loadable Chrome trace: valid JSON,
+# more than zero events, and balanced B/E + b/e span pairs. Needs the
+# CLI and artifacts like the digest gate; skips gracefully otherwise.
+if [ -f artifacts/manifest.json ] && cargo build --release 2>/dev/null; then
+    tr_out=$(mktemp /tmp/verify_trace.XXXXXX.json)
+    if cargo run --release --quiet -- run --windows 4 --trace "$tr_out" \
+        --json >/dev/null 2>&1 && [ -s "$tr_out" ]; then
+        if command -v python3 >/dev/null 2>&1; then
+            python3 - "$tr_out" <<'PYEOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+evs = doc["traceEvents"]
+assert len(evs) > 0, "trace exported zero events"
+ph = lambda p: sum(1 for e in evs if e.get("ph") == p)
+assert ph("B") == ph("E"), f"unbalanced sync pairs: {ph('B')}B/{ph('E')}E"
+assert ph("b") == ph("e"), f"unbalanced async pairs: {ph('b')}b/{ph('e')}e"
+print(f"trace OK: {len(evs)} events, {ph('B')} sync + {ph('b')} async spans")
+PYEOF
+        else
+            # no python3: settle for non-empty traceEvents
+            grep -q '"traceEvents"' "$tr_out" && grep -q '"ph"' "$tr_out" \
+                && echo "trace OK (python3 absent: structural grep only)"
+        fi
+    else
+        echo "verify: TRACE EXPORT FAILED — run --trace produced no file" >&2
+        rm -f "$tr_out"
+        exit 1
+    fi
+    rm -f "$tr_out"
+else
+    echo "verify: artifacts/CLI unavailable — skipping trace export smoke" >&2
+fi
+
 echo "== compile gate: cargo bench --no-run =="
 # Bench targets (e1 sweep, e4 wall-time ratio) must at least compile;
 # skip gracefully when the bench profile is unusable on this toolchain.
