@@ -20,9 +20,11 @@ use acelerador::snn::layers::{
     conv2d_popcount_1x1, conv2d_same, conv2d_same_par, conv2d_sparse_same,
     conv2d_sparse_same_par,
 };
-use acelerador::snn::quant::QuantBackbone;
+use acelerador::snn::lif::{QLifState, LIF_Q_FRAC};
+use acelerador::snn::quant::{conv2d_i8_acc, conv2d_i8_lif_fused, QuantBackbone, QuantTensor};
 use acelerador::snn::{Backbone, BackboneKind, SpikePlane, Tensor};
 use acelerador::testkit::bench::{black_box, write_bench_artifact, Bench, Table};
+use acelerador::util::fixed::Q;
 use acelerador::util::SplitMix64;
 
 const SCENES: usize = 64;
@@ -57,7 +59,7 @@ fn sparsity_sweep() -> Vec<Json> {
     let pool = WorkerPool::new(auto_workers());
     let mut t = Table::new(&[
         "spike rate", "gather µs", "dense3x3 µs", "g-ratio", "popcnt µs", "dense1x1 µs",
-        "p-ratio", "gatherN µs", "denseN µs",
+        "p-ratio", "gatherN µs", "+simd", "denseN µs", "+simd",
     ]);
     let mut rows = Vec::new();
     let mut crossover: Option<f64> = None;
@@ -83,8 +85,10 @@ fn sparsity_sweep() -> Vec<Json> {
             syn = 0;
             black_box(conv2d_same(&d1, &w1, &b1, 1, 1, &mut syn))
         });
-        // channel-banded kernels on the machine's pool (bit-exact; the
-        // table shows the parallel wall time next to the scalar one)
+        // channel-banded kernels on the machine's pool, scalar ranges vs
+        // the 4-wide lane ranges (bit-exact either way; the scalar-vs-
+        // SIMD columns are the lane kernels' gain table)
+        pool.set_simd_enabled(false);
         let gp = bench.run(&format!("gather par {}w @{rate}", pool.size()), || {
             syn = 0;
             black_box(conv2d_sparse_same_par(&pool, &p3, &w3, &b3, 1, 1, &mut syn))
@@ -93,6 +97,16 @@ fn sparsity_sweep() -> Vec<Json> {
             syn = 0;
             black_box(conv2d_same_par(&pool, &d3, &w3, &b3, 1, 1, &mut syn))
         });
+        pool.set_simd_enabled(true);
+        let gv = bench.run(&format!("gather par+simd {}w @{rate}", pool.size()), || {
+            syn = 0;
+            black_box(conv2d_sparse_same_par(&pool, &p3, &w3, &b3, 1, 1, &mut syn))
+        });
+        let dv = bench.run(&format!("dense  par+simd {}w @{rate}", pool.size()), || {
+            syn = 0;
+            black_box(conv2d_same_par(&pool, &d3, &w3, &b3, 1, 1, &mut syn))
+        });
+        pool.set_simd_enabled(false);
         if crossover.is_none() && g.mean_us() >= dd.mean_us() {
             crossover = Some(rate);
         }
@@ -103,7 +117,9 @@ fn sparsity_sweep() -> Vec<Json> {
             ("popcount_us", Json::num(pc.mean_us())),
             ("dense1x1_us", Json::num(dp.mean_us())),
             ("gather_par_us", Json::num(gp.mean_us())),
+            ("gather_par_simd_us", Json::num(gv.mean_us())),
             ("dense_par_us", Json::num(dn.mean_us())),
+            ("dense_par_simd_us", Json::num(dv.mean_us())),
             ("pool_workers", Json::num(pool.size() as f64)),
         ]));
         t.row(&[
@@ -115,7 +131,9 @@ fn sparsity_sweep() -> Vec<Json> {
             format!("{:.0}", dp.mean_us()),
             format!("{:.2}x", dp.mean_us() / pc.mean_us()),
             format!("{:.0}", gp.mean_us()),
+            format!("{:.0}", gv.mean_us()),
             format!("{:.0}", dn.mean_us()),
+            format!("{:.0}", dv.mean_us()),
         ]);
     }
     println!();
@@ -136,15 +154,73 @@ fn sparsity_sweep() -> Vec<Json> {
     rows
 }
 
+/// Fused int-only conv→LIF vs the unfused integer reference
+/// (`conv2d_i8_acc` + `QLifState::step_acc`): same spikes, same synops
+/// (tests/simd_parity.rs pins the exactness) — this table is the wall
+/// time and the saved i32 current plane. Returns `BENCH_e1.json` rows.
+fn fused_lif_sweep() -> Vec<Json> {
+    println!("--- fused int8 conv→LIF vs unfused integer reference ---");
+    let mut rng = SplitMix64::new(0xE1_F05ED);
+    let w = QuantTensor::quantize(&Tensor::from_vec(
+        &[32, 32, 3, 3],
+        (0..32 * 32 * 9).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+    ));
+    let scale_raw = Q::from_f64(w.scale as f64, LIF_Q_FRAC).raw();
+    let bias_raw = vec![0i64; 32];
+    let bench = Bench::new(2, 12);
+    let mut t = Table::new(&["spike rate", "unfused µs", "fused µs", "speedup"]);
+    let mut rows = Vec::new();
+    for &rate in &[0.01, 0.05, 0.20, 0.50] {
+        let data: Vec<f32> = (0..32 * 32 * 32)
+            .map(|_| if rng.uniform_in(0.0, 1.0) < rate { 1.0f32 } else { 0.0 })
+            .collect();
+        let plane = SpikePlane::from_slice(32, 32, 32, &data);
+        let mut st = QLifState::new(32 * 32 * 32, 0.75, 0.02);
+        let mut out = SpikePlane::new(32, 32, 32);
+        let mut syn = 0u64;
+        let u = bench.run(&format!("unfused i8+LIF @{rate}"), || {
+            st.reset();
+            syn = 0;
+            let (acc, _) = conv2d_i8_acc(&plane, &w, 1, 1, &mut syn);
+            black_box(st.step_acc(&acc, scale_raw, &bias_raw, &mut out))
+        });
+        let f = bench.run(&format!("fused   i8→LIF @{rate}"), || {
+            st.reset();
+            syn = 0;
+            black_box(conv2d_i8_lif_fused(
+                &plane, &w, 1, 1, &mut syn, &mut st, scale_raw, &bias_raw, &mut out,
+            ))
+        });
+        rows.push(Json::obj(vec![
+            ("rate", Json::num(rate)),
+            ("unfused_us", Json::num(u.mean_us())),
+            ("fused_us", Json::num(f.mean_us())),
+            ("fused_speedup", Json::num(u.mean_us() / f.mean_us().max(1e-9))),
+        ]));
+        t.row(&[
+            format!("{:.0}%", rate * 100.0),
+            format!("{:.0}", u.mean_us()),
+            format!("{:.0}", f.mean_us()),
+            format!("{:.2}x", u.mean_us() / f.mean_us().max(1e-9)),
+        ]);
+    }
+    println!();
+    t.print();
+    println!("\n(identical spikes/synops either way — the fused pass just never\n materializes the per-layer i32 current plane)\n");
+    rows
+}
+
 fn main() -> anyhow::Result<()> {
     println!("=== E1: backbone AP@0.5 + sparsity (paper §IV-C table) ===\n");
     let sweep_rows = sparsity_sweep();
+    let fused_rows = fused_lif_sweep();
     // persist the artifact-free half immediately so BENCH_e1.json exists
     // even when the PJRT artifacts aren't built
     let artifact = Json::obj(vec![
         ("bench", Json::str("e1_backbones")),
         ("sparse_threshold", Json::num(acelerador::snn::DEFAULT_SPARSE_THRESHOLD as f64)),
         ("rate_sweep", Json::arr(sweep_rows)),
+        ("fused_lif_sweep", Json::arr(fused_rows)),
     ]);
     let path = write_bench_artifact("e1", &artifact)?;
     println!("wrote {path}\n");

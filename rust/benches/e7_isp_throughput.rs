@@ -152,10 +152,12 @@ fn main() -> anyhow::Result<()> {
         100.0 * (full_total - lean_total) / full_total.max(1e-9)
     );
 
-    // --- worker-pool sweep: row-band parallelism speedup curve ---------------
+    // --- worker-pool sweep: row-band parallelism × SIMD lane dispatch --------
     // larger frame so band fan-out has rows to chew on; output is
-    // bit-identical for every worker count (tests/parallel_parity.rs) —
-    // this sweep measures wall time only.
+    // bit-identical for every worker count and either simd setting
+    // (tests/parallel_parity.rs, tests/simd_parity.rs) — this sweep
+    // measures wall time only. Inline (1-worker) pools always take the
+    // scalar serial path, so the simd column only moves for workers >= 2.
     let big_raw = {
         let mut rng = SplitMix64::new(21);
         let frame = ImageU8::from_fn(256, 256, |x, y| (55 + (x * 2 + y) % 140) as u8);
@@ -166,9 +168,11 @@ fn main() -> anyhow::Result<()> {
     if !worker_counts.contains(&n_auto) {
         worker_counts.push(n_auto);
     }
-    let time_workers = |workers: usize| -> f64 {
+    let time_workers = |workers: usize, simd: bool| -> f64 {
         let mut isp = IspPipeline::new(&IspConfig::default());
-        isp.set_worker_pool(WorkerPool::new(workers));
+        let pool = WorkerPool::new(workers);
+        pool.set_simd_enabled(simd);
+        isp.set_worker_pool(pool);
         let mut total = 0.0;
         for i in 0..warmup + frames {
             let (_, report) = isp.process_ref(&big_raw);
@@ -178,24 +182,28 @@ fn main() -> anyhow::Result<()> {
         }
         total / frames as f64
     };
-    let base_us = time_workers(1);
+    let base_us = time_workers(1, false);
     println!("\n=== worker-pool sweep (256x256 frames, full mask, mean of {frames}) ===\n");
-    let mut t5 = Table::new(&["workers", "µs/frame", "speedup", "fps"]);
-    let mut sweep_rows: Vec<(usize, f64)> = Vec::new();
+    let mut t5 = Table::new(&["workers", "scalar µs", "simd µs", "simd gain", "speedup", "fps"]);
+    let mut sweep_rows: Vec<(usize, f64, f64)> = Vec::new();
     for &workers in &worker_counts {
-        let us = if workers == 1 { base_us } else { time_workers(workers) };
-        sweep_rows.push((workers, us));
+        let us = if workers == 1 { base_us } else { time_workers(workers, false) };
+        let us_simd = time_workers(workers, true);
+        sweep_rows.push((workers, us, us_simd));
         t5.row(&[
             workers.to_string(),
             format!("{us:.0}"),
-            format!("{:.2}x", base_us / us.max(1e-9)),
-            format!("{:.0}", 1e6 / us.max(1e-9)),
+            format!("{us_simd:.0}"),
+            format!("{:.2}x", us / us_simd.max(1e-9)),
+            format!("{:.2}x", base_us / us_simd.max(1e-9)),
+            format!("{:.0}", 1e6 / us_simd.max(1e-9)),
         ]);
     }
     t5.print();
     println!(
-        "\n(bit-identical output at every worker count; the speedup rides the NLM/\n\
-         demosaic row bands — Amdahl holds the ceiling at the serial AWB measure)"
+        "\n(bit-identical output at every worker count and simd setting; the band\n\
+         speedup rides the NLM/demosaic rows, the simd gain the 4-wide lane\n\
+         kernels — Amdahl holds the ceiling at the serial AWB measure)"
     );
 
     // --- machine-readable artifact at the repo root --------------------------
@@ -218,10 +226,12 @@ fn main() -> anyhow::Result<()> {
             Json::arr(
                 sweep_rows
                     .iter()
-                    .map(|&(workers, us)| {
+                    .map(|&(workers, us, us_simd)| {
                         Json::obj(vec![
                             ("workers", Json::num(workers as f64)),
                             ("us_per_frame", Json::num(us)),
+                            ("us_per_frame_simd", Json::num(us_simd)),
+                            ("simd_gain", Json::num(us / us_simd.max(1e-9))),
                             ("speedup", Json::num(base_us / us.max(1e-9))),
                         ])
                     })

@@ -191,13 +191,26 @@ impl Default for FleetConfig {
 
 /// Execution-runtime configuration: the deterministic worker pool both
 /// compute planes (ISP row bands, SNN channel bands) fan out onto.
-#[derive(Debug, Clone, Default, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RuntimeConfig {
     /// Worker-pool width. `0` = auto (`available_parallelism`); `1`
     /// degenerates every parallel path to the inline scalar loop.
     /// Outputs are bit-identical for any value — this trades wall time
     /// only (proven by `tests/parallel_parity.rs`).
     pub workers: usize,
+    /// SIMD lane dispatch for the per-core kernels: `"on"` forces the
+    /// 4-wide lane kernels, `"off"` forces the scalar oracles, `"auto"`
+    /// (the default) enables lanes unless the `ACELERADOR_SIMD`
+    /// environment variable says otherwise. Outputs are bit-identical
+    /// either way (proven by `tests/simd_parity.rs`) — like `workers`,
+    /// this trades wall time only.
+    pub simd: String,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        Self { workers: 0, simd: "auto".into() }
+    }
 }
 
 impl RuntimeConfig {
@@ -208,6 +221,17 @@ impl RuntimeConfig {
             crate::runtime::pool::auto_workers()
         } else {
             self.workers
+        }
+    }
+
+    /// The effective SIMD dispatch: `on`/`off` are explicit, `auto`
+    /// defers to the environment (`ACELERADOR_SIMD=off|0|false` opts
+    /// out; anything else opts in).
+    pub fn resolve_simd(&self) -> bool {
+        match self.simd.as_str() {
+            "on" => true,
+            "off" => false,
+            _ => crate::runtime::pool::default_simd_enabled(),
         }
     }
 }
@@ -348,6 +372,7 @@ impl SystemConfig {
         }
         if let Some(r) = json.get("runtime") {
             read_usize(r, "workers", &mut self.runtime.workers);
+            read_string(r, "simd", &mut self.runtime.simd);
         }
         if let Some(t) = json.get("trace") {
             read_usize(t, "buffer_events", &mut self.trace.buffer_events);
@@ -416,6 +441,12 @@ impl SystemConfig {
         }
         if self.runtime.workers > 1024 {
             bail!("runtime: workers must be <= 1024 (0 = auto)");
+        }
+        if !matches!(self.runtime.simd.as_str(), "auto" | "on" | "off") {
+            bail!(
+                "runtime: simd must be one of auto/on/off, got {:?}",
+                self.runtime.simd
+            );
         }
         if self.trace.buffer_events == 0 {
             bail!("trace: buffer_events must be > 0");
@@ -508,7 +539,10 @@ impl SystemConfig {
             ),
             (
                 "runtime",
-                Json::obj(vec![("workers", Json::num(self.runtime.workers as f64))]),
+                Json::obj(vec![
+                    ("workers", Json::num(self.runtime.workers as f64)),
+                    ("simd", Json::str(&self.runtime.simd)),
+                ]),
             ),
             (
                 "trace",
@@ -738,6 +772,23 @@ mod tests {
         cfg.validate().unwrap();
         cfg.runtime.workers = 4096;
         assert!(cfg.validate().is_err(), "absurd worker counts rejected");
+    }
+
+    #[test]
+    fn runtime_simd_overlay_and_validation() {
+        let cfg = SystemConfig::default();
+        assert_eq!(cfg.runtime.simd, "auto", "default defers to the env");
+        let mut cfg = SystemConfig::default();
+        let json = crate::jsonlite::parse(r#"{"runtime": {"simd": "off"}}"#).unwrap();
+        cfg.apply_json(&json).unwrap();
+        assert_eq!(cfg.runtime.simd, "off");
+        assert!(!cfg.runtime.resolve_simd(), "off always resolves false");
+        cfg.validate().unwrap();
+        cfg.runtime.simd = "on".into();
+        assert!(cfg.runtime.resolve_simd(), "on always resolves true");
+        cfg.validate().unwrap();
+        cfg.runtime.simd = "avx-512".into();
+        assert!(cfg.validate().is_err(), "unknown simd modes rejected");
     }
 
     #[test]

@@ -178,6 +178,7 @@ impl CognitiveLoop {
         let client = svc.client();
         let pool = WorkerPool::new(cfg.runtime.resolve_workers());
         pool.set_tracer(tracer.clone());
+        pool.set_simd_enabled(cfg.runtime.resolve_simd());
         Ok(Self::assemble(cfg, scenario_seed, client, Some(svc), pool, tracer))
     }
 

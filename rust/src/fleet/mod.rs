@@ -203,6 +203,7 @@ pub fn run_fleet_with(cfg: &SystemConfig, tracer: Tracer) -> Result<FleetReport>
     // many streams the fleet serves.
     let band_pool = WorkerPool::new(workers);
     band_pool.set_tracer(tracer.clone());
+    band_pool.set_simd_enabled(cfg.runtime.resolve_simd());
     let barrier = fleet
         .lockstep
         .then(|| Arc::new(RoundBarrier::new(carriers)));

@@ -91,6 +91,157 @@ pub fn demosaic_window(w: &[[u8; 5]; 5], cx: usize, cy: usize) -> (u8, u8, u8) {
     }
 }
 
+/// Clamp four i32 lanes to u8 (the lane form of [`clamp8`]).
+#[inline(always)]
+fn clamp8x4(v: [i32; 4]) -> [u8; 4] {
+    [clamp8(v[0]), clamp8(v[1]), clamp8(v[2]), clamp8(v[3])]
+}
+
+/// Lane form of [`green_at_rb`]: `t(dx, dy)` gathers the tap at window
+/// offset `(dx, dy)` for four same-parity centers. Identical i32
+/// arithmetic per lane (exact adds/multiplies, truncating `/8`), so each
+/// lane reproduces the scalar stencil bit for bit.
+#[inline(always)]
+fn green_at_rb_x4(t: &impl Fn(isize, isize) -> [i32; 4]) -> [u8; 4] {
+    use crate::util::simd::{add_i32x4, divk_i32x4, mulk_i32x4, sub_i32x4};
+    let c = t(0, 0);
+    let cross = add_i32x4(add_i32x4(t(0, -1), t(0, 1)), add_i32x4(t(-1, 0), t(1, 0)));
+    let same = add_i32x4(add_i32x4(t(0, -2), t(0, 2)), add_i32x4(t(-2, 0), t(2, 0)));
+    clamp8x4(divk_i32x4(
+        sub_i32x4(add_i32x4(mulk_i32x4(cross, 2), mulk_i32x4(c, 4)), same),
+        8,
+    ))
+}
+
+/// Lane form of [`rb_at_green_h`].
+#[inline(always)]
+fn rb_at_green_h_x4(t: &impl Fn(isize, isize) -> [i32; 4]) -> [u8; 4] {
+    use crate::util::simd::{add_i32x4, divk_i32x4, mulk_i32x4, sub_i32x4};
+    let c = t(0, 0);
+    let h = add_i32x4(t(-1, 0), t(1, 0));
+    let diag = add_i32x4(add_i32x4(t(-1, -1), t(1, -1)), add_i32x4(t(-1, 1), t(1, 1)));
+    let dist2 = add_i32x4(t(-2, 0), t(2, 0));
+    let half = divk_i32x4(add_i32x4(t(0, -2), t(0, 2)), 2);
+    let corr = add_i32x4(sub_i32x4(sub_i32x4(mulk_i32x4(c, 5), diag), dist2), half);
+    clamp8x4(divk_i32x4(add_i32x4(mulk_i32x4(h, 4), corr), 8))
+}
+
+/// Lane form of [`rb_at_green_v`].
+#[inline(always)]
+fn rb_at_green_v_x4(t: &impl Fn(isize, isize) -> [i32; 4]) -> [u8; 4] {
+    use crate::util::simd::{add_i32x4, divk_i32x4, mulk_i32x4, sub_i32x4};
+    let c = t(0, 0);
+    let v = add_i32x4(t(0, -1), t(0, 1));
+    let diag = add_i32x4(add_i32x4(t(-1, -1), t(1, -1)), add_i32x4(t(-1, 1), t(1, 1)));
+    let dist2 = add_i32x4(t(0, -2), t(0, 2));
+    let half = divk_i32x4(add_i32x4(t(-2, 0), t(2, 0)), 2);
+    let corr = add_i32x4(sub_i32x4(sub_i32x4(mulk_i32x4(c, 5), diag), dist2), half);
+    clamp8x4(divk_i32x4(add_i32x4(mulk_i32x4(v, 4), corr), 8))
+}
+
+/// Lane form of [`rb_at_br`].
+#[inline(always)]
+fn rb_at_br_x4(t: &impl Fn(isize, isize) -> [i32; 4]) -> [u8; 4] {
+    use crate::util::simd::{add_i32x4, divk_i32x4, mulk_i32x4, sub_i32x4};
+    let c = t(0, 0);
+    let diag = add_i32x4(add_i32x4(t(-1, -1), t(1, -1)), add_i32x4(t(-1, 1), t(1, 1)));
+    let lapl = add_i32x4(add_i32x4(t(0, -2), t(0, 2)), add_i32x4(t(-2, 0), t(2, 0)));
+    clamp8x4(divk_i32x4(
+        sub_i32x4(
+            add_i32x4(mulk_i32x4(diag, 2), mulk_i32x4(c, 6)),
+            divk_i32x4(mulk_i32x4(lapl, 3), 2),
+        ),
+        8,
+    ))
+}
+
+/// Demosaic one output row through the clamped window former (the
+/// scalar oracle path used by band edges, borders and lane remainders).
+fn demosaic_row_scalar(
+    data: &[u8],
+    width: usize,
+    height: usize,
+    cy: usize,
+    ob: usize,
+    br: &mut [u8],
+    bg: &mut [u8],
+    bb: &mut [u8],
+) {
+    for cx in 0..width {
+        let win = window_at::<5>(data, width, height, cx, cy);
+        let (r, g, b) = demosaic_window(&win, cx, cy);
+        br[ob + cx] = r;
+        bg[ob + cx] = g;
+        bb[ob + cx] = b;
+    }
+}
+
+/// SIMD-lane demosaic of one output row: interior rows process four
+/// same-parity centers per block (one Bayer phase → one stencil for all
+/// four lanes) with direct flat-index tap gathers; border rows/columns
+/// and lane remainders fall back to [`demosaic_row_scalar`]. Bit-exact
+/// with the scalar path by construction (exact i32 lane arithmetic).
+fn demosaic_row_lanes(
+    data: &[u8],
+    width: usize,
+    height: usize,
+    cy: usize,
+    ob: usize,
+    br: &mut [u8],
+    bg: &mut [u8],
+    bb: &mut [u8],
+) {
+    use crate::util::simd::LANES;
+    if cy < 2 || cy + 2 >= height || width < 2 + 2 * LANES + 2 {
+        demosaic_row_scalar(data, width, height, cy, ob, br, bg, bb);
+        return;
+    }
+    let row = cy * width;
+    // first uncovered same-parity column per Bayer phase
+    let mut tail = [2usize, 3];
+    for (p, tl) in tail.iter_mut().enumerate() {
+        let color = bayer_color(2 + p, cy);
+        let mut x = 2 + p;
+        while x + 2 * LANES < width {
+            let t = |dx: isize, dy: isize| -> [i32; 4] {
+                let base = ((cy as isize + dy) * width as isize + x as isize + dx)
+                    as usize;
+                [
+                    data[base] as i32,
+                    data[base + 2] as i32,
+                    data[base + 4] as i32,
+                    data[base + 6] as i32,
+                ]
+            };
+            let c = [data[row + x], data[row + x + 2], data[row + x + 4], data[row + x + 6]];
+            let (r4, g4, b4) = match color {
+                BayerColor::Red => (c, green_at_rb_x4(&t), rb_at_br_x4(&t)),
+                BayerColor::GreenR => (rb_at_green_h_x4(&t), c, rb_at_green_v_x4(&t)),
+                BayerColor::GreenB => (rb_at_green_v_x4(&t), c, rb_at_green_h_x4(&t)),
+                BayerColor::Blue => (rb_at_br_x4(&t), green_at_rb_x4(&t), c),
+            };
+            for l in 0..LANES {
+                let o = ob + x + 2 * l;
+                br[o] = r4[l];
+                bg[o] = g4[l];
+                bb[o] = b4[l];
+            }
+            x += 2 * LANES;
+        }
+        *tl = x;
+    }
+    for cx in 0..width {
+        if cx >= 2 && cx < tail[cx % 2] {
+            continue; // lane-covered
+        }
+        let win = window_at::<5>(data, width, height, cx, cy);
+        let (r, g, b) = demosaic_window(&win, cx, cy);
+        br[ob + cx] = r;
+        bg[ob + cx] = g;
+        bb[ob + cx] = b;
+    }
+}
+
 /// Streaming Malvar–He–Cutler demosaic into a caller-owned RGB image
 /// (planes resized in place, reusing their allocations).
 pub fn demosaic_frame_into(raw: &ImageU8, rgb: &mut PlanarRgb) {
@@ -129,6 +280,9 @@ pub fn demosaic_frame_into_par(pool: &WorkerPool, raw: &ImageU8, rgb: &mut Plana
     rgb.b.resize(n, 0);
     let bounds = band_bounds(height, pool.size());
     let data = &raw.data;
+    // lane kernel vs scalar oracle: bit-identical either way (proven by
+    // `lane_rows_bit_identical_to_scalar_rows`)
+    let row_fn = if pool.simd_enabled() { demosaic_row_lanes } else { demosaic_row_scalar };
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
     let chunks_r = split_bands(rgb.r.as_mut_slice(), &bounds, width);
     let chunks_g = split_bands(rgb.g.as_mut_slice(), &bounds, width);
@@ -138,14 +292,7 @@ pub fn demosaic_frame_into_par(pool: &WorkerPool, raw: &ImageU8, rgb: &mut Plana
     {
         jobs.push(Box::new(move || {
             for cy in y0..y1 {
-                for cx in 0..width {
-                    let win = window_at::<5>(data, width, height, cx, cy);
-                    let (r, g, b) = demosaic_window(&win, cx, cy);
-                    let i = (cy - y0) * width + cx;
-                    br[i] = r;
-                    bg[i] = g;
-                    bb[i] = b;
-                }
+                row_fn(data, width, height, cy, (cy - y0) * width, br, bg, bb);
             }
         }));
     }
@@ -292,6 +439,49 @@ mod tests {
             let mut got = PlanarRgb::new(0, 0);
             demosaic_frame_into_par(&pool, &raw, &mut got);
             assert_eq!(got, want, "{workers} workers");
+        }
+    }
+
+    #[test]
+    fn lane_rows_bit_identical_to_scalar_rows() {
+        // widths straddling the lane-block minimum (12), odd sizes and a
+        // wide frame: every row of the lane kernel must match the scalar
+        // oracle byte for byte, including border rows and remainders
+        let mut rng = SplitMix64::new(0x1A4E);
+        for &(w, h) in &[(8usize, 6usize), (12, 5), (13, 9), (21, 8), (40, 11)] {
+            let frame = ImageU8::from_fn(w, h, |x, y| {
+                (30 + (x * 7 + y * 5) % 180 + (rng.next_u32() % 12) as usize) as u8
+            });
+            let raw = mosaic_clean(&colorize(&frame));
+            for cy in 0..h {
+                let mut want = (vec![0u8; w], vec![0u8; w], vec![0u8; w]);
+                demosaic_row_scalar(
+                    &raw.data, w, h, cy, 0, &mut want.0, &mut want.1, &mut want.2,
+                );
+                let mut got = (vec![0u8; w], vec![0u8; w], vec![0u8; w]);
+                demosaic_row_lanes(
+                    &raw.data, w, h, cy, 0, &mut got.0, &mut got.1, &mut got.2,
+                );
+                assert_eq!(got, want, "{w}x{h} row {cy}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_toggle_does_not_change_banded_output() {
+        use crate::runtime::pool::WorkerPool;
+        let mut rng = SplitMix64::new(77);
+        let frame = ImageU8::from_fn(33, 14, |x, y| {
+            (50 + (x * 3 + y * 11) % 150 + (rng.next_u32() % 9) as usize) as u8
+        });
+        let raw = mosaic_clean(&colorize(&frame));
+        let want = demosaic_frame(&raw);
+        for simd in [false, true] {
+            let pool = WorkerPool::new(3);
+            pool.set_simd_enabled(simd);
+            let mut got = PlanarRgb::new(0, 0);
+            demosaic_frame_into_par(&pool, &raw, &mut got);
+            assert_eq!(got, want, "simd={simd}");
         }
     }
 

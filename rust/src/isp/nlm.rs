@@ -275,6 +275,165 @@ fn nlm_band_incremental(
     }
 }
 
+/// Load four consecutive u32s as a lane block.
+#[inline(always)]
+fn ld4(s: &[u32]) -> [u32; 4] {
+    [s[0], s[1], s[2], s[3]]
+}
+
+/// Widen four consecutive u8 pixels to a u32 lane block.
+#[inline(always)]
+fn u8x4(s: &[u8]) -> [u32; 4] {
+    [s[0] as u32, s[1] as u32, s[2] as u32, s[3] as u32]
+}
+
+/// SIMD-lane variant of [`nlm_band_incremental`]: per search offset the
+/// column SSDs `C(u)` are materialized into a line buffer (`cols[u + 1]
+/// = C(u)`), computed four columns per lane block over the unclamped
+/// interior, and the bin/LUT/accumulate loop then consumes the buffer
+/// four pixels per block. Every operation is exact u32/i32 integer
+/// arithmetic through [`crate::util::simd`] — `patchSSD(cx) = cols[cx]
+/// + cols[cx+1] + cols[cx+2]` reproduces the recurrence's
+/// `c_prev + c_cur + c_next` sum exactly, so outputs are bit-identical
+/// to the scalar oracle (clamped edge columns and lane remainders run
+/// the scalar formula on the same buffer).
+#[allow(clippy::too_many_arguments)]
+fn nlm_band_incremental_lanes(
+    luma: &[u8],
+    r: &[u8],
+    g: &[u8],
+    b: &[u8],
+    width: usize,
+    height: usize,
+    lut: &[u16; 16],
+    search: usize,
+    y0: usize,
+    y1: usize,
+    out_r: &mut [u8],
+    out_g: &mut [u8],
+    out_b: &mut [u8],
+) {
+    use crate::util::simd::{add_u32x4, divk_u32x4, mul_i32x4, mul_u32x4, sub_i32x4, LANES};
+    let s = search.min(2) as isize;
+    let w_i = width as isize;
+    let h_i = height as isize;
+    let mut den = vec![0u32; width];
+    let mut num_r = vec![0u32; width];
+    let mut num_g = vec![0u32; width];
+    let mut num_b = vec![0u32; width];
+    // column-SSD line buffer: cols[u + 1] = C(u) for u in -1..=width
+    let mut cols = vec![0u32; width + 2];
+    for cy in y0..y1 {
+        let row0 = cy * width;
+        for x in 0..width {
+            den[x] = 256;
+            num_r[x] = 256 * r[row0 + x] as u32;
+            num_g[x] = 256 * g[row0 + x] as u32;
+            num_b[x] = 256 * b[row0 + x] as u32;
+        }
+        for dy in -s..=s {
+            for dx in -s..=s {
+                if dx == 0 && dy == 0 {
+                    continue;
+                }
+                let row_start =
+                    |off: isize| ((cy as isize + off).clamp(0, h_i - 1) as usize) * width;
+                let (r_a0, r_a1, r_a2) = (row_start(-1), row_start(0), row_start(1));
+                let (r_b0, r_b1, r_b2) =
+                    (row_start(dy - 1), row_start(dy), row_start(dy + 1));
+                let a0 = &luma[r_a0..r_a0 + width];
+                let a1 = &luma[r_a1..r_a1 + width];
+                let a2 = &luma[r_a2..r_a2 + width];
+                let b0 = &luma[r_b0..r_b0 + width];
+                let b1 = &luma[r_b1..r_b1 + width];
+                let b2 = &luma[r_b2..r_b2 + width];
+                let col = |u: isize| -> u32 {
+                    let ax = u.clamp(0, w_i - 1) as usize;
+                    let bx = (u + dx).clamp(0, w_i - 1) as usize;
+                    let d0 = a0[ax] as i32 - b0[bx] as i32;
+                    let d1 = a1[ax] as i32 - b1[bx] as i32;
+                    let d2 = a2[ax] as i32 - b2[bx] as i32;
+                    (d0 * d0 + d1 * d1 + d2 * d2) as u32
+                };
+                // unclamped interior of C(u): both u and u+dx in range
+                let lo = (-dx).max(0) as usize;
+                let hi = (w_i - dx.max(0)).max(lo as isize) as usize;
+                for u in -1..lo as isize {
+                    cols[(u + 1) as usize] = col(u);
+                }
+                let mut u = lo;
+                while u + LANES <= hi {
+                    let bo = (u as isize + dx) as usize;
+                    let i8x4 = |p: &[u8], o: usize| {
+                        [p[o] as i32, p[o + 1] as i32, p[o + 2] as i32, p[o + 3] as i32]
+                    };
+                    let sq = |a: &[u8], bb: &[u8]| {
+                        let d = sub_i32x4(i8x4(a, u), i8x4(bb, bo));
+                        mul_i32x4(d, d)
+                    };
+                    let (s0, s1, s2) = (sq(a0, b0), sq(a1, b1), sq(a2, b2));
+                    for l in 0..LANES {
+                        cols[u + 1 + l] = (s0[l] + s1[l] + s2[l]) as u32;
+                    }
+                    u += LANES;
+                }
+                for u in u as isize..=w_i {
+                    cols[(u + 1) as usize] = col(u);
+                }
+                let src_row = ((cy as isize + dy).clamp(0, h_i - 1) as usize) * width;
+                let mut cx = 0usize;
+                while cx < width {
+                    if cx >= lo && cx + LANES <= hi {
+                        // mean SSD over the three cached columns, then
+                        // bin → LUT → accumulate, four pixels at once
+                        let ssd = divk_u32x4(
+                            add_u32x4(
+                                add_u32x4(ld4(&cols[cx..]), ld4(&cols[cx + 1..])),
+                                ld4(&cols[cx + 2..]),
+                            ),
+                            9,
+                        );
+                        let mut wgt = [0u32; LANES];
+                        for l in 0..LANES {
+                            let bin = ((ssd[l] >> SSD_SHIFT) as usize).min(15);
+                            wgt[l] = lut[bin] as u32;
+                        }
+                        let idx = (src_row as isize + cx as isize + dx) as usize;
+                        let d4 = add_u32x4(ld4(&den[cx..]), wgt);
+                        den[cx..cx + LANES].copy_from_slice(&d4);
+                        let nr = add_u32x4(ld4(&num_r[cx..]), mul_u32x4(wgt, u8x4(&r[idx..])));
+                        num_r[cx..cx + LANES].copy_from_slice(&nr);
+                        let ng = add_u32x4(ld4(&num_g[cx..]), mul_u32x4(wgt, u8x4(&g[idx..])));
+                        num_g[cx..cx + LANES].copy_from_slice(&ng);
+                        let nb = add_u32x4(ld4(&num_b[cx..]), mul_u32x4(wgt, u8x4(&b[idx..])));
+                        num_b[cx..cx + LANES].copy_from_slice(&nb);
+                        cx += LANES;
+                    } else {
+                        // clamped edge / lane remainder: scalar formula
+                        // on the same column buffer
+                        let ssd = (cols[cx] + cols[cx + 1] + cols[cx + 2]) / 9;
+                        let bin = ((ssd >> SSD_SHIFT) as usize).min(15);
+                        let wgt = lut[bin] as u32;
+                        let sx = (cx as isize + dx).clamp(0, w_i - 1) as usize;
+                        let idx = src_row + sx;
+                        den[cx] += wgt;
+                        num_r[cx] += wgt * r[idx] as u32;
+                        num_g[cx] += wgt * g[idx] as u32;
+                        num_b[cx] += wgt * b[idx] as u32;
+                        cx += 1;
+                    }
+                }
+            }
+        }
+        let base = (cy - y0) * width;
+        for x in 0..width {
+            out_r[base + x] = ((num_r[x] + den[x] / 2) / den[x]) as u8;
+            out_g[base + x] = ((num_g[x] + den[x] / 2) / den[x]) as u8;
+            out_b[base + x] = ((num_b[x] + den[x] / 2) / den[x]) as u8;
+        }
+    }
+}
+
 /// Fill `luma` with the BT.601 integer approximation `(2R + 5G + B) / 8`
 /// — the ONE place the shared-weight luma expression lives.
 fn luma_plane_into(r: &[u8], g: &[u8], b: &[u8], n: usize, luma: &mut Vec<u8>) {
@@ -339,6 +498,7 @@ pub fn nlm_rgb_shared_into_par(
     let bounds = band_bounds(height, pool.size());
     let (lut, luma) = (&lut, &luma[..]);
     let (r, g, b) = (&src.r[..], &src.g[..], &src.b[..]);
+    let simd = pool.simd_enabled();
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
     let chunks_r = split_bands(dst.r.as_mut_slice(), &bounds, width);
     let chunks_g = split_bands(dst.g.as_mut_slice(), &bounds, width);
@@ -347,10 +507,12 @@ pub fn nlm_rgb_shared_into_par(
         chunks_r.into_iter().zip(chunks_g).zip(chunks_b).zip(&bounds)
     {
         let search = cfg.search;
+        // lane kernel vs scalar oracle: bit-identical bytes either way
+        // (`lane_band_bit_identical_to_scalar_band`), so the dispatch —
+        // like the band split — trades wall time only
+        let band = if simd { nlm_band_incremental_lanes } else { nlm_band_incremental };
         jobs.push(Box::new(move || {
-            nlm_band_incremental(
-                luma, r, g, b, width, height, lut, search, y0, y1, br, bg, bb,
-            );
+            band(luma, r, g, b, width, height, lut, search, y0, y1, br, bg, bb);
         }));
     }
     pool.run_scoped(jobs);
@@ -562,6 +724,68 @@ mod tests {
                 assert_eq!(got, want, "{w}x{h} @ {workers} workers");
             }
         }
+    }
+
+    #[test]
+    fn lane_band_bit_identical_to_scalar_band() {
+        // widths below/at/above the lane width, odd sizes, both search
+        // radii: the lane kernel must reproduce the scalar oracle byte
+        // for byte on every band split
+        let mut rng = SplitMix64::new(0x51D0);
+        for &(w, h) in &[(3usize, 5usize), (4, 4), (5, 9), (16, 12), (23, 7), (64, 6)] {
+            for search in [1usize, 2] {
+                let n = w * h;
+                let src = PlanarRgb {
+                    width: w,
+                    height: h,
+                    r: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+                    g: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+                    b: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+                };
+                let lut = weight_lut(10.0);
+                let mut luma = Vec::new();
+                luma_plane_into(&src.r, &src.g, &src.b, n, &mut luma);
+                for (y0, y1) in [(0usize, h), (0, h / 2), (h / 2, h)] {
+                    let bn = (y1 - y0) * w;
+                    let mut want = (vec![0u8; bn], vec![0u8; bn], vec![0u8; bn]);
+                    nlm_band_incremental(
+                        &luma, &src.r, &src.g, &src.b, w, h, &lut, search, y0, y1,
+                        &mut want.0, &mut want.1, &mut want.2,
+                    );
+                    let mut got = (vec![0u8; bn], vec![0u8; bn], vec![0u8; bn]);
+                    nlm_band_incremental_lanes(
+                        &luma, &src.r, &src.g, &src.b, w, h, &lut, search, y0, y1,
+                        &mut got.0, &mut got.1, &mut got.2,
+                    );
+                    assert_eq!(got, want, "{w}x{h} s={search} band {y0}..{y1}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_toggle_does_not_change_banded_output() {
+        use crate::runtime::pool::WorkerPool;
+        let mut rng = SplitMix64::new(0x5EED);
+        let n = 20 * 14;
+        let src = PlanarRgb {
+            width: 20,
+            height: 14,
+            r: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+            g: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+            b: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+        };
+        let cfg = NlmConfig::default();
+        let mut outs = Vec::new();
+        for simd in [false, true] {
+            let pool = WorkerPool::new(3);
+            pool.set_simd_enabled(simd);
+            let mut got = PlanarRgb::new(0, 0);
+            let mut luma = Vec::new();
+            nlm_rgb_shared_into_par(&pool, &src, &cfg, &mut got, &mut luma);
+            outs.push(got);
+        }
+        assert_eq!(outs[0], outs[1], "simd on/off must be bit-identical");
     }
 
     #[test]

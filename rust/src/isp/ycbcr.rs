@@ -68,6 +68,124 @@ pub fn ycbcr_to_rgb(y: u8, cb: u8, cr: u8) -> (u8, u8, u8) {
     )
 }
 
+/// Lane form of [`rgb_to_ycbcr`] over four pixels: the same Q2.14
+/// coefficient products and exact i64 sums per lane, then the scalar
+/// round-shift/bias/clamp — bit-identical to the scalar conversion.
+#[inline(always)]
+fn rgb_to_ycbcr_x4(r: [i64; 4], g: [i64; 4], b: [i64; 4]) -> ([u8; 4], [u8; 4], [u8; 4]) {
+    use crate::util::simd::{add_i64x4, mulk_i64x4};
+    let dot = |kr: i64, kg: i64, kb: i64| {
+        add_i64x4(add_i64x4(mulk_i64x4(r, kr), mulk_i64x4(g, kg)), mulk_i64x4(b, kb))
+    };
+    let y = dot(Coef::YR, Coef::YG, Coef::YB);
+    let cb = dot(Coef::CBR, Coef::CBG, Coef::CBB);
+    let cr = dot(Coef::CRR, Coef::CRG, Coef::CRB);
+    let mut out = ([0u8; 4], [0u8; 4], [0u8; 4]);
+    for l in 0..4 {
+        out.0[l] = rshift(y[l], CSC_FRAC).clamp(0, 255) as u8;
+        out.1[l] = (rshift(cb[l], CSC_FRAC) + 128).clamp(0, 255) as u8;
+        out.2[l] = (rshift(cr[l], CSC_FRAC) + 128).clamp(0, 255) as u8;
+    }
+    out
+}
+
+/// Lane form of [`ycbcr_to_rgb`] over four pixels (`cb`/`cr` already
+/// de-biased by 128, as in the scalar body).
+#[inline(always)]
+fn ycbcr_to_rgb_x4(y: [i64; 4], cb: [i64; 4], cr: [i64; 4]) -> ([u8; 4], [u8; 4], [u8; 4]) {
+    use crate::util::simd::{add_i64x4, mulk_i64x4};
+    let ysh = mulk_i64x4(y, 1 << CSC_FRAC);
+    let r = add_i64x4(ysh, mulk_i64x4(cr, Coef::RCR));
+    let g = add_i64x4(add_i64x4(ysh, mulk_i64x4(cb, Coef::GCB)), mulk_i64x4(cr, Coef::GCR));
+    let b = add_i64x4(ysh, mulk_i64x4(cb, Coef::BCB));
+    let mut out = ([0u8; 4], [0u8; 4], [0u8; 4]);
+    for l in 0..4 {
+        out.0[l] = rshift(r[l], CSC_FRAC).clamp(0, 255) as u8;
+        out.1[l] = rshift(g[l], CSC_FRAC).clamp(0, 255) as u8;
+        out.2[l] = rshift(b[l], CSC_FRAC).clamp(0, 255) as u8;
+    }
+    out
+}
+
+/// Forward CSC over one band's plane chunks (`base` indexes the shared
+/// input planes): 4-pixel lane blocks when `simd`, scalar conversion on
+/// the remainder and the scalar path — bit-identical either way.
+fn csc_forward_band(
+    r: &[u8],
+    g: &[u8],
+    b: &[u8],
+    base: usize,
+    by: &mut [u8],
+    bcb: &mut [u8],
+    bcr: &mut [u8],
+    simd: bool,
+) {
+    use crate::util::simd::LANES;
+    let n = by.len();
+    let mut i = 0;
+    if simd {
+        let w4 = |p: &[u8], o: usize| {
+            [p[o] as i64, p[o + 1] as i64, p[o + 2] as i64, p[o + 3] as i64]
+        };
+        while i + LANES <= n {
+            let o = base + i;
+            let (y4, cb4, cr4) = rgb_to_ycbcr_x4(w4(r, o), w4(g, o), w4(b, o));
+            by[i..i + LANES].copy_from_slice(&y4);
+            bcb[i..i + LANES].copy_from_slice(&cb4);
+            bcr[i..i + LANES].copy_from_slice(&cr4);
+            i += LANES;
+        }
+    }
+    for i in i..n {
+        let (y, cb, cr) = rgb_to_ycbcr(r[base + i], g[base + i], b[base + i]);
+        by[i] = y;
+        bcb[i] = cb;
+        bcr[i] = cr;
+    }
+}
+
+/// Inverse CSC over one band's plane chunks — lane twin of the scalar
+/// loop in [`csc_sharpen_into`].
+fn csc_inverse_band(
+    ys: &[u8],
+    cb: &[u8],
+    cr: &[u8],
+    base: usize,
+    br: &mut [u8],
+    bg: &mut [u8],
+    bb: &mut [u8],
+    simd: bool,
+) {
+    use crate::util::simd::LANES;
+    let n = br.len();
+    let mut i = 0;
+    if simd {
+        let w4 = |p: &[u8], o: usize, bias: i64| {
+            [
+                p[o] as i64 - bias,
+                p[o + 1] as i64 - bias,
+                p[o + 2] as i64 - bias,
+                p[o + 3] as i64 - bias,
+            ]
+        };
+        while i + LANES <= n {
+            let o = base + i;
+            let (r4, g4, b4) =
+                ycbcr_to_rgb_x4(w4(ys, o, 0), w4(cb, o, 128), w4(cr, o, 128));
+            br[i..i + LANES].copy_from_slice(&r4);
+            bg[i..i + LANES].copy_from_slice(&g4);
+            bb[i..i + LANES].copy_from_slice(&b4);
+            i += LANES;
+        }
+    }
+    for i in i..n {
+        let (r, g, b) = ycbcr_to_rgb(ys[base + i], cb[base + i], cr[base + i]);
+        br[i] = r;
+        bg[i] = g;
+        bb[i] = b;
+    }
+}
+
 /// YCbCr planes of an RGB image.
 #[derive(Debug, Clone, Default)]
 pub struct YCbCr {
@@ -210,6 +328,7 @@ pub fn csc_sharpen_into_par(
     scratch.ycc.cb.resize(n, 0);
     scratch.ycc.cr.resize(n, 0);
     let bounds = band_bounds(height, pool.size());
+    let simd = pool.simd_enabled();
     {
         let (r, g, b) = (&rgb.r[..], &rgb.g[..], &rgb.b[..]);
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
@@ -221,12 +340,7 @@ pub fn csc_sharpen_into_par(
         {
             let base = y0 * width;
             jobs.push(Box::new(move || {
-                for i in 0..by.len() {
-                    let (y, cb, cr) = rgb_to_ycbcr(r[base + i], g[base + i], b[base + i]);
-                    by[i] = y;
-                    bcb[i] = cb;
-                    bcr[i] = cr;
-                }
+                csc_forward_band(r, g, b, base, by, bcb, bcr, simd);
             }));
         }
         pool.run_scoped(jobs);
@@ -275,12 +389,7 @@ pub fn csc_sharpen_into_par(
         {
             let base = y0 * width;
             jobs.push(Box::new(move || {
-                for i in 0..br.len() {
-                    let (r, g, b) = ycbcr_to_rgb(ys[base + i], cb[base + i], cr[base + i]);
-                    br[i] = r;
-                    bg[i] = g;
-                    bb[i] = b;
-                }
+                csc_inverse_band(ys, cb, cr, base, br, bg, bb, simd);
             }));
         }
         pool.run_scoped(jobs);
@@ -365,6 +474,66 @@ mod tests {
                     csc_sharpen_into_par(&pool, &src, strength, &mut scratch, &mut got);
                     assert_eq!(got, want, "{w}x{h} s={strength} @ {workers} workers");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_csc_bit_identical_to_scalar() {
+        forall("csc lanes vs scalar", 200, |g| {
+            let px: Vec<(u8, u8, u8)> = (0..4).map(|_| (g.u8(), g.u8(), g.u8())).collect();
+            let r4 = [px[0].0 as i64, px[1].0 as i64, px[2].0 as i64, px[3].0 as i64];
+            let g4 = [px[0].1 as i64, px[1].1 as i64, px[2].1 as i64, px[3].1 as i64];
+            let b4 = [px[0].2 as i64, px[1].2 as i64, px[2].2 as i64, px[3].2 as i64];
+            let (y4, cb4, cr4) = rgb_to_ycbcr_x4(r4, g4, b4);
+            for l in 0..4 {
+                let (y, cb, cr) = rgb_to_ycbcr(px[l].0, px[l].1, px[l].2);
+                assert_eq!((y4[l], cb4[l], cr4[l]), (y, cb, cr), "fwd lane {l}");
+            }
+            let yb = [y4[0] as i64, y4[1] as i64, y4[2] as i64, y4[3] as i64];
+            let cbb = [
+                cb4[0] as i64 - 128,
+                cb4[1] as i64 - 128,
+                cb4[2] as i64 - 128,
+                cb4[3] as i64 - 128,
+            ];
+            let crb = [
+                cr4[0] as i64 - 128,
+                cr4[1] as i64 - 128,
+                cr4[2] as i64 - 128,
+                cr4[3] as i64 - 128,
+            ];
+            let (rr4, gg4, bb4) = ycbcr_to_rgb_x4(yb, cbb, crb);
+            for l in 0..4 {
+                let (r, gg, b) = ycbcr_to_rgb(y4[l], cb4[l], cr4[l]);
+                assert_eq!((rr4[l], gg4[l], bb4[l]), (r, gg, b), "inv lane {l}");
+            }
+        });
+    }
+
+    #[test]
+    fn simd_toggle_does_not_change_banded_output() {
+        use crate::runtime::pool::WorkerPool;
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(0x51AD);
+        // widths below and above the lane width, with remainders
+        for &(w, h) in &[(3usize, 4usize), (18, 7), (21, 6)] {
+            let n = w * h;
+            let src = PlanarRgb {
+                width: w,
+                height: h,
+                r: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+                g: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+                b: (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect(),
+            };
+            let want = csc_sharpen(&src, 0.5);
+            for simd in [false, true] {
+                let pool = WorkerPool::new(3);
+                pool.set_simd_enabled(simd);
+                let mut scratch = CscScratch::default();
+                let mut got = PlanarRgb::new(0, 0);
+                csc_sharpen_into_par(&pool, &src, 0.5, &mut scratch, &mut got);
+                assert_eq!(got, want, "{w}x{h} simd={simd}");
             }
         }
     }

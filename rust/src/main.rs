@@ -54,6 +54,7 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "isp-stages", help: "ISP stage mask: \"all\", a list of stages to enable (dpc,awb,demosaic,nlm,gamma,csc), or -stage terms to drop from the full graph (e.g. \"-nlm,-csc\")", is_switch: false, default: None },
         FlagSpec { name: "sparse-threshold", help: "SNN activity-adaptive dispatch threshold: spike rate (0..1) above which the NPU plans a layer onto the dense kernel instead of the event-driven sparse path (outputs are identical either way; drives the sparse/dense split reported in metrics and the fleet report)", is_switch: false, default: None },
         FlagSpec { name: "workers", help: "deterministic worker-pool width for ISP row bands and SNN channel bands (0 = available_parallelism, 1 = inline scalar path; outputs are bit-identical for any value)", is_switch: false, default: None },
+        FlagSpec { name: "simd", help: "SIMD lane dispatch for the per-core kernels: on = force the 4-wide lane kernels, off = force the scalar oracles, auto = enabled unless ACELERADOR_SIMD opts out (outputs and digests are bit-identical either way; trades wall time only)", is_switch: false, default: None },
         FlagSpec { name: "feedback-latency", help: "parameter-bus feedback-latency register in frames: 0 = serial schedule (decide and apply inside the same window, bit-exact with the classic loop), >= 1 = pipelined schedule (window t's ISP render overlaps its NPU inference; commands land latency frame boundaries after their source window). Each value has its own deterministic digest", is_switch: false, default: None },
         FlagSpec { name: "trace", help: "run/fleet: write a Chrome trace-event JSON file (open in Perfetto or chrome://tracing) with per-window Sense/Infer/Decide/Render spans, NPU queue/execute spans, and band-job child spans, then print a span summary and the watchdog health line. Tracing is observational: digests are bit-identical with and without it", is_switch: false, default: None },
     ]
@@ -84,6 +85,9 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
         cfg.runtime.workers = w
             .parse()
             .map_err(|_| anyhow::anyhow!("--workers must be a non-negative integer"))?;
+    }
+    if let Some(s) = args.explicit("simd") {
+        cfg.runtime.simd = s.to_string();
     }
     if let Some(l) = args.explicit("feedback-latency") {
         cfg.loop_.feedback_latency = l.parse().map_err(|_| {
@@ -306,9 +310,10 @@ fn cmd_isp(args: &Args) -> Result<()> {
     });
     let cap = SensorModel::default().capture(&frame, &mut rng);
     let mut isp = IspPipeline::new(&cfg.isp);
-    isp.set_worker_pool(acelerador::runtime::pool::WorkerPool::new(
-        cfg.runtime.resolve_workers(),
-    ));
+    let pool =
+        acelerador::runtime::pool::WorkerPool::new(cfg.runtime.resolve_workers());
+    pool.set_simd_enabled(cfg.runtime.resolve_simd());
+    isp.set_worker_pool(pool);
     let mut last = None;
     for _ in 0..4 {
         last = Some(isp.process(&cap.raw));

@@ -428,6 +428,9 @@ pub struct PoolMetrics {
     /// µs during which at least one parallel region was open (exclusive
     /// across overlapping submitters — see `pool::PoolStats::span_us`).
     pub span_us: Gauge,
+    /// Effective SIMD lane width of the per-core kernels (4 when the
+    /// lane kernels dispatch, 1 when the scalar oracles run).
+    pub simd_lanes: Gauge,
 }
 
 impl PoolMetrics {
@@ -438,6 +441,7 @@ impl PoolMetrics {
         self.tasks.set(stats.tasks);
         self.busy_us.set(stats.busy_us as u64);
         self.span_us.set(stats.span_us as u64);
+        self.simd_lanes.set(stats.simd_lanes as u64);
     }
 
     /// `busy / (span * workers)` — the fraction of open parallel-region
@@ -469,6 +473,7 @@ impl PoolMetrics {
             ("tasks", Json::num(self.tasks.get() as f64)),
             ("busy_us", Json::num(self.busy_us.get() as f64)),
             ("span_us", Json::num(self.span_us.get() as f64)),
+            ("simd_lanes", Json::num(self.simd_lanes.get() as f64)),
             ("utilization", Json::num(self.utilization())),
         ])
     }
@@ -714,6 +719,7 @@ impl SystemMetrics {
         r.gauge("pool.tasks", self.pool.tasks.get() as f64);
         r.gauge("pool.busy_us", self.pool.busy_us.get() as f64);
         r.gauge("pool.span_us", self.pool.span_us.get() as f64);
+        r.gauge("pool.simd_lanes", self.pool.simd_lanes.get() as f64);
         r.gauge("pool.utilization", self.pool.utilization());
         r.gauge("pipe.depth", self.pipeline.depth.get() as f64);
         r.gauge("pipe.inflight_peak", self.pipeline.inflight_peak.get() as f64);
@@ -963,9 +969,11 @@ mod tests {
             tasks: 40,
             busy_us: 2000.0,
             span_us: 1000.0,
+            simd_lanes: 4,
         };
         m.pool.record(&stats);
         assert_eq!(m.pool.workers.get(), 4);
+        assert_eq!(m.pool.simd_lanes.get(), 4);
         assert!((m.pool.utilization() - 0.5).abs() < 1e-9);
         let j = m.snapshot();
         let pool = j.get(POOL_KEY).expect("snapshot must carry a pool section");

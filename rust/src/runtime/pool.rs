@@ -109,6 +109,9 @@ pub struct PoolStats {
     /// Wall time at least one parallel region was open (µs; overlapping
     /// submitters count an interval once).
     pub span_us: f64,
+    /// SIMD lane width the banded kernels dispatch with (1 = scalar
+    /// oracle path, [`crate::util::simd::LANES`] = lane kernels).
+    pub simd_lanes: usize,
 }
 
 impl PoolStats {
@@ -144,6 +147,10 @@ pub struct WorkerPool {
     /// relaxed load.
     trace_on: AtomicBool,
     tracer: Mutex<Tracer>,
+    /// SIMD dispatch gate the banded kernels consult: `true` selects the
+    /// lane kernels, `false` the scalar oracles. Bit-identical either
+    /// way (`tests/simd_parity.rs`); defaults from `ACELERADOR_SIMD`.
+    simd_on: AtomicBool,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -187,6 +194,7 @@ impl WorkerPool {
             span: SpanTracker::default(),
             trace_on: AtomicBool::new(false),
             tracer: Mutex::new(Tracer::disabled()),
+            simd_on: AtomicBool::new(default_simd_enabled()),
             threads,
         })
     }
@@ -218,6 +226,28 @@ impl WorkerPool {
     /// True when this pool runs everything inline on the caller.
     pub fn is_inline(&self) -> bool {
         self.threads.is_empty()
+    }
+
+    /// Select the SIMD lane kernels (`true`) or the scalar oracles
+    /// (`false`) for every banded kernel dispatching on this pool.
+    /// Outputs are bit-identical either way — this trades wall time only.
+    pub fn set_simd_enabled(&self, on: bool) {
+        self.simd_on.store(on, Ordering::Release);
+    }
+
+    /// Whether banded kernels take the SIMD lane path.
+    pub fn simd_enabled(&self) -> bool {
+        self.simd_on.load(Ordering::Acquire)
+    }
+
+    /// Lane width the kernels dispatch with right now (1 = scalar) —
+    /// the `pool.simd_lanes` telemetry gauge.
+    pub fn simd_lanes(&self) -> usize {
+        if self.simd_enabled() {
+            crate::util::simd::LANES
+        } else {
+            1
+        }
     }
 
     /// Execute the scoped band jobs, blocking until every one completes.
@@ -356,6 +386,7 @@ impl WorkerPool {
             tasks: self.counters.tasks.load(Ordering::Relaxed),
             busy_us: self.counters.busy_ns.load(Ordering::Relaxed) as f64 / 1e3,
             span_us: self.counters.span_ns.load(Ordering::Relaxed) as f64 / 1e3,
+            simd_lanes: self.simd_lanes(),
         }
     }
 }
@@ -396,6 +427,18 @@ fn worker_loop(queue: Arc<JobQueue>) {
 /// The machine's parallelism (>= 1) — the `runtime.workers = 0` default.
 pub fn auto_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The environment default for SIMD dispatch (`runtime.simd = "auto"`
+/// and freshly built pools): `ACELERADOR_SIMD=off|0|false` forces the
+/// scalar oracles, anything else (including unset) enables the lane
+/// kernels. This is how the CI matrix drives a plain `cargo test` down
+/// both paths without threading a flag through every test.
+pub fn default_simd_enabled() -> bool {
+    !matches!(
+        std::env::var("ACELERADOR_SIMD").ok().as_deref(),
+        Some("off") | Some("0") | Some("false")
+    )
 }
 
 /// Split `data` into one disjoint mutable chunk per band: band `(b0, b1)`
@@ -580,10 +623,37 @@ mod tests {
 
     #[test]
     fn utilization_is_bounded() {
-        let s = PoolStats { workers: 4, runs: 1, tasks: 4, busy_us: 1e9, span_us: 1.0 };
+        let s = PoolStats {
+            workers: 4,
+            runs: 1,
+            tasks: 4,
+            busy_us: 1e9,
+            span_us: 1.0,
+            simd_lanes: 1,
+        };
         assert!(s.utilization() <= 1.0);
-        let idle = PoolStats { workers: 4, runs: 0, tasks: 0, busy_us: 0.0, span_us: 0.0 };
+        let idle = PoolStats {
+            workers: 4,
+            runs: 0,
+            tasks: 0,
+            busy_us: 0.0,
+            span_us: 0.0,
+            simd_lanes: 4,
+        };
         assert_eq!(idle.utilization(), 0.0);
+    }
+
+    #[test]
+    fn simd_toggle_reflected_in_lanes_and_stats() {
+        let pool = WorkerPool::inline();
+        pool.set_simd_enabled(true);
+        assert!(pool.simd_enabled());
+        assert_eq!(pool.simd_lanes(), crate::util::simd::LANES);
+        assert_eq!(pool.stats().simd_lanes, crate::util::simd::LANES);
+        pool.set_simd_enabled(false);
+        assert!(!pool.simd_enabled());
+        assert_eq!(pool.simd_lanes(), 1);
+        assert_eq!(pool.stats().simd_lanes, 1);
     }
 
     #[test]

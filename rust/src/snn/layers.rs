@@ -30,6 +30,7 @@ use std::ops::Range;
 
 use super::tensor::{SpikePlane, Tensor};
 use crate::runtime::pool::{band_bounds, split_bands, WorkerPool};
+use crate::util::simd::{add_f32x4, madd_f32x4, LANES};
 
 /// Default activity-adaptive dispatch threshold: layers whose *input*
 /// spike rate exceeds this run the dense kernel. Calibrated by the e1
@@ -147,6 +148,108 @@ fn dense_conv_range(
     *synops += local_synops;
 }
 
+/// [`dense_conv_range`] vectorized over output-channel lane blocks of
+/// [`LANES`]. A block of 4 channels in the *same group* shares the exact
+/// tap scan (the active (site, tap, ic) set depends only on the input),
+/// so one pass folds 4 weight lanes per gathered value with
+/// [`madd_f32x4`] — a separate multiply then add per lane, the same two
+/// roundings the scalar kernel performs in the same (ky, kx, ic) order.
+/// Each lane's accumulation sequence is therefore *identical* to the
+/// scalar kernel's for that channel: bit-exact f32. Block remainders at
+/// group or band edges delegate to the scalar kernel on the sub-range.
+/// Synops stay exact: the block's 4 channels each count every active
+/// pair, so the lane kernel adds 4 per pair — the same total.
+#[allow(clippy::too_many_arguments)]
+fn dense_conv_range_lanes(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    ocs: Range<usize>,
+    out_chunk: &mut [f32],
+    synops: &mut u64,
+) {
+    let (c_in, h, w) = (input.shape[0], input.shape[1], input.shape[2]);
+    let (c_out, cig, kh, kw) = (
+        weight.shape[0],
+        weight.shape[1],
+        weight.shape[2],
+        weight.shape[3],
+    );
+    debug_assert_eq!(c_in / groups, cig);
+    let (h_out, w_out, pad_top, pad_left) = same_geometry(h, w, kh, kw, stride);
+    debug_assert_eq!(out_chunk.len(), ocs.len() * h_out * w_out);
+    let oc_per_g = c_out / groups;
+    let hw = h_out * w_out;
+    let kk = kh * kw;
+    let wstride = cig * kk; // weight elements per output channel
+    let oc0 = ocs.start;
+    let mut local_synops = 0u64;
+
+    let mut oc = ocs.start;
+    while oc < ocs.end {
+        let g = oc / oc_per_g;
+        let blk = (ocs.end.min((g + 1) * oc_per_g) - oc).min(LANES);
+        if blk < LANES {
+            // remainder channels at a group/band edge: scalar oracle
+            dense_conv_range(
+                input,
+                weight,
+                bias,
+                stride,
+                groups,
+                oc..oc + blk,
+                &mut out_chunk[(oc - oc0) * hw..(oc - oc0 + blk) * hw],
+                &mut local_synops,
+            );
+            oc += blk;
+            continue;
+        }
+        let ic0 = g * cig;
+        let b4 = [bias[oc], bias[oc + 1], bias[oc + 2], bias[oc + 3]];
+        for oy in 0..h_out {
+            for ox in 0..w_out {
+                let mut acc = [0.0f32; LANES];
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad_top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad_left as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        for ic in 0..cig {
+                            let v = input.data
+                                [input.idx3(ic0 + ic, iy as usize, ix as usize)];
+                            if v != 0.0 {
+                                // weight[oc + l, ic, ky, kx] for l in 0..4
+                                let wb = oc * wstride + ic * kk + ky * kw + kx;
+                                let w4 = [
+                                    weight.data[wb],
+                                    weight.data[wb + wstride],
+                                    weight.data[wb + 2 * wstride],
+                                    weight.data[wb + 3 * wstride],
+                                ];
+                                acc = madd_f32x4(acc, v, w4);
+                                local_synops += LANES as u64;
+                            }
+                        }
+                    }
+                }
+                let site = oy * w_out + ox;
+                for (l, &a) in acc.iter().enumerate() {
+                    out_chunk[(oc - oc0 + l) * hw + site] = a + b4[l];
+                }
+            }
+        }
+        oc += LANES;
+    }
+    *synops += local_synops;
+}
+
 /// Output-channel banded [`conv2d_same`]: each pool lane computes a
 /// disjoint channel band; band synop tallies are reduced in band order.
 /// Bit-exact with the scalar kernel for any worker count.
@@ -175,6 +278,7 @@ pub fn conv2d_same_par(
     let mut out = Tensor::zeros(&[c_out, h_out, w_out]);
     let bounds = band_bounds(c_out, pool.size());
     let mut band_synops = vec![0u64; bounds.len()];
+    let range_fn = if pool.simd_enabled() { dense_conv_range_lanes } else { dense_conv_range };
     {
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
         let chunks = split_bands(out.data.as_mut_slice(), &bounds, hw);
@@ -182,7 +286,7 @@ pub fn conv2d_same_par(
             chunks.into_iter().zip(band_synops.iter_mut()).zip(&bounds)
         {
             jobs.push(Box::new(move || {
-                dense_conv_range(input, weight, bias, stride, groups, o0..o1, chunk, syn);
+                range_fn(input, weight, bias, stride, groups, o0..o1, chunk, syn);
             }));
         }
         pool.run_scoped(jobs);
@@ -297,6 +401,99 @@ pub(crate) fn gather_conv_range<A: Copy>(
     *synops += local_synops;
 }
 
+/// [`gather_conv_range`] vectorized over output-channel lane blocks of
+/// [`LANES`]. Like the dense lane kernel, a block of 4 channels in one
+/// group shares the identical occupancy-masked tap scan, so one pass
+/// folds each gathered spike into 4 accumulators at once via
+/// `add4(accs, oc, ic, ky, kx)` (lane `l` folds channel `oc + l`; the
+/// caller supplies elementwise lane arithmetic — [`add_f32x4`] for the
+/// f32 gather, `add_i32x4` for the int8 kernel). Per lane the fold
+/// sequence is the scalar skeleton's (ky, kx, ic) order for that
+/// channel — bit-exact accumulators. Stores happen per site for the 4
+/// block channels (ascending), each to its own output slot, so callers
+/// writing disjoint `(oc, site)` cells see identical results. Block
+/// remainders delegate to the scalar skeleton; synops count 4 per
+/// gathered pair in lane blocks — exactly the scalar total.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gather_conv_range_lanes<A: Copy>(
+    input: &SpikePlane,
+    wshape: &[usize],
+    stride: usize,
+    groups: usize,
+    masks: &[u64],
+    ocs: Range<usize>,
+    synops: &mut u64,
+    zero: A,
+    mut add: impl FnMut(A, usize, usize, usize, usize) -> A,
+    mut add4: impl FnMut([A; LANES], usize, usize, usize, usize) -> [A; LANES],
+    mut store: impl FnMut(usize, usize, A),
+) {
+    let (c_in, h, w) = (input.channels, input.height, input.width);
+    let (c_out, cig, kh, kw) = (wshape[0], wshape[1], wshape[2], wshape[3]);
+    assert_eq!(c_in / groups, cig, "groups/channel mismatch");
+    assert_eq!(c_out % groups, 0);
+
+    let (h_out, w_out, pad_top, pad_left) = same_geometry(h, w, kh, kw, stride);
+    let oc_per_g = c_out / groups;
+    let wpr = input.words_per_row;
+    let rw = h * wpr;
+    let mut local_synops = 0u64;
+
+    let mut oc = ocs.start;
+    while oc < ocs.end {
+        let g = oc / oc_per_g;
+        let blk = (ocs.end.min((g + 1) * oc_per_g) - oc).min(LANES);
+        if blk < LANES {
+            gather_conv_range(
+                input, wshape, stride, groups, masks,
+                oc..oc + blk,
+                &mut local_synops,
+                zero,
+                &mut add,
+                &mut store,
+            );
+            oc += blk;
+            continue;
+        }
+        let ic0 = g * cig;
+        let gmask = &masks[g * rw..(g + 1) * rw];
+        for oy in 0..h_out {
+            for ox in 0..w_out {
+                let mut accs = [zero; LANES];
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad_top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let iy = iy as usize;
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad_left as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let ix = ix as usize;
+                        if gmask[iy * wpr + ix / 64] >> (ix % 64) & 1 == 0 {
+                            continue; // no channel in this group spiked here
+                        }
+                        for ic in 0..cig {
+                            if input.get(ic0 + ic, iy, ix) {
+                                accs = add4(accs, oc, ic, ky, kx);
+                                local_synops += LANES as u64;
+                            }
+                        }
+                    }
+                }
+                let site = oy * w_out + ox;
+                for (l, &a) in accs.iter().enumerate() {
+                    store(oc + l, site, a);
+                }
+            }
+        }
+        oc += LANES;
+    }
+    *synops += local_synops;
+}
+
 /// Event-driven gather-conv over a bit-packed spike plane.
 ///
 /// Same loop nesting as [`conv2d_same`] (oc, oy, ox, ky, kx, ic), but a
@@ -364,6 +561,9 @@ pub fn conv2d_sparse_same_par(
     let masks = input.group_or_masks(groups);
     let bounds = band_bounds(c_out, pool.size());
     let mut band_synops = vec![0u64; bounds.len()];
+    let simd = pool.simd_enabled();
+    // weight elements per output channel (lane gather stride)
+    let wstride = weight.shape[1] * weight.shape[2] * weight.shape[3];
     {
         let masks = &masks[..];
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
@@ -372,18 +572,45 @@ pub fn conv2d_sparse_same_par(
             chunks.into_iter().zip(band_synops.iter_mut()).zip(&bounds)
         {
             jobs.push(Box::new(move || {
-                gather_conv_range(
-                    input,
-                    &weight.shape,
-                    stride,
-                    groups,
-                    masks,
-                    o0..o1,
-                    syn,
-                    0.0f32,
-                    |acc, oc, ic, ky, kx| acc + weight.data[weight.idx4(oc, ic, ky, kx)],
-                    |oc, site, acc| chunk[(oc - o0) * hw + site] = acc + bias[oc],
-                );
+                if simd {
+                    gather_conv_range_lanes(
+                        input,
+                        &weight.shape,
+                        stride,
+                        groups,
+                        masks,
+                        o0..o1,
+                        syn,
+                        0.0f32,
+                        |acc, oc, ic, ky, kx| acc + weight.data[weight.idx4(oc, ic, ky, kx)],
+                        |accs, oc, ic, ky, kx| {
+                            let wb = weight.idx4(oc, ic, ky, kx);
+                            add_f32x4(
+                                accs,
+                                [
+                                    weight.data[wb],
+                                    weight.data[wb + wstride],
+                                    weight.data[wb + 2 * wstride],
+                                    weight.data[wb + 3 * wstride],
+                                ],
+                            )
+                        },
+                        |oc, site, acc| chunk[(oc - o0) * hw + site] = acc + bias[oc],
+                    );
+                } else {
+                    gather_conv_range(
+                        input,
+                        &weight.shape,
+                        stride,
+                        groups,
+                        masks,
+                        o0..o1,
+                        syn,
+                        0.0f32,
+                        |acc, oc, ic, ky, kx| acc + weight.data[weight.idx4(oc, ic, ky, kx)],
+                        |oc, site, acc| chunk[(oc - o0) * hw + site] = acc + bias[oc],
+                    );
+                }
             }));
         }
         pool.run_scoped(jobs);
@@ -836,6 +1063,123 @@ mod tests {
                 );
                 assert_eq!(got.data, want_dense.data, "adaptive_par @ {workers}");
                 assert_eq!(syn, syn_want, "adaptive_par synops @ {workers}");
+            }
+        });
+    }
+
+    #[test]
+    fn lane_range_kernels_bit_exact_with_scalar_ranges() {
+        // Direct oracle check of the lane kernels over full channel
+        // ranges, including odd c_out and grouped layouts so the
+        // remainder delegation path runs too.
+        forall("lane conv ranges == scalar conv ranges (f32 bits)", 30, |g| {
+            let mut rng = SplitMix64::new(g.u64());
+            let groups = [1usize, 2][g.usize_in(0, 2)];
+            let cig = g.usize_in(1, 4);
+            let c_in = cig * groups;
+            let c_out = groups * g.usize_in(1, 7); // 1..=6 per group: hits blk<4
+            let k = [1usize, 3][g.usize_in(0, 2)];
+            let stride = g.usize_in(1, 3);
+            let (h, w) = (g.usize_in(2, 10), g.usize_in(2, 70));
+            let rate = [0.02, 0.2, 0.5][g.usize_in(0, 3)];
+            let data = random_binary(&mut rng, c_in * h * w, rate);
+            let dense_in = Tensor::from_vec(&[c_in, h, w], data);
+            let plane = SpikePlane::from_dense(&dense_in);
+            let weight = Tensor::from_vec(
+                &[c_out, cig, k, k],
+                (0..c_out * cig * k * k).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+            );
+            let bias: Vec<f32> =
+                (0..c_out).map(|_| rng.uniform_in(-0.5, 0.5) as f32).collect();
+            let (h_out, w_out, _, _) = same_geometry(h, w, k, k, stride);
+            let hw = h_out * w_out;
+
+            // dense lane kernel
+            let mut syn_s = 0u64;
+            let mut want = vec![0.0f32; c_out * hw];
+            dense_conv_range(
+                &dense_in, &weight, &bias, stride, groups, 0..c_out, &mut want, &mut syn_s,
+            );
+            let mut syn_l = 0u64;
+            let mut got = vec![0.0f32; c_out * hw];
+            dense_conv_range_lanes(
+                &dense_in, &weight, &bias, stride, groups, 0..c_out, &mut got, &mut syn_l,
+            );
+            assert_eq!(want, got, "dense lane kernel must be bit-exact");
+            assert_eq!(syn_s, syn_l, "dense lane synops must be exact");
+
+            // gather lane skeleton
+            let masks = plane.group_or_masks(groups);
+            let wstride = cig * k * k;
+            let mut syn_s = 0u64;
+            let mut want = vec![0.0f32; c_out * hw];
+            gather_conv_range(
+                &plane, &weight.shape, stride, groups, &masks, 0..c_out, &mut syn_s,
+                0.0f32,
+                |acc, oc, ic, ky, kx| acc + weight.data[weight.idx4(oc, ic, ky, kx)],
+                |oc, site, acc| want[oc * hw + site] = acc + bias[oc],
+            );
+            let mut syn_l = 0u64;
+            let mut got = vec![0.0f32; c_out * hw];
+            gather_conv_range_lanes(
+                &plane, &weight.shape, stride, groups, &masks, 0..c_out, &mut syn_l,
+                0.0f32,
+                |acc, oc, ic, ky, kx| acc + weight.data[weight.idx4(oc, ic, ky, kx)],
+                |accs, oc, ic, ky, kx| {
+                    let wb = weight.idx4(oc, ic, ky, kx);
+                    add_f32x4(
+                        accs,
+                        [
+                            weight.data[wb],
+                            weight.data[wb + wstride],
+                            weight.data[wb + 2 * wstride],
+                            weight.data[wb + 3 * wstride],
+                        ],
+                    )
+                },
+                |oc, site, acc| got[oc * hw + site] = acc + bias[oc],
+            );
+            assert_eq!(want, got, "gather lane kernel must be bit-exact");
+            assert_eq!(syn_s, syn_l, "gather lane synops must be exact");
+        });
+    }
+
+    #[test]
+    fn simd_toggle_does_not_change_banded_conv() {
+        forall("banded conv invariant under simd on/off", 20, |g| {
+            let mut rng = SplitMix64::new(g.u64());
+            let groups = [1usize, 2][g.usize_in(0, 2)];
+            let cig = g.usize_in(1, 3);
+            let c_in = cig * groups;
+            let c_out = groups * g.usize_in(2, 7);
+            let k = [1usize, 3][g.usize_in(0, 2)];
+            let stride = g.usize_in(1, 3);
+            let (h, w) = (g.usize_in(2, 9), g.usize_in(2, 40));
+            let data = random_binary(&mut rng, c_in * h * w, 0.2);
+            let dense_in = Tensor::from_vec(&[c_in, h, w], data);
+            let plane = SpikePlane::from_dense(&dense_in);
+            let weight = Tensor::from_vec(
+                &[c_out, cig, k, k],
+                (0..c_out * cig * k * k).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+            );
+            let bias: Vec<f32> =
+                (0..c_out).map(|_| rng.uniform_in(-0.5, 0.5) as f32).collect();
+            let mut syn_want = 0u64;
+            let want = conv2d_same(&dense_in, &weight, &bias, stride, groups, &mut syn_want);
+            let pool = crate::runtime::pool::WorkerPool::new(3);
+            for simd in [false, true] {
+                pool.set_simd_enabled(simd);
+                let mut syn = 0u64;
+                let got =
+                    conv2d_same_par(&pool, &dense_in, &weight, &bias, stride, groups, &mut syn);
+                assert_eq!(got.data, want.data, "dense_par simd={simd}");
+                assert_eq!(syn, syn_want, "dense_par synops simd={simd}");
+                let mut syn = 0u64;
+                let got = conv2d_sparse_same_par(
+                    &pool, &plane, &weight, &bias, stride, groups, &mut syn,
+                );
+                assert_eq!(got.data, want.data, "gather_par simd={simd}");
+                assert_eq!(syn, syn_want, "gather_par synops simd={simd}");
             }
         });
     }

@@ -12,6 +12,107 @@
 //! integration test `npu_twin.rs` checks agreement through the artifacts.
 
 use super::tensor::{SpikePlane, Tensor};
+use crate::util::fixed::Q;
+
+/// Fractional bits of the fixed-point LIF domain ([`QLifState`]): Q47.16,
+/// the same raw layout `util::fixed::Q` uses for the ISP gain path.
+pub const LIF_Q_FRAC: u32 = 16;
+
+/// Fixed-point LIF state for the fused int-only conv→LIF hot path: one
+/// Q47.16 membrane per neuron, decay and threshold as Q47.16 raws.
+///
+/// The update is pure integer:
+///
+/// ```text
+/// u_raw = (membrane_raw * decay_raw) >> 16 + current_raw
+/// fire  = u_raw >= v_th_raw            (hard reset to 0)
+/// ```
+///
+/// with `current_raw = acc * scale_raw + bias_raw` formed straight from
+/// the conv's i32 accumulator — no f32 current plane is ever
+/// materialized. This is a *different* (deterministic) numeric domain
+/// from the f32 [`LifState`]: the contract is exact equality between the
+/// fused and unfused *integer* paths ([`QLifState::update`] driven from
+/// the conv store hook vs [`QLifState::step_acc`] over a finished
+/// accumulator plane), proven in `snn::quant` tests and
+/// `tests/simd_parity.rs` — not bit-equality with the f32 twin.
+#[derive(Debug, Clone)]
+pub struct QLifState {
+    /// Q47.16 membrane potentials.
+    pub membrane_raw: Vec<i64>,
+    /// Q47.16 decay multiplier.
+    pub decay_raw: i64,
+    /// Q47.16 firing threshold.
+    pub v_th_raw: i64,
+}
+
+impl QLifState {
+    pub fn new(n: usize, decay: f32, v_th: f32) -> Self {
+        Self {
+            membrane_raw: vec![0; n],
+            decay_raw: Q::from_f64(decay as f64, LIF_Q_FRAC).raw(),
+            v_th_raw: Q::from_f64(v_th as f64, LIF_Q_FRAC).raw(),
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.membrane_raw.iter_mut().for_each(|u| *u = 0);
+    }
+
+    /// One neuron update on a raw Q47.16 current; returns the fire
+    /// decision. This is the *entire* per-neuron arithmetic of the fused
+    /// path — callers feed neurons in any order they like, and identical
+    /// `(i, cur_raw)` sequences give identical membranes and fires.
+    #[inline(always)]
+    pub fn update(&mut self, i: usize, cur_raw: i64) -> bool {
+        let u = ((self.membrane_raw[i] * self.decay_raw) >> LIF_Q_FRAC) + cur_raw;
+        if u >= self.v_th_raw {
+            self.membrane_raw[i] = 0; // hard reset
+            true
+        } else {
+            self.membrane_raw[i] = u;
+            false
+        }
+    }
+
+    /// Unfused integer reference: one timestep over a finished i32
+    /// accumulator plane `[C,H,W]` (`cur_raw = acc * scale_raw +
+    /// bias_raw[c]`), emitting packed words + events like
+    /// [`LifState::step_plane`]. Neurons run in (c, y, x) order — the
+    /// same order the gather skeleton's store hook fires in, so the fused
+    /// kernel must match this exactly, spike for spike.
+    pub fn step_acc(
+        &mut self,
+        acc: &[i32],
+        scale_raw: i64,
+        bias_raw: &[i64],
+        out: &mut SpikePlane,
+    ) -> usize {
+        debug_assert_eq!(acc.len(), self.membrane_raw.len());
+        debug_assert_eq!(out.channels * out.height * out.width, acc.len());
+        out.clear();
+        let (h, w) = (out.height, out.width);
+        let wpr = out.words_per_row;
+        let mut count = 0;
+        let mut i = 0;
+        for c in 0..out.channels {
+            let b = bias_raw[c];
+            for y in 0..h {
+                let row = (c * h + y) * wpr;
+                for x in 0..w {
+                    let cur_raw = acc[i] as i64 * scale_raw + b;
+                    if self.update(i, cur_raw) {
+                        out.words[row + x / 64] |= 1u64 << (x % 64);
+                        out.events.push((c as u32, y as u32, x as u32));
+                        count += 1;
+                    }
+                    i += 1;
+                }
+            }
+        }
+        count
+    }
+}
 
 /// Per-layer LIF state: one membrane value per neuron.
 #[derive(Debug, Clone)]
@@ -196,6 +297,57 @@ mod tests {
                 assert_eq!(flat.membrane, packed.membrane, "membranes diverged");
             }
         });
+    }
+
+    #[test]
+    fn qlif_update_and_step_acc_agree_exactly() {
+        forall("fused-order updates == step_acc (integer LIF)", 60, |g| {
+            let c = g.usize_in(1, 4);
+            let h = g.usize_in(1, 6);
+            let w = g.usize_in(1, 70);
+            let n = c * h * w;
+            let decay = g.f32_in(0.1, 0.99);
+            let scale_raw = g.i64_in(1, 1 << 12);
+            let bias_raw: Vec<i64> =
+                (0..c).map(|_| g.i64_in(-(1 << 18), 1 << 18)).collect();
+            let mut a = QLifState::new(n, decay, 1.0);
+            let mut b = a.clone();
+            let mut plane = SpikePlane::new(c, h, w);
+            for _ in 0..3 {
+                let acc: Vec<i32> =
+                    (0..n).map(|_| g.i64_in(-2000, 2000) as i32).collect();
+                // "fused-order" drive: neuron i in (c, y, x) order through
+                // the raw per-neuron update
+                let mut fires = Vec::new();
+                for (i, &v) in acc.iter().enumerate() {
+                    let cur = v as i64 * scale_raw + bias_raw[i / (h * w)];
+                    if a.update(i, cur) {
+                        fires.push(i);
+                    }
+                }
+                let got = b.step_acc(&acc, scale_raw, &bias_raw, &mut plane);
+                assert_eq!(got, fires.len());
+                assert_eq!(plane.count(), fires.len());
+                assert_eq!(a.membrane_raw, b.membrane_raw, "membranes diverged");
+                for &i in &fires {
+                    assert!(plane.get(i / (h * w), i / w % h, i % w));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn qlif_integrates_and_hard_resets() {
+        // decay 0.5, threshold 1.0: a constant 0.75 current fires every
+        // other step (0.75 -> 1.125 fire -> 0.75 -> 1.125 fire ...)
+        let mut st = QLifState::new(1, 0.5, 1.0);
+        let one = 1i64 << LIF_Q_FRAC;
+        let cur = one * 3 / 4;
+        assert!(!st.update(0, cur));
+        assert_eq!(st.membrane_raw[0], cur);
+        assert!(st.update(0, cur), "0.375 + 0.75 = 1.125 must fire");
+        assert_eq!(st.membrane_raw[0], 0, "hard reset");
+        assert!(!st.update(0, cur));
     }
 
     #[test]

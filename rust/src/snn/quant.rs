@@ -14,14 +14,22 @@
 //! ([`run_forward`]) and differ solely in the conv closure.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::backbone::{
-    run_forward, Backbone, BackboneKind, ConvWeights, ForwardStats,
+    backbone_spec, run_forward, Backbone, BackboneKind, ConvWeights, DispatchCounts,
+    ForwardStats, LayerSpec,
 };
-use super::layers::{gather_conv_range, gather_conv_same, same_geometry, ConvKernel};
+use super::layers::{
+    conv2d_dense_macs, gather_conv_range, gather_conv_range_lanes, gather_conv_same,
+    same_geometry, ConvKernel,
+};
+use super::lif::{QLifState, LIF_Q_FRAC};
 use super::tensor::{SpikePlane, Tensor};
 use crate::events::voxel::VoxelGrid;
 use crate::runtime::pool::{band_bounds, split_bands, WorkerPool};
+use crate::util::fixed::Q;
+use crate::util::simd::add_i32x4;
 
 /// Per-tensor symmetric int8 quantization of a weight tensor.
 #[derive(Debug, Clone)]
@@ -193,6 +201,101 @@ pub fn conv2d_i8_dense(
     currents_from_acc(&acc, &[c_out, h_out, w_out], weight.scale, bias)
 }
 
+/// Raw int8 gather conv: the shared skeleton with i32 accumulators,
+/// returning the accumulator plane and its `[C,H,W]` shape — no f32 (or
+/// fixed-point) conversion at all. The unfused half of the integer
+/// forward: [`QLifState::step_acc`](super::lif::QLifState) consumes the
+/// plane it returns.
+pub fn conv2d_i8_acc(
+    input: &SpikePlane,
+    weight: &QuantTensor,
+    stride: usize,
+    groups: usize,
+    synops: &mut u64,
+) -> (Vec<i32>, [usize; 3]) {
+    assert_eq!(weight.shape.len(), 4, "weight must be [O,I/g,kh,kw]");
+    let c_out = weight.shape[0];
+    let (h_out, w_out, _, _) = same_geometry(
+        input.height, input.width, weight.shape[2], weight.shape[3], stride,
+    );
+    let hw = h_out * w_out;
+    let mut acc = vec![0i32; c_out * hw];
+    gather_conv_same(
+        input,
+        &weight.shape,
+        stride,
+        groups,
+        synops,
+        0i32,
+        |a, oc, ic, ky, kx| a + weight.data[weight.idx4(oc, ic, ky, kx)] as i32,
+        |oc, site, a| acc[oc * hw + site] = a,
+    );
+    (acc, [c_out, h_out, w_out])
+}
+
+/// Weight-stationary fused int8 conv→LIF: the gather skeleton's store
+/// hook thresholds each output site the moment its i32 accumulator
+/// finishes — `cur_raw = acc * scale_raw + bias_raw[oc]` feeds
+/// [`QLifState::update`] directly and firing sites go straight into the
+/// packed output plane. No current plane (f32 or i32) is materialized
+/// for the layer-timestep.
+///
+/// Exactness: the store hook fires once per output site in (oc asc,
+/// site asc) order — the same (c, y, x) order [`QLifState::step_acc`]
+/// walks the finished accumulator plane — and the accumulator handed to
+/// each call is the full gather sum [`conv2d_i8_acc`] would have stored.
+/// Membranes, fire decisions, packed words, the event list and the synop
+/// count are therefore *identical* to the unfused reference. Returns the
+/// spike count.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_i8_lif_fused(
+    input: &SpikePlane,
+    weight: &QuantTensor,
+    stride: usize,
+    groups: usize,
+    synops: &mut u64,
+    st: &mut QLifState,
+    scale_raw: i64,
+    bias_raw: &[i64],
+    out: &mut SpikePlane,
+) -> usize {
+    assert_eq!(weight.shape.len(), 4, "weight must be [O,I/g,kh,kw]");
+    let c_out = weight.shape[0];
+    let (h_out, w_out, _, _) = same_geometry(
+        input.height, input.width, weight.shape[2], weight.shape[3], stride,
+    );
+    assert_eq!(
+        (out.channels, out.height, out.width),
+        (c_out, h_out, w_out),
+        "output plane shape mismatch"
+    );
+    assert_eq!(st.membrane_raw.len(), c_out * h_out * w_out);
+    assert_eq!(bias_raw.len(), c_out);
+    out.clear();
+    let hw = h_out * w_out;
+    let wpr = out.words_per_row;
+    let mut count = 0usize;
+    gather_conv_same(
+        input,
+        &weight.shape,
+        stride,
+        groups,
+        synops,
+        0i32,
+        |a, oc, ic, ky, kx| a + weight.data[weight.idx4(oc, ic, ky, kx)] as i32,
+        |oc, site, a| {
+            let cur_raw = a as i64 * scale_raw + bias_raw[oc];
+            if st.update(oc * hw + site, cur_raw) {
+                let (y, x) = (site / w_out, site % w_out);
+                out.words[(oc * h_out + y) * wpr + x / 64] |= 1u64 << (x % 64);
+                out.events.push((oc as u32, y as u32, x as u32));
+                count += 1;
+            }
+        },
+    );
+    count
+}
+
 /// Output-channel banded [`conv2d_i8_events`]: every pool lane walks the
 /// full event list but scatters only into its own channel band's i32
 /// accumulators. Integer addition is associative, each (spike, weight)
@@ -316,6 +419,9 @@ pub fn conv2d_i8_dense_par(
     let masks = input.group_or_masks(groups);
     let bounds = band_bounds(c_out, pool.size());
     let mut band_synops = vec![0u64; bounds.len()];
+    let simd = pool.simd_enabled();
+    // weight elements per output channel (lane gather stride)
+    let wstride = weight.shape[1] * weight.shape[2] * weight.shape[3];
     {
         let masks = &masks[..];
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
@@ -324,21 +430,53 @@ pub fn conv2d_i8_dense_par(
             chunks.into_iter().zip(band_synops.iter_mut()).zip(&bounds)
         {
             jobs.push(Box::new(move || {
-                gather_conv_range(
-                    input,
-                    &weight.shape,
-                    stride,
-                    groups,
-                    masks,
-                    b0..b1,
-                    syn,
-                    0i32,
-                    |a, oc, ic, ky, kx| a + weight.data[weight.idx4(oc, ic, ky, kx)] as i32,
-                    |oc, site, a| {
-                        chunk[(oc - b0) * hw + site] =
-                            a as f32 * weight.scale + bias[oc];
-                    },
-                );
+                if simd {
+                    gather_conv_range_lanes(
+                        input,
+                        &weight.shape,
+                        stride,
+                        groups,
+                        masks,
+                        b0..b1,
+                        syn,
+                        0i32,
+                        |a, oc, ic, ky, kx| a + weight.data[weight.idx4(oc, ic, ky, kx)] as i32,
+                        |accs, oc, ic, ky, kx| {
+                            // i32 lane adds are exact, so blocking four
+                            // channels changes nothing in the sums
+                            let wb = weight.idx4(oc, ic, ky, kx);
+                            add_i32x4(
+                                accs,
+                                [
+                                    weight.data[wb] as i32,
+                                    weight.data[wb + wstride] as i32,
+                                    weight.data[wb + 2 * wstride] as i32,
+                                    weight.data[wb + 3 * wstride] as i32,
+                                ],
+                            )
+                        },
+                        |oc, site, a| {
+                            chunk[(oc - b0) * hw + site] =
+                                a as f32 * weight.scale + bias[oc];
+                        },
+                    );
+                } else {
+                    gather_conv_range(
+                        input,
+                        &weight.shape,
+                        stride,
+                        groups,
+                        masks,
+                        b0..b1,
+                        syn,
+                        0i32,
+                        |a, oc, ic, ky, kx| a + weight.data[weight.idx4(oc, ic, ky, kx)] as i32,
+                        |oc, site, a| {
+                            chunk[(oc - b0) * hw + site] =
+                                a as f32 * weight.scale + bias[oc];
+                        },
+                    );
+                }
             }));
         }
         pool.run_scoped(jobs);
@@ -455,6 +593,176 @@ impl QuantBackbone {
         })
     }
 
+    /// Integer-domain forward: int8 conv accumulators thresholded by the
+    /// fixed-point [`QLifState`] — the int-only datapath the paper's
+    /// FPGA NPU implements, with no f32 current plane per layer-timestep.
+    ///
+    /// With `fuse: false`, each layer-timestep materializes the i32
+    /// accumulator plane ([`conv2d_i8_acc`]) and hands it to
+    /// [`QLifState::step_acc`] — the reference. With `fuse: true`, the
+    /// weight-stationary fused kernel [`conv2d_i8_lif_fused`] thresholds
+    /// each output site as its accumulator finishes. Both modes drive
+    /// identical `(neuron, current)` sequences through identical integer
+    /// arithmetic, so heads, spike planes, membranes and synops are
+    /// *exactly* equal (proven by `fused_forward_exactly_matches_unfused`
+    /// and `tests/simd_parity.rs`). The non-spiking head accumulates i64
+    /// sums across timesteps and fixes up scale/bias once at the end, so
+    /// it too is independent of the fuse mode. The integer layers run
+    /// serially, making the result trivially invariant under worker
+    /// count and the SIMD toggle.
+    pub fn forward_int(&self, voxel: &VoxelGrid, fuse: bool) -> (Tensor, ForwardStats) {
+        let t_bins = voxel.t_bins;
+        let mut stats = ForwardStats::default();
+        let plane = voxel.polarities * voxel.height * voxel.width;
+        let mut xs: Vec<SpikePlane> = (0..t_bins)
+            .map(|t| {
+                SpikePlane::from_slice(
+                    voxel.polarities,
+                    voxel.height,
+                    voxel.width,
+                    &voxel.data[t * plane..(t + 1) * plane],
+                )
+            })
+            .collect();
+        let mut idx = 0usize;
+
+        let mut spiking_conv = |xs: &mut Vec<SpikePlane>,
+                                idx: &mut usize,
+                                stride: usize,
+                                groups_of: &dyn Fn(usize) -> usize,
+                                stats: &mut ForwardStats| {
+            let (wq, bias) = &self.qparams[*idx];
+            *idx += 1;
+            let scale_raw = Q::from_f64(wq.scale as f64, LIF_Q_FRAC).raw();
+            let bias_raw: Vec<i64> = bias
+                .iter()
+                .map(|&b| Q::from_f64(b as f64, LIF_Q_FRAC).raw())
+                .collect();
+            let mut lif: Option<QLifState> = None;
+            let mut spikes_total = 0u64;
+            let mut neuron_steps = 0u64;
+            let mut disp = DispatchCounts::default();
+            let syn0 = stats.synops;
+            let t_layer = Instant::now();
+            for x in xs.iter_mut() {
+                let groups = groups_of(x.channels);
+                stats.dense_macs += conv2d_dense_macs(
+                    x.channels, x.height, x.width, wq.shape[0], wq.shape[2], stride, groups,
+                );
+                if fuse {
+                    let (h_out, w_out, _, _) = same_geometry(
+                        x.height, x.width, wq.shape[2], wq.shape[3], stride,
+                    );
+                    let n = wq.shape[0] * h_out * w_out;
+                    let st = lif
+                        .get_or_insert_with(|| QLifState::new(n, self.decay, self.v_th));
+                    let mut out = SpikePlane::new(wq.shape[0], h_out, w_out);
+                    spikes_total += conv2d_i8_lif_fused(
+                        x, wq, stride, groups, &mut stats.synops,
+                        st, scale_raw, &bias_raw, &mut out,
+                    ) as u64;
+                    *x = out;
+                    neuron_steps += n as u64;
+                } else {
+                    let (acc, shape) =
+                        conv2d_i8_acc(x, wq, stride, groups, &mut stats.synops);
+                    let st = lif.get_or_insert_with(|| {
+                        QLifState::new(acc.len(), self.decay, self.v_th)
+                    });
+                    x.reset_shape(shape[0], shape[1], shape[2]);
+                    spikes_total += st.step_acc(&acc, scale_raw, &bias_raw, x) as u64;
+                    neuron_steps += acc.len() as u64;
+                }
+                disp.note(ConvKernel::SparseGather);
+            }
+            stats.layer_activity.push((spikes_total, neuron_steps));
+            stats.layer_synops.push(stats.synops - syn0);
+            stats.layer_dispatch.push(disp);
+            stats.layer_us.push(t_layer.elapsed().as_secs_f64() * 1e6);
+        };
+
+        for layer in backbone_spec(self.kind) {
+            match layer {
+                LayerSpec::Conv { .. }
+                | LayerSpec::Conv1x1 { .. }
+                | LayerSpec::Transition { .. } => {
+                    spiking_conv(&mut xs, &mut idx, 1, &|_| 1, &mut stats);
+                }
+                LayerSpec::Pool => {
+                    for x in xs.iter_mut() {
+                        *x = x.maxpool2();
+                    }
+                }
+                LayerSpec::DenseBlock { layers, .. } => {
+                    for _ in 0..layers {
+                        let saved: Vec<SpikePlane> = xs.clone();
+                        spiking_conv(&mut xs, &mut idx, 1, &|_| 1, &mut stats);
+                        for (x, s) in xs.iter_mut().zip(saved.iter()) {
+                            *x = s.concat(x);
+                        }
+                    }
+                }
+                LayerSpec::DwSep { .. } => {
+                    spiking_conv(&mut xs, &mut idx, 1, &|c| c, &mut stats); // DW
+                    spiking_conv(&mut xs, &mut idx, 1, &|_| 1, &mut stats); // PW
+                }
+            }
+        }
+
+        // Non-spiking head, still integer: i64 accumulator sums across
+        // timesteps, one fixed-point scale/bias fix-up at the very end.
+        let (wq, bias) = &self.qparams[idx];
+        let scale_raw = Q::from_f64(wq.scale as f64, LIF_Q_FRAC).raw();
+        let bias_raw: Vec<i64> = bias
+            .iter()
+            .map(|&b| Q::from_f64(b as f64, LIF_Q_FRAC).raw())
+            .collect();
+        let mut head_acc: Option<Vec<i64>> = None;
+        let mut head_shape = [0usize; 3];
+        let mut head_disp = DispatchCounts::default();
+        let head_syn0 = stats.synops;
+        let t_head = Instant::now();
+        for x in &xs {
+            stats.dense_macs += conv2d_dense_macs(
+                x.channels, x.height, x.width, wq.shape[0], wq.shape[2], 1, 1,
+            );
+            let (acc, shape) = conv2d_i8_acc(x, wq, 1, 1, &mut stats.synops);
+            head_shape = shape;
+            match &mut head_acc {
+                None => head_acc = Some(acc.iter().map(|&a| a as i64).collect()),
+                Some(hd) => {
+                    for (a, &c) in hd.iter_mut().zip(&acc) {
+                        *a += c as i64;
+                    }
+                }
+            }
+            head_disp.note(ConvKernel::SparseGather);
+        }
+        stats.layer_synops.push(stats.synops - head_syn0);
+        stats.layer_dispatch.push(head_disp);
+        stats.layer_us.push(t_head.elapsed().as_secs_f64() * 1e6);
+        let head_acc = head_acc.expect("at least one timestep");
+        let hw = head_shape[1] * head_shape[2];
+        let mut head = Tensor::zeros(&head_shape);
+        for oc in 0..head_shape[0] {
+            let b = t_bins as i64 * bias_raw[oc];
+            for s in 0..hw {
+                // raw Q47.16 sum of per-timestep currents, then the /T
+                // rate decode — both fuse modes compute this identically
+                let raw = head_acc[oc * hw + s] * scale_raw + b;
+                head.data[oc * hw + s] =
+                    (raw as f64 / (1i64 << LIF_Q_FRAC) as f64 / t_bins as f64) as f32;
+            }
+        }
+        (head, stats)
+    }
+
+    /// The fused int-only hot path: [`QuantBackbone::forward_int`] with
+    /// the weight-stationary conv→LIF kernel.
+    pub fn forward_fused(&self, voxel: &VoxelGrid) -> (Tensor, ForwardStats) {
+        self.forward_int(voxel, true)
+    }
+
     /// Model size in bytes (int8 weights + f32 biases) — the deployment
     /// footprint the paper's FPGA BRAM budget cares about.
     pub fn size_bytes(&self) -> usize {
@@ -566,6 +874,196 @@ mod tests {
                 assert_eq!(syn, syn_want, "i8 events_par synops @ {workers}");
             }
         });
+    }
+
+    #[test]
+    fn simd_toggle_does_not_change_i8_banded_conv() {
+        forall("banded i8 conv invariant under simd on/off", 20, |g| {
+            let mut rng = SplitMix64::new(g.u64());
+            let groups = [1usize, 2][g.usize_in(0, 2)];
+            let cig = g.usize_in(1, 3);
+            let c_in = cig * groups;
+            let c_out = groups * g.usize_in(2, 7); // hits lane + remainder blocks
+            let k = [1usize, 3][g.usize_in(0, 2)];
+            let stride = g.usize_in(1, 3);
+            let (h, w) = (g.usize_in(2, 9), g.usize_in(2, 40));
+            let data: Vec<f32> = (0..c_in * h * w)
+                .map(|_| if rng.uniform_in(0.0, 1.0) < 0.2 { 1.0 } else { 0.0 })
+                .collect();
+            let plane = SpikePlane::from_slice(c_in, h, w, &data);
+            let wq = QuantTensor::quantize(&Tensor::from_vec(
+                &[c_out, cig, k, k],
+                (0..c_out * cig * k * k)
+                    .map(|_| rng.uniform_in(-1.0, 1.0) as f32)
+                    .collect(),
+            ));
+            let bias: Vec<f32> =
+                (0..c_out).map(|_| rng.uniform_in(-0.5, 0.5) as f32).collect();
+            let mut syn_want = 0u64;
+            let want = conv2d_i8_dense(&plane, &wq, &bias, stride, groups, &mut syn_want);
+            let pool = WorkerPool::new(3);
+            for simd in [false, true] {
+                pool.set_simd_enabled(simd);
+                let mut syn = 0u64;
+                let got =
+                    conv2d_i8_dense_par(&pool, &plane, &wq, &bias, stride, groups, &mut syn);
+                assert_eq!(got.data, want.data, "i8 dense_par simd={simd}");
+                assert_eq!(syn, syn_want, "i8 dense_par synops simd={simd}");
+            }
+        });
+    }
+
+    #[test]
+    fn fused_kernel_value_exact_vs_unfused_reference() {
+        forall("fused conv->LIF == acc + step_acc (3 timesteps)", 30, |g| {
+            let mut rng = SplitMix64::new(g.u64());
+            let groups = [1usize, 2][g.usize_in(0, 2)];
+            let cig = g.usize_in(1, 3);
+            let c_in = cig * groups;
+            let c_out = groups * g.usize_in(1, 5);
+            let k = [1usize, 3][g.usize_in(0, 2)];
+            let stride = g.usize_in(1, 3);
+            let (h, w) = (g.usize_in(2, 9), g.usize_in(2, 70));
+            let wq = QuantTensor::quantize(&Tensor::from_vec(
+                &[c_out, cig, k, k],
+                (0..c_out * cig * k * k)
+                    .map(|_| rng.uniform_in(-1.0, 1.0) as f32)
+                    .collect(),
+            ));
+            let scale_raw = Q::from_f64(wq.scale as f64, LIF_Q_FRAC).raw();
+            let bias_raw: Vec<i64> = (0..c_out)
+                .map(|_| Q::from_f64(rng.uniform_in(-0.3, 0.3), LIF_Q_FRAC).raw())
+                .collect();
+            let (h_out, w_out, _, _) =
+                same_geometry(h, w, k, k, stride);
+            let n = c_out * h_out * w_out;
+            let mut st_u = QLifState::new(n, 0.75, 0.02);
+            let mut st_f = st_u.clone();
+            let mut out_u = SpikePlane::new(c_out, h_out, w_out);
+            let mut out_f = SpikePlane::new(c_out, h_out, w_out);
+            for _ in 0..3 {
+                let data: Vec<f32> = (0..c_in * h * w)
+                    .map(|_| if rng.uniform_in(0.0, 1.0) < 0.3 { 1.0 } else { 0.0 })
+                    .collect();
+                let plane = SpikePlane::from_slice(c_in, h, w, &data);
+                let mut syn_u = 0u64;
+                let (acc, _) = conv2d_i8_acc(&plane, &wq, stride, groups, &mut syn_u);
+                let n_u = st_u.step_acc(&acc, scale_raw, &bias_raw, &mut out_u);
+                let mut syn_f = 0u64;
+                let n_f = conv2d_i8_lif_fused(
+                    &plane, &wq, stride, groups, &mut syn_f,
+                    &mut st_f, scale_raw, &bias_raw, &mut out_f,
+                );
+                assert_eq!(n_u, n_f, "spike counts diverged");
+                assert_eq!(syn_u, syn_f, "synop accounting diverged");
+                assert_eq!(out_u.words, out_f.words, "packed words diverged");
+                assert_eq!(out_u.events, out_f.events, "event lists diverged");
+                assert_eq!(
+                    st_u.membrane_raw, st_f.membrane_raw,
+                    "membranes diverged"
+                );
+            }
+        });
+    }
+
+    fn random_tensor(rng: &mut SplitMix64, shape: &[usize], lo: f64, hi: f64) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(
+            shape,
+            (0..n).map(|_| rng.uniform_in(lo, hi) as f32).collect(),
+        )
+    }
+
+    /// Synthetic params tracking the spec's channel flow (same scheme as
+    /// `tests/parallel_parity.rs`).
+    fn synthetic_qbackbone(kind: BackboneKind, seed: u64) -> QuantBackbone {
+        let mut rng = SplitMix64::new(seed);
+        let mut params = Vec::new();
+        let mut c = 2; // polarities
+        let bias = |rng: &mut SplitMix64, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.uniform_in(-0.1, 0.3) as f32).collect()
+        };
+        for layer in backbone_spec(kind) {
+            match layer {
+                LayerSpec::Conv { out, k } => {
+                    let w = random_tensor(&mut rng, &[out, c, k, k], -0.6, 0.6);
+                    let b = bias(&mut rng, out);
+                    params.push((w, b));
+                    c = out;
+                }
+                LayerSpec::Conv1x1 { out } | LayerSpec::Transition { out } => {
+                    let w = random_tensor(&mut rng, &[out, c, 1, 1], -0.6, 0.6);
+                    let b = bias(&mut rng, out);
+                    params.push((w, b));
+                    c = out;
+                }
+                LayerSpec::Pool => {}
+                LayerSpec::DenseBlock { growth, layers } => {
+                    for _ in 0..layers {
+                        let w = random_tensor(&mut rng, &[growth, c, 3, 3], -0.6, 0.6);
+                        let b = bias(&mut rng, growth);
+                        params.push((w, b));
+                        c += growth; // concat
+                    }
+                }
+                LayerSpec::DwSep { out } => {
+                    let dw = random_tensor(&mut rng, &[c, 1, 3, 3], -0.6, 0.6);
+                    let db = bias(&mut rng, c);
+                    params.push((dw, db));
+                    let pw = random_tensor(&mut rng, &[out, c, 1, 1], -0.6, 0.6);
+                    let pb = bias(&mut rng, out);
+                    params.push((pw, pb));
+                    c = out;
+                }
+            }
+        }
+        let head = random_tensor(&mut rng, &[14, c, 1, 1], -0.6, 0.6);
+        let hb = (0..14).map(|_| rng.uniform_in(-0.1, 0.1) as f32).collect();
+        params.push((head, hb));
+        let bb = Backbone {
+            kind,
+            params,
+            decay: 0.75,
+            v_th: 1.0,
+            sparse_threshold: 0.25,
+            pool: WorkerPool::inline(),
+        };
+        QuantBackbone::from_backbone(&bb)
+    }
+
+    fn synthetic_voxel(seed: u64, density: f64) -> VoxelGrid {
+        let mut rng = SplitMix64::new(seed);
+        let (t_bins, pol, size) = (3usize, 2usize, 16usize);
+        let n = t_bins * pol * size * size;
+        VoxelGrid {
+            t_bins,
+            polarities: pol,
+            height: size,
+            width: size,
+            data: (0..n)
+                .map(|_| if rng.uniform_in(0.0, 1.0) < density { 1.0 } else { 0.0 })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn fused_forward_exactly_matches_unfused() {
+        for kind in BackboneKind::all() {
+            let qb = synthetic_qbackbone(kind, 0xF0 ^ kind.name().len() as u64);
+            for &density in &[0.05, 0.25] {
+                let vox = synthetic_voxel(31 + kind.name().len() as u64, density);
+                let (h_u, s_u) = qb.forward_int(&vox, false);
+                let (h_f, s_f) = qb.forward_fused(&vox);
+                assert_eq!(
+                    h_u.data, h_f.data,
+                    "{kind:?} density {density}: fused head must be exact"
+                );
+                assert_eq!(s_u.synops, s_f.synops, "{kind:?}: synops diverged");
+                assert_eq!(s_u.layer_synops, s_f.layer_synops, "{kind:?}");
+                assert_eq!(s_u.layer_activity, s_f.layer_activity, "{kind:?}");
+                assert!(s_f.synops > 0, "{kind:?}: degenerate all-silent run");
+            }
+        }
     }
 
     #[test]

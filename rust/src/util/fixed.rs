@@ -30,8 +30,21 @@ impl Q {
         Self { raw, frac_bits }
     }
 
+    /// Widen an integer into the `frac_bits` format, **saturating** at
+    /// the i64 rails instead of silently wrapping: `x << frac_bits`
+    /// overflows for |x| >= 2^(63 - frac_bits), and a synthesized
+    /// datapath clamps there — matching `sat_u` and the other saturating
+    /// Q ops rather than producing a sign-flipped garbage value.
     pub fn from_int(x: i64, frac_bits: u32) -> Self {
-        Self { raw: x << frac_bits, frac_bits }
+        let raw = match x.checked_shl(frac_bits) {
+            // checked_shl only rejects shift counts >= 64; a value whose
+            // top bits differ from the sign still wraps, so verify the
+            // shift round-trips before accepting it.
+            Some(r) if (r >> frac_bits) == x => r,
+            _ if x >= 0 => i64::MAX,
+            _ => i64::MIN,
+        };
+        Self { raw, frac_bits }
     }
 
     pub fn raw(self) -> i64 {
@@ -159,6 +172,27 @@ mod tests {
         let g = Q::from_f64(1.005, 12);
         let exact = 101.0 * g.to_f64();
         assert_eq!(gain_u8(101, g) as f64, exact.round());
+    }
+
+    #[test]
+    fn from_int_saturates_at_the_i64_rails() {
+        // in-range values shift exactly
+        assert_eq!(Q::from_int(3, 8).raw(), 3 << 8);
+        assert_eq!(Q::from_int(-3, 8).raw(), -(3 << 8));
+        // boundary bit patterns: the largest magnitudes that still fit
+        // a Q(x.16) raw are ±(2^47 - 1) and the exact rails clamp
+        let max_ok = (1i64 << 47) - 1;
+        assert_eq!(Q::from_int(max_ok, 16).raw(), max_ok << 16);
+        assert_eq!(Q::from_int(max_ok, 16).to_int_floor(), max_ok);
+        assert_eq!(Q::from_int(-(1i64 << 47), 16).raw(), -(1i64 << 47) << 16);
+        // one past the rail: saturate, don't wrap to a sign flip
+        assert_eq!(Q::from_int(1i64 << 47, 16).raw(), i64::MAX);
+        assert_eq!(Q::from_int(-(1i64 << 47) - 1, 16).raw(), i64::MIN);
+        assert_eq!(Q::from_int(i64::MAX, 1).raw(), i64::MAX);
+        assert_eq!(Q::from_int(i64::MIN, 1).raw(), i64::MIN);
+        // frac_bits = 0 is the identity and never saturates
+        assert_eq!(Q::from_int(i64::MAX, 0).raw(), i64::MAX);
+        assert_eq!(Q::from_int(i64::MIN, 0).raw(), i64::MIN);
     }
 
     #[test]

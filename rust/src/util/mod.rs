@@ -8,6 +8,7 @@
 pub mod fixed;
 pub mod image;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 
 pub use fixed::Q;

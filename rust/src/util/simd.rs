@@ -1,0 +1,272 @@
+//! Explicit 4-wide SIMD lane helpers for the hot-path kernels.
+//!
+//! Both compute planes vectorize over fixed `[T; 4]` lane blocks: the ISP
+//! kernels over pixel columns, the conv kernels over output channels. The
+//! helpers here are the *only* arithmetic the lane kernels use, so the
+//! bit-exactness argument stays local:
+//!
+//! * integer ops (`u32`/`i32`/`i64`) are elementwise two's-complement
+//!   adds/subs/multiplies — any blocking of an integer formula is exact;
+//! * the one floating-point helper, [`madd_f32x4`], performs a separate
+//!   multiply then add per lane (two roundings) — the *same* two roundings
+//!   the scalar kernels perform, never a fused multiply-add. A lane kernel
+//!   that folds taps in the scalar kernel's order therefore produces
+//!   bit-identical f32 accumulators.
+//!
+//! On x86_64 the `u32`/`i32` adds and the f32 multiply-add lower to the
+//! SSE2 baseline intrinsics (`_mm_add_epi32`, `_mm_mul_ps` + `_mm_add_ps`
+//! — elementwise IEEE single ops, bit-identical to the portable form);
+//! everywhere else the portable per-lane definitions compile to the same
+//! semantics and let LLVM auto-vectorize the fixed-width arrays.
+//!
+//! The scalar kernels remain in place as the oracle for every lane kernel
+//! (`tests/simd_parity.rs`); `--simd off` forces them.
+
+/// Lane width of every vectorized kernel in the crate.
+pub const LANES: usize = 4;
+
+/// Elementwise `a + b` over u32 lanes (wrapping, like scalar `+` on the
+/// in-range SSD values the NLM kernel feeds it).
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+pub fn add_u32x4(a: [u32; 4], b: [u32; 4]) -> [u32; 4] {
+    // SSE2 baseline: guaranteed present on every x86_64 target.
+    unsafe {
+        use std::arch::x86_64::*;
+        let va = _mm_loadu_si128(a.as_ptr() as *const __m128i);
+        let vb = _mm_loadu_si128(b.as_ptr() as *const __m128i);
+        let mut out = [0u32; 4];
+        _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, _mm_add_epi32(va, vb));
+        out
+    }
+}
+
+/// Elementwise `a + b` over u32 lanes (portable form).
+#[cfg(not(target_arch = "x86_64"))]
+#[inline(always)]
+pub fn add_u32x4(a: [u32; 4], b: [u32; 4]) -> [u32; 4] {
+    [
+        a[0].wrapping_add(b[0]),
+        a[1].wrapping_add(b[1]),
+        a[2].wrapping_add(b[2]),
+        a[3].wrapping_add(b[3]),
+    ]
+}
+
+/// Elementwise `a + b` over i32 lanes.
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+pub fn add_i32x4(a: [i32; 4], b: [i32; 4]) -> [i32; 4] {
+    unsafe {
+        use std::arch::x86_64::*;
+        let va = _mm_loadu_si128(a.as_ptr() as *const __m128i);
+        let vb = _mm_loadu_si128(b.as_ptr() as *const __m128i);
+        let mut out = [0i32; 4];
+        _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, _mm_add_epi32(va, vb));
+        out
+    }
+}
+
+/// Elementwise `a + b` over i32 lanes (portable form).
+#[cfg(not(target_arch = "x86_64"))]
+#[inline(always)]
+pub fn add_i32x4(a: [i32; 4], b: [i32; 4]) -> [i32; 4] {
+    [
+        a[0].wrapping_add(b[0]),
+        a[1].wrapping_add(b[1]),
+        a[2].wrapping_add(b[2]),
+        a[3].wrapping_add(b[3]),
+    ]
+}
+
+/// Elementwise `a - b` over i32 lanes.
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+pub fn sub_i32x4(a: [i32; 4], b: [i32; 4]) -> [i32; 4] {
+    unsafe {
+        use std::arch::x86_64::*;
+        let va = _mm_loadu_si128(a.as_ptr() as *const __m128i);
+        let vb = _mm_loadu_si128(b.as_ptr() as *const __m128i);
+        let mut out = [0i32; 4];
+        _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, _mm_sub_epi32(va, vb));
+        out
+    }
+}
+
+/// Elementwise `a - b` over i32 lanes (portable form).
+#[cfg(not(target_arch = "x86_64"))]
+#[inline(always)]
+pub fn sub_i32x4(a: [i32; 4], b: [i32; 4]) -> [i32; 4] {
+    [
+        a[0].wrapping_sub(b[0]),
+        a[1].wrapping_sub(b[1]),
+        a[2].wrapping_sub(b[2]),
+        a[3].wrapping_sub(b[3]),
+    ]
+}
+
+/// `acc + s * w` per f32 lane, as a separate multiply then add (two
+/// roundings — matches the scalar kernels and `_mm_add_ps(_mm_mul_ps)`;
+/// NEVER a fused multiply-add, which would round once and break
+/// bit-exactness with the scalar oracle).
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+pub fn madd_f32x4(acc: [f32; 4], s: f32, w: [f32; 4]) -> [f32; 4] {
+    unsafe {
+        use std::arch::x86_64::*;
+        let va = _mm_loadu_ps(acc.as_ptr());
+        let vw = _mm_loadu_ps(w.as_ptr());
+        let vs = _mm_set1_ps(s);
+        let mut out = [0.0f32; 4];
+        _mm_storeu_ps(out.as_mut_ptr(), _mm_add_ps(va, _mm_mul_ps(vs, vw)));
+        out
+    }
+}
+
+/// `acc + s * w` per f32 lane (portable form; the explicit `mul` then
+/// `add` keeps two roundings even if a backend offers FMA).
+#[cfg(not(target_arch = "x86_64"))]
+#[inline(always)]
+pub fn madd_f32x4(acc: [f32; 4], s: f32, w: [f32; 4]) -> [f32; 4] {
+    [
+        acc[0] + s * w[0],
+        acc[1] + s * w[1],
+        acc[2] + s * w[2],
+        acc[3] + s * w[3],
+    ]
+}
+
+/// Elementwise `a + b` over f32 lanes (binary-spike gather: the "multiply"
+/// by a 1.0 spike is the identity, so the gather kernels add weights).
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+pub fn add_f32x4(a: [f32; 4], b: [f32; 4]) -> [f32; 4] {
+    unsafe {
+        use std::arch::x86_64::*;
+        let va = _mm_loadu_ps(a.as_ptr());
+        let vb = _mm_loadu_ps(b.as_ptr());
+        let mut out = [0.0f32; 4];
+        _mm_storeu_ps(out.as_mut_ptr(), _mm_add_ps(va, vb));
+        out
+    }
+}
+
+/// Elementwise `a + b` over f32 lanes (portable form).
+#[cfg(not(target_arch = "x86_64"))]
+#[inline(always)]
+pub fn add_f32x4(a: [f32; 4], b: [f32; 4]) -> [f32; 4] {
+    [a[0] + b[0], a[1] + b[1], a[2] + b[2], a[3] + b[3]]
+}
+
+/// Elementwise `a * b` over i32 lanes (squared differences in the NLM
+/// column SSD; portable everywhere — `_mm_mullo_epi32` is SSE4.1, above
+/// the baseline — and exact: two's-complement multiply is elementwise).
+#[inline(always)]
+pub fn mul_i32x4(a: [i32; 4], b: [i32; 4]) -> [i32; 4] {
+    [
+        a[0].wrapping_mul(b[0]),
+        a[1].wrapping_mul(b[1]),
+        a[2].wrapping_mul(b[2]),
+        a[3].wrapping_mul(b[3]),
+    ]
+}
+
+/// Elementwise `a * b` over u32 lanes (NLM weight × pixel products).
+#[inline(always)]
+pub fn mul_u32x4(a: [u32; 4], b: [u32; 4]) -> [u32; 4] {
+    [
+        a[0].wrapping_mul(b[0]),
+        a[1].wrapping_mul(b[1]),
+        a[2].wrapping_mul(b[2]),
+        a[3].wrapping_mul(b[3]),
+    ]
+}
+
+/// Elementwise truncating `a / k` over u32 lanes (the NLM mean-SSD `/ 9`
+/// — identical to scalar u32 division).
+#[inline(always)]
+pub fn divk_u32x4(a: [u32; 4], k: u32) -> [u32; 4] {
+    [a[0] / k, a[1] / k, a[2] / k, a[3] / k]
+}
+
+/// Elementwise `a * k` over i32 lanes (small stencil constants; portable
+/// everywhere — `_mm_mullo_epi32` is SSE4.1, above the baseline).
+#[inline(always)]
+pub fn mulk_i32x4(a: [i32; 4], k: i32) -> [i32; 4] {
+    [
+        a[0].wrapping_mul(k),
+        a[1].wrapping_mul(k),
+        a[2].wrapping_mul(k),
+        a[3].wrapping_mul(k),
+    ]
+}
+
+/// Elementwise truncating `a / k` over i32 lanes (stencil normalizers —
+/// truncation toward zero, identical to scalar `/` on i32).
+#[inline(always)]
+pub fn divk_i32x4(a: [i32; 4], k: i32) -> [i32; 4] {
+    [a[0] / k, a[1] / k, a[2] / k, a[3] / k]
+}
+
+/// Elementwise `a + b` over i64 lanes (CSC Q2.14 dot products).
+#[inline(always)]
+pub fn add_i64x4(a: [i64; 4], b: [i64; 4]) -> [i64; 4] {
+    [
+        a[0].wrapping_add(b[0]),
+        a[1].wrapping_add(b[1]),
+        a[2].wrapping_add(b[2]),
+        a[3].wrapping_add(b[3]),
+    ]
+}
+
+/// Elementwise `a * k` over i64 lanes (CSC coefficient scaling).
+#[inline(always)]
+pub fn mulk_i64x4(a: [i64; 4], k: i64) -> [i64; 4] {
+    [
+        a[0].wrapping_mul(k),
+        a[1].wrapping_mul(k),
+        a[2].wrapping_mul(k),
+        a[3].wrapping_mul(k),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integer_lanes_match_scalar_ops() {
+        let a = [1u32, u32::MAX, 7, 1000];
+        let b = [2u32, 1, 9, 24];
+        assert_eq!(add_u32x4(a, b), [3, 0, 16, 1024]);
+        let ai = [5i32, -3, i32::MAX, 0];
+        let bi = [1i32, -4, 1, -9];
+        assert_eq!(add_i32x4(ai, bi), [6, -7, i32::MIN, -9]);
+        assert_eq!(sub_i32x4(ai, bi), [4, 1, i32::MAX - 1, 9]);
+        assert_eq!(mulk_i32x4([1, -2, 3, -4], 3), [3, -6, 9, -12]);
+        assert_eq!(mul_i32x4([2, -3, 0, 7], [2, -3, 5, -1]), [4, 9, 0, -7]);
+        assert_eq!(mul_u32x4([256, 2, 0, 9], [100, 3, 7, 9]), [25600, 6, 0, 81]);
+        // truncation toward zero, matching scalar i32 division
+        assert_eq!(divk_i32x4([7, -7, 8, -8], 8), [0, 0, 1, -1]);
+        assert_eq!(divk_u32x4([8, 9, 17, 0], 9), [0, 1, 1, 0]);
+        assert_eq!(add_i64x4([1, 2, 3, 4], [10, 20, 30, 40]), [11, 22, 33, 44]);
+        assert_eq!(mulk_i64x4([1, -1, 5, 0], -7), [-7, 7, -35, 0]);
+    }
+
+    #[test]
+    fn f32_lanes_are_bit_exact_with_separate_mul_add() {
+        // values chosen so an FMA (single rounding) would differ
+        let acc = [0.1f32, 1.0e-8, 3.14159, -7.5];
+        let w = [0.3f32, 1.0e8, 2.71828, 0.333];
+        let s = 1.000_000_1f32;
+        let got = madd_f32x4(acc, s, w);
+        for l in 0..4 {
+            let want = acc[l] + s * w[l]; // two roundings
+            assert_eq!(got[l].to_bits(), want.to_bits(), "lane {l}");
+        }
+        let got = add_f32x4(acc, w);
+        for l in 0..4 {
+            assert_eq!(got[l].to_bits(), (acc[l] + w[l]).to_bits(), "lane {l}");
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! SIMD-dispatch parity suite — the lane kernels' determinism contract
+//! (PR 7 acceptance criteria).
+//!
+//! Proves, without needing compiled artifacts, that the 4-wide lane
+//! kernels of BOTH compute planes are bit-exact with their scalar
+//! oracles under every dispatch combination:
+//!
+//! * a full ISP frame under each of the five fleet scenario stage masks
+//!   is **bit-identical** across workers {1, 4} × simd {on, off};
+//! * the SNN forward (f32 AND int8, all four backbone specs) produces
+//!   identical head bits and exact synop counts across the same matrix;
+//! * the fused int-only conv→LIF forward equals the unfused integer
+//!   reference exactly, for every backbone spec;
+//! * (artifacts-gated) the fleet determinism digest is invariant across
+//!   workers × simd × feedback latency.
+
+use std::sync::Arc;
+
+use acelerador::config::SystemConfig;
+use acelerador::events::voxel::VoxelGrid;
+use acelerador::fleet::profile::MIX_CYCLE;
+use acelerador::isp::pipeline::IspPipeline;
+use acelerador::isp::sensor::SensorModel;
+use acelerador::runtime::pool::WorkerPool;
+use acelerador::snn::backbone::{backbone_spec, LayerSpec};
+use acelerador::snn::quant::QuantBackbone;
+use acelerador::snn::{Backbone, BackboneKind, Tensor};
+use acelerador::util::{ImageU8, SplitMix64};
+
+const WORKER_COUNTS: [usize; 2] = [1, 4];
+
+const T_BINS: usize = 3;
+const POLARITIES: usize = 2;
+const SIZE: usize = 16; // 3 pools -> 2x2 head grid
+const DECAY: f32 = 0.75;
+const V_TH: f32 = 1.0;
+
+fn random_tensor(rng: &mut SplitMix64, shape: &[usize], lo: f32, hi: f32) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::from_vec(
+        shape,
+        (0..n).map(|_| rng.uniform_in(lo as f64, hi as f64) as f32).collect(),
+    )
+}
+
+/// Synthetic conv params tracking the spec's channel flow (same scheme
+/// as `tests/parallel_parity.rs`; head is a 1x1 to 14 ch).
+fn synthetic_params(kind: BackboneKind, seed: u64) -> Vec<(Tensor, Vec<f32>)> {
+    let mut rng = SplitMix64::new(seed);
+    let mut params = Vec::new();
+    let mut c = POLARITIES;
+    let push = |rng: &mut SplitMix64, shape: &[usize]| -> Vec<f32> {
+        (0..shape[0]).map(|_| rng.uniform_in(-0.1, 0.3) as f32).collect()
+    };
+    for layer in backbone_spec(kind) {
+        match layer {
+            LayerSpec::Conv { out, k } => {
+                let w = random_tensor(&mut rng, &[out, c, k, k], -0.6, 0.6);
+                let b = push(&mut rng, &w.shape);
+                params.push((w, b));
+                c = out;
+            }
+            LayerSpec::Conv1x1 { out } | LayerSpec::Transition { out } => {
+                let w = random_tensor(&mut rng, &[out, c, 1, 1], -0.6, 0.6);
+                let b = push(&mut rng, &w.shape);
+                params.push((w, b));
+                c = out;
+            }
+            LayerSpec::Pool => {}
+            LayerSpec::DenseBlock { growth, layers } => {
+                for _ in 0..layers {
+                    let w = random_tensor(&mut rng, &[growth, c, 3, 3], -0.6, 0.6);
+                    let b = push(&mut rng, &w.shape);
+                    params.push((w, b));
+                    c += growth; // concat
+                }
+            }
+            LayerSpec::DwSep { out } => {
+                let dw = random_tensor(&mut rng, &[c, 1, 3, 3], -0.6, 0.6);
+                let db = push(&mut rng, &dw.shape);
+                params.push((dw, db));
+                let pw = random_tensor(&mut rng, &[out, c, 1, 1], -0.6, 0.6);
+                let pb = push(&mut rng, &pw.shape);
+                params.push((pw, pb));
+                c = out;
+            }
+        }
+    }
+    let head = random_tensor(&mut rng, &[14, c, 1, 1], -0.6, 0.6);
+    let hb = (0..14).map(|_| rng.uniform_in(-0.1, 0.1) as f32).collect();
+    params.push((head, hb));
+    params
+}
+
+fn synthetic_backbone(kind: BackboneKind, seed: u64, pool: Arc<WorkerPool>) -> Backbone {
+    Backbone {
+        kind,
+        params: synthetic_params(kind, seed),
+        decay: DECAY,
+        v_th: V_TH,
+        sparse_threshold: acelerador::snn::DEFAULT_SPARSE_THRESHOLD,
+        pool,
+    }
+}
+
+fn synthetic_voxel(seed: u64, density: f64) -> VoxelGrid {
+    let mut rng = SplitMix64::new(seed);
+    let n = T_BINS * POLARITIES * SIZE * SIZE;
+    VoxelGrid {
+        t_bins: T_BINS,
+        polarities: POLARITIES,
+        height: SIZE,
+        width: SIZE,
+        data: (0..n)
+            .map(|_| if rng.uniform_in(0.0, 1.0) < density { 1.0 } else { 0.0 })
+            .collect(),
+    }
+}
+
+fn capture(seed: u64, width: usize, height: usize) -> ImageU8 {
+    let mut rng = SplitMix64::new(seed);
+    let frame = ImageU8::from_fn(width, height, |x, y| (50 + (x * 2 + y) % 140) as u8);
+    SensorModel::default().capture(&frame, &mut rng).raw
+}
+
+/// A pool with the SIMD dispatch pinned (rather than inherited from the
+/// `ACELERADOR_SIMD` environment, so the test is hermetic).
+fn pool_with_simd(workers: usize, simd: bool) -> Arc<WorkerPool> {
+    let pool = WorkerPool::new(workers);
+    pool.set_simd_enabled(simd);
+    pool
+}
+
+#[test]
+fn isp_bit_identical_across_simd_and_workers_all_profiles() {
+    let cfg = SystemConfig::default();
+    let raw = capture(42, 64, 64);
+    for kind in MIX_CYCLE {
+        let mask = kind.default_stage_mask();
+        // scalar baseline: inline pool (always the scalar serial path),
+        // 2 frames so EMA state evolves under this mask too
+        let mut base = IspPipeline::new(&cfg.isp);
+        let mut p = base.params().clone();
+        p.stages = mask;
+        base.set_params(p.clone());
+        let mut want = Vec::new();
+        for _ in 0..2 {
+            let (out, report) = base.process(&raw);
+            want.push((out, report.dpc_corrections));
+        }
+        for &workers in &WORKER_COUNTS {
+            for simd in [false, true] {
+                let mut isp = IspPipeline::new(&cfg.isp);
+                isp.set_params(p.clone());
+                isp.set_worker_pool(pool_with_simd(workers, simd));
+                for (i, (expect, expect_dpc)) in want.iter().enumerate() {
+                    let (out, report) = isp.process(&raw);
+                    assert_eq!(
+                        &out, expect,
+                        "{kind:?} frame {i} diverged @ {workers} workers simd={simd}"
+                    );
+                    assert_eq!(
+                        report.dpc_corrections, *expect_dpc,
+                        "{kind:?} DPC tally diverged @ {workers} workers simd={simd}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn snn_forward_value_exact_across_simd_and_workers_all_backbones() {
+    for kind in BackboneKind::all() {
+        let seed = 0x51D ^ kind.name().len() as u64;
+        let base = synthetic_backbone(kind, seed, WorkerPool::inline());
+        let qbase = QuantBackbone::from_backbone(&base);
+        for &density in &[0.02, 0.2] {
+            let vox = synthetic_voxel(17 + kind.name().len() as u64, density);
+            let (want_head, want_stats) = base.forward(&vox);
+            let (want_qhead, want_qstats) = qbase.forward(&vox);
+            for &workers in &WORKER_COUNTS {
+                for simd in [false, true] {
+                    let bb =
+                        synthetic_backbone(kind, seed, pool_with_simd(workers, simd));
+                    let (head, stats) = bb.forward(&vox);
+                    assert_eq!(
+                        head.data, want_head.data,
+                        "{kind:?} density {density} @ {workers} workers simd={simd}: f32 bits"
+                    );
+                    assert_eq!(stats.synops, want_stats.synops);
+                    assert_eq!(stats.layer_synops, want_stats.layer_synops);
+                    assert_eq!(stats.layer_activity, want_stats.layer_activity);
+                    let qb = QuantBackbone::from_backbone(&base)
+                        .with_pool(pool_with_simd(workers, simd));
+                    let (qhead, qstats) = qb.forward(&vox);
+                    assert_eq!(
+                        qhead.data, want_qhead.data,
+                        "{kind:?} density {density} @ {workers} workers simd={simd}: i8 path"
+                    );
+                    assert_eq!(qstats.synops, want_qstats.synops);
+                    assert_eq!(qstats.layer_synops, want_qstats.layer_synops);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_int_forward_exactly_matches_unfused_all_backbones() {
+    for kind in BackboneKind::all() {
+        let seed = 0xFA3 ^ kind.name().len() as u64;
+        let base = synthetic_backbone(kind, seed, WorkerPool::inline());
+        let qb = QuantBackbone::from_backbone(&base);
+        for &density in &[0.05, 0.25] {
+            let vox = synthetic_voxel(29 + kind.name().len() as u64, density);
+            let (h_u, s_u) = qb.forward_int(&vox, false);
+            let (h_f, s_f) = qb.forward_fused(&vox);
+            assert_eq!(
+                h_u.data, h_f.data,
+                "{kind:?} density {density}: fused head must equal unfused exactly"
+            );
+            assert_eq!(s_u.synops, s_f.synops, "{kind:?}: synop accounting diverged");
+            assert_eq!(s_u.layer_synops, s_f.layer_synops, "{kind:?}");
+            assert_eq!(s_u.layer_activity, s_f.layer_activity, "{kind:?}");
+        }
+    }
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!(
+        "{}/artifacts/manifest.json",
+        env!("CARGO_MANIFEST_DIR")
+    ))
+    .exists()
+}
+
+#[test]
+fn fleet_digest_invariant_across_simd_workers_and_latency() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut digests = Vec::new();
+    for &workers in &WORKER_COUNTS {
+        for simd in ["off", "on"] {
+            for latency in [0u64, 2] {
+                let mut cfg = SystemConfig::default();
+                cfg.npu.artifacts_dir =
+                    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+                cfg.npu.backbone = "spiking_mobilenet".into(); // fastest
+                cfg.fleet.streams = 2;
+                cfg.fleet.windows_per_stream = 4;
+                cfg.fleet.base_seed = 99;
+                cfg.runtime.workers = workers;
+                cfg.runtime.simd = simd.into();
+                cfg.loop_.feedback_latency = latency;
+                let report = acelerador::fleet::run_fleet(&cfg).expect("fleet run");
+                digests.push((workers, simd, latency, report.digest_hex()));
+            }
+        }
+    }
+    let want = &digests[0].3;
+    for (workers, simd, latency, digest) in &digests[1..] {
+        assert_eq!(
+            digest, want,
+            "digest diverged @ {workers} workers simd={simd} latency={latency}"
+        );
+    }
+}
