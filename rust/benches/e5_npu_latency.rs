@@ -1,24 +1,66 @@
 //! E5 — NPU latency/throughput (paper §I "ultra-fast detection",
-//! "microsecond latency"): PJRT execute latency per backbone, batching
-//! amortization, end-to-end service latency under a Poisson-ish arrival
-//! stream, and the voxelization/decode overheads around the engine.
+//! "microsecond latency"): serving-backend comparison (PJRT vs the
+//! artifact-free native f32/int8 twins), PJRT execute latency per
+//! backbone, batching amortization, end-to-end service latency under a
+//! Poisson-ish arrival stream, and the voxelization/decode overheads
+//! around the engine.
 //!
 //! Run: `cargo bench --bench e5_npu_latency`
+//!
+//! The PJRT sections need `artifacts/manifest.json`; they skip loudly
+//! without it. The backend-comparison native rows always run.
 
 use acelerador::config::NpuConfig;
 use acelerador::coordinator::NpuService;
 use acelerador::detect::{decode_head, YoloSpec};
 use acelerador::events::scene::DvsWindowSim;
 use acelerador::events::voxel::voxelize;
-use acelerador::runtime::NpuEngine;
+use acelerador::runtime::pool::auto_workers;
+use acelerador::runtime::{create_backend, NpuBackend, NpuEngine, WorkerPool};
 use acelerador::testkit::bench::{Bench, Table};
 use acelerador::util::stats::Summary;
 
 fn main() -> anyhow::Result<()> {
     println!("=== E5: NPU latency & batching (paper §I latency claims) ===\n");
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
     let vox: Vec<_> = (0..8)
         .map(|i| voxelize(&DvsWindowSim::new(70_000 + i).run().0))
         .collect();
+
+    // --- serving backends head to head (same contract, three engines) ------
+    println!("--- backend comparison: spiking_yolo µs/window ---");
+    let mut t = Table::new(&["backend", "b=1 µs", "b=4 µs", "µs/sample b=4"]);
+    let pool = WorkerPool::new(auto_workers());
+    for backend in ["pjrt", "native-f32", "native-int8"] {
+        if backend == "pjrt" && !have_artifacts {
+            t.row(&[backend.to_string(), "-".into(), "-".into(), "(no artifacts)".into()]);
+            continue;
+        }
+        let cfg = NpuConfig {
+            backbone: "spiking_yolo".into(),
+            backend: backend.into(),
+            ..Default::default()
+        };
+        let be = create_backend(&cfg, pool.clone())?;
+        let b = Bench::new(3, 10);
+        let r1 = b.run(&format!("{backend} b1"), || be.infer(&[&vox[0]]).unwrap());
+        let refs: Vec<&_> = vox[0..4].iter().collect();
+        let r4 = b.run(&format!("{backend} b4"), || be.infer(&refs).unwrap());
+        t.row(&[
+            backend.to_string(),
+            format!("{:.0}", r1.mean_us()),
+            format!("{:.0}", r4.mean_us()),
+            format!("{:.0}", r4.mean_us() / 4.0),
+        ]);
+    }
+    println!();
+    t.print();
+
+    if !have_artifacts {
+        println!("\nE5: artifacts/manifest.json absent — PJRT-only sections skipped");
+        println!("(per-backbone execute table, overheads, NpuService burst)");
+        return Ok(());
+    }
 
     // --- per-backbone execute latency, batch 1 vs 4 ------------------------
     let mut t = Table::new(&["backbone", "b=1 µs", "b=4 µs", "µs/sample b=4", "amortization"]);

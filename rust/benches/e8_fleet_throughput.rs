@@ -15,6 +15,7 @@
 use acelerador::config::SystemConfig;
 use acelerador::fleet::run_fleet;
 use acelerador::jsonlite::Json;
+use acelerador::runtime::BackendKind;
 use acelerador::testkit::bench::{write_bench_artifact, Table};
 
 fn base_cfg() -> SystemConfig {
@@ -23,11 +24,23 @@ fn base_cfg() -> SystemConfig {
     cfg.fleet.windows_per_stream = 12;
     cfg.fleet.scenario_mix = "mixed".into();
     cfg.fleet.base_seed = 42;
+    // without PJRT artifacts every sweep runs on the artifact-free
+    // native-int8 twin instead of failing at the first fleet run
+    if cfg.npu.resolve_backend() == BackendKind::Pjrt
+        && !std::path::Path::new("artifacts/manifest.json").exists()
+    {
+        cfg.npu.backend = "native-int8".into();
+    }
     cfg
 }
 
 fn main() -> anyhow::Result<()> {
     println!("=== E8: fleet throughput & cross-stream batch occupancy ===\n");
+
+    // rows below tag the backend they ran on — trajectories are only
+    // comparable within one backend
+    let backend = base_cfg().npu.resolve_backend().name();
+    println!("serving backend: {backend}\n");
 
     let mut artifact_rows: Vec<Json> = Vec::new();
     for (label, lockstep) in [("lockstep", true), ("free-run", false)] {
@@ -43,6 +56,7 @@ fn main() -> anyhow::Result<()> {
             let (pool_workers, ..) = r.pool_row();
             artifact_rows.push(Json::obj(vec![
                 ("mode", Json::str(label)),
+                ("backend", Json::str(backend)),
                 ("streams", Json::num(streams as f64)),
                 ("windows_per_sec", Json::num(r.windows_per_sec())),
                 ("occupancy", Json::num(r.mean_occupancy())),
@@ -74,6 +88,7 @@ fn main() -> anyhow::Result<()> {
         let r = run_fleet(&cfg)?;
         artifact_rows.push(Json::obj(vec![
             ("mode", Json::str("workers-sweep")),
+            ("backend", Json::str(backend)),
             ("streams", Json::num(4.0)),
             ("workers", Json::num(workers as f64)),
             ("windows_per_sec", Json::num(r.windows_per_sec())),
@@ -107,6 +122,7 @@ fn main() -> anyhow::Result<()> {
         }
         artifact_rows.push(Json::obj(vec![
             ("mode", Json::str("latency-sweep")),
+            ("backend", Json::str(backend)),
             ("streams", Json::num(4.0)),
             ("feedback_latency", Json::num(latency as f64)),
             ("windows_per_sec", Json::num(r.windows_per_sec())),
@@ -146,6 +162,39 @@ fn main() -> anyhow::Result<()> {
     }
     tl.print();
     println!("(digests differ BETWEEN latencies by design; each is stable within one)\n");
+
+    // Backend sweep: the same 4-stream lockstep fleet on every backend
+    // runnable in this checkout. Digests intentionally differ BETWEEN
+    // backends (different numeric domains); each row's digest is the
+    // within-backend determinism anchor.
+    println!("--- backend sweep (4 streams, lockstep) ---");
+    let mut tb = Table::new(&["backend", "win/s", "occupancy", "digest"]);
+    for be in ["pjrt", "native-f32", "native-int8"] {
+        if be == "pjrt" && !std::path::Path::new("artifacts/manifest.json").exists() {
+            println!("pjrt row skipped (no artifacts)");
+            continue;
+        }
+        let mut cfg = base_cfg();
+        cfg.fleet.streams = 4;
+        cfg.npu.backend = be.into();
+        let r = run_fleet(&cfg)?;
+        artifact_rows.push(Json::obj(vec![
+            ("mode", Json::str("backend-sweep")),
+            ("backend", Json::str(be)),
+            ("streams", Json::num(4.0)),
+            ("windows_per_sec", Json::num(r.windows_per_sec())),
+            ("occupancy", Json::num(r.mean_occupancy())),
+            ("digest", Json::str(&r.digest_hex())),
+        ]));
+        tb.row(&[
+            be.to_string(),
+            format!("{:.1}", r.windows_per_sec()),
+            format!("{:.2}", r.mean_occupancy()),
+            r.digest_hex(),
+        ]);
+    }
+    tb.print();
+    println!();
 
     // Admission control: cap in-flight windows below the stream count and
     // watch occupancy/backpressure trade against service latency.

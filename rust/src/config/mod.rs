@@ -58,6 +58,10 @@ pub struct NpuConfig {
     /// the dense kernel instead of the sparse gather/popcount paths.
     /// Outputs are identical either way; this trades wall time only.
     pub sparse_threshold: f32,
+    /// Serving backend: `pjrt` (AOT XLA executables, needs artifacts),
+    /// `native-f32` / `native-int8` (in-process twin, artifact-free), or
+    /// `auto` (defer to `ACELERADOR_NPU_BACKEND`, default `pjrt`).
+    pub backend: String,
 }
 
 impl Default for NpuConfig {
@@ -70,7 +74,18 @@ impl Default for NpuConfig {
             conf_threshold: 0.10,
             nms_iou: 0.45,
             sparse_threshold: crate::snn::DEFAULT_SPARSE_THRESHOLD,
+            backend: "auto".into(),
         }
+    }
+}
+
+impl NpuConfig {
+    /// The effective serving backend: explicit names win, `auto` defers
+    /// to `ACELERADOR_NPU_BACKEND` (default `pjrt`) — mirroring
+    /// [`RuntimeConfig::resolve_simd`].
+    pub fn resolve_backend(&self) -> crate::runtime::BackendKind {
+        crate::runtime::BackendKind::from_name(&self.backend)
+            .unwrap_or_else(|_| crate::runtime::backend::default_backend())
     }
 }
 
@@ -332,6 +347,7 @@ impl SystemConfig {
             read_f32(n, "conf_threshold", &mut self.npu.conf_threshold);
             read_f32(n, "nms_iou", &mut self.npu.nms_iou);
             read_f32(n, "sparse_threshold", &mut self.npu.sparse_threshold);
+            read_string(n, "backend", &mut self.npu.backend);
         }
         if let Some(i) = json.get("isp") {
             read_usize(i, "width", &mut self.isp.width);
@@ -405,6 +421,15 @@ impl SystemConfig {
         }
         if !(0.0..=1.0).contains(&(self.npu.sparse_threshold as f64)) {
             bail!("npu: sparse_threshold must be in [0,1] (a spike rate)");
+        }
+        if !matches!(
+            self.npu.backend.as_str(),
+            "auto" | "pjrt" | "native-f32" | "native-int8"
+        ) {
+            bail!(
+                "npu: backend must be auto, pjrt, native-f32 or native-int8 (got {:?})",
+                self.npu.backend
+            );
         }
         if self.isp.awb_low >= self.isp.awb_high {
             bail!("isp: awb_low must be < awb_high");
@@ -488,6 +513,7 @@ impl SystemConfig {
                     ("conf_threshold", Json::num(self.npu.conf_threshold as f64)),
                     ("nms_iou", Json::num(self.npu.nms_iou as f64)),
                     ("sparse_threshold", Json::num(self.npu.sparse_threshold as f64)),
+                    ("backend", Json::str(&self.npu.backend)),
                 ]),
             ),
             (
@@ -677,12 +703,33 @@ mod tests {
         assert!(cfg.validate().is_err());
 
         let mut cfg = SystemConfig::default();
+        cfg.npu.backend = "tpu".into();
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SystemConfig::default();
         cfg.fleet.streams = 0;
         assert!(cfg.validate().is_err());
 
         let mut cfg = SystemConfig::default();
         cfg.fleet.scenario_mix = "marsrover".into();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn backend_overlay_and_resolution() {
+        let cfg = SystemConfig::default();
+        assert_eq!(cfg.npu.backend, "auto");
+        let mut cfg = SystemConfig::default();
+        let json =
+            crate::jsonlite::parse(r#"{"npu": {"backend": "native-int8"}}"#).unwrap();
+        cfg.apply_json(&json).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(
+            cfg.npu.resolve_backend(),
+            crate::runtime::BackendKind::NativeInt8
+        );
+        cfg.npu.backend = "pjrt".into();
+        assert_eq!(cfg.npu.resolve_backend(), crate::runtime::BackendKind::Pjrt);
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! NPU service: dedicated engine thread + dynamic batcher.
 //!
-//! The PJRT engine lives on its own thread (XLA handles are not shared
-//! across threads); callers submit voxel windows through a channel and
-//! receive decoded outputs on a per-request reply channel. The batcher
-//! drains whatever is queued (up to the largest exported batch size) into
-//! ONE PJRT execute — the vLLM-style dynamic batching that amortizes
-//! dispatch overhead (measured by E5).
+//! The serving backend (see [`crate::runtime::backend`]) lives on its own
+//! thread (PJRT/XLA handles are not shared across threads; native
+//! backends simply inherit the isolation); callers submit voxel windows
+//! through a channel and receive decoded outputs on a per-request reply
+//! channel. The batcher drains whatever is queued (up to the backend's
+//! batch ceiling) into ONE backend execute — the vLLM-style dynamic
+//! batching that amortizes dispatch overhead (measured by E5).
 //!
 //! The submit side is a cloneable [`NpuClient`]: any number of producers
 //! (the fleet runtime runs one per stream) multiplex through the same
@@ -23,7 +24,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::config::NpuConfig;
 use crate::events::voxel::VoxelGrid;
-use crate::runtime::NpuEngine;
+use crate::runtime::{create_backend, NpuBackend, WorkerPool};
 use crate::trace::{
     Category, Lane, TraceData, Tracer, WindowTraceId, INSTANT_BATCH, SPAN_NPU_EXECUTE,
     SPAN_NPU_QUEUE,
@@ -155,6 +156,19 @@ impl NpuService {
     /// record queue-wait/execute spans and batch-composition instants on
     /// the batcher lane (for tagged requests only).
     pub fn start_traced(cfg: &NpuConfig, tracer: Tracer) -> Result<Self> {
+        // no shared pool: a native backend gets inline (serial) kernels
+        Self::start_with_pool(cfg, WorkerPool::inline(), tracer)
+    }
+
+    /// [`NpuService::start_traced`] with the runtime's shared worker
+    /// pool. Native backends band their conv kernels over it (inheriting
+    /// its SIMD dispatch) so serving and the ISP plane draw from the same
+    /// workers; the PJRT backend ignores it.
+    pub fn start_with_pool(
+        cfg: &NpuConfig,
+        pool: Arc<WorkerPool>,
+        tracer: Tracer,
+    ) -> Result<Self> {
         let (tx, rx) = channel::<Msg>();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let fault: FaultCell = Arc::new(Mutex::new(None));
@@ -162,7 +176,7 @@ impl NpuService {
         let thread_fault = fault.clone();
         let handle = std::thread::Builder::new()
             .name("npu-engine".into())
-            .spawn(move || engine_thread(cfg, rx, ready_tx, thread_fault, tracer))
+            .spawn(move || engine_thread(cfg, pool, rx, ready_tx, thread_fault, tracer))
             .context("spawning npu thread")?;
         ready_rx
             .recv()
@@ -201,16 +215,18 @@ impl Drop for NpuService {
 
 fn engine_thread(
     cfg: NpuConfig,
+    pool: Arc<WorkerPool>,
     rx: Receiver<Msg>,
     ready: Sender<Result<()>>,
     fault: FaultCell,
     tracer: Tracer,
 ) {
-    let engine = match NpuEngine::new(&cfg.artifacts_dir, &cfg.backbone) {
-        Ok(mut e) => {
-            e.set_sparse_threshold(cfg.sparse_threshold);
+    // The backend is built ON this thread: PJRT handles are not Send, and
+    // native backends are happy anywhere.
+    let backend = match create_backend(&cfg, pool) {
+        Ok(b) => {
             let _ = ready.send(Ok(()));
-            e
+            b
         }
         Err(e) => {
             *fault.lock().unwrap() = Some(format!("engine init failed: {e:#}"));
@@ -218,9 +234,7 @@ fn engine_thread(
             return;
         }
     };
-    let max_batch = cfg
-        .max_batch
-        .min(*engine.batch_sizes().last().unwrap_or(&1));
+    let max_batch = cfg.max_batch.min(backend.max_batch()).max(1);
     let timeout = Duration::from_micros(cfg.batch_timeout_us);
 
     loop {
@@ -258,7 +272,7 @@ fn engine_thread(
 
         let voxels: Vec<&VoxelGrid> = batch.iter().map(|r| &r.voxel).collect();
         let t_exec0 = tracer.enabled().then(Instant::now);
-        match engine.infer(&voxels) {
+        match backend.infer(&voxels) {
             Ok(out) => {
                 let n = batch.len();
                 if let Some(t_exec0) = t_exec0 {
@@ -312,9 +326,10 @@ fn engine_thread(
                 }
             }
             Err(e) => {
-                // A failed PJRT execute means the engine is unusable: reply
-                // to the in-flight batch, record the cause, then fail every
-                // queued caller with it instead of dropping their senders.
+                // A failed backend execute means the engine is unusable:
+                // reply to the in-flight batch, record the cause, then fail
+                // every queued caller with it instead of dropping their
+                // senders.
                 let msg = format!("{e:#}");
                 for req in batch {
                     let _ = req.reply.send(Err(anyhow!("{msg}")));
@@ -454,5 +469,47 @@ mod tests {
             let r = svc.infer_blocking(vox.clone()).unwrap();
             assert!(!r.head.is_empty());
         }
+    }
+
+    /// Native backends serve with no artifacts directory at all — these
+    /// tests run unconditionally (no `have_artifacts` gate).
+    fn native_cfg(backend: &str) -> NpuConfig {
+        NpuConfig {
+            artifacts_dir: "/nonexistent-artifacts".into(),
+            backbone: "spiking_mobilenet".into(),
+            backend: backend.into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn native_service_round_trip_without_artifacts() {
+        for backend in ["native-f32", "native-int8"] {
+            let svc = NpuService::start(&native_cfg(backend)).unwrap();
+            let vox = voxelize(&DvsWindowSim::new(5).run().0);
+            let reply = svc.infer_blocking(vox).unwrap();
+            assert_eq!(reply.head.len(), 14 * 8 * 8, "{backend}");
+            assert_eq!(reply.rates.len(), reply.sparse_layers.len(), "{backend}");
+            assert_eq!(reply.batch_size, 1, "{backend}");
+        }
+    }
+
+    #[test]
+    fn native_service_batches_across_clients() {
+        let mut c = native_cfg("native-int8");
+        c.batch_timeout_us = 50_000;
+        let svc = NpuService::start(&c).unwrap();
+        svc.infer_blocking(voxelize(&DvsWindowSim::new(0).run().0)).unwrap();
+        let clients: Vec<NpuClient> = (0..4).map(|_| svc.client()).collect();
+        let rxs: Vec<_> = clients
+            .iter()
+            .enumerate()
+            .map(|(i, cl)| cl.submit(voxelize(&DvsWindowSim::new(i as u64).run().0)))
+            .collect();
+        let sizes: Vec<usize> = rxs
+            .into_iter()
+            .map(|r| r.recv().unwrap().unwrap().batch_size)
+            .collect();
+        assert!(sizes.iter().max().unwrap() >= &2, "no cross-client batching: {sizes:?}");
     }
 }

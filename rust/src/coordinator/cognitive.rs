@@ -174,11 +174,13 @@ impl CognitiveLoop {
     /// Single-loop mode with tracing: the service thread and the band
     /// pool record into the same sink the stage nodes use.
     pub fn new_traced(cfg: &SystemConfig, scenario_seed: u64, tracer: Tracer) -> Result<Self> {
-        let svc = NpuService::start_traced(&cfg.npu, tracer.clone())?;
-        let client = svc.client();
+        // pool first: a native serving backend bands its kernels over the
+        // same workers the ISP uses (the PJRT backend ignores the handle)
         let pool = WorkerPool::new(cfg.runtime.resolve_workers());
         pool.set_tracer(tracer.clone());
         pool.set_simd_enabled(cfg.runtime.resolve_simd());
+        let svc = NpuService::start_with_pool(&cfg.npu, pool.clone(), tracer.clone())?;
+        let client = svc.client();
         Ok(Self::assemble(cfg, scenario_seed, client, Some(svc), pool, tracer))
     }
 
@@ -246,6 +248,10 @@ impl CognitiveLoop {
             metrics: SystemMetrics::new(),
         };
         loop_.metrics.pipeline.depth.set(latency);
+        loop_
+            .metrics
+            .npu_backend
+            .set(cfg.npu.resolve_backend().gauge_id());
         loop_
     }
 

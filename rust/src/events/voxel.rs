@@ -3,49 +3,160 @@
 //! Mirror of `data.voxelize`: events are bucketed into `T_BINS` temporal
 //! bins and 2 polarity channels over the sensor plane; occupancy is binary
 //! (one-hot), which is what the backbones were trained on.
+//!
+//! The grid is stored **sparse-first**: one bit-packed [`SpikePlane`]
+//! (occupancy words + raster-order event list) per temporal bin, built
+//! directly from the event stream — ingestion never materializes a dense
+//! f32 plane, and the occupancy count is cached at build time. The dense
+//! `[T, P, H, W]` view stays available through [`VoxelGrid::dense`] as
+//! the bit-exact oracle (PJRT packing, parity tests); every
+//! materialization is tallied (see [`dense_materializations`]) so tests
+//! can assert the native serving hot path stays sparse end to end.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::spec;
 use super::Event;
+use crate::snn::SpikePlane;
 
-/// Voxel grid `[T, P, H, W]` in row-major f32 (the NPU input layout).
+static DENSE_BUILDS: AtomicU64 = AtomicU64::new(0);
+
+/// How many dense voxel views have been materialized process-wide.
+/// The native (artifact-free) serving path must never move this counter —
+/// `tests/backend_parity.rs` pins it.
+pub fn dense_materializations() -> u64 {
+    DENSE_BUILDS.load(Ordering::Relaxed)
+}
+
+/// Voxel grid `[T, P, H, W]`, stored as one bit-packed `[P, H, W]`
+/// [`SpikePlane`] per temporal bin (the NPU ingestion layout).
 #[derive(Debug, Clone, PartialEq)]
 pub struct VoxelGrid {
     pub t_bins: usize,
     pub polarities: usize,
     pub height: usize,
     pub width: usize,
-    pub data: Vec<f32>,
+    /// One occupancy plane per temporal bin. Event lists are in raster
+    /// order — identical to [`SpikePlane::from_slice`] on the dense view,
+    /// so f32 gather kernels fold in the exact same order.
+    pub planes: Vec<SpikePlane>,
+    /// Set-voxel count, cached at build time (the serving dispatch plan
+    /// reads it once per batch instead of re-scanning the grid).
+    occupancy: usize,
 }
 
 impl VoxelGrid {
     pub fn zeros() -> Self {
+        Self::empty(spec::T_BINS, spec::POLARITIES, spec::HEIGHT, spec::WIDTH)
+    }
+
+    /// An all-silent grid of arbitrary shape (tests use small planes).
+    pub fn empty(t_bins: usize, polarities: usize, height: usize, width: usize) -> Self {
         Self {
-            t_bins: spec::T_BINS,
-            polarities: spec::POLARITIES,
-            height: spec::HEIGHT,
-            width: spec::WIDTH,
-            data: vec![0.0; spec::T_BINS * spec::POLARITIES * spec::HEIGHT * spec::WIDTH],
+            t_bins,
+            polarities,
+            height,
+            width,
+            planes: (0..t_bins)
+                .map(|_| SpikePlane::new(polarities, height, width))
+                .collect(),
+            occupancy: 0,
         }
     }
 
+    /// Build from a dense `[T, P, H, W]` row-major slice (tests and
+    /// oracles; the ingestion path never goes through here).
+    pub fn from_dense(
+        t_bins: usize,
+        polarities: usize,
+        height: usize,
+        width: usize,
+        data: &[f32],
+    ) -> Self {
+        let plane = polarities * height * width;
+        assert_eq!(t_bins * plane, data.len(), "shape/data mismatch");
+        let planes: Vec<SpikePlane> = (0..t_bins)
+            .map(|t| {
+                SpikePlane::from_slice(
+                    polarities,
+                    height,
+                    width,
+                    &data[t * plane..(t + 1) * plane],
+                )
+            })
+            .collect();
+        let occupancy = planes.iter().map(SpikePlane::count).sum();
+        Self { t_bins, polarities, height, width, planes, occupancy }
+    }
+
+    /// Dense row-major offset of `(t, p, y, x)` — the PJRT input layout.
     #[inline]
     pub fn idx(&self, t: usize, p: usize, y: usize, x: usize) -> usize {
         ((t * self.polarities + p) * self.height + y) * self.width + x
     }
 
+    /// Total voxel count `T * P * H * W` (the dense view's length).
     #[inline]
-    pub fn get(&self, t: usize, p: usize, y: usize, x: usize) -> f32 {
-        self.data[self.idx(t, p, y, x)]
+    pub fn len(&self) -> usize {
+        self.t_bins * self.polarities * self.height * self.width
     }
 
-    /// Number of set voxels.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn get(&self, t: usize, p: usize, y: usize, x: usize) -> f32 {
+        if self.planes[t].get(p, y, x) {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Number of set voxels (cached — O(1)).
+    #[inline]
     pub fn occupancy(&self) -> usize {
-        self.data.iter().filter(|&&v| v != 0.0).count()
+        self.occupancy
     }
 
     /// Fraction of set voxels (input sparsity for E4's energy model).
     pub fn density(&self) -> f64 {
-        self.occupancy() as f64 / self.data.len() as f64
+        self.occupancy as f64 / self.len() as f64
+    }
+
+    /// Materialize the dense `[T, P, H, W]` f32 view — the bit-exact
+    /// oracle. Every call is tallied in [`dense_materializations`]; the
+    /// native serving path must never reach here.
+    pub fn dense(&self) -> Vec<f32> {
+        DENSE_BUILDS.fetch_add(1, Ordering::Relaxed);
+        let mut data = vec![0.0f32; self.len()];
+        let plane = self.polarities * self.height * self.width;
+        for (t, sp) in self.planes.iter().enumerate() {
+            for &(p, y, x) in &sp.events {
+                data[t * plane
+                    + ((p as usize) * self.height + y as usize) * self.width
+                    + x as usize] = 1.0;
+            }
+        }
+        data
+    }
+
+    #[inline]
+    fn insert(&mut self, t: usize, p: usize, y: usize, x: usize) {
+        if self.planes[t].set_bit(p, y, x) {
+            self.occupancy += 1;
+        }
+    }
+
+    /// Restore the per-plane raster-order event lists after bit-first
+    /// insertion (events arrive in time order, possibly duplicated).
+    fn seal(mut self) -> Self {
+        for plane in &mut self.planes {
+            plane.rebuild_events();
+        }
+        self
     }
 }
 
@@ -55,10 +166,9 @@ pub fn voxelize(events: &[Event]) -> VoxelGrid {
     for e in events {
         let tbin =
             ((e.t_us * spec::T_BINS as i64 / spec::WINDOW_US) as usize).min(spec::T_BINS - 1);
-        let idx = grid.idx(tbin, e.p as usize, e.y as usize, e.x as usize);
-        grid.data[idx] = 1.0;
+        grid.insert(tbin, e.p as usize, e.y as usize, e.x as usize);
     }
-    grid
+    grid.seal()
 }
 
 /// Voxelize with an explicit window start (for [`super::scene::ScenarioSim`]
@@ -71,10 +181,9 @@ pub fn voxelize_at(events: &[Event], window_start_us: i64) -> VoxelGrid {
             continue;
         }
         let tbin = ((rel * spec::T_BINS as i64 / spec::WINDOW_US) as usize).min(spec::T_BINS - 1);
-        let idx = grid.idx(tbin, e.p as usize, e.y as usize, e.x as usize);
-        grid.data[idx] = 1.0;
+        grid.insert(tbin, e.p as usize, e.y as usize, e.x as usize);
     }
-    grid
+    grid.seal()
 }
 
 #[cfg(test)]
@@ -86,9 +195,17 @@ mod tests {
     fn shape_is_spec() {
         let g = VoxelGrid::zeros();
         assert_eq!(
-            g.data.len(),
+            g.len(),
             spec::T_BINS * spec::POLARITIES * spec::HEIGHT * spec::WIDTH
         );
+        assert_eq!(g.planes.len(), spec::T_BINS);
+        for p in &g.planes {
+            assert_eq!(
+                (p.channels, p.height, p.width),
+                (spec::POLARITIES, spec::HEIGHT, spec::WIDTH)
+            );
+        }
+        assert_eq!(g.occupancy(), 0);
     }
 
     #[test]
@@ -97,6 +214,7 @@ mod tests {
         let g = voxelize(&ev);
         assert_eq!(g.occupancy(), 1);
         assert_eq!(g.get(0, 1, 4, 3), 1.0);
+        assert_eq!(g.planes[0].events, vec![(1, 4, 3)]);
     }
 
     #[test]
@@ -111,6 +229,7 @@ mod tests {
         let e = Event { t_us: 100, x: 1, y: 1, p: 0 };
         let g = voxelize(&[e, e, e]);
         assert_eq!(g.occupancy(), 1);
+        assert_eq!(g.planes[0].count(), 1);
     }
 
     #[test]
@@ -124,6 +243,9 @@ mod tests {
             keys.insert((tbin, e.p, e.y, e.x));
         }
         assert_eq!(g.occupancy(), keys.len());
+        // the cache agrees with the per-plane event lists
+        let counted: usize = g.planes.iter().map(SpikePlane::count).sum();
+        assert_eq!(g.occupancy(), counted);
     }
 
     #[test]
@@ -145,5 +267,35 @@ mod tests {
         let g = voxelize(&ev);
         assert!(g.density() < 0.2, "density {}", g.density());
         assert!(g.density() > 0.0);
+    }
+
+    #[test]
+    fn sparse_form_round_trips_through_dense_oracle() {
+        // voxelize -> dense() -> from_dense must reproduce the grid
+        // EXACTLY: same occupancy words AND same raster event order, so
+        // the f32 gather kernels fold identically on either build path.
+        let (ev, _) = DvsWindowSim::new(7).run();
+        let g = voxelize(&ev);
+        let dense = g.dense();
+        assert_eq!(dense.len(), g.len());
+        assert_eq!(
+            dense.iter().filter(|&&v| v != 0.0).count(),
+            g.occupancy()
+        );
+        let back = VoxelGrid::from_dense(
+            g.t_bins, g.polarities, g.height, g.width, &dense,
+        );
+        assert_eq!(back, g, "planes (words + event order) must round-trip");
+    }
+
+    #[test]
+    fn dense_views_are_counted() {
+        let g = voxelize(&DvsWindowSim::new(3).run().0);
+        let before = dense_materializations();
+        let _ = g.dense();
+        let _ = g.dense();
+        // >= not ==: the counter is process-global and other tests in
+        // this binary may materialize dense views concurrently
+        assert!(dense_materializations() >= before + 2);
     }
 }

@@ -197,13 +197,14 @@ pub fn run_fleet_with(cfg: &SystemConfig, tracer: Tracer) -> Result<FleetReport>
         run_cfg.npu.batch_timeout_us = run_cfg.npu.batch_timeout_us.max(LOCKSTEP_GATHER_US);
     }
 
-    let svc = NpuService::start_traced(&run_cfg.npu, tracer.clone())?;
     // ONE shared band pool for every stream's ISP (and any twin work) —
     // total band threads stay bounded by runtime.workers no matter how
-    // many streams the fleet serves.
+    // many streams the fleet serves. Created before the service so a
+    // native serving backend bands onto the same workers.
     let band_pool = WorkerPool::new(workers);
     band_pool.set_tracer(tracer.clone());
     band_pool.set_simd_enabled(cfg.runtime.resolve_simd());
+    let svc = NpuService::start_with_pool(&run_cfg.npu, band_pool.clone(), tracer.clone())?;
     let barrier = fleet
         .lockstep
         .then(|| Arc::new(RoundBarrier::new(carriers)));

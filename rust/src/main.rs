@@ -24,7 +24,7 @@ use acelerador::hw::timing::frame_timing;
 use acelerador::isp::graph::StageMask;
 use acelerador::isp::pipeline::IspPipeline;
 use acelerador::isp::sensor::SensorModel;
-use acelerador::runtime::NpuEngine;
+use acelerador::runtime::{create_backend, NpuBackend, WorkerPool};
 use acelerador::testkit::bench::Table;
 use acelerador::trace::watchdog::{HealthReport, Watchdog};
 use acelerador::trace::{chrome, TraceSink, Tracer};
@@ -53,6 +53,7 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "json", help: "run/fleet: emit machine-readable JSON instead of tables", is_switch: true, default: None },
         FlagSpec { name: "isp-stages", help: "ISP stage mask: \"all\", a list of stages to enable (dpc,awb,demosaic,nlm,gamma,csc), or -stage terms to drop from the full graph (e.g. \"-nlm,-csc\")", is_switch: false, default: None },
         FlagSpec { name: "sparse-threshold", help: "SNN activity-adaptive dispatch threshold: spike rate (0..1) above which the NPU plans a layer onto the dense kernel instead of the event-driven sparse path (outputs are identical either way; drives the sparse/dense split reported in metrics and the fleet report)", is_switch: false, default: None },
+        FlagSpec { name: "npu-backend", help: "serving backend: pjrt (AOT XLA executables, needs the artifacts directory), native-f32 / native-int8 (in-process SNN twin — artifact-free; int8 uses the fused conv->LIF fixed-point path), or auto (defer to ACELERADOR_NPU_BACKEND, default pjrt). Backends differ numerically; digests are comparable only within one backend", is_switch: false, default: None },
         FlagSpec { name: "workers", help: "deterministic worker-pool width for ISP row bands and SNN channel bands (0 = available_parallelism, 1 = inline scalar path; outputs are bit-identical for any value)", is_switch: false, default: None },
         FlagSpec { name: "simd", help: "SIMD lane dispatch for the per-core kernels: on = force the 4-wide lane kernels, off = force the scalar oracles, auto = enabled unless ACELERADOR_SIMD opts out (outputs and digests are bit-identical either way; trades wall time only)", is_switch: false, default: None },
         FlagSpec { name: "feedback-latency", help: "parameter-bus feedback-latency register in frames: 0 = serial schedule (decide and apply inside the same window, bit-exact with the classic loop), >= 1 = pipelined schedule (window t's ISP render overlaps its NPU inference; commands land latency frame boundaries after their source window). Each value has its own deterministic digest", is_switch: false, default: None },
@@ -88,6 +89,9 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     }
     if let Some(s) = args.explicit("simd") {
         cfg.runtime.simd = s.to_string();
+    }
+    if let Some(b) = args.explicit("npu-backend") {
+        cfg.npu.backend = b.to_string();
     }
     if let Some(l) = args.explicit("feedback-latency") {
         cfg.loop_.feedback_latency = l.parse().map_err(|_| {
@@ -153,8 +157,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     l.closed_loop = !args.has("open-loop");
     if !args.has("json") {
         println!(
-            "cognitive loop: backbone={} windows={windows} closed={} feedback_latency={}",
+            "cognitive loop: backbone={} backend={} windows={windows} closed={} feedback_latency={}",
             cfg.npu.backbone,
+            cfg.npu.resolve_backend().name(),
             l.closed_loop,
             l.feedback_latency()
         );
@@ -245,8 +250,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     cfg.validate()?;
     if !args.has("json") {
         println!(
-            "fleet: backbone={} streams={} windows/stream={} mix={} lockstep={} feedback_latency={}",
+            "fleet: backbone={} backend={} streams={} windows/stream={} mix={} lockstep={} feedback_latency={}",
             cfg.npu.backbone,
+            cfg.npu.resolve_backend().name(),
             cfg.fleet.streams,
             cfg.fleet.windows_per_stream,
             cfg.fleet.scenario_mix,
@@ -277,7 +283,11 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let scenes = args.get_usize("scenes")?;
     let seed = args.get_u64("seed")?;
-    let engine = NpuEngine::new(&cfg.npu.artifacts_dir, &cfg.npu.backbone)?;
+    // eval goes through the same pluggable backend as run/fleet, so the
+    // detection sweep works artifact-free on the native twins too
+    let pool = WorkerPool::new(cfg.runtime.resolve_workers());
+    pool.set_simd_enabled(cfg.runtime.resolve_simd());
+    let engine = create_backend(&cfg.npu, pool)?;
     let yolo = YoloSpec::default();
     let mut dets_all = Vec::new();
     let mut gts_all = Vec::new();

@@ -638,6 +638,10 @@ pub struct SystemMetrics {
     pub isp_frames: Counter,
     pub isp_param_updates: Counter,
     pub queue_depth: Gauge,
+    /// Which serving backend executes inferences, in the
+    /// `BackendKind::gauge_id` encoding (0 = pjrt, 1 = native-f32,
+    /// 2 = native-int8).
+    pub npu_backend: Gauge,
     pub npu_latency: LatencyHist,
     pub e2e_latency: LatencyHist,
     pub isp_latency: LatencyHist,
@@ -689,6 +693,7 @@ impl SystemMetrics {
         r.counter("isp.frames", self.isp_frames.get());
         r.counter("isp.param_updates", self.isp_param_updates.get());
         r.gauge("npu.queue_depth", self.queue_depth.get() as f64);
+        r.gauge("npu.backend", self.npu_backend.get() as f64);
         for (name, h) in [
             ("latency.npu", &self.npu_latency),
             ("latency.e2e", &self.e2e_latency),
@@ -752,7 +757,10 @@ impl SystemMetrics {
             ),
             (
                 "gauges",
-                Json::obj(vec![("queue_depth", Json::num(self.queue_depth.get() as f64))]),
+                Json::obj(vec![
+                    ("queue_depth", Json::num(self.queue_depth.get() as f64)),
+                    ("npu_backend", Json::num(self.npu_backend.get() as f64)),
+                ]),
             ),
             (
                 "histograms",

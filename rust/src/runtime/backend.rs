@@ -1,0 +1,356 @@
+//! Pluggable NPU serving backends.
+//!
+//! The serving engine historically *was* the PJRT engine: every window
+//! went through a dense-f32 AOT-compiled XLA executable, which requires
+//! the HLO artifacts directory. [`NpuBackend`] splits that contract from
+//! its implementation so the batcher can dispatch to either:
+//!
+//! * [`PjrtBackend`] — the existing [`NpuEngine`] (needs artifacts);
+//! * [`NativeBackend`] — the in-process Rust twin: `snn::Backbone` (f32,
+//!   activity-adaptive sparse kernels) or `QuantBackbone::forward_fused`
+//!   (int8, Q47.16 fixed-point membranes, no per-layer current plane),
+//!   running on the shared [`WorkerPool`] with SIMD lanes. Weights come
+//!   from `{artifacts_dir}/{backbone}.wts` when present, else from the
+//!   deterministic synthetic fixture [`Backbone::synthetic`] with
+//!   [`SYNTHETIC_SEED`] — so native backends serve **artifact-free**.
+//!
+//! Selection: `npu.backend` config ∈ {`auto`, `pjrt`, `native-f32`,
+//! `native-int8`}, `--npu-backend` on `run`/`fleet`, or the
+//! `ACELERADOR_NPU_BACKEND` env var (consulted when the config says
+//! `auto`, mirroring `runtime.simd` / `ACELERADOR_SIMD`).
+//!
+//! Numeric domains differ BETWEEN backends (XLA f32 vs twin f32 vs
+//! int8), so digests are only comparable within one backend; within a
+//! backend every output is deterministic and invariant across workers ×
+//! simd (`tests/backend_parity.rs`).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::npu::{NpuEngine, NpuOutput};
+use super::pool::WorkerPool;
+use crate::config::NpuConfig;
+use crate::events::voxel::VoxelGrid;
+use crate::snn::backbone::SYNTHETIC_SEED;
+use crate::snn::quant::QuantBackbone;
+use crate::snn::{Backbone, BackboneKind};
+
+/// Which serving backend executes NPU inferences.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT-compiled XLA executables on PJRT-CPU (needs HLO artifacts).
+    Pjrt,
+    /// In-process Rust twin, f32 sparse kernels.
+    NativeF32,
+    /// In-process Rust twin, fused int8 conv→LIF (fixed-point membranes).
+    NativeInt8,
+}
+
+impl BackendKind {
+    pub fn from_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "pjrt" => BackendKind::Pjrt,
+            "native-f32" => BackendKind::NativeF32,
+            "native-int8" => BackendKind::NativeInt8,
+            _ => bail!(
+                "unknown npu backend {name:?} (expected pjrt, native-f32 or native-int8)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::NativeF32 => "native-f32",
+            BackendKind::NativeInt8 => "native-int8",
+        }
+    }
+
+    /// Encoding of the `npu.backend` telemetry gauge:
+    /// 0 = pjrt, 1 = native-f32, 2 = native-int8.
+    pub fn gauge_id(&self) -> u64 {
+        match self {
+            BackendKind::Pjrt => 0,
+            BackendKind::NativeF32 => 1,
+            BackendKind::NativeInt8 => 2,
+        }
+    }
+}
+
+/// Backend when the config says `auto`: the `ACELERADOR_NPU_BACKEND` env
+/// var if it names a known backend, else PJRT (the historical default).
+pub fn default_backend() -> BackendKind {
+    match std::env::var("ACELERADOR_NPU_BACKEND") {
+        Ok(v) => BackendKind::from_name(&v).unwrap_or(BackendKind::Pjrt),
+        Err(_) => BackendKind::Pjrt,
+    }
+}
+
+/// The serving contract the batcher dispatches through: voxel batch in,
+/// [`NpuOutput`] (heads, rates, dispatch plan, execute timing) out.
+///
+/// Implementations live on the dedicated engine thread and are built
+/// there (PJRT handles are not `Send`), so the trait deliberately has no
+/// `Send` bound.
+pub trait NpuBackend {
+    /// Backend name as selected (`pjrt` / `native-f32` / `native-int8`).
+    fn name(&self) -> &'static str;
+    /// Largest batch one [`NpuBackend::infer`] call accepts. The batcher
+    /// caps its drain target at `min(cfg.max_batch, this)`.
+    fn max_batch(&self) -> usize;
+    /// Run one batch (≤ [`NpuBackend::max_batch`] samples).
+    fn infer(&self, voxels: &[&VoxelGrid]) -> Result<NpuOutput>;
+    /// Configure the activity-adaptive dispatch threshold.
+    fn set_sparse_threshold(&mut self, threshold: f32);
+}
+
+/// Dispatch plan from measured activity: layer `i` is planned on the
+/// rate of its **input** plane — the voxel occupancy for layer 0, then
+/// layer `i-1`'s output rate. `true` = the event-driven path serves the
+/// layer, `false` = dense fallback. Mirrors
+/// `snn::layers::conv2d_adaptive`'s decision; shared by every backend.
+pub fn dispatch_plan(threshold: f32, input_rate: f32, rates: &[f32]) -> Vec<bool> {
+    let mut plan = Vec::with_capacity(rates.len());
+    let mut feeding = input_rate;
+    for &r in rates {
+        plan.push(feeding <= threshold);
+        feeding = r;
+    }
+    plan
+}
+
+/// Build the configured backend. `pool` is the runtime's shared worker
+/// pool — native backends band their conv kernels over it (and inherit
+/// its SIMD dispatch); the PJRT backend ignores it.
+pub fn create_backend(
+    cfg: &NpuConfig,
+    pool: Arc<WorkerPool>,
+) -> Result<Box<dyn NpuBackend>> {
+    Ok(match cfg.resolve_backend() {
+        BackendKind::Pjrt => Box::new(PjrtBackend::new(cfg)?),
+        BackendKind::NativeF32 => Box::new(NativeBackend::new(cfg, false, pool)?),
+        BackendKind::NativeInt8 => Box::new(NativeBackend::new(cfg, true, pool)?),
+    })
+}
+
+/// The existing PJRT engine behind the backend contract.
+pub struct PjrtBackend {
+    engine: NpuEngine,
+}
+
+impl PjrtBackend {
+    pub fn new(cfg: &NpuConfig) -> Result<Self> {
+        let mut engine = NpuEngine::new(&cfg.artifacts_dir, &cfg.backbone)?;
+        engine.set_sparse_threshold(cfg.sparse_threshold);
+        Ok(Self { engine })
+    }
+}
+
+impl NpuBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        BackendKind::Pjrt.name()
+    }
+
+    fn max_batch(&self) -> usize {
+        // NpuEngine::new validates a non-empty batch-size set
+        self.engine.batch_sizes().last().copied().unwrap_or(1)
+    }
+
+    fn infer(&self, voxels: &[&VoxelGrid]) -> Result<NpuOutput> {
+        self.engine.infer(voxels)
+    }
+
+    fn set_sparse_threshold(&mut self, threshold: f32) {
+        self.engine.set_sparse_threshold(threshold);
+    }
+}
+
+enum NativeModel {
+    F32(Backbone),
+    Int8(QuantBackbone),
+}
+
+/// In-process twin serving backend — no PJRT, no HLO artifacts.
+///
+/// Per batch it runs each sample through the backbone (batch-1 forwards;
+/// the twin's parallelism is worker bands over output channels, shared
+/// with the rest of the runtime through `pool`), producing the same
+/// [`NpuOutput`] contract as the engine: per-sample heads, per-layer
+/// batch-mean rates, the dispatch plan, and measured execute time. The
+/// int8 mode is value-exact with `QuantBackbone::forward_int` (fused ==
+/// unfused is pinned by `tests/simd_parity.rs`).
+pub struct NativeBackend {
+    model: NativeModel,
+    sparse_threshold: f32,
+    kind: BackendKind,
+    /// Where the weights came from (diagnostics): "trained" when a
+    /// `.wts` file was loaded, "synthetic" for the artifact-free fixture.
+    weights: &'static str,
+}
+
+impl NativeBackend {
+    pub fn new(cfg: &NpuConfig, int8: bool, pool: Arc<WorkerPool>) -> Result<Self> {
+        let kind = BackboneKind::from_name(&cfg.backbone)?;
+        let wts = format!("{}/{}.wts", cfg.artifacts_dir, kind.name());
+        let (bb, weights) = if std::path::Path::new(&wts).exists() {
+            (Backbone::load(kind, &cfg.artifacts_dir)?, "trained")
+        } else {
+            (Backbone::synthetic(kind, SYNTHETIC_SEED), "synthetic")
+        };
+        let bb = bb
+            .with_pool(pool.clone())
+            .with_sparse_threshold(cfg.sparse_threshold);
+        let model = if int8 {
+            NativeModel::Int8(QuantBackbone::from_backbone(&bb).with_pool(pool))
+        } else {
+            NativeModel::F32(bb)
+        };
+        Ok(Self {
+            model,
+            sparse_threshold: cfg.sparse_threshold,
+            kind: if int8 { BackendKind::NativeInt8 } else { BackendKind::NativeF32 },
+            weights,
+        })
+    }
+
+    /// `"trained"` or `"synthetic"` — which weights serve this backend.
+    pub fn weights_origin(&self) -> &'static str {
+        self.weights
+    }
+}
+
+impl NpuBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    fn max_batch(&self) -> usize {
+        // no compiled-shape ceiling; cfg.max_batch alone governs
+        usize::MAX
+    }
+
+    fn infer(&self, voxels: &[&VoxelGrid]) -> Result<NpuOutput> {
+        if voxels.is_empty() {
+            bail!("empty batch");
+        }
+        let t0 = Instant::now();
+        let mut heads = Vec::with_capacity(voxels.len());
+        let mut rate_sums: Vec<f64> = Vec::new();
+        let mut active = 0usize;
+        let mut sample_len = 0usize;
+        for v in voxels {
+            let (head, stats) = match &self.model {
+                NativeModel::F32(bb) => {
+                    bb.forward_with_threshold(v, self.sparse_threshold)
+                }
+                NativeModel::Int8(qb) => qb.forward_fused(v),
+            };
+            heads.push(head.data);
+            let rates = stats.rates();
+            if rate_sums.is_empty() {
+                rate_sums = vec![0.0; rates.len()];
+            }
+            for (s, r) in rate_sums.iter_mut().zip(&rates) {
+                *s += *r;
+            }
+            active += v.occupancy();
+            sample_len = v.len();
+        }
+        let execute_us = t0.elapsed().as_secs_f64() * 1e6;
+        let n = voxels.len();
+        let rates: Vec<f32> =
+            rate_sums.iter().map(|s| (s / n as f64) as f32).collect();
+        // no zero-padding on the native path: rates need no pad correction
+        let input_rate = active as f32 / (n * sample_len) as f32;
+        let sparse_layers = dispatch_plan(self.sparse_threshold, input_rate, &rates);
+        Ok(NpuOutput { heads, rates, sparse_layers, execute_us })
+    }
+
+    fn set_sparse_threshold(&mut self, threshold: f32) {
+        self.sparse_threshold = threshold;
+        if let NativeModel::F32(bb) = &mut self.model {
+            bb.sparse_threshold = threshold;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::scene::DvsWindowSim;
+    use crate::events::voxel::voxelize;
+
+    fn native_cfg(backend: &str) -> NpuConfig {
+        NpuConfig {
+            backbone: "spiking_mobilenet".into(),
+            artifacts_dir: "/nonexistent-artifacts".into(),
+            backend: backend.into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn kind_parses_and_round_trips() {
+        for k in [BackendKind::Pjrt, BackendKind::NativeF32, BackendKind::NativeInt8] {
+            assert_eq!(BackendKind::from_name(k.name()).unwrap(), k);
+        }
+        assert!(BackendKind::from_name("tpu").is_err());
+        assert_eq!(BackendKind::Pjrt.gauge_id(), 0);
+        assert_eq!(BackendKind::NativeInt8.gauge_id(), 2);
+    }
+
+    #[test]
+    fn native_backend_serves_without_artifacts() {
+        for (name, want_kind) in
+            [("native-f32", BackendKind::NativeF32), ("native-int8", BackendKind::NativeInt8)]
+        {
+            let cfg = native_cfg(name);
+            let backend =
+                create_backend(&cfg, WorkerPool::inline()).expect("artifact-free build");
+            assert_eq!(backend.name(), want_kind.name());
+            let vox = voxelize(&DvsWindowSim::new(11).run().0);
+            let out = backend.infer(&[&vox]).expect("native infer");
+            assert_eq!(out.heads.len(), 1, "{name}");
+            assert_eq!(out.heads[0].len(), 14 * 8 * 8, "{name}");
+            assert_eq!(out.rates.len(), out.sparse_layers.len(), "{name}");
+            assert!(out.execute_us > 0.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn native_batch_means_per_layer_rates() {
+        let cfg = native_cfg("native-int8");
+        let backend = create_backend(&cfg, WorkerPool::inline()).unwrap();
+        let v1 = voxelize(&DvsWindowSim::new(1).run().0);
+        let v2 = voxelize(&DvsWindowSim::new(2).run().0);
+        let solo1 = backend.infer(&[&v1]).unwrap();
+        let solo2 = backend.infer(&[&v2]).unwrap();
+        let both = backend.infer(&[&v1, &v2]).unwrap();
+        // per-sample heads are batch-composition independent
+        assert_eq!(both.heads[0], solo1.heads[0]);
+        assert_eq!(both.heads[1], solo2.heads[0]);
+        for (i, r) in both.rates.iter().enumerate() {
+            let want = (solo1.rates[i] as f64 + solo2.rates[i] as f64) / 2.0;
+            assert!(
+                (*r as f64 - want).abs() < 1e-6,
+                "layer {i}: batch rate {r} vs mean {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn dispatch_plan_walks_input_rates() {
+        // layer 0 planned on the input rate, layer i on rate[i-1]
+        let plan = dispatch_plan(0.25, 0.1, &[0.5, 0.2, 0.9]);
+        assert_eq!(plan, vec![true, false, true]);
+    }
+
+    #[test]
+    fn unknown_backbone_fails_fast() {
+        let mut cfg = native_cfg("native-f32");
+        cfg.backbone = "spiking_nonesuch".into();
+        assert!(create_backend(&cfg, WorkerPool::inline()).is_err());
+    }
+}

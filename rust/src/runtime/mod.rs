@@ -8,6 +8,9 @@
 //! * [`npu`]      — [`npu::NpuEngine`]: PJRT CPU client + one compiled
 //!   executable per (backbone, batch), voxel-in / head+rates-out, with
 //!   execute timing for E5;
+//! * [`backend`]  — [`backend::NpuBackend`]: the pluggable serving
+//!   contract the batcher dispatches through — the PJRT engine above, or
+//!   the artifact-free in-process native twin (f32 / fused int8);
 //! * [`pool`]     — [`pool::WorkerPool`]: the deterministic fixed-size
 //!   worker pool both compute planes (ISP row bands, SNN output-channel
 //!   bands) fan out onto, sized by `runtime.workers` / `--workers`.
@@ -16,10 +19,12 @@
 //! jax>=0.5 serialized protos (64-bit instruction ids) — see
 //! /opt/xla-example/README.md.
 
+pub mod backend;
 pub mod manifest;
 pub mod npu;
 pub mod pool;
 
+pub use backend::{create_backend, BackendKind, NativeBackend, NpuBackend, PjrtBackend};
 pub use manifest::Manifest;
 pub use npu::{NpuEngine, NpuOutput};
 pub use pool::{PoolStats, WorkerPool};

@@ -52,6 +52,14 @@ impl NpuEngine {
         let manifest = Manifest::load(artifacts_dir)?;
         manifest.check_spec()?;
         let entry = manifest.model(backbone)?.clone();
+        if entry.files.is_empty() {
+            // without this, the first infer() would panic inside
+            // pick_batch on an empty batch-size set
+            bail!(
+                "manifest entry {backbone:?} exports no batch sizes \
+                 (empty files map) — re-run the AOT export"
+            );
+        }
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let mut executables = HashMap::new();
         for (batch, file) in &entry.files {
@@ -98,13 +106,7 @@ impl NpuEngine {
     /// = the event-driven path serves the layer, `false` = dense
     /// fallback. Mirrors `snn::layers::conv2d_adaptive`'s decision.
     pub fn dispatch_plan(&self, input_rate: f32, rates: &[f32]) -> Vec<bool> {
-        let mut plan = Vec::with_capacity(rates.len());
-        let mut feeding = input_rate;
-        for &r in rates {
-            plan.push(feeding <= self.sparse_threshold);
-            feeding = r;
-        }
-        plan
+        super::backend::dispatch_plan(self.sparse_threshold, input_rate, rates)
     }
 
     pub fn backbone(&self) -> &str {
@@ -147,11 +149,23 @@ impl NpuEngine {
         let m = &self.manifest;
         let sample_len = m.t_bins * m.polarities * m.height * m.width;
 
-        // Pack (+ zero-pad) the batch.
+        // Pack (+ zero-pad) the batch by scattering the sparse ingestion
+        // events into the literal buffer — DVS windows are overwhelmingly
+        // zeros, so this writes occupancy() floats per sample instead of
+        // copying (and first materializing) T*P*H*W-long dense planes.
         let mut input = vec![0.0f32; batch * sample_len];
         for (i, v) in voxels.iter().enumerate() {
-            debug_assert_eq!(v.data.len(), sample_len);
-            input[i * sample_len..(i + 1) * sample_len].copy_from_slice(&v.data);
+            debug_assert_eq!(v.len(), sample_len);
+            let base = i * sample_len;
+            let plane = v.polarities * v.height * v.width;
+            for (t, sp) in v.planes.iter().enumerate() {
+                for &(p, y, x) in &sp.events {
+                    input[base
+                        + t * plane
+                        + ((p as usize) * v.height + y as usize) * v.width
+                        + x as usize] = 1.0;
+                }
+            }
         }
         let literal = xla::Literal::vec1(&input).reshape(&[
             batch as i64,

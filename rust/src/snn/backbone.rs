@@ -19,6 +19,12 @@ use super::wts;
 use crate::events::spec;
 use crate::events::voxel::VoxelGrid;
 use crate::runtime::pool::WorkerPool;
+use crate::util::SplitMix64;
+
+/// Seed of the deterministic synthetic weights the native serving backend
+/// falls back to when no trained `.wts` artifacts exist (artifact-free
+/// operation). Parity tests reconstruct the identical backbone from it.
+pub const SYNTHETIC_SEED: u64 = 0xACE1_5EED;
 
 /// The four evaluated backbones (paper §IV-C).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -247,6 +253,73 @@ impl Backbone {
         })
     }
 
+    /// Deterministic synthetic weights tracking the spec's channel flow —
+    /// the artifact-free fallback of the native serving backend and the
+    /// shared fixture of the parity suites. Identical `(kind, seed)`
+    /// always yields identical params, so a test can reconstruct exactly
+    /// the backbone a serving run used (see [`SYNTHETIC_SEED`]).
+    pub fn synthetic(kind: BackboneKind, seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut params: Vec<(Tensor, Vec<f32>)> = Vec::new();
+        let mut c = spec::POLARITIES;
+        let tensor = |rng: &mut SplitMix64, shape: &[usize], lo: f64, hi: f64| -> Tensor {
+            let n = shape.iter().product();
+            Tensor::from_vec(
+                shape,
+                (0..n).map(|_| rng.uniform_in(lo, hi) as f32).collect(),
+            )
+        };
+        let bias = |rng: &mut SplitMix64, out: usize| -> Vec<f32> {
+            (0..out).map(|_| rng.uniform_in(-0.1, 0.3) as f32).collect()
+        };
+        for layer in backbone_spec(kind) {
+            match layer {
+                LayerSpec::Conv { out, k } => {
+                    let w = tensor(&mut rng, &[out, c, k, k], -0.6, 0.6);
+                    let b = bias(&mut rng, out);
+                    params.push((w, b));
+                    c = out;
+                }
+                LayerSpec::Conv1x1 { out } | LayerSpec::Transition { out } => {
+                    let w = tensor(&mut rng, &[out, c, 1, 1], -0.6, 0.6);
+                    let b = bias(&mut rng, out);
+                    params.push((w, b));
+                    c = out;
+                }
+                LayerSpec::Pool => {}
+                LayerSpec::DenseBlock { growth, layers } => {
+                    for _ in 0..layers {
+                        let w = tensor(&mut rng, &[growth, c, 3, 3], -0.6, 0.6);
+                        let b = bias(&mut rng, growth);
+                        params.push((w, b));
+                        c += growth; // concat
+                    }
+                }
+                LayerSpec::DwSep { out } => {
+                    let dw = tensor(&mut rng, &[c, 1, 3, 3], -0.6, 0.6);
+                    let db = bias(&mut rng, c);
+                    params.push((dw, db));
+                    let pw = tensor(&mut rng, &[out, c, 1, 1], -0.6, 0.6);
+                    let pb = bias(&mut rng, out);
+                    params.push((pw, pb));
+                    c = out;
+                }
+            }
+        }
+        let head = tensor(&mut rng, &[14, c, 1, 1], -0.6, 0.6);
+        let hb = (0..14).map(|_| rng.uniform_in(-0.1, 0.1) as f32).collect();
+        params.push((head, hb));
+        debug_assert_eq!(params.len(), expected_param_count(kind));
+        Self {
+            kind,
+            params,
+            decay: spec::LIF_DECAY,
+            v_th: spec::LIF_THRESHOLD,
+            sparse_threshold: DEFAULT_SPARSE_THRESHOLD,
+            pool: WorkerPool::inline(),
+        }
+    }
+
     /// Set the worker pool (builder style) — e.g. the runtime's shared
     /// pool. Bit-identical outputs for any size.
     pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> Self {
@@ -338,19 +411,10 @@ where
     let t_bins = voxel.t_bins;
     let mut stats = ForwardStats::default();
 
-    // Per-timestep input planes [P, H, W] — the voxel grid is one-hot
-    // binary, so it packs losslessly.
-    let plane = voxel.polarities * voxel.height * voxel.width;
-    let mut xs: Vec<SpikePlane> = (0..t_bins)
-        .map(|t| {
-            SpikePlane::from_slice(
-                voxel.polarities,
-                voxel.height,
-                voxel.width,
-                &voxel.data[t * plane..(t + 1) * plane],
-            )
-        })
-        .collect();
+    // Per-timestep input planes [P, H, W]: the voxel grid is already
+    // stored as bit-packed spike planes, so layer 0's gather kernels
+    // consume the ingestion events directly — no densify/re-pack step.
+    let mut xs: Vec<SpikePlane> = voxel.planes.clone();
 
     let mut idx = 0usize;
 

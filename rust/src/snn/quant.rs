@@ -613,17 +613,10 @@ impl QuantBackbone {
     pub fn forward_int(&self, voxel: &VoxelGrid, fuse: bool) -> (Tensor, ForwardStats) {
         let t_bins = voxel.t_bins;
         let mut stats = ForwardStats::default();
-        let plane = voxel.polarities * voxel.height * voxel.width;
-        let mut xs: Vec<SpikePlane> = (0..t_bins)
-            .map(|t| {
-                SpikePlane::from_slice(
-                    voxel.polarities,
-                    voxel.height,
-                    voxel.width,
-                    &voxel.data[t * plane..(t + 1) * plane],
-                )
-            })
-            .collect();
+        // The voxel grid is already bit-packed per temporal bin: the int8
+        // event-scatter kernels accumulate straight over the ingestion
+        // event lists, no dense plane in between.
+        let mut xs: Vec<SpikePlane> = voxel.planes.clone();
         let mut idx = 0usize;
 
         let mut spiking_conv = |xs: &mut Vec<SpikePlane>,
@@ -966,84 +959,21 @@ mod tests {
         });
     }
 
-    fn random_tensor(rng: &mut SplitMix64, shape: &[usize], lo: f64, hi: f64) -> Tensor {
-        let n: usize = shape.iter().product();
-        Tensor::from_vec(
-            shape,
-            (0..n).map(|_| rng.uniform_in(lo, hi) as f32).collect(),
-        )
-    }
-
-    /// Synthetic params tracking the spec's channel flow (same scheme as
-    /// `tests/parallel_parity.rs`).
+    /// Synthetic params tracking the spec's channel flow — now the
+    /// promoted library fixture ([`Backbone::synthetic`]), so serving-path
+    /// parity suites reconstruct the identical quantized twin.
     fn synthetic_qbackbone(kind: BackboneKind, seed: u64) -> QuantBackbone {
-        let mut rng = SplitMix64::new(seed);
-        let mut params = Vec::new();
-        let mut c = 2; // polarities
-        let bias = |rng: &mut SplitMix64, n: usize| -> Vec<f32> {
-            (0..n).map(|_| rng.uniform_in(-0.1, 0.3) as f32).collect()
-        };
-        for layer in backbone_spec(kind) {
-            match layer {
-                LayerSpec::Conv { out, k } => {
-                    let w = random_tensor(&mut rng, &[out, c, k, k], -0.6, 0.6);
-                    let b = bias(&mut rng, out);
-                    params.push((w, b));
-                    c = out;
-                }
-                LayerSpec::Conv1x1 { out } | LayerSpec::Transition { out } => {
-                    let w = random_tensor(&mut rng, &[out, c, 1, 1], -0.6, 0.6);
-                    let b = bias(&mut rng, out);
-                    params.push((w, b));
-                    c = out;
-                }
-                LayerSpec::Pool => {}
-                LayerSpec::DenseBlock { growth, layers } => {
-                    for _ in 0..layers {
-                        let w = random_tensor(&mut rng, &[growth, c, 3, 3], -0.6, 0.6);
-                        let b = bias(&mut rng, growth);
-                        params.push((w, b));
-                        c += growth; // concat
-                    }
-                }
-                LayerSpec::DwSep { out } => {
-                    let dw = random_tensor(&mut rng, &[c, 1, 3, 3], -0.6, 0.6);
-                    let db = bias(&mut rng, c);
-                    params.push((dw, db));
-                    let pw = random_tensor(&mut rng, &[out, c, 1, 1], -0.6, 0.6);
-                    let pb = bias(&mut rng, out);
-                    params.push((pw, pb));
-                    c = out;
-                }
-            }
-        }
-        let head = random_tensor(&mut rng, &[14, c, 1, 1], -0.6, 0.6);
-        let hb = (0..14).map(|_| rng.uniform_in(-0.1, 0.1) as f32).collect();
-        params.push((head, hb));
-        let bb = Backbone {
-            kind,
-            params,
-            decay: 0.75,
-            v_th: 1.0,
-            sparse_threshold: 0.25,
-            pool: WorkerPool::inline(),
-        };
-        QuantBackbone::from_backbone(&bb)
+        QuantBackbone::from_backbone(&Backbone::synthetic(kind, seed))
     }
 
     fn synthetic_voxel(seed: u64, density: f64) -> VoxelGrid {
         let mut rng = SplitMix64::new(seed);
         let (t_bins, pol, size) = (3usize, 2usize, 16usize);
         let n = t_bins * pol * size * size;
-        VoxelGrid {
-            t_bins,
-            polarities: pol,
-            height: size,
-            width: size,
-            data: (0..n)
-                .map(|_| if rng.uniform_in(0.0, 1.0) < density { 1.0 } else { 0.0 })
-                .collect(),
-        }
+        let data: Vec<f32> = (0..n)
+            .map(|_| if rng.uniform_in(0.0, 1.0) < density { 1.0 } else { 0.0 })
+            .collect();
+        VoxelGrid::from_dense(t_bins, pol, size, size, &data)
     }
 
     #[test]

@@ -132,6 +132,39 @@ impl SpikePlane {
         self.events.push((c as u32, y as u32, x as u32));
     }
 
+    /// Mark `(c, y, x)` in the bitmap WITHOUT appending an event; returns
+    /// whether the bit was newly set. Ingestion paths fed arrival-order
+    /// (possibly duplicated) sites use this, then call
+    /// [`SpikePlane::rebuild_events`] once to restore the invariant with
+    /// the canonical raster event order.
+    #[inline]
+    pub fn set_bit(&mut self, c: usize, y: usize, x: usize) -> bool {
+        let wi = self.word_index(c, y, x);
+        let mask = 1u64 << (x % 64);
+        let fresh = self.words[wi] & mask == 0;
+        self.words[wi] |= mask;
+        fresh
+    }
+
+    /// Rebuild the event list in raster order by scanning the occupancy
+    /// words — the same `(c, y, x)` order [`SpikePlane::from_slice`]
+    /// produces, so planes built bit-first compare (and fold) identically.
+    pub fn rebuild_events(&mut self) {
+        self.events.clear();
+        for c in 0..self.channels {
+            for y in 0..self.height {
+                for wi in 0..self.words_per_row {
+                    let mut w = self.word(c, y, wi);
+                    while w != 0 {
+                        let x = wi * 64 + w.trailing_zeros() as usize;
+                        self.events.push((c as u32, y as u32, x as u32));
+                        w &= w - 1;
+                    }
+                }
+            }
+        }
+    }
+
     #[inline]
     pub fn get(&self, c: usize, y: usize, x: usize) -> bool {
         self.words[self.word_index(c, y, x)] >> (x % 64) & 1 == 1
@@ -381,6 +414,31 @@ mod tests {
         assert!(p.get(1, 4, 32));
         assert_eq!(p.count(), 1);
         assert_eq!(p.to_dense().nnz(), 1);
+    }
+
+    #[test]
+    fn bit_first_build_equals_from_slice_exactly() {
+        // arrival-order duplicated insertion + rebuild must reproduce the
+        // canonical raster-built plane bit-for-bit AND event-for-event
+        forall("set_bit/rebuild_events == from_slice", 40, |g| {
+            let c = g.usize_in(1, 4);
+            let h = g.usize_in(1, 10);
+            let w = g.usize_in(1, 70);
+            let want = random_plane(g.u64(), c, h, w, 0.3);
+            let mut sites: Vec<SpikeSite> = want.events.clone();
+            sites.reverse(); // arrival order != raster order
+            sites.extend(want.events.iter().copied()); // plus duplicates
+            let mut built = SpikePlane::new(c, h, w);
+            let mut fresh = 0usize;
+            for (sc, sy, sx) in sites {
+                if built.set_bit(sc as usize, sy as usize, sx as usize) {
+                    fresh += 1;
+                }
+            }
+            built.rebuild_events();
+            assert_eq!(fresh, want.count(), "duplicates must not count");
+            assert_eq!(built, want, "words + raster event order must match");
+        });
     }
 
     #[test]

@@ -106,15 +106,10 @@ fn synthetic_backbone(kind: BackboneKind, seed: u64, pool: Arc<WorkerPool>) -> B
 fn synthetic_voxel(seed: u64, density: f64) -> VoxelGrid {
     let mut rng = SplitMix64::new(seed);
     let n = T_BINS * POLARITIES * SIZE * SIZE;
-    VoxelGrid {
-        t_bins: T_BINS,
-        polarities: POLARITIES,
-        height: SIZE,
-        width: SIZE,
-        data: (0..n)
-            .map(|_| if rng.uniform_in(0.0, 1.0) < density { 1.0 } else { 0.0 })
-            .collect(),
-    }
+    let data: Vec<f32> = (0..n)
+        .map(|_| if rng.uniform_in(0.0, 1.0) < density { 1.0 } else { 0.0 })
+        .collect();
+    VoxelGrid::from_dense(T_BINS, POLARITIES, SIZE, SIZE, &data)
 }
 
 fn capture(seed: u64, width: usize, height: usize) -> ImageU8 {
