@@ -1,0 +1,180 @@
+//! E9 — fault injection: the cost of the fault plan and the behavior of
+//! the recovery ladder.
+//!
+//! Three questions, one table each:
+//!
+//! 1. **Overhead** — what does an armed sensor-plane fault plan cost the
+//!    serving fleet (windows/sec, clean vs faulted), and how much data
+//!    does it actually perturb (fault counters)?
+//! 2. **Determinism** — is the *faulted* digest as scheduling-
+//!    independent as the clean one (workers sweep, same seed)?
+//! 3. **Recovery** — with the service plane sabotaged (injected hangs),
+//!    does the loop complete via deadline → retry → failover, and what
+//!    does the drill cost end to end?
+//!
+//! Emits `BENCH_e9.json` at the repo root so the fault-overhead
+//! trajectory is tracked across PRs.
+//!
+//! Run: `cargo bench --bench e9_faults`
+
+use acelerador::config::SystemConfig;
+use acelerador::coordinator::CognitiveLoop;
+use acelerador::fleet::run_fleet;
+use acelerador::jsonlite::Json;
+use acelerador::testkit::bench::{write_bench_artifact, Table};
+
+/// Artifact-free base: the whole bench must run in any checkout, so it
+/// rides the native-int8 twin rather than gating on PJRT artifacts.
+fn base_cfg() -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.npu.backbone = "spiking_mobilenet".into();
+    cfg.npu.backend = "native-int8".into();
+    cfg.npu.artifacts_dir = "/nonexistent-artifacts".into();
+    cfg.fleet.streams = 4;
+    cfg.fleet.windows_per_stream = 12;
+    cfg.fleet.scenario_mix = "mixed".into();
+    cfg.fleet.base_seed = 42;
+    cfg
+}
+
+fn arm(cfg: &mut SystemConfig, dvs: bool, rgb: bool) {
+    cfg.faults.enabled = true;
+    cfg.faults.seed = 7;
+    cfg.faults.dvs = dvs;
+    cfg.faults.rgb = rgb;
+    cfg.faults.npu = false;
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== E9: fault-injection overhead & recovery drill ===\n");
+    let mut artifact_rows: Vec<Json> = Vec::new();
+
+    // 1. fault-plan overhead: the same fleet, progressively armed
+    println!("--- fault-plan overhead (4 streams, lockstep, native-int8) ---");
+    let mut t = Table::new(&[
+        "plan", "win/s", "dvs drop", "dvs inj", "rgb flt", "late", "digest",
+    ]);
+    for (label, dvs, rgb) in [
+        ("off", false, false),
+        ("dvs", true, false),
+        ("rgb", false, true),
+        ("dvs+rgb", true, true),
+    ] {
+        let mut cfg = base_cfg();
+        if label != "off" {
+            arm(&mut cfg, dvs, rgb);
+        }
+        let r = run_fleet(&cfg)?;
+        artifact_rows.push(Json::obj(vec![
+            ("mode", Json::str("overhead")),
+            ("plan", Json::str(label)),
+            ("windows_per_sec", Json::num(r.windows_per_sec())),
+            (
+                "dvs_injected",
+                Json::num(r.counter_total("faults_dvs_injected") as f64),
+            ),
+            (
+                "rgb_faulted",
+                Json::num(r.counter_total("faults_rgb_faulted") as f64),
+            ),
+            ("digest", Json::str(&r.digest_hex())),
+        ]));
+        t.row(&[
+            label.to_string(),
+            format!("{:.1}", r.windows_per_sec()),
+            r.counter_total("faults_dvs_dropped").to_string(),
+            r.counter_total("faults_dvs_injected").to_string(),
+            r.counter_total("faults_rgb_faulted").to_string(),
+            r.counter_total("windower_late_dropped").to_string(),
+            r.digest_hex(),
+        ]);
+    }
+    t.print();
+    println!("(the \"off\" row is the clean baseline digest; armed rows differ by design)\n");
+
+    // 2. faulted-digest determinism across the worker sweep
+    println!("--- faulted-digest determinism (dvs+rgb, workers sweep) ---");
+    let mut tw = Table::new(&["workers", "win/s", "digest"]);
+    let mut anchor = String::new();
+    for workers in [1usize, 2, 4] {
+        let mut cfg = base_cfg();
+        arm(&mut cfg, true, true);
+        cfg.runtime.workers = workers;
+        let r = run_fleet(&cfg)?;
+        if anchor.is_empty() {
+            anchor = r.digest_hex();
+        }
+        artifact_rows.push(Json::obj(vec![
+            ("mode", Json::str("determinism")),
+            ("workers", Json::num(workers as f64)),
+            ("windows_per_sec", Json::num(r.windows_per_sec())),
+            ("digest", Json::str(&r.digest_hex())),
+            ("matches_anchor", Json::Bool(r.digest_hex() == anchor)),
+        ]));
+        tw.row(&[
+            workers.to_string(),
+            format!("{:.1}", r.windows_per_sec()),
+            r.digest_hex(),
+        ]);
+    }
+    tw.print();
+    println!("(identical digests = the fault plan draws from forked per-window streams)\n");
+
+    // 3. recovery drill: injected service hang → deadline → retry →
+    // failover to the local backend; wall clock is the price of the hop
+    println!("--- recovery drill (single loop, injected NPU hang) ---");
+    let mut cfg = base_cfg();
+    cfg.npu.reply_deadline_ms = 200;
+    cfg.faults.enabled = true;
+    cfg.faults.seed = 5;
+    cfg.faults.dvs = false;
+    cfg.faults.rgb = false;
+    cfg.faults.npu = true;
+    cfg.faults.npu_spike_prob = 0.0;
+    cfg.faults.npu_error_prob = 0.0;
+    cfg.faults.npu_hang_after = 3;
+    cfg.faults.npu_hang_ms = 500;
+    cfg.faults.retry_max = 1;
+    cfg.faults.retry_backoff_ms = 1;
+    cfg.faults.failover = true;
+    let t0 = std::time::Instant::now();
+    let mut l = CognitiveLoop::new(&cfg, 42)?;
+    let report = l.run_script(&[1.0; 8])?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut td = Table::new(&["windows", "wall s", "timeouts", "retries", "failovers", "rung"]);
+    td.row(&[
+        report.outcomes.len().to_string(),
+        format!("{wall_s:.3}"),
+        l.metrics.recovery_timeouts.get().to_string(),
+        l.metrics.recovery_retries.get().to_string(),
+        l.metrics.recovery_failovers.get().to_string(),
+        l.degrade_level().to_string(),
+    ]);
+    td.print();
+    println!(
+        "(the run completes on the local backend after the hang — failed_over = {})",
+        l.failed_over()
+    );
+    artifact_rows.push(Json::obj(vec![
+        ("mode", Json::str("recovery-drill")),
+        ("windows", Json::num(report.outcomes.len() as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("timeouts", Json::num(l.metrics.recovery_timeouts.get() as f64)),
+        ("retries", Json::num(l.metrics.recovery_retries.get() as f64)),
+        ("failovers", Json::num(l.metrics.recovery_failovers.get() as f64)),
+    ]));
+
+    println!(
+        "\npaper claim shape: a neuromorphic serving plane must degrade gracefully —\n\
+         sensor faults perturb data deterministically (reproducible triage), and a\n\
+         dead NPU engine costs a bounded recovery window, never the whole fleet."
+    );
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::str("e9_faults")),
+        ("rows", Json::arr(artifact_rows)),
+    ]);
+    let path = write_bench_artifact("e9", &artifact)?;
+    println!("\nwrote {path}");
+    Ok(())
+}

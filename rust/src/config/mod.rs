@@ -62,6 +62,11 @@ pub struct NpuConfig {
     /// `native-f32` / `native-int8` (in-process twin, artifact-free), or
     /// `auto` (defer to `ACELERADOR_NPU_BACKEND`, default `pjrt`).
     pub backend: String,
+    /// Reply deadline for one in-flight window (ms): a carrier waiting on
+    /// the batcher longer than this gets a descriptive timeout error
+    /// instead of blocking forever on a hung engine thread. Generous by
+    /// default — tightened by fault-injection runs to drive failover.
+    pub reply_deadline_ms: u64,
 }
 
 impl Default for NpuConfig {
@@ -75,6 +80,7 @@ impl Default for NpuConfig {
             nms_iou: 0.45,
             sparse_threshold: crate::snn::DEFAULT_SPARSE_THRESHOLD,
             backend: "auto".into(),
+            reply_deadline_ms: 30_000,
         }
     }
 }
@@ -281,6 +287,130 @@ impl Default for TraceConfig {
     }
 }
 
+/// Deterministic fault-injection + recovery configuration (JSON section
+/// `"faults"`). Disabled by default: a disabled plan draws NOTHING from
+/// any RNG, so faults-off runs stay bit-exact with fault-unaware builds.
+/// When enabled, every fault decision comes from a per-stream RNG forked
+/// from `seed` (the fleet-profile scheme), so faulted runs carry their
+/// own deterministic digest across workers × simd.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultsConfig {
+    /// Master switch. `--faults <spec>` and `ACELERADOR_FAULTS` set it.
+    pub enabled: bool,
+    /// Root seed for the fault plan; per-stream draws fork from it.
+    pub seed: u64,
+    /// Category switches: DVS sensor faults, RGB sensor faults, NPU
+    /// service faults. `--faults on` enables the deterministic sensor
+    /// categories; `npu` / `all` add the timing-dependent service ones.
+    pub dvs: bool,
+    pub rgb: bool,
+    pub npu: bool,
+    /// DVS: per-event drop probability (readout loss).
+    pub dvs_drop_prob: f64,
+    /// DVS: per-window probability of a dead-time interval during which
+    /// every event is lost (pixel-array reset).
+    pub dvs_dead_time_prob: f64,
+    /// DVS: dead-time interval length (µs).
+    pub dvs_dead_time_us: u64,
+    /// DVS: number of stuck hot pixels per stream (fixed per-stream
+    /// coordinates, firing every window).
+    pub dvs_hot_pixels: usize,
+    /// DVS: per-window probability of a correlated noise burst.
+    pub dvs_burst_prob: f64,
+    /// DVS: events injected by one noise burst.
+    pub dvs_burst_events: usize,
+    /// DVS: per-window probability (windows ≥ 1) of stale events from
+    /// the previous window arriving after its boundary — the windower
+    /// drops them as late (`windower.late_dropped`).
+    pub dvs_stale_prob: f64,
+    /// RGB: per-frame probability the capture is dropped and the
+    /// previous frame is delivered again (duplicated frame).
+    pub rgb_drop_prob: f64,
+    /// RGB: per-frame probability of an SEU flipping one bit across a
+    /// band of rows in the raw Bayer frame, upstream of the ISP.
+    pub rgb_seu_prob: f64,
+    /// RGB: rows corrupted by one SEU band.
+    pub rgb_seu_rows: usize,
+    /// NPU: per-call probability of an injected latency spike.
+    pub npu_spike_prob: f64,
+    /// NPU: injected spike length (µs).
+    pub npu_spike_us: u64,
+    /// NPU: per-call probability of an erroring reply.
+    pub npu_error_prob: f64,
+    /// NPU: infer-call index at which the backend starts hanging
+    /// (0 = never). Hangs are bounded sleeps of `npu_hang_ms` followed by
+    /// an error, so shutdown can always drain.
+    pub npu_hang_after: u64,
+    /// NPU: length of one injected hang (ms).
+    pub npu_hang_ms: u64,
+    /// Recovery: resubmission attempts after a reply deadline/error.
+    pub retry_max: u32,
+    /// Recovery: backoff before retry k is `retry_backoff_ms << k` (ms).
+    pub retry_backoff_ms: u64,
+    /// Recovery: consecutive step faults before a stream is quarantined
+    /// by the fleet circuit breaker.
+    pub breaker_threshold: u32,
+    /// Recovery: fail over to the artifact-free `native-int8` backend
+    /// once retries are exhausted (sticky for the rest of the run).
+    pub failover: bool,
+    /// Degradation ladder: consecutive recovery events before the loop
+    /// sheds one more ISP stage (CSC first, then NLM); the same count of
+    /// consecutive clean windows steps back up.
+    pub degrade_after: u32,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            seed: 1,
+            dvs: true,
+            rgb: true,
+            npu: false,
+            dvs_drop_prob: 0.02,
+            dvs_dead_time_prob: 0.10,
+            dvs_dead_time_us: 10_000,
+            dvs_hot_pixels: 2,
+            dvs_burst_prob: 0.15,
+            dvs_burst_events: 256,
+            dvs_stale_prob: 0.20,
+            rgb_drop_prob: 0.05,
+            rgb_seu_prob: 0.10,
+            rgb_seu_rows: 4,
+            npu_spike_prob: 0.05,
+            npu_spike_us: 20_000,
+            npu_error_prob: 0.05,
+            npu_hang_after: 0,
+            npu_hang_ms: 200,
+            retry_max: 2,
+            retry_backoff_ms: 5,
+            breaker_threshold: 3,
+            failover: true,
+            degrade_after: 2,
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// The effective fault plan: an explicitly enabled config wins;
+    /// otherwise `ACELERADOR_FAULTS` (a `--faults` spec such as `dvs@7`
+    /// or `all`) can switch faults on from the environment — mirroring
+    /// [`RuntimeConfig::resolve_simd`]. An unparseable env spec is
+    /// ignored (faults stay off) rather than aborting a clean run.
+    pub fn resolve(&self) -> Self {
+        if self.enabled {
+            return self.clone();
+        }
+        if let Ok(spec) = std::env::var("ACELERADOR_FAULTS") {
+            let mut out = self.clone();
+            if !spec.is_empty() && crate::faults::apply_spec(&mut out, &spec).is_ok() {
+                return out;
+            }
+        }
+        self.clone()
+    }
+}
+
 /// Hardware (FPGA) model configuration for `hw::` estimates.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HwConfig {
@@ -313,6 +443,7 @@ pub struct SystemConfig {
     pub fleet: FleetConfig,
     pub runtime: RuntimeConfig,
     pub trace: TraceConfig,
+    pub faults: FaultsConfig,
     pub hw: HwConfig,
 }
 
@@ -348,6 +479,7 @@ impl SystemConfig {
             read_f32(n, "nms_iou", &mut self.npu.nms_iou);
             read_f32(n, "sparse_threshold", &mut self.npu.sparse_threshold);
             read_string(n, "backend", &mut self.npu.backend);
+            read_u64(n, "reply_deadline_ms", &mut self.npu.reply_deadline_ms);
         }
         if let Some(i) = json.get("isp") {
             read_usize(i, "width", &mut self.isp.width);
@@ -395,6 +527,33 @@ impl SystemConfig {
             read_u64(t, "stall_stage_us", &mut self.trace.stall_stage_us);
             read_u64(t, "queue_age_us", &mut self.trace.queue_age_us);
             read_u64(t, "starve_gap_us", &mut self.trace.starve_gap_us);
+        }
+        if let Some(f) = json.get("faults") {
+            read_bool(f, "enabled", &mut self.faults.enabled);
+            read_u64_exact(f, "seed", &mut self.faults.seed);
+            read_bool(f, "dvs", &mut self.faults.dvs);
+            read_bool(f, "rgb", &mut self.faults.rgb);
+            read_bool(f, "npu", &mut self.faults.npu);
+            read_f64(f, "dvs_drop_prob", &mut self.faults.dvs_drop_prob);
+            read_f64(f, "dvs_dead_time_prob", &mut self.faults.dvs_dead_time_prob);
+            read_u64(f, "dvs_dead_time_us", &mut self.faults.dvs_dead_time_us);
+            read_usize(f, "dvs_hot_pixels", &mut self.faults.dvs_hot_pixels);
+            read_f64(f, "dvs_burst_prob", &mut self.faults.dvs_burst_prob);
+            read_usize(f, "dvs_burst_events", &mut self.faults.dvs_burst_events);
+            read_f64(f, "dvs_stale_prob", &mut self.faults.dvs_stale_prob);
+            read_f64(f, "rgb_drop_prob", &mut self.faults.rgb_drop_prob);
+            read_f64(f, "rgb_seu_prob", &mut self.faults.rgb_seu_prob);
+            read_usize(f, "rgb_seu_rows", &mut self.faults.rgb_seu_rows);
+            read_f64(f, "npu_spike_prob", &mut self.faults.npu_spike_prob);
+            read_u64(f, "npu_spike_us", &mut self.faults.npu_spike_us);
+            read_f64(f, "npu_error_prob", &mut self.faults.npu_error_prob);
+            read_u64(f, "npu_hang_after", &mut self.faults.npu_hang_after);
+            read_u64(f, "npu_hang_ms", &mut self.faults.npu_hang_ms);
+            read_u32(f, "retry_max", &mut self.faults.retry_max);
+            read_u64(f, "retry_backoff_ms", &mut self.faults.retry_backoff_ms);
+            read_u32(f, "breaker_threshold", &mut self.faults.breaker_threshold);
+            read_bool(f, "failover", &mut self.faults.failover);
+            read_u32(f, "degrade_after", &mut self.faults.degrade_after);
         }
         if let Some(h) = json.get("hw") {
             read_f64(h, "clock_mhz", &mut self.hw.clock_mhz);
@@ -482,6 +641,36 @@ impl SystemConfig {
         {
             bail!("trace: watchdog thresholds must be > 0");
         }
+        if self.npu.reply_deadline_ms == 0 {
+            bail!("npu: reply_deadline_ms must be > 0");
+        }
+        for (name, p) in [
+            ("dvs_drop_prob", self.faults.dvs_drop_prob),
+            ("dvs_dead_time_prob", self.faults.dvs_dead_time_prob),
+            ("dvs_burst_prob", self.faults.dvs_burst_prob),
+            ("dvs_stale_prob", self.faults.dvs_stale_prob),
+            ("rgb_drop_prob", self.faults.rgb_drop_prob),
+            ("rgb_seu_prob", self.faults.rgb_seu_prob),
+            ("npu_spike_prob", self.faults.npu_spike_prob),
+            ("npu_error_prob", self.faults.npu_error_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("faults: {name} must be in [0,1] (got {p})");
+            }
+        }
+        if self.faults.breaker_threshold == 0 {
+            bail!("faults: breaker_threshold must be > 0");
+        }
+        if self.faults.degrade_after == 0 {
+            bail!("faults: degrade_after must be > 0");
+        }
+        let worst_backoff = self
+            .faults
+            .retry_backoff_ms
+            .checked_shl(self.faults.retry_max.min(63));
+        if worst_backoff.map_or(true, |w| w > 3_600_000) {
+            bail!("faults: retry_backoff_ms << retry_max exceeds an hour");
+        }
         if self.hw.clock_mhz <= 0.0 {
             bail!("hw: clock_mhz must be > 0");
         }
@@ -514,6 +703,10 @@ impl SystemConfig {
                     ("nms_iou", Json::num(self.npu.nms_iou as f64)),
                     ("sparse_threshold", Json::num(self.npu.sparse_threshold as f64)),
                     ("backend", Json::str(&self.npu.backend)),
+                    (
+                        "reply_deadline_ms",
+                        Json::num(self.npu.reply_deadline_ms as f64),
+                    ),
                 ]),
             ),
             (
@@ -580,6 +773,58 @@ impl SystemConfig {
                 ]),
             ),
             (
+                "faults",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.faults.enabled)),
+                    // decimal string, same reason as fleet.base_seed
+                    ("seed", Json::str(&self.faults.seed.to_string())),
+                    ("dvs", Json::Bool(self.faults.dvs)),
+                    ("rgb", Json::Bool(self.faults.rgb)),
+                    ("npu", Json::Bool(self.faults.npu)),
+                    ("dvs_drop_prob", Json::num(self.faults.dvs_drop_prob)),
+                    (
+                        "dvs_dead_time_prob",
+                        Json::num(self.faults.dvs_dead_time_prob),
+                    ),
+                    (
+                        "dvs_dead_time_us",
+                        Json::num(self.faults.dvs_dead_time_us as f64),
+                    ),
+                    (
+                        "dvs_hot_pixels",
+                        Json::num(self.faults.dvs_hot_pixels as f64),
+                    ),
+                    ("dvs_burst_prob", Json::num(self.faults.dvs_burst_prob)),
+                    (
+                        "dvs_burst_events",
+                        Json::num(self.faults.dvs_burst_events as f64),
+                    ),
+                    ("dvs_stale_prob", Json::num(self.faults.dvs_stale_prob)),
+                    ("rgb_drop_prob", Json::num(self.faults.rgb_drop_prob)),
+                    ("rgb_seu_prob", Json::num(self.faults.rgb_seu_prob)),
+                    ("rgb_seu_rows", Json::num(self.faults.rgb_seu_rows as f64)),
+                    ("npu_spike_prob", Json::num(self.faults.npu_spike_prob)),
+                    ("npu_spike_us", Json::num(self.faults.npu_spike_us as f64)),
+                    ("npu_error_prob", Json::num(self.faults.npu_error_prob)),
+                    (
+                        "npu_hang_after",
+                        Json::num(self.faults.npu_hang_after as f64),
+                    ),
+                    ("npu_hang_ms", Json::num(self.faults.npu_hang_ms as f64)),
+                    ("retry_max", Json::num(self.faults.retry_max as f64)),
+                    (
+                        "retry_backoff_ms",
+                        Json::num(self.faults.retry_backoff_ms as f64),
+                    ),
+                    (
+                        "breaker_threshold",
+                        Json::num(self.faults.breaker_threshold as f64),
+                    ),
+                    ("failover", Json::Bool(self.faults.failover)),
+                    ("degrade_after", Json::num(self.faults.degrade_after as f64)),
+                ]),
+            ),
+            (
                 "hw",
                 Json::obj(vec![
                     ("clock_mhz", Json::num(self.hw.clock_mhz)),
@@ -619,6 +864,12 @@ fn read_u64_exact(j: &Json, k: &str, dst: &mut u64) {
             }
         }
         None => {}
+    }
+}
+
+fn read_u32(j: &Json, k: &str, dst: &mut u32) {
+    if let Some(v) = j.get(k).and_then(Json::as_i64) {
+        *dst = v as u32;
     }
 }
 
@@ -857,6 +1108,34 @@ mod tests {
         let mut cfg = SystemConfig::default();
         cfg.trace.starve_gap_us = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn faults_overlay_and_validation() {
+        let cfg = SystemConfig::default();
+        assert!(!cfg.faults.enabled, "faults are off by default");
+        let mut cfg = SystemConfig::default();
+        let json = crate::jsonlite::parse(
+            r#"{"faults": {"enabled": true, "seed": "9", "npu": true,
+                           "dvs_drop_prob": 0.5, "retry_max": 1}}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&json).unwrap();
+        assert!(cfg.faults.enabled);
+        assert_eq!(cfg.faults.seed, 9);
+        assert!(cfg.faults.npu);
+        assert_eq!(cfg.faults.dvs_drop_prob, 0.5);
+        assert_eq!(cfg.faults.retry_max, 1);
+        assert_eq!(cfg.faults.breaker_threshold, 3, "untouched keeps default");
+        cfg.validate().unwrap();
+        cfg.faults.dvs_drop_prob = 1.5;
+        assert!(cfg.validate().is_err(), "probabilities stay in [0,1]");
+        let mut cfg = SystemConfig::default();
+        cfg.faults.breaker_threshold = 0;
+        assert!(cfg.validate().is_err(), "breaker threshold must be > 0");
+        let mut cfg = SystemConfig::default();
+        cfg.npu.reply_deadline_ms = 0;
+        assert!(cfg.validate().is_err(), "zero deadline rejected");
     }
 
     #[test]

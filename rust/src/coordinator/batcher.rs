@@ -22,8 +22,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::config::NpuConfig;
+use crate::config::{FaultsConfig, NpuConfig};
 use crate::events::voxel::VoxelGrid;
+use crate::faults::FaultInjectingBackend;
 use crate::runtime::{create_backend, NpuBackend, WorkerPool};
 use crate::trace::{
     Category, Lane, TraceData, Tracer, WindowTraceId, INSTANT_BATCH, SPAN_NPU_EXECUTE,
@@ -65,6 +66,27 @@ enum Msg {
 /// Why the engine thread stopped (shared with every client handle).
 type FaultCell = Arc<Mutex<Option<String>>>;
 
+/// Read the recorded fault cause, surviving a poisoned mutex: a panicking
+/// engine thread must still report *why* it stopped instead of turning
+/// every subsequent status query into a second panic.
+fn fault_get(cell: &FaultCell) -> Option<String> {
+    cell.lock().unwrap_or_else(|p| p.into_inner()).clone()
+}
+
+/// Record a fault cause, poison-tolerant like [`fault_get`]. The first
+/// recorded cause wins — a drain after an engine fault must not
+/// overwrite the root cause with the generic shutdown message.
+fn fault_set(cell: &FaultCell, cause: &str) {
+    let mut slot = cell.lock().unwrap_or_else(|p| p.into_inner());
+    if slot.is_none() {
+        *slot = Some(cause.to_string());
+    }
+}
+
+/// Consecutive failed executes a fault-resilient engine tolerates before
+/// it concludes the backend is truly gone and stops the service.
+const RESILIENT_MAX_CONSEC_FAILURES: u32 = 32;
+
 /// Cloneable submit handle to the NPU service.
 ///
 /// Clones share the engine thread's request queue; the batcher fuses
@@ -75,6 +97,9 @@ type FaultCell = Arc<Mutex<Option<String>>>;
 pub struct NpuClient {
     tx: Sender<Msg>,
     fault: FaultCell,
+    /// Reply deadline (`npu.reply_deadline_ms`): how long
+    /// [`NpuClient::recv_reply`] waits before declaring the engine hung.
+    deadline: Duration,
 }
 
 impl NpuClient {
@@ -112,11 +137,20 @@ impl NpuClient {
     /// Infer-collect stage, so the two can never report different errors
     /// for the same service failure.
     pub fn recv_reply(&self, rx: Receiver<Result<InferReply>>) -> Result<InferReply> {
-        match rx.recv() {
+        use std::sync::mpsc::RecvTimeoutError;
+        match rx.recv_timeout(self.deadline) {
             Ok(r) => r,
+            // a hung engine thread must never block a carrier forever:
+            // the deadline converts the hang into a descriptive, typed
+            // error the recovery path (retry → failover) can act on
+            Err(RecvTimeoutError::Timeout) => Err(anyhow!(
+                "npu reply deadline exceeded ({} ms): engine thread is \
+                 hung or overloaded",
+                self.deadline.as_millis()
+            )),
             // reply sender destroyed with the queue (request raced the
             // engine's shutdown drain) — surface the recorded cause
-            Err(_) => Err(anyhow!(
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow!(
                 "npu service dropped the request ({})",
                 self.fault_cause()
             )),
@@ -131,11 +165,7 @@ impl NpuClient {
 
     /// The recorded engine-stop cause (placeholder until one is recorded).
     pub fn fault_cause(&self) -> String {
-        self.fault
-            .lock()
-            .unwrap()
-            .clone()
-            .unwrap_or_else(|| "service stopped".to_string())
+        fault_get(&self.fault).unwrap_or_else(|| "service stopped".to_string())
     }
 }
 
@@ -169,19 +199,40 @@ impl NpuService {
         pool: Arc<WorkerPool>,
         tracer: Tracer,
     ) -> Result<Self> {
+        Self::start_with_pool_faulted(cfg, pool, tracer, None)
+    }
+
+    /// [`NpuService::start_with_pool`] with an optional service-fault
+    /// plan: when `Some`, the backend is wrapped in a
+    /// [`FaultInjectingBackend`] (latency spikes, erroring replies,
+    /// bounded hangs) and the engine runs *resilient* — a failed execute
+    /// fails its batch but keeps the service alive, because the whole
+    /// point of an injected fault is to exercise the callers' recovery
+    /// path, not to take the engine down on the first error.
+    pub fn start_with_pool_faulted(
+        cfg: &NpuConfig,
+        pool: Arc<WorkerPool>,
+        tracer: Tracer,
+        faults: Option<FaultsConfig>,
+    ) -> Result<Self> {
         let (tx, rx) = channel::<Msg>();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let fault: FaultCell = Arc::new(Mutex::new(None));
+        let deadline = Duration::from_millis(cfg.reply_deadline_ms.max(1));
         let cfg = cfg.clone();
         let thread_fault = fault.clone();
         let handle = std::thread::Builder::new()
             .name("npu-engine".into())
-            .spawn(move || engine_thread(cfg, pool, rx, ready_tx, thread_fault, tracer))
+            .spawn(move || {
+                engine_thread(cfg, pool, rx, ready_tx, thread_fault, tracer, faults)
+            })
             .context("spawning npu thread")?;
+        // bounded even here: a backend whose constructor wedges must
+        // surface as an init error, not a hung caller
         ready_rx
-            .recv()
-            .context("npu thread died during init")??;
-        Ok(Self { client: NpuClient { tx, fault }, handle: Some(handle) })
+            .recv_timeout(Duration::from_secs(120))
+            .context("npu thread died or stalled during init")??;
+        Ok(Self { client: NpuClient { tx, fault, deadline }, handle: Some(handle) })
     }
 
     /// A cloneable submit handle. Hand one to each producer (fleet
@@ -220,6 +271,7 @@ fn engine_thread(
     ready: Sender<Result<()>>,
     fault: FaultCell,
     tracer: Tracer,
+    faults: Option<FaultsConfig>,
 ) {
     // The backend is built ON this thread: PJRT handles are not Send, and
     // native backends are happy anywhere.
@@ -229,13 +281,19 @@ fn engine_thread(
             b
         }
         Err(e) => {
-            *fault.lock().unwrap() = Some(format!("engine init failed: {e:#}"));
+            fault_set(&fault, &format!("engine init failed: {e:#}"));
             let _ = ready.send(Err(e));
             return;
         }
     };
+    let resilient = faults.is_some();
+    let backend = match faults {
+        Some(f) => FaultInjectingBackend::wrap(backend, f),
+        None => backend,
+    };
     let max_batch = cfg.max_batch.min(backend.max_batch()).max(1);
     let timeout = Duration::from_micros(cfg.batch_timeout_us);
+    let mut consec_failures = 0u32;
 
     loop {
         // Block for the first request…
@@ -247,7 +305,7 @@ fn engine_thread(
             Err(_) => {
                 // every sender (service + all clients) gone: nothing left
                 // to serve or fail
-                *fault.lock().unwrap() = Some("service shut down".to_string());
+                fault_set(&fault, "service shut down");
                 return;
             }
         };
@@ -274,6 +332,7 @@ fn engine_thread(
         let t_exec0 = tracer.enabled().then(Instant::now);
         match backend.infer(&voxels) {
             Ok(out) => {
+                consec_failures = 0;
                 let n = batch.len();
                 if let Some(t_exec0) = t_exec0 {
                     let t_exec1 = Instant::now();
@@ -326,15 +385,25 @@ fn engine_thread(
                 }
             }
             Err(e) => {
-                // A failed backend execute means the engine is unusable:
-                // reply to the in-flight batch, record the cause, then fail
-                // every queued caller with it instead of dropping their
-                // senders.
+                // Fault-free engines treat a failed execute as fatal:
+                // reply to the in-flight batch, record the cause, then
+                // fail every queued caller with it instead of dropping
+                // their senders. A fault-resilient engine instead fails
+                // the batch and keeps serving (injected faults are meant
+                // to be recovered from), up to a hard cap of consecutive
+                // failures so a truly dead backend still stops.
                 let msg = format!("{e:#}");
                 for req in batch {
                     let _ = req.reply.send(Err(anyhow!("{msg}")));
                 }
-                return drain_on_stop(&rx, &fault, &format!("npu engine stopped: {msg}"));
+                consec_failures += 1;
+                if !resilient || consec_failures > RESILIENT_MAX_CONSEC_FAILURES {
+                    return drain_on_stop(
+                        &rx,
+                        &fault,
+                        &format!("npu engine stopped: {msg}"),
+                    );
+                }
             }
         }
         if stopping {
@@ -345,7 +414,7 @@ fn engine_thread(
 
 /// Record the stop cause and fail everything still queued with it.
 fn drain_on_stop(rx: &Receiver<Msg>, fault: &FaultCell, cause: &str) {
-    *fault.lock().unwrap() = Some(cause.to_string());
+    fault_set(fault, cause);
     for msg in rx.try_iter() {
         if let Msg::Infer(req) = msg {
             let _ = req
@@ -491,6 +560,94 @@ mod tests {
             assert_eq!(reply.head.len(), 14 * 8 * 8, "{backend}");
             assert_eq!(reply.rates.len(), reply.sparse_layers.len(), "{backend}");
             assert_eq!(reply.batch_size, 1, "{backend}");
+        }
+    }
+
+    fn service_faults(f: impl FnOnce(&mut FaultsConfig)) -> FaultsConfig {
+        let mut cfg = FaultsConfig {
+            enabled: true,
+            dvs: false,
+            rgb: false,
+            npu: true,
+            npu_spike_prob: 0.0,
+            npu_error_prob: 0.0,
+            npu_hang_after: 0,
+            ..Default::default()
+        };
+        f(&mut cfg);
+        cfg
+    }
+
+    #[test]
+    fn fault_helpers_tolerate_poison_and_keep_root_cause() {
+        let cell: FaultCell = Arc::new(Mutex::new(None));
+        fault_set(&cell, "root cause");
+        fault_set(&cell, "later cause");
+        assert_eq!(fault_get(&cell).as_deref(), Some("root cause"));
+        // poison the mutex from a panicking thread; the helpers must
+        // keep reporting instead of double-panicking
+        let c2 = cell.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = c2.lock().unwrap();
+            panic!("poison the cell");
+        })
+        .join();
+        assert_eq!(fault_get(&cell).as_deref(), Some("root cause"));
+        fault_set(&cell, "after poison");
+        assert_eq!(fault_get(&cell).as_deref(), Some("root cause"));
+    }
+
+    #[test]
+    fn reply_deadline_times_out_with_descriptive_error() {
+        let mut c = native_cfg("native-int8");
+        c.reply_deadline_ms = 40;
+        let faults = service_faults(|f| {
+            f.npu_hang_after = 1;
+            f.npu_hang_ms = 250;
+        });
+        let svc = NpuService::start_with_pool_faulted(
+            &c,
+            WorkerPool::inline(),
+            Tracer::disabled(),
+            Some(faults),
+        )
+        .unwrap();
+        let vox = voxelize(&DvsWindowSim::new(1).run().0);
+        let t0 = Instant::now();
+        let err = svc.infer_blocking(vox).unwrap_err();
+        let waited = t0.elapsed();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("reply deadline exceeded"),
+            "uninformative timeout error: {msg}"
+        );
+        assert!(
+            waited < Duration::from_millis(250),
+            "caller waited the full hang instead of the deadline: {waited:?}"
+        );
+    }
+
+    #[test]
+    fn resilient_engine_survives_injected_errors() {
+        let faults = service_faults(|f| f.npu_error_prob = 1.0);
+        let svc = NpuService::start_with_pool_faulted(
+            &native_cfg("native-int8"),
+            WorkerPool::inline(),
+            Tracer::disabled(),
+            Some(faults),
+        )
+        .unwrap();
+        let vox = voxelize(&DvsWindowSim::new(2).run().0);
+        for i in 0..3 {
+            let err = svc.infer_blocking(vox.clone()).unwrap_err();
+            let msg = format!("{err:#}");
+            // a non-resilient engine would answer request 2 with the
+            // "engine stopped" drain message; resilient keeps serving
+            // fresh injected errors
+            assert!(
+                msg.contains("injected npu error"),
+                "request {i}: engine died instead of staying resilient: {msg}"
+            );
         }
     }
 

@@ -15,11 +15,11 @@
 //! where window *t*'s Render overlaps the NPU executing window *t* and
 //! the look-ahead Sense of *t+1*.
 
-use std::sync::mpsc::Receiver;
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::batcher::{InferReply, NpuClient, NpuService};
 use super::bus::{ParamUpdate, ParameterBus, MAX_FEEDBACK_LATENCY};
@@ -32,11 +32,13 @@ use crate::detect::{decode_head, nms, Detection, YoloSpec};
 use crate::events::scene::ScenarioSim;
 use crate::events::spec;
 use crate::events::voxel::{voxelize_at, VoxelGrid};
+use crate::faults::StreamFaults;
 use crate::isp::gamma::GammaLut;
 use crate::isp::pipeline::IspPipeline;
 use crate::isp::sensor::SensorModel;
 use crate::metrics::SystemMetrics;
 use crate::runtime::pool::WorkerPool;
+use crate::runtime::{create_backend, NpuBackend};
 use crate::trace::{
     self, Category, Lane, TraceCtx, TraceData, Tracer, WindowTraceId, INSTANT_APPLY,
     INSTANT_PUBLISH, SPAN_WINDOW,
@@ -162,6 +164,22 @@ pub struct CognitiveLoop {
     /// measured-only and excluded from digests.
     tracer: Tracer,
     pub metrics: SystemMetrics,
+    /// Seed-forked fault plan for this stream (`None` = faults off: the
+    /// loop takes zero extra RNG draws and stays bit-exact with a
+    /// faultless build).
+    faults: Option<StreamFaults>,
+    /// Lazily-built artifact-free local backend the loop fails over to
+    /// after the shared NPU service exhausts its retry budget.
+    fallback: Option<Box<dyn NpuBackend>>,
+    /// Sticky failover latch: once tripped, `submit_infer` stops feeding
+    /// the shared batcher and `collect_infer` serves from `fallback`.
+    failed_over: bool,
+    /// Graceful-degradation rung (0 = healthy, 2 = max shed).
+    degrade_level: u8,
+    /// Consecutive recovery events since the last clean reply.
+    degrade_pressure: u32,
+    /// Consecutive clean replies while degraded (steps the rung down).
+    clean_streak: u32,
 }
 
 impl CognitiveLoop {
@@ -179,7 +197,12 @@ impl CognitiveLoop {
         let pool = WorkerPool::new(cfg.runtime.resolve_workers());
         pool.set_tracer(tracer.clone());
         pool.set_simd_enabled(cfg.runtime.resolve_simd());
-        let svc = NpuService::start_with_pool(&cfg.npu, pool.clone(), tracer.clone())?;
+        // service-plane faults wrap the backend inside the engine thread;
+        // sensor-plane faults are applied per-stream in the loop itself
+        let resolved = cfg.faults.resolve();
+        let service_faults = (resolved.enabled && resolved.npu).then(|| resolved.clone());
+        let svc =
+            NpuService::start_with_pool_faulted(&cfg.npu, pool.clone(), tracer.clone(), service_faults)?;
         let client = svc.client();
         Ok(Self::assemble(cfg, scenario_seed, client, Some(svc), pool, tracer))
     }
@@ -246,6 +269,12 @@ impl CognitiveLoop {
             pool,
             tracer,
             metrics: SystemMetrics::new(),
+            faults: StreamFaults::for_stream(&cfg.faults.resolve(), scenario_seed),
+            fallback: None,
+            failed_over: false,
+            degrade_level: 0,
+            degrade_pressure: 0,
+            clean_streak: 0,
         };
         loop_.metrics.pipeline.depth.set(latency);
         loop_
@@ -285,8 +314,13 @@ impl CognitiveLoop {
         let t0 = Instant::now();
         let wid = self.window_id;
         self.window_id += 1;
-        let (events, gt_boxes, clean_frame) = self.sim.window(illum);
+        let (mut events, gt_boxes, clean_frame) = self.sim.window(illum);
         self.metrics.windows_in.inc();
+        if let Some(f) = self.faults.as_mut() {
+            let stats = f.apply_dvs(wid, &mut events);
+            self.metrics.faults_dvs_dropped.add(stats.dropped);
+            self.metrics.faults_dvs_injected.add(stats.injected + stats.stale);
+        }
         let mut late = 0usize;
         for e in &events {
             if !self.windower.push(*e) {
@@ -295,7 +329,15 @@ impl CognitiveLoop {
         }
         self.windower.flush();
         let mut done = self.windower.pop_completed();
-        debug_assert_eq!(late, 0, "sim events must respect window boundaries");
+        // injected stale events regress behind the current window and are
+        // dropped at the windower boundary — surfaced, not silent
+        if late > 0 {
+            self.metrics.windower_late_dropped.add(late as u64);
+        }
+        debug_assert!(
+            self.faults.is_some() || late == 0,
+            "sim events must respect window boundaries"
+        );
         debug_assert_eq!(done.len(), 1, "one sim window closes one stream window");
         let win = done
             .pop()
@@ -339,8 +381,30 @@ impl CognitiveLoop {
         vox: VoxelGrid,
         tid: WindowTraceId,
     ) -> Receiver<Result<InferReply>> {
+        if self.failed_over {
+            // the shared service is written off for this stream: park a
+            // dead channel; collect_infer serves from the local fallback
+            let (_tx, rx) = channel();
+            return rx;
+        }
         let tag = if self.tracer.enabled() { Some(tid) } else { None };
         self.npu.submit_traced(vox, tag)
+    }
+
+    /// Clone the voxel grid for the recovery path — only when a fault
+    /// plan is active, so the clean path pays no per-window copy.
+    pub(crate) fn retain_voxel(&self, vox: &VoxelGrid) -> Option<VoxelGrid> {
+        self.faults.is_some().then(|| vox.clone())
+    }
+
+    /// The current graceful-degradation rung (0 = healthy).
+    pub fn degrade_level(&self) -> u8 {
+        self.degrade_level
+    }
+
+    /// Whether this loop has (stickily) failed over to its local backend.
+    pub fn failed_over(&self) -> bool {
+        self.failed_over
     }
 
     /// Infer (collect half): wait for the reply and fold its metrics in.
@@ -354,11 +418,12 @@ impl CognitiveLoop {
         &mut self,
         rx: Receiver<Result<InferReply>>,
         tid: WindowTraceId,
+        vox: Option<&VoxelGrid>,
     ) -> Result<InferReply> {
         // the carrier-side Infer span is the blocking collect wait (the
         // service span itself is traced at the batcher, per request)
         let t_wait = self.tracer.enabled().then(Instant::now);
-        let reply = self.npu.recv_reply(rx)?;
+        let reply = self.recv_with_recovery(rx, vox)?;
         if let Some(t0) = t_wait {
             self.tracer.span(
                 PipeStage::Infer.name(),
@@ -377,6 +442,124 @@ impl CognitiveLoop {
         self.metrics.npu_latency.record_us(reply.execute_us as u64);
         self.metrics.snn_layers.record(&reply.rates, &reply.sparse_layers);
         Ok(reply)
+    }
+
+    /// The reply path with the recovery ladder in front: deadline-bounded
+    /// wait → classify (timeout vs fault) → bounded retries with
+    /// exponential backoff → sticky failover to the artifact-free local
+    /// backend. Without a fault plan the first error propagates exactly
+    /// as before — the clean path is unchanged.
+    fn recv_with_recovery(
+        &mut self,
+        rx: Receiver<Result<InferReply>>,
+        vox: Option<&VoxelGrid>,
+    ) -> Result<InferReply> {
+        if self.failed_over {
+            let r = self.infer_fallback(vox);
+            if r.is_ok() {
+                self.note_clean_reply();
+            }
+            return r;
+        }
+        let first = self.npu.recv_reply(rx);
+        let Some(fcfg) = self.faults.as_ref().map(|f| f.cfg().clone()) else {
+            return first;
+        };
+        let mut err = match first {
+            Ok(r) => {
+                self.note_clean_reply();
+                return Ok(r);
+            }
+            Err(e) => e,
+        };
+        for attempt in 0..=fcfg.retry_max {
+            // classify: deadline expiries are timeouts; everything else is
+            // a service fault (injected or real)
+            if format!("{err:#}").contains("reply deadline exceeded") {
+                self.metrics.recovery_timeouts.inc();
+            } else {
+                self.metrics.faults_npu_errors.inc();
+            }
+            self.note_recovery_event();
+            let Some(v) = vox else { break };
+            if attempt >= fcfg.retry_max {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(
+                fcfg.retry_backoff_ms << attempt.min(63),
+            ));
+            self.metrics.recovery_retries.inc();
+            err = match self.npu.recv_reply(self.npu.submit_traced(v.clone(), None)) {
+                Ok(r) => {
+                    self.note_clean_reply();
+                    return Ok(r);
+                }
+                Err(e) => e,
+            };
+        }
+        if fcfg.failover && vox.is_some() {
+            self.metrics.recovery_failovers.inc();
+            self.failed_over = true;
+            let r = self.infer_fallback(vox);
+            if r.is_ok() {
+                self.note_clean_reply();
+            }
+            return r;
+        }
+        Err(err)
+    }
+
+    /// Serve one window from the lazily-built local `native-int8` backend
+    /// (artifact-free: synthetic-weight fallback means failover cannot
+    /// itself fail on a missing artifacts directory).
+    fn infer_fallback(&mut self, vox: Option<&VoxelGrid>) -> Result<InferReply> {
+        let vox = vox.ok_or_else(|| anyhow!("npu failover without a retained voxel grid"))?;
+        if self.fallback.is_none() {
+            let mut ncfg = self.cfg.npu.clone();
+            ncfg.backend = "native-int8".into();
+            self.fallback = Some(create_backend(&ncfg, self.pool.clone())?);
+        }
+        let backend = self.fallback.as_ref().expect("fallback built above");
+        let t0 = Instant::now();
+        let out = backend.infer(&[vox])?;
+        Ok(InferReply {
+            head: out.heads.into_iter().next().unwrap_or_default(),
+            rates: out.rates,
+            sparse_layers: out.sparse_layers,
+            execute_us: out.execute_us,
+            batch_size: 1,
+            service_us: t0.elapsed().as_secs_f64() * 1e6,
+        })
+    }
+
+    /// One recovery event (timeout, injected error, failover hop): resets
+    /// the clean streak and, under sustained pressure, steps the
+    /// degradation ladder up one rung.
+    fn note_recovery_event(&mut self) {
+        self.clean_streak = 0;
+        self.degrade_pressure += 1;
+        let after = self.faults.as_ref().map_or(u32::MAX, |f| f.cfg().degrade_after);
+        if self.degrade_pressure >= after {
+            self.degrade_pressure = 0;
+            if self.degrade_level < 2 {
+                self.degrade_level += 1;
+            }
+        }
+    }
+
+    /// One clean reply: releases pressure and, after a sustained clean
+    /// streak, steps the ladder back down.
+    fn note_clean_reply(&mut self) {
+        self.degrade_pressure = 0;
+        if self.degrade_level == 0 {
+            return;
+        }
+        self.clean_streak += 1;
+        let after = self.faults.as_ref().map_or(u32::MAX, |f| f.cfg().degrade_after);
+        if self.clean_streak >= after {
+            self.clean_streak = 0;
+            self.degrade_level -= 1;
+        }
     }
 
     /// Decide: decode + NMS the head, observe the scene, run the control
@@ -401,6 +584,7 @@ impl CognitiveLoop {
                 spec::WIDTH * spec::HEIGHT,
             ),
             load_factor: self.load_factor,
+            degrade_level: self.degrade_level,
         };
         let new_params = self.policy.step(self.isp.params(), &obs);
         if self.closed_loop {
@@ -492,7 +676,13 @@ impl CognitiveLoop {
             height: spec::HEIGHT,
             data: scene_at_illum(&clean_img.data, frame.illum),
         };
-        let cap = self.sensor.capture(&scene_frame, &mut self.sensor_rng);
+        let mut cap = self.sensor.capture(&scene_frame, &mut self.sensor_rng);
+        if let Some(f) = self.faults.as_mut() {
+            // RGB-plane faults land on the raw Bayer frame, upstream of
+            // the ISP — exactly where a real link/sensor would corrupt it
+            let n = f.apply_rgb(frame.wid, &mut cap.raw);
+            self.metrics.faults_rgb_faulted.add(n);
+        }
         // Zero-copy path: the output borrows the stage graph's buffer pool.
         let (psnr, report, isp_us) = {
             let (rgb_out, report) = self.isp.process_ref(&cap.raw);
@@ -578,8 +768,9 @@ impl CognitiveLoop {
             "serial step() while a pipelined window is in flight"
         );
         let (mut frame, vox) = self.sense(illum);
+        let keep = self.retain_voxel(&vox);
         let rx = self.submit_infer(vox, frame.trace);
-        let reply = self.collect_infer(rx, frame.trace)?;
+        let reply = self.collect_infer(rx, frame.trace, keep.as_ref())?;
         let dets = self.decide(&frame, &reply);
         let render = self.render(&mut frame);
         let out = self.outcome(&frame, dets, &reply, render);

@@ -146,6 +146,10 @@ pub(crate) struct SenseFrame {
 pub(crate) struct PendingWindow {
     pub frame: SenseFrame,
     pub rx: Receiver<Result<InferReply>>,
+    /// Retained copy of the submitted voxel grid so the recovery path can
+    /// resubmit (retry) or run the fallback backend after failover. `None`
+    /// when no fault plan is active — the common path pays no clone.
+    pub voxel: Option<crate::events::voxel::VoxelGrid>,
 }
 
 /// What Render hands to the outcome assembly.
@@ -229,8 +233,9 @@ impl CognitiveLoop {
             // overlaps this window's NPU execute
             None => {
                 let (frame, vox) = self.sense(illum);
+                let voxel = self.retain_voxel(&vox);
                 let rx = self.submit_infer(vox, frame.trace);
-                PendingWindow { frame, rx }
+                PendingWindow { frame, rx, voxel }
             }
         };
         debug_assert_eq!(
@@ -240,8 +245,9 @@ impl CognitiveLoop {
         );
         if let Some(ni) = next_illum {
             let (frame, vox) = self.sense(ni);
+            let voxel = self.retain_voxel(&vox);
             let rx = self.submit_infer(vox, frame.trace);
-            self.pipeline.inflight.push(PendingWindow { frame, rx })?;
+            self.pipeline.inflight.push(PendingWindow { frame, rx, voxel })?;
         }
         let inflight = 1 + self.pipeline.inflight.len();
         if inflight as u64 > self.metrics.pipeline.inflight_peak.get() {
@@ -250,7 +256,7 @@ impl CognitiveLoop {
 
         let mut frame = cur.frame;
         let render = self.render(&mut frame);
-        let reply = self.collect_infer(cur.rx, frame.trace)?;
+        let reply = self.collect_infer(cur.rx, frame.trace, cur.voxel.as_ref())?;
         let dets = self.decide(&frame, &reply);
         let out = self.outcome(&frame, dets, &reply, render);
         self.metrics

@@ -49,6 +49,11 @@ pub struct SceneObservation {
     /// from configuration, not live gate state, so closed-loop outcomes
     /// stay deterministic per (seed, config).
     pub load_factor: f64,
+    /// Graceful-degradation rung the recovery machinery selected (0 =
+    /// healthy). Sustained NPU fault pressure walks this up; each rung
+    /// sheds another ISP stage so the stream keeps real-time pace while
+    /// its inference path limps on retries or the fallback backend.
+    pub degrade_level: u8,
 }
 
 /// NLM bypass engages only in a *genuinely* bright scene. The output luma
@@ -195,9 +200,15 @@ impl ControlPolicy {
             stages.set(STAGE_NLM, false);
         }
         // CSC/sharpen: pure garnish — first overboard when the serving
-        // system is oversubscribed.
-        if obs.load_factor > LOAD_SHED_ABOVE {
+        // system is oversubscribed, or at the first degradation rung.
+        if obs.load_factor > LOAD_SHED_ABOVE || obs.degrade_level >= 1 {
             stages.set(STAGE_CSC, false);
+        }
+        // Second rung: the inference path is limping (retries/failover
+        // under sustained faults) — shed NLM too, detections or not, so
+        // the frame budget goes to keeping the loop real-time.
+        if obs.degrade_level >= 2 {
+            stages.set(STAGE_NLM, false);
         }
 
         self.updates += 1;
@@ -240,6 +251,7 @@ mod tests {
             measured_gains: AwbGains::unity(),
             illum_ratio: 1.0,
             load_factor: 0.0,
+            degrade_level: 0,
         }
     }
 
@@ -417,6 +429,26 @@ mod tests {
         o.load_factor = 1.0; // exactly at capacity: no shedding
         let params = p.step(&base_params(), &o);
         assert!(params.stages.enabled(STAGE_CSC), "at-capacity must keep sharpen");
+    }
+
+    #[test]
+    fn degradation_ladder_sheds_stages_in_order() {
+        let mut p = ControlPolicy::new(&CoordinatorConfig::default());
+        let mut o = obs(110.0);
+        o.degrade_level = 0;
+        let params = p.step(&base_params(), &o);
+        assert!(params.stages.enabled(STAGE_CSC) && params.stages.enabled(STAGE_NLM));
+        o.degrade_level = 1;
+        let params = p.step(&base_params(), &o);
+        assert!(!params.stages.enabled(STAGE_CSC), "rung 1 sheds CSC/sharpen");
+        assert!(params.stages.enabled(STAGE_NLM), "rung 1 keeps NLM");
+        o.degrade_level = 2;
+        o.detections.push(det()); // rung 2 sheds NLM even with tracked objects
+        let params = p.step(&base_params(), &o);
+        assert!(!params.stages.enabled(STAGE_CSC) && !params.stages.enabled(STAGE_NLM));
+        // recovery: rungs back to 0 restores the full mask
+        let params = p.step(&base_params(), &obs(110.0));
+        assert!(params.stages.enabled(STAGE_CSC) && params.stages.enabled(STAGE_NLM));
     }
 
     #[test]

@@ -1,0 +1,528 @@
+//! Deterministic, seed-driven fault injection (ROADMAP item 3).
+//!
+//! The paper positions AceleradorSNN for safety-critical perception, so
+//! robustness has to be a *tested* property: this module perturbs the
+//! three planes a deployed system actually loses —
+//!
+//! * **DVS sensor** ([`StreamFaults::apply_dvs`]): per-event readout
+//!   drops, dead-time intervals, stuck hot pixels, correlated noise
+//!   bursts, and stale events arriving after their window's boundary
+//!   (exercising the windower's late-drop path);
+//! * **RGB sensor** ([`StreamFaults::apply_rgb`]): dropped/duplicated
+//!   frames and SEU row-band bit flips in the raw Bayer frame, upstream
+//!   of the ISP;
+//! * **NPU service** ([`FaultInjectingBackend`]): latency spikes,
+//!   erroring replies, and bounded hard hangs behind the
+//!   [`NpuBackend`] seam — the stimulus for the batcher deadline,
+//!   retry/backoff, `native-int8` failover, and the fleet circuit
+//!   breaker.
+//!
+//! Determinism contract: every sensor-fault decision for window `w` of a
+//! stream draws from an RNG forked as `base.fork(2w+1)` (DVS) /
+//! `base.fork(2w+2)` (RGB), where `base` forks from the plan seed and
+//! the stream's scenario seed (the fleet-profile scheme). Draws are
+//! therefore independent of scheduling — faulted digests are invariant
+//! across workers × simd, and a *disabled* plan draws nothing at all, so
+//! faults-off runs stay bit-exact with fault-unaware builds. Service
+//! faults are timing-dependent by nature (batch composition varies) and
+//! are excluded from digest gates.
+
+use std::cell::{Cell, RefCell};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::FaultsConfig;
+use crate::events::voxel::VoxelGrid;
+use crate::events::{spec, Event};
+use crate::runtime::{NpuBackend, NpuOutput};
+use crate::util::{ImageU8, SplitMix64};
+
+/// Fork stream for the per-stream hot-pixel table (any fixed u64 works;
+/// per-window forks use small even/odd ids and cannot collide in
+/// practice).
+const HOT_PIXEL_STREAM: u64 = 0x484F_545F_5049_5845;
+/// Fork stream for the service-fault RNG (shared engine, not per-stream).
+const SERVICE_STREAM: u64 = 0x5345_5256_4943_4531;
+/// Events one stuck hot pixel emits per window.
+const HOT_EVENTS_PER_WINDOW: usize = 4;
+/// Stale (late) events injected by one stale burst.
+const STALE_EVENTS: usize = 32;
+
+/// Apply a `--faults` / `ACELERADOR_FAULTS` spec onto a config:
+/// `off | on | dvs | rgb | npu | all`, optionally suffixed `@<seed>`
+/// (e.g. `dvs@7`). `on` enables the deterministic sensor categories;
+/// `all` adds the timing-dependent NPU service faults.
+pub fn apply_spec(cfg: &mut FaultsConfig, spec: &str) -> Result<()> {
+    let (mode, seed) = match spec.split_once('@') {
+        Some((m, s)) => {
+            let seed: u64 = s
+                .parse()
+                .with_context(|| format!("faults spec seed {s:?} is not a u64"))?;
+            (m, Some(seed))
+        }
+        None => (spec, None),
+    };
+    match mode {
+        "off" => cfg.enabled = false,
+        "on" | "sensor" => {
+            cfg.enabled = true;
+            cfg.dvs = true;
+            cfg.rgb = true;
+            cfg.npu = false;
+        }
+        "dvs" => {
+            cfg.enabled = true;
+            cfg.dvs = true;
+            cfg.rgb = false;
+            cfg.npu = false;
+        }
+        "rgb" => {
+            cfg.enabled = true;
+            cfg.dvs = false;
+            cfg.rgb = true;
+            cfg.npu = false;
+        }
+        "npu" => {
+            cfg.enabled = true;
+            cfg.dvs = false;
+            cfg.rgb = false;
+            cfg.npu = true;
+        }
+        "all" => {
+            cfg.enabled = true;
+            cfg.dvs = true;
+            cfg.rgb = true;
+            cfg.npu = true;
+        }
+        other => bail!(
+            "unknown faults spec {other:?} (expected off/on/dvs/rgb/npu/all, \
+             optionally @seed)"
+        ),
+    }
+    if let Some(s) = seed {
+        cfg.seed = s;
+    }
+    Ok(())
+}
+
+/// What one window's DVS fault application did (telemetry feed).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DvsFaultStats {
+    /// Real events removed (drops + dead-time).
+    pub dropped: u64,
+    /// Synthetic events added inside the window (hot pixels + bursts).
+    pub injected: u64,
+    /// Stale events added in the *previous* window's span — the windower
+    /// drops them as late arrivals.
+    pub stale: u64,
+}
+
+/// The per-stream fault plan: one per cognitive loop, seeded from the
+/// plan seed and the stream's scenario seed. Constructed only when the
+/// (resolved) config enables faults — a `None` plan is the guarantee
+/// that the clean path stays untouched.
+#[derive(Debug)]
+pub struct StreamFaults {
+    cfg: FaultsConfig,
+    base: SplitMix64,
+    /// Fixed stuck-pixel coordinates for this stream (empty without DVS
+    /// faults).
+    hot: Vec<(u16, u16)>,
+    /// Last delivered raw frame (duplicate-frame fault source).
+    prev_raw: Option<ImageU8>,
+}
+
+impl StreamFaults {
+    /// Build the plan for one stream, or `None` when faults are off.
+    /// `scenario_seed` is the stream's forked scenario seed (fleet
+    /// profiles) — the single-loop CLI path passes its run seed.
+    pub fn for_stream(cfg: &FaultsConfig, scenario_seed: u64) -> Option<Self> {
+        if !cfg.enabled {
+            return None;
+        }
+        // +1: fork(0) would alias the root stream (profile idiom)
+        let base = SplitMix64::new(cfg.seed).fork(scenario_seed.wrapping_add(1));
+        let hot = if cfg.dvs {
+            let mut hp = base.fork(HOT_PIXEL_STREAM);
+            (0..cfg.dvs_hot_pixels)
+                .map(|_| {
+                    (
+                        hp.range_u32(0, spec::WIDTH as u32) as u16,
+                        hp.range_u32(0, spec::HEIGHT as u32) as u16,
+                    )
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Some(Self { cfg: cfg.clone(), base, hot, prev_raw: None })
+    }
+
+    /// The resolved config the plan was built from (recovery knobs).
+    pub fn cfg(&self) -> &FaultsConfig {
+        &self.cfg
+    }
+
+    /// Whether service faults are part of this plan.
+    pub fn service_faults(&self) -> bool {
+        self.cfg.npu
+    }
+
+    /// Perturb one window's event stream in place. Removals happen
+    /// before injections so drop draws never act on synthetic events;
+    /// injected timestamps stay inside `(w·W, (w+1)·W]` (the windower's
+    /// span for window `w`), stale ones inside the previous span.
+    pub fn apply_dvs(&mut self, wid: u64, events: &mut Vec<Event>) -> DvsFaultStats {
+        let mut stats = DvsFaultStats::default();
+        if !self.cfg.dvs {
+            return stats;
+        }
+        let w_us = spec::WINDOW_US;
+        let start = wid as i64 * w_us;
+        let mut rng = self.base.fork(2 * wid + 1);
+
+        // 1. dead-time interval: everything inside it is lost
+        if rng.uniform() < self.cfg.dvs_dead_time_prob {
+            let dead_us = (self.cfg.dvs_dead_time_us as i64).min(w_us);
+            let span = (w_us - dead_us).max(1) as u32;
+            let dead_lo = start + 1 + rng.range_u32(0, span) as i64;
+            let dead_hi = dead_lo + dead_us;
+            let before = events.len();
+            events.retain(|e| e.t_us < dead_lo || e.t_us >= dead_hi);
+            stats.dropped += (before - events.len()) as u64;
+        }
+
+        // 2. independent per-event readout drops
+        if self.cfg.dvs_drop_prob > 0.0 {
+            let p = self.cfg.dvs_drop_prob;
+            let before = events.len();
+            events.retain(|_| rng.uniform() >= p);
+            stats.dropped += (before - events.len()) as u64;
+        }
+
+        // 3. stuck hot pixels fire every window
+        for &(x, y) in &self.hot {
+            for _ in 0..HOT_EVENTS_PER_WINDOW {
+                let t = start + 1 + rng.range_u32(0, w_us as u32) as i64;
+                events.push(Event { t_us: t, x, y, p: 1 });
+                stats.injected += 1;
+            }
+        }
+
+        // 4. correlated noise burst around a random center
+        if rng.uniform() < self.cfg.dvs_burst_prob {
+            let cx = rng.range_u32(0, spec::WIDTH as u32) as i64;
+            let cy = rng.range_u32(0, spec::HEIGHT as u32) as i64;
+            for _ in 0..self.cfg.dvs_burst_events {
+                let dx = rng.range_u32(0, 9) as i64 - 4;
+                let dy = rng.range_u32(0, 9) as i64 - 4;
+                let x = (cx + dx).clamp(0, spec::WIDTH as i64 - 1) as u16;
+                let y = (cy + dy).clamp(0, spec::HEIGHT as i64 - 1) as u16;
+                let t = start + 1 + rng.range_u32(0, w_us as u32) as i64;
+                let p = (rng.next_u32() & 1) as u8;
+                events.push(Event { t_us: t, x, y, p });
+                stats.injected += 1;
+            }
+        }
+
+        // 5. stale events from the previous window (windower drops them)
+        if wid >= 1 && rng.uniform() < self.cfg.dvs_stale_prob {
+            let prev_start = start - w_us;
+            for _ in 0..STALE_EVENTS {
+                let t = prev_start + 1 + rng.range_u32(0, w_us as u32) as i64;
+                let x = rng.range_u32(0, spec::WIDTH as u32) as u16;
+                let y = rng.range_u32(0, spec::HEIGHT as u32) as u16;
+                events.push(Event { t_us: t, x, y, p: 1 });
+                stats.stale += 1;
+            }
+        }
+        stats
+    }
+
+    /// Perturb one captured raw Bayer frame in place, upstream of the
+    /// ISP. Returns the number of fault applications (0 = clean frame).
+    pub fn apply_rgb(&mut self, wid: u64, raw: &mut ImageU8) -> u64 {
+        if !self.cfg.rgb {
+            return 0;
+        }
+        let mut rng = self.base.fork(2 * wid + 2);
+        let mut faulted = 0u64;
+
+        // dropped capture: the previous frame is delivered again (the
+        // draw happens regardless so the sequence is stable from w=0)
+        let dup = rng.uniform() < self.cfg.rgb_drop_prob;
+        if dup {
+            if let Some(prev) = &self.prev_raw {
+                *raw = prev.clone();
+                faulted += 1;
+            }
+        }
+
+        // SEU: one flipped bit across a band of rows
+        if rng.uniform() < self.cfg.rgb_seu_prob {
+            let rows = self.cfg.rgb_seu_rows.clamp(1, raw.height);
+            let row0 = if raw.height > rows {
+                rng.range_u32(0, (raw.height - rows + 1) as u32) as usize
+            } else {
+                0
+            };
+            let bit = 1u8 << rng.range_u32(0, 8);
+            for y in row0..row0 + rows {
+                for x in 0..raw.width {
+                    raw.set(x, y, raw.get(x, y) ^ bit);
+                }
+            }
+            faulted += 1;
+        }
+
+        self.prev_raw = Some(raw.clone());
+        faulted
+    }
+}
+
+/// Service-fault wrapper around any [`NpuBackend`]: injects latency
+/// spikes, erroring replies, and bounded hard hangs. Lives on the engine
+/// thread like every backend; `infer` takes `&self`, hence the interior
+/// mutability. A "hard hang" is a bounded sleep of `npu_hang_ms`
+/// followed by an error — long enough to blow any reply deadline, short
+/// enough that shutdown always drains (a literal infinite sleep would
+/// deadlock the service's `Drop`, which joins the engine thread).
+pub struct FaultInjectingBackend {
+    inner: Box<dyn NpuBackend>,
+    cfg: FaultsConfig,
+    rng: RefCell<SplitMix64>,
+    calls: Cell<u64>,
+}
+
+impl FaultInjectingBackend {
+    pub fn wrap(inner: Box<dyn NpuBackend>, cfg: FaultsConfig) -> Box<dyn NpuBackend> {
+        let rng = RefCell::new(SplitMix64::new(cfg.seed).fork(SERVICE_STREAM));
+        Box::new(Self { inner, cfg, rng, calls: Cell::new(0) })
+    }
+}
+
+impl NpuBackend for FaultInjectingBackend {
+    fn name(&self) -> &'static str {
+        // telemetry keeps reporting the real serving backend
+        self.inner.name()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn infer(&self, voxels: &[&VoxelGrid]) -> Result<NpuOutput> {
+        let n = self.calls.get() + 1;
+        self.calls.set(n);
+        if self.cfg.npu_hang_after > 0 && n >= self.cfg.npu_hang_after {
+            std::thread::sleep(Duration::from_millis(self.cfg.npu_hang_ms));
+            bail!(
+                "injected npu hang ({} ms) at call {n}",
+                self.cfg.npu_hang_ms
+            );
+        }
+        let (spike, error) = {
+            let mut rng = self.rng.borrow_mut();
+            (
+                rng.uniform() < self.cfg.npu_spike_prob,
+                rng.uniform() < self.cfg.npu_error_prob,
+            )
+        };
+        if spike {
+            std::thread::sleep(Duration::from_micros(self.cfg.npu_spike_us));
+        }
+        if error {
+            bail!("injected npu error at call {n}");
+        }
+        self.inner.infer(voxels)
+    }
+
+    fn set_sparse_threshold(&mut self, threshold: f32) {
+        self.inner.set_sparse_threshold(threshold);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::scene::ScenarioSim;
+
+    fn enabled_cfg() -> FaultsConfig {
+        FaultsConfig { enabled: true, ..Default::default() }
+    }
+
+    fn sim_window(wid: u64) -> Vec<Event> {
+        let mut sim = ScenarioSim::new(3);
+        let mut events = Vec::new();
+        for _ in 0..=wid {
+            events = sim.window(1.0).0;
+        }
+        events
+    }
+
+    #[test]
+    fn spec_parses_modes_and_seed() {
+        let mut cfg = FaultsConfig::default();
+        apply_spec(&mut cfg, "dvs@7").unwrap();
+        assert!(cfg.enabled && cfg.dvs && !cfg.rgb && !cfg.npu);
+        assert_eq!(cfg.seed, 7);
+        apply_spec(&mut cfg, "all").unwrap();
+        assert!(cfg.dvs && cfg.rgb && cfg.npu);
+        assert_eq!(cfg.seed, 7, "no @seed keeps the previous seed");
+        apply_spec(&mut cfg, "off").unwrap();
+        assert!(!cfg.enabled);
+        assert!(apply_spec(&mut cfg, "meteor").is_err());
+        assert!(apply_spec(&mut cfg, "dvs@notanumber").is_err());
+    }
+
+    #[test]
+    fn disabled_plan_is_none() {
+        assert!(StreamFaults::for_stream(&FaultsConfig::default(), 42).is_none());
+        assert!(StreamFaults::for_stream(&enabled_cfg(), 42).is_some());
+    }
+
+    #[test]
+    fn dvs_faults_are_deterministic_per_seed() {
+        let base = sim_window(0);
+        let run = |seed: u64| {
+            let cfg = FaultsConfig { seed, ..enabled_cfg() };
+            let mut plan = StreamFaults::for_stream(&cfg, 5).unwrap();
+            let mut ev = base.clone();
+            let stats = plan.apply_dvs(0, &mut ev);
+            (ev, stats)
+        };
+        let (e1, s1) = run(1);
+        let (e2, s2) = run(1);
+        assert_eq!(e1, e2, "same seed, same mutation");
+        assert_eq!(s1, s2);
+        let (e3, _) = run(2);
+        assert_ne!(e1, e3, "different seed perturbs differently");
+    }
+
+    #[test]
+    fn injected_events_respect_window_spans() {
+        let mut cfg = enabled_cfg();
+        cfg.dvs_burst_prob = 1.0;
+        cfg.dvs_stale_prob = 1.0;
+        let mut plan = StreamFaults::for_stream(&cfg, 9).unwrap();
+        let mut ev = sim_window(1);
+        let stats = plan.apply_dvs(1, &mut ev);
+        assert!(stats.injected > 0);
+        assert_eq!(stats.stale, STALE_EVENTS as u64);
+        let w = spec::WINDOW_US;
+        for e in &ev {
+            assert!(e.t_us > 0 && e.t_us <= 2 * w, "t={} out of range", e.t_us);
+        }
+        // the stale tail sits strictly inside window 0's span
+        let stale: Vec<_> = ev.iter().filter(|e| e.t_us <= w).collect();
+        assert!(stale.len() >= STALE_EVENTS);
+    }
+
+    #[test]
+    fn dead_time_and_drops_only_remove() {
+        let mut cfg = enabled_cfg();
+        cfg.dvs_drop_prob = 1.0;
+        cfg.dvs_dead_time_prob = 0.0;
+        cfg.dvs_hot_pixels = 0;
+        cfg.dvs_burst_prob = 0.0;
+        cfg.dvs_stale_prob = 0.0;
+        let mut plan = StreamFaults::for_stream(&cfg, 1).unwrap();
+        let mut ev = sim_window(0);
+        let n = ev.len();
+        let stats = plan.apply_dvs(0, &mut ev);
+        assert_eq!(stats.dropped, n as u64, "p=1 drops every event");
+        assert!(ev.is_empty());
+        assert_eq!(stats.injected, 0);
+    }
+
+    #[test]
+    fn rgb_seu_flips_one_bit_in_a_row_band() {
+        let mut cfg = enabled_cfg();
+        cfg.rgb_drop_prob = 0.0;
+        cfg.rgb_seu_prob = 1.0;
+        cfg.rgb_seu_rows = 2;
+        let mut plan = StreamFaults::for_stream(&cfg, 2).unwrap();
+        let clean = ImageU8::from_fn(8, 8, |x, y| (16 * x + y) as u8);
+        let mut raw = clean.clone();
+        assert_eq!(plan.apply_rgb(0, &mut raw), 1);
+        let mut changed_rows = Vec::new();
+        for y in 0..8 {
+            let row_changed =
+                (0..8).any(|x| raw.get(x, y) != clean.get(x, y));
+            if row_changed {
+                changed_rows.push(y);
+                for x in 0..8 {
+                    let diff = raw.get(x, y) ^ clean.get(x, y);
+                    assert_eq!(diff.count_ones(), 1, "exactly one flipped bit");
+                }
+            }
+        }
+        assert_eq!(changed_rows.len(), 2, "a band of rgb_seu_rows rows");
+        assert_eq!(changed_rows[1], changed_rows[0] + 1);
+    }
+
+    #[test]
+    fn rgb_duplicate_delivers_previous_frame() {
+        let mut cfg = enabled_cfg();
+        cfg.rgb_drop_prob = 1.0;
+        cfg.rgb_seu_prob = 0.0;
+        let mut plan = StreamFaults::for_stream(&cfg, 3).unwrap();
+        let f0 = ImageU8::from_fn(4, 4, |x, y| (x * 4 + y) as u8);
+        let mut first = f0.clone();
+        // window 0: no previous frame yet, delivered as-is
+        assert_eq!(plan.apply_rgb(0, &mut first), 0);
+        assert_eq!(first, f0);
+        let mut second = ImageU8::from_fn(4, 4, |_, _| 200);
+        assert_eq!(plan.apply_rgb(1, &mut second), 1);
+        assert_eq!(second, f0, "window 1 delivers window 0's frame again");
+    }
+
+    struct StubBackend;
+    impl NpuBackend for StubBackend {
+        fn name(&self) -> &'static str {
+            "stub"
+        }
+        fn max_batch(&self) -> usize {
+            4
+        }
+        fn infer(&self, voxels: &[&VoxelGrid]) -> Result<NpuOutput> {
+            Ok(NpuOutput {
+                heads: vec![vec![0.0; 4]; voxels.len()],
+                rates: vec![0.1],
+                sparse_layers: vec![true],
+                execute_us: 1.0,
+            })
+        }
+        fn set_sparse_threshold(&mut self, _threshold: f32) {}
+    }
+
+    #[test]
+    fn service_wrapper_injects_errors_and_bounded_hangs() {
+        let vox = crate::events::voxel::voxelize(&[]);
+        let mut cfg = enabled_cfg();
+        cfg.npu = true;
+        cfg.npu_error_prob = 1.0;
+        cfg.npu_spike_prob = 0.0;
+        let b = FaultInjectingBackend::wrap(Box::new(StubBackend), cfg.clone());
+        assert_eq!(b.name(), "stub", "telemetry name delegates to inner");
+        assert!(b.infer(&[&vox]).is_err(), "p=1 errors every call");
+
+        let mut cfg = enabled_cfg();
+        cfg.npu = true;
+        cfg.npu_error_prob = 0.0;
+        cfg.npu_spike_prob = 0.0;
+        cfg.npu_hang_after = 2;
+        cfg.npu_hang_ms = 10;
+        let b = FaultInjectingBackend::wrap(Box::new(StubBackend), cfg);
+        assert!(b.infer(&[&vox]).is_ok(), "call 1 precedes the hang");
+        let t0 = std::time::Instant::now();
+        let err = b.infer(&[&vox]).unwrap_err();
+        assert!(t0.elapsed() >= Duration::from_millis(10), "hang is a sleep");
+        assert!(
+            format!("{err:#}").contains("injected npu hang"),
+            "hang error is descriptive"
+        );
+        assert!(b.infer(&[&vox]).is_err(), "hangs persist once started");
+    }
+}

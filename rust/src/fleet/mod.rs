@@ -204,7 +204,16 @@ pub fn run_fleet_with(cfg: &SystemConfig, tracer: Tracer) -> Result<FleetReport>
     let band_pool = WorkerPool::new(workers);
     band_pool.set_tracer(tracer.clone());
     band_pool.set_simd_enabled(cfg.runtime.resolve_simd());
-    let svc = NpuService::start_with_pool(&run_cfg.npu, band_pool.clone(), tracer.clone())?;
+    // service-plane faults wrap the ONE shared backend; sensor-plane
+    // faults are applied per-stream inside each cognitive loop
+    let faults = cfg.faults.resolve();
+    let service_faults = (faults.enabled && faults.npu).then(|| faults.clone());
+    let svc = NpuService::start_with_pool_faulted(
+        &run_cfg.npu,
+        band_pool.clone(),
+        tracer.clone(),
+        service_faults,
+    )?;
     let barrier = fleet
         .lockstep
         .then(|| Arc::new(RoundBarrier::new(carriers)));
@@ -276,7 +285,15 @@ pub fn run_fleet_with(cfg: &SystemConfig, tracer: Tracer) -> Result<FleetReport>
         }
         None => HealthReport::unknown(),
     };
-    Ok(FleetReport::assemble(fleet, summaries, wall_s).with_health(health))
+    let report = FleetReport::assemble(fleet, summaries, wall_s).with_health(health);
+    // A run that only finished on its recovery machinery is not healthy:
+    // escalate the health row so the report and `--json` say so.
+    let escalations = report.recovery_escalations();
+    if escalations > 0 {
+        let health = report.health.clone().degraded(escalations);
+        return Ok(report.with_health(health));
+    }
+    Ok(report)
 }
 
 /// One carrier thread: a fixed set of streams, each a full cognitive
@@ -310,6 +327,11 @@ fn run_carrier(
         l: CognitiveLoop,
         script: Vec<f64>,
         outcomes: Vec<crate::coordinator::WindowOutcome>,
+        /// Consecutive failed windows (circuit-breaker input).
+        consec_failures: u32,
+        /// Tripped breaker: the stream sits out the remaining rounds so
+        /// one faulty stream cannot wedge the fleet's lockstep.
+        quarantined: bool,
     }
 
     let mut streams = Vec::with_capacity(profs.len());
@@ -344,8 +366,21 @@ fn run_carrier(
         }
         let script = prof.script(cfg.fleet.windows_per_stream);
         let outcomes = Vec::with_capacity(script.len());
-        streams.push(StreamState { prof, l, script, outcomes });
+        streams.push(StreamState {
+            prof,
+            l,
+            script,
+            outcomes,
+            consec_failures: 0,
+            quarantined: false,
+        });
     }
+
+    // With a fault plan active, a stream's window error feeds its circuit
+    // breaker instead of aborting the whole fleet; K consecutive failures
+    // quarantine the stream. Faults-off keeps fail-fast semantics.
+    let faults = cfg.faults.resolve();
+    let breaker = faults.enabled.then_some(faults.breaker_threshold);
 
     let windows = cfg.fleet.windows_per_stream;
     let mut failure: Option<anyhow::Error> = None;
@@ -366,6 +401,9 @@ fn run_carrier(
         for st in streams.iter_mut() {
             if abort.load(Ordering::SeqCst) {
                 break 'rounds;
+            }
+            if st.quarantined {
+                continue; // the carrier still keeps the round cadence
             }
             let illum = st.script[w];
             // The staged executor's look-ahead: window w+1's Sense/Infer
@@ -400,9 +438,26 @@ fn run_carrier(
             let err = match stepped {
                 Ok(Ok(o)) => {
                     st.outcomes.push(o);
+                    st.consec_failures = 0;
                     continue;
                 }
-                Ok(Err(e)) => e,
+                Ok(Err(e)) => {
+                    // Under a fault plan an erroring window trips the
+                    // per-stream breaker instead of the fleet-wide abort:
+                    // the window is skipped (no outcome) and, after K
+                    // consecutive failures, the stream is quarantined so
+                    // its peers keep progressing. Panics still abort —
+                    // they may have corrupted shared state.
+                    if let Some(k) = breaker {
+                        st.consec_failures += 1;
+                        if st.consec_failures >= k {
+                            st.quarantined = true;
+                            st.l.metrics.recovery_quarantines.inc();
+                        }
+                        continue;
+                    }
+                    e
+                }
                 Err(_) => anyhow!("worker panicked during step"),
             };
             abort.store(true, Ordering::SeqCst);

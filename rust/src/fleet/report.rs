@@ -419,6 +419,46 @@ impl FleetReport {
         row
     }
 
+    /// Sum one named counter across every stream's metrics snapshot
+    /// (`faults.*` / `recovery.*` accounting in the fleet report).
+    pub fn counter_total(&self, name: &str) -> u64 {
+        self.streams
+            .iter()
+            .filter_map(|s| {
+                s.metrics
+                    .get("counters")
+                    .and_then(|c| c.get(name))
+                    .and_then(Json::as_f64)
+            })
+            .sum::<f64>() as u64
+    }
+
+    /// Fault-injection + recovery totals in canonical order:
+    /// `(name, total)` rows for the report and `--json` surface.
+    pub fn fault_rows(&self) -> Vec<(&'static str, u64)> {
+        [
+            "faults_dvs_dropped",
+            "faults_dvs_injected",
+            "faults_rgb_faulted",
+            "faults_npu_errors",
+            "windower_late_dropped",
+            "recovery_timeouts",
+            "recovery_retries",
+            "recovery_failovers",
+            "recovery_quarantines",
+        ]
+        .into_iter()
+        .map(|name| (name, self.counter_total(name)))
+        .collect()
+    }
+
+    /// Total recovery escalations (failovers + quarantines) — nonzero
+    /// means the fleet finished on its degradation machinery and the
+    /// health row escalates to `degraded`.
+    pub fn recovery_escalations(&self) -> u64 {
+        self.counter_total("recovery_failovers") + self.counter_total("recovery_quarantines")
+    }
+
     /// Order-independent-by-construction fleet digest: streams are folded
     /// in stream-id order, each contributing its own deterministic digest.
     pub fn digest(&self) -> u64 {
@@ -518,6 +558,15 @@ impl FleetReport {
                         ]),
                     ),
                     (
+                        "faults",
+                        Json::obj(
+                            self.fault_rows()
+                                .into_iter()
+                                .map(|(name, total)| (name, Json::num(total as f64)))
+                                .collect(),
+                        ),
+                    ),
+                    (
                         "snn_layers",
                         Json::arr(
                             self.snn_layer_rows()
@@ -603,11 +652,24 @@ impl FleetReport {
             ]);
         }
         let (workers, runs, tasks, utilization) = self.pool_row();
+        // faults/recovery line only when something actually fired — clean
+        // runs keep the report byte-stable with fault-unaware builds
+        let fault_rows = self.fault_rows();
+        let faults_line = if fault_rows.iter().any(|&(_, v)| v > 0) {
+            let cells: Vec<String> = fault_rows
+                .iter()
+                .filter(|&&(_, v)| v > 0)
+                .map(|&(name, v)| format!("{name}={v}"))
+                .collect();
+            format!("\nfaults/recovery: {}", cells.join(" "))
+        } else {
+            String::new()
+        };
         format!(
             "{}\nfleet: {} streams x {} windows in {:.2}s = {:.1} windows/s\n\
              occupancy {:.2} | service p50 {:.0}µs p95 {:.0}µs p99 {:.0}µs | digest {}\n\
              pool: {workers} workers, {runs} parallel runs, {tasks} band tasks, \
-             {:.0}% utilization\n\
+             {:.0}% utilization{faults_line}\n\
              health: {}\n\
              \npipeline dataflow (feedback latency {} frames; occupancy = stage busy /\n\
              tick wall — pipelined stages sum above 1.0):\n{}\
@@ -881,6 +943,37 @@ mod tests {
         let pool = j.get("aggregate").unwrap().get("pool").unwrap();
         assert_eq!(pool.get("tasks").unwrap().as_f64(), Some(36.0));
         assert!(r.render().contains("pool:"));
+    }
+
+    #[test]
+    fn fault_totals_aggregate_across_streams() {
+        let m0 = SystemMetrics::new();
+        m0.recovery_failovers.inc();
+        m0.faults_npu_errors.add(3);
+        let m1 = SystemMetrics::new();
+        m1.recovery_quarantines.inc();
+        m1.windower_late_dropped.add(32);
+        let s0 = StreamSummary::from_outcomes(&prof(0), &[outcome(0, 10, 30.0, 1)], &m0);
+        let s1 = StreamSummary::from_outcomes(&prof(1), &[outcome(0, 20, 28.0, 1)], &m1);
+        let r = FleetReport::assemble(FleetConfig::default(), vec![s0, s1], 1.0);
+        assert_eq!(r.counter_total("faults_npu_errors"), 3);
+        assert_eq!(r.counter_total("windower_late_dropped"), 32);
+        assert_eq!(r.recovery_escalations(), 2, "failover + quarantine");
+        let j = r.to_json();
+        let f = j.get("aggregate").unwrap().get("faults").unwrap();
+        assert_eq!(f.get("recovery_failovers").unwrap().as_f64(), Some(1.0));
+        assert_eq!(f.get("recovery_quarantines").unwrap().as_f64(), Some(1.0));
+        let text = r.render();
+        assert!(text.contains("faults/recovery:"), "nonzero totals must render");
+        assert!(text.contains("windower_late_dropped=32"));
+    }
+
+    #[test]
+    fn clean_run_renders_without_fault_line() {
+        let s0 = summary(0, &[outcome(0, 10, 30.0, 2)]);
+        let r = FleetReport::assemble(FleetConfig::default(), vec![s0], 0.5);
+        assert_eq!(r.recovery_escalations(), 0);
+        assert!(!r.render().contains("faults/recovery:"));
     }
 
     #[test]

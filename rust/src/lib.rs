@@ -62,6 +62,7 @@ pub mod config;
 pub mod coordinator;
 pub mod detect;
 pub mod events;
+pub mod faults;
 pub mod fleet;
 pub mod hw;
 pub mod isp;

@@ -57,6 +57,7 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "workers", help: "deterministic worker-pool width for ISP row bands and SNN channel bands (0 = available_parallelism, 1 = inline scalar path; outputs are bit-identical for any value)", is_switch: false, default: None },
         FlagSpec { name: "simd", help: "SIMD lane dispatch for the per-core kernels: on = force the 4-wide lane kernels, off = force the scalar oracles, auto = enabled unless ACELERADOR_SIMD opts out (outputs and digests are bit-identical either way; trades wall time only)", is_switch: false, default: None },
         FlagSpec { name: "feedback-latency", help: "parameter-bus feedback-latency register in frames: 0 = serial schedule (decide and apply inside the same window, bit-exact with the classic loop), >= 1 = pipelined schedule (window t's ISP render overlaps its NPU inference; commands land latency frame boundaries after their source window). Each value has its own deterministic digest", is_switch: false, default: None },
+        FlagSpec { name: "faults", help: "deterministic fault injection: off, on/sensor (DVS + RGB faults — scheduling-independent, digest-stable per seed), dvs, rgb, npu (service faults: latency spikes, errors, hangs — drives the reply deadline, retry/backoff, native-int8 failover and the fleet circuit breaker), or all; optionally @seed (e.g. \"on@7\"). Overrides the config's faults section; ACELERADOR_FAULTS applies when the config leaves faults off", is_switch: false, default: None },
         FlagSpec { name: "trace", help: "run/fleet: write a Chrome trace-event JSON file (open in Perfetto or chrome://tracing) with per-window Sense/Infer/Decide/Render spans, NPU queue/execute spans, and band-job child spans, then print a span summary and the watchdog health line. Tracing is observational: digests are bit-identical with and without it", is_switch: false, default: None },
     ]
 }
@@ -97,6 +98,9 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
         cfg.loop_.feedback_latency = l.parse().map_err(|_| {
             anyhow::anyhow!("--feedback-latency must be a non-negative frame count")
         })?;
+    }
+    if let Some(spec) = args.explicit("faults") {
+        acelerador::faults::apply_spec(&mut cfg.faults, spec)?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -180,6 +184,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         Some(s) => Watchdog::from_config(&cfg.trace).assess(&s.events(), s.dropped_events()),
         None => HealthReport::unknown(),
     };
+    // a run that finished on failover is degraded, not healthy
+    let escalations =
+        l.metrics.recovery_failovers.get() + l.metrics.recovery_quarantines.get();
+    let health = if escalations > 0 { health.degraded(escalations) } else { health };
     if let (Some(path), Some(s)) = (&trace_out, &sink) {
         write_trace(
             path,

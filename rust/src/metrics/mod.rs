@@ -637,6 +637,24 @@ pub struct SystemMetrics {
     pub detections_out: Counter,
     pub isp_frames: Counter,
     pub isp_param_updates: Counter,
+    /// Late events the windower refused (cross-window regressions) —
+    /// nonzero in clean runs only if a sensor misbehaves; the DVS
+    /// stale-event fault drives it deliberately.
+    pub windower_late_dropped: Counter,
+    /// Fault-injection accounting (`faults.*` in the registry): real DVS
+    /// events removed, synthetic DVS events added, RGB frames perturbed,
+    /// erroring NPU service replies observed by this loop.
+    pub faults_dvs_dropped: Counter,
+    pub faults_dvs_injected: Counter,
+    pub faults_rgb_faulted: Counter,
+    pub faults_npu_errors: Counter,
+    /// Recovery accounting (`recovery.*`): reply-deadline timeouts,
+    /// resubmission retries, sticky failovers to `native-int8`, and
+    /// fleet circuit-breaker quarantines.
+    pub recovery_timeouts: Counter,
+    pub recovery_retries: Counter,
+    pub recovery_failovers: Counter,
+    pub recovery_quarantines: Counter,
     pub queue_depth: Gauge,
     /// Which serving backend executes inferences, in the
     /// `BackendKind::gauge_id` encoding (0 = pjrt, 1 = native-f32,
@@ -692,6 +710,15 @@ impl SystemMetrics {
         r.counter("detect.detections_out", self.detections_out.get());
         r.counter("isp.frames", self.isp_frames.get());
         r.counter("isp.param_updates", self.isp_param_updates.get());
+        r.counter("windower.late_dropped", self.windower_late_dropped.get());
+        r.counter("faults.dvs_dropped", self.faults_dvs_dropped.get());
+        r.counter("faults.dvs_injected", self.faults_dvs_injected.get());
+        r.counter("faults.rgb_faulted", self.faults_rgb_faulted.get());
+        r.counter("faults.npu_errors", self.faults_npu_errors.get());
+        r.counter("recovery.timeouts", self.recovery_timeouts.get());
+        r.counter("recovery.retries", self.recovery_retries.get());
+        r.counter("recovery.failovers", self.recovery_failovers.get());
+        r.counter("recovery.quarantines", self.recovery_quarantines.get());
         r.gauge("npu.queue_depth", self.queue_depth.get() as f64);
         r.gauge("npu.backend", self.npu_backend.get() as f64);
         for (name, h) in [
@@ -753,6 +780,42 @@ impl SystemMetrics {
                     ("detections_out", Json::num(self.detections_out.get() as f64)),
                     ("isp_frames", Json::num(self.isp_frames.get() as f64)),
                     ("isp_param_updates", Json::num(self.isp_param_updates.get() as f64)),
+                    (
+                        "windower_late_dropped",
+                        Json::num(self.windower_late_dropped.get() as f64),
+                    ),
+                    (
+                        "faults_dvs_dropped",
+                        Json::num(self.faults_dvs_dropped.get() as f64),
+                    ),
+                    (
+                        "faults_dvs_injected",
+                        Json::num(self.faults_dvs_injected.get() as f64),
+                    ),
+                    (
+                        "faults_rgb_faulted",
+                        Json::num(self.faults_rgb_faulted.get() as f64),
+                    ),
+                    (
+                        "faults_npu_errors",
+                        Json::num(self.faults_npu_errors.get() as f64),
+                    ),
+                    (
+                        "recovery_timeouts",
+                        Json::num(self.recovery_timeouts.get() as f64),
+                    ),
+                    (
+                        "recovery_retries",
+                        Json::num(self.recovery_retries.get() as f64),
+                    ),
+                    (
+                        "recovery_failovers",
+                        Json::num(self.recovery_failovers.get() as f64),
+                    ),
+                    (
+                        "recovery_quarantines",
+                        Json::num(self.recovery_quarantines.get() as f64),
+                    ),
                 ]),
             ),
             (

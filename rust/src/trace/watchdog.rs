@@ -20,12 +20,16 @@ use super::{Category, Lane, TraceEvent, SPAN_NPU_QUEUE, SPAN_ROUND, SPAN_WINDOW}
 use crate::config::TraceConfig;
 use crate::jsonlite::Json;
 
-/// Tri-state health signal. `Unknown` means tracing was off (or the run
-/// produced no events) so the event-stream checks could not run.
+/// Health signal. `Unknown` means tracing was off (or the run produced
+/// no events) so the event-stream checks could not run. `Degraded` means
+/// the run *completed*, but only because the recovery machinery engaged
+/// (NPU failover, stream quarantine) — stronger than a `Warn` timing
+/// finding, weaker than a failure.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum HealthState {
     Ok,
     Warn,
+    Degraded,
     Unknown,
 }
 
@@ -34,6 +38,7 @@ impl HealthState {
         match self {
             HealthState::Ok => "ok",
             HealthState::Warn => "warn",
+            HealthState::Degraded => "degraded",
             HealthState::Unknown => "unknown",
         }
     }
@@ -60,6 +65,19 @@ impl HealthReport {
             spans_checked: 0,
             dropped_events: 0,
         }
+    }
+
+    /// Escalate this report to `Degraded` after the run finished on its
+    /// recovery machinery (`escalations` = failovers + quarantines). The
+    /// finding is appended even when `MAX_FINDINGS` worth of timing
+    /// findings already exist — degradation must never be silent.
+    pub fn degraded(mut self, escalations: u64) -> Self {
+        self.state = HealthState::Degraded;
+        self.findings.push(format!(
+            "recovery engaged: {escalations} failover/quarantine escalation(s) — \
+             run completed in degraded mode"
+        ));
+        self
     }
 
     pub fn to_json(&self) -> Json {
@@ -256,6 +274,18 @@ mod tests {
         let r = dog().assess(&evs, 0);
         assert_eq!(r.state, HealthState::Warn);
         assert!(r.findings.iter().any(|f| f.contains("starved carrier 0")));
+    }
+
+    #[test]
+    fn degraded_escalation_overrides_state_and_is_visible() {
+        let r = dog()
+            .assess(&[span("sense", Category::Stage, Lane::Stream(0), 0, 0, 0, 10)], 0)
+            .degraded(2);
+        assert_eq!(r.state, HealthState::Degraded);
+        assert_eq!(r.state.as_str(), "degraded");
+        assert!(r.findings.iter().any(|f| f.contains("recovery engaged: 2")));
+        assert!(r.render_line().starts_with("degraded"));
+        assert_eq!(r.to_json().get("state").unwrap().as_str(), Some("degraded"));
     }
 
     #[test]

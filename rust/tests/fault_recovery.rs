@@ -1,0 +1,249 @@
+//! Integration: deterministic fault injection + the recovery ladder
+//! (ISSUE 9) — across module boundaries: fault plan → cognitive loop →
+//! shared NPU batcher → fleet report.
+//!
+//! Every test here runs artifact-free (native backends synthesize
+//! weights when the artifacts directory is absent), so the whole suite
+//! executes unconditionally — no `have_artifacts()` gate.
+//!
+//! Determinism scope: sensor-plane faults (DVS/RGB) draw from the fault
+//! plan's forked, per-window RNG streams and are digest-gated across
+//! workers × simd. Service-plane faults (NPU errors/hangs) depend on
+//! wall-clock batching and are asserted on *behavior* (completion,
+//! recovery counters), never on digests.
+
+use acelerador::config::SystemConfig;
+use acelerador::coordinator::CognitiveLoop;
+use acelerador::fleet::run_fleet;
+
+/// Artifact-free single-loop config: native serving backend with an
+/// artifacts directory that is guaranteed missing, so the backend
+/// falls back to synthetic weights (same convention as the batcher
+/// unit tests).
+fn native_cfg() -> SystemConfig {
+    let mut c = SystemConfig::default();
+    c.npu.backend = "native-int8".into();
+    c.npu.backbone = "spiking_mobilenet".into();
+    c.npu.artifacts_dir = "/nonexistent-artifacts".into();
+    c
+}
+
+fn fleet_cfg(streams: usize, windows: usize, seed: u64) -> SystemConfig {
+    let mut c = native_cfg();
+    c.fleet.streams = streams;
+    c.fleet.windows_per_stream = windows;
+    c.fleet.base_seed = seed;
+    c.fleet.scenario_mix = "mixed".into();
+    c
+}
+
+/// Enable the deterministic sensor-plane faults only (DVS + RGB); the
+/// service plane stays clean so outcomes remain digest-comparable.
+fn enable_sensor_faults(c: &mut SystemConfig, seed: u64) {
+    c.faults.enabled = true;
+    c.faults.seed = seed;
+    c.faults.dvs = true;
+    c.faults.rgb = true;
+    c.faults.npu = false;
+}
+
+/// (a) Faults disabled ⇒ the fault section is inert: digests are
+/// bit-identical no matter what the fault seed says, and every fault /
+/// recovery counter stays at zero.
+#[test]
+fn faults_off_is_bit_exact_and_counter_silent() {
+    let mut a_cfg = fleet_cfg(2, 3, 11);
+    a_cfg.faults.seed = 1;
+    let mut b_cfg = fleet_cfg(2, 3, 11);
+    b_cfg.faults.seed = 999; // must be unread while enabled = false
+    let a = run_fleet(&a_cfg).unwrap();
+    let b = run_fleet(&b_cfg).unwrap();
+    assert_eq!(
+        a.digest_hex(),
+        b.digest_hex(),
+        "disabled fault plan leaked into scenario outcomes"
+    );
+    for name in [
+        "faults_dvs_dropped",
+        "faults_dvs_injected",
+        "faults_rgb_faulted",
+        "faults_npu_errors",
+        "windower_late_dropped",
+        "recovery_timeouts",
+        "recovery_retries",
+        "recovery_failovers",
+        "recovery_quarantines",
+    ] {
+        assert_eq!(a.counter_total(name), 0, "clean run incremented {name}");
+    }
+    assert_eq!(a.recovery_escalations(), 0);
+}
+
+/// (b) Seeded sensor faults ⇒ one deterministic *faulted* digest,
+/// invariant across worker counts and simd lanes — and distinct from
+/// the clean digest (the faults really perturb the data).
+#[test]
+fn faulted_digest_is_deterministic_across_workers_and_simd() {
+    let clean = run_fleet(&fleet_cfg(2, 3, 42)).unwrap();
+    let mut digests = Vec::new();
+    for workers in [1usize, 4] {
+        for simd in ["off", "on"] {
+            let mut c = fleet_cfg(2, 3, 42);
+            enable_sensor_faults(&mut c, 7);
+            c.runtime.workers = workers;
+            c.runtime.simd = simd.into();
+            let r = run_fleet(&c).unwrap();
+            assert!(
+                r.counter_total("faults_dvs_injected") > 0,
+                "fault plan enabled but no DVS faults landed"
+            );
+            digests.push((workers, simd, r.digest_hex()));
+        }
+    }
+    for (workers, simd, d) in &digests[1..] {
+        assert_eq!(
+            d, &digests[0].2,
+            "faulted digest drifted at workers={workers} simd={simd}"
+        );
+    }
+    assert_ne!(
+        digests[0].2,
+        clean.digest_hex(),
+        "enabled faults left the scenario outcomes untouched"
+    );
+    // different fault seed ⇒ different faulted digest (the seed is live)
+    let mut c = fleet_cfg(2, 3, 42);
+    enable_sensor_faults(&mut c, 8);
+    let other = run_fleet(&c).unwrap();
+    assert_ne!(other.digest_hex(), digests[0].2);
+}
+
+/// (c) Satellite: injected stale events regress behind the windower's
+/// current window and must be dropped *and counted* — `late_dropped`
+/// is the boundary's early-warning signal, not a silent discard.
+#[test]
+fn stale_events_feed_the_late_drop_counter() {
+    let mut c = native_cfg();
+    c.faults.enabled = true;
+    c.faults.seed = 3;
+    c.faults.dvs = true;
+    c.faults.rgb = false;
+    c.faults.npu = false;
+    // isolate the stale-event fault: no drops, bursts, hot pixels or
+    // dead-time, and fire on every eligible window
+    c.faults.dvs_drop_prob = 0.0;
+    c.faults.dvs_dead_time_prob = 0.0;
+    c.faults.dvs_hot_pixels = 0;
+    c.faults.dvs_burst_prob = 0.0;
+    c.faults.dvs_stale_prob = 1.0;
+    let mut l = CognitiveLoop::new(&c, 21).unwrap();
+    let report = l.run_script(&[1.0, 1.0, 1.0]).unwrap();
+    assert_eq!(report.outcomes.len(), 3);
+    // windows 1 and 2 each inject a fixed stale batch into the previous
+    // window's span; window 0 has no predecessor
+    let late = l.metrics.windower_late_dropped.get();
+    assert!(late > 0, "stale events never reached the late-drop counter");
+    assert_eq!(
+        l.metrics.faults_dvs_injected.get(),
+        late,
+        "with only the stale fault armed, injected == late-dropped"
+    );
+    assert_eq!(late % 2, 0, "both eligible windows must contribute equally");
+}
+
+/// (d) Tentpole: an injected NPU hang must NOT wedge the loop — the
+/// reply deadline fires, the bounded retry also times out, and the
+/// stream fails over (stickily) to the artifact-free local backend,
+/// completing the run with the ladder stepped up and the counters
+/// accounting for every hop.
+#[test]
+fn npu_hang_recovers_via_timeout_retry_failover() {
+    let mut c = native_cfg();
+    c.npu.reply_deadline_ms = 800;
+    c.faults.enabled = true;
+    c.faults.seed = 5;
+    c.faults.dvs = false;
+    c.faults.rgb = false;
+    c.faults.npu = true;
+    c.faults.npu_spike_prob = 0.0;
+    c.faults.npu_error_prob = 0.0;
+    c.faults.npu_hang_after = 3; // calls 1-2 clean, call 3 onward hangs
+    c.faults.npu_hang_ms = 2_000; // > deadline: the hang looks infinite
+    c.faults.retry_max = 1;
+    c.faults.retry_backoff_ms = 1;
+    c.faults.failover = true;
+    c.faults.degrade_after = 2;
+    let mut l = CognitiveLoop::new(&c, 42).unwrap();
+
+    let report = l.run_script(&[1.0, 1.0, 1.0]).unwrap();
+    assert_eq!(report.outcomes.len(), 3, "run must complete through failover");
+    assert!(l.failed_over(), "hang survived the retry budget: failover expected");
+    assert_eq!(l.metrics.recovery_failovers.get(), 1);
+    assert_eq!(l.metrics.recovery_retries.get(), 1, "exactly one bounded retry");
+    assert!(
+        l.metrics.recovery_timeouts.get() >= 2,
+        "first wait and retry wait must both hit the deadline"
+    );
+    assert_eq!(
+        l.degrade_level(),
+        1,
+        "two recovery events at degrade_after=2 step the ladder to rung 1"
+    );
+    for o in &report.outcomes {
+        assert!(o.psnr_db.is_finite());
+    }
+
+    // continued clean service from the fallback steps the ladder back down
+    let more = l.run_script(&[1.0, 1.0, 1.0]).unwrap();
+    assert_eq!(more.outcomes.len(), 3);
+    assert!(l.failed_over(), "failover is sticky");
+    assert_eq!(l.metrics.recovery_failovers.get(), 1, "no second failover hop");
+    assert_eq!(l.degrade_level(), 0, "sustained clean streak recovers rung 0");
+}
+
+/// (e) Tentpole: with failover disabled, persistent service faults trip
+/// the per-stream circuit breaker — every stream is quarantined after
+/// `breaker_threshold` consecutive failures and the fleet run still
+/// terminates cleanly (no abort, no deadlock), reporting the
+/// quarantines and a `degraded` health verdict.
+#[test]
+fn circuit_breaker_quarantines_streams_without_wedging_the_fleet() {
+    let mut c = fleet_cfg(3, 4, 9);
+    c.runtime.workers = 3;
+    c.faults.enabled = true;
+    c.faults.seed = 2;
+    c.faults.dvs = false;
+    c.faults.rgb = false;
+    c.faults.npu = true;
+    c.faults.npu_spike_prob = 0.0;
+    c.faults.npu_error_prob = 1.0; // every infer call fails, instantly
+    c.faults.npu_hang_after = 0;
+    c.faults.retry_max = 0;
+    c.faults.failover = false;
+    c.faults.breaker_threshold = 2;
+    let report = run_fleet(&c).unwrap(); // Err here = the old fail-fast abort
+    assert_eq!(
+        report.counter_total("recovery_quarantines"),
+        3,
+        "every stream must trip its breaker exactly once"
+    );
+    assert_eq!(
+        report.counter_total("faults_npu_errors"),
+        6,
+        "each stream eats breaker_threshold=2 faulted windows, no more"
+    );
+    assert_eq!(report.total_windows(), 0, "no window survived a 100% fault rate");
+    assert!(report.recovery_escalations() >= 3);
+    assert_eq!(
+        report.health.state.as_str(),
+        "degraded",
+        "quarantine escalations must surface in the health verdict"
+    );
+    // the JSON surface carries the same story for `--json` consumers
+    let j = report.to_json();
+    let faults = j.get("aggregate").and_then(|a| a.get("faults")).expect("faults obj");
+    assert_eq!(
+        faults.get("recovery_quarantines").and_then(|v| v.as_f64()),
+        Some(3.0)
+    );
+}

@@ -101,6 +101,16 @@ else
     echo "verify: backend_parity target unavailable — skipping targeted run" >&2
 fi
 
+echo "== targeted: fault-recovery suite =="
+# The robustness contract (ISSUE 9): faults-off bit-exactness, seeded
+# faulted-digest determinism, hang -> timeout -> retry -> failover, and
+# circuit-breaker quarantine. Artifact-free by construction.
+if cargo test -q --test fault_recovery -- --list >/dev/null 2>&1; then
+    cargo test -q --test fault_recovery
+else
+    echo "verify: fault_recovery target unavailable — skipping targeted run" >&2
+fi
+
 echo "== determinism: native backend digest across workers x simd =="
 # Same end-to-end digest gate as the PJRT block below, but on the
 # artifact-free native-int8 backend — gated only on the CLI building.
@@ -121,6 +131,37 @@ if cargo build --release 2>/dev/null; then
         exit 1
     else
         echo "native-int8 digest invariant across workers 1/4 x simd off/on: $n1"
+    fi
+    # Fault-injection gate (ISSUE 9): the seeded sensor-fault plan must
+    # produce ONE deterministic faulted digest across workers x simd,
+    # and that digest must differ from the clean one (the plan is live).
+    f1=$(cargo run --release --quiet -- fleet --streams 2 --windows 4 \
+        --npu-backend native-int8 --artifacts /nonexistent-artifacts \
+        --faults sensor@7 --workers 1 --simd off --json 2>/dev/null \
+        | extract_digest_native || true)
+    f4=$(cargo run --release --quiet -- fleet --streams 2 --windows 4 \
+        --npu-backend native-int8 --artifacts /nonexistent-artifacts \
+        --faults sensor@7 --workers 4 --simd on --json 2>/dev/null \
+        | extract_digest_native || true)
+    if [ -z "$f1" ] || [ -z "$f4" ]; then
+        echo "verify: faulted fleet run produced no digest — skipping fault gate" >&2
+    elif [ "$f1" != "$f4" ]; then
+        echo "verify: FAULTED DIGEST DIVERGED ACROSS workers/simd: $f1 vs $f4" >&2
+        exit 1
+    elif [ -n "$n1" ] && [ "$f1" = "$n1" ]; then
+        echo "verify: FAULT PLAN INERT — faulted digest equals clean digest: $f1" >&2
+        exit 1
+    else
+        echo "seeded fault plan deterministic across workers 1/4 x simd off/on: $f1"
+    fi
+    # and the --json surface must carry the fault/recovery counters
+    if cargo run --release --quiet -- fleet --streams 2 --windows 4 \
+        --npu-backend native-int8 --artifacts /nonexistent-artifacts \
+        --faults sensor@7 --json 2>/dev/null | grep -q '"faults"'; then
+        echo "fault counters present in --json aggregate"
+    else
+        echo "verify: FAULT COUNTERS MISSING from --json aggregate" >&2
+        exit 1
     fi
     # Availability note, not a comparison: pjrt and native are different
     # numeric domains, so their digests are expected to differ — we only
