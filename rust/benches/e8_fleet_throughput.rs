@@ -13,7 +13,7 @@
 //! Run: `cargo bench --bench e8_fleet_throughput`
 
 use acelerador::config::SystemConfig;
-use acelerador::fleet::run_fleet;
+use acelerador::fleet::{run_fleet, FleetReport};
 use acelerador::jsonlite::Json;
 use acelerador::runtime::BackendKind;
 use acelerador::testkit::bench::{write_bench_artifact, Table};
@@ -32,6 +32,28 @@ fn base_cfg() -> SystemConfig {
         cfg.npu.backend = "native-int8".into();
     }
     cfg
+}
+
+/// Count-weighted mean of the `npu.batch_fill` histogram across every
+/// stream's telemetry snapshot (units are batch slots, not µs).
+fn mean_batch_fill(r: &FleetReport) -> f64 {
+    let mut n = 0.0f64;
+    let mut sum = 0.0f64;
+    for s in &r.streams {
+        let Some(h) =
+            s.telemetry.get("histograms").and_then(|h| h.get("npu.batch_fill"))
+        else {
+            continue;
+        };
+        let c = h.get("count").and_then(Json::as_f64).unwrap_or(0.0);
+        n += c;
+        sum += c * h.get("mean_us").and_then(Json::as_f64).unwrap_or(0.0);
+    }
+    if n > 0.0 {
+        sum / n
+    } else {
+        0.0
+    }
 }
 
 fn main() -> anyhow::Result<()> {
@@ -195,6 +217,68 @@ fn main() -> anyhow::Result<()> {
     }
     tb.print();
     println!();
+
+    // Shard × deadline sweep: split the same 4-stream lockstep fleet
+    // across shard executors while the adaptive batcher's gather deadline
+    // widens. The fleet digest must hold across the whole grid (sharding
+    // and batch composition are both observational); what moves is the
+    // measured side — batch fill and how occupancy distributes per shard.
+    println!("--- shard x batch-deadline sweep (4 streams, lockstep) ---");
+    let mut ts = Table::new(&[
+        "shards", "deadline µs", "win/s", "fill", "shard occ", "digest",
+    ]);
+    let mut shard_digests: Vec<String> = Vec::new();
+    for shards in [1usize, 2, 4] {
+        for deadline_us in [0u64, 2_000] {
+            let mut cfg = base_cfg();
+            cfg.fleet.streams = 4;
+            cfg.fleet.shards = shards;
+            cfg.npu.batch_deadline_us = deadline_us;
+            let r = run_fleet(&cfg)?;
+            shard_digests.push(r.digest_hex());
+            let per_shard: Vec<String> = r
+                .shard_rows()
+                .iter()
+                .map(|row| format!("{:.2}", row.occupancy))
+                .collect();
+            artifact_rows.push(Json::obj(vec![
+                ("mode", Json::str("shard-sweep")),
+                ("backend", Json::str(backend)),
+                ("streams", Json::num(4.0)),
+                ("shards", Json::num(shards as f64)),
+                ("batch_deadline_us", Json::num(deadline_us as f64)),
+                ("windows_per_sec", Json::num(r.windows_per_sec())),
+                ("batch_fill", Json::num(mean_batch_fill(&r))),
+                (
+                    "shard_occupancy",
+                    Json::arr(
+                        r.shard_rows()
+                            .iter()
+                            .map(|row| Json::num(row.occupancy))
+                            .collect(),
+                    ),
+                ),
+                ("digest", Json::str(&r.digest_hex())),
+            ]));
+            ts.row(&[
+                shards.to_string(),
+                deadline_us.to_string(),
+                format!("{:.1}", r.windows_per_sec()),
+                format!("{:.2}", mean_batch_fill(&r)),
+                per_shard.join("/"),
+                r.digest_hex(),
+            ]);
+        }
+    }
+    ts.print();
+    println!(
+        "({})\n",
+        if shard_digests.iter().all(|d| d == &shard_digests[0]) {
+            "identical digests across the grid = sharding and deadlines are observational"
+        } else {
+            "WARNING: digest diverged across the shard/deadline grid"
+        }
+    );
 
     // Admission control: cap in-flight windows below the stream count and
     // watch occupancy/backpressure trade against service latency.

@@ -67,6 +67,14 @@ pub struct NpuConfig {
     /// instead of blocking forever on a hung engine thread. Generous by
     /// default — tightened by fault-injection runs to drive failover.
     pub reply_deadline_ms: u64,
+    /// Adaptive batch-formation window (µs): with a nonzero deadline the
+    /// engine thread coalesces queued submissions up to the backend's
+    /// batch ceiling before executing, and an execute-time-fed controller
+    /// shrinks the effective window when the queue runs hot. 0 keeps the
+    /// legacy opportunistic drain (`batch_timeout_us`) bit-for-bit.
+    /// Batch composition never changes outputs, so any value preserves
+    /// every digest.
+    pub batch_deadline_us: u64,
 }
 
 impl Default for NpuConfig {
@@ -81,6 +89,7 @@ impl Default for NpuConfig {
             sparse_threshold: crate::snn::DEFAULT_SPARSE_THRESHOLD,
             backend: "auto".into(),
             reply_deadline_ms: 30_000,
+            batch_deadline_us: 0,
         }
     }
 }
@@ -195,6 +204,12 @@ pub struct FleetConfig {
     /// arrive together (maximizes batch occupancy and makes runs easy to
     /// reason about). `false` = free-running streams.
     pub lockstep: bool,
+    /// Shard executors the stream set splits across (stable contiguous
+    /// stream→shard mapping). Each shard owns its carrier threads and its
+    /// own drain lane into the shared NPU service; per-shard digests roll
+    /// up (sorted by shard id) into the fleet digest, which is
+    /// bit-identical across shard counts. 0 = single-shard today-path.
+    pub shards: usize,
 }
 
 impl Default for FleetConfig {
@@ -206,6 +221,7 @@ impl Default for FleetConfig {
             scenario_mix: "mixed".into(),
             max_inflight: 0,
             lockstep: true,
+            shards: 0,
         }
     }
 }
@@ -480,6 +496,7 @@ impl SystemConfig {
             read_f32(n, "sparse_threshold", &mut self.npu.sparse_threshold);
             read_string(n, "backend", &mut self.npu.backend);
             read_u64(n, "reply_deadline_ms", &mut self.npu.reply_deadline_ms);
+            read_u64(n, "batch_deadline_us", &mut self.npu.batch_deadline_us);
         }
         if let Some(i) = json.get("isp") {
             read_usize(i, "width", &mut self.isp.width);
@@ -517,6 +534,7 @@ impl SystemConfig {
             read_string(f, "scenario_mix", &mut self.fleet.scenario_mix);
             read_usize(f, "max_inflight", &mut self.fleet.max_inflight);
             read_bool(f, "lockstep", &mut self.fleet.lockstep);
+            read_usize(f, "shards", &mut self.fleet.shards);
         }
         if let Some(r) = json.get("runtime") {
             read_usize(r, "workers", &mut self.runtime.workers);
@@ -615,6 +633,13 @@ impl SystemConfig {
         if self.fleet.windows_per_stream == 0 {
             bail!("fleet: windows_per_stream must be > 0");
         }
+        if self.fleet.shards > self.fleet.streams {
+            bail!(
+                "fleet: shards ({}) must be <= streams ({}) — empty shards serve nothing",
+                self.fleet.shards,
+                self.fleet.streams
+            );
+        }
         let mixes = crate::fleet::profile::known_mixes();
         if !mixes.contains(&self.fleet.scenario_mix.as_str()) {
             bail!(
@@ -707,6 +732,10 @@ impl SystemConfig {
                         "reply_deadline_ms",
                         Json::num(self.npu.reply_deadline_ms as f64),
                     ),
+                    (
+                        "batch_deadline_us",
+                        Json::num(self.npu.batch_deadline_us as f64),
+                    ),
                 ]),
             ),
             (
@@ -754,6 +783,7 @@ impl SystemConfig {
                     ("scenario_mix", Json::str(&self.fleet.scenario_mix)),
                     ("max_inflight", Json::num(self.fleet.max_inflight as f64)),
                     ("lockstep", Json::Bool(self.fleet.lockstep)),
+                    ("shards", Json::num(self.fleet.shards as f64)),
                 ]),
             ),
             (
@@ -1015,7 +1045,7 @@ mod tests {
         let mut cfg = SystemConfig::default();
         let json = crate::jsonlite::parse(
             r#"{"fleet": {"streams": 8, "scenario_mix": "night",
-                          "max_inflight": 3, "lockstep": false}}"#,
+                          "max_inflight": 3, "lockstep": false, "shards": 2}}"#,
         )
         .unwrap();
         cfg.apply_json(&json).unwrap();
@@ -1023,6 +1053,7 @@ mod tests {
         assert_eq!(cfg.fleet.scenario_mix, "night");
         assert_eq!(cfg.fleet.max_inflight, 3);
         assert!(!cfg.fleet.lockstep);
+        assert_eq!(cfg.fleet.shards, 2);
         // untouched fleet fields keep defaults
         assert_eq!(cfg.fleet.windows_per_stream, 12);
         cfg.validate().unwrap();
@@ -1136,6 +1167,12 @@ mod tests {
         let mut cfg = SystemConfig::default();
         cfg.npu.reply_deadline_ms = 0;
         assert!(cfg.validate().is_err(), "zero deadline rejected");
+        let mut cfg = SystemConfig::default();
+        cfg.fleet.streams = 2;
+        cfg.fleet.shards = 3;
+        assert!(cfg.validate().is_err(), "more shards than streams rejected");
+        cfg.fleet.shards = 2;
+        cfg.validate().unwrap();
     }
 
     #[test]

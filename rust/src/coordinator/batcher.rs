@@ -32,13 +32,17 @@ use crate::trace::{
 };
 
 /// One inference result (per submitted window).
+///
+/// `rates`/`sparse_layers` describe the whole batch, so the engine
+/// decodes them once and every reply in the fan-out shares the same
+/// allocation via `Arc` — no per-request clone of per-layer vectors.
 #[derive(Debug, Clone)]
 pub struct InferReply {
     pub head: Vec<f32>,
-    pub rates: Vec<f32>,
+    pub rates: Arc<Vec<f32>>,
     /// Per-layer dispatch plan of the activity-adaptive NPU core (`true`
     /// = sparse event path; same indexing as `rates`).
-    pub sparse_layers: Vec<bool>,
+    pub sparse_layers: Arc<Vec<bool>>,
     /// PJRT execute time of the batch this request rode in.
     pub execute_us: f64,
     /// How many requests shared the batch.
@@ -86,6 +90,65 @@ fn fault_set(cell: &FaultCell, cause: &str) {
 /// Consecutive failed executes a fault-resilient engine tolerates before
 /// it concludes the backend is truly gone and stops the service.
 const RESILIENT_MAX_CONSEC_FAILURES: u32 = 32;
+
+/// Deadline-driven adaptive batch formation (`npu.batch_deadline_us`).
+///
+/// With a nonzero base deadline the engine holds each batch open for a
+/// gather window so submissions from many shards/carriers coalesce up to
+/// the backend's ceiling. The controller shrinks the window when the
+/// queue runs *hot* — the previous drain already hit the batch ceiling,
+/// so arrivals outpace the engine and waiting buys fill the queue would
+/// deliver anyway — capping it at a fraction of the EWMA-smoothed
+/// measured execute time so latency never pays for fill. Batch
+/// composition never changes outputs (PR 1 contract), so the controller
+/// is digest-neutral by construction; a base of 0 disables it and keeps
+/// the legacy `batch_timeout_us` drain bit-for-bit.
+struct DeadlineController {
+    base_us: u64,
+    /// EWMA of measured backend execute time (µs); 0 until the first
+    /// observation.
+    ewma_execute_us: f64,
+    /// Hot-queue latch: the previous drain filled the batch to the
+    /// ceiling before its window expired.
+    hot: bool,
+}
+
+/// EWMA smoothing factor for measured execute time.
+const DEADLINE_EWMA_ALPHA: f64 = 0.2;
+/// Hot-queue gather window as a fraction of one smoothed execute.
+const DEADLINE_HOT_FRACTION: f64 = 0.25;
+
+impl DeadlineController {
+    fn new(base_us: u64) -> Self {
+        Self { base_us, ewma_execute_us: 0.0, hot: false }
+    }
+
+    /// Whether adaptive formation is configured at all.
+    fn enabled(&self) -> bool {
+        self.base_us > 0
+    }
+
+    /// The gather window for the next batch.
+    fn window_us(&self) -> u64 {
+        let mut us = self.base_us as f64;
+        if self.hot && self.ewma_execute_us > 0.0 {
+            us = us.min(self.ewma_execute_us * DEADLINE_HOT_FRACTION);
+        }
+        (us as u64).max(1)
+    }
+
+    /// Feed one completed drain: the measured execute time and whether
+    /// the batch hit the ceiling (the hot-queue signal).
+    fn observe(&mut self, execute_us: f64, filled: bool) {
+        self.ewma_execute_us = if self.ewma_execute_us == 0.0 {
+            execute_us
+        } else {
+            (1.0 - DEADLINE_EWMA_ALPHA) * self.ewma_execute_us
+                + DEADLINE_EWMA_ALPHA * execute_us
+        };
+        self.hot = filled;
+    }
+}
 
 /// Cloneable submit handle to the NPU service.
 ///
@@ -293,6 +356,7 @@ fn engine_thread(
     };
     let max_batch = cfg.max_batch.min(backend.max_batch()).max(1);
     let timeout = Duration::from_micros(cfg.batch_timeout_us);
+    let mut ctrl = DeadlineController::new(cfg.batch_deadline_us);
     let mut consec_failures = 0u32;
 
     loop {
@@ -311,8 +375,15 @@ fn engine_thread(
         };
         let mut batch = vec![first];
         let mut stopping = false;
-        // …then give stragglers `batch_timeout` to join, up to max_batch.
-        let deadline = Instant::now() + timeout;
+        // …then hold the batch open for the gather window, up to
+        // max_batch: the adaptive deadline when configured, else the
+        // legacy opportunistic `batch_timeout`.
+        let window = if ctrl.enabled() {
+            Duration::from_micros(ctrl.window_us())
+        } else {
+            timeout
+        };
+        let deadline = Instant::now() + window;
         while batch.len() < max_batch {
             let now = Instant::now();
             if now >= deadline {
@@ -334,6 +405,7 @@ fn engine_thread(
             Ok(out) => {
                 consec_failures = 0;
                 let n = batch.len();
+                ctrl.observe(out.execute_us, n >= max_batch);
                 if let Some(t_exec0) = t_exec0 {
                     let t_exec1 = Instant::now();
                     let mut announced = false;
@@ -372,12 +444,17 @@ fn engine_thread(
                         }
                     }
                 }
+                // decode once, share across the fan-out: replies borrow
+                // the same rate/plan allocations instead of cloning them
+                // per request
+                let rates = Arc::new(out.rates);
+                let sparse_layers = Arc::new(out.sparse_layers);
                 for (req, head) in batch.into_iter().zip(out.heads.into_iter()) {
                     let service_us = req.submitted.elapsed().as_secs_f64() * 1e6;
                     let _ = req.reply.send(Ok(InferReply {
                         head,
-                        rates: out.rates.clone(),
-                        sparse_layers: out.sparse_layers.clone(),
+                        rates: Arc::clone(&rates),
+                        sparse_layers: Arc::clone(&sparse_layers),
                         execute_us: out.execute_us,
                         batch_size: n,
                         service_us,
@@ -648,6 +725,61 @@ mod tests {
                 msg.contains("injected npu error"),
                 "request {i}: engine died instead of staying resilient: {msg}"
             );
+        }
+    }
+
+    #[test]
+    fn deadline_controller_shrinks_when_hot_and_recovers() {
+        assert!(!DeadlineController::new(0).enabled());
+        let mut c = DeadlineController::new(2_000);
+        assert!(c.enabled());
+        assert_eq!(c.window_us(), 2_000, "cold queue holds the base window");
+        c.observe(400.0, true); // batch hit the ceiling: queue is hot
+        assert_eq!(c.window_us(), 100, "hot window = 25% of one execute");
+        c.observe(400.0, false); // queue cooled off
+        assert_eq!(c.window_us(), 2_000, "cool queue restores the base");
+        // the EWMA tracks execute time, so the hot window follows it
+        let mut c = DeadlineController::new(50_000);
+        c.observe(1_000.0, true);
+        let w1 = c.window_us();
+        for _ in 0..32 {
+            c.observe(8_000.0, true);
+        }
+        assert!(c.window_us() > w1, "hot window must follow rising execute time");
+        assert!(c.window_us() <= 50_000);
+    }
+
+    #[test]
+    fn adaptive_deadline_serves_identical_replies() {
+        let vox = voxelize(&DvsWindowSim::new(5).run().0);
+        let base = NpuService::start(&native_cfg("native-int8"))
+            .unwrap()
+            .infer_blocking(vox.clone())
+            .unwrap();
+        let mut c = native_cfg("native-int8");
+        c.batch_deadline_us = 3_000;
+        let got = NpuService::start(&c).unwrap().infer_blocking(vox).unwrap();
+        assert_eq!(got.head, base.head, "batch formation must not change outputs");
+        assert_eq!(*got.rates, *base.rates);
+        assert_eq!(*got.sparse_layers, *base.sparse_layers);
+    }
+
+    #[test]
+    fn replies_in_one_batch_share_decoded_output() {
+        let mut c = native_cfg("native-int8");
+        c.batch_deadline_us = 50_000; // generous gather so the pair fuses
+        let svc = NpuService::start(&c).unwrap();
+        svc.infer_blocking(voxelize(&DvsWindowSim::new(0).run().0)).unwrap();
+        let rx0 = svc.submit(voxelize(&DvsWindowSim::new(1).run().0));
+        let rx1 = svc.submit(voxelize(&DvsWindowSim::new(2).run().0));
+        let a = rx0.recv().unwrap().unwrap();
+        let b = rx1.recv().unwrap().unwrap();
+        if a.batch_size >= 2 {
+            assert!(
+                Arc::ptr_eq(&a.rates, &b.rates),
+                "fused replies must share one rates allocation"
+            );
+            assert!(Arc::ptr_eq(&a.sparse_layers, &b.sparse_layers));
         }
     }
 

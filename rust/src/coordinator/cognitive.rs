@@ -440,6 +440,9 @@ impl CognitiveLoop {
             .record_stage(PipeStage::Infer, reply.service_us);
         self.metrics.batches_executed.inc();
         self.metrics.npu_latency.record_us(reply.execute_us as u64);
+        // batch fill as a histogram over the batches this stream rode in
+        // (units are requests, not µs — the hist is just log-bucketed)
+        self.metrics.batch_fill.record_us(reply.batch_size as u64);
         self.metrics.snn_layers.record(&reply.rates, &reply.sparse_layers);
         Ok(reply)
     }
@@ -524,8 +527,8 @@ impl CognitiveLoop {
         let out = backend.infer(&[vox])?;
         Ok(InferReply {
             head: out.heads.into_iter().next().unwrap_or_default(),
-            rates: out.rates,
-            sparse_layers: out.sparse_layers,
+            rates: Arc::new(out.rates),
+            sparse_layers: Arc::new(out.sparse_layers),
             execute_us: out.execute_us,
             batch_size: 1,
             service_us: t0.elapsed().as_secs_f64() * 1e6,

@@ -24,12 +24,18 @@
 //!   shapes). Free-running mode measures the drifting-arrival regime.
 //! * **admission** — a counting gate bounds windows in flight across the
 //!   fleet (backpressure when the engine is the bottleneck).
+//! * **shards** — the stream set splits across N shard executors via a
+//!   stable stream→shard mapping ([`shard`]), each shard owning its
+//!   carrier threads and its own drain lane into the shared service;
+//!   per-shard digests roll up into one fleet digest that is
+//!   bit-identical across shard counts. 0 = single-shard today-path.
 //!
 //! Everything scenario-derived in the resulting [`report::FleetReport`] is
 //! bit-deterministic for a fixed seed; timing fields are measured.
 
 pub mod profile;
 pub mod report;
+pub mod shard;
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -40,12 +46,13 @@ use anyhow::{anyhow, Result};
 use crate::config::SystemConfig;
 use crate::coordinator::batcher::{NpuClient, NpuService};
 use crate::coordinator::CognitiveLoop;
-use crate::runtime::pool::{band_bounds, WorkerPool};
+use crate::runtime::pool::WorkerPool;
 use crate::trace::watchdog::{HealthReport, Watchdog};
 use crate::trace::{Category, Lane, TraceData, Tracer, WindowTraceId, SPAN_ROUND};
 
 pub use profile::{build_profiles, ScenarioKind, StreamProfile};
-pub use report::{FleetReport, StreamSummary};
+pub use report::{FleetReport, ShardRow, StreamSummary};
+pub use shard::{effective_shards, plan_shards, shard_of, ShardSpec};
 
 /// How long the batcher waits for the other lockstep streams' requests.
 /// Per-window scene simulation spreads arrivals by well under this, so a
@@ -175,7 +182,12 @@ pub fn run_fleet_with(cfg: &SystemConfig, tracer: Tracer) -> Result<FleetReport>
     let fleet = cfg.fleet.clone();
     let profiles = build_profiles(&fleet)?;
     let workers = cfg.runtime.resolve_workers();
-    let carriers = fleet.streams.min(workers).max(1);
+    // The shard plan: a stable contiguous stream→shard partition, each
+    // shard owning its carrier threads (at shards <= 1 this is exactly
+    // the unsharded fleet's min(streams, workers) carrier formula).
+    let shards = shard::effective_shards(&fleet);
+    let plan = shard::plan_shards(profiles, workers, shards);
+    let carriers: usize = plan.iter().map(|s| s.carriers).sum::<usize>().max(1);
 
     // Lockstep wants the whole rendezvous in one PJRT execute. Size the
     // batch target to the number of requests that can actually be in
@@ -221,43 +233,46 @@ pub fn run_fleet_with(cfg: &SystemConfig, tracer: Tracer) -> Result<FleetReport>
         .then(|| Arc::new(AdmissionGate::new(fleet.max_inflight)));
     let abort = Arc::new(AtomicBool::new(false));
 
-    // Contiguous deterministic partition of the streams over carriers.
-    let mut assignments: Vec<Vec<StreamProfile>> = Vec::with_capacity(carriers);
-    {
-        let bounds = band_bounds(profiles.len(), carriers);
-        let mut iter = profiles.into_iter();
-        for &(s0, s1) in &bounds {
-            assignments.push(iter.by_ref().take(s1 - s0).collect());
-        }
-    }
-
+    // Launch shard executors: each shard clones ONE client off the
+    // service — its own drain lane into the shared batcher — and spawns
+    // its carrier threads off that lane. Carrier ids stay fleet-global
+    // so every carrier keeps a unique trace lane, and the lockstep
+    // barrier spans all shards' carriers (fleet-level rendezvous keeps
+    // cross-shard windows fusing in one batch).
     let t0 = Instant::now();
-    let mut handles = Vec::with_capacity(assignments.len());
+    let mut handles = Vec::with_capacity(carriers);
     let mut spawn_err: Option<anyhow::Error> = None;
-    for (carrier_id, profs) in assignments.into_iter().enumerate() {
-        let client = svc.client();
-        let cfg = run_cfg.clone();
-        let barrier_c = barrier.clone();
-        let gate = gate.clone();
-        let abort_c = abort.clone();
-        let pool_c = band_pool.clone();
-        let tracer_c = tracer.clone();
-        let spawned = std::thread::Builder::new()
-            .name(format!("fleet-carrier-{carrier_id}"))
-            .spawn(move || {
-                run_carrier(cfg, profs, client, barrier_c, gate, abort_c, pool_c, carrier_id, tracer_c)
-            });
-        match spawned {
-            Ok(handle) => handles.push(handle),
-            Err(e) => {
-                // Release the carriers already spawned — they would wait
-                // forever on a rendezvous sized for the full set.
-                abort.store(true, Ordering::SeqCst);
-                if let Some(b) = &barrier {
-                    b.abort();
+    let mut carrier_id = 0usize;
+    'shards: for spec in plan {
+        let shard_id = spec.shard_id;
+        let lane = svc.client();
+        for profs in spec.carrier_assignments() {
+            let client = lane.clone();
+            let cfg = run_cfg.clone();
+            let barrier_c = barrier.clone();
+            let gate = gate.clone();
+            let abort_c = abort.clone();
+            let pool_c = band_pool.clone();
+            let tracer_c = tracer.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("fleet-s{shard_id}-c{carrier_id}"))
+                .spawn(move || {
+                    run_carrier(cfg, profs, client, barrier_c, gate, abort_c, pool_c, carrier_id, tracer_c)
+                });
+            carrier_id += 1;
+            match spawned {
+                Ok(handle) => handles.push(handle),
+                Err(e) => {
+                    // Release the carriers already spawned — they would
+                    // wait forever on a rendezvous sized for the full set.
+                    abort.store(true, Ordering::SeqCst);
+                    if let Some(b) = &barrier {
+                        b.abort();
+                    }
+                    spawn_err =
+                        Some(anyhow::Error::new(e).context("spawning fleet carrier"));
+                    break 'shards;
                 }
-                spawn_err = Some(anyhow::Error::new(e).context("spawning fleet carrier"));
-                break;
             }
         }
     }
@@ -364,6 +379,9 @@ fn run_carrier(
             l.load_factor =
                 (cfg.fleet.streams as f64 / cfg.fleet.max_inflight as f64).min(4.0);
         }
+        // measured-only gauge (excluded from the digest): the executor
+        // count this fleet ran under, exported as `fleet.shards`
+        l.metrics.fleet_shards.set(shard::effective_shards(&cfg.fleet) as u64);
         let script = prof.script(cfg.fleet.windows_per_stream);
         let outcomes = Vec::with_capacity(script.len());
         streams.push(StreamState {

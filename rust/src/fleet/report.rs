@@ -22,6 +22,7 @@ use crate::trace::watchdog::HealthReport;
 use crate::util::stats::Summary;
 
 use super::profile::StreamProfile;
+use super::shard;
 
 /// FNV-1a (64-bit) accumulator for the determinism digest.
 #[derive(Debug, Clone, Copy)]
@@ -88,6 +89,10 @@ pub struct StreamSummary {
     /// The stream's `SystemMetrics` snapshot (measured; excluded from the
     /// digest).
     pub metrics: Json,
+    /// The stream's flattened telemetry-registry snapshot (dotted metric
+    /// names — `npu.batch_fill`, `fleet.shards`, ... — the same section
+    /// `run --trace` grafts into its export; measured, never digested).
+    pub telemetry: Json,
 }
 
 impl StreamSummary {
@@ -126,6 +131,7 @@ impl StreamSummary {
             service_us,
             digest: digest.value(),
             metrics: metrics.snapshot(),
+            telemetry: metrics.registry().snapshot(),
         }
     }
 
@@ -159,8 +165,23 @@ impl StreamSummary {
             ("service_p99_us", Json::num(p99)),
             ("digest", Json::str(&format!("{:016x}", self.digest))),
             ("metrics", self.metrics.clone()),
+            ("telemetry", self.telemetry.clone()),
         ])
     }
+}
+
+/// One shard executor's report row. The stream count, window count, and
+/// digest are deterministic; occupancy is measured (window-weighted mean
+/// NPU batch size across the shard's streams).
+#[derive(Debug, Clone)]
+pub struct ShardRow {
+    pub shard_id: usize,
+    pub streams: usize,
+    pub windows: usize,
+    pub occupancy: f64,
+    /// This shard's fold of its streams' (stream_id, digest) pairs in
+    /// stream-id order — the unit that rolls up into the fleet digest.
+    pub digest: u64,
 }
 
 /// The fleet-level aggregate.
@@ -459,6 +480,64 @@ impl FleetReport {
         self.counter_total("recovery_failovers") + self.counter_total("recovery_quarantines")
     }
 
+    /// The shard count this report's config resolves to (0 = 1).
+    pub fn effective_shards(&self) -> usize {
+        shard::effective_shards(&self.cfg)
+    }
+
+    /// Per-shard report rows: streams grouped by the stable
+    /// [`shard::shard_of`] mapping, each row carrying the shard's own
+    /// (stream_id, digest) fold. Sorted by shard id.
+    pub fn shard_rows(&self) -> Vec<ShardRow> {
+        let shards = self.effective_shards();
+        let mut rows: Vec<ShardRow> = (0..shards)
+            .map(|shard_id| ShardRow {
+                shard_id,
+                streams: 0,
+                windows: 0,
+                occupancy: 0.0,
+                digest: 0,
+            })
+            .collect();
+        let mut folds: Vec<Digest> = vec![Digest::new(); shards];
+        for s in &self.streams {
+            let sid = shard::shard_of(s.stream_id, self.cfg.streams, shards);
+            let row = &mut rows[sid];
+            row.streams += 1;
+            row.windows += s.windows;
+            row.occupancy += s.mean_occupancy * s.windows as f64;
+            folds[sid].u64(s.stream_id as u64);
+            folds[sid].u64(s.digest);
+        }
+        for (row, fold) in rows.iter_mut().zip(&folds) {
+            if row.windows > 0 {
+                row.occupancy /= row.windows as f64;
+            }
+            row.digest = fold.value();
+        }
+        rows
+    }
+
+    /// The rolled-up fleet digest: each shard's (stream_id, digest) pair
+    /// sequence replayed into one accumulator in shard-id order. Because
+    /// shards partition the stream-id space contiguously, this replays
+    /// the exact fold sequence of [`FleetReport::digest`] — the rollup is
+    /// bit-identical to the unsharded fleet digest at every shard count
+    /// (pinned by `rollup_digest_matches_fleet_digest`).
+    pub fn rollup_digest(&self) -> u64 {
+        let shards = self.effective_shards();
+        let mut d = Digest::new();
+        for shard_id in 0..shards {
+            for s in &self.streams {
+                if shard::shard_of(s.stream_id, self.cfg.streams, shards) == shard_id {
+                    d.u64(s.stream_id as u64);
+                    d.u64(s.digest);
+                }
+            }
+        }
+        d.value()
+    }
+
     /// Order-independent-by-construction fleet digest: streams are folded
     /// in stream-id order, each contributing its own deterministic digest.
     pub fn digest(&self) -> u64 {
@@ -493,6 +572,7 @@ impl FleetReport {
                     ("scenario_mix", Json::str(&self.cfg.scenario_mix)),
                     ("max_inflight", Json::num(self.cfg.max_inflight as f64)),
                     ("lockstep", Json::Bool(self.cfg.lockstep)),
+                    ("shards", Json::num(self.effective_shards() as f64)),
                 ]),
             ),
             (
@@ -506,6 +586,26 @@ impl FleetReport {
                     ("service_p95_us", Json::num(p95)),
                     ("service_p99_us", Json::num(p99)),
                     ("digest", Json::str(&self.digest_hex())),
+                    (
+                        "shards",
+                        Json::arr(
+                            self.shard_rows()
+                                .iter()
+                                .map(|r| {
+                                    Json::obj(vec![
+                                        ("shard", Json::num(r.shard_id as f64)),
+                                        ("streams", Json::num(r.streams as f64)),
+                                        ("windows", Json::num(r.windows as f64)),
+                                        ("occupancy", Json::num(r.occupancy)),
+                                        (
+                                            "digest",
+                                            Json::str(&format!("{:016x}", r.digest)),
+                                        ),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
                     ("pool", {
                         let (workers, runs, tasks, utilization) = self.pool_row();
                         Json::obj(vec![
@@ -651,6 +751,26 @@ impl FleetReport {
                 dense.to_string(),
             ]);
         }
+        // shard table only when actually sharded — single-shard runs keep
+        // the report byte-stable with shard-unaware builds
+        let shard_block = if self.effective_shards() > 1 {
+            let mut t = Table::new(&["shard", "streams", "windows", "occ", "digest"]);
+            for r in self.shard_rows() {
+                t.row(&[
+                    r.shard_id.to_string(),
+                    r.streams.to_string(),
+                    r.windows.to_string(),
+                    format!("{:.2}", r.occupancy),
+                    format!("{:016x}", r.digest),
+                ]);
+            }
+            format!(
+                "\nper-shard execution (shard digests roll up to the fleet digest):\n{}",
+                t.render()
+            )
+        } else {
+            String::new()
+        };
         let (workers, runs, tasks, utilization) = self.pool_row();
         // faults/recovery line only when something actually fired — clean
         // runs keep the report byte-stable with fault-unaware builds
@@ -674,7 +794,8 @@ impl FleetReport {
              \npipeline dataflow (feedback latency {} frames; occupancy = stage busy /\n\
              tick wall — pipelined stages sum above 1.0):\n{}\
              \nper-stage ISP timing (frame-weighted means across streams):\n{}\
-             \nper-layer SNN spike rate + dispatch (window-weighted across streams):\n{}",
+             \nper-layer SNN spike rate + dispatch (window-weighted across streams):\n{}\
+             {shard_block}",
             table.render(),
             self.streams.len(),
             self.cfg.windows_per_stream,
@@ -924,6 +1045,7 @@ mod tests {
             tasks: 20,
             busy_us: 100.0,
             span_us: 50.0,
+            simd_lanes: 1,
         });
         let m1 = SystemMetrics::new();
         m1.pool.record(&crate::runtime::pool::PoolStats {
@@ -932,6 +1054,7 @@ mod tests {
             tasks: 36,
             busy_us: 200.0,
             span_us: 100.0,
+            simd_lanes: 1,
         });
         let s0 = StreamSummary::from_outcomes(&prof(0), &[outcome(0, 10, 30.0, 1)], &m0);
         let s1 = StreamSummary::from_outcomes(&prof(1), &[outcome(0, 20, 28.0, 1)], &m1);
@@ -974,6 +1097,83 @@ mod tests {
         let r = FleetReport::assemble(FleetConfig::default(), vec![s0], 0.5);
         assert_eq!(r.recovery_escalations(), 0);
         assert!(!r.render().contains("faults/recovery:"));
+    }
+
+    #[test]
+    fn shard_rows_group_streams_and_rollup_matches_digest() {
+        let cfg = FleetConfig { streams: 3, shards: 2, ..Default::default() };
+        let s0 = summary(0, &[outcome(0, 10, 30.0, 1), outcome(1, 10, 30.0, 3)]);
+        let s1 = summary(1, &[outcome(0, 20, 28.0, 2)]);
+        let s2 = summary(2, &[outcome(0, 30, 29.0, 2)]);
+        let r = FleetReport::assemble(cfg, vec![s2, s0, s1], 1.0);
+        let rows = r.shard_rows();
+        assert_eq!(rows.len(), 2);
+        // band_bounds(3, 2) = [(0, 2), (2, 3)]: streams 0+1 then stream 2
+        assert_eq!((rows[0].streams, rows[0].windows), (2, 3));
+        assert_eq!((rows[1].streams, rows[1].windows), (1, 1));
+        // window-weighted occupancy: (1 + 3 + 2) / 3
+        assert!((rows[0].occupancy - 2.0).abs() < 1e-12, "got {}", rows[0].occupancy);
+        assert_ne!(rows[0].digest, rows[1].digest, "shard folds must differ");
+        assert_eq!(
+            r.rollup_digest(),
+            r.digest(),
+            "shard rollup must replay the exact fleet fold sequence"
+        );
+    }
+
+    #[test]
+    fn single_shard_row_carries_the_fleet_digest() {
+        let s0 = summary(0, &[outcome(0, 10, 30.0, 2)]);
+        let s1 = summary(1, &[outcome(0, 12, 31.0, 2)]);
+        let r = FleetReport::assemble(FleetConfig::default(), vec![s0, s1], 0.5);
+        let rows = r.shard_rows();
+        assert_eq!(rows.len(), 1, "shards=0 is the single-shard today-path");
+        assert_eq!(rows[0].digest, r.digest(), "one shard's fold IS the fleet fold");
+        assert_eq!(r.rollup_digest(), r.digest());
+    }
+
+    #[test]
+    fn shard_rows_surface_in_json_and_render() {
+        let cfg = FleetConfig { streams: 2, shards: 2, ..Default::default() };
+        let s0 = summary(0, &[outcome(0, 10, 30.0, 2)]);
+        let s1 = summary(1, &[outcome(0, 20, 28.0, 2)]);
+        let r = FleetReport::assemble(cfg, vec![s0, s1], 1.0);
+        let j = r.to_json();
+        assert_eq!(
+            j.get("fleet").unwrap().get("shards").unwrap().as_usize(),
+            Some(2)
+        );
+        let arr = j
+            .get("aggregate")
+            .unwrap()
+            .get("shards")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(arr.len(), 2);
+        let want = format!("{:016x}", r.shard_rows()[1].digest);
+        assert_eq!(arr[1].get("digest").unwrap().as_str(), Some(want.as_str()));
+        // each stream summary carries the registry view with dotted names
+        // (the section fleet --trace grafts into its export)
+        let tele = j.get("streams").unwrap().as_arr().unwrap()[0]
+            .get("telemetry")
+            .expect("stream summary must carry a telemetry section");
+        assert!(
+            tele.get("histograms").unwrap().get("npu.batch_fill").is_some(),
+            "telemetry must carry the npu.batch_fill histogram"
+        );
+        assert!(tele.get("gauges").unwrap().get("fleet.shards").is_some());
+        assert!(r.render().contains("per-shard execution"));
+        // single-shard reports stay byte-stable: no shard table
+        let single = FleetReport::assemble(
+            FleetConfig { streams: 2, shards: 0, ..Default::default() },
+            vec![
+                summary(0, &[outcome(0, 10, 30.0, 2)]),
+                summary(1, &[outcome(0, 20, 28.0, 2)]),
+            ],
+            1.0,
+        );
+        assert!(!single.render().contains("per-shard execution"));
     }
 
     #[test]

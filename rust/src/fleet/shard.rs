@@ -1,0 +1,183 @@
+//! Shard executors: the stable stream→shard partition of the fleet.
+//!
+//! At millions-of-users scale one lockstep carrier set stops being a
+//! useful unit of ownership — admission, eviction, and rollout all want
+//! a smaller blast radius. A **shard** is that unit: a contiguous slice
+//! of the stream-id space with its own carrier threads and its own drain
+//! lane (a dedicated [`NpuClient`] clone) into the shared NPU service.
+//! `fleet.shards` / `--shards` selects the executor count; 0 keeps the
+//! single-shard today-path.
+//!
+//! Three properties make sharding safe to turn on anywhere:
+//!
+//! * **The mapping is stable.** `shard_of` is a pure function of
+//!   (stream index, stream count, shard count) — the same contiguous
+//!   [`band_bounds`] partition both compute planes use — so a stream
+//!   never migrates between shards across runs, worker counts, or SIMD
+//!   modes.
+//! * **Results are shard-independent.** Each stream owns its sim /
+//!   sensor / ISP / policy state and NPU batch composition never changes
+//!   outputs, so per-stream outcomes are bit-identical for every shard
+//!   count.
+//! * **Digests roll up.** Each shard folds its streams' (id, digest)
+//!   pairs in id order; rolling the shard folds up sorted by shard id
+//!   replays the exact fold sequence of the unsharded fleet digest —
+//!   one fleet digest, bit-identical across shard counts
+//!   (`tests/shard_parity.rs` holds the contract).
+
+use crate::config::FleetConfig;
+use crate::runtime::pool::band_bounds;
+
+use super::profile::StreamProfile;
+
+/// The effective executor count: `fleet.shards` with 0 meaning the
+/// single-shard today-path, clamped to the stream count (validation
+/// rejects oversharded configs; the clamp keeps library callers safe).
+pub fn effective_shards(fleet: &FleetConfig) -> usize {
+    fleet.shards.max(1).min(fleet.streams.max(1))
+}
+
+/// Stable stream→shard mapping: which shard owns stream index
+/// `stream_idx` in a fleet of `streams` streams split `shards` ways.
+/// Pure and config-derived — carrier scheduling never feeds into it.
+pub fn shard_of(stream_idx: usize, streams: usize, shards: usize) -> usize {
+    let bounds = band_bounds(streams, shards.max(1));
+    bounds
+        .iter()
+        .position(|&(s0, s1)| stream_idx >= s0 && stream_idx < s1)
+        .unwrap_or(bounds.len().saturating_sub(1))
+}
+
+/// One shard executor's plan: its stream slice and carrier budget.
+#[derive(Debug)]
+pub struct ShardSpec {
+    pub shard_id: usize,
+    /// This shard's contiguous stream slice, in stream-id order.
+    pub profiles: Vec<StreamProfile>,
+    /// Carrier threads this shard owns (>= 1 — an executor with no
+    /// carriers could never drain its streams).
+    pub carriers: usize,
+}
+
+impl ShardSpec {
+    /// Contiguous deterministic partition of this shard's streams over
+    /// its carriers (the same scheme the unsharded fleet used globally).
+    pub fn carrier_assignments(self) -> Vec<Vec<StreamProfile>> {
+        let mut out = Vec::with_capacity(self.carriers);
+        let bounds = band_bounds(self.profiles.len(), self.carriers);
+        let mut iter = self.profiles.into_iter();
+        for &(s0, s1) in &bounds {
+            out.push(iter.by_ref().take(s1 - s0).collect());
+        }
+        out
+    }
+}
+
+/// Split the profile set across `shards` executors and give each a
+/// carrier budget from the fleet-wide `workers` allowance: every shard
+/// gets `max(1, workers / shards)` carrier slots, capped by its own
+/// stream count. At `shards == 1` this reduces exactly to the unsharded
+/// fleet's `min(streams, workers).max(1)` carrier formula.
+pub fn plan_shards(
+    profiles: Vec<StreamProfile>,
+    workers: usize,
+    shards: usize,
+) -> Vec<ShardSpec> {
+    let shards = shards.max(1).min(profiles.len().max(1));
+    let share = (workers / shards).max(1);
+    let bounds = band_bounds(profiles.len(), shards);
+    let mut iter = profiles.into_iter();
+    bounds
+        .iter()
+        .enumerate()
+        .map(|(shard_id, &(s0, s1))| {
+            let profiles: Vec<StreamProfile> = iter.by_ref().take(s1 - s0).collect();
+            let carriers = profiles.len().min(share).max(1);
+            ShardSpec { shard_id, profiles, carriers }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::build_profiles;
+
+    fn fleet(streams: usize, shards: usize) -> FleetConfig {
+        FleetConfig { streams, shards, ..Default::default() }
+    }
+
+    #[test]
+    fn effective_shards_clamps_and_defaults() {
+        assert_eq!(effective_shards(&fleet(8, 0)), 1, "0 = single-shard today-path");
+        assert_eq!(effective_shards(&fleet(8, 3)), 3);
+        assert_eq!(effective_shards(&fleet(2, 5)), 2, "clamped to stream count");
+    }
+
+    #[test]
+    fn mapping_is_stable_contiguous_and_total() {
+        // every stream lands on exactly one shard, shards are contiguous
+        // id ranges, and re-asking never moves a stream
+        for (streams, shards) in [(10, 3), (4, 4), (7, 2), (5, 1)] {
+            let mut last = 0usize;
+            for idx in 0..streams {
+                let s = shard_of(idx, streams, shards);
+                assert!(s < shards, "{streams}/{shards}: shard {s} out of range");
+                assert!(s >= last, "{streams}/{shards}: mapping not monotone");
+                last = s;
+                assert_eq!(s, shard_of(idx, streams, shards), "mapping must be pure");
+            }
+            assert_eq!(last, shards - 1, "{streams}/{shards}: trailing shard empty");
+        }
+    }
+
+    #[test]
+    fn plan_matches_mapping_and_keeps_stream_order() {
+        let profiles = build_profiles(&fleet(10, 0)).unwrap();
+        let plan = plan_shards(profiles, 4, 3);
+        assert_eq!(plan.len(), 3);
+        let mut seen = 0usize;
+        for spec in &plan {
+            assert!(spec.carriers >= 1);
+            for p in &spec.profiles {
+                assert_eq!(p.stream_id, seen, "stream order must be preserved");
+                assert_eq!(
+                    shard_of(p.stream_id, 10, 3),
+                    spec.shard_id,
+                    "plan and shard_of disagree on stream {}",
+                    p.stream_id
+                );
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, 10, "plan dropped streams");
+    }
+
+    #[test]
+    fn single_shard_plan_reduces_to_unsharded_carriers() {
+        for (streams, workers) in [(4usize, 2usize), (2, 8), (6, 6), (3, 1)] {
+            let profiles = build_profiles(&fleet(streams, 0)).unwrap();
+            let plan = plan_shards(profiles, workers, 1);
+            assert_eq!(plan.len(), 1);
+            assert_eq!(
+                plan[0].carriers,
+                streams.min(workers).max(1),
+                "{streams} streams / {workers} workers"
+            );
+        }
+    }
+
+    #[test]
+    fn carrier_assignments_are_contiguous_and_complete() {
+        let profiles = build_profiles(&fleet(7, 0)).unwrap();
+        let mut plan = plan_shards(profiles, 8, 2);
+        let spec = plan.remove(1);
+        let carriers = spec.carriers;
+        let ids: Vec<usize> = spec.profiles.iter().map(|p| p.stream_id).collect();
+        let assigned = spec.carrier_assignments();
+        assert_eq!(assigned.len(), carriers);
+        let flat: Vec<usize> =
+            assigned.iter().flatten().map(|p| p.stream_id).collect();
+        assert_eq!(flat, ids, "carrier split must preserve the shard's stream order");
+    }
+}

@@ -50,6 +50,8 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "mix", help: "fleet: scenario mix (mixed|day|night|dusk|tunnel|flicker)", is_switch: false, default: Some("mixed") },
         FlagSpec { name: "max-inflight", help: "fleet: admission limit (0 = unbounded)", is_switch: false, default: Some("0") },
         FlagSpec { name: "free-run", help: "fleet: disable per-window lockstep", is_switch: true, default: None },
+        FlagSpec { name: "shards", help: "fleet: shard executors splitting the stream set (stable contiguous stream->shard mapping; each shard owns its carrier threads and its own drain lane into the shared NPU service; 0 = single-shard today-path). Per-shard digests roll up to ONE fleet digest, bit-identical across shard counts", is_switch: false, default: None },
+        FlagSpec { name: "batch-deadline", help: "NPU batcher gather deadline in µs: coalesce submissions up to the backend's max batch inside this window before executing; a controller fed by measured execute time shrinks the window when the queue runs hot (consecutive full batches). 0 = legacy opportunistic drain, bit-for-bit. Batch composition never changes outputs, so digests are identical for every value", is_switch: false, default: None },
         FlagSpec { name: "json", help: "run/fleet: emit machine-readable JSON instead of tables", is_switch: true, default: None },
         FlagSpec { name: "isp-stages", help: "ISP stage mask: \"all\", a list of stages to enable (dpc,awb,demosaic,nlm,gamma,csc), or -stage terms to drop from the full graph (e.g. \"-nlm,-csc\")", is_switch: false, default: None },
         FlagSpec { name: "sparse-threshold", help: "SNN activity-adaptive dispatch threshold: spike rate (0..1) above which the NPU plans a layer onto the dense kernel instead of the event-driven sparse path (outputs are identical either way; drives the sparse/dense split reported in metrics and the fleet report)", is_switch: false, default: None },
@@ -101,6 +103,11 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     }
     if let Some(spec) = args.explicit("faults") {
         acelerador::faults::apply_spec(&mut cfg.faults, spec)?;
+    }
+    if let Some(d) = args.explicit("batch-deadline") {
+        cfg.npu.batch_deadline_us = d.parse().map_err(|_| {
+            anyhow::anyhow!("--batch-deadline must be a non-negative µs count")
+        })?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -255,23 +262,46 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if args.has("free-run") {
         cfg.fleet.lockstep = false;
     }
+    if args.explicit("shards").is_some() {
+        cfg.fleet.shards = args.get_usize("shards")?;
+    }
     cfg.validate()?;
     if !args.has("json") {
         println!(
-            "fleet: backbone={} backend={} streams={} windows/stream={} mix={} lockstep={} feedback_latency={}",
+            "fleet: backbone={} backend={} streams={} windows/stream={} mix={} lockstep={} shards={} feedback_latency={}",
             cfg.npu.backbone,
             cfg.npu.resolve_backend().name(),
             cfg.fleet.streams,
             cfg.fleet.windows_per_stream,
             cfg.fleet.scenario_mix,
             cfg.fleet.lockstep,
+            acelerador::fleet::effective_shards(&cfg.fleet),
             cfg.loop_.feedback_latency
         );
     }
     let (trace_out, sink, tracer) = make_tracer(args, &cfg);
     let report = fleet::run_fleet_with(&cfg, tracer)?;
     if let (Some(path), Some(s)) = (&trace_out, &sink) {
-        write_trace(path, s, vec![("health", report.health.to_json())])?;
+        use acelerador::jsonlite::Json;
+        // per-stream registry views (dotted names: npu.batch_fill,
+        // fleet.shards, ...) — the fleet analogue of run's telemetry graft
+        let telemetry = Json::arr(
+            report
+                .streams
+                .iter()
+                .map(|st| {
+                    Json::obj(vec![
+                        ("stream", Json::num(st.stream_id as f64)),
+                        ("registry", st.telemetry.clone()),
+                    ])
+                })
+                .collect(),
+        );
+        write_trace(
+            path,
+            s,
+            vec![("telemetry", telemetry), ("health", report.health.to_json())],
+        )?;
         if !args.has("json") {
             println!("trace: {} events ({} dropped) -> {path}", s.len(), s.dropped_events());
         }

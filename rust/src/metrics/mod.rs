@@ -660,6 +660,12 @@ pub struct SystemMetrics {
     /// `BackendKind::gauge_id` encoding (0 = pjrt, 1 = native-f32,
     /// 2 = native-int8).
     pub npu_backend: Gauge,
+    /// Shard executors the fleet ran under (1 standalone / single-shard).
+    pub fleet_shards: Gauge,
+    /// NPU batch fill: a histogram over the batch sizes (requests per
+    /// execute, not µs) this loop's windows rode in — the adaptive
+    /// batcher's fill distribution, beyond what the mean occupancy shows.
+    pub batch_fill: LatencyHist,
     pub npu_latency: LatencyHist,
     pub e2e_latency: LatencyHist,
     pub isp_latency: LatencyHist,
@@ -721,6 +727,17 @@ impl SystemMetrics {
         r.counter("recovery.quarantines", self.recovery_quarantines.get());
         r.gauge("npu.queue_depth", self.queue_depth.get() as f64);
         r.gauge("npu.backend", self.npu_backend.get() as f64);
+        r.gauge("fleet.shards", self.fleet_shards.get() as f64);
+        // units are batch slots, not µs — the log-bucketed hist still
+        // gives exact small-integer percentiles
+        r.histogram(
+            "npu.batch_fill",
+            self.batch_fill.count(),
+            self.batch_fill.mean_us(),
+            self.batch_fill.pct_us(50.0),
+            self.batch_fill.pct_us(95.0),
+            self.batch_fill.pct_us(99.0),
+        );
         for (name, h) in [
             ("latency.npu", &self.npu_latency),
             ("latency.e2e", &self.e2e_latency),
@@ -823,6 +840,7 @@ impl SystemMetrics {
                 Json::obj(vec![
                     ("queue_depth", Json::num(self.queue_depth.get() as f64)),
                     ("npu_backend", Json::num(self.npu_backend.get() as f64)),
+                    ("fleet_shards", Json::num(self.fleet_shards.get() as f64)),
                 ]),
             ),
             (
@@ -831,6 +849,7 @@ impl SystemMetrics {
                     ("npu_latency", self.npu_latency.snapshot()),
                     ("e2e_latency", self.e2e_latency.snapshot()),
                     ("isp_latency", self.isp_latency.snapshot()),
+                    ("batch_fill", self.batch_fill.snapshot()),
                 ]),
             ),
             (ISP_STAGES_KEY, self.isp_stages.snapshot()),
@@ -1134,6 +1153,16 @@ mod tests {
         assert!(r.get("isp.stage.nlm.frames").is_some());
         assert!(r.get("pipe.stage.sense.windows").is_some());
         assert!(r.get("pool.utilization").is_some());
+        assert!(r.get("fleet.shards").is_some());
+        m.batch_fill.record_us(2);
+        m.batch_fill.record_us(4);
+        match &m.registry().get("npu.batch_fill").expect("npu.batch_fill").value {
+            MetricValue::Histogram { count, p50_us, .. } => {
+                assert_eq!(*count, 2);
+                assert!(*p50_us >= 2, "batch-fill percentiles carry batch slots");
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
         // the snapshot carries the registry under the shared key
         let j = m.snapshot();
         let tel = j.get(TELEMETRY_KEY).expect("snapshot must carry telemetry");

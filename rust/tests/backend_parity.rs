@@ -63,10 +63,10 @@ fn native_int8_service_is_value_exact_vs_forward_int() {
         let reply = svc.infer_blocking(vox.clone()).unwrap();
         assert_eq!(reply.head, head.data, "seed {seed}: head mismatch");
         let want_rates: Vec<f32> = stats.rates().iter().map(|&r| r as f32).collect();
-        assert_eq!(reply.rates, want_rates, "seed {seed}: rates mismatch");
+        assert_eq!(*reply.rates, want_rates, "seed {seed}: rates mismatch");
         let input_rate = vox.occupancy() as f32 / vox.len() as f32;
         assert_eq!(
-            reply.sparse_layers,
+            *reply.sparse_layers,
             dispatch_plan(cfg.npu.sparse_threshold, input_rate, &want_rates),
             "seed {seed}: dispatch plan mismatch"
         );
@@ -86,7 +86,7 @@ fn native_f32_service_is_value_exact_vs_backbone_forward() {
         let reply = svc.infer_blocking(vox).unwrap();
         assert_eq!(reply.head, head.data, "seed {seed}: head mismatch");
         let want_rates: Vec<f32> = stats.rates().iter().map(|&r| r as f32).collect();
-        assert_eq!(reply.rates, want_rates, "seed {seed}: rates mismatch");
+        assert_eq!(*reply.rates, want_rates, "seed {seed}: rates mismatch");
     }
 }
 

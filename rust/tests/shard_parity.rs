@@ -1,0 +1,158 @@
+//! Sharded fleet execution parity (ISSUE 10).
+//!
+//! Everything runs on the artifact-free native-int8 backend, so the whole
+//! suite is unconditional. Pinned contracts:
+//!
+//! * ONE fleet digest across shard counts {1, 2, 4} × workers {1, 4} ×
+//!   simd {off, on} — the stream→shard mapping is stable and per-stream
+//!   results are shard-independent, so re-slicing the fleet can never
+//!   move the digest;
+//! * the deadline-driven adaptive batcher (`npu.batch_deadline_us`) never
+//!   changes digests — batch composition is observational;
+//! * `--shards 1` with deadline 0 reproduces the default config's fleet
+//!   output bit-exactly (same fleet digest, same per-stream digests and
+//!   deterministic counts), faults off;
+//! * per-shard report rows partition the streams and their digests roll
+//!   up to exactly the fleet digest.
+
+use acelerador::config::SystemConfig;
+use acelerador::fleet::run_fleet;
+
+fn base_cfg() -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.npu.backbone = "spiking_mobilenet".into(); // smallest: fastest tests
+    cfg.npu.artifacts_dir = "/nonexistent-artifacts".into(); // synthetic weights
+    cfg.npu.backend = "native-int8".into();
+    cfg.fleet.streams = 4;
+    cfg.fleet.windows_per_stream = 2;
+    cfg.fleet.base_seed = 99;
+    cfg
+}
+
+#[test]
+fn fleet_digest_invariant_across_shards_workers_and_simd() {
+    let mut digests = Vec::new();
+    for shards in [1usize, 2, 4] {
+        for workers in [1usize, 4] {
+            for simd in ["off", "on"] {
+                let mut cfg = base_cfg();
+                cfg.fleet.shards = shards;
+                cfg.runtime.workers = workers;
+                cfg.runtime.simd = simd.into();
+                let report = run_fleet(&cfg).unwrap();
+                assert_eq!(
+                    report.shard_rows().len(),
+                    shards,
+                    "report must carry one row per shard"
+                );
+                assert_eq!(
+                    report.rollup_digest(),
+                    report.digest(),
+                    "shards={shards}: shard rollup must equal the fleet digest"
+                );
+                digests.push((shards, workers, simd, report.digest_hex()));
+            }
+        }
+    }
+    let first = digests[0].3.clone();
+    for (shards, workers, simd, d) in &digests {
+        assert_eq!(
+            d, &first,
+            "digest diverged at shards={shards} workers={workers} simd={simd}: {digests:?}"
+        );
+    }
+}
+
+#[test]
+fn batch_deadline_never_changes_digests() {
+    let mut digests = Vec::new();
+    for deadline_us in [0u64, 3_000, 50_000] {
+        let mut cfg = base_cfg();
+        cfg.fleet.shards = 2;
+        cfg.npu.batch_deadline_us = deadline_us;
+        digests.push((deadline_us, run_fleet(&cfg).unwrap().digest_hex()));
+    }
+    for (deadline_us, d) in &digests {
+        assert_eq!(
+            d, &digests[0].1,
+            "adaptive deadline {deadline_us}µs moved the digest: {digests:?}"
+        );
+    }
+}
+
+#[test]
+fn single_shard_deadline_zero_is_bit_exact_with_default_path() {
+    // the today-path: shards unset (0), deadline unset (0), faults off
+    let base = run_fleet(&base_cfg()).unwrap();
+    let mut cfg = base_cfg();
+    cfg.fleet.shards = 1; // explicit single shard, still the legacy drain
+    assert_eq!(cfg.npu.batch_deadline_us, 0, "deadline must default off");
+    assert!(!cfg.faults.enabled, "this contract is for the faults-off path");
+    let sharded = run_fleet(&cfg).unwrap();
+    assert_eq!(base.digest_hex(), sharded.digest_hex(), "fleet digest moved");
+    assert_eq!(base.streams.len(), sharded.streams.len());
+    for (a, b) in base.streams.iter().zip(&sharded.streams) {
+        assert_eq!(a.stream_id, b.stream_id);
+        assert_eq!(a.digest, b.digest, "stream {} digest moved", a.stream_id);
+        assert_eq!(a.events, b.events, "stream {} events moved", a.stream_id);
+        assert_eq!(
+            a.detections, b.detections,
+            "stream {} detections moved",
+            a.stream_id
+        );
+    }
+}
+
+#[test]
+fn shard_rows_partition_streams_and_surface_in_json() {
+    let mut cfg = base_cfg();
+    cfg.fleet.shards = 2;
+    cfg.npu.batch_deadline_us = 2_000; // adaptive path feeds batch_fill too
+    let report = run_fleet(&cfg).unwrap();
+    let rows = report.shard_rows();
+    assert_eq!(rows.len(), 2);
+    assert_eq!(
+        rows.iter().map(|r| r.streams).sum::<usize>(),
+        cfg.fleet.streams,
+        "shard rows must partition the stream set"
+    );
+    assert_eq!(
+        rows.iter().map(|r| r.windows).sum::<usize>(),
+        report.total_windows(),
+        "shard rows must account for every window"
+    );
+    let j = report.to_json();
+    assert_eq!(
+        j.get("fleet").unwrap().get("shards").unwrap().as_usize(),
+        Some(2)
+    );
+    let arr = j
+        .get("aggregate")
+        .unwrap()
+        .get("shards")
+        .unwrap()
+        .as_arr()
+        .unwrap();
+    assert_eq!(arr.len(), 2);
+    // the batch-fill histogram reaches the JSON surface with real samples:
+    // every stream served every window through the batcher
+    let streams = j.get("streams").unwrap().as_arr().unwrap();
+    for s in streams {
+        let fill = s
+            .get("telemetry")
+            .and_then(|t| t.get("histograms"))
+            .and_then(|h| h.get("npu.batch_fill"))
+            .expect("stream telemetry must carry npu.batch_fill");
+        let count = fill.get("count").unwrap().as_f64().unwrap();
+        assert_eq!(
+            count as usize, cfg.fleet.windows_per_stream,
+            "batch_fill must record one sample per served window"
+        );
+        let gauge = s
+            .get("telemetry")
+            .and_then(|t| t.get("gauges"))
+            .and_then(|g| g.get("fleet.shards"))
+            .and_then(|v| v.as_f64());
+        assert_eq!(gauge, Some(2.0), "fleet.shards gauge must carry the shard count");
+    }
+}

@@ -111,6 +111,16 @@ else
     echo "verify: fault_recovery target unavailable — skipping targeted run" >&2
 fi
 
+echo "== targeted: shard parity suite =="
+# The sharded-fleet contract (ISSUE 10): one fleet digest across shard
+# counts x workers x simd, shard digests rolling up to the fleet digest,
+# and the adaptive batch deadline never moving a digest. Artifact-free.
+if cargo test -q --test shard_parity -- --list >/dev/null 2>&1; then
+    cargo test -q --test shard_parity
+else
+    echo "verify: shard_parity target unavailable — skipping targeted run" >&2
+fi
+
 echo "== determinism: native backend digest across workers x simd =="
 # Same end-to-end digest gate as the PJRT block below, but on the
 # artifact-free native-int8 backend — gated only on the CLI building.
@@ -161,6 +171,33 @@ if cargo build --release 2>/dev/null; then
         echo "fault counters present in --json aggregate"
     else
         echo "verify: FAULT COUNTERS MISSING from --json aggregate" >&2
+        exit 1
+    fi
+    # Shard gate (ISSUE 10): re-slicing the fleet across shard executors
+    # must not move the digest — --shards 1 vs --shards 4 (with the
+    # adaptive batch deadline live on the sharded run) compare equal.
+    sh1=$(cargo run --release --quiet -- fleet --streams 4 --windows 4 \
+        --npu-backend native-int8 --artifacts /nonexistent-artifacts \
+        --shards 1 --json 2>/dev/null | extract_digest_native || true)
+    sh4=$(cargo run --release --quiet -- fleet --streams 4 --windows 4 \
+        --npu-backend native-int8 --artifacts /nonexistent-artifacts \
+        --shards 4 --batch-deadline 2000 --json 2>/dev/null \
+        | extract_digest_native || true)
+    if [ -z "$sh1" ] || [ -z "$sh4" ]; then
+        echo "verify: sharded fleet run produced no digest — skipping shard gate" >&2
+    elif [ "$sh1" != "$sh4" ]; then
+        echo "verify: FLEET DIGEST DIVERGED ACROSS --shards 1/4: $sh1 vs $sh4" >&2
+        exit 1
+    else
+        echo "digest invariant across --shards 1/4 (+ 2000µs deadline): $sh1"
+    fi
+    # and the batch-fill histogram must reach the --json surface
+    if cargo run --release --quiet -- fleet --streams 4 --windows 4 \
+        --npu-backend native-int8 --artifacts /nonexistent-artifacts \
+        --shards 2 --json 2>/dev/null | grep -q '"npu.batch_fill"'; then
+        echo "npu.batch_fill histogram present in --json telemetry"
+    else
+        echo "verify: npu.batch_fill MISSING from --json telemetry" >&2
         exit 1
     fi
     # Availability note, not a comparison: pjrt and native are different
